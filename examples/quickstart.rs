@@ -1,0 +1,47 @@
+//! Quickstart: the whole public API in ~40 lines.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Generates a small RadiX-Net-class sparse DNN + synthetic MNIST inputs,
+//! runs the full challenge inference (Algorithm 1) on the native backend,
+//! validates against ground truth and prints the throughput.
+
+use spdnn::coordinator::{run_inference, validate, RunOptions};
+use spdnn::data::Dataset;
+use spdnn::util::config::RuntimeConfig;
+use spdnn::util::table::{fmt_secs, fmt_teps};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Describe the network + workload (a scaled-down challenge config).
+    let cfg = RuntimeConfig {
+        neurons: 1024, // challenge widths: 1024/4096/16384/65536
+        layers: 24,    // challenge depths: 120/480/1920
+        k: 32,         // RadiX-Net: 32 connections per neuron
+        batch: 240,    // challenge: 60_000 MNIST-derived inputs
+        workers: 2,    // simulated GPU ranks (weights replicated)
+        ..Default::default()
+    };
+
+    // 2. Materialise weights, inputs and the ground-truth categories.
+    let dataset = Dataset::generate(&cfg)?;
+    println!(
+        "network: {}x{} ({} edges); batch {}; ground truth: {} active",
+        cfg.neurons,
+        cfg.layers,
+        cfg.total_edges() / cfg.batch as u64,
+        cfg.batch,
+        dataset.truth_categories.len()
+    );
+
+    // 3. Run inference (native backend; see challenge_inference.rs for the
+    //    AOT/PJRT path) and validate like the challenge does.
+    let report = run_inference(&dataset, &RunOptions::default())?;
+    validate(&report, &dataset)?;
+
+    println!("wall time   {}", fmt_secs(report.wall_secs));
+    println!("throughput  {}", fmt_teps(report.edges_per_sec));
+    println!("pruning     saved {:.1}% of edge work", report.pruning_savings() * 100.0);
+    println!("categories  {:?}...", &report.categories[..report.categories.len().min(8)]);
+    println!("OK — matches ground truth");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Scaling study: measured multi-worker runs + the calibrated Summit
+//! simulator, side by side with the paper's Table I rows.
+//!
+//!   cargo run --release --example scaling_study
+//!
+//! Part 1 runs REAL multi-worker inference at 1/2/4 workers on this
+//! machine (native backend; the coordination code is identical to the
+//! PJRT path) and extracts the pruning trace. Part 2 feeds that measured
+//! trace to the calibrated Summit model and prints the simulated strong
+//! scaling next to the paper's published numbers.
+
+use spdnn::coordinator::{run_inference, RunOptions};
+use spdnn::data::Dataset;
+use spdnn::simulator::gpu_model::{v100, KernelParams};
+use spdnn::simulator::network::summit;
+use spdnn::simulator::scaling::{ScalingSim, CHALLENGE_BATCH};
+use spdnn::simulator::trace::ActivityTrace;
+use spdnn::util::config::RuntimeConfig;
+use spdnn::util::table::{fmt_teps, Table};
+
+/// Paper Table I, 1024-neuron x 120-layer row (TeraEdges/s).
+const PAPER_1024_120: &[(usize, f64)] = &[
+    (1, 10.51),
+    (3, 18.92),
+    (6, 22.46),
+    (12, 25.52),
+    (24, 28.52),
+    (48, 27.77),
+    (96, 29.17),
+    (192, 27.89),
+    (384, 29.12),
+    (768, 29.13),
+];
+
+fn main() -> anyhow::Result<()> {
+    // ---- Part 1: real multi-worker runs on this machine ----------------
+    let mut table = Table::new(
+        "Measured multi-worker runs (native backend, this machine)",
+        &["workers", "wall", "throughput", "imbalance", "prune saved"],
+    );
+    let mut trace = None;
+    for workers in [1usize, 2, 4] {
+        let cfg = RuntimeConfig {
+            neurons: 1024,
+            layers: 24,
+            k: 32,
+            batch: 480,
+            workers,
+            ..Default::default()
+        };
+        let ds = Dataset::generate(&cfg)?;
+        let report = run_inference(&ds, &RunOptions::default())?;
+        table.row(vec![
+            workers.to_string(),
+            format!("{:.1}ms", report.wall_secs * 1e3),
+            fmt_teps(report.edges_per_sec),
+            format!("{:.3}", report.imbalance),
+            format!("{:.1}%", report.pruning_savings() * 100.0),
+        ]);
+        if workers == 1 {
+            trace = Some(ActivityTrace::from_report(&report)?);
+        }
+    }
+    table.print();
+
+    // ---- Part 2: calibrated Summit simulation vs the paper -------------
+    let measured = trace.unwrap().rescale(CHALLENGE_BATCH).with_layers(120);
+    println!(
+        "\nmeasured pruning trace: {} -> {} live over {} layers ({:.1}% savings)",
+        measured.live[0],
+        measured.live.last().unwrap(),
+        measured.layers(),
+        measured.savings() * 100.0
+    );
+    let sim = ScalingSim::calibrated(v100(), summit(), &measured);
+    let p = KernelParams::challenge(1024);
+
+    let mut table = Table::new(
+        "Strong scaling, 1024x120 (simulated Summit vs paper Table I)",
+        &["GPUs", "simulated", "paper", "ratio"],
+    );
+    for &(gpus, paper) in PAPER_1024_120 {
+        let r = sim.simulate(&p, &measured, gpus);
+        let teps = r.edges_per_sec / 1e12;
+        table.row(vec![
+            gpus.to_string(),
+            format!("{teps:.2}"),
+            format!("{paper:.2}"),
+            format!("{:.2}x", teps / paper),
+        ]);
+    }
+    table.print();
+    println!("calibration: single datum (1 GPU cell); scaling shape is derived");
+    Ok(())
+}

@@ -1,0 +1,202 @@
+"""AOT lowering: jax (L2) -> HLO text artifacts + manifest.json.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+HLO text through ``HloModuleProto::from_text_file`` and compiles it on the
+PJRT CPU client. HLO *text* (not a serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+Artifact kinds:
+
+* ``layer_opt``   — optimized fused Pallas layer + activity flags, one per
+  (neurons, capacity). The capacity ladder lets the coordinator shrink the
+  dispatched panel as features are pruned (static-shape stand-in for the
+  CUDA grid sized by the live feature count).
+* ``layer_base``  — Listing-1 baseline analog (comparison benches).
+* ``layer_bcoo``  — library-sparse comparator (cuSPARSE stand-in).
+* ``scan_opt``    — L layers fused in one executable (dispatch ablation).
+* ``layer_toy``   — tiny variant exercised by Rust unit tests.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.spdnn import KernelConfig
+
+MANIFEST_VERSION = 1
+
+# Challenge bias constants per network width (graphchallenge.org reference).
+CHALLENGE_BIAS = {1024: -0.30, 4096: -0.35, 16384: -0.40, 65536: -0.45}
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to HLO text via an XlaComputation."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_entry(name, spec):
+    return {
+        "name": name,
+        "dtype": {"float32": "f32", "uint16": "u16", "int32": "i32"}[
+            str(spec.dtype)
+        ],
+        "shape": list(spec.shape),
+    }
+
+
+def lower_layer(kind, cfg: KernelConfig, capacity: int):
+    """Lower one layer-step artifact; returns (hlo_text, input specs)."""
+    y = _spec((capacity, cfg.neurons), jnp.float32)
+    idx = _spec((cfg.neurons, cfg.k), jnp.uint16)
+    val = _spec((cfg.neurons, cfg.k), jnp.float32)
+    bias = _spec((cfg.neurons,), jnp.float32)
+    if kind in ("layer_opt", "layer_toy"):
+        fn = lambda *a: model.layer_step(*a, cfg=cfg)
+    elif kind == "layer_base":
+        fn = model.layer_step_base
+    elif kind == "layer_bcoo":
+        fn = model.layer_step_bcoo
+    else:
+        raise ValueError(kind)
+    lowered = jax.jit(fn).lower(y, idx, val, bias)
+    specs = [("y", y), ("idx", idx), ("val", val), ("bias", bias)]
+    return to_hlo_text(lowered), specs
+
+
+def lower_scan(cfg: KernelConfig, capacity: int, layers: int):
+    """Lower the fused multi-layer scan artifact."""
+    y = _spec((capacity, cfg.neurons), jnp.float32)
+    idx = _spec((layers, cfg.neurons, cfg.k), jnp.uint16)
+    val = _spec((layers, cfg.neurons, cfg.k), jnp.float32)
+    bias = _spec((cfg.neurons,), jnp.float32)
+    fn = lambda *a: model.network_scan(*a, cfg=cfg)
+    lowered = jax.jit(fn).lower(y, idx, val, bias)
+    specs = [("y", y), ("idx", idx), ("val", val), ("bias", bias)]
+    return to_hlo_text(lowered), specs
+
+
+def emit(out_dir: str, *, neurons, capacities, k, scan_layers,
+         comparator_capacity, max_mb=256, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    def write(name, kind, cfg, capacity, hlo, specs, extra=None):
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(hlo)
+        entry = {
+            "name": name,
+            "path": path,
+            "kind": kind,
+            "neurons": cfg.neurons,
+            "capacity": capacity,
+            "k": cfg.k,
+            "mb": cfg.mb,
+            "tile_n": cfg.tile_n,
+            "vmem_bytes": cfg.vmem_bytes,
+            "inputs": [_io_entry(n, s) for n, s in specs],
+            "outputs": [
+                _io_entry("y_next", _spec((capacity, cfg.neurons), jnp.float32)),
+                _io_entry("active", _spec((capacity,), jnp.int32)),
+            ],
+        }
+        if extra:
+            entry.update(extra)
+        entries.append(entry)
+        if verbose:
+            print(f"  wrote {path} ({len(hlo)} chars)")
+
+    # Tiny artifact for Rust unit tests — always emitted.
+    toy = KernelConfig.auto(64, 8, k=4)
+    hlo, specs = lower_layer("layer_toy", toy, 8)
+    write("layer_toy_n64_c8", "layer_toy", toy, 8, hlo, specs)
+
+    for n in neurons:
+        for cap in capacities:
+            # Tiling is chosen per (width, capacity): the largest blocks
+            # within the VMEM budget (fewest interpret-mode grid steps).
+            cfg = KernelConfig.auto(n, cap, k=k, max_mb=max_mb)
+            hlo, specs = lower_layer("layer_opt", cfg, cap)
+            write(f"layer_opt_n{n}_c{cap}", "layer_opt", cfg, cap, hlo, specs)
+        # Comparators at a single capacity.
+        ccap = comparator_capacity
+        cfg = KernelConfig.auto(n, ccap, k=k, max_mb=max_mb)
+        hlo, specs = lower_layer("layer_base", cfg, ccap)
+        write(f"layer_base_n{n}_c{ccap}", "layer_base", cfg, ccap, hlo, specs)
+        # Capacity-1 baseline: per-feature dispatch, i.e. NO cross-feature
+        # weight reuse — the system-level meaning of Listing 1.
+        cfg1 = KernelConfig.auto(n, 1, k=k, max_mb=max_mb)
+        hlo, specs = lower_layer("layer_base", cfg1, 1)
+        write(f"layer_base_n{n}_c1", "layer_base", cfg1, 1, hlo, specs)
+        hlo, specs = lower_layer("layer_bcoo", cfg, ccap)
+        write(f"layer_bcoo_n{n}_c{ccap}", "layer_bcoo", cfg, ccap, hlo, specs)
+
+    # Fused multi-layer scan for the smallest width (dispatch ablation).
+    n0 = min(neurons)
+    cfg0 = KernelConfig.auto(n0, comparator_capacity, k=k, max_mb=max_mb)
+    hlo, specs = lower_scan(cfg0, comparator_capacity, scan_layers)
+    write(
+        f"scan_opt_n{n0}_l{scan_layers}_c{comparator_capacity}",
+        "scan_opt", cfg0, comparator_capacity, hlo, specs,
+        extra={"layers": scan_layers},
+    )
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "relu_cap": 32.0,
+        "challenge_bias": {str(kk): v for kk, v in CHALLENGE_BIAS.items()},
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"manifest: {len(entries)} artifacts -> {out_dir}/manifest.json")
+
+
+def parse_int_list(s):
+    return [int(x) for x in s.split(",") if x]
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--neurons", type=parse_int_list, default=[1024, 4096])
+    p.add_argument("--capacities", type=parse_int_list,
+                   default=[12, 60, 240, 960, 1920])
+    p.add_argument("--max-mb", type=int, default=256,
+                   help="upper bound on the feature-tile width (auto-tiled)")
+    p.add_argument("--k", type=int, default=32,
+                   help="padded nonzeros per row (RadiX-Net: 32)")
+    p.add_argument("--scan-layers", type=int, default=24)
+    p.add_argument("--comparator-capacity", type=int, default=240)
+    p.add_argument("--full", action="store_true",
+                   help="also emit 16384/65536-neuron variants")
+    args = p.parse_args()
+    neurons = list(args.neurons)
+    if args.full:
+        for n in (16384, 65536):
+            if n not in neurons:
+                neurons.append(n)
+    emit(args.out, neurons=neurons, capacities=args.capacities, k=args.k,
+         scan_layers=args.scan_layers, max_mb=args.max_mb,
+         comparator_capacity=args.comparator_capacity)
+
+
+if __name__ == "__main__":
+    main()

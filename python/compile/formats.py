@@ -1,0 +1,61 @@
+"""Sparse-format packing — Python mirror of rust/src/formats/.
+
+Builds the transposed sliced-ELL panels (paper §III.A.3) the kernel
+consumes from row-index lists, with the same padding-accounting the Rust
+side reports. Padding entries use index 0 and value 0.0 (value-0 padding is
+numerically inert in the kernel).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .radixnet import weight_value
+
+
+def pack_ell(rows: list[list[int]], k: int | None = None,
+             weight: float | None = None):
+    """Pack per-row column lists into dense [N, K] ELL index/value panels.
+
+    Args:
+      rows: rows[i] = column indices of output neuron i.
+      k:    panel width; defaults to the max row length.
+      weight: value for every real entry (challenge weights are constant);
+        defaults to weight_value(k) = 2/k (== 1/16 at the challenge k=32).
+
+    Returns (idx u16[N, K], val f32[N, K]).
+    """
+    n = len(rows)
+    if k is None:
+        k = max((len(r) for r in rows), default=0)
+    if weight is None:
+        weight = weight_value(max(k, 1))
+    idx = np.zeros((n, k), dtype=np.uint16)
+    val = np.zeros((n, k), dtype=np.float32)
+    for i, r in enumerate(rows):
+        if len(r) > k:
+            raise ValueError(f"row {i} has {len(r)} > k={k} entries")
+        for j, c in enumerate(r):
+            if c >= 1 << 16:
+                raise ValueError(f"column {c} does not fit u16")
+            idx[i, j] = c
+            val[i, j] = weight
+    return idx, val
+
+
+def padding_overhead(rows: list[list[int]], k: int, granularity: int = 1) -> float:
+    """Zero-padding overhead of slicing at `granularity` rows (paper Fig. 2
+    discussion: warp-granularity padding vs tile/layer granularity).
+
+    Each slice of `granularity` rows is padded to its local max row length
+    (capped at k). Returns padded_nnz / real_nnz - 1.
+    """
+    real = sum(len(r) for r in rows)
+    if real == 0:
+        return 0.0
+    padded = 0
+    for s in range(0, len(rows), granularity):
+        chunk = rows[s:s + granularity]
+        width = min(max((len(r) for r in chunk), default=0), k)
+        padded += width * len(chunk)
+    return padded / real - 1.0

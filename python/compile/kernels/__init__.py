@@ -1,0 +1,4 @@
+"""L1 kernels: Pallas fused sliced-ELL SpMM (spdnn), Listing-1 baseline,
+library-sparse (BCOO) comparator, and the pure-jnp oracles (ref)."""
+
+from . import baseline, bcoo, ref, spdnn  # noqa: F401

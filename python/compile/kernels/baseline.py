@@ -1,0 +1,49 @@
+"""Baseline kernel — the analog of the paper's Listing 1.
+
+The CUDA baseline processes ONE feature per thread-column: every feature
+re-reads the whole sparse weight matrix (no register tiling), gathers
+input elements straight from global memory (no shared-memory staging),
+and rows are CSR (no coalescing-friendly padding).
+
+On the XLA/CPU substrate we reproduce the *structural* deficiencies:
+
+* no minibatch reuse  -> ``lax.map`` over single features; each iteration
+  re-reads the full weight panels (a fresh pass over idx/val per feature,
+  exactly the M-fold weight re-read the paper identifies);
+* no staging tile     -> the gather is expressed over the whole feature row
+  (XLA materialises per-feature gathers instead of reusing a panel);
+* unfused epilogue    -> SpMM, bias-add and ReLU are separate ops.
+
+The baseline-vs-optimized bench (EXPERIMENTS.md TXT-base) measures the
+resulting ratio; the paper reports 5.56-11.84x on V100.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+RELU_CAP = 32.0
+
+
+def baseline_layer(y, idx, val, bias):
+    """Listing-1 analog: per-feature CSR-style gather, unfused epilogue.
+
+    Args:
+      y:    f32[batch, neurons]
+      idx:  u16/i32[neurons, k]
+      val:  f32[neurons, k]
+      bias: f32[neurons]
+    """
+    flat_idx = idx.astype(jnp.int32).reshape(-1)
+    n, k = idx.shape
+
+    def one_feature(row):
+        # row: f32[neurons] — one feature; weights re-read per feature.
+        gathered = jnp.take(row, flat_idx, axis=0).reshape(n, k)
+        return jnp.sum(gathered * val, axis=1)
+
+    acc = jax.lax.map(one_feature, y)
+    acc = acc + bias[None, :]          # separate bias add (unfused)
+    acc = jnp.maximum(acc, 0.0)        # separate ReLU
+    return jnp.minimum(acc, RELU_CAP)  # separate clip

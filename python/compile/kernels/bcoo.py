@@ -1,0 +1,46 @@
+"""Library-sparse comparator — the cuSPARSE stand-in.
+
+Wang et al. (2019 finalist) used cuSPARSE SpMM on V100; the paper reports
+125-210x speedups of the fused kernel over it (§IV.D.1). cuSPARSE is not
+available here, so the comparator is the generic library sparse kernel of
+this stack: ``jax.experimental.sparse`` BCOO matmul, with the unfused
+bias/ReLU epilogue a library user would write. Same role — a general
+sparse kernel with no DNN-specific fusion, reuse, or layout tuning.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental import sparse as jsparse
+
+RELU_CAP = 32.0
+
+
+def ell_to_bcoo(idx, val, neurons):
+    """Convert ELL panels to a BCOO [neurons, neurons] weight matrix.
+
+    Padding entries (val == 0) are kept — a library user converting a
+    padded format would usually prune them, but keeping them preserves a
+    static nse so the computation lowers to a fixed HLO. The value-0
+    entries are numerically harmless.
+    """
+    n, k = idx.shape
+    rows = jnp.repeat(jnp.arange(n, dtype=jnp.int32), k)
+    cols = idx.astype(jnp.int32).reshape(-1)
+    indices = jnp.stack([rows, cols], axis=1)
+    return jsparse.BCOO(
+        (val.reshape(-1), indices), shape=(neurons, neurons)
+    )
+
+
+def bcoo_layer(y, w_bcoo, bias):
+    """One layer through the library path: W @ Y^T, unfused epilogue."""
+    acc = (w_bcoo @ y.T).T
+    acc = acc + bias[None, :]
+    return jnp.clip(acc, 0.0, RELU_CAP)
+
+
+def bcoo_layer_from_ell(y, idx, val, bias):
+    """Convenience wrapper used by the AOT path (idx/val as inputs)."""
+    w = ell_to_bcoo(idx, val, y.shape[1])
+    return bcoo_layer(y, w, bias)

@@ -1,0 +1,68 @@
+"""Pure-jnp correctness oracles for the fused sliced-ELL kernel.
+
+Two independent formulations:
+
+* ``dense_layer``   — scatter the ELL weights into a dense [N, N] matrix and
+  use a dense matmul. Ground truth for small sizes.
+* ``ell_layer``     — direct gather/accumulate over the ELL panels without
+  any Pallas tiling. Used as the oracle at sizes where densifying is too
+  expensive, and as the numerically-identical reference the Pallas kernel
+  must match bit-for-bit (same accumulation order up to XLA reassociation;
+  we compare with allclose).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+RELU_CAP = 32.0
+
+
+def clipped_relu(x):
+    """Challenge activation: ReLU(x) = max(0, min(x, 32)) (paper §II.A.1)."""
+    return jnp.clip(x, 0.0, RELU_CAP)
+
+
+def ell_to_dense(idx, val, neurons):
+    """Scatter ELL (idx, val) panels into a dense [neurons, neurons] W.
+
+    Row i of W holds the weights of output neuron i: W[i, idx[i, k]] +=
+    val[i, k]. Padded entries carry val == 0 so they are harmless even if
+    idx points at a real column.
+    """
+    n, k = idx.shape
+    w = jnp.zeros((neurons, neurons), dtype=val.dtype)
+    rows = jnp.repeat(jnp.arange(n), k)
+    cols = idx.astype(jnp.int32).reshape(-1)
+    return w.at[rows, cols].add(val.reshape(-1))
+
+
+def dense_layer(y, idx, val, bias):
+    """Oracle 1: Y_{l+1} = clip(Y_l @ W^T + b) with densified W."""
+    neurons = y.shape[1]
+    w = ell_to_dense(idx, val, neurons)
+    return clipped_relu(y @ w.T + bias[None, :])
+
+
+def ell_layer(y, idx, val, bias):
+    """Oracle 2: direct ELL gather-accumulate, no tiling."""
+    gathered = jnp.take(y, idx.astype(jnp.int32).reshape(-1), axis=1)
+    gathered = gathered.reshape(y.shape[0], idx.shape[0], idx.shape[1])
+    acc = jnp.sum(gathered * val[None, :, :], axis=2)
+    return clipped_relu(acc + bias[None, :])
+
+
+def run_network(y, layers, bias):
+    """Run the whole network with the ELL oracle; returns final features."""
+    for idx, val in layers:
+        y = ell_layer(y, idx, val, bias)
+    return y
+
+
+def active_features(y):
+    """Per-feature activity flag: 1 where any neuron is nonzero.
+
+    Mirrors the CUDA kernel's atomicAdd(active…) bookkeeping; the Rust
+    coordinator uses it to prune inactive features between layers.
+    """
+    return jnp.any(y > 0.0, axis=1).astype(jnp.int32)

@@ -1,0 +1,61 @@
+"""Synthetic MNIST-interpolation input generator — Python mirror of
+rust/src/data/mnist_synth.rs.
+
+The challenge inputs are 60 000 MNIST images resized to {32,64,128,256}^2,
+thresholded to {0,1}, and linearised one image per row. The real TSV files
+are not available offline, so we synthesise sparse binary images with the
+same density regime: each image is a union of a few axis-aligned Gaussian
+blobs (pen strokes) rasterised onto the side x side grid and thresholded.
+Mean density lands near the MNIST ~19 % ink ratio, decaying for larger
+resize targets like the challenge inputs do.
+
+Determinism: every pixel decision derives from the shared xoshiro256**
+stream, so Rust generates bit-identical matrices (tests/cross_language.rs).
+"""
+
+from __future__ import annotations
+
+from .prng import Xoshiro256
+
+BLOBS_MIN = 3
+BLOBS_MAX = 6
+
+
+def image_side(neurons: int) -> int:
+    side = 1
+    while side * side < neurons:
+        side *= 2
+    if side * side != neurons:
+        raise ValueError(f"neurons={neurons} is not a power-of-4 image size")
+    return side
+
+
+def generate_image(rng: Xoshiro256, side: int) -> list[int]:
+    """One synthetic sparse binary image, linearised row-major."""
+    img = [0] * (side * side)
+    nblobs = BLOBS_MIN + rng.next_below(BLOBS_MAX - BLOBS_MIN + 1)
+    for _ in range(nblobs):
+        cx = rng.next_below(side)
+        cy = rng.next_below(side)
+        # Stroke radius scales with resolution, like interpolated MNIST.
+        # The [2, 2 + side/6) range yields ~30% ink with occasional blobs
+        # thick enough to sustain activations through the butterfly
+        # windows — reproducing the challenge's pruning regime (a burst of
+        # early feature deaths, then a stable surviving set).
+        r = 2 + rng.next_below(max(side // 6, 1))
+        r2 = r * r
+        x0, x1 = max(cx - r, 0), min(cx + r, side - 1)
+        y0, y1 = max(cy - r, 0), min(cy + r, side - 1)
+        for y in range(y0, y1 + 1):
+            for x in range(x0, x1 + 1):
+                dx, dy = x - cx, y - cy
+                if dx * dx + dy * dy <= r2:
+                    img[y * side + x] = 1
+    return img
+
+
+def generate(neurons: int, count: int, seed: int = 0xDA7A) -> list[list[int]]:
+    """`count` images of `neurons` pixels, one shared PRNG stream."""
+    side = image_side(neurons)
+    rng = Xoshiro256((seed << 20) ^ neurons)
+    return [generate_image(rng, side) for _ in range(count)]

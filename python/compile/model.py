@@ -1,0 +1,79 @@
+"""L2: the network-level jax functions that get AOT-lowered to HLO.
+
+Each exported computation is one *layer step* (or a fused multi-layer scan)
+over a fixed-capacity feature panel. The Rust coordinator (L3) drives the
+inference loop: it owns the layer iteration, out-of-core weight streaming,
+and active-feature pruning, and calls these compiled artifacts through
+PJRT. Python never runs at inference time.
+
+Exported computations (see aot.py for the artifact manifest):
+
+* ``layer_step``       — optimized path: Pallas fused kernel + activity flags.
+* ``layer_step_base``  — Listing-1 baseline analog.
+* ``layer_step_bcoo``  — library-sparse comparator.
+* ``network_scan``     — L layers fused into one executable via lax.scan
+  (used by the dispatch-amortization ablation; weights are stacked inputs).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import baseline as kbase
+from .kernels import bcoo as kbcoo
+from .kernels import ref as kref
+from .kernels.spdnn import KernelConfig, fused_ell_layer
+
+
+def layer_step(y, idx, val, bias, *, cfg: KernelConfig, interpret: bool = True):
+    """One optimized layer: fused kernel + per-feature activity flags.
+
+    Returns ``(y_next, active)`` where ``active`` is i32[batch] with 1 for
+    features that still have any nonzero neuron — the coordinator's pruning
+    signal (the CUDA kernel's ``atomicAdd(active+...)``).
+    """
+    y_next = fused_ell_layer(y, idx, val, bias, cfg=cfg, interpret=interpret)
+    return y_next, kref.active_features(y_next)
+
+
+def layer_step_base(y, idx, val, bias):
+    """Baseline layer (Listing 1 analog) + activity flags."""
+    y_next = kbase.baseline_layer(y, idx, val, bias)
+    return y_next, kref.active_features(y_next)
+
+
+def layer_step_bcoo(y, idx, val, bias):
+    """Library-sparse layer (cuSPARSE stand-in) + activity flags."""
+    y_next = kbcoo.bcoo_layer_from_ell(y, idx, val, bias)
+    return y_next, kref.active_features(y_next)
+
+
+def network_scan(y, idx_stack, val_stack, bias, *, cfg: KernelConfig,
+                 interpret: bool = True):
+    """Fused multi-layer executable: scan over stacked layer weights.
+
+    Args:
+      y:         f32[batch, neurons]
+      idx_stack: u16/i32[layers, neurons, k]
+      val_stack: f32[layers, neurons, k]
+      bias:      f32[neurons]
+
+    Returns ``(y_final, active)``. Amortizes per-layer PJRT dispatch at the
+    cost of requiring all weights resident (no out-of-core streaming), so
+    it is only emitted for small configurations.
+    """
+
+    def step(y_carry, w):
+        idx, val = w
+        y_next = fused_ell_layer(y_carry, idx, val, bias, cfg=cfg,
+                                 interpret=interpret)
+        return y_next, ()
+
+    y_final, _ = jax.lax.scan(step, y, (idx_stack, val_stack))
+    return y_final, kref.active_features(y_final)
+
+
+def extract_categories(y):
+    """Challenge step 4: indices of features active after the last layer."""
+    return jnp.nonzero(kref.active_features(y))[0]

@@ -1,0 +1,69 @@
+"""xoshiro256** PRNG — bit-for-bit mirror of rust/src/util/prng.rs.
+
+The dataset and topology generators must be reproducible across the Python
+(build/test) and Rust (runtime) sides, so both implement the same xoshiro256**
+generator seeded through SplitMix64. Cross-language equality is asserted by
+python/tests/test_prng.py (golden vectors) and rust tests/cross_language.rs.
+"""
+
+from __future__ import annotations
+
+MASK64 = (1 << 64) - 1
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+class SplitMix64:
+    """Seeding generator (Vigna's splitmix64)."""
+
+    def __init__(self, seed: int) -> None:
+        self.state = seed & MASK64
+
+    def next(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+
+class Xoshiro256:
+    """xoshiro256** 1.0 (Blackman & Vigna)."""
+
+    def __init__(self, seed: int) -> None:
+        sm = SplitMix64(seed)
+        self.s = [sm.next() for _ in range(4)]
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK64, 7) * 9) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def next_f32(self) -> float:
+        """Uniform in [0, 1) with 24 bits of randomness (mirrors Rust)."""
+        return (self.next_u64() >> 40) * (1.0 / (1 << 24))
+
+    def next_below(self, n: int) -> int:
+        """Unbiased uniform integer in [0, n) via rejection sampling."""
+        if n <= 0:
+            raise ValueError("n must be positive")
+        zone = MASK64 - (MASK64 + 1) % n
+        while True:
+            v = self.next_u64()
+            if v <= zone:
+                return v % n
+
+    def shuffle(self, xs: list) -> None:
+        """Fisher-Yates, identical visit order to the Rust impl."""
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.next_below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]

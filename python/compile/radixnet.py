@@ -1,0 +1,87 @@
+"""RadiX-Net-class synthetic sparse DNN generator — Python mirror of
+rust/src/radixnet/.
+
+The Graph Challenge ships RadiX-Net networks (Kepner & Robinett 2019):
+every neuron has exactly 32 connections per layer, equal numbers of
+input->output paths, all weights 1/16, and a constant per-width bias. The
+official weight files are not available offline, so we reimplement the
+construction class (see DESIGN.md §Substitutions):
+
+* ``butterfly`` topology — layer ``l`` uses stride ``s_l`` from a mixed-radix
+  schedule; neuron ``i`` connects to ``(i + t * s_l) mod N`` for
+  ``t in [0, k)``. Strides cycle through ``k**0, k**1, ...`` capped at
+  ``N / k`` so targets stay distinct; ``ceil(log_k N)`` consecutive layers
+  fully mix inputs to outputs with equal path multiplicity, which is the
+  RadiX-Net invariant the challenge relies on.
+* ``random`` topology — k distinct uniform columns per row (xoshiro-seeded),
+  for generality/stress tests beyond the structured challenge nets.
+
+Weight values are 1/16 as in the challenge; the bias constant per width is
+in CHALLENGE_BIAS (aot.py).
+"""
+
+from __future__ import annotations
+
+from .prng import Xoshiro256
+
+WEIGHT_VALUE = 1.0 / 16.0
+
+
+def weight_value(k: int) -> float:
+    """Default weight for a k-connection network.
+
+    The challenge's 1/16 at k = 32 gives every layer a max gain of
+    k * w = 2; scaling as 2/k preserves that gain for non-challenge k
+    (and reproduces exactly 1/16 at k = 32), keeping small test networks
+    dynamically alive instead of collapsing to zero in one layer.
+    """
+    return 2.0 / k
+
+
+def butterfly_strides(neurons: int, k: int) -> list[int]:
+    """The stride schedule: k**0, k**1, ... capped at neurons // k."""
+    cap = max(neurons // k, 1)
+    strides = []
+    s = 1
+    while True:
+        strides.append(min(s, cap))
+        if s >= cap:
+            break
+        s *= k
+    return strides
+
+
+def butterfly_layer(neurons: int, k: int, layer: int) -> list[list[int]]:
+    """ELL index rows for one butterfly layer (k columns per row)."""
+    strides = butterfly_strides(neurons, k)
+    s = strides[layer % len(strides)]
+    return [[(i + t * s) % neurons for t in range(k)] for i in range(neurons)]
+
+
+def random_layer(neurons: int, k: int, layer: int, seed: int) -> list[list[int]]:
+    """k distinct uniform columns per row; deterministic in (seed, layer)."""
+    rng = Xoshiro256((seed << 16) ^ layer)
+    rows = []
+    for _ in range(neurons):
+        cols: list[int] = []
+        seen = set()
+        while len(cols) < k:
+            c = rng.next_below(neurons)
+            if c not in seen:
+                seen.add(c)
+                cols.append(c)
+        rows.append(cols)
+    return rows
+
+
+def generate(neurons: int, layers: int, k: int = 32, topology: str = "butterfly",
+             seed: int = 0x5BD1):
+    """Generate the index structure of a whole network.
+
+    Returns a list of per-layer row lists; all values are WEIGHT_VALUE.
+    """
+    if topology == "butterfly":
+        return [butterfly_layer(neurons, k, l) for l in range(layers)]
+    if topology == "random":
+        return [random_layer(neurons, k, l, seed) for l in range(layers)]
+    raise ValueError(f"unknown topology {topology!r}")

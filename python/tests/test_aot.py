@@ -1,0 +1,81 @@
+"""AOT emission: manifest schema, HLO text validity, determinism."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.kernels.spdnn import KernelConfig
+
+
+def emit_tiny(tmp_path):
+    aot.emit(
+        str(tmp_path), neurons=[64], capacities=[4, 8],
+        k=4, scan_layers=3, comparator_capacity=8, verbose=False,
+    )
+    with open(tmp_path / "manifest.json") as f:
+        return json.load(f)
+
+
+def test_manifest_schema(tmp_path):
+    man = emit_tiny(tmp_path)
+    assert man["version"] == aot.MANIFEST_VERSION
+    assert man["relu_cap"] == 32.0
+    assert man["challenge_bias"]["1024"] == -0.30
+    kinds = sorted(e["kind"] for e in man["artifacts"])
+    assert kinds.count("layer_opt") == 2
+    assert "layer_base" in kinds and "layer_bcoo" in kinds
+    assert "scan_opt" in kinds and "layer_toy" in kinds
+    for e in man["artifacts"]:
+        assert os.path.exists(tmp_path / e["path"]), e["path"]
+        assert e["neurons"] % e["tile_n"] == 0
+        assert e["capacity"] % e["mb"] == 0 or e["kind"].startswith("layer_b")
+        names = [i["name"] for i in e["inputs"]]
+        assert names == ["y", "idx", "val", "bias"]
+        assert e["inputs"][0]["shape"] == [e["capacity"], e["neurons"]]
+        assert e["inputs"][1]["dtype"] == "u16"
+        assert [o["name"] for o in e["outputs"]] == ["y_next", "active"]
+
+
+def test_hlo_text_is_parseable_hlo(tmp_path):
+    man = emit_tiny(tmp_path)
+    for e in man["artifacts"]:
+        text = (tmp_path / e["path"]).read_text()
+        assert text.startswith("HloModule"), e["name"]
+        assert "ENTRY" in text
+
+
+def test_emission_is_deterministic(tmp_path):
+    d1, d2 = tmp_path / "a", tmp_path / "b"
+    aot.emit(str(d1), neurons=[64], capacities=[4], k=4,
+             scan_layers=2, comparator_capacity=4, verbose=False)
+    aot.emit(str(d2), neurons=[64], capacities=[4], k=4,
+             scan_layers=2, comparator_capacity=4, verbose=False)
+    for name in os.listdir(d1):
+        assert (d1 / name).read_text() == (d2 / name).read_text(), name
+
+
+def test_auto_tiling_respects_capacity():
+    # Auto tiling must always pick an mb dividing the capacity.
+    from compile.kernels.spdnn import KernelConfig
+    for n in (64, 1024, 4096, 16384, 65536):
+        for cap in (5, 12, 60, 240, 960, 1920):
+            cfg = KernelConfig.auto(n, cap)
+            assert cap % cfg.mb == 0, (n, cap, cfg.mb)
+            assert n % cfg.tile_n == 0
+
+
+def test_lower_layer_kinds():
+    cfg = KernelConfig.auto(64, 4, k=4)
+    for kind in ("layer_opt", "layer_base", "layer_bcoo", "layer_toy"):
+        hlo, specs = aot.lower_layer(kind, cfg, 4)
+        assert hlo.startswith("HloModule")
+        assert [n for n, _ in specs] == ["y", "idx", "val", "bias"]
+    with pytest.raises(ValueError):
+        aot.lower_layer("bogus", cfg, 4)
+
+
+def test_parse_int_list():
+    assert aot.parse_int_list("1,2,3") == [1, 2, 3]
+    assert aot.parse_int_list("") == []

@@ -1,0 +1,54 @@
+"""End-to-end (python side): full small challenge network through the
+Pallas kernel vs the dense oracle, including the pruning ground truth."""
+
+import jax
+import numpy as np
+
+from compile import mnist_synth, radixnet
+from compile.formats import pack_ell
+from compile.kernels import ref
+from compile.kernels.spdnn import KernelConfig, fused_ell_layer
+
+
+def build_challenge_net(neurons, layers, k):
+    net = radixnet.generate(neurons, layers, k=k, topology="butterfly")
+    return [pack_ell(rows, k=k) for rows in net]
+
+
+def test_small_challenge_network_end_to_end():
+    neurons, layers, k, batch = 256, 8, 8, 24
+    packed = build_challenge_net(neurons, layers, k)
+    bias = np.full(neurons, -0.3, np.float32)
+    imgs = mnist_synth.generate(neurons, batch, seed=42)
+    y = np.array(imgs, np.float32)
+
+    cfg = KernelConfig(neurons=neurons, k=k, mb=12, tile_n=64)
+    step = jax.jit(lambda *a: fused_ell_layer(*a, cfg=cfg))
+
+    y_k = y.copy()
+    y_ref = y.copy()
+    for idx, val in packed:
+        y_k = np.asarray(step(y_k, idx, val, bias))
+        y_ref = np.asarray(ref.ell_layer(y_ref, idx, val, bias))
+        np.testing.assert_allclose(y_k, y_ref, rtol=1e-4, atol=1e-5)
+
+    # Challenge step 4: categories = features still active at the end.
+    cats_k = np.nonzero((y_k > 0).any(axis=1))[0]
+    cats_ref = np.nonzero((y_ref > 0).any(axis=1))[0]
+    np.testing.assert_array_equal(cats_k, cats_ref)
+
+
+def test_activity_monotonically_nonincreasing():
+    """With nonpositive bias a dead feature stays dead — the invariant the
+    coordinator's pruning relies on (features are only ever removed)."""
+    neurons, layers, k = 256, 12, 8
+    packed = build_challenge_net(neurons, layers, k)
+    bias = np.full(neurons, -0.35, np.float32)
+    y = np.array(mnist_synth.generate(neurons, 16, seed=9), np.float32)
+    prev_active = None
+    for idx, val in packed:
+        y = np.asarray(ref.ell_layer(y, idx, val, bias))
+        active = set(np.nonzero((y > 0).any(axis=1))[0].tolist())
+        if prev_active is not None:
+            assert active <= prev_active
+        prev_active = active

@@ -1,0 +1,125 @@
+"""RadiX-Net-class topology and synthetic-MNIST generator invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import mnist_synth, radixnet
+from compile.formats import pack_ell, padding_overhead
+
+
+# ---------------------------------------------------------------- radixnet
+
+@pytest.mark.parametrize("n,k", [(64, 4), (256, 8), (1024, 32)])
+def test_butterfly_degrees(n, k):
+    """Challenge invariant: exactly k connections per neuron, both ways."""
+    for l in range(4):
+        rows = radixnet.butterfly_layer(n, k, l)
+        assert len(rows) == n
+        assert all(len(r) == k for r in rows)
+        assert all(len(set(r)) == k for r in rows), "targets must be distinct"
+        indeg = np.zeros(n, np.int64)
+        for r in rows:
+            for c in r:
+                indeg[c] += 1
+        assert (indeg == k).all(), "in-degree must equal k (equal-path prereq)"
+
+
+def test_butterfly_strides_cover():
+    assert radixnet.butterfly_strides(1024, 32) == [1, 32]
+    assert radixnet.butterfly_strides(4096, 32) == [1, 32, 128]
+    assert radixnet.butterfly_strides(64, 4) == [1, 4, 16]
+    assert radixnet.butterfly_strides(32, 32) == [1]
+
+
+def test_butterfly_full_mixing():
+    """After one full stride cycle every input reaches every output with the
+    same path multiplicity — the RadiX-Net equal-paths invariant."""
+    n, k = 64, 4
+    strides = radixnet.butterfly_strides(n, k)
+    reach = np.eye(n, dtype=np.int64)
+    for l in range(len(strides)):
+        rows = radixnet.butterfly_layer(n, k, l)
+        w = np.zeros((n, n), np.int64)
+        for i, r in enumerate(rows):
+            for c in r:
+                w[i, c] += 1
+        reach = w @ reach
+    assert (reach > 0).all(), "full mixing after one stride cycle"
+    assert len(np.unique(reach)) == 1, "equal path counts everywhere"
+
+
+def test_random_layer_invariants():
+    rows = radixnet.random_layer(128, 8, 3, seed=5)
+    assert all(len(set(r)) == 8 for r in rows)
+    assert rows == radixnet.random_layer(128, 8, 3, seed=5)
+    assert rows != radixnet.random_layer(128, 8, 4, seed=5)
+
+
+def test_generate_dispatch():
+    net = radixnet.generate(64, 3, k=4)
+    assert len(net) == 3
+    with pytest.raises(ValueError):
+        radixnet.generate(64, 3, k=4, topology="nope")
+
+
+# ---------------------------------------------------------------- formats
+
+def test_pack_ell_roundtrip():
+    rows = [[1, 2], [3], [], [0, 4, 5]]
+    idx, val = pack_ell(rows, k=3, weight=0.25)
+    assert idx.shape == (4, 3) and val.shape == (4, 3)
+    assert idx[0, 0] == 1 and idx[0, 1] == 2 and val[0, 2] == 0.0
+    assert idx[2].tolist() == [0, 0, 0] and val[2].tolist() == [0, 0, 0]
+    assert val[3].tolist() == [0.25, 0.25, 0.25]
+
+
+def test_pack_ell_rejects_overflow():
+    with pytest.raises(ValueError):
+        pack_ell([[70000]], k=1)
+    with pytest.raises(ValueError):
+        pack_ell([[1, 2, 3]], k=2)
+
+
+@given(st.lists(st.lists(st.integers(0, 63), max_size=8), min_size=1, max_size=40),
+       st.sampled_from([1, 2, 4, 8]))
+@settings(max_examples=30, deadline=None)
+def test_padding_overhead_monotone_in_granularity(rows, g):
+    """Paper §III.A.3: finer slicing granularity never pads more.
+    warp (fine) <= tile <= layer (coarse)."""
+    k = 8
+    fine = padding_overhead(rows, k, granularity=g)
+    coarse = padding_overhead(rows, k, granularity=g * 4)
+    assert fine <= coarse + 1e-9
+    assert padding_overhead(rows, k, granularity=len(rows)) >= fine - 1e-9
+
+
+def test_padding_overhead_uniform_rows_is_zero():
+    rows = [[0, 1, 2]] * 16
+    assert padding_overhead(rows, 3, granularity=4) == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------- mnist
+
+@pytest.mark.parametrize("neurons", [256, 1024, 4096])
+def test_mnist_density_regime(neurons):
+    imgs = mnist_synth.generate(neurons, 64, seed=1)
+    dens = np.array([sum(i) / neurons for i in imgs])
+    assert dens.mean() > 0.01, "images must not be empty on average"
+    assert dens.mean() < 0.6, "images must stay sparse"
+    assert set(v for i in imgs for v in i) <= {0, 1}
+
+
+def test_mnist_determinism():
+    a = mnist_synth.generate(256, 8, seed=2)
+    b = mnist_synth.generate(256, 8, seed=2)
+    c = mnist_synth.generate(256, 8, seed=3)
+    assert a == b
+    assert a != c
+
+
+def test_mnist_rejects_bad_size():
+    with pytest.raises(ValueError):
+        mnist_synth.image_side(1000)
+    assert mnist_synth.image_side(1024) == 32
+    assert mnist_synth.image_side(65536) == 256

@@ -1,0 +1,59 @@
+"""Exports cross-language golden data consumed by rust/tests/cross_language.rs.
+
+`make test` runs pytest before `cargo test`, so the golden file is fresh
+whenever the Rust suite runs through the Makefile. The Rust test skips
+with a notice when the file is absent (e.g. bare `cargo test` on a clean
+tree).
+
+Everything in the golden file is produced by the *Python* implementations;
+Rust must reproduce it bit-for-bit (PRNG, topology, dataset) or within
+float tolerance (network outputs).
+"""
+
+import json
+import os
+
+import numpy as np
+
+from compile import mnist_synth, radixnet
+from compile.formats import pack_ell
+from compile.kernels import ref
+from compile.prng import Xoshiro256
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                   "golden_cross.json")
+
+
+def test_export_golden_cross_language():
+    golden = {}
+
+    r = Xoshiro256(42)
+    golden["xoshiro_seed42_u64"] = [str(r.next_u64()) for _ in range(8)]
+    r2 = Xoshiro256(7)
+    golden["xoshiro_seed7_below10"] = [r2.next_below(10) for _ in range(16)]
+    r3 = Xoshiro256(42)
+    golden["xoshiro_seed42_f32"] = [r3.next_f32() for _ in range(8)]
+
+    golden["butterfly_n64_k4_l0_rows"] = radixnet.butterfly_layer(64, 4, 0)[:8]
+    golden["butterfly_n64_k4_l1_rows"] = radixnet.butterfly_layer(64, 4, 1)[:8]
+    golden["butterfly_n1024_k32_strides"] = radixnet.butterfly_strides(1024, 32)
+    golden["random_n64_k4_l1_s5_rows"] = radixnet.random_layer(64, 4, 1, seed=5)[:8]
+
+    golden["mnist_n256_c4_s2"] = mnist_synth.generate(256, 4, seed=2)
+
+    # Small network run: final activations + categories (float oracle).
+    neurons, layers, k, batch = 64, 6, 4, 12
+    net = radixnet.generate(neurons, layers, k=k, topology="butterfly")
+    bias = np.full(neurons, -0.3, np.float32)
+    y = np.array(mnist_synth.generate(neurons, batch, seed=11), np.float32)
+    for rows in net:
+        idx, val = pack_ell(rows, k=k)
+        y = np.asarray(ref.ell_layer(y, idx, val, bias))
+    golden["net_n64_l6_final_sum"] = float(y.sum())
+    golden["net_n64_l6_categories"] = np.nonzero((y > 0).any(axis=1))[0].tolist()
+    golden["net_n64_l6_row0"] = y[0].tolist()
+
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(golden, f, indent=1)
+    assert os.path.exists(OUT)

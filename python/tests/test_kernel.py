@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas fused kernel vs the pure-jnp oracles.
+
+This is the CORE correctness signal for the AOT path — the same kernel
+configuration that passes here is what aot.py lowers into the artifacts the
+Rust runtime executes. Hypothesis sweeps shapes, tilings and input regimes.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.spdnn import KernelConfig, RELU_CAP, fused_ell_layer
+
+
+def make_inputs(rng, n, k, batch, density=0.3, wscale=0.5, idx_dtype=np.uint16):
+    idx = rng.integers(0, n, size=(n, k)).astype(idx_dtype)
+    val = ((rng.random((n, k)) - 0.3) * wscale).astype(np.float32)
+    bias = (rng.random(n).astype(np.float32) - 0.5) * 0.2
+    y = (rng.random((batch, n)) < density).astype(np.float32)
+    return y, idx, val, bias
+
+
+def run_both(cfg, y, idx, val, bias):
+    out = jax.jit(lambda *a: fused_ell_layer(*a, cfg=cfg))(y, idx, val, bias)
+    want = ref.ell_layer(y, idx, val, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    return np.asarray(out)
+
+
+def test_matches_dense_oracle():
+    rng = np.random.default_rng(0)
+    cfg = KernelConfig(neurons=128, k=8, mb=4, tile_n=32)
+    y, idx, val, bias = make_inputs(rng, 128, 8, 12)
+    out = jax.jit(lambda *a: fused_ell_layer(*a, cfg=cfg))(y, idx, val, bias)
+    want = ref.dense_layer(y, idx, val, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_tiles=st.integers(1, 4),
+    tile_n=st.sampled_from([8, 16, 32]),
+    k=st.integers(1, 16),
+    mb=st.sampled_from([1, 2, 4, 12]),
+    nbatches=st.integers(1, 3),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_shape_sweep(n_tiles, tile_n, k, mb, nbatches, density, seed):
+    n = n_tiles * tile_n
+    cfg = KernelConfig(neurons=n, k=k, mb=mb, tile_n=tile_n)
+    rng = np.random.default_rng(seed)
+    y, idx, val, bias = make_inputs(rng, n, k, mb * nbatches, density=density)
+    run_both(cfg, y, idx, val, bias)
+
+
+@pytest.mark.parametrize("idx_dtype", [np.uint16, np.int32])
+def test_index_dtypes(idx_dtype):
+    rng = np.random.default_rng(3)
+    cfg = KernelConfig(neurons=64, k=4, mb=4, tile_n=16)
+    y, idx, val, bias = make_inputs(rng, 64, 4, 8, idx_dtype=idx_dtype)
+    run_both(cfg, y, idx, val, bias)
+
+
+def test_relu_clips_at_cap():
+    """Activations saturate at +32 (challenge ReLU)."""
+    n, k = 64, 4
+    cfg = KernelConfig(neurons=n, k=k, mb=4, tile_n=16)
+    y = np.full((4, n), 1.0, np.float32)
+    idx = np.zeros((n, k), np.uint16)
+    val = np.full((n, k), 100.0, np.float32)  # way past the cap
+    bias = np.zeros(n, np.float32)
+    out = run_both(cfg, y, idx, val, bias)
+    assert np.all(out == RELU_CAP)
+
+
+def test_negative_preactivation_is_zero():
+    n, k = 64, 4
+    cfg = KernelConfig(neurons=n, k=k, mb=4, tile_n=16)
+    y = np.ones((4, n), np.float32)
+    idx = np.zeros((n, k), np.uint16)
+    val = np.full((n, k), -1.0, np.float32)
+    bias = np.zeros(n, np.float32)
+    out = run_both(cfg, y, idx, val, bias)
+    assert np.all(out == 0.0)
+
+
+def test_all_zero_input_stays_zero_with_nonpositive_bias():
+    """The pruning premise: a dead feature never comes back (bias <= 0)."""
+    rng = np.random.default_rng(5)
+    cfg = KernelConfig(neurons=128, k=8, mb=4, tile_n=32)
+    _, idx, val, _ = make_inputs(rng, 128, 8, 4)
+    y = np.zeros((4, 128), np.float32)
+    bias = np.full(128, -0.3, np.float32)
+    out = run_both(cfg, y, idx, val, bias)
+    assert np.all(out == 0.0)
+
+
+def test_duplicate_indices_accumulate():
+    """Rows may reference the same column several times (padding shares
+    index 0); contributions must accumulate."""
+    n, k = 32, 4
+    cfg = KernelConfig(neurons=n, k=k, mb=4, tile_n=16)
+    y = np.zeros((4, n), np.float32)
+    y[:, 5] = 1.0
+    idx = np.full((n, k), 5, np.uint16)
+    val = np.full((n, k), 0.25, np.float32)
+    bias = np.zeros(n, np.float32)
+    out = run_both(cfg, y, idx, val, bias)
+    np.testing.assert_allclose(out, np.full((4, n), 1.0))
+
+
+def test_padding_value_zero_is_inert():
+    rng = np.random.default_rng(7)
+    cfg = KernelConfig(neurons=64, k=8, mb=4, tile_n=16)
+    y, idx, val, bias = make_inputs(rng, 64, 8, 4)
+    val[:, 5:] = 0.0  # simulate ELL padding
+    idx2 = idx.copy()
+    idx2[:, 5:] = 0  # padding convention: index 0
+    want = ref.ell_layer(y, idx, val, bias)
+    got = jax.jit(lambda *a: fused_ell_layer(*a, cfg=cfg))(y, idx2, val, bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_challenge_weight_regime():
+    """1/16 weights, -0.3 bias, binary inputs: the actual challenge numbers."""
+    rng = np.random.default_rng(11)
+    n, k = 256, 32
+    cfg = KernelConfig(neurons=n, k=k, mb=12, tile_n=64)
+    idx = rng.integers(0, n, size=(n, k)).astype(np.uint16)
+    val = np.full((n, k), 1.0 / 16.0, np.float32)
+    bias = np.full(n, -0.3, np.float32)
+    y = (rng.random((24, n)) < 0.2).astype(np.float32)
+    run_both(cfg, y, idx, val, bias)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        KernelConfig(neurons=100, k=4, mb=4, tile_n=32)  # not divisible
+    with pytest.raises(ValueError):
+        KernelConfig(neurons=64, k=0, mb=4, tile_n=16)
+    cfg = KernelConfig(neurons=64, k=4, mb=4, tile_n=16)
+    y = np.zeros((6, 64), np.float32)  # 6 % mb != 0
+    idx = np.zeros((64, 4), np.uint16)
+    val = np.zeros((64, 4), np.float32)
+    bias = np.zeros(64, np.float32)
+    with pytest.raises(ValueError):
+        fused_ell_layer(y, idx, val, bias, cfg=cfg)
+    with pytest.raises(ValueError):
+        fused_ell_layer(np.zeros((4, 128), np.float32), idx, val, bias, cfg=cfg)
+
+
+def test_vmem_estimate_positive_and_monotone():
+    small = KernelConfig(neurons=64, k=4, mb=4, tile_n=16)
+    big = KernelConfig(neurons=64, k=4, mb=8, tile_n=16)
+    assert 0 < small.vmem_bytes < big.vmem_bytes

@@ -1,0 +1,74 @@
+"""L2 tests: layer_step activity flags, fused scan vs sequential layers,
+category extraction — the computations aot.py lowers into artifacts."""
+
+import jax
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.spdnn import KernelConfig
+
+
+def make_net(seed, n, k, layers, batch, density=0.25):
+    rng = np.random.default_rng(seed)
+    idxs = rng.integers(0, n, size=(layers, n, k)).astype(np.uint16)
+    vals = np.full((layers, n, k), 1.0 / 16.0, np.float32)
+    bias = np.full(n, -0.3, np.float32)
+    y = (rng.random((batch, n)) < density).astype(np.float32)
+    return y, idxs, vals, bias
+
+
+def test_layer_step_active_flags():
+    cfg = KernelConfig(neurons=64, k=4, mb=4, tile_n=16)
+    y, idxs, vals, bias = make_net(0, 64, 4, 1, 8, density=0.05)
+    y_next, active = jax.jit(lambda *a: model.layer_step(*a, cfg=cfg))(
+        y, idxs[0], vals[0], bias)
+    y_next = np.asarray(y_next)
+    active = np.asarray(active)
+    assert active.shape == (8,)
+    np.testing.assert_array_equal(active, (y_next > 0).any(axis=1).astype(np.int32))
+
+
+def test_dead_feature_flags_zero():
+    cfg = KernelConfig(neurons=64, k=4, mb=4, tile_n=16)
+    y, idxs, vals, bias = make_net(1, 64, 4, 1, 4)
+    y[2] = 0.0  # kill one feature; nonpositive bias keeps it dead
+    _, active = jax.jit(lambda *a: model.layer_step(*a, cfg=cfg))(
+        y, idxs[0], vals[0], bias)
+    assert np.asarray(active)[2] == 0
+
+
+def test_network_scan_equals_sequential():
+    cfg = KernelConfig(neurons=64, k=8, mb=4, tile_n=16)
+    layers = 6
+    y, idxs, vals, bias = make_net(2, 64, 8, layers, 8, density=0.5)
+    y_scan, active = jax.jit(lambda *a: model.network_scan(*a, cfg=cfg))(
+        y, idxs, vals, bias)
+    y_seq = y
+    for l in range(layers):
+        y_seq = ref.ell_layer(y_seq, idxs[l], vals[l], bias)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_seq),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(active),
+        (np.asarray(y_seq) > 0).any(axis=1).astype(np.int32))
+
+
+def test_extract_categories():
+    y = np.zeros((5, 16), np.float32)
+    y[1, 3] = 1.0
+    y[4, 0] = 0.5
+    cats = np.asarray(model.extract_categories(y))
+    np.testing.assert_array_equal(cats, [1, 4])
+
+
+def test_comparator_steps_agree_with_opt():
+    cfg = KernelConfig(neurons=64, k=8, mb=4, tile_n=16)
+    y, idxs, vals, bias = make_net(3, 64, 8, 1, 8, density=0.4)
+    a, fa = jax.jit(lambda *x: model.layer_step(*x, cfg=cfg))(y, idxs[0], vals[0], bias)
+    b, fb = jax.jit(model.layer_step_base)(y, idxs[0], vals[0], bias)
+    c, fc = jax.jit(model.layer_step_bcoo)(y, idxs[0], vals[0], bias)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+    np.testing.assert_array_equal(np.asarray(fa), np.asarray(fc))

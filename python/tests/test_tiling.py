@@ -1,0 +1,71 @@
+"""Auto-tiling and transposed-core kernel tests (the §Perf L1 structure)."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.spdnn import (
+    FEATURE_PANEL_BUDGET,
+    GATHER_BUDGET,
+    KernelConfig,
+    fused_ell_layer_t,
+    largest_divisor_leq,
+)
+
+
+@given(st.integers(1, 100_000), st.integers(1, 100_000))
+@settings(max_examples=200, deadline=None)
+def test_largest_divisor_leq_properties(n, bound):
+    d = largest_divisor_leq(n, bound)
+    assert 1 <= d <= min(n, bound) or (d == n and n <= bound)
+    assert n % d == 0
+    assert d <= bound or n <= bound
+    # Maximality: no larger divisor under the bound.
+    for cand in range(d + 1, min(bound, n) + 1):
+        if n % cand == 0:
+            pytest.fail(f"{cand} divides {n} and is <= {bound} but got {d}")
+
+
+def test_auto_tiling_budgets():
+    for n in (1024, 4096, 16384, 65536):
+        for cap in (12, 60, 240, 960, 1920):
+            cfg = KernelConfig.auto(n, cap)
+            assert n * cfg.mb * 4 <= max(FEATURE_PANEL_BUDGET, n * 4), (n, cap)
+            assert cfg.tile_n * cfg.k * cfg.mb * 4 <= max(GATHER_BUDGET, cfg.k * cfg.mb * 4)
+            assert cap % cfg.mb == 0
+            assert n % cfg.tile_n == 0
+            assert cfg.vmem_bytes < 32 << 20, "grid step must stay VMEM-sized"
+
+
+def test_auto_tiling_wider_nets_get_narrower_feature_tiles():
+    wide = KernelConfig.auto(65536, 1920)
+    narrow = KernelConfig.auto(1024, 1920)
+    assert wide.mb <= narrow.mb
+
+
+def test_transposed_core_matches_oracle():
+    rng = np.random.default_rng(0)
+    n, k, batch = 128, 8, 24
+    cfg = KernelConfig.auto(n, batch, k=k)
+    idx = rng.integers(0, n, size=(n, k)).astype(np.uint16)
+    val = ((rng.random((n, k)) - 0.3) * 0.5).astype(np.float32)
+    bias = (rng.random(n).astype(np.float32) - 0.5) * 0.2
+    y = (rng.random((batch, n)) < 0.3).astype(np.float32)
+    yt_next = jax.jit(lambda *a: fused_ell_layer_t(*a, cfg=cfg))(y.T, idx, val, bias)
+    want = ref.ell_layer(y, idx, val, bias)
+    np.testing.assert_allclose(np.asarray(yt_next).T, np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_transposed_core_rejects_bad_shapes():
+    cfg = KernelConfig(neurons=64, k=4, mb=4, tile_n=16)
+    idx = np.zeros((64, 4), np.uint16)
+    val = np.zeros((64, 4), np.float32)
+    bias = np.zeros(64, np.float32)
+    with pytest.raises(ValueError):
+        fused_ell_layer_t(np.zeros((64, 6), np.float32), idx, val, bias, cfg=cfg)
+    with pytest.raises(ValueError):
+        fused_ell_layer_t(np.zeros((32, 4), np.float32), idx, val, bias, cfg=cfg)
+    with pytest.raises(ValueError):
+        fused_ell_layer_t(np.zeros((64, 4), np.float32), idx[:, :2], val[:, :2], bias, cfg=cfg)

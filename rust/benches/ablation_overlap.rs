@@ -1,0 +1,69 @@
+//! §III.B.1 ablation: out-of-core weight streaming with double buffering.
+//!
+//! Compares (a) all weights resident in memory, (b) streamed out-of-core
+//! with the double-buffered prefetch thread (copies overlapped), and
+//! (c) a no-overlap variant that reads each layer synchronously on the
+//! critical path — quantifying how much the overlap hides, on the real
+//! coordinator.
+
+use spdnn::bench::{bench, BenchConfig};
+use spdnn::coordinator::{run_inference, RunOptions};
+use spdnn::data::{binio, Dataset};
+use spdnn::engine::EllEngine;
+use spdnn::util::config::RuntimeConfig;
+use spdnn::util::table::{fmt_secs, Table};
+
+fn main() -> anyhow::Result<()> {
+    let bcfg = BenchConfig::from_env();
+    let cfg = RuntimeConfig {
+        neurons: 4096,
+        layers: 24,
+        k: 32,
+        batch: 120,
+        ..Default::default()
+    };
+    let ds = Dataset::generate(&cfg)?;
+    let dir = std::env::temp_dir().join(format!("spdnn_ovl_{}", std::process::id()));
+    ds.save(&dir)?;
+    let wpath = dir.join("weights.bin");
+
+    let mut table = Table::new(
+        "Out-of-core streaming ablation (4096x24, native backend)",
+        &["Mode", "p50 wall", "vs resident"],
+    );
+
+    let m_mem = bench(&bcfg, "resident", 1.0, || {
+        run_inference(&ds, &RunOptions::default()).expect("run");
+    });
+    let m_stream = bench(&bcfg, "streamed+overlap", 1.0, || {
+        let opts = RunOptions { stream_from: Some(wpath.clone()), ..Default::default() };
+        run_inference(&ds, &opts).expect("run");
+    });
+    // No-overlap: synchronous per-layer read + compute, same work.
+    let engine = EllEngine::new(1);
+    let mut y = ds.features.clone();
+    let mut scratch = vec![0f32; y.len()];
+    let m_sync = bench(&bcfg, "streamed no-overlap", 1.0, || {
+        y.copy_from_slice(&ds.features);
+        for l in 0..cfg.layers {
+            let w = binio::read_weights_layer(&wpath, l).expect("read layer");
+            engine.layer(&w, &ds.bias, &y, &mut scratch);
+            std::mem::swap(&mut y, &mut scratch);
+        }
+    });
+
+    table.row(vec!["weights resident".into(), fmt_secs(m_mem.secs.p50), "1.00x".into()]);
+    table.row(vec![
+        "out-of-core, double-buffered".into(),
+        fmt_secs(m_stream.secs.p50),
+        format!("{:.2}x", m_stream.secs.p50 / m_mem.secs.p50),
+    ]);
+    table.row(vec![
+        "out-of-core, no overlap".into(),
+        fmt_secs(m_sync.secs.p50),
+        format!("{:.2}x", m_sync.secs.p50 / m_mem.secs.p50),
+    ]);
+    table.print();
+    println!("paper: double buffering hides the copy entirely (streamed ~= resident)");
+    Ok(())
+}

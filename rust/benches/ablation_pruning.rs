@@ -1,0 +1,71 @@
+//! §IV.C ablation: active-feature pruning. Measures real runs with
+//! pruning on/off (edges traversed, wall time) and the pruning-induced
+//! load imbalance across workers the paper discusses as future work.
+
+use spdnn::bench::{bench, BenchConfig};
+use spdnn::coordinator::{run_inference, RunOptions};
+use spdnn::data::Dataset;
+use spdnn::simulator::trace::ActivityTrace;
+use spdnn::util::config::RuntimeConfig;
+use spdnn::util::table::{fmt_teps, Table};
+
+fn main() -> anyhow::Result<()> {
+    let bcfg = BenchConfig::from_env();
+
+    let mut table = Table::new(
+        "Pruning ablation (native backend)",
+        &["Layers", "Prune", "p50 wall", "Throughput", "Edges traversed", "Saved"],
+    );
+    for layers in [24usize, 120] {
+        for prune in [false, true] {
+            let cfg = RuntimeConfig {
+                neurons: 1024,
+                layers,
+                k: 32,
+                batch: 480,
+                prune,
+                ..Default::default()
+            };
+            let ds = Dataset::generate(&cfg)?;
+            let mut last = None;
+            let m = bench(&bcfg, &format!("l{layers}_p{prune}"), cfg.total_edges() as f64, || {
+                last = Some(run_inference(&ds, &RunOptions::default()).expect("run"));
+            });
+            let r = last.unwrap();
+            table.row(vec![
+                layers.to_string(),
+                prune.to_string(),
+                format!("{:.1}ms", m.secs.p50 * 1e3),
+                fmt_teps(m.throughput()),
+                format!("{:.2e}", r.edges_traversed as f64),
+                format!("{:.1}%", r.pruning_savings() * 100.0),
+            ]);
+        }
+    }
+    table.print();
+
+    // Pruning trajectory + imbalance across workers.
+    let cfg = RuntimeConfig {
+        neurons: 1024,
+        layers: 120,
+        k: 32,
+        batch: 480,
+        workers: 4,
+        ..Default::default()
+    };
+    let ds = Dataset::generate(&cfg)?;
+    let report = run_inference(&ds, &RunOptions::default())?;
+    let trace = ActivityTrace::from_report(&report)?;
+    println!(
+        "\ntrajectory (batch {}): layer0={} layer5={} layer20={} layer119={} | savings {:.1}% | 4-worker imbalance {:.3}",
+        trace.batch,
+        trace.live[0],
+        trace.live[5.min(trace.live.len() - 1)],
+        trace.live[20.min(trace.live.len() - 1)],
+        trace.live.last().unwrap(),
+        trace.savings() * 100.0,
+        report.imbalance
+    );
+    println!("paper: deeper nets -> higher average feature sparsity -> higher TeraEdges/s");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Figures 1-2 reproduction: the sliced-ELL data-structure walkthrough
+//! and the padding-granularity accounting (§III.A.3: warp-granularity
+//! padding stays small — 27.5% in the paper's toy example — while tile
+//! and layer granularity balloon to 80%/100%).
+
+use spdnn::formats::{CsrMatrix, SlicedEll};
+use spdnn::radixnet::{RadixNet, Topology};
+use spdnn::util::prng::Xoshiro256;
+use spdnn::util::table::Table;
+
+/// The paper's Figure 1/2 toy: 16 rows with irregular lengths.
+fn figure_matrix() -> CsrMatrix {
+    let lens = [3usize, 1, 2, 2, 4, 1, 1, 3, 2, 2, 1, 4, 2, 1, 3, 1];
+    let rows: Vec<Vec<(u32, f32)>> = (0..16)
+        .map(|i| (0..lens[i]).map(|j| (((i + 3 * j) % 16) as u32, 1.0)).collect())
+        .collect();
+    CsrMatrix::from_rows(16, 16, &rows).unwrap()
+}
+
+fn random_matrix(n: usize, max_len: usize, seed: u64) -> CsrMatrix {
+    let mut rng = Xoshiro256::new(seed);
+    let rows: Vec<Vec<(u32, f32)>> = (0..n)
+        .map(|_| {
+            let len = 1 + rng.next_below(max_len as u64) as usize;
+            let mut cols = Vec::new();
+            while cols.len() < len {
+                let c = rng.next_below(n as u64) as u32;
+                if !cols.contains(&c) {
+                    cols.push(c);
+                }
+            }
+            cols.into_iter().map(|c| (c, 1.0)).collect()
+        })
+        .collect();
+    CsrMatrix::from_rows(n, n, &rows).unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    // ---- Figure 2 toy ----------------------------------------------------
+    let csr = figure_matrix();
+    let mut table = Table::new(
+        "Figure 2 walkthrough: zero-padding by slice granularity (toy 16x16)",
+        &["Granularity", "Slice rows", "Padded elems", "Real nnz", "Overhead"],
+    );
+    for (name, slice) in [("warp", 2usize), ("tile (block)", 4), ("layer", 16)] {
+        let s = SlicedEll::from_csr(&csr, slice)?;
+        table.row(vec![
+            name.into(),
+            slice.to_string(),
+            s.padded_len().to_string(),
+            s.nnz().to_string(),
+            format!("{:.1}%", s.padding_overhead() * 100.0),
+        ]);
+    }
+    table.print();
+    println!("paper's example: 27.5% (warp) vs 80% (tile) vs 100% (layer)\n");
+
+    // ---- Same accounting at realistic sizes ------------------------------
+    let mut table = Table::new(
+        "Padding overhead, 1024x1024 matrices",
+        &["Matrix", "warp(32)", "block(256)", "layer(1024)"],
+    );
+    let irregular = random_matrix(1024, 32, 13);
+    let uniform = RadixNet::new(1024, 1, 32, Topology::Butterfly, 0)?.layer_csr(0);
+    for (name, m) in [("irregular (1..32 nnz/row)", &irregular), ("RadiX-Net (uniform 32)", &uniform)] {
+        let mut row = vec![name.to_string()];
+        for slice in [32usize, 256, 1024] {
+            let s = SlicedEll::from_csr(m, slice)?;
+            row.push(format!("{:.1}%", s.padding_overhead() * 100.0));
+        }
+        table.row(row);
+    }
+    table.print();
+    println!("challenge networks are uniform 32 nnz/row -> zero padding at every granularity;\nthe sliced format's advantage appears exactly when row lengths vary (Fig. 2's point)");
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! §IV.B.1 text claim: the optimized fused kernel is 5.56-11.84x faster
+//! than the baseline implementation (Listing 1 vs Listing 2).
+//!
+//! Three measured comparisons:
+//!  * AOT system level: per-feature dispatch of the unfused baseline
+//!    (capacity-1 `layer_base`, i.e. NO cross-feature weight reuse —
+//!    the system-level meaning of Listing 1) vs the fused panel kernel.
+//!  * AOT kernel level: `layer_base` vs `layer_opt` at equal capacity.
+//!  * Native engines: per-feature CSR vs minibatched ELL across widths
+//!    (the reuse advantage grows with the weight footprint, compressed
+//!    here by this machine's 260 MiB L3 — see EXPERIMENTS.md).
+//!
+//! Needs `make artifacts` for the AOT parts.
+
+use spdnn::bench::{bench, BenchConfig};
+use spdnn::data::mnist_synth;
+use spdnn::engine::{CsrEngine, EllEngine};
+use spdnn::radixnet::{RadixNet, Topology};
+use spdnn::runtime::{Kind, LayerLiterals, Manifest, PjrtBackend};
+use spdnn::util::table::{fmt_teps, Table};
+
+fn main() -> anyhow::Result<()> {
+    let bcfg = BenchConfig::from_env();
+    let n = 1024usize;
+    let k = 32usize;
+    let batch = 240usize;
+    let net = RadixNet::new(n, 1, k, Topology::Butterfly, 7)?;
+    let w = net.layer_ell(0);
+    let bias = vec![-0.3f32; n];
+    let y = mnist_synth::generate_features(n, batch, 3)?;
+    let edges = (batch * n * k) as f64;
+
+    let mut table = Table::new(
+        "Baseline vs optimized (paper: 5.56-11.84x on V100)",
+        &["Path", "Variant", "p50", "Throughput", "Speedup"],
+    );
+
+    // ---- AOT / PJRT ------------------------------------------------------
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(&dir)?;
+        let backend = PjrtBackend::cpu()?;
+        let base1 = backend.compile(
+            manifest.find_layer(Kind::LayerBase, n, 1).expect("layer_base c1 artifact"),
+        )?;
+        let base = backend.compile(
+            manifest.find_layer(Kind::LayerBase, n, batch).expect("layer_base artifact"),
+        )?;
+        let opt = backend.compile(
+            manifest.find_layer(Kind::LayerOpt, n, batch).expect("layer_opt artifact"),
+        )?;
+        let lits = LayerLiterals::new(&w.index, &w.value, &bias, n, k)?;
+
+        // Baseline, system level: one dispatch per feature (no reuse).
+        let m_feat = bench(&bcfg, "pjrt_per_feature", edges, || {
+            for f in 0..batch {
+                base1.run(&y[f * n..(f + 1) * n], &lits).expect("base1 run");
+            }
+        });
+        // Baseline, kernel level: unfused per-feature map at equal capacity.
+        let m_base = bench(&bcfg, "pjrt_base", edges, || {
+            base.run(&y, &lits).expect("base run");
+        });
+        // Optimized: fused sliced-ELL panel kernel.
+        let m_opt = bench(&bcfg, "pjrt_opt", edges, || {
+            opt.run(&y, &lits).expect("opt run");
+        });
+        table.row(vec![
+            "pjrt".into(),
+            "baseline, per-feature dispatch".into(),
+            format!("{:.2}ms", m_feat.secs.p50 * 1e3),
+            fmt_teps(m_feat.throughput()),
+            "1.00x".into(),
+        ]);
+        table.row(vec![
+            "pjrt".into(),
+            "baseline, batched (Listing 1)".into(),
+            format!("{:.2}ms", m_base.secs.p50 * 1e3),
+            fmt_teps(m_base.throughput()),
+            format!("{:.2}x", m_feat.secs.p50 / m_base.secs.p50),
+        ]);
+        table.row(vec![
+            "pjrt".into(),
+            "optimized fused (Listing 2)".into(),
+            format!("{:.2}ms", m_opt.secs.p50 * 1e3),
+            fmt_teps(m_opt.throughput()),
+            format!("{:.2}x", m_feat.secs.p50 / m_opt.secs.p50),
+        ]);
+    } else {
+        eprintln!("(skipping PJRT comparison: run `make artifacts`)");
+    }
+
+    // ---- Native engines across widths -------------------------------------
+    for nn in [1024usize, 4096, 16384] {
+        let b = (1 << 22) / nn; // constant work per width
+        let net = RadixNet::new(nn, 1, k, Topology::Butterfly, 7)?;
+        let w = net.layer_ell(0);
+        let csr = net.layer_csr(0);
+        let bias = vec![-0.3f32; nn];
+        let y = mnist_synth::generate_features(nn, b, 3)?;
+        let mut out = vec![0f32; y.len()];
+        let e = (b * nn * k) as f64;
+        let m_csr = bench(&bcfg, "native_csr", e, || CsrEngine.layer(&csr, &bias, &y, &mut out));
+        let eng = EllEngine::new(1);
+        let m_ell = bench(&bcfg, "native_ell", e, || eng.layer(&w, &bias, &y, &mut out));
+        table.row(vec![
+            format!("native n={nn}"),
+            "baseline CSR per-feature".into(),
+            format!("{:.2}ms", m_csr.secs.p50 * 1e3),
+            fmt_teps(m_csr.throughput()),
+            "1.00x".into(),
+        ]);
+        table.row(vec![
+            format!("native n={nn}"),
+            "optimized ELL minibatched".into(),
+            format!("{:.2}ms", m_ell.secs.p50 * 1e3),
+            fmt_teps(m_ell.throughput()),
+            format!("{:.2}x", m_csr.secs.p50 / m_ell.secs.p50),
+        ]);
+    }
+
+    table.print();
+    println!(
+        "paper reports 5.56-11.84x on V100 (DRAM-resident weights, uncoalesced baseline);\n\
+         on this CPU the weights stay cache-resident, so the kernel-level gap compresses —\n\
+         the system-level (per-feature dispatch) row carries the reuse claim here"
+    );
+    Ok(())
+}

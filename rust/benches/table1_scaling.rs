@@ -1,0 +1,108 @@
+//! Table I, columns 3-11 (3..768 V100s on Summit).
+//!
+//! Part 1 measures REAL multi-worker strong scaling on this machine
+//! (the actual coordinator: partitioning, pruning, merge). Part 2 feeds
+//! the measured pruning trace to the calibrated Summit simulator and
+//! prints the full 12x9 grid against the paper's numbers.
+
+use spdnn::bench::{bench, BenchConfig};
+use spdnn::coordinator::{run_inference, RunOptions};
+use spdnn::data::Dataset;
+use spdnn::simulator::gpu_model::{v100, KernelParams};
+use spdnn::simulator::network::summit;
+use spdnn::simulator::scaling::{ScalingSim, CHALLENGE_BATCH};
+use spdnn::simulator::trace::ActivityTrace;
+use spdnn::util::config::RuntimeConfig;
+use spdnn::util::table::{fmt_teps, Table};
+
+const GPUS: [usize; 9] = [3, 6, 12, 24, 48, 96, 192, 384, 768];
+
+/// Paper Table I columns 3-11 per (neurons, layers).
+const PAPER: &[(usize, usize, [f64; 9])] = &[
+    (1024, 120, [18.92, 22.46, 25.52, 28.52, 27.77, 29.17, 27.89, 29.12, 29.13]),
+    (1024, 480, [21.47, 24.34, 26.92, 28.73, 28.43, 29.30, 28.80, 29.10, 23.06]),
+    (1024, 1920, [22.26, 24.77, 27.33, 28.70, 28.58, 28.60, 28.73, 28.83, 28.83]),
+    (4096, 120, [20.69, 31.36, 47.82, 62.03, 70.31, 75.81, 79.11, 81.13, 82.20]),
+    (4096, 480, [28.18, 40.58, 56.54, 67.63, 73.16, 77.27, 80.02, 79.97, 82.22]),
+    (4096, 1920, [30.53, 44.48, 62.74, 72.57, 73.72, 76.25, 79.99, 80.67, 82.32]),
+    (16384, 120, [16.31, 28.85, 50.74, 64.33, 89.18, 111.44, 146.88, 114.87, 111.30]),
+    (16384, 480, [19.82, 32.88, 50.83, 71.45, 95.78, 112.61, 138.62, 138.30, 139.44]),
+    (16384, 1920, [20.86, 33.62, 57.08, 77.73, 104.83, 120.63, 146.11, 146.30, 146.40]),
+    (65536, 120, [10.90, 18.77, 34.20, 51.14, 73.67, 100.72, 162.19, 173.25, 179.58]),
+    (65536, 480, [12.13, 20.39, 37.63, 56.66, 75.29, 108.06, 166.15, 170.26, 169.30]),
+    (65536, 1920, [12.47, 20.88, 38.81, 58.08, 77.55, 112.01, 167.43, 170.06, 171.37]),
+];
+
+fn main() -> anyhow::Result<()> {
+    let bcfg = BenchConfig::from_env();
+
+    // ---- Part 1: real multi-worker strong scaling -----------------------
+    let mut measured = Table::new(
+        "Measured strong scaling (real coordinator, native backend)",
+        &["Workers", "Throughput", "Speedup", "Efficiency", "Imbalance"],
+    );
+    let mut base = None;
+    let mut trace = None;
+    for workers in [1usize, 2, 3, 4] {
+        let cfg = RuntimeConfig {
+            neurons: 1024,
+            layers: 120,
+            k: 32,
+            batch: 480,
+            workers,
+            ..Default::default()
+        };
+        let ds = Dataset::generate(&cfg)?;
+        let mut last = None;
+        let m = bench(&bcfg, &format!("scale_w{workers}"), cfg.total_edges() as f64, || {
+            last = Some(run_inference(&ds, &RunOptions::default()).expect("inference"));
+        });
+        let report = last.unwrap();
+        if workers == 1 {
+            base = Some(m.throughput());
+            trace = Some(ActivityTrace::from_report(&report)?);
+        }
+        let speedup = m.throughput() / base.unwrap();
+        measured.row(vec![
+            workers.to_string(),
+            fmt_teps(m.throughput()),
+            format!("{speedup:.2}x"),
+            format!("{:.0}%", speedup / workers as f64 * 100.0),
+            format!("{:.3}", report.imbalance),
+        ]);
+    }
+    measured.print();
+    println!("(single-core machine: multi-worker speedup here shows coordination overhead only;\n the Summit projection below models real parallel hardware)\n");
+
+    // ---- Part 2: simulated Summit grid vs the paper ---------------------
+    let trace120 = trace.unwrap().rescale(CHALLENGE_BATCH).with_layers(120);
+    let sim = ScalingSim::calibrated(v100(), summit(), &trace120);
+
+    let mut header = vec!["Neurons".to_string(), "Layers".to_string(), "".to_string()];
+    header.extend(GPUS.iter().map(|g| g.to_string()));
+    let mut table = Table::new(
+        "Table I cols 3-11: TeraEdges/s at 3..768 V100s (sim vs paper)",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for &(n, l, paper) in PAPER {
+        let t = trace120.with_layers(l);
+        let p = KernelParams::challenge(n);
+        let mut sim_row = vec![n.to_string(), l.to_string(), "sim".to_string()];
+        for &g in &GPUS {
+            sim_row.push(format!("{:.1}", sim.simulate(&p, &t, g).edges_per_sec / 1e12));
+        }
+        table.row(sim_row);
+        let mut paper_row = vec!["".to_string(), "".to_string(), "paper".to_string()];
+        paper_row.extend(paper.iter().map(|x| format!("{x:.1}")));
+        table.row(paper_row);
+    }
+    table.print();
+
+    // Headline claims.
+    let p64 = KernelParams::challenge(65536);
+    let t120 = trace120.with_layers(120);
+    let best = sim.simulate(&p64, &t120, 768).edges_per_sec / 1e12;
+    let single = sim.simulate(&p64, &t120, 1).edges_per_sec / 1e12;
+    println!("headline: 65536x120 @768 GPUs = {best:.0} TEps (paper: 180); 768-GPU speedup {:.0}x (paper: 51.8x)", best / single);
+    Ok(())
+}

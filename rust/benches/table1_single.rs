@@ -1,0 +1,105 @@
+//! Table I, columns 1-2 (single V100 / single A100).
+//!
+//! Measures REAL single-worker throughput of this stack (native engine +
+//! the PJRT/AOT path) on scaled workloads, then prints the calibrated
+//! simulator's V100/A100 projections next to the paper's published
+//! numbers for all 12 configurations.
+//!
+//! Usage: cargo bench --bench table1_single [-- --pjrt] ; scale with
+//! SPDNN_BENCH_ITERS / SPDNN_BENCH_MAX_SECS.
+
+use spdnn::bench::{bench, BenchConfig};
+use spdnn::coordinator::{run_inference, Backend, RunOptions};
+use spdnn::data::Dataset;
+use spdnn::simulator::gpu_model::{a100, v100, KernelParams};
+use spdnn::simulator::network::summit;
+use spdnn::simulator::scaling::{ScalingSim, CHALLENGE_BATCH};
+use spdnn::simulator::trace::ActivityTrace;
+use spdnn::util::config::RuntimeConfig;
+use spdnn::util::table::{fmt_teps, Table};
+
+/// Paper Table I: (neurons, layers) -> (V100 TEps, A100 TEps).
+const PAPER: &[(usize, usize, f64, f64)] = &[
+    (1024, 120, 10.51, 16.74),
+    (1024, 480, 12.87, 20.99),
+    (1024, 1920, 14.30, 20.68),
+    (4096, 120, 9.45, 14.27),
+    (4096, 480, 11.74, 18.63),
+    (4096, 1920, 13.88, 19.86),
+    (16384, 120, 6.15, 11.60),
+    (16384, 480, 7.45, 14.31),
+    (16384, 1920, 7.84, 15.27),
+    (65536, 120, 3.47, 8.15),
+    (65536, 480, 3.83, 9.08),
+    (65536, 1920, 3.93, 9.33),
+];
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let use_pjrt = args.iter().any(|a| a == "--pjrt");
+    let bcfg = BenchConfig::from_env();
+
+    // ---- Part 1: measured on this machine (scaled workloads) -----------
+    let mut measured = Table::new(
+        "Measured single-worker throughput (scaled workloads, this machine)",
+        &["Neurons", "Layers", "Batch", "Backend", "Throughput", "p50 wall"],
+    );
+    let mut anchor_trace: Option<ActivityTrace> = None;
+    for (n, l, b) in [(1024usize, 24usize, 240usize), (1024, 120, 240), (4096, 24, 120)] {
+        let cfg = RuntimeConfig { neurons: n, layers: l, k: 32, batch: b, ..Default::default() };
+        let ds = Dataset::generate(&cfg)?;
+        let opts = if use_pjrt {
+            RunOptions { backend: Backend::Pjrt { artifacts: "artifacts".into() }, ..Default::default() }
+        } else {
+            RunOptions::default()
+        };
+        let mut last = None;
+        let m = bench(&bcfg, &format!("single_n{n}_l{l}"), cfg.total_edges() as f64, || {
+            last = Some(run_inference(&ds, &opts).expect("inference"));
+        });
+        let report = last.unwrap();
+        if n == 1024 && l == 120 {
+            anchor_trace = Some(ActivityTrace::from_report(&report)?);
+        }
+        measured.row(vec![
+            n.to_string(),
+            l.to_string(),
+            b.to_string(),
+            if use_pjrt { "pjrt" } else { "native" }.to_string(),
+            fmt_teps(m.throughput()),
+            format!("{:.1}ms", m.secs.p50 * 1e3),
+        ]);
+    }
+    measured.print();
+
+    // ---- Part 2: calibrated projection vs the paper ---------------------
+    let trace120 = anchor_trace
+        .unwrap()
+        .rescale(CHALLENGE_BATCH)
+        .with_layers(120);
+    let sim_v = ScalingSim::calibrated(v100(), summit(), &trace120);
+    let sim_a = ScalingSim { gpu: a100(), cluster: summit(), alpha: sim_v.alpha };
+
+    let mut table = Table::new(
+        "Table I cols 1-2: single-GPU TeraEdges/s (simulated vs paper)",
+        &["Neurons", "Layers", "V100 sim", "V100 paper", "A100 sim", "A100 paper", "A100 speedup sim/paper"],
+    );
+    for &(n, l, pv, pa) in PAPER {
+        let trace = trace120.with_layers(l);
+        let p = KernelParams::challenge(n);
+        let v = sim_v.simulate(&p, &trace, 1).edges_per_sec / 1e12;
+        let a = sim_a.simulate(&p, &trace, 1).edges_per_sec / 1e12;
+        table.row(vec![
+            n.to_string(),
+            l.to_string(),
+            format!("{v:.2}"),
+            format!("{pv:.2}"),
+            format!("{a:.2}"),
+            format!("{pa:.2}"),
+            format!("{:.2}/{:.2}", a / v, pa / pv),
+        ]);
+    }
+    table.print();
+    println!("calibration: V100 single-GPU 120-layer column; A100 + depth columns derived");
+    Ok(())
+}

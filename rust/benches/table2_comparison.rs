@@ -1,0 +1,81 @@
+//! Table II: speedups over the 2019 Sparse DNN Challenge submissions.
+//!
+//! The 2019 submissions' absolute throughputs are taken from the paper's
+//! Table II (they are published reference data, not something we can
+//! rerun); "this work" is our simulated best-scale throughput from the
+//! calibrated Summit model. The reproduction criterion is the *speedup
+//! pattern*: who wins, by roughly what factor, and how the gap widens
+//! with network size.
+
+use spdnn::simulator::gpu_model::{v100, KernelParams};
+use spdnn::simulator::network::summit;
+use spdnn::simulator::scaling::{ScalingSim, CHALLENGE_BATCH};
+use spdnn::simulator::trace::ActivityTrace;
+use spdnn::util::table::Table;
+
+/// Paper Table II reference throughputs (edges/s) per (neurons, layers):
+/// Bisson & Fatica (champion), Davis et al. (champion), Ellis &
+/// Rajamanickam (innovation), Wang et al. (student innov.), Wang et al.
+/// (finalist, cuSPARSE). `None` = not reported.
+#[allow(clippy::type_complexity)]
+const REFS: &[(usize, usize, f64, f64, f64, Option<f64>, Option<f64>)] = &[
+    (1024, 120, 4.517e12, 1.533e11, 2.760e11, Some(1.407e11), Some(8.434e10)),
+    (1024, 480, 7.703e12, 2.935e11, 2.800e11, Some(1.781e11), Some(9.643e10)),
+    (1024, 1920, 8.878e12, 2.754e11, 2.800e11, Some(1.896e11), Some(9.600e10)),
+    (4096, 120, 6.541e12, 1.388e11, 2.120e11, Some(1.943e11), Some(6.506e10)),
+    (4096, 480, 1.231e13, 1.743e11, 2.160e11, Some(2.141e11), Some(6.679e10)),
+    (4096, 1920, 1.483e13, 1.863e11, 2.160e11, Some(2.197e11), Some(6.617e10)),
+    (16384, 120, 1.008e13, 1.048e11, 1.270e11, Some(1.966e11), Some(3.797e10)),
+    (16384, 480, 1.500e13, 1.156e11, 1.280e11, Some(2.060e11), Some(3.747e10)),
+    (16384, 1920, 1.670e13, 1.203e11, 1.310e11, Some(1.964e11), Some(3.750e10)),
+    (65536, 120, 9.388e12, 1.050e11, 9.110e10, Some(1.892e11), None),
+    (65536, 480, 1.638e13, 1.091e11, 8.580e10, Some(1.799e11), None),
+    (65536, 1920, 1.787e13, 1.127e11, 8.430e10, None, None),
+];
+
+/// Paper's own speedups vs Bisson & Fatica, for the shape check.
+const PAPER_SPEEDUP_BF: &[f64] =
+    &[6.46, 3.80, 3.25, 12.57, 6.68, 5.55, 14.57, 9.29, 8.77, 19.13, 10.40, 9.59];
+
+fn main() -> anyhow::Result<()> {
+    let anchor = ActivityTrace::synthetic(CHALLENGE_BATCH, 120, 0.9, 0.4);
+    let sim = ScalingSim::calibrated(v100(), summit(), &anchor);
+
+    let mut table = Table::new(
+        "Table II: speedup of this work over 2019 submissions (sim vs paper)",
+        &["Neurons", "Layers", "This work", "vs B&F", "paper", "vs Davis", "vs Ellis", "vs Wang19s", "vs cuSPARSE"],
+    );
+    let mut shape_ok = 0usize;
+    for (i, &(n, l, bf, davis, ellis, wang, cusparse)) in REFS.iter().enumerate() {
+        let trace = ActivityTrace::synthetic(CHALLENGE_BATCH, l, 0.9, 0.4);
+        let p = KernelParams::challenge(n);
+        // "Fastest time from our submission": best over the GPU ladder.
+        let ours = [1usize, 3, 6, 12, 24, 48, 96, 192, 384, 768]
+            .iter()
+            .map(|&g| sim.simulate(&p, &trace, g).edges_per_sec)
+            .fold(0.0f64, f64::max);
+        let s_bf = ours / bf;
+        let fmt_opt = |r: Option<f64>| r.map(|x| format!("{:.0}x", ours / x)).unwrap_or_else(|| "-".into());
+        table.row(vec![
+            n.to_string(),
+            l.to_string(),
+            format!("{:.2e}", ours),
+            format!("{s_bf:.2}x"),
+            format!("{:.2}x", PAPER_SPEEDUP_BF[i]),
+            format!("{:.0}x", ours / davis),
+            format!("{:.0}x", ours / ellis),
+            fmt_opt(wang),
+            fmt_opt(cusparse),
+        ]);
+        // Shape check: within 3x of the paper's speedup and >1.
+        if s_bf > 1.0 && s_bf / PAPER_SPEEDUP_BF[i] < 3.0 && PAPER_SPEEDUP_BF[i] / s_bf < 3.0 {
+            shape_ok += 1;
+        }
+    }
+    table.print();
+    println!(
+        "shape check: {shape_ok}/12 configs within 3x of the paper's speedup vs the 2019 champion \
+         (all must beat the champion)"
+    );
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Shared bench harness (the offline crate set has no criterion):
+//! warmup + timed iterations + summary statistics + paper-style tables.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Measurement configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Hard cap on total measurement seconds per case.
+    pub max_secs: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 1, iters: 5, max_secs: 30.0 }
+    }
+}
+
+impl BenchConfig {
+    /// Scale iteration counts from the environment (`SPDNN_BENCH_ITERS`).
+    pub fn from_env() -> BenchConfig {
+        let mut cfg = BenchConfig::default();
+        if let Ok(s) = std::env::var("SPDNN_BENCH_ITERS") {
+            if let Ok(n) = s.parse::<usize>() {
+                cfg.iters = n.max(1);
+            }
+        }
+        if let Ok(s) = std::env::var("SPDNN_BENCH_MAX_SECS") {
+            if let Ok(n) = s.parse::<f64>() {
+                cfg.max_secs = n;
+            }
+        }
+        cfg
+    }
+}
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub secs: Summary,
+    /// Work units per iteration (e.g. edges) for throughput derivation.
+    pub work_per_iter: f64,
+}
+
+impl Measurement {
+    /// Mean throughput in work units per second.
+    pub fn throughput(&self) -> f64 {
+        if self.secs.mean > 0.0 {
+            self.work_per_iter / self.secs.mean
+        } else {
+            0.0
+        }
+    }
+
+    /// Best-case (min-time) throughput.
+    pub fn peak_throughput(&self) -> f64 {
+        if self.secs.min > 0.0 {
+            self.work_per_iter / self.secs.min
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run `f` under the config; returns per-iteration seconds.
+pub fn bench<F: FnMut()>(cfg: &BenchConfig, name: &str, work_per_iter: f64, mut f: F) -> Measurement {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.iters);
+    let budget = Instant::now();
+    for _ in 0..cfg.iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if budget.elapsed().as_secs_f64() > cfg.max_secs {
+            break;
+        }
+    }
+    Measurement {
+        name: name.to_string(),
+        secs: Summary::of(&samples).expect("at least one sample"),
+        work_per_iter,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_measures() {
+        let cfg = BenchConfig { warmup_iters: 1, iters: 3, max_secs: 10.0 };
+        let mut count = 0;
+        let m = bench(&cfg, "noop", 100.0, || {
+            count += 1;
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert_eq!(count, 4); // 1 warmup + 3 measured
+        assert_eq!(m.secs.count, 3);
+        assert!(m.secs.mean >= 0.001);
+        assert!(m.throughput() > 0.0);
+        assert!(m.peak_throughput() >= m.throughput());
+    }
+
+    #[test]
+    fn budget_caps_iterations() {
+        let cfg = BenchConfig { warmup_iters: 0, iters: 1000, max_secs: 0.02 };
+        let m = bench(&cfg, "slow", 1.0, || std::thread::sleep(std::time::Duration::from_millis(10)));
+        assert!(m.secs.count < 1000);
+    }
+}

@@ -1,0 +1,307 @@
+//! Serving mode: a dynamic batcher in front of the inference engine.
+//!
+//! The challenge workload is offline (one 60k-feature pass), but the
+//! paper's kernel is a serving primitive; this module exposes it as one:
+//! individual classification requests arrive asynchronously, the batcher
+//! groups them into feature panels (up to `max_batch`, waiting at most
+//! `max_wait` — the standard throughput/latency knob), runs the full
+//! network over the panel, and answers each request with its final
+//! activations + activity flag.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::engine::EllEngine;
+use crate::formats::EllMatrix;
+
+use super::pruning::flags_from_panel;
+use super::worker::PjrtExec;
+use crate::runtime::LayerLiterals;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Largest panel dispatched at once.
+    pub max_batch: usize,
+    /// Longest a request waits for co-batched peers.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 48, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Server backend selection.
+#[derive(Clone, Debug)]
+pub enum ServeBackend {
+    Native { threads: usize, minibatch: usize },
+    Pjrt { artifacts: std::path::PathBuf },
+}
+
+/// The model a server instance serves.
+#[derive(Clone)]
+pub struct ServedModel {
+    pub layers: Arc<Vec<EllMatrix>>,
+    pub bias: Vec<f32>,
+    pub neurons: usize,
+    pub k: usize,
+}
+
+/// Response to one classification request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Whether the feature is active after the last layer (its category).
+    pub active: bool,
+    /// Final activations of this feature.
+    pub activations: Vec<f32>,
+    /// Size of the panel this request was batched into.
+    pub batch_size: usize,
+    /// Queue + compute latency.
+    pub latency: Duration,
+}
+
+struct Request {
+    features: Vec<f32>,
+    enqueued: Instant,
+    resp: mpsc::Sender<Result<Response>>,
+}
+
+/// A running inference server.
+pub struct InferenceServer {
+    tx: Option<mpsc::Sender<Request>>,
+    handle: Option<JoinHandle<()>>,
+    neurons: usize,
+}
+
+impl InferenceServer {
+    /// Start the serving thread.
+    pub fn start(model: ServedModel, backend: ServeBackend, policy: BatchPolicy) -> InferenceServer {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let neurons = model.neurons;
+        let handle = std::thread::spawn(move || serve_loop(model, backend, policy, rx));
+        InferenceServer { tx: Some(tx), handle: Some(handle), neurons }
+    }
+
+    /// Submit one request; returns a receiver for the response.
+    pub fn submit(&self, features: Vec<f32>) -> Result<mpsc::Receiver<Result<Response>>> {
+        if features.len() != self.neurons {
+            bail!("feature vector has {} values, model expects {}", features.len(), self.neurons);
+        }
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send(Request { features, enqueued: Instant::now(), resp: rtx })
+            .map_err(|_| anyhow!("server stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Blocking classify.
+    pub fn classify(&self, features: Vec<f32>) -> Result<Response> {
+        self.submit(features)?.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+
+    /// Stop the serving thread (drains nothing; pending requests error).
+    pub fn shutdown(mut self) {
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+enum ServeExec {
+    Native(EllEngine),
+    Pjrt(Box<PjrtExec>),
+}
+
+fn serve_loop(model: ServedModel, backend: ServeBackend, policy: BatchPolicy, rx: mpsc::Receiver<Request>) {
+    // Backend construction happens on this thread (xla handles are !Send).
+    let mut exec = match &backend {
+        ServeBackend::Native { threads, minibatch } => ServeExec::Native(EllEngine::with_mb(*threads, *minibatch)),
+        ServeBackend::Pjrt { artifacts } => match PjrtExec::new(artifacts, model.neurons) {
+            Ok(p) => ServeExec::Pjrt(Box::new(p)),
+            Err(e) => {
+                // Fail every request with the construction error.
+                while let Ok(req) = rx.recv() {
+                    let _ = req.resp.send(Err(anyhow!("backend init failed: {e:#}")));
+                }
+                return;
+            }
+        },
+    };
+
+    loop {
+        // Block for the first request of the next panel.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders gone: shutdown
+        };
+        let mut panel = vec![first];
+        let deadline = Instant::now() + policy.max_wait;
+        while panel.len() < policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => panel.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        process_panel(&model, &mut exec, panel);
+    }
+}
+
+fn process_panel(model: &ServedModel, exec: &mut ServeExec, panel: Vec<Request>) {
+    let n = model.neurons;
+    let count = panel.len();
+    let mut y: Vec<f32> = Vec::with_capacity(count * n);
+    for r in &panel {
+        y.extend_from_slice(&r.features);
+    }
+
+    let result = run_network(model, exec, &mut y, count);
+    match result {
+        Ok(flags) => {
+            for (i, req) in panel.into_iter().enumerate() {
+                let resp = Response {
+                    active: flags[i],
+                    activations: y[i * n..(i + 1) * n].to_vec(),
+                    batch_size: count,
+                    latency: req.enqueued.elapsed(),
+                };
+                let _ = req.resp.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for req in panel {
+                let _ = req.resp.send(Err(anyhow!("inference failed: {msg}")));
+            }
+        }
+    }
+}
+
+/// Full network over a panel (no pruning: every request needs its final
+/// activations). Returns per-feature activity flags.
+fn run_network(model: &ServedModel, exec: &mut ServeExec, y: &mut Vec<f32>, count: usize) -> Result<Vec<bool>> {
+    let n = model.neurons;
+    match exec {
+        ServeExec::Native(engine) => {
+            let mut scratch = vec![0.0f32; y.len()];
+            for w in model.layers.iter() {
+                engine.layer(w, &model.bias, y, &mut scratch);
+                std::mem::swap(y, &mut scratch);
+            }
+        }
+        ServeExec::Pjrt(p) => {
+            for w in model.layers.iter() {
+                let lits = LayerLiterals::new(&w.index, &w.value, &model.bias, n, model.k)?;
+                let (y_next, _) = p.run_panel(y, count, &lits)?;
+                *y = y_next;
+            }
+        }
+    }
+    Ok(flags_from_panel(y, n, count))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::engine::CsrEngine;
+    use crate::util::config::RuntimeConfig;
+
+    fn model() -> (ServedModel, Dataset) {
+        let cfg = RuntimeConfig { neurons: 64, layers: 4, k: 4, batch: 8, ..Default::default() };
+        let ds = Dataset::generate(&cfg).unwrap();
+        (
+            ServedModel {
+                layers: Arc::new(ds.layers.clone()),
+                bias: ds.bias.clone(),
+                neurons: 64,
+                k: 4,
+            },
+            ds,
+        )
+    }
+
+    fn native() -> ServeBackend {
+        ServeBackend::Native { threads: 1, minibatch: 12 }
+    }
+
+    #[test]
+    fn classify_matches_offline_truth() {
+        let (m, ds) = model();
+        let server = InferenceServer::start(m, native(), BatchPolicy::default());
+        for i in 0..ds.cfg.batch {
+            let feats = ds.features[i * 64..(i + 1) * 64].to_vec();
+            let resp = server.classify(feats).unwrap();
+            assert_eq!(resp.active, ds.truth_categories.contains(&i), "feature {i}");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn batching_groups_concurrent_requests() {
+        let (m, ds) = model();
+        let server = InferenceServer::start(
+            m,
+            native(),
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) },
+        );
+        let rxs: Vec<_> = (0..6)
+            .map(|i| server.submit(ds.features[i * 64..(i + 1) * 64].to_vec()).unwrap())
+            .collect();
+        let sizes: Vec<usize> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().batch_size).collect();
+        // All six landed within the wait window -> at least one multi-request panel.
+        assert!(sizes.iter().any(|&s| s > 1), "sizes={sizes:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_wrong_width() {
+        let (m, _) = model();
+        let server = InferenceServer::start(m, native(), BatchPolicy::default());
+        assert!(server.submit(vec![0.0; 3]).is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn activations_match_reference() {
+        let (m, ds) = model();
+        let server = InferenceServer::start(m.clone(), native(), BatchPolicy::default());
+        let feats = ds.features[0..64].to_vec();
+        let resp = server.classify(feats.clone()).unwrap();
+        // Reference through the baseline CSR engine.
+        let mut y = feats;
+        let mut scratch = vec![0.0f32; 64];
+        for w in m.layers.iter() {
+            let csr = crate::formats::convert::ell_to_csr(w).unwrap();
+            CsrEngine.layer(&csr, &m.bias, &y, &mut scratch);
+            std::mem::swap(&mut y, &mut scratch);
+        }
+        for (a, b) in resp.activations.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,159 @@
+//! The end-to-end inference driver: Algorithm 1 of the paper over the
+//! full coordinator stack (partitioning -> per-worker layer loop with
+//! pruning -> category merge -> challenge validation + throughput).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::data::Dataset;
+use crate::util::config::RuntimeConfig;
+
+use super::metrics::{InferenceReport, Timer};
+use super::partition::partition_even;
+use super::pool::{merge_categories, run_pool};
+use super::worker::{BackendKind, WeightSource, WorkerTask};
+
+/// Backend selection for a whole run.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    /// Native Rust engine (no artifacts needed).
+    Native,
+    /// AOT artifacts through PJRT (the production path).
+    Pjrt { artifacts: PathBuf },
+}
+
+/// Options of one inference run beyond the RuntimeConfig.
+#[derive(Clone, Debug)]
+pub struct RunOptions {
+    pub backend: Backend,
+    /// Stream weights out-of-core from this packed file instead of memory.
+    pub stream_from: Option<PathBuf>,
+    /// Threads per native worker (ignored by Pjrt).
+    pub native_threads: usize,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions { backend: Backend::Native, stream_from: None, native_threads: 1 }
+    }
+}
+
+/// Run one full inference pass of `dataset` with `cfg.workers` ranks.
+pub fn run_inference(dataset: &Dataset, opts: &RunOptions) -> Result<InferenceReport> {
+    let cfg: &RuntimeConfig = &dataset.cfg;
+    let n = cfg.neurons;
+    let shared = Arc::new(dataset.layers.clone());
+
+    let parts = partition_even(cfg.batch, cfg.workers);
+    let mut tasks = Vec::with_capacity(parts.len());
+    for p in parts {
+        let features = dataset.features[p.start * n..(p.start + p.count) * n].to_vec();
+        let backend = match &opts.backend {
+            Backend::Native => BackendKind::Native { threads: opts.native_threads, minibatch: cfg.minibatch },
+            Backend::Pjrt { artifacts } => BackendKind::Pjrt { artifacts: artifacts.clone() },
+        };
+        let weights = match &opts.stream_from {
+            Some(path) => WeightSource::File(path.clone()),
+            None => WeightSource::Memory(shared.clone()),
+        };
+        tasks.push(WorkerTask {
+            id: p.worker,
+            backend,
+            neurons: n,
+            k: cfg.k,
+            nlayers: cfg.layers,
+            bias: dataset.bias.clone(),
+            prune: cfg.prune,
+            features,
+            global_start: p.start,
+            weights,
+        });
+    }
+
+    let wall = Timer::start();
+    let results = run_pool(tasks)?;
+    let wall_secs = wall.secs();
+
+    let categories = merge_categories(&results);
+    let workers = results.into_iter().map(|r| r.metrics).collect();
+    Ok(InferenceReport::assemble(cfg.total_edges(), wall_secs, categories, workers))
+}
+
+/// Challenge step 4: compare against the dataset's ground truth.
+pub fn validate(report: &InferenceReport, dataset: &Dataset) -> Result<()> {
+    if report.categories != dataset.truth_categories {
+        let got = report.categories.len();
+        let want = dataset.truth_categories.len();
+        bail!("category mismatch: got {got} active features, expected {want}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(workers: usize, prune: bool) -> RuntimeConfig {
+        RuntimeConfig {
+            neurons: 64,
+            layers: 6,
+            k: 4,
+            batch: 24,
+            workers,
+            prune,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn single_worker_native_validates() {
+        let ds = Dataset::generate(&cfg(1, true)).unwrap();
+        let report = run_inference(&ds, &RunOptions::default()).unwrap();
+        validate(&report, &ds).unwrap();
+        assert!(report.edges_per_sec > 0.0);
+        assert_eq!(report.input_edges, 24 * 6 * 4 * 64);
+    }
+
+    #[test]
+    fn multi_worker_matches_single() {
+        let ds = Dataset::generate(&cfg(1, true)).unwrap();
+        let r1 = run_inference(&ds, &RunOptions::default()).unwrap();
+        for workers in [2, 3, 5] {
+            let mut ds_w = Dataset::generate(&cfg(workers, true)).unwrap();
+            ds_w.cfg.workers = workers;
+            let rw = run_inference(&ds_w, &RunOptions::default()).unwrap();
+            assert_eq!(rw.categories, r1.categories, "workers={workers}");
+            validate(&rw, &ds_w).unwrap();
+            assert_eq!(rw.workers.len(), workers);
+        }
+    }
+
+    #[test]
+    fn pruning_off_same_categories() {
+        let ds = Dataset::generate(&cfg(2, false)).unwrap();
+        let report = run_inference(&ds, &RunOptions::default()).unwrap();
+        validate(&report, &ds).unwrap();
+        assert_eq!(report.pruning_savings(), 0.0);
+    }
+
+    #[test]
+    fn pruning_saves_edges() {
+        let ds = Dataset::generate(&cfg(1, true)).unwrap();
+        let report = run_inference(&ds, &RunOptions::default()).unwrap();
+        // The synthetic inputs always lose some features over 6 layers
+        // with -0.3 bias; if not, this dataset is degenerate for tests.
+        assert!(report.pruning_savings() >= 0.0);
+    }
+
+    #[test]
+    fn streamed_run_validates() {
+        let ds = Dataset::generate(&cfg(2, true)).unwrap();
+        let dir = std::env::temp_dir().join(format!("spdnn_inf_{}", std::process::id()));
+        ds.save(&dir).unwrap();
+        let opts = RunOptions { stream_from: Some(dir.join("weights.bin")), ..Default::default() };
+        let report = run_inference(&ds, &opts).unwrap();
+        validate(&report, &ds).unwrap();
+    }
+}

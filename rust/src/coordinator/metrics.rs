@@ -1,0 +1,139 @@
+//! Inference metrics: the challenge throughput metric (input edges over
+//! inference time, paper §IV.A) plus per-layer and per-worker breakdowns.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Metrics collected by one worker during a full inference pass.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerMetrics {
+    pub worker: usize,
+    /// Features assigned to this worker at layer 0.
+    pub assigned: usize,
+    /// Seconds per layer (compute + dispatch).
+    pub layer_secs: Vec<f64>,
+    /// Live features entering each layer (pruning trajectory).
+    pub live_per_layer: Vec<usize>,
+    /// Edges actually traversed (live x neurons x k summed over layers).
+    pub edges_traversed: u64,
+    /// PJRT dispatches issued (0 for the native backend).
+    pub dispatches: usize,
+    /// Seconds spent waiting on the out-of-core weight stream.
+    pub stream_wait_secs: f64,
+}
+
+impl WorkerMetrics {
+    pub fn total_secs(&self) -> f64 {
+        self.layer_secs.iter().sum()
+    }
+}
+
+/// Aggregated metrics of one inference run.
+#[derive(Clone, Debug)]
+pub struct InferenceReport {
+    /// The challenge metric numerator: batch x layers x (k x neurons).
+    pub input_edges: u64,
+    /// Wall-clock seconds of the whole pass (max over workers + merge).
+    pub wall_secs: f64,
+    /// Input edges / wall seconds (the paper's Table I quantity).
+    pub edges_per_sec: f64,
+    /// Edges actually traversed after pruning.
+    pub edges_traversed: u64,
+    /// Final categories (surviving global feature ids).
+    pub categories: Vec<usize>,
+    pub workers: Vec<WorkerMetrics>,
+    /// max/mean of per-worker busy seconds (pruning-induced imbalance).
+    pub imbalance: f64,
+}
+
+impl InferenceReport {
+    pub fn assemble(
+        input_edges: u64,
+        wall_secs: f64,
+        categories: Vec<usize>,
+        workers: Vec<WorkerMetrics>,
+    ) -> InferenceReport {
+        let edges_traversed = workers.iter().map(|w| w.edges_traversed).sum();
+        let busy: Vec<f64> = workers.iter().map(|w| w.total_secs()).collect();
+        let max = busy.iter().cloned().fold(0.0, f64::max);
+        let mean = if busy.is_empty() { 0.0 } else { busy.iter().sum::<f64>() / busy.len() as f64 };
+        InferenceReport {
+            input_edges,
+            wall_secs,
+            edges_per_sec: if wall_secs > 0.0 { input_edges as f64 / wall_secs } else { 0.0 },
+            edges_traversed,
+            categories,
+            workers,
+            imbalance: if mean > 0.0 { max / mean } else { 1.0 },
+        }
+    }
+
+    /// Per-layer time summary across workers.
+    pub fn layer_summary(&self) -> Option<Summary> {
+        let all: Vec<f64> = self.workers.iter().flat_map(|w| w.layer_secs.iter().copied()).collect();
+        Summary::of(&all)
+    }
+
+    /// Fraction of input edges skipped thanks to pruning.
+    pub fn pruning_savings(&self) -> f64 {
+        if self.input_edges == 0 {
+            return 0.0;
+        }
+        1.0 - self.edges_traversed as f64 / self.input_edges as f64
+    }
+}
+
+/// Simple scope timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wm(worker: usize, layer_secs: Vec<f64>, edges: u64) -> WorkerMetrics {
+        WorkerMetrics { worker, edges_traversed: edges, layer_secs, ..Default::default() }
+    }
+
+    #[test]
+    fn report_math() {
+        let r = InferenceReport::assemble(
+            1000,
+            2.0,
+            vec![1, 5],
+            vec![wm(0, vec![0.5, 0.5], 300), wm(1, vec![0.25, 0.25], 200)],
+        );
+        assert_eq!(r.edges_per_sec, 500.0);
+        assert_eq!(r.edges_traversed, 500);
+        assert!((r.pruning_savings() - 0.5).abs() < 1e-12);
+        // busy: [1.0, 0.5]; mean 0.75; imbalance = 1/0.75
+        assert!((r.imbalance - 1.0 / 0.75).abs() < 1e-12);
+        assert_eq!(r.layer_summary().unwrap().count, 4);
+    }
+
+    #[test]
+    fn report_degenerate() {
+        let r = InferenceReport::assemble(0, 0.0, vec![], vec![]);
+        assert_eq!(r.edges_per_sec, 0.0);
+        assert_eq!(r.pruning_savings(), 0.0);
+        assert_eq!(r.imbalance, 1.0);
+        assert!(r.layer_summary().is_none());
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.secs() >= 0.002);
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator — the paper's system contribution re-expressed for this
+//! stack: static batch parallelism across simulated GPU ranks
+//! (`partition`, `pool`, `worker`), per-layer active-feature pruning
+//! (`pruning`), the end-to-end challenge driver (`inference`), a dynamic
+//! request batcher for serving mode (`batcher`) and metrics (`metrics`).
+
+pub mod batcher;
+pub mod inference;
+pub mod metrics;
+pub mod partition;
+pub mod pool;
+pub mod pruning;
+pub mod worker;
+
+pub use inference::{run_inference, validate, Backend, RunOptions};
+pub use metrics::{InferenceReport, WorkerMetrics};
+pub use worker::{BackendKind, WeightSource, WorkerResult, WorkerTask};

@@ -1,0 +1,104 @@
+//! Static feature partitioning across workers (paper §IV.C: "weights are
+//! replicated between GPUs and the features are partitioned evenly").
+
+/// One worker's contiguous feature range.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Partition {
+    pub worker: usize,
+    pub start: usize,
+    pub count: usize,
+}
+
+/// Split `batch` features across `workers` as evenly as possible
+/// (first `batch % workers` partitions get one extra feature).
+pub fn partition_even(batch: usize, workers: usize) -> Vec<Partition> {
+    assert!(workers > 0, "workers must be positive");
+    let base = batch / workers;
+    let extra = batch % workers;
+    let mut parts = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let count = base + usize::from(w < extra);
+        parts.push(Partition { worker: w, start, count });
+        start += count;
+    }
+    parts
+}
+
+/// Load-imbalance ratio of a set of per-worker work amounts:
+/// max / mean (1.0 = perfectly balanced). The paper observes pruning-induced
+/// imbalance growing with GPU count (§IV.C).
+pub fn imbalance(work: &[usize]) -> f64 {
+    if work.is_empty() {
+        return 1.0;
+    }
+    let max = *work.iter().max().unwrap() as f64;
+    let mean = work.iter().sum::<usize>() as f64 / work.len() as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{self, Runner};
+
+    #[test]
+    fn even_split_exact() {
+        let parts = partition_even(12, 4);
+        assert_eq!(parts.len(), 4);
+        assert!(parts.iter().all(|p| p.count == 3));
+        assert_eq!(parts[3].start, 9);
+    }
+
+    #[test]
+    fn uneven_split_spreads_remainder() {
+        let parts = partition_even(10, 4);
+        assert_eq!(parts.iter().map(|p| p.count).collect::<Vec<_>>(), vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn more_workers_than_features() {
+        let parts = partition_even(2, 5);
+        assert_eq!(parts.iter().map(|p| p.count).collect::<Vec<_>>(), vec![1, 1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn property_cover_disjoint_ordered() {
+        Runner::new(64, 0x9A47).run("partition-covers", |rng| {
+            let batch = proptest::usize_in(rng, 0, 500);
+            let workers = proptest::usize_in(rng, 1, 20);
+            let parts = partition_even(batch, workers);
+            if parts.len() != workers {
+                return Err("wrong worker count".into());
+            }
+            let mut pos = 0;
+            for (i, p) in parts.iter().enumerate() {
+                if p.worker != i || p.start != pos {
+                    return Err(format!("partition {i} not contiguous"));
+                }
+                pos += p.count;
+            }
+            if pos != batch {
+                return Err("does not cover batch".into());
+            }
+            let counts: Vec<usize> = parts.iter().map(|p| p.count).collect();
+            let (mn, mx) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+            if mx - mn > 1 {
+                return Err("not even".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        assert_eq!(imbalance(&[5, 5, 5]), 1.0);
+        assert_eq!(imbalance(&[9, 3]), 1.5);
+        assert_eq!(imbalance(&[]), 1.0);
+        assert_eq!(imbalance(&[0, 0]), 1.0);
+    }
+}

@@ -1,0 +1,63 @@
+//! Worker pool: spawns one OS thread per simulated GPU rank, runs the
+//! partitioned inference, and merges results (the MPI layer of the
+//! paper's Summit runs, minus the network).
+
+use anyhow::{anyhow, Result};
+
+use super::worker::{run_worker, WorkerResult, WorkerTask};
+
+/// Run all worker tasks to completion in parallel; results come back
+/// ordered by worker id. The first worker error aborts the run.
+pub fn run_pool(tasks: Vec<WorkerTask>) -> Result<Vec<WorkerResult>> {
+    if tasks.is_empty() {
+        return Ok(Vec::new());
+    }
+    if tasks.len() == 1 {
+        return Ok(vec![run_worker(tasks.into_iter().next().unwrap())?]);
+    }
+    let mut results: Vec<Option<Result<WorkerResult>>> = Vec::new();
+    results.resize_with(tasks.len(), || None);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for task in tasks {
+            handles.push(scope.spawn(move || run_worker(task)));
+        }
+        for (slot, h) in results.iter_mut().zip(handles) {
+            *slot = Some(h.join().unwrap_or_else(|_| Err(anyhow!("worker thread panicked"))));
+        }
+    });
+    let mut out = Vec::with_capacity(results.len());
+    for r in results {
+        out.push(r.expect("slot filled")?);
+    }
+    out.sort_by_key(|r| r.id);
+    Ok(out)
+}
+
+/// Merge per-worker categories into the global ascending category list.
+pub fn merge_categories(results: &[WorkerResult]) -> Vec<usize> {
+    let mut cats: Vec<usize> = results.iter().flat_map(|r| r.categories.iter().copied()).collect();
+    cats.sort_unstable();
+    cats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::WorkerMetrics;
+
+    fn fake(id: usize, cats: Vec<usize>) -> WorkerResult {
+        WorkerResult { id, categories: cats, final_y: vec![], metrics: WorkerMetrics::default() }
+    }
+
+    #[test]
+    fn merge_sorted() {
+        let rs = vec![fake(1, vec![5, 9]), fake(0, vec![1, 2])];
+        assert_eq!(merge_categories(&rs), vec![1, 2, 5, 9]);
+    }
+
+    #[test]
+    fn empty_pool() {
+        assert!(run_pool(vec![]).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,159 @@
+//! Active-feature tracking and panel compaction — the host-side
+//! `category`/`globalcategories` repacking of the paper's inference loop
+//! (Listing 1, lines 29-36): after each layer, features whose activations
+//! are all zero are pruned so later layers only process live features.
+
+/// Tracks which global feature ids are still active and owns the
+/// compaction of the feature panel.
+#[derive(Clone, Debug)]
+pub struct ActiveSet {
+    /// Global ids of live features, in panel order (the paper's
+    /// `globalcategories`).
+    ids: Vec<usize>,
+}
+
+impl ActiveSet {
+    /// All `count` features of a partition starting at `global_start`.
+    pub fn new(global_start: usize, count: usize) -> ActiveSet {
+        ActiveSet { ids: (global_start..global_start + count).collect() }
+    }
+
+    pub fn from_ids(ids: Vec<usize>) -> ActiveSet {
+        ActiveSet { ids }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn ids(&self) -> &[usize] {
+        &self.ids
+    }
+
+    /// Compact the feature panel in place given per-feature activity
+    /// flags: live rows move to the front (stable order), `ids` shrinks to
+    /// match. Returns the new live count.
+    ///
+    /// `flags.len()` must be >= current live count (flags for padded rows
+    /// beyond it are ignored, matching the capacity-padded PJRT output).
+    pub fn compact(&mut self, y: &mut Vec<f32>, neurons: usize, flags: &[bool]) -> usize {
+        let count = self.ids.len();
+        assert!(flags.len() >= count, "flags shorter than live count");
+        assert!(y.len() >= count * neurons);
+        let mut write = 0usize;
+        for read in 0..count {
+            if flags[read] {
+                if write != read {
+                    y.copy_within(read * neurons..(read + 1) * neurons, write * neurons);
+                    self.ids[write] = self.ids[read];
+                }
+                write += 1;
+            }
+        }
+        self.ids.truncate(write);
+        y.truncate(write * neurons);
+        write
+    }
+
+    /// Surviving global ids (the challenge categories for this partition).
+    pub fn into_categories(self) -> Vec<usize> {
+        self.ids
+    }
+}
+
+/// Convert the PJRT i32 activity vector into bool flags.
+pub fn flags_from_i32(active: &[i32]) -> Vec<bool> {
+    active.iter().map(|&a| a != 0).collect()
+}
+
+/// Compute activity flags directly from a feature panel (native path).
+pub fn flags_from_panel(y: &[f32], neurons: usize, count: usize) -> Vec<bool> {
+    (0..count).map(|i| y[i * neurons..(i + 1) * neurons].iter().any(|&v| v > 0.0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{self, Runner};
+
+    #[test]
+    fn compact_moves_live_rows_front() {
+        let mut set = ActiveSet::new(100, 4);
+        // 4 features x 2 neurons.
+        let mut y = vec![1.0, 1.0, /*dead*/ 0.0, 0.0, 3.0, 0.0, /*dead*/ 0.0, 0.0];
+        let flags = flags_from_panel(&y, 2, 4);
+        assert_eq!(flags, vec![true, false, true, false]);
+        let live = set.compact(&mut y, 2, &flags);
+        assert_eq!(live, 2);
+        assert_eq!(y, vec![1.0, 1.0, 3.0, 0.0]);
+        assert_eq!(set.ids(), &[100, 102]);
+    }
+
+    #[test]
+    fn compact_all_dead() {
+        let mut set = ActiveSet::new(0, 3);
+        let mut y = vec![0.0; 6];
+        let live = set.compact(&mut y, 2, &[false, false, false]);
+        assert_eq!(live, 0);
+        assert!(set.is_empty());
+        assert!(y.is_empty());
+    }
+
+    #[test]
+    fn compact_none_dead_is_noop() {
+        let mut set = ActiveSet::new(5, 2);
+        let mut y = vec![1.0, 2.0, 3.0, 4.0];
+        let live = set.compact(&mut y, 2, &[true, true]);
+        assert_eq!(live, 2);
+        assert_eq!(y, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(set.ids(), &[5, 6]);
+    }
+
+    #[test]
+    fn extra_flags_ignored() {
+        let mut set = ActiveSet::new(0, 2);
+        let mut y = vec![1.0, 0.0, 0.0, 1.0];
+        // PJRT panels are capacity-padded: extra flags must be ignored.
+        let live = set.compact(&mut y, 2, &[true, true, false, false, true]);
+        assert_eq!(live, 2);
+    }
+
+    #[test]
+    fn i32_flags() {
+        assert_eq!(flags_from_i32(&[0, 1, 2, 0]), vec![false, true, true, false]);
+    }
+
+    #[test]
+    fn property_compaction_preserves_live_rows() {
+        Runner::new(48, 0xAC71).run("compaction-preserves", |rng| {
+            let n = proptest::usize_in(rng, 1, 8);
+            let count = proptest::usize_in(rng, 0, 30);
+            let y: Vec<f32> = proptest::sparse_binary(rng, count * n, 0.2);
+            let flags = flags_from_panel(&y, n, count);
+            // Expected surviving rows, by value.
+            let want: Vec<(usize, Vec<f32>)> = (0..count)
+                .filter(|&i| flags[i])
+                .map(|i| (i, y[i * n..(i + 1) * n].to_vec()))
+                .collect();
+            let mut set = ActiveSet::new(1000, count);
+            let mut panel = y.clone();
+            let live = set.compact(&mut panel, n, &flags);
+            if live != want.len() {
+                return Err(format!("live {live} != expected {}", want.len()));
+            }
+            for (slot, (orig_idx, row)) in want.iter().enumerate() {
+                if set.ids()[slot] != 1000 + orig_idx {
+                    return Err("id order broken".into());
+                }
+                if &panel[slot * n..(slot + 1) * n] != row.as_slice() {
+                    return Err("row data corrupted".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,347 @@
+//! A worker = one simulated GPU rank.
+//!
+//! Owns its backend (a PJRT client + compiled executables, or the native
+//! engine), its replica of the weights (in memory or streamed
+//! out-of-core) and its static feature partition; runs the full layer
+//! loop with per-layer active-feature pruning — the paper's per-rank
+//! inference loop (Listing 1 host code + §III.B + §IV.C).
+
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::engine::EllEngine;
+use crate::formats::EllMatrix;
+use crate::runtime::{CompiledLayer, Kind, LayerLiterals, Manifest, PjrtBackend, WeightStreamer};
+
+use super::metrics::{Timer, WorkerMetrics};
+use super::pruning::{flags_from_i32, flags_from_panel, ActiveSet};
+
+/// Which execution backend a worker uses.
+#[derive(Clone, Debug)]
+pub enum BackendKind {
+    /// Native Rust ELL engine (oracle / no-PJRT fallback).
+    Native { threads: usize, minibatch: usize },
+    /// AOT artifacts through the PJRT CPU client.
+    Pjrt { artifacts: PathBuf },
+}
+
+/// Where a worker's weight replica comes from.
+#[derive(Clone)]
+pub enum WeightSource {
+    /// All layers resident (shared read-only view = replicated weights).
+    Memory(Arc<Vec<EllMatrix>>),
+    /// Out-of-core streaming from a packed weight file (§III.B.1).
+    File(PathBuf),
+}
+
+/// Everything a worker needs to run its partition.
+#[derive(Clone)]
+pub struct WorkerTask {
+    pub id: usize,
+    pub backend: BackendKind,
+    pub neurons: usize,
+    pub k: usize,
+    pub nlayers: usize,
+    pub bias: Vec<f32>,
+    /// Prune inactive features between layers.
+    pub prune: bool,
+    /// This worker's feature partition, [count, neurons] row-major.
+    pub features: Vec<f32>,
+    /// Global id of the first feature in the partition.
+    pub global_start: usize,
+    pub weights: WeightSource,
+}
+
+/// Worker result: surviving categories + final activations + metrics.
+#[derive(Clone, Debug)]
+pub struct WorkerResult {
+    pub id: usize,
+    /// Surviving global feature ids, ascending panel order.
+    pub categories: Vec<usize>,
+    /// Compacted final activations [categories.len(), neurons].
+    pub final_y: Vec<f32>,
+    pub metrics: WorkerMetrics,
+}
+
+enum LayerSource<'a> {
+    Mem(&'a [EllMatrix]),
+    Stream(WeightStreamer),
+}
+
+impl<'a> LayerSource<'a> {
+    fn get(&mut self, layer: usize) -> Result<Cow<'_, EllMatrix>> {
+        match self {
+            LayerSource::Mem(layers) => layers
+                .get(layer)
+                .map(Cow::Borrowed)
+                .ok_or_else(|| anyhow!("layer {layer} out of range")),
+            LayerSource::Stream(s) => Ok(Cow::Owned(s.next_layer()?)),
+        }
+    }
+}
+
+enum Exec {
+    Native(EllEngine),
+    Pjrt(PjrtExec),
+}
+
+/// PJRT execution state of one worker: one client plus a lazily-compiled
+/// ladder of capacity variants (the static-shape stand-in for the CUDA
+/// grid sized by the live feature count).
+pub struct PjrtExec {
+    backend: PjrtBackend,
+    manifest: Manifest,
+    compiled: BTreeMap<usize, CompiledLayer>,
+    neurons: usize,
+    pub dispatches: usize,
+}
+
+impl PjrtExec {
+    pub fn new(artifacts: &std::path::Path, neurons: usize) -> Result<PjrtExec> {
+        let manifest = Manifest::load(artifacts)?;
+        let exec = PjrtExec {
+            backend: PjrtBackend::cpu()?,
+            manifest,
+            compiled: BTreeMap::new(),
+            neurons,
+            dispatches: 0,
+        };
+        if exec.ladder().is_empty() {
+            bail!(
+                "no layer_opt artifacts for neurons={neurons} in {} \
+                 (re-run `make artifacts` with --neurons including it)",
+                artifacts.display()
+            );
+        }
+        Ok(exec)
+    }
+
+    /// Capacities available for this width (layer_opt plus toy variants).
+    fn ladder(&self) -> Vec<usize> {
+        let mut caps = self.manifest.capacity_ladder(self.neurons);
+        for a in &self.manifest.artifacts {
+            if a.kind == Kind::LayerToy && a.neurons == self.neurons {
+                caps.push(a.capacity);
+            }
+        }
+        caps.sort_unstable();
+        caps.dedup();
+        caps
+    }
+
+    fn ensure(&mut self, capacity: usize) -> Result<&CompiledLayer> {
+        if !self.compiled.contains_key(&capacity) {
+            let artifact = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|a| {
+                    (a.kind == Kind::LayerOpt || a.kind == Kind::LayerToy)
+                        && a.neurons == self.neurons
+                        && a.capacity == capacity
+                })
+                .ok_or_else(|| anyhow!("no artifact for n={} cap={capacity}", self.neurons))?
+                .clone();
+            let compiled = self.backend.compile(&artifact)?;
+            self.compiled.insert(capacity, compiled);
+        }
+        Ok(&self.compiled[&capacity])
+    }
+
+    /// Pick the smallest capacity >= want (or the largest available).
+    fn pick(&self, want: usize) -> Result<usize> {
+        let ladder = self.ladder();
+        ladder
+            .iter()
+            .copied()
+            .find(|&c| c >= want)
+            .or_else(|| ladder.last().copied())
+            .ok_or_else(|| anyhow!("empty capacity ladder for n={}", self.neurons))
+    }
+
+    /// Run one layer over the live prefix (`count` features) of `y`.
+    /// Returns (y_next, flags) with exactly `count` rows.
+    pub fn run_panel(
+        &mut self,
+        y: &[f32],
+        count: usize,
+        lits: &LayerLiterals,
+    ) -> Result<(Vec<f32>, Vec<bool>)> {
+        let n = self.neurons;
+        let cap = self.pick(count)?;
+        let mut y_next = Vec::with_capacity(count * n);
+        let mut flags = Vec::with_capacity(count);
+        let mut start = 0usize;
+        while start < count {
+            let chunk = cap.min(count - start);
+            let exe = self.ensure(cap)?;
+            let out = exe.run(&y[start * n..(start + chunk) * n], lits)?;
+            self.dispatches += 1;
+            y_next.extend_from_slice(&out.y_next[..chunk * n]);
+            flags.extend(flags_from_i32(&out.active[..chunk]));
+            start += chunk;
+        }
+        Ok((y_next, flags))
+    }
+}
+
+/// Run one worker to completion (called on the worker's own thread; the
+/// PJRT client is created here because xla handles are not Send).
+pub fn run_worker(task: WorkerTask) -> Result<WorkerResult> {
+    let n = task.neurons;
+    let count = task.features.len() / n.max(1);
+    if task.features.len() != count * n {
+        bail!("feature partition not a multiple of neurons");
+    }
+
+    let mut exec = match &task.backend {
+        BackendKind::Native { threads, minibatch } => {
+            Exec::Native(EllEngine::with_mb(*threads, *minibatch))
+        }
+        BackendKind::Pjrt { artifacts } => Exec::Pjrt(
+            PjrtExec::new(artifacts, n)
+                .with_context(|| format!("worker {} backend init", task.id))?,
+        ),
+    };
+
+    let memory_layers: Option<Arc<Vec<EllMatrix>>> = match &task.weights {
+        WeightSource::Memory(m) => Some(m.clone()),
+        WeightSource::File(_) => None,
+    };
+    let mut source = match &task.weights {
+        WeightSource::Memory(_) => LayerSource::Mem(memory_layers.as_deref().unwrap()),
+        WeightSource::File(p) => LayerSource::Stream(WeightStreamer::from_file(p, task.nlayers)),
+    };
+
+    let mut metrics = WorkerMetrics { worker: task.id, assigned: count, ..Default::default() };
+    let mut set = ActiveSet::new(task.global_start, count);
+    let mut y = task.features.clone();
+    let mut scratch: Vec<f32> = vec![0.0; y.len()];
+
+    for layer in 0..task.nlayers {
+        let live = set.len();
+        metrics.live_per_layer.push(live);
+        if live == 0 {
+            // Everything pruned: remaining layers are free.
+            metrics.layer_secs.push(0.0);
+            continue;
+        }
+
+        let wait = Timer::start();
+        let w = source.get(layer)?;
+        metrics.stream_wait_secs += wait.secs();
+        if w.nrows != n || w.k != task.k {
+            bail!("layer {layer} weights {}x{} do not match model {n}x{}", w.nrows, w.k, task.k);
+        }
+
+        let t = Timer::start();
+        let flags = match &mut exec {
+            Exec::Native(engine) => {
+                scratch.resize(live * n, 0.0);
+                engine.layer(&w, &task.bias, &y[..live * n], &mut scratch[..live * n]);
+                std::mem::swap(&mut y, &mut scratch);
+                y.truncate(live * n);
+                flags_from_panel(&y, n, live)
+            }
+            Exec::Pjrt(p) => {
+                let lits = LayerLiterals::new(&w.index, &w.value, &task.bias, n, task.k)?;
+                let (y_next, flags) = p.run_panel(&y, live, &lits)?;
+                y = y_next;
+                flags
+            }
+        };
+        metrics.layer_secs.push(t.secs());
+        metrics.edges_traversed += (live * n * task.k) as u64;
+
+        if task.prune {
+            set.compact(&mut y, n, &flags);
+        } else if layer == task.nlayers - 1 {
+            // No pruning: derive final categories from the last layer.
+            set.compact(&mut y, n, &flags);
+        }
+    }
+
+    if let Exec::Pjrt(p) = &exec {
+        metrics.dispatches = p.dispatches;
+    }
+    Ok(WorkerResult { id: task.id, categories: set.into_categories(), final_y: y, metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::util::config::RuntimeConfig;
+
+    fn small_cfg() -> RuntimeConfig {
+        RuntimeConfig { neurons: 64, layers: 5, k: 4, batch: 12, ..Default::default() }
+    }
+
+    fn native_task(ds: &Dataset, prune: bool) -> WorkerTask {
+        WorkerTask {
+            id: 0,
+            backend: BackendKind::Native { threads: 1, minibatch: 12 },
+            neurons: ds.cfg.neurons,
+            k: ds.cfg.k,
+            nlayers: ds.cfg.layers,
+            bias: ds.bias.clone(),
+            prune,
+            features: ds.features.clone(),
+            global_start: 0,
+            weights: WeightSource::Memory(Arc::new(ds.layers.clone())),
+        }
+    }
+
+    #[test]
+    fn native_worker_matches_truth() {
+        let ds = Dataset::generate(&small_cfg()).unwrap();
+        let out = run_worker(native_task(&ds, true)).unwrap();
+        assert_eq!(out.categories, ds.truth_categories);
+        assert_eq!(out.final_y.len(), out.categories.len() * 64);
+        assert_eq!(out.metrics.layer_secs.len(), 5);
+        assert_eq!(out.metrics.live_per_layer[0], 12);
+    }
+
+    #[test]
+    fn pruning_does_not_change_categories() {
+        let ds = Dataset::generate(&small_cfg()).unwrap();
+        let a = run_worker(native_task(&ds, true)).unwrap();
+        let b = run_worker(native_task(&ds, false)).unwrap();
+        assert_eq!(a.categories, b.categories);
+        // Pruning must traverse no more edges than the unpruned run.
+        assert!(a.metrics.edges_traversed <= b.metrics.edges_traversed);
+    }
+
+    #[test]
+    fn streamed_weights_match_memory() {
+        let ds = Dataset::generate(&small_cfg()).unwrap();
+        let dir = std::env::temp_dir().join(format!("spdnn_worker_{}", std::process::id()));
+        ds.save(&dir).unwrap();
+        let mut task = native_task(&ds, true);
+        task.weights = WeightSource::File(dir.join("weights.bin"));
+        let streamed = run_worker(task).unwrap();
+        assert_eq!(streamed.categories, ds.truth_categories);
+    }
+
+    #[test]
+    fn global_ids_offset() {
+        let ds = Dataset::generate(&small_cfg()).unwrap();
+        let mut task = native_task(&ds, true);
+        task.global_start = 500;
+        let out = run_worker(task).unwrap();
+        let expect: Vec<usize> = ds.truth_categories.iter().map(|c| c + 500).collect();
+        assert_eq!(out.categories, expect);
+    }
+
+    #[test]
+    fn mismatched_weights_error() {
+        let ds = Dataset::generate(&small_cfg()).unwrap();
+        let mut task = native_task(&ds, true);
+        task.k = 8; // lie about k
+        assert!(run_worker(task).is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! Packed binary model/feature files — the fast path the challenge's
+//! "read from binary files" step (Algorithm 1, step 1) uses.
+//!
+//! Format (little-endian):
+//!
+//! ```text
+//! header:  magic "SPDN" | u32 version | u32 kind | 4 x u64 dims
+//! payload: kind-specific
+//!   kind=1 weights:  u64 layers, then per layer [neurons*k] u16 idx +
+//!                    [neurons*k] f32 val   (dims = neurons, k, layers, 0)
+//!   kind=2 features: [count*neurons] f32   (dims = count, neurons, 0, 0)
+//! ```
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::formats::EllMatrix;
+
+const MAGIC: &[u8; 4] = b"SPDN";
+const VERSION: u32 = 1;
+const KIND_WEIGHTS: u32 = 1;
+const KIND_FEATURES: u32 = 2;
+
+fn write_header(w: &mut impl Write, kind: u32, dims: [u64; 4]) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&kind.to_le_bytes())?;
+    for d in dims {
+        w.write_all(&d.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_header(r: &mut impl Read, want_kind: u32) -> Result<[u64; 4]> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("reading magic")?;
+    if &magic != MAGIC {
+        bail!("bad magic {magic:?} (not an SPDN file)");
+    }
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let version = u32::from_le_bytes(b4);
+    if version != VERSION {
+        bail!("unsupported version {version}");
+    }
+    r.read_exact(&mut b4)?;
+    let kind = u32::from_le_bytes(b4);
+    if kind != want_kind {
+        bail!("wrong kind {kind}, expected {want_kind}");
+    }
+    let mut dims = [0u64; 4];
+    let mut b8 = [0u8; 8];
+    for d in &mut dims {
+        r.read_exact(&mut b8)?;
+        *d = u64::from_le_bytes(b8);
+    }
+    Ok(dims)
+}
+
+fn write_u16s(w: &mut impl Write, xs: &[u16]) -> Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 2);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_u16s(r: &mut impl Read, n: usize) -> Result<Vec<u16>> {
+    let mut buf = vec![0u8; n * 2];
+    r.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect())
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Write all layers of a model as packed ELL panels.
+pub fn write_weights(path: &Path, layers: &[EllMatrix]) -> Result<()> {
+    if layers.is_empty() {
+        bail!("no layers to write");
+    }
+    let (n, k) = (layers[0].nrows, layers[0].k);
+    if layers.iter().any(|l| l.nrows != n || l.k != k || l.ncols != n) {
+        bail!("layers must share [neurons, k] shape");
+    }
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    write_header(&mut w, KIND_WEIGHTS, [n as u64, k as u64, layers.len() as u64, 0])?;
+    for l in layers {
+        write_u16s(&mut w, &l.index)?;
+        write_f32s(&mut w, &l.value)?;
+    }
+    Ok(())
+}
+
+/// Read all layers of a packed weight file.
+pub fn read_weights(path: &Path) -> Result<Vec<EllMatrix>> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let [n, k, layers, _] = read_header(&mut r, KIND_WEIGHTS)?;
+    let (n, k, layers) = (n as usize, k as usize, layers as usize);
+    let mut out = Vec::with_capacity(layers);
+    for _ in 0..layers {
+        let index = read_u16s(&mut r, n * k)?;
+        let value = read_f32s(&mut r, n * k)?;
+        let m = EllMatrix { nrows: n, ncols: n, k, index, value };
+        m.validate()?;
+        out.push(m);
+    }
+    Ok(out)
+}
+
+/// Read a single layer (for out-of-core streaming: seek + read one layer).
+pub fn read_weights_layer(path: &Path, layer: usize) -> Result<EllMatrix> {
+    use std::io::{Seek, SeekFrom};
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let [n, k, layers, _] = read_header(&mut f, KIND_WEIGHTS)?;
+    let (n, k, layers) = (n as usize, k as usize, layers as usize);
+    if layer >= layers {
+        bail!("layer {layer} out of range ({layers})");
+    }
+    let header = 4 + 4 + 4 + 32u64;
+    let per_layer = (n * k) as u64 * (2 + 4);
+    f.seek(SeekFrom::Start(header + layer as u64 * per_layer))?;
+    let mut r = BufReader::new(f);
+    let index = read_u16s(&mut r, n * k)?;
+    let value = read_f32s(&mut r, n * k)?;
+    let m = EllMatrix { nrows: n, ncols: n, k, index, value };
+    m.validate()?;
+    Ok(m)
+}
+
+/// Write a dense feature matrix [count, neurons].
+pub fn write_features(path: &Path, features: &[f32], neurons: usize) -> Result<()> {
+    if neurons == 0 || features.len() % neurons != 0 {
+        bail!("feature buffer not a multiple of neurons");
+    }
+    let count = features.len() / neurons;
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    write_header(&mut w, KIND_FEATURES, [count as u64, neurons as u64, 0, 0])?;
+    write_f32s(&mut w, features)?;
+    Ok(())
+}
+
+/// Read a dense feature matrix; returns (features, count, neurons).
+pub fn read_features(path: &Path) -> Result<(Vec<f32>, usize, usize)> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let [count, neurons, _, _] = read_header(&mut r, KIND_FEATURES)?;
+    let feats = read_f32s(&mut r, (count * neurons) as usize)?;
+    Ok((feats, count as usize, neurons as usize))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::radixnet::{RadixNet, Topology};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("spdnn_bin_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn weights_roundtrip() {
+        let net = RadixNet::new(64, 3, 4, Topology::Random, 1).unwrap();
+        let layers: Vec<EllMatrix> = (0..3).map(|l| net.layer_ell(l)).collect();
+        let path = tmp("w.bin");
+        write_weights(&path, &layers).unwrap();
+        let back = read_weights(&path).unwrap();
+        assert_eq!(back, layers);
+    }
+
+    #[test]
+    fn single_layer_seek_read() {
+        let net = RadixNet::new(64, 4, 4, Topology::Random, 2).unwrap();
+        let layers: Vec<EllMatrix> = (0..4).map(|l| net.layer_ell(l)).collect();
+        let path = tmp("w2.bin");
+        write_weights(&path, &layers).unwrap();
+        for l in 0..4 {
+            assert_eq!(read_weights_layer(&path, l).unwrap(), layers[l]);
+        }
+        assert!(read_weights_layer(&path, 4).is_err());
+    }
+
+    #[test]
+    fn features_roundtrip() {
+        let feats: Vec<f32> = (0..32).map(|i| (i % 3) as f32).collect();
+        let path = tmp("f.bin");
+        write_features(&path, &feats, 8).unwrap();
+        let (back, count, neurons) = read_features(&path).unwrap();
+        assert_eq!((count, neurons), (4, 8));
+        assert_eq!(back, feats);
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        let path = tmp("c.bin");
+        std::fs::write(&path, b"NOPE").unwrap();
+        assert!(read_weights(&path).is_err());
+        std::fs::write(&path, b"SPDN\x01\x00\x00\x00\x02\x00\x00\x00").unwrap();
+        assert!(read_weights(&path).is_err(), "wrong kind");
+    }
+
+    #[test]
+    fn rejects_mismatched_layers() {
+        let a = EllMatrix::from_rows(4, 4, 2, &vec![vec![]; 4]).unwrap();
+        let b = EllMatrix::from_rows(8, 8, 2, &vec![vec![]; 8]).unwrap();
+        assert!(write_weights(&tmp("m.bin"), &[a, b]).is_err());
+        assert!(write_weights(&tmp("e.bin"), &[]).is_err());
+        assert!(write_features(&tmp("f2.bin"), &[1.0; 7], 2).is_err());
+    }
+}

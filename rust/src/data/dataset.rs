@@ -1,0 +1,129 @@
+//! Challenge dataset assembly: a model (weights + bias) plus an input
+//! feature matrix and the ground-truth categories (Algorithm 1 of the
+//! paper).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::engine::ell_engine::EllEngine;
+use crate::formats::EllMatrix;
+use crate::radixnet::{RadixNet, Topology};
+use crate::util::config::RuntimeConfig;
+
+use super::{binio, mnist_synth};
+
+/// A fully materialised challenge problem instance.
+pub struct Dataset {
+    pub cfg: RuntimeConfig,
+    /// Per-layer kernel-facing ELL panels.
+    pub layers: Vec<EllMatrix>,
+    /// Constant bias vector (challenge biases are one constant per width).
+    pub bias: Vec<f32>,
+    /// Dense input features [batch, neurons], row-major.
+    pub features: Vec<f32>,
+    /// Ground truth: indices of features active after the last layer,
+    /// computed with the native reference engine (challenge step 4).
+    pub truth_categories: Vec<usize>,
+}
+
+impl Dataset {
+    /// Generate a full instance from a RuntimeConfig (weights, inputs and
+    /// ground truth).
+    pub fn generate(cfg: &RuntimeConfig) -> Result<Dataset> {
+        cfg.validate()?;
+        let topo = Topology::parse(&cfg.topology)?;
+        let net = RadixNet::new(cfg.neurons, cfg.layers, cfg.k, topo, cfg.seed)?;
+        let layers: Vec<EllMatrix> = (0..cfg.layers).map(|l| net.layer_ell(l)).collect();
+        let bias = vec![cfg.bias_value(); cfg.neurons];
+        let features = mnist_synth::generate_features(cfg.neurons, cfg.batch, cfg.seed)?;
+        let truth_categories = compute_truth(&layers, &bias, &features, cfg.neurons);
+        Ok(Dataset { cfg: cfg.clone(), layers, bias, features, truth_categories })
+    }
+
+    /// Write the instance as packed binary files under `dir`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        binio::write_weights(&dir.join("weights.bin"), &self.layers)?;
+        binio::write_features(&dir.join("features.bin"), &self.features, self.cfg.neurons)?;
+        Ok(())
+    }
+
+    /// Load a previously saved instance (ground truth is recomputed).
+    pub fn load(dir: &Path, cfg: &RuntimeConfig) -> Result<Dataset> {
+        let layers = binio::read_weights(&dir.join("weights.bin"))?;
+        let (features, batch, neurons) = binio::read_features(&dir.join("features.bin"))?;
+        let mut cfg = cfg.clone();
+        cfg.neurons = neurons;
+        cfg.batch = batch;
+        cfg.layers = layers.len();
+        let bias = vec![cfg.bias_value(); neurons];
+        let truth_categories = compute_truth(&layers, &bias, &features, neurons);
+        Ok(Dataset { cfg, layers, bias, features, truth_categories })
+    }
+
+    pub fn neurons(&self) -> usize {
+        self.cfg.neurons
+    }
+
+    pub fn batch(&self) -> usize {
+        self.cfg.batch
+    }
+}
+
+/// Reference ground truth through the native ELL engine.
+fn compute_truth(layers: &[EllMatrix], bias: &[f32], features: &[f32], neurons: usize) -> Vec<usize> {
+    let engine = EllEngine::new(1);
+    let mut y = features.to_vec();
+    let mut scratch = vec![0f32; y.len()];
+    for layer in layers {
+        engine.layer(layer, bias, &y, &mut scratch);
+        std::mem::swap(&mut y, &mut scratch);
+    }
+    let batch = features.len() / neurons;
+    (0..batch)
+        .filter(|&i| y[i * neurons..(i + 1) * neurons].iter().any(|&v| v > 0.0))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> RuntimeConfig {
+        RuntimeConfig {
+            neurons: 64,
+            layers: 4,
+            k: 4,
+            batch: 16,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn generate_shapes() {
+        let ds = Dataset::generate(&small_cfg()).unwrap();
+        assert_eq!(ds.layers.len(), 4);
+        assert_eq!(ds.features.len(), 16 * 64);
+        assert_eq!(ds.bias.len(), 64);
+        assert!(ds.truth_categories.len() <= 16);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("spdnn_ds_{}", std::process::id()));
+        let ds = Dataset::generate(&small_cfg()).unwrap();
+        ds.save(&dir).unwrap();
+        let back = Dataset::load(&dir, &small_cfg()).unwrap();
+        assert_eq!(back.layers, ds.layers);
+        assert_eq!(back.features, ds.features);
+        assert_eq!(back.truth_categories, ds.truth_categories);
+    }
+
+    #[test]
+    fn truth_is_deterministic() {
+        let a = Dataset::generate(&small_cfg()).unwrap();
+        let b = Dataset::generate(&small_cfg()).unwrap();
+        assert_eq!(a.truth_categories, b.truth_categories);
+    }
+}

@@ -1,0 +1,119 @@
+//! Synthetic MNIST-interpolation input generator — mirror of
+//! `python/compile/mnist_synth.py` (bit-identical output; asserted by
+//! `tests/cross_language.rs`).
+//!
+//! The challenge inputs are 60 000 MNIST images resized to
+//! {32,64,128,256}² pixels, thresholded to {0,1} and linearised one image
+//! per row. The real TSV files are unavailable offline, so we synthesise
+//! sparse binary images in the same density regime: a union of a few
+//! disc-shaped "pen stroke" blobs rasterised onto the grid.
+
+use anyhow::{bail, Result};
+
+use crate::util::prng::Xoshiro256;
+
+pub const BLOBS_MIN: u64 = 3;
+pub const BLOBS_MAX: u64 = 6;
+
+/// Side length of the square image for a given neuron count.
+pub fn image_side(neurons: usize) -> Result<usize> {
+    let mut side = 1usize;
+    while side * side < neurons {
+        side *= 2;
+    }
+    if side * side != neurons {
+        bail!("neurons={neurons} is not a power-of-4 image size");
+    }
+    Ok(side)
+}
+
+/// One synthetic sparse binary image, linearised row-major.
+pub fn generate_image(rng: &mut Xoshiro256, side: usize) -> Vec<u8> {
+    let mut img = vec![0u8; side * side];
+    let nblobs = BLOBS_MIN + rng.next_below(BLOBS_MAX - BLOBS_MIN + 1);
+    for _ in 0..nblobs {
+        let cx = rng.next_below(side as u64) as i64;
+        let cy = rng.next_below(side as u64) as i64;
+        // Stroke radius scales with resolution, like interpolated MNIST.
+        // The [2, 2 + side/6) range yields ~30% ink with occasional blobs
+        // thick enough to sustain activations through the butterfly
+        // windows — reproducing the challenge's pruning regime (a burst
+        // of early feature deaths, then a stable surviving set).
+        let r = 2 + rng.next_below(((side / 6).max(1)) as u64) as i64;
+        let r2 = r * r;
+        let (x0, x1) = ((cx - r).max(0), (cx + r).min(side as i64 - 1));
+        let (y0, y1) = ((cy - r).max(0), (cy + r).min(side as i64 - 1));
+        for y in y0..=y1 {
+            for x in x0..=x1 {
+                let (dx, dy) = (x - cx, y - cy);
+                if dx * dx + dy * dy <= r2 {
+                    img[(y * side as i64 + x) as usize] = 1;
+                }
+            }
+        }
+    }
+    img
+}
+
+/// `count` images of `neurons` pixels from one shared PRNG stream.
+pub fn generate(neurons: usize, count: usize, seed: u64) -> Result<Vec<Vec<u8>>> {
+    let side = image_side(neurons)?;
+    let mut rng = Xoshiro256::new((seed << 20) ^ neurons as u64);
+    Ok((0..count).map(|_| generate_image(&mut rng, side)).collect())
+}
+
+/// Generate directly into a dense f32 feature matrix [count, neurons]
+/// (row-major), the layout the runtime feeds to PJRT.
+pub fn generate_features(neurons: usize, count: usize, seed: u64) -> Result<Vec<f32>> {
+    let imgs = generate(neurons, count, seed)?;
+    let mut out = Vec::with_capacity(count * neurons);
+    for img in imgs {
+        out.extend(img.iter().map(|&b| b as f32));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn side_mapping() {
+        assert_eq!(image_side(256).unwrap(), 16);
+        assert_eq!(image_side(1024).unwrap(), 32);
+        assert_eq!(image_side(4096).unwrap(), 64);
+        assert_eq!(image_side(65536).unwrap(), 256);
+        assert!(image_side(1000).is_err());
+    }
+
+    #[test]
+    fn density_regime() {
+        let imgs = generate(1024, 64, 1).unwrap();
+        let mean: f64 = imgs
+            .iter()
+            .map(|i| i.iter().map(|&b| b as f64).sum::<f64>() / 1024.0)
+            .sum::<f64>()
+            / 64.0;
+        assert!(mean > 0.01, "images must not be empty on average ({mean})");
+        assert!(mean < 0.6, "images must stay sparse ({mean})");
+    }
+
+    #[test]
+    fn binary_and_deterministic() {
+        let a = generate(256, 8, 2).unwrap();
+        let b = generate(256, 8, 2).unwrap();
+        let c = generate(256, 8, 3).unwrap();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.iter().flatten().all(|&v| v <= 1));
+    }
+
+    #[test]
+    fn features_layout() {
+        let f = generate_features(256, 4, 2).unwrap();
+        assert_eq!(f.len(), 4 * 256);
+        let imgs = generate(256, 4, 2).unwrap();
+        assert_eq!(f[0], imgs[0][0] as f32);
+        assert_eq!(f[256], imgs[1][0] as f32);
+    }
+}

@@ -1,0 +1,10 @@
+//! Dataset substrate: synthetic MNIST-interpolation inputs, challenge TSV
+//! interchange, packed binary model files and full problem-instance
+//! assembly.
+
+pub mod binio;
+pub mod dataset;
+pub mod mnist_synth;
+pub mod tsv;
+
+pub use dataset::Dataset;

@@ -1,0 +1,166 @@
+//! Challenge TSV formats (graphchallenge.org interchange).
+//!
+//! * Input features: one line per nonzero — `feature_id\tneuron_id\t1`
+//!   (1-based ids, like the published MNIST TSVs).
+//! * Weight layers:  one line per nonzero — `row\tcol\tvalue` (1-based).
+//!
+//! The repo generates its own data, but reads/writes the challenge format
+//! so real challenge files drop in unchanged.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::formats::CsrMatrix;
+
+/// Write a dense [count, neurons] feature matrix as a challenge TSV.
+pub fn write_features(path: &Path, features: &[f32], neurons: usize) -> Result<()> {
+    let count = features.len() / neurons;
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for i in 0..count {
+        for j in 0..neurons {
+            let v = features[i * neurons + j];
+            if v != 0.0 {
+                writeln!(w, "{}\t{}\t{}", i + 1, j + 1, v)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read a challenge feature TSV into a dense [count, neurons] matrix.
+/// `count` rows are allocated up front; ids beyond them are an error.
+pub fn read_features(path: &Path, count: usize, neurons: usize) -> Result<Vec<f32>> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut out = vec![0f32; count * neurons];
+    for (lineno, line) in std::io::BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (feat, neuron, val) = parse_triple(&line)
+            .ok_or_else(|| anyhow!("{}:{}: bad TSV line", path.display(), lineno + 1))?;
+        if feat == 0 || neuron == 0 {
+            bail!("{}:{}: ids are 1-based", path.display(), lineno + 1);
+        }
+        let (fi, ni) = (feat - 1, neuron - 1);
+        if fi >= count || ni >= neurons {
+            bail!(
+                "{}:{}: id out of range (feature {feat}/{count}, neuron {neuron}/{neurons})",
+                path.display(),
+                lineno + 1
+            );
+        }
+        out[fi * neurons + ni] = val;
+    }
+    Ok(out)
+}
+
+/// Write one weight layer as a challenge TSV (1-based row/col).
+pub fn write_layer(path: &Path, csr: &CsrMatrix) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for i in 0..csr.nrows {
+        for (c, v) in csr.row(i) {
+            writeln!(w, "{}\t{}\t{}", i + 1, c + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+/// Read one weight layer TSV into CSR.
+pub fn read_layer(path: &Path, nrows: usize, ncols: usize) -> Result<CsrMatrix> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut rows: Vec<Vec<(u32, f32)>> = vec![Vec::new(); nrows];
+    for (lineno, line) in std::io::BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (r, c, v) = parse_triple(&line)
+            .ok_or_else(|| anyhow!("{}:{}: bad TSV line", path.display(), lineno + 1))?;
+        if r == 0 || c == 0 {
+            bail!("{}:{}: ids are 1-based", path.display(), lineno + 1);
+        }
+        if r > nrows || c > ncols {
+            bail!("{}:{}: id out of range", path.display(), lineno + 1);
+        }
+        rows[r - 1].push(((c - 1) as u32, v));
+    }
+    CsrMatrix::from_rows(nrows, ncols, &rows)
+}
+
+fn parse_triple(line: &str) -> Option<(usize, usize, f32)> {
+    let mut it = line.split('\t');
+    let a = it.next()?.trim().parse().ok()?;
+    let b = it.next()?.trim().parse().ok()?;
+    let v = it.next()?.trim().parse().ok()?;
+    if it.next().is_some() {
+        return None;
+    }
+    Some((a, b, v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("spdnn_tsv_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn features_roundtrip() {
+        let dir = tmpdir();
+        let path = dir.join("feats.tsv");
+        let mut feats = vec![0f32; 3 * 8];
+        feats[0 * 8 + 2] = 1.0;
+        feats[1 * 8 + 7] = 1.0;
+        feats[2 * 8 + 0] = 0.5;
+        write_features(&path, &feats, 8).unwrap();
+        let back = read_features(&path, 3, 8).unwrap();
+        assert_eq!(back, feats);
+    }
+
+    #[test]
+    fn layer_roundtrip() {
+        let dir = tmpdir();
+        let path = dir.join("layer.tsv");
+        let csr = CsrMatrix::from_rows(
+            4,
+            4,
+            &[vec![(1, 0.0625)], vec![], vec![(0, 0.5), (3, 1.0)], vec![(2, 2.0)]],
+        )
+        .unwrap();
+        write_layer(&path, &csr).unwrap();
+        let back = read_layer(&path, 4, 4).unwrap();
+        assert_eq!(back, csr);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        let dir = tmpdir();
+        let path = dir.join("bad.tsv");
+        std::fs::write(&path, "1\t2\n").unwrap();
+        assert!(read_features(&path, 2, 2).is_err());
+        std::fs::write(&path, "0\t1\t1\n").unwrap();
+        assert!(read_features(&path, 2, 2).is_err(), "0 id must be rejected (1-based)");
+        std::fs::write(&path, "9\t1\t1\n").unwrap();
+        assert!(read_features(&path, 2, 2).is_err());
+        std::fs::write(&path, "1\t1\t1\t1\n").unwrap();
+        assert!(read_features(&path, 2, 2).is_err());
+    }
+
+    #[test]
+    fn blank_lines_ok() {
+        let dir = tmpdir();
+        let path = dir.join("blank.tsv");
+        std::fs::write(&path, "\n1\t1\t1\n\n").unwrap();
+        let f = read_features(&path, 1, 1).unwrap();
+        assert_eq!(f, vec![1.0]);
+    }
+}

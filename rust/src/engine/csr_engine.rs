@@ -1,0 +1,87 @@
+//! Native baseline engine — the Rust analog of the paper's Listing 1.
+//!
+//! One feature at a time, CSR weight traversal, no minibatch weight reuse:
+//! every feature walks the full `displ/index/value` arrays again, exactly
+//! the M-fold weight re-read the paper identifies as the baseline
+//! bottleneck. Used as the oracle for the optimized engines and as the
+//! baseline series in the comparison benches.
+
+use crate::formats::CsrMatrix;
+
+/// Challenge activation: ReLU(x) = max(0, min(x, 32)).
+#[inline]
+pub fn relu_clip(x: f32) -> f32 {
+    x.clamp(0.0, 32.0)
+}
+
+/// Baseline CSR engine.
+pub struct CsrEngine;
+
+impl CsrEngine {
+    /// One layer over a dense [batch, neurons] row-major feature panel.
+    pub fn layer(&self, w: &CsrMatrix, bias: &[f32], y_in: &[f32], y_out: &mut [f32]) {
+        let n = w.nrows;
+        assert_eq!(w.ncols, n, "weight matrices are square");
+        assert_eq!(bias.len(), n);
+        assert_eq!(y_in.len(), y_out.len());
+        let batch = y_in.len() / n;
+        for b in 0..batch {
+            let row_in = &y_in[b * n..(b + 1) * n];
+            let row_out = &mut y_out[b * n..(b + 1) * n];
+            // Per-feature pass: weights re-read for every feature.
+            for i in 0..n {
+                let mut acc = 0.0f32;
+                for (c, v) in w.row(i) {
+                    acc += row_in[c as usize] * v;
+                }
+                row_out[i] = relu_clip(acc + bias[i]);
+            }
+        }
+    }
+
+    /// Per-feature activity flags after a layer (the `active[]` counters).
+    pub fn active_flags(y: &[f32], neurons: usize) -> Vec<bool> {
+        y.chunks_exact(neurons).map(|row| row.iter().any(|&v| v > 0.0)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clip_profile() {
+        assert_eq!(relu_clip(-1.0), 0.0);
+        assert_eq!(relu_clip(0.0), 0.0);
+        assert_eq!(relu_clip(5.5), 5.5);
+        assert_eq!(relu_clip(32.0), 32.0);
+        assert_eq!(relu_clip(99.0), 32.0);
+    }
+
+    #[test]
+    fn layer_known_values() {
+        // 2 neurons: w = [[0.5 at col1], [2.0 at col0]] ; bias = [-0.25, 0]
+        let w = CsrMatrix::from_rows(2, 2, &[vec![(1, 0.5)], vec![(0, 2.0)]]).unwrap();
+        let bias = [-0.25, 0.0];
+        let y_in = [1.0, 2.0, /* second feature */ 0.0, 30.0];
+        let mut y_out = [0.0; 4];
+        CsrEngine.layer(&w, &bias, &y_in, &mut y_out);
+        // feature 0: [0.5*2-0.25, 2*1] = [0.75, 2]
+        // feature 1: [0.5*30-0.25, 0] = [14.75, 0]
+        assert_eq!(y_out, [0.75, 2.0, 14.75, 0.0]);
+    }
+
+    #[test]
+    fn clipping_applies() {
+        let w = CsrMatrix::from_rows(1, 1, &[vec![(0, 100.0)]]).unwrap();
+        let mut y_out = [0.0];
+        CsrEngine.layer(&w, &[0.0], &[1.0], &mut y_out);
+        assert_eq!(y_out, [32.0]);
+    }
+
+    #[test]
+    fn active_flags() {
+        let flags = CsrEngine::active_flags(&[0.0, 0.0, 1.0, 0.0, 0.0, 0.0], 2);
+        assert_eq!(flags, vec![false, true, false]);
+    }
+}

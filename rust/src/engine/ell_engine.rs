@@ -1,0 +1,185 @@
+//! Native optimized engine — the Rust analog of the paper's Listing 2,
+//! used as (a) the oracle for the PJRT path, (b) the no-PJRT fallback
+//! backend, and (c) the optimized series in native comparison benches.
+//!
+//! Optimizations mirrored from the CUDA kernel:
+//! * **register tiling** — features are processed in minibatches of `mb`;
+//!   each weight panel row `(idx, val)` is read once and reused across the
+//!   whole minibatch (the accumulator panel lives in L1/registers);
+//! * **ELL panels** — contiguous `[n, k]` index/value storage with u16
+//!   indices (coalescing/compactness analog);
+//! * **thread parallelism** — the feature dimension is split across OS
+//!   threads (the multi-SM analog).
+
+use crate::formats::EllMatrix;
+
+use super::csr_engine::relu_clip;
+
+/// Upper bound on the minibatch accumulator panel (stack array).
+pub const MAX_MB: usize = 64;
+
+/// Optimized native engine.
+pub struct EllEngine {
+    /// Feature-minibatch width (paper MINIBATCH, default 12).
+    pub mb: usize,
+    /// OS threads for the feature dimension.
+    pub threads: usize,
+}
+
+impl EllEngine {
+    pub fn new(threads: usize) -> EllEngine {
+        EllEngine { mb: 12, threads: threads.max(1) }
+    }
+
+    pub fn with_mb(threads: usize, mb: usize) -> EllEngine {
+        EllEngine { mb: mb.clamp(1, MAX_MB), threads: threads.max(1) }
+    }
+
+    /// One layer over a dense [batch, neurons] row-major feature panel.
+    ///
+    /// The batch is split across threads at *feature* granularity so no
+    /// thread ever sees a partial feature row.
+    pub fn layer(&self, w: &EllMatrix, bias: &[f32], y_in: &[f32], y_out: &mut [f32]) {
+        let n = w.nrows;
+        assert_eq!(w.ncols, n, "weight matrices are square");
+        assert_eq!(bias.len(), n);
+        assert_eq!(y_in.len(), y_out.len());
+        assert_eq!(y_in.len() % n, 0);
+        let batch = y_in.len() / n;
+        let threads = self.threads.min(batch.max(1));
+        if threads <= 1 {
+            self.layer_serial(w, bias, y_in, y_out);
+            return;
+        }
+        let feats_per = batch.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (t, out_chunk) in y_out.chunks_mut(feats_per * n).enumerate() {
+                let start = t * feats_per * n;
+                let in_chunk = &y_in[start..start + out_chunk.len()];
+                scope.spawn(move || self.layer_serial(w, bias, in_chunk, out_chunk));
+            }
+        });
+    }
+
+    /// Serial minibatched kernel (one thread's share).
+    fn layer_serial(&self, w: &EllMatrix, bias: &[f32], y_in: &[f32], y_out: &mut [f32]) {
+        let n = w.nrows;
+        let k = w.k;
+        let batch = y_in.len() / n;
+        let mut bstart = 0;
+        while bstart < batch {
+            let mb = self.mb.min(batch - bstart);
+            let yin = &y_in[bstart * n..(bstart + mb) * n];
+            let yout = &mut y_out[bstart * n..(bstart + mb) * n];
+            // Register tiling: one (idx, val) panel row feeds `mb` features.
+            for i in 0..n {
+                let idx = &w.index[i * k..(i + 1) * k];
+                let val = &w.value[i * k..(i + 1) * k];
+                let mut acc = [0.0f32; MAX_MB];
+                for (&c, &v) in idx.iter().zip(val) {
+                    if v == 0.0 {
+                        continue; // skip ELL padding
+                    }
+                    let c = c as usize;
+                    for f in 0..mb {
+                        acc[f] += yin[f * n + c] * v;
+                    }
+                }
+                let b = bias[i];
+                for f in 0..mb {
+                    yout[f * n + i] = relu_clip(acc[f] + b);
+                }
+            }
+            bstart += mb;
+        }
+    }
+
+    /// One layer over a *compacted* active-feature panel: only the listed
+    /// features exist in `y_in`/`y_out` (the coordinator's pruning path).
+    pub fn layer_active(&self, w: &EllMatrix, bias: &[f32], y_in: &[f32], y_out: &mut [f32], active: usize) {
+        let n = w.nrows;
+        assert!(active * n <= y_in.len());
+        self.layer(w, bias, &y_in[..active * n], &mut y_out[..active * n]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::csr_engine::CsrEngine;
+    use crate::formats::convert::ell_to_csr;
+    use crate::radixnet::{RadixNet, Topology};
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest::{self, Runner};
+
+    fn random_problem(rng: &mut Xoshiro256, n: usize, k: usize, batch: usize) -> (EllMatrix, Vec<f32>, Vec<f32>) {
+        let net = RadixNet::new(n, 1, k, Topology::Random, rng.next_u64()).unwrap();
+        let mut w = net.layer_ell(0);
+        // Randomize values away from the constant 1/16 for a harder test.
+        for v in w.value.iter_mut() {
+            *v = rng.next_range_f32(-0.5, 0.5);
+        }
+        let bias: Vec<f32> = (0..n).map(|_| rng.next_range_f32(-0.3, 0.1)).collect();
+        let y = proptest::sparse_binary(rng, batch * n, 0.3);
+        (w, bias, y)
+    }
+
+    #[test]
+    fn matches_csr_engine_oracle() {
+        Runner::new(24, 0xE11).run("ell-vs-csr", |rng| {
+            let n = *proptest::choose(rng, &[16usize, 32, 64]);
+            let k = proptest::usize_in(rng, 1, 8.min(n));
+            let batch = proptest::usize_in(rng, 1, 20);
+            let (w, bias, y) = random_problem(rng, n, k, batch);
+            let csr = ell_to_csr(&w).unwrap();
+            let mut a = vec![0.0; y.len()];
+            let mut b = vec![0.0; y.len()];
+            EllEngine::new(1).layer(&w, &bias, &y, &mut a);
+            CsrEngine.layer(&csr, &bias, &y, &mut b);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                if (x - y).abs() > 1e-4 {
+                    return Err(format!("mismatch at {i}: {x} vs {y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn minibatch_width_does_not_change_results() {
+        let mut rng = Xoshiro256::new(77);
+        let (w, bias, y) = random_problem(&mut rng, 64, 8, 30);
+        let mut want = vec![0.0; y.len()];
+        EllEngine::with_mb(1, 1).layer(&w, &bias, &y, &mut want);
+        for mb in [2, 4, 12, 30, 64] {
+            let mut got = vec![0.0; y.len()];
+            EllEngine::with_mb(1, mb.min(63)).layer(&w, &bias, &y, &mut got);
+            assert_eq!(got, want, "mb={mb}");
+        }
+    }
+
+    #[test]
+    fn threading_does_not_change_results() {
+        let mut rng = Xoshiro256::new(78);
+        let (w, bias, y) = random_problem(&mut rng, 32, 4, 48);
+        let mut want = vec![0.0; y.len()];
+        EllEngine::new(1).layer(&w, &bias, &y, &mut want);
+        for t in [2, 3, 4, 8] {
+            let mut got = vec![0.0; y.len()];
+            EllEngine::new(t).layer(&w, &bias, &y, &mut got);
+            assert_eq!(got, want, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn layer_active_prefix() {
+        let mut rng = Xoshiro256::new(79);
+        let (w, bias, y) = random_problem(&mut rng, 32, 4, 10);
+        let mut full = vec![0.0; y.len()];
+        EllEngine::new(1).layer(&w, &bias, &y, &mut full);
+        let mut partial = vec![0.0; y.len()];
+        EllEngine::new(1).layer_active(&w, &bias, &y, &mut partial, 4);
+        assert_eq!(&partial[..4 * 32], &full[..4 * 32]);
+        assert!(partial[4 * 32..].iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,10 @@
+//! Native Rust inference engines: the Listing-1 baseline (CSR) and the
+//! Listing-2 optimized engine (ELL panels, minibatch reuse, threads).
+//! They serve as oracles for the PJRT path, as the no-PJRT fallback
+//! backend, and as comparator series in the benches.
+
+pub mod csr_engine;
+pub mod ell_engine;
+
+pub use csr_engine::{relu_clip, CsrEngine};
+pub use ell_engine::EllEngine;

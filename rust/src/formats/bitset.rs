@@ -1,0 +1,111 @@
+//! Fixed-size bitset — backs the coordinator's active-feature tracking
+//! (the `active[]` flags of the CUDA kernels) without per-feature Vec<bool>
+//! overhead on 60k-feature batches.
+
+/// A fixed-capacity bitset over u64 words.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitSet {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl BitSet {
+    pub fn new(len: usize) -> BitSet {
+        BitSet { len, words: vec![0; len.div_ceil(64)] }
+    }
+
+    pub fn full(len: usize) -> BitSet {
+        let mut b = BitSet::new(len);
+        for i in 0..len {
+            b.set(i, true);
+        }
+        b
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.len, "bit {i} out of range {}", self.len);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        assert!(i < self.len, "bit {i} out of range {}", self.len);
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Indices of set bits, ascending.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.len).filter(move |&i| self.get(i))
+    }
+
+    /// In-place intersection. Panics on length mismatch.
+    pub fn and_with(&mut self, other: &BitSet) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_count() {
+        let mut b = BitSet::new(130);
+        assert_eq!(b.count(), 0);
+        b.set(0, true);
+        b.set(64, true);
+        b.set(129, true);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert!(!b.get(1));
+        assert_eq!(b.count(), 3);
+        b.set(64, false);
+        assert_eq!(b.count(), 2);
+        assert_eq!(b.iter_ones().collect::<Vec<_>>(), vec![0, 129]);
+    }
+
+    #[test]
+    fn full_and_intersect() {
+        let mut a = BitSet::full(100);
+        assert_eq!(a.count(), 100);
+        let mut b = BitSet::new(100);
+        b.set(3, true);
+        b.set(99, true);
+        a.and_with(&b);
+        assert_eq!(a.iter_ones().collect::<Vec<_>>(), vec![3, 99]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_panics() {
+        BitSet::new(10).get(10);
+    }
+
+    #[test]
+    fn empty() {
+        let b = BitSet::new(0);
+        assert!(b.is_empty());
+        assert_eq!(b.count(), 0);
+    }
+}

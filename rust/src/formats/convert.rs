@@ -1,0 +1,110 @@
+//! Conversions between sparse formats and densification helpers used by
+//! tests and the oracle engines.
+
+use anyhow::Result;
+
+use super::csr::CsrMatrix;
+use super::ell::{EllMatrix, SlicedEll};
+
+/// Densify a CSR matrix (row-major [nrows, ncols]); test-size only.
+pub fn csr_to_dense(csr: &CsrMatrix) -> Vec<f32> {
+    let mut dense = vec![0.0f32; csr.nrows * csr.ncols];
+    for i in 0..csr.nrows {
+        for (c, v) in csr.row(i) {
+            dense[i * csr.ncols + c as usize] += v;
+        }
+    }
+    dense
+}
+
+/// Densify ELL panels.
+pub fn ell_to_dense(ell: &EllMatrix) -> Vec<f32> {
+    let mut dense = vec![0.0f32; ell.nrows * ell.ncols];
+    for i in 0..ell.nrows {
+        let (idx, val) = ell.row(i);
+        for (&c, &v) in idx.iter().zip(val) {
+            dense[i * ell.ncols + c as usize] += v;
+        }
+    }
+    dense
+}
+
+/// ELL panels back to CSR (drops padding).
+pub fn ell_to_csr(ell: &EllMatrix) -> Result<CsrMatrix> {
+    let rows: Vec<Vec<(u32, f32)>> = (0..ell.nrows)
+        .map(|i| {
+            let (idx, val) = ell.row(i);
+            idx.iter()
+                .zip(val)
+                .filter(|(_, &v)| v != 0.0)
+                .map(|(&c, &v)| (c as u32, v))
+                .collect()
+        })
+        .collect();
+    CsrMatrix::from_rows(ell.nrows, ell.ncols, &rows)
+}
+
+/// Full conversion pipeline used at model-load time: CSR -> fixed-width ELL
+/// panels (kernel-facing) + sliced-ELL (native engine).
+pub struct PackedWeights {
+    pub ell: EllMatrix,
+    pub sliced: SlicedEll,
+}
+
+pub fn pack_weights(csr: &CsrMatrix, k: usize, slice: usize) -> Result<PackedWeights> {
+    Ok(PackedWeights { ell: EllMatrix::from_csr(csr, k)?, sliced: SlicedEll::from_csr(csr, slice)? })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn random_csr(seed: u64, nrows: usize, ncols: usize, max_len: usize) -> CsrMatrix {
+        let mut rng = Xoshiro256::new(seed);
+        let rows: Vec<Vec<(u32, f32)>> = (0..nrows)
+            .map(|_| {
+                let len = rng.next_below(max_len as u64 + 1) as usize;
+                let mut cols: Vec<u32> = Vec::new();
+                while cols.len() < len {
+                    let c = rng.next_below(ncols as u64) as u32;
+                    if !cols.contains(&c) {
+                        cols.push(c);
+                    }
+                }
+                cols.into_iter().map(|c| (c, rng.next_range_f32(0.1, 1.0))).collect()
+            })
+            .collect();
+        CsrMatrix::from_rows(nrows, ncols, &rows).unwrap()
+    }
+
+    #[test]
+    fn dense_roundtrips_agree() {
+        let csr = random_csr(1, 20, 30, 6);
+        let ell = EllMatrix::from_csr(&csr, csr.max_row_len()).unwrap();
+        assert_eq!(csr_to_dense(&csr), ell_to_dense(&ell));
+    }
+
+    #[test]
+    fn ell_to_csr_roundtrip() {
+        let csr = random_csr(2, 16, 16, 5);
+        let ell = EllMatrix::from_csr(&csr, 5).unwrap();
+        let back = ell_to_csr(&ell).unwrap();
+        assert_eq!(csr_to_dense(&csr), csr_to_dense(&back));
+    }
+
+    #[test]
+    fn packed_weights_consistent_spmv() {
+        let csr = random_csr(3, 32, 32, 8);
+        let packed = pack_weights(&csr, 8, 4).unwrap();
+        let mut rng = Xoshiro256::new(9);
+        let y: Vec<f32> = (0..32).map(|_| rng.next_f32()).collect();
+        let mut a = vec![0.0; 32];
+        let mut b = vec![0.0; 32];
+        csr.spmv(&y, &mut a);
+        packed.sliced.spmv(&y, &mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Compressed Sparse Row — the paper's *baseline* weight storage
+//! (`wdispl` / `windex` / `wvalue` of Listing 1).
+
+use anyhow::{bail, Result};
+
+/// A CSR matrix with u32 column indices (baseline format; the optimized
+/// path compacts to u16 inside [`super::ell::EllMatrix`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Row displacements, `wdispl` in the paper; length nrows + 1.
+    pub displ: Vec<u32>,
+    /// Column indices, `windex`; length nnz.
+    pub index: Vec<u32>,
+    /// Values, `wvalue`; length nnz.
+    pub value: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from per-row (column, value) lists.
+    pub fn from_rows(nrows: usize, ncols: usize, rows: &[Vec<(u32, f32)>]) -> Result<CsrMatrix> {
+        if rows.len() != nrows {
+            bail!("expected {nrows} rows, got {}", rows.len());
+        }
+        let mut displ = Vec::with_capacity(nrows + 1);
+        let mut index = Vec::new();
+        let mut value = Vec::new();
+        displ.push(0u32);
+        for (i, row) in rows.iter().enumerate() {
+            for &(c, v) in row {
+                if c as usize >= ncols {
+                    bail!("row {i}: column {c} out of range (ncols={ncols})");
+                }
+                index.push(c);
+                value.push(v);
+            }
+            displ.push(index.len() as u32);
+        }
+        Ok(CsrMatrix { nrows, ncols, displ, index, value })
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Entries of one row as (column, value) pairs.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let lo = self.displ[i] as usize;
+        let hi = self.displ[i + 1] as usize;
+        self.index[lo..hi].iter().copied().zip(self.value[lo..hi].iter().copied())
+    }
+
+    pub fn row_len(&self, i: usize) -> usize {
+        (self.displ[i + 1] - self.displ[i]) as usize
+    }
+
+    pub fn max_row_len(&self) -> usize {
+        (0..self.nrows).map(|i| self.row_len(i)).max().unwrap_or(0)
+    }
+
+    /// y_out[i] = sum_j A[i,j] * y_in[j] — single-vector SpMV, used as the
+    /// innermost oracle.
+    pub fn spmv(&self, y_in: &[f32], y_out: &mut [f32]) {
+        assert_eq!(y_in.len(), self.ncols);
+        assert_eq!(y_out.len(), self.nrows);
+        for i in 0..self.nrows {
+            let mut acc = 0.0f32;
+            for (c, v) in self.row(i) {
+                acc += y_in[c as usize] * v;
+            }
+            y_out[i] = acc;
+        }
+    }
+
+    /// Structural + bounds sanity check.
+    pub fn validate(&self) -> Result<()> {
+        if self.displ.len() != self.nrows + 1 {
+            bail!("displ length {} != nrows+1", self.displ.len());
+        }
+        if self.displ[0] != 0 || *self.displ.last().unwrap() as usize != self.nnz() {
+            bail!("displ endpoints corrupt");
+        }
+        if !self.displ.windows(2).all(|w| w[0] <= w[1]) {
+            bail!("displ not monotone");
+        }
+        if self.index.len() != self.value.len() {
+            bail!("index/value length mismatch");
+        }
+        if let Some(&c) = self.index.iter().find(|&&c| c as usize >= self.ncols) {
+            bail!("column {c} out of range");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> CsrMatrix {
+        // 4x4:
+        // [ .5  0   0   1 ]
+        // [  0  2   0   0 ]
+        // [  0  0   0   0 ]
+        // [  3  0   4   0 ]
+        CsrMatrix::from_rows(
+            4,
+            4,
+            &[
+                vec![(0, 0.5), (3, 1.0)],
+                vec![(1, 2.0)],
+                vec![],
+                vec![(0, 3.0), (2, 4.0)],
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn build_and_layout() {
+        let m = toy();
+        assert_eq!(m.nnz(), 5);
+        assert_eq!(m.displ, vec![0, 2, 3, 3, 5]);
+        assert_eq!(m.row_len(2), 0);
+        assert_eq!(m.max_row_len(), 2);
+        assert_eq!(m.row(0).collect::<Vec<_>>(), vec![(0, 0.5), (3, 1.0)]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn spmv_known() {
+        let m = toy();
+        let y_in = [1.0, 2.0, 3.0, 4.0];
+        let mut y_out = [0.0; 4];
+        m.spmv(&y_in, &mut y_out);
+        assert_eq!(y_out, [4.5, 4.0, 0.0, 15.0]);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(CsrMatrix::from_rows(1, 4, &[vec![(4, 1.0)]]).is_err());
+        assert!(CsrMatrix::from_rows(2, 4, &[vec![]]).is_err());
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut m = toy();
+        m.displ[1] = 99;
+        assert!(m.validate().is_err());
+        let mut m = toy();
+        m.index[0] = 10;
+        assert!(m.validate().is_err());
+        let mut m = toy();
+        m.value.pop();
+        assert!(m.validate().is_err());
+    }
+}

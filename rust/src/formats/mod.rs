@@ -1,0 +1,12 @@
+//! Sparse weight formats: CSR (baseline), fixed-width ELL panels
+//! (kernel-facing) and transposed sliced-ELL (paper §III.A.3), plus the
+//! bitset backing active-feature tracking.
+
+pub mod bitset;
+pub mod convert;
+pub mod csr;
+pub mod ell;
+
+pub use bitset::BitSet;
+pub use csr::CsrMatrix;
+pub use ell::{EllMatrix, SlicedEll};

@@ -1,0 +1,28 @@
+//! # spdnn — At-scale sparse deep neural network inference
+//!
+//! Reproduction of Hidayetoğlu et al., *"At-Scale Sparse Deep Neural
+//! Network Inference with Efficient GPU Implementation"* (HPEC 2020; the
+//! 2020 Sparse DNN Graph Challenge champion), re-expressed as a
+//! three-layer Rust + JAX/Pallas stack:
+//!
+//! * **L1** — a Pallas fused sliced-ELL SpMM + clipped-ReLU kernel
+//!   (`python/compile/kernels/spdnn.py`), AOT-lowered to HLO text;
+//! * **L2** — the jax layer/network computations (`python/compile/model.py`);
+//! * **L3** — this crate: the coordinator that owns the inference loop,
+//!   batch parallelism across workers, active-feature pruning, out-of-core
+//!   weight streaming, and the evaluation harness. Python never runs at
+//!   inference time; artifacts are executed through the PJRT CPU client
+//!   (`runtime`).
+//!
+//! See DESIGN.md for the system inventory and the paper→repo mapping, and
+//! EXPERIMENTS.md for reproduced results.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod formats;
+pub mod radixnet;
+pub mod runtime;
+pub mod simulator;
+pub mod util;

@@ -1,0 +1,296 @@
+//! `spdnn` — the launcher.
+//!
+//! Subcommands:
+//!   gen-data   generate a challenge instance (weights + features) to disk
+//!   infer      run one full inference pass, report TeraEdges/s, validate
+//!   serve      run the dynamic-batching server over a synthetic workload
+//!   simulate   at-scale Summit simulation (Table I columns)
+//!   info       show the artifact manifest and resolved configuration
+//!
+//! Common flags: --neurons --layers --k --batch --workers --topology
+//!               --backend native|pjrt --artifacts DIR --config FILE
+//!               --no-prune --stream --seed
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use spdnn::coordinator::batcher::{BatchPolicy, InferenceServer, ServeBackend, ServedModel};
+use spdnn::coordinator::{run_inference, validate, Backend, RunOptions};
+use spdnn::data::Dataset;
+use spdnn::runtime::Manifest;
+use spdnn::simulator::gpu_model::{a100, v100, KernelParams};
+use spdnn::simulator::network::summit;
+use spdnn::simulator::scaling::{ScalingSim, CHALLENGE_BATCH};
+use spdnn::simulator::trace::ActivityTrace;
+use spdnn::util::cli::Args;
+use spdnn::util::config::{Config, RuntimeConfig};
+use spdnn::util::stats::Summary;
+use spdnn::util::table::{fmt_secs, fmt_teps, Table};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("gen-data") => cmd_gen_data(args),
+        Some("infer") => cmd_infer(args),
+        Some("serve") => cmd_serve(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("info") => cmd_info(args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?} (try `spdnn help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "spdnn — at-scale sparse DNN inference (HPEC 2020 reproduction)\n\n\
+         USAGE: spdnn <gen-data|infer|serve|simulate|info> [flags]\n\n\
+         Model:   --neurons N --layers L --k K --topology butterfly|random --seed S\n\
+         Runtime: --batch B --workers W --minibatch MB --no-prune\n\
+         Backend: --backend native|pjrt --artifacts DIR --threads T\n\
+         IO:      --config FILE --data DIR --stream\n\
+         Sim:     --gpus LIST --gpu v100|a100"
+    );
+}
+
+/// Assemble a RuntimeConfig from --config file + CLI overrides.
+fn runtime_config(args: &Args) -> Result<RuntimeConfig> {
+    let mut cfg = RuntimeConfig::default();
+    if let Some(path) = args.get("config") {
+        let file = Config::load(std::path::Path::new(path))?;
+        cfg.apply_config(&file);
+    }
+    cfg.neurons = args.usize_or("neurons", cfg.neurons)?;
+    cfg.layers = args.usize_or("layers", cfg.layers)?;
+    cfg.k = args.usize_or("k", cfg.k)?;
+    cfg.batch = args.usize_or("batch", cfg.batch)?;
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.minibatch = args.usize_or("minibatch", cfg.minibatch)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.topology = args.get_or("topology", &cfg.topology.clone()).to_string();
+    if args.flag("no-prune") {
+        cfg.prune = false;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn run_options(args: &Args) -> Result<RunOptions> {
+    let backend = match args.get_or("backend", "native") {
+        "native" => Backend::Native,
+        "pjrt" => Backend::Pjrt {
+            artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")),
+        },
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    };
+    let stream_from = if args.flag("stream") {
+        Some(PathBuf::from(args.get_or("data", "data")).join("weights.bin"))
+    } else {
+        None
+    };
+    Ok(RunOptions { backend, stream_from, native_threads: args.usize_or("threads", 1)? })
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let cfg = runtime_config(args)?;
+    let dir = PathBuf::from(args.get_or("data", "data"));
+    args.finish()?;
+    println!(
+        "generating {}x{} k={} batch={} topology={} ...",
+        cfg.neurons, cfg.layers, cfg.k, cfg.batch, cfg.topology
+    );
+    let ds = Dataset::generate(&cfg)?;
+    ds.save(&dir).context("saving dataset")?;
+    println!(
+        "wrote {}/weights.bin + features.bin ({} ground-truth categories)",
+        dir.display(),
+        ds.truth_categories.len()
+    );
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let cfg = runtime_config(args)?;
+    let opts = run_options(args)?;
+    let data_dir = args.get("data").map(PathBuf::from);
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    args.finish()?;
+
+    let ds = match &data_dir {
+        Some(dir) if dir.join("weights.bin").exists() => Dataset::load(dir, &cfg)?,
+        _ => Dataset::generate(&cfg)?,
+    };
+    println!(
+        "inference: {}x{} k={} batch={} workers={} backend={} prune={}",
+        ds.cfg.neurons,
+        ds.cfg.layers,
+        ds.cfg.k,
+        ds.cfg.batch,
+        ds.cfg.workers,
+        match &opts.backend {
+            Backend::Native => "native",
+            Backend::Pjrt { .. } => "pjrt",
+        },
+        ds.cfg.prune
+    );
+    let report = run_inference(&ds, &opts)?;
+    validate(&report, &ds).context("challenge validation")?;
+    println!("  wall time      {}", fmt_secs(report.wall_secs));
+    println!("  throughput     {}", fmt_teps(report.edges_per_sec));
+    println!("  edges (input)  {}", report.input_edges);
+    println!("  pruning saved  {:.1}%", report.pruning_savings() * 100.0);
+    println!("  imbalance      {:.3}", report.imbalance);
+    println!("  categories     {} / {} features", report.categories.len(), ds.cfg.batch);
+    println!("  VALID (matches ground truth)");
+    if let Some(path) = trace_out {
+        let trace = ActivityTrace::from_report(&report)?;
+        trace.save(&path)?;
+        println!("  trace          -> {} ({} layers)", path.display(), trace.layers());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = runtime_config(args)?;
+    let requests = args.usize_or("requests", 200)?;
+    let max_batch = args.usize_or("max-batch", 48)?;
+    let max_wait_ms = args.f64_or("max-wait-ms", 2.0)?;
+    let backend = match args.get_or("backend", "native") {
+        "native" => {
+            ServeBackend::Native { threads: args.usize_or("threads", 1)?, minibatch: cfg.minibatch }
+        }
+        "pjrt" => {
+            ServeBackend::Pjrt { artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")) }
+        }
+        other => bail!("unknown backend {other:?}"),
+    };
+    args.finish()?;
+
+    let ds = Dataset::generate(&cfg)?;
+    let model = ServedModel {
+        layers: std::sync::Arc::new(ds.layers.clone()),
+        bias: ds.bias.clone(),
+        neurons: cfg.neurons,
+        k: cfg.k,
+    };
+    let policy =
+        BatchPolicy { max_batch, max_wait: std::time::Duration::from_secs_f64(max_wait_ms / 1e3) };
+    let server = InferenceServer::start(model, backend, policy);
+
+    println!("serving {requests} requests (max_batch={max_batch}, max_wait={max_wait_ms}ms)...");
+    let t = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            let f = i % cfg.batch;
+            server.submit(ds.features[f * cfg.neurons..(f + 1) * cfg.neurons].to_vec())
+        })
+        .collect::<Result<_>>()?;
+    let mut lat = Vec::new();
+    let mut sizes = Vec::new();
+    let mut active = 0usize;
+    for rx in rxs {
+        let resp = rx.recv().context("response channel")??;
+        lat.push(resp.latency.as_secs_f64());
+        sizes.push(resp.batch_size as f64);
+        active += usize::from(resp.active);
+    }
+    let total = t.elapsed().as_secs_f64();
+    let s = Summary::of(&lat).unwrap();
+    println!("  total        {} ({:.0} req/s)", fmt_secs(total), requests as f64 / total);
+    println!("  latency p50  {}", fmt_secs(s.p50));
+    println!("  latency p95  {}", fmt_secs(s.p95));
+    println!("  latency p99  {}", fmt_secs(s.p99));
+    println!("  mean batch   {:.1}", Summary::of(&sizes).unwrap().mean);
+    println!("  active       {active}/{requests}");
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let neurons = args.usize_list_or("neurons", &[1024, 4096, 16384, 65536])?;
+    let layers = args.usize_list_or("layers", &[120, 480, 1920])?;
+    let gpus = args.usize_list_or("gpus", &[1, 3, 6, 12, 24, 48, 96, 192, 384, 768])?;
+    let gpu = match args.get_or("gpu", "v100") {
+        "v100" => v100(),
+        "a100" => a100(),
+        other => bail!("unknown gpu {other:?}"),
+    };
+    let trace_in = args.get("trace").map(PathBuf::from);
+    args.finish()?;
+
+    // Calibrate from a measured trace (`spdnn infer --trace-out`) when
+    // given, else the synthetic decay fitted to the challenge regime.
+    let anchor = match &trace_in {
+        Some(path) => ActivityTrace::load(path)?.rescale(CHALLENGE_BATCH).with_layers(120),
+        None => ActivityTrace::synthetic(CHALLENGE_BATCH, 120, 0.9, 0.4),
+    };
+    let sim = ScalingSim::calibrated(v100(), summit(), &anchor);
+    let sim = ScalingSim { gpu, cluster: summit(), alpha: sim.alpha };
+    let base_trace = anchor.clone();
+
+    let header: Vec<String> = ["Neurons", "Layers"]
+        .iter()
+        .map(|s| s.to_string())
+        .chain(gpus.iter().map(|g| format!("{g} GPU")))
+        .collect();
+    let mut table = Table::new(
+        &format!("Simulated Table I ({}) — TeraEdges/s", sim.gpu.name),
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for &n in &neurons {
+        for &l in &layers {
+            let trace = base_trace.with_layers(l);
+            let p = KernelParams::challenge(n);
+            let mut row = vec![n.to_string(), l.to_string()];
+            for &g in &gpus {
+                let r = sim.simulate(&p, &trace, g);
+                row.push(format!("{:.2}", r.edges_per_sec / 1e12));
+            }
+            table.row(row);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let cfg = runtime_config(args)?;
+    args.finish()?;
+    println!("config: {cfg:#?}");
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts ({}):", dir.display());
+            for a in &m.artifacts {
+                println!(
+                    "  {:32} kind={:?} n={} cap={} mb={} tile_n={} vmem={}KiB",
+                    a.name,
+                    a.kind,
+                    a.neurons,
+                    a.capacity,
+                    a.mb,
+                    a.tile_n,
+                    a.vmem_bytes / 1024
+                );
+            }
+        }
+        Err(e) => println!("no artifacts: {e:#}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,191 @@
+//! RadiX-Net-class synthetic sparse DNN generator.
+//!
+//! The Graph Challenge ships RadiX-Net networks (Kepner & Robinett 2019):
+//! every neuron has exactly `k = 32` connections per layer, equal numbers
+//! of input→output paths, all weights 1/16, and a constant per-width bias.
+//! The official 1.3 GB+ weight files are not available offline, so this
+//! module reimplements the construction class (see DESIGN.md
+//! §Substitutions). Bit-for-bit mirror of `python/compile/radixnet.py`
+//! (asserted by `tests/cross_language.rs`).
+
+pub mod topology;
+
+use anyhow::{bail, Result};
+
+use crate::formats::{CsrMatrix, EllMatrix};
+use crate::util::prng::Xoshiro256;
+
+/// Challenge weight value: every connection carries 1/16.
+pub const WEIGHT_VALUE: f32 = 1.0 / 16.0;
+
+/// Default weight for a k-connection network: 2/k preserves the
+/// challenge's layer gain (k * w = 2, exactly 1/16 at k = 32) so
+/// non-challenge test widths stay dynamically alive. Mirror of
+/// `python/compile/radixnet.weight_value`.
+pub fn weight_value(k: usize) -> f32 {
+    2.0 / k.max(1) as f32
+}
+
+/// Network topology family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Strided butterfly mixing (RadiX-Net class: equal paths, structured).
+    Butterfly,
+    /// k distinct uniform columns per row (stress/generality tests).
+    Random,
+}
+
+impl Topology {
+    pub fn parse(s: &str) -> Result<Topology> {
+        match s {
+            "butterfly" => Ok(Topology::Butterfly),
+            "random" => Ok(Topology::Random),
+            _ => bail!("unknown topology {s:?}"),
+        }
+    }
+}
+
+/// Generator for the weight structure of a whole network.
+#[derive(Clone, Debug)]
+pub struct RadixNet {
+    pub neurons: usize,
+    pub layers: usize,
+    pub k: usize,
+    pub topology: Topology,
+    pub seed: u64,
+    /// Constant connection weight (defaults to `weight_value(k)`).
+    pub weight: f32,
+}
+
+impl RadixNet {
+    pub fn new(neurons: usize, layers: usize, k: usize, topology: Topology, seed: u64) -> Result<RadixNet> {
+        if neurons == 0 || layers == 0 || k == 0 {
+            bail!("neurons/layers/k must be positive");
+        }
+        if k > neurons {
+            bail!("k={k} exceeds neurons={neurons}");
+        }
+        if neurons > (1 << 16) {
+            bail!("neurons={neurons} exceeds u16 index range");
+        }
+        Ok(RadixNet { neurons, layers, k, topology, seed, weight: weight_value(k) })
+    }
+
+    /// Override the constant connection weight.
+    pub fn with_weight(mut self, weight: f32) -> RadixNet {
+        self.weight = weight;
+        self
+    }
+
+    /// Column lists of one layer's weight matrix (row i = output neuron i).
+    pub fn layer_rows(&self, layer: usize) -> Vec<Vec<u32>> {
+        match self.topology {
+            Topology::Butterfly => topology::butterfly_layer(self.neurons, self.k, layer),
+            Topology::Random => topology::random_layer(self.neurons, self.k, layer, self.seed),
+        }
+    }
+
+    /// One layer as kernel-facing ELL panels (all values = self.weight).
+    pub fn layer_ell(&self, layer: usize) -> EllMatrix {
+        let w = self.weight;
+        let rows = self.layer_rows(layer);
+        let pairs: Vec<Vec<(u32, f32)>> = rows
+            .into_iter()
+            .map(|r| r.into_iter().map(|c| (c, w)).collect())
+            .collect();
+        EllMatrix::from_rows(self.neurons, self.neurons, self.k, &pairs)
+            .expect("generator produced invalid rows")
+    }
+
+    /// One layer as CSR (baseline engine input).
+    pub fn layer_csr(&self, layer: usize) -> CsrMatrix {
+        let w = self.weight;
+        let rows = self.layer_rows(layer);
+        let pairs: Vec<Vec<(u32, f32)>> = rows
+            .into_iter()
+            .map(|r| r.into_iter().map(|c| (c, w)).collect())
+            .collect();
+        CsrMatrix::from_rows(self.neurons, self.neurons, &pairs)
+            .expect("generator produced invalid rows")
+    }
+
+    /// Total edges (nonzero weights) in the network.
+    pub fn total_edges(&self) -> u64 {
+        self.neurons as u64 * self.k as u64 * self.layers as u64
+    }
+}
+
+/// Deterministic per-layer PRNG stream shared with the Python mirror.
+pub(crate) fn layer_rng(seed: u64, layer: usize) -> Xoshiro256 {
+    Xoshiro256::new((seed << 16) ^ layer as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_validation() {
+        assert!(RadixNet::new(0, 1, 1, Topology::Butterfly, 0).is_err());
+        assert!(RadixNet::new(16, 1, 32, Topology::Butterfly, 0).is_err());
+        assert!(RadixNet::new(1 << 17, 1, 4, Topology::Butterfly, 0).is_err());
+        RadixNet::new(1024, 120, 32, Topology::Butterfly, 0).unwrap();
+    }
+
+    #[test]
+    fn degrees_exact_k() {
+        for topo in [Topology::Butterfly, Topology::Random] {
+            let net = RadixNet::new(256, 3, 8, topo, 5).unwrap();
+            for l in 0..3 {
+                let rows = net.layer_rows(l);
+                assert_eq!(rows.len(), 256);
+                for r in &rows {
+                    assert_eq!(r.len(), 8);
+                    let mut sorted = r.clone();
+                    sorted.sort_unstable();
+                    sorted.dedup();
+                    assert_eq!(sorted.len(), 8, "targets must be distinct ({topo:?})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn butterfly_in_degree_uniform() {
+        let net = RadixNet::new(256, 2, 8, Topology::Butterfly, 0).unwrap();
+        for l in 0..2 {
+            let mut indeg = vec![0usize; 256];
+            for r in net.layer_rows(l) {
+                for c in r {
+                    indeg[c as usize] += 1;
+                }
+            }
+            assert!(indeg.iter().all(|&d| d == 8), "layer {l}");
+        }
+    }
+
+    #[test]
+    fn ell_and_csr_agree() {
+        let net = RadixNet::new(128, 2, 4, Topology::Random, 7).unwrap();
+        let ell = net.layer_ell(1);
+        let csr = net.layer_csr(1);
+        assert_eq!(ell.nnz(), csr.nnz());
+        assert_eq!(
+            crate::formats::convert::ell_to_dense(&ell),
+            crate::formats::convert::csr_to_dense(&csr)
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = RadixNet::new(128, 2, 4, Topology::Random, 7).unwrap().layer_rows(1);
+        let b = RadixNet::new(128, 2, 4, Topology::Random, 7).unwrap().layer_rows(1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn total_edges_challenge() {
+        let net = RadixNet::new(1024, 120, 32, Topology::Butterfly, 0).unwrap();
+        assert_eq!(net.total_edges(), 1024 * 32 * 120);
+    }
+}

@@ -1,0 +1,112 @@
+//! Topology constructions — mirrors `python/compile/radixnet.py`.
+
+use super::layer_rng;
+
+/// The stride schedule: k^0, k^1, ... capped at neurons / k.
+///
+/// `ceil(log_k N)` consecutive layers fully mix inputs to outputs with
+/// equal path multiplicity — the RadiX-Net invariant.
+pub fn butterfly_strides(neurons: usize, k: usize) -> Vec<usize> {
+    let cap = (neurons / k).max(1);
+    let mut strides = Vec::new();
+    let mut s = 1usize;
+    loop {
+        strides.push(s.min(cap));
+        if s >= cap {
+            break;
+        }
+        s *= k;
+    }
+    strides
+}
+
+/// ELL index rows for one butterfly layer: neuron i connects to
+/// (i + t * stride) mod N for t in [0, k).
+pub fn butterfly_layer(neurons: usize, k: usize, layer: usize) -> Vec<Vec<u32>> {
+    let strides = butterfly_strides(neurons, k);
+    let s = strides[layer % strides.len()];
+    (0..neurons)
+        .map(|i| (0..k).map(|t| ((i + t * s) % neurons) as u32).collect())
+        .collect()
+}
+
+/// k distinct uniform columns per row; deterministic in (seed, layer).
+pub fn random_layer(neurons: usize, k: usize, layer: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = layer_rng(seed, layer);
+    (0..neurons)
+        .map(|_| {
+            let mut cols: Vec<u32> = Vec::with_capacity(k);
+            while cols.len() < k {
+                let c = rng.next_below(neurons as u64) as u32;
+                if !cols.contains(&c) {
+                    cols.push(c);
+                }
+            }
+            cols
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_match_python_mirror() {
+        assert_eq!(butterfly_strides(1024, 32), vec![1, 32]);
+        assert_eq!(butterfly_strides(4096, 32), vec![1, 32, 128]);
+        assert_eq!(butterfly_strides(64, 4), vec![1, 4, 16]);
+        assert_eq!(butterfly_strides(32, 32), vec![1]);
+        assert_eq!(butterfly_strides(65536, 32), vec![1, 32, 1024, 2048]);
+    }
+
+    #[test]
+    fn butterfly_row_structure() {
+        let rows = butterfly_layer(64, 4, 1); // stride 4
+        assert_eq!(rows[0], vec![0, 4, 8, 12]);
+        assert_eq!(rows[63], vec![63, 3, 7, 11]);
+    }
+
+    #[test]
+    fn full_mixing_equal_paths() {
+        // Path-count matrix over one stride cycle must be all-equal:
+        // the RadiX-Net equal-paths invariant.
+        let n = 64;
+        let k = 4;
+        let cycle = butterfly_strides(n, k).len();
+        let mut reach = vec![0u64; n * n];
+        for i in 0..n {
+            reach[i * n + i] = 1;
+        }
+        for l in 0..cycle {
+            let rows = butterfly_layer(n, k, l);
+            let mut next = vec![0u64; n * n];
+            for (i, r) in rows.iter().enumerate() {
+                for &c in r {
+                    for j in 0..n {
+                        next[i * n + j] += reach[c as usize * n + j];
+                    }
+                }
+            }
+            reach = next;
+        }
+        let first = reach[0];
+        assert!(first > 0);
+        assert!(reach.iter().all(|&x| x == first), "equal path counts everywhere");
+    }
+
+    #[test]
+    fn random_layer_deterministic_and_distinct() {
+        let a = random_layer(128, 8, 3, 5);
+        let b = random_layer(128, 8, 3, 5);
+        let c = random_layer(128, 8, 4, 5);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        for r in &a {
+            let mut s = r.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 8);
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Artifact manifest — typed view of `artifacts/manifest.json` written by
+//! `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    U16,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "u16" => Ok(Dtype::U16),
+            "i32" => Ok(Dtype::I32),
+            _ => bail!("unknown dtype {s:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::U16 => 2,
+        }
+    }
+}
+
+/// One input/output tensor description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<IoSpec> {
+        Ok(IoSpec {
+            name: j.req_str("name")?.to_string(),
+            dtype: Dtype::parse(j.req_str("dtype")?)?,
+            shape: j
+                .req_arr("shape")?
+                .iter()
+                .map(|s| s.as_usize().ok_or_else(|| anyhow!("bad shape element")))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// Artifact kind (mirrors aot.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Kind {
+    LayerOpt,
+    LayerBase,
+    LayerBcoo,
+    ScanOpt,
+    LayerToy,
+}
+
+impl Kind {
+    pub fn parse(s: &str) -> Result<Kind> {
+        match s {
+            "layer_opt" => Ok(Kind::LayerOpt),
+            "layer_base" => Ok(Kind::LayerBase),
+            "layer_bcoo" => Ok(Kind::LayerBcoo),
+            "scan_opt" => Ok(Kind::ScanOpt),
+            "layer_toy" => Ok(Kind::LayerToy),
+            _ => bail!("unknown artifact kind {s:?}"),
+        }
+    }
+}
+
+/// One compiled-artifact entry.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: Kind,
+    pub neurons: usize,
+    /// Feature rows the executable processes per dispatch.
+    pub capacity: usize,
+    pub k: usize,
+    pub mb: usize,
+    pub tile_n: usize,
+    /// Estimated VMEM footprint of one grid step (from KernelConfig).
+    pub vmem_bytes: usize,
+    /// Fused layer count (scan_opt only).
+    pub layers: Option<usize>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub relu_cap: f32,
+    pub challenge_bias: BTreeMap<usize, f32>,
+    pub artifacts: Vec<Artifact>,
+    /// Directory the artifact paths are relative to.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let version = j.req_usize("version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut challenge_bias = BTreeMap::new();
+        if let Some(b) = j.get("challenge_bias").and_then(|b| b.as_obj()) {
+            for (k, v) in b {
+                challenge_bias.insert(
+                    k.parse::<usize>().map_err(|_| anyhow!("bad bias key {k:?}"))?,
+                    v.as_f64().ok_or_else(|| anyhow!("bad bias value"))? as f32,
+                );
+            }
+        }
+        let mut artifacts = Vec::new();
+        for a in j.req_arr("artifacts")? {
+            artifacts.push(Artifact {
+                name: a.req_str("name")?.to_string(),
+                path: dir.join(a.req_str("path")?),
+                kind: Kind::parse(a.req_str("kind")?)?,
+                neurons: a.req_usize("neurons")?,
+                capacity: a.req_usize("capacity")?,
+                k: a.req_usize("k")?,
+                mb: a.req_usize("mb")?,
+                tile_n: a.req_usize("tile_n")?,
+                vmem_bytes: a.req_usize("vmem_bytes").unwrap_or(0),
+                layers: a.get("layers").and_then(|l| l.as_usize()),
+                inputs: a.req_arr("inputs")?.iter().map(IoSpec::from_json).collect::<Result<_>>()?,
+                outputs: a
+                    .req_arr("outputs")?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<_>>()?,
+            });
+        }
+        Ok(Manifest { relu_cap: j.req_f64("relu_cap")? as f32, challenge_bias, artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// All `layer_opt` capacities available for a width, ascending —
+    /// the coordinator's pruning ladder.
+    pub fn capacity_ladder(&self, neurons: usize) -> Vec<usize> {
+        let mut caps: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == Kind::LayerOpt && a.neurons == neurons)
+            .map(|a| a.capacity)
+            .collect();
+        caps.sort_unstable();
+        caps.dedup();
+        caps
+    }
+
+    /// Find the `layer_opt` artifact with the given width and capacity.
+    pub fn find_layer(&self, kind: Kind, neurons: usize, capacity: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.neurons == neurons && a.capacity == capacity)
+    }
+
+    /// Smallest capacity >= `want` for a width (or the largest available).
+    pub fn pick_capacity(&self, neurons: usize, want: usize) -> Option<usize> {
+        let ladder = self.capacity_ladder(neurons);
+        ladder.iter().copied().find(|&c| c >= want).or_else(|| ladder.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+ "version": 1,
+ "relu_cap": 32.0,
+ "challenge_bias": {"1024": -0.3, "4096": -0.35},
+ "artifacts": [
+  {"name": "layer_opt_n64_c8", "path": "layer_opt_n64_c8.hlo.txt",
+   "kind": "layer_opt", "neurons": 64, "capacity": 8, "k": 4, "mb": 4,
+   "tile_n": 16, "vmem_bytes": 2048,
+   "inputs": [
+     {"name": "y", "dtype": "f32", "shape": [8, 64]},
+     {"name": "idx", "dtype": "u16", "shape": [64, 4]},
+     {"name": "val", "dtype": "f32", "shape": [64, 4]},
+     {"name": "bias", "dtype": "f32", "shape": [64]}],
+   "outputs": [
+     {"name": "y_next", "dtype": "f32", "shape": [8, 64]},
+     {"name": "active", "dtype": "i32", "shape": [8]}]},
+  {"name": "layer_opt_n64_c32", "path": "layer_opt_n64_c32.hlo.txt",
+   "kind": "layer_opt", "neurons": 64, "capacity": 32, "k": 4, "mb": 4,
+   "tile_n": 16, "vmem_bytes": 2048, "inputs": [], "outputs": []},
+  {"name": "scan_opt_n64_l3_c8", "path": "scan.hlo.txt", "kind": "scan_opt",
+   "neurons": 64, "capacity": 8, "k": 4, "mb": 4, "tile_n": 16,
+   "vmem_bytes": 0, "layers": 3, "inputs": [], "outputs": []}
+ ]
+}"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.relu_cap, 32.0);
+        assert_eq!(m.challenge_bias[&1024], -0.3);
+        assert_eq!(m.artifacts.len(), 3);
+        let a = &m.artifacts[0];
+        assert_eq!(a.kind, Kind::LayerOpt);
+        assert_eq!(a.inputs[1].dtype, Dtype::U16);
+        assert_eq!(a.inputs[0].elements(), 8 * 64);
+        assert_eq!(a.path, Path::new("/tmp/a/layer_opt_n64_c8.hlo.txt"));
+        assert_eq!(m.artifacts[2].layers, Some(3));
+    }
+
+    #[test]
+    fn ladder_and_pick() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert_eq!(m.capacity_ladder(64), vec![8, 32]);
+        assert_eq!(m.pick_capacity(64, 1), Some(8));
+        assert_eq!(m.pick_capacity(64, 8), Some(8));
+        assert_eq!(m.pick_capacity(64, 9), Some(32));
+        assert_eq!(m.pick_capacity(64, 99), Some(32), "clamps to largest");
+        assert_eq!(m.pick_capacity(128, 1), None);
+        assert!(m.find_layer(Kind::LayerOpt, 64, 8).is_some());
+        assert!(m.find_layer(Kind::LayerBase, 64, 8).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_version_and_kind() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+        let bad = SAMPLE.replace("layer_opt\"", "layer_wat\"");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+        assert!(Dtype::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! Runtime: PJRT artifact loading/execution (`pjrt`), the artifact
+//! manifest (`manifest`) and out-of-core weight streaming (`streamer`).
+//!
+//! Python runs only at build time; this module is how the Rust
+//! coordinator executes the AOT-compiled L1/L2 computations.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod streamer;
+
+pub use manifest::{Artifact, Kind, Manifest};
+pub use pjrt::{CompiledLayer, LayerLiterals, LayerOut, PjrtBackend};
+pub use streamer::WeightStreamer;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$SPDNN_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("SPDNN_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

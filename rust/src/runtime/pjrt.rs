@@ -1,0 +1,220 @@
+//! PJRT execution wrapper around the `xla` crate.
+//!
+//! Loads the HLO-text artifacts emitted by `python/compile/aot.py`,
+//! compiles them on the PJRT CPU client and executes layer steps from the
+//! coordinator's hot loop. HLO *text* is the interchange format (the
+//! crate's xla_extension 0.5.1 rejects jax>=0.5 serialized protos).
+//!
+//! Thread model: the `xla` crate's handles are not `Send`, so every
+//! coordinator worker ("GPU rank") owns its own [`PjrtBackend`] — which is
+//! exactly the paper's MPI model: weights replicated per rank, features
+//! partitioned (§IV.C).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::Artifact;
+
+/// One PJRT client ("device") plus compile services.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().map_err(wrap_xla)?;
+        Ok(PjrtBackend { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn compile(&self, artifact: &Artifact) -> Result<CompiledLayer> {
+        let path = artifact
+            .path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(wrap_xla)
+            .with_context(|| format!("loading HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap_xla)
+            .with_context(|| format!("compiling {}", artifact.name))?;
+        Ok(CompiledLayer { artifact: artifact.clone(), exe })
+    }
+}
+
+/// Weight tensors of one layer, staged as XLA literals once and reused for
+/// every dispatch that layer serves (all minibatches, all epochs).
+pub struct LayerLiterals {
+    pub idx: xla::Literal,
+    pub val: xla::Literal,
+    pub bias: xla::Literal,
+    pub neurons: usize,
+    pub k: usize,
+}
+
+impl LayerLiterals {
+    /// Build from host panels ([n, k] u16 idx / f32 val, [n] f32 bias).
+    pub fn new(idx: &[u16], val: &[f32], bias: &[f32], neurons: usize, k: usize) -> Result<LayerLiterals> {
+        if idx.len() != neurons * k || val.len() != neurons * k || bias.len() != neurons {
+            bail!("weight panel shape mismatch");
+        }
+        let idx_bytes: Vec<u8> = idx.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let idx = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U16,
+            &[neurons, k],
+            &idx_bytes,
+        )
+        .map_err(wrap_xla)?;
+        let val = xla::Literal::vec1(val).reshape(&[neurons as i64, k as i64]).map_err(wrap_xla)?;
+        let bias = xla::Literal::vec1(bias);
+        Ok(LayerLiterals { idx, val, bias, neurons, k })
+    }
+}
+
+/// Output of one layer dispatch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerOut {
+    /// Activated features, [capacity, neurons] row-major.
+    pub y_next: Vec<f32>,
+    /// Per-feature activity flags, [capacity].
+    pub active: Vec<i32>,
+}
+
+/// A compiled layer-step executable.
+pub struct CompiledLayer {
+    pub artifact: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledLayer {
+    pub fn capacity(&self) -> usize {
+        self.artifact.capacity
+    }
+
+    pub fn neurons(&self) -> usize {
+        self.artifact.neurons
+    }
+
+    /// Execute one layer step over a [capacity, neurons] feature panel.
+    ///
+    /// `y` shorter than the full panel is zero-padded to capacity (the
+    /// static-shape stand-in for the CUDA grid sized by the live feature
+    /// count); flags for padded rows come back 0 and are ignored upstream.
+    pub fn run(&self, y: &[f32], w: &LayerLiterals) -> Result<LayerOut> {
+        let cap = self.artifact.capacity;
+        let n = self.artifact.neurons;
+        if w.neurons != n || w.k != self.artifact.k {
+            bail!("weights do not match executable ({}x{} vs {}x{})", w.neurons, w.k, n, self.artifact.k);
+        }
+        if y.len() > cap * n || y.len() % n != 0 {
+            bail!("feature panel of {} values does not fit capacity {cap}x{n}", y.len());
+        }
+        let y_lit = if y.len() == cap * n {
+            xla::Literal::vec1(y).reshape(&[cap as i64, n as i64]).map_err(wrap_xla)?
+        } else {
+            let mut padded = vec![0f32; cap * n];
+            padded[..y.len()].copy_from_slice(y);
+            xla::Literal::vec1(&padded).reshape(&[cap as i64, n as i64]).map_err(wrap_xla)?
+        };
+        // `execute` borrows its arguments, so the staged weight literals
+        // are reused without copying (the paper's "constructed once prior
+        // to inference, reused for all features").
+        let args: [&xla::Literal; 4] = [&y_lit, &w.idx, &w.val, &w.bias];
+        let result = self.exe.execute::<&xla::Literal>(&args).map_err(wrap_xla)?;
+        let tuple = result[0][0].to_literal_sync().map_err(wrap_xla)?;
+        let (y_next_lit, active_lit) = tuple.to_tuple2().map_err(wrap_xla)?;
+        Ok(LayerOut {
+            y_next: y_next_lit.to_vec::<f32>().map_err(wrap_xla)?,
+            active: active_lit.to_vec::<i32>().map_err(wrap_xla)?,
+        })
+    }
+}
+
+/// Stacked weights of a fused multi-layer (scan) artifact, staged once.
+pub struct ScanLiterals {
+    pub idx: xla::Literal,
+    pub val: xla::Literal,
+    pub bias: xla::Literal,
+    pub layers: usize,
+    pub neurons: usize,
+    pub k: usize,
+}
+
+impl ScanLiterals {
+    /// Build from per-layer panels (all layers resident — the scan
+    /// executable cannot stream out-of-core; that is its tradeoff).
+    pub fn new(layers: &[crate::formats::EllMatrix], bias: &[f32]) -> Result<ScanLiterals> {
+        if layers.is_empty() {
+            bail!("scan needs at least one layer");
+        }
+        let n = layers[0].nrows;
+        let k = layers[0].k;
+        if layers.iter().any(|l| l.nrows != n || l.k != k) {
+            bail!("scan layers must share [neurons, k]");
+        }
+        let mut idx_bytes = Vec::with_capacity(layers.len() * n * k * 2);
+        let mut val_flat = Vec::with_capacity(layers.len() * n * k);
+        for l in layers {
+            idx_bytes.extend(l.index.iter().flat_map(|x| x.to_le_bytes()));
+            val_flat.extend_from_slice(&l.value);
+        }
+        let idx = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U16,
+            &[layers.len(), n, k],
+            &idx_bytes,
+        )
+        .map_err(wrap_xla)?;
+        let val = xla::Literal::vec1(&val_flat)
+            .reshape(&[layers.len() as i64, n as i64, k as i64])
+            .map_err(wrap_xla)?;
+        let bias = xla::Literal::vec1(bias);
+        Ok(ScanLiterals { idx, val, bias, layers: layers.len(), neurons: n, k })
+    }
+}
+
+impl CompiledLayer {
+    /// Execute a fused multi-layer (scan_opt) artifact: the whole network
+    /// in ONE dispatch. Used by the dispatch-amortization ablation.
+    pub fn run_scan(&self, y: &[f32], w: &ScanLiterals) -> Result<LayerOut> {
+        let cap = self.artifact.capacity;
+        let n = self.artifact.neurons;
+        if self.artifact.layers != Some(w.layers) {
+            bail!(
+                "scan executable fuses {:?} layers, weights carry {}",
+                self.artifact.layers,
+                w.layers
+            );
+        }
+        if w.neurons != n || w.k != self.artifact.k {
+            bail!("scan weights do not match executable");
+        }
+        if y.len() > cap * n || y.len() % n != 0 {
+            bail!("feature panel of {} values does not fit capacity {cap}x{n}", y.len());
+        }
+        let y_lit = if y.len() == cap * n {
+            xla::Literal::vec1(y).reshape(&[cap as i64, n as i64]).map_err(wrap_xla)?
+        } else {
+            let mut padded = vec![0f32; cap * n];
+            padded[..y.len()].copy_from_slice(y);
+            xla::Literal::vec1(&padded).reshape(&[cap as i64, n as i64]).map_err(wrap_xla)?
+        };
+        let args: [&xla::Literal; 4] = [&y_lit, &w.idx, &w.val, &w.bias];
+        let result = self.exe.execute::<&xla::Literal>(&args).map_err(wrap_xla)?;
+        let tuple = result[0][0].to_literal_sync().map_err(wrap_xla)?;
+        let (y_next_lit, active_lit) = tuple.to_tuple2().map_err(wrap_xla)?;
+        Ok(LayerOut {
+            y_next: y_next_lit.to_vec::<f32>().map_err(wrap_xla)?,
+            active: active_lit.to_vec::<i32>().map_err(wrap_xla)?,
+        })
+    }
+}
+
+/// The xla crate error type does not implement std::error::Error + Send +
+/// Sync uniformly; normalise through strings.
+fn wrap_xla<E: std::fmt::Debug>(e: E) -> anyhow::Error {
+    anyhow!("xla error: {e:?}")
+}

@@ -1,0 +1,193 @@
+//! Out-of-core weight streaming with double buffering (paper §III.B.1).
+//!
+//! Replicating all layer weights per GPU makes large networks infeasible
+//! for 16 GB devices; the paper streams each layer's weights from CPU
+//! memory and hides the copy behind the previous layer's kernel with a
+//! double buffer. Here the "CPU memory" is the packed weight file and the
+//! "GPU" is the PJRT device: a prefetch thread reads + decodes layer l+1
+//! while the main thread executes layer l. The `sync_channel(1)` bound
+//! gives exactly two buffers in flight (one ready, one being filled).
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::binio;
+use crate::formats::EllMatrix;
+
+/// A source of per-layer weight panels, in layer order.
+pub enum WeightStreamer {
+    /// All layers resident in memory (weights-fit case).
+    Memory { layers: Vec<EllMatrix>, next: usize },
+    /// Out-of-core: prefetch thread + double buffer.
+    Stream {
+        rx: mpsc::Receiver<Result<EllMatrix>>,
+        handle: Option<JoinHandle<()>>,
+        path: PathBuf,
+        remaining: usize,
+    },
+}
+
+impl WeightStreamer {
+    /// In-memory source (no streaming).
+    pub fn from_memory(layers: Vec<EllMatrix>) -> WeightStreamer {
+        WeightStreamer::Memory { layers, next: 0 }
+    }
+
+    /// Out-of-core source over a packed weight file written by
+    /// [`binio::write_weights`]. `layers` is the number of layers to
+    /// stream (validated against the file on first read).
+    pub fn from_file(path: &Path, layers: usize) -> WeightStreamer {
+        // Capacity 1 => producer runs at most one layer ahead: the double
+        // buffer. A larger bound would only add memory, not overlap.
+        let (tx, rx) = mpsc::sync_channel::<Result<EllMatrix>>(1);
+        let p = path.to_path_buf();
+        let handle = std::thread::spawn(move || {
+            for l in 0..layers {
+                let res = binio::read_weights_layer(&p, l);
+                let failed = res.is_err();
+                if tx.send(res).is_err() || failed {
+                    return; // consumer dropped, or error delivered
+                }
+            }
+        });
+        WeightStreamer::Stream { rx, handle: Some(handle), path: path.to_path_buf(), remaining: layers }
+    }
+
+    /// Number of layers still to be delivered.
+    pub fn remaining(&self) -> usize {
+        match self {
+            WeightStreamer::Memory { layers, next } => layers.len() - next,
+            WeightStreamer::Stream { remaining, .. } => *remaining,
+        }
+    }
+
+    /// Whether this source streams out-of-core.
+    pub fn is_streaming(&self) -> bool {
+        matches!(self, WeightStreamer::Stream { .. })
+    }
+
+    /// Take the next layer's weights. Errors if exhausted or the prefetch
+    /// thread hit an IO/decode failure.
+    pub fn next_layer(&mut self) -> Result<EllMatrix> {
+        match self {
+            WeightStreamer::Memory { layers, next } => {
+                if *next >= layers.len() {
+                    bail!("weight stream exhausted after {} layers", layers.len());
+                }
+                *next += 1;
+                Ok(layers[*next - 1].clone())
+            }
+            WeightStreamer::Stream { rx, path, remaining, .. } => {
+                if *remaining == 0 {
+                    bail!("weight stream exhausted ({})", path.display());
+                }
+                *remaining -= 1;
+                rx.recv()
+                    .map_err(|_| anyhow!("prefetch thread died ({})", path.display()))?
+            }
+        }
+    }
+}
+
+impl Drop for WeightStreamer {
+    fn drop(&mut self) {
+        if let WeightStreamer::Stream { rx, handle, .. } = self {
+            // Drain so the producer unblocks, then join.
+            while rx.try_recv().is_ok() {}
+            if let Some(h) = handle.take() {
+                // Producer may still be blocked on send; dropping rx first
+                // is not possible here, so drain until disconnected.
+                loop {
+                    match rx.recv_timeout(std::time::Duration::from_millis(50)) {
+                        Ok(_) => continue,
+                        Err(_) => break,
+                    }
+                }
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::radixnet::{RadixNet, Topology};
+
+    fn layers(n: usize, l: usize) -> Vec<EllMatrix> {
+        let net = RadixNet::new(n, l, 4, Topology::Random, 3).unwrap();
+        (0..l).map(|i| net.layer_ell(i)).collect()
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("spdnn_stream_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn memory_source_in_order() {
+        let ls = layers(32, 5);
+        let mut s = WeightStreamer::from_memory(ls.clone());
+        assert!(!s.is_streaming());
+        for (i, want) in ls.iter().enumerate() {
+            assert_eq!(s.remaining(), 5 - i);
+            assert_eq!(&s.next_layer().unwrap(), want);
+        }
+        assert!(s.next_layer().is_err());
+    }
+
+    #[test]
+    fn file_stream_matches_memory() {
+        let ls = layers(64, 6);
+        let path = tmp("w.bin");
+        binio::write_weights(&path, &ls).unwrap();
+        let mut s = WeightStreamer::from_file(&path, 6);
+        assert!(s.is_streaming());
+        for want in &ls {
+            assert_eq!(&s.next_layer().unwrap(), want);
+        }
+        assert!(s.next_layer().is_err());
+    }
+
+    #[test]
+    fn missing_file_errors_on_first_next() {
+        let mut s = WeightStreamer::from_file(Path::new("/nonexistent/w.bin"), 3);
+        assert!(s.next_layer().is_err());
+    }
+
+    #[test]
+    fn truncated_file_errors_midstream() {
+        let ls = layers(64, 4);
+        let path = tmp("trunc.bin");
+        binio::write_weights(&path, &ls).unwrap();
+        // Chop the file after ~2.5 layers.
+        let full = std::fs::read(&path).unwrap();
+        let keep = 44 + (64 * 4 * 6) * 2 + (64 * 4 * 6) / 2;
+        std::fs::write(&path, &full[..keep]).unwrap();
+        let mut s = WeightStreamer::from_file(&path, 4);
+        assert!(s.next_layer().is_ok());
+        assert!(s.next_layer().is_ok());
+        let mut hit_error = false;
+        for _ in 0..2 {
+            if s.next_layer().is_err() {
+                hit_error = true;
+                break;
+            }
+        }
+        assert!(hit_error, "truncation must surface as an error");
+    }
+
+    #[test]
+    fn early_drop_joins_producer() {
+        let ls = layers(64, 8);
+        let path = tmp("drop.bin");
+        binio::write_weights(&path, &ls).unwrap();
+        let mut s = WeightStreamer::from_file(&path, 8);
+        let _ = s.next_layer().unwrap();
+        drop(s); // must not hang or leak the prefetch thread
+    }
+}

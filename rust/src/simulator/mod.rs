@@ -1,0 +1,7 @@
+//! At-scale performance model (populated with `gpu_model`, `network`,
+//! `scaling`, `trace` in the simulator commit).
+
+pub mod gpu_model;
+pub mod network;
+pub mod scaling;
+pub mod trace;

@@ -1,0 +1,71 @@
+//! Summit system model (paper §IV.A): 6 V100s per node, EDR InfiniBand
+//! fat tree with 23 GB/s node injection bandwidth.
+//!
+//! The paper's parallelization is embarrassingly parallel during layers
+//! (weights replicated, no inter-GPU exchange); the network appears only
+//! in the initial feature scatter and the final category gather, plus a
+//! per-layer host-loop synchronization on each rank.
+
+/// Cluster topology descriptor.
+#[derive(Clone, Debug)]
+pub struct ClusterModel {
+    pub gpus_per_node: usize,
+    /// Node injection bandwidth, GB/s.
+    pub injection_gbs: f64,
+    /// Per-hop small-message latency, seconds.
+    pub latency_s: f64,
+}
+
+/// Summit (ORNL).
+pub fn summit() -> ClusterModel {
+    ClusterModel { gpus_per_node: 6, injection_gbs: 23.0, latency_s: 1.5e-6 }
+}
+
+impl ClusterModel {
+    pub fn nodes_for(&self, gpus: usize) -> usize {
+        gpus.div_ceil(self.gpus_per_node)
+    }
+
+    /// Seconds to scatter the input features to all ranks: each node
+    /// receives its share of the feature matrix through its injection port.
+    pub fn scatter_time_s(&self, total_bytes: f64, gpus: usize) -> f64 {
+        let nodes = self.nodes_for(gpus) as f64;
+        let per_node = total_bytes / nodes;
+        self.latency_s * (gpus as f64).log2().max(1.0) + per_node / (self.injection_gbs * 1e9)
+    }
+
+    /// Seconds for the final category gather (tiny: one id per survivor).
+    pub fn gather_time_s(&self, survivors: usize, gpus: usize) -> f64 {
+        let bytes = (survivors * 4) as f64;
+        self.latency_s * (gpus as f64).log2().max(1.0) + bytes / (self.injection_gbs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summit_shape() {
+        let s = summit();
+        assert_eq!(s.gpus_per_node, 6);
+        assert_eq!(s.nodes_for(1), 1);
+        assert_eq!(s.nodes_for(6), 1);
+        assert_eq!(s.nodes_for(7), 2);
+        assert_eq!(s.nodes_for(768), 128);
+    }
+
+    #[test]
+    fn scatter_scales_down_with_nodes() {
+        let s = summit();
+        let big = s.scatter_time_s(1e9, 6);
+        let small = s.scatter_time_s(1e9, 768);
+        assert!(small < big);
+    }
+
+    #[test]
+    fn gather_is_cheap() {
+        let s = summit();
+        assert!(s.gather_time_s(60000, 768) < 1e-3);
+    }
+}

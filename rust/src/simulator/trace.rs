@@ -1,0 +1,187 @@
+//! Activity traces: the per-layer live-feature trajectory that drives the
+//! scaling model's pruning and load-imbalance terms.
+//!
+//! Traces come from *real* coordinator runs at scaled-down batch sizes and
+//! are rescaled to the challenge's 60 000 features — the measured pruning
+//! dynamics are what make the simulated Table I saturate where the paper's
+//! does.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::InferenceReport;
+use crate::util::json::Json;
+
+/// Per-layer live-feature counts for a whole run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ActivityTrace {
+    /// Features at layer 0.
+    pub batch: usize,
+    /// Live features entering each layer; `live[0] == batch`.
+    pub live: Vec<usize>,
+}
+
+impl ActivityTrace {
+    /// Extract the global trajectory from a measured report (sums the
+    /// per-worker live counts layer by layer).
+    pub fn from_report(report: &InferenceReport) -> Result<ActivityTrace> {
+        if report.workers.is_empty() {
+            bail!("report has no workers");
+        }
+        let layers = report.workers[0].live_per_layer.len();
+        if report.workers.iter().any(|w| w.live_per_layer.len() != layers) {
+            bail!("workers disagree on layer count");
+        }
+        let live: Vec<usize> = (0..layers)
+            .map(|l| report.workers.iter().map(|w| w.live_per_layer[l]).sum())
+            .collect();
+        let batch = live.first().copied().unwrap_or(0);
+        Ok(ActivityTrace { batch, live })
+    }
+
+    /// Synthetic fallback: geometric decay to a survivor floor, the regime
+    /// the challenge networks show (fast early pruning, long stable tail).
+    pub fn synthetic(batch: usize, layers: usize, decay: f64, floor_frac: f64) -> ActivityTrace {
+        assert!((0.0..=1.0).contains(&decay) && (0.0..=1.0).contains(&floor_frac));
+        let floor = (batch as f64 * floor_frac).round();
+        let mut live = Vec::with_capacity(layers);
+        let mut cur = batch as f64;
+        for _ in 0..layers {
+            live.push(cur.round() as usize);
+            cur = floor + (cur - floor) * decay;
+        }
+        ActivityTrace { batch, live }
+    }
+
+    /// Rescale the trajectory to a different batch size (proportional).
+    pub fn rescale(&self, new_batch: usize) -> ActivityTrace {
+        if self.batch == 0 {
+            return ActivityTrace { batch: new_batch, live: vec![new_batch; self.live.len()] };
+        }
+        let ratio = new_batch as f64 / self.batch as f64;
+        ActivityTrace {
+            batch: new_batch,
+            live: self.live.iter().map(|&l| (l as f64 * ratio).round() as usize).collect(),
+        }
+    }
+
+    /// Extend or truncate to `layers` entries (tail holds the last value —
+    /// the stable survivor count).
+    pub fn with_layers(&self, layers: usize) -> ActivityTrace {
+        let mut live = self.live.clone();
+        let tail = live.last().copied().unwrap_or(self.batch);
+        live.resize(layers, tail);
+        ActivityTrace { batch: self.batch, live }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Serialize to JSON (`spdnn infer --trace-out`).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let j = Json::obj(vec![
+            ("batch", Json::Int(self.batch as i64)),
+            ("live", Json::arr_usize(&self.live)),
+        ]);
+        std::fs::write(path, j.to_string()).with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load a trace written by [`ActivityTrace::save`]
+    /// (`spdnn simulate --trace`).
+    pub fn load(path: &Path) -> Result<ActivityTrace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let live: Vec<usize> = j
+            .req_arr("live")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad live entry")))
+            .collect::<Result<_>>()?;
+        if live.is_empty() {
+            bail!("trace has no layers");
+        }
+        Ok(ActivityTrace { batch: j.req_usize("batch")?, live })
+    }
+
+    /// Fraction of feature-layer work avoided by pruning.
+    pub fn savings(&self) -> f64 {
+        if self.live.is_empty() || self.batch == 0 {
+            return 0.0;
+        }
+        let traversed: usize = self.live.iter().sum();
+        1.0 - traversed as f64 / (self.batch * self.live.len()) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::WorkerMetrics;
+
+    #[test]
+    fn synthetic_monotone_nonincreasing() {
+        let t = ActivityTrace::synthetic(1000, 20, 0.8, 0.3);
+        assert_eq!(t.live[0], 1000);
+        assert!(t.live.windows(2).all(|w| w[1] <= w[0]));
+        assert!(*t.live.last().unwrap() >= 300);
+        assert!(t.savings() > 0.0);
+    }
+
+    #[test]
+    fn rescale_proportional() {
+        let t = ActivityTrace::synthetic(100, 5, 0.5, 0.1);
+        let big = t.rescale(1000);
+        assert_eq!(big.batch, 1000);
+        assert_eq!(big.live[0], 1000);
+        for (a, b) in t.live.iter().zip(&big.live) {
+            assert!((*b as f64 - *a as f64 * 10.0).abs() <= 5.0);
+        }
+    }
+
+    #[test]
+    fn with_layers_extends_tail() {
+        let t = ActivityTrace::synthetic(100, 3, 0.5, 0.2);
+        let long = t.with_layers(6);
+        assert_eq!(long.layers(), 6);
+        assert_eq!(long.live[5], *t.live.last().unwrap());
+        let short = t.with_layers(2);
+        assert_eq!(short.layers(), 2);
+    }
+
+    #[test]
+    fn from_report_sums_workers() {
+        let mk = |live: Vec<usize>| WorkerMetrics { live_per_layer: live, ..Default::default() };
+        let report = InferenceReport::assemble(
+            100,
+            1.0,
+            vec![],
+            vec![mk(vec![10, 5, 2]), mk(vec![10, 6, 1])],
+        );
+        let t = ActivityTrace::from_report(&report).unwrap();
+        assert_eq!(t.live, vec![20, 11, 3]);
+        assert_eq!(t.batch, 20);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let t = ActivityTrace::synthetic(500, 7, 0.8, 0.3);
+        let path = std::env::temp_dir().join(format!("spdnn_trace_{}.json", std::process::id()));
+        t.save(&path).unwrap();
+        assert_eq!(ActivityTrace::load(&path).unwrap(), t);
+        std::fs::write(&path, "{\"batch\": 5, \"live\": []}").unwrap();
+        assert!(ActivityTrace::load(&path).is_err());
+        assert!(ActivityTrace::load(std::path::Path::new("/nope")).is_err());
+    }
+
+    #[test]
+    fn from_report_rejects_ragged() {
+        let mk = |live: Vec<usize>| WorkerMetrics { live_per_layer: live, ..Default::default() };
+        let report =
+            InferenceReport::assemble(100, 1.0, vec![], vec![mk(vec![1, 2]), mk(vec![1])]);
+        assert!(ActivityTrace::from_report(&report).is_err());
+        let empty = InferenceReport::assemble(0, 0.0, vec![], vec![]);
+        assert!(ActivityTrace::from_report(&empty).is_err());
+    }
+}

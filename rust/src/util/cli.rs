@@ -1,0 +1,219 @@
+//! Hand-rolled command-line parser (the offline crate set has no clap).
+//!
+//! Grammar: `spdnn <subcommand> [positional]... [--key value]... [--flag]...`
+//! Typed accessors with defaults; unknown-flag detection via `finish()`.
+//!
+//! Note: a token after `--flag` is consumed as its value unless it starts
+//! with `--`, so positionals must precede flags (or use `--key=value`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+/// Marker value stored for bare `--flag` occurrences.
+const BARE: &str = "\u{1}";
+
+impl Args {
+    /// Parse from an explicit token list (first token = subcommand unless it
+    /// starts with `-`).
+    pub fn parse_from<I, S>(tokens: I) -> Result<Args>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let toks: Vec<String> = tokens.into_iter().map(Into::into).collect();
+        let mut i = 0;
+        if i < toks.len() && !toks[i].starts_with('-') {
+            args.subcommand = Some(toks[i].clone());
+            i += 1;
+        }
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                // `--key=value` form.
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.flags
+                        .entry(name.to_string())
+                        .or_default()
+                        .push(toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.entry(name.to_string()).or_default().push(BARE.to_string());
+                }
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().insert(key.to_string());
+    }
+
+    /// String flag; last occurrence wins.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).and_then(|v| v.last()).map(|s| {
+            if s == BARE {
+                ""
+            } else {
+                s.as_str()
+            }
+        })
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).filter(|s| !s.is_empty()).unwrap_or(default)
+    }
+
+    /// Bare boolean flag (also accepts `--x true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        match self.get(key) {
+            None => false,
+            Some("") | Some("true") | Some("1") => true,
+            Some("false") | Some("0") => false,
+            Some(_) => true,
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{key} expects an unsigned int, got {s:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{key} expects a number, got {s:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{key} expects an unsigned int, got {s:?}")),
+        }
+    }
+
+    /// Comma-separated list of usize, e.g. `--neurons 1024,4096`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{key}: bad list element {p:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error on any flag that was never consumed — catches typos.
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !consumed.contains(*k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            bail!("unknown flag(s): {}", unknown.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().copied()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["infer", "file.bin", "--neurons", "1024", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("infer"));
+        assert_eq!(a.usize_or("neurons", 0).unwrap(), 1024);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["file.bin"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form_and_last_wins() {
+        let a = parse(&["--k=4", "--k=8"]);
+        assert_eq!(a.usize_or("k", 0).unwrap(), 8);
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse(&["--neurons", "1024,4096"]);
+        assert_eq!(a.usize_list_or("neurons", &[]).unwrap(), vec![1024, 4096]);
+        assert_eq!(a.usize_list_or("caps", &[12, 60]).unwrap(), vec![12, 60]);
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+        assert_eq!(a.f64_or("x", 2.5).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn bool_forms() {
+        assert!(parse(&["--x"]).flag("x"));
+        assert!(parse(&["--x", "true"]).flag("x"));
+        assert!(!parse(&["--x", "false"]).flag("x"));
+        assert!(!parse(&[]).flag("x"));
+    }
+
+    #[test]
+    fn type_errors() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.usize_or("n", 0).is_err());
+        let a = parse(&["--xs", "1,zz"]);
+        assert!(a.usize_list_or("xs", &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse(&["run", "--good", "1", "--oops", "2"]);
+        let _ = a.usize_or("good", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn no_subcommand_when_first_is_flag() {
+        let a = parse(&["--x", "1"]);
+        assert_eq!(a.subcommand, None);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "3"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.usize_or("b", 0).unwrap(), 3);
+    }
+}

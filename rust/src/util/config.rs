@@ -1,0 +1,364 @@
+//! TOML-subset configuration parser + the typed runtime configuration.
+//!
+//! Supported grammar (enough for real deployment configs without external
+//! crates): `[section]` headers, `key = value` with string ("..."),
+//! integer, float, boolean and inline-array (`[1, 2, 3]`) values, `#`
+//! comments, blank lines.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed config: section -> key -> raw value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    IntList(Vec<i64>),
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new(); // "" = top level
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section header", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+            let key = k.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value for {key:?}", lineno + 1))?;
+            cfg.sections.entry(section.clone()).or_default().insert(key.to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        match self.get(section, key) {
+            Some(Value::Str(s)) => s.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        match self.get(section, key) {
+            Some(Value::Int(i)) if *i >= 0 => *i as usize,
+            _ => default,
+        }
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        match self.get(section, key) {
+            Some(Value::Float(f)) => *f,
+            Some(Value::Int(i)) => *i as f64,
+            _ => default,
+        }
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        match self.get(section, key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn usize_list_or(&self, section: &str, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(section, key) {
+            Some(Value::IntList(v)) => v.iter().map(|&i| i as usize).collect(),
+            _ => default.to_vec(),
+        }
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<Value> {
+    if v.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(s) = v.strip_prefix('"') {
+        let s = s.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(s.to_string()));
+    }
+    if v == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array"))?;
+        let mut xs = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            xs.push(part.parse::<i64>().map_err(|_| anyhow!("bad int {part:?} in array"))?);
+        }
+        return Ok(Value::IntList(xs));
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {v:?}")
+}
+
+// ---------------------------------------------------------------------------
+// Typed runtime configuration assembled from a Config + CLI overrides.
+// ---------------------------------------------------------------------------
+
+/// Top-level runtime configuration of the inference system.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RuntimeConfig {
+    /// Network width (number of neurons per layer).
+    pub neurons: usize,
+    /// Network depth.
+    pub layers: usize,
+    /// Nonzeros per weight row (RadiX-Net: 32).
+    pub k: usize,
+    /// Number of input features (challenge: 60 000; scaled by default).
+    pub batch: usize,
+    /// Simulated GPUs / worker count.
+    pub workers: usize,
+    /// Feature-minibatch width (paper MINIBATCH = 12).
+    pub minibatch: usize,
+    /// Prune inactive features between layers.
+    pub prune: bool,
+    /// Out-of-core weight streaming with double buffering.
+    pub stream_weights: bool,
+    /// Topology: "butterfly" (RadiX-Net class) or "random".
+    pub topology: String,
+    /// Challenge bias constant; if None, derived from `neurons`.
+    pub bias: Option<f32>,
+    /// PRNG seed for data/topology generation.
+    pub seed: u64,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig {
+            neurons: 1024,
+            layers: 120,
+            k: 32,
+            batch: 1920,
+            workers: 1,
+            minibatch: 12,
+            prune: true,
+            stream_weights: true,
+            topology: "butterfly".to_string(),
+            bias: None,
+            seed: 0x5BD1,
+        }
+    }
+}
+
+impl RuntimeConfig {
+    /// Challenge bias constants per network width (graphchallenge.org).
+    pub fn challenge_bias(neurons: usize) -> f32 {
+        match neurons {
+            1024 => -0.30,
+            4096 => -0.35,
+            16384 => -0.40,
+            65536 => -0.45,
+            // Non-challenge widths interpolate to the nearest regime.
+            n if n < 4096 => -0.30,
+            n if n < 16384 => -0.35,
+            n if n < 65536 => -0.40,
+            _ => -0.45,
+        }
+    }
+
+    pub fn bias_value(&self) -> f32 {
+        self.bias.unwrap_or_else(|| Self::challenge_bias(self.neurons))
+    }
+
+    /// Total edges traversed by one full inference pass with no pruning:
+    /// batch × layers × (k × neurons). The challenge throughput metric
+    /// divides *input* edges by time, counting pruned features as work
+    /// avoided — see `coordinator::metrics`.
+    pub fn total_edges(&self) -> u64 {
+        self.batch as u64 * self.layers as u64 * (self.k as u64 * self.neurons as u64)
+    }
+
+    /// Merge a `[runtime]`/`[model]` style Config file into this config.
+    pub fn apply_config(&mut self, cfg: &Config) {
+        self.neurons = cfg.usize_or("model", "neurons", self.neurons);
+        self.layers = cfg.usize_or("model", "layers", self.layers);
+        self.k = cfg.usize_or("model", "k", self.k);
+        self.topology = cfg.str_or("model", "topology", &self.topology);
+        self.batch = cfg.usize_or("runtime", "batch", self.batch);
+        self.workers = cfg.usize_or("runtime", "workers", self.workers);
+        self.minibatch = cfg.usize_or("runtime", "minibatch", self.minibatch);
+        self.prune = cfg.bool_or("runtime", "prune", self.prune);
+        self.stream_weights = cfg.bool_or("runtime", "stream_weights", self.stream_weights);
+        self.seed = cfg.usize_or("runtime", "seed", self.seed as usize) as u64;
+        if let Some(Value::Float(b)) = cfg.get("model", "bias") {
+            self.bias = Some(*b as f32);
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.neurons == 0 || self.layers == 0 || self.k == 0 || self.batch == 0 {
+            bail!("neurons/layers/k/batch must be positive");
+        }
+        if self.workers == 0 {
+            bail!("workers must be positive");
+        }
+        if self.k > self.neurons {
+            bail!("k={} exceeds neurons={}", self.k, self.neurons);
+        }
+        if self.neurons > (1 << 16) {
+            bail!("neurons={} exceeds the u16 index range", self.neurons);
+        }
+        if self.topology != "butterfly" && self.topology != "random" {
+            bail!("unknown topology {:?}", self.topology);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let text = r#"
+# model definition
+[model]
+neurons = 4096
+topology = "butterfly"   # structured
+bias = -0.35
+
+[runtime]
+batch = 960
+prune = true
+capacities = [12, 60, 240]
+"#;
+        let cfg = Config::parse(text).unwrap();
+        assert_eq!(cfg.usize_or("model", "neurons", 0), 4096);
+        assert_eq!(cfg.str_or("model", "topology", ""), "butterfly");
+        assert_eq!(cfg.f64_or("model", "bias", 0.0), -0.35);
+        assert!(cfg.bool_or("runtime", "prune", false));
+        assert_eq!(cfg.usize_list_or("runtime", "capacities", &[]), vec![12, 60, 240]);
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.usize_or("x", "y", 7), 7);
+        assert_eq!(cfg.str_or("x", "y", "d"), "d");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("k = ").is_err());
+        assert!(Config::parse("k = \"open").is_err());
+        assert!(Config::parse("[]").is_err());
+        assert!(Config::parse("= 3").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let cfg = Config::parse("[s]\nname = \"a#b\"").unwrap();
+        assert_eq!(cfg.str_or("s", "name", ""), "a#b");
+    }
+
+    #[test]
+    fn runtime_config_apply_and_validate() {
+        let mut rc = RuntimeConfig::default();
+        let cfg = Config::parse("[model]\nneurons = 4096\n[runtime]\nworkers = 6").unwrap();
+        rc.apply_config(&cfg);
+        assert_eq!(rc.neurons, 4096);
+        assert_eq!(rc.workers, 6);
+        rc.validate().unwrap();
+        assert_eq!(rc.bias_value(), -0.35);
+    }
+
+    #[test]
+    fn validate_catches_errors() {
+        let mut rc = RuntimeConfig { neurons: 0, ..Default::default() };
+        assert!(rc.validate().is_err());
+        rc.neurons = 16;
+        rc.k = 32;
+        assert!(rc.validate().is_err());
+        rc.k = 4;
+        rc.topology = "mesh".into();
+        assert!(rc.validate().is_err());
+    }
+
+    #[test]
+    fn challenge_bias_table() {
+        assert_eq!(RuntimeConfig::challenge_bias(1024), -0.30);
+        assert_eq!(RuntimeConfig::challenge_bias(4096), -0.35);
+        assert_eq!(RuntimeConfig::challenge_bias(16384), -0.40);
+        assert_eq!(RuntimeConfig::challenge_bias(65536), -0.45);
+        assert_eq!(RuntimeConfig::challenge_bias(64), -0.30);
+    }
+
+    #[test]
+    fn total_edges() {
+        let rc = RuntimeConfig { neurons: 1024, layers: 120, k: 32, batch: 60000, ..Default::default() };
+        // The challenge's 1024x120 network: ~3.9G edge-traversals per pass
+        // ... per feature set: 60000 * 120 * 32768.
+        assert_eq!(rc.total_edges(), 60000 * 120 * 32 * 1024);
+    }
+}

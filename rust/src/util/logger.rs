@@ -1,0 +1,116 @@
+//! Tiny leveled logger (no external crates). Level comes from the
+//! `SPDNN_LOG` env var: `error`, `warn`, `info` (default), `debug`, `trace`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+static START: OnceLock<Instant> = OnceLock::new();
+
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        let lvl = std::env::var("SPDNN_LOG").map(|s| Level::from_str(&s)).unwrap_or(Level::Info);
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+        return lvl;
+    }
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+pub fn set_level(lvl: Level) {
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lvl: Level) -> bool {
+    lvl <= level()
+}
+
+pub fn log(lvl: Level, module: &str, msg: &str) {
+    if !enabled(lvl) {
+        return;
+    }
+    let start = START.get_or_init(Instant::now);
+    let t = start.elapsed().as_secs_f64();
+    eprintln!("[{t:10.4}s {} {module}] {msg}", lvl.tag());
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Info, module_path!(), &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Warn, module_path!(), &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Error, module_path!(), &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Debug, module_path!(), &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::from_str("error"), Level::Error);
+        assert_eq!(Level::from_str("WARN"), Level::Warn);
+        assert_eq!(Level::from_str("debug"), Level::Debug);
+        assert_eq!(Level::from_str("bogus"), Level::Info);
+    }
+
+    #[test]
+    fn enabled_respects_order() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+    }
+}

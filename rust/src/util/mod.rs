@@ -1,0 +1,13 @@
+//! Infrastructure substrates the offline crate set requires us to own:
+//! PRNG, JSON, CLI, config, logging, statistics, thread helpers, a mini
+//! property-testing harness and table rendering.
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod logger;
+pub mod proptest;
+pub mod prng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

@@ -1,0 +1,175 @@
+//! xoshiro256** PRNG — bit-for-bit mirror of `python/compile/prng.py`.
+//!
+//! The dataset and topology generators must be reproducible across the
+//! Python (build/test) and Rust (runtime) sides; both implement the same
+//! xoshiro256** generator seeded through SplitMix64. Cross-language
+//! equality is asserted by `tests/cross_language.rs` against goldens the
+//! Python suite exports.
+
+/// Seeding generator (Vigna's splitmix64).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** 1.0 (Blackman & Vigna).
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 24 bits of randomness (mirrors Python).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Unbiased uniform integer in [0, n) via rejection sampling.
+    ///
+    /// Panics if `n == 0` (the Python mirror raises ValueError).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "next_below: n must be positive");
+        // zone = MASK64 - (MASK64 + 1) % n, computed without overflow.
+        let rem = (u64::MAX % n + 1) % n;
+        let zone = u64::MAX - rem;
+        loop {
+            let v = self.next_u64();
+            if v <= zone {
+                return v % n;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle, identical visit order to the Python impl.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Convenience: uniform f32 in [lo, hi).
+    pub fn next_range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Same golden vectors as python/tests/test_prng.py.
+    #[test]
+    fn splitmix_golden() {
+        let mut sm = SplitMix64::new(0);
+        let got: Vec<u64> = (0..4).map(|_| sm.next_u64()).collect();
+        assert_eq!(
+            got,
+            vec![
+                0xE220A8397B1DCDAF,
+                0x6E789E6AA1B965F4,
+                0x06C45D188009454F,
+                0xF88BB8A8724C81EC
+            ]
+        );
+    }
+
+    #[test]
+    fn xoshiro_golden() {
+        let mut r = Xoshiro256::new(42);
+        let got: Vec<u64> = (0..6).map(|_| r.next_u64()).collect();
+        assert_eq!(
+            got,
+            vec![
+                0x15780B2E0C2EC716,
+                0x6104D9866D113A7E,
+                0xAE17533239E499A1,
+                0xECB8AD4703B360A1,
+                0xFDE6DC7FE2EC5E64,
+                0xC50DA53101795238
+            ]
+        );
+    }
+
+    #[test]
+    fn f32_golden_and_range() {
+        let mut r = Xoshiro256::new(42);
+        let xs: Vec<f32> = (0..1000).map(|_| r.next_f32()).collect();
+        assert!((xs[0] - 0.08386296).abs() < 1e-7);
+        assert!((xs[3] - 0.92469293).abs() < 1e-7);
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn next_below_golden() {
+        let mut r = Xoshiro256::new(7);
+        let got: Vec<u64> = (0..12).map(|_| r.next_below(10)).collect();
+        assert_eq!(got, vec![4, 4, 8, 4, 4, 1, 6, 6, 8, 9, 3, 6]);
+    }
+
+    #[test]
+    fn next_below_bounds() {
+        let mut r = Xoshiro256::new(123);
+        for n in [1u64, 2, 3, 10, 1000, 1 << 33] {
+            for _ in 0..200 {
+                assert!(r.next_below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn next_below_zero_panics() {
+        Xoshiro256::new(0).next_below(0);
+    }
+
+    #[test]
+    fn shuffle_permutation_deterministic() {
+        let mut a: Vec<usize> = (0..50).collect();
+        let mut b: Vec<usize> = (0..50).collect();
+        Xoshiro256::new(9).shuffle(&mut a);
+        Xoshiro256::new(9).shuffle(&mut b);
+        assert_eq!(a, b);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(a, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn distinct_seeds_diverge() {
+        assert_ne!(Xoshiro256::new(1).next_u64(), Xoshiro256::new(2).next_u64());
+    }
+}

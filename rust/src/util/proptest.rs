@@ -1,0 +1,132 @@
+//! Mini property-testing harness (the offline crate set has no proptest).
+//!
+//! Runs a property over N generated cases; on failure it reports the case
+//! seed so the exact input can be replayed with `Runner::replay`. No
+//! shrinking — cases are kept small instead.
+
+use crate::util::prng::Xoshiro256;
+
+/// Property-test runner.
+pub struct Runner {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Runner { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+impl Runner {
+    pub fn new(cases: usize, seed: u64) -> Runner {
+        Runner { cases, seed }
+    }
+
+    /// Run `prop` over `cases` generated inputs. `prop` receives a PRNG to
+    /// draw its case from and returns `Err(description)` on violation.
+    ///
+    /// Panics with the failing case seed on the first violation.
+    pub fn run<F>(&self, name: &str, mut prop: F)
+    where
+        F: FnMut(&mut Xoshiro256) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let mut rng = Xoshiro256::new(case_seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!(
+                    "property {name:?} failed on case {case} (replay seed {case_seed:#x}): {msg}"
+                );
+            }
+        }
+    }
+
+    /// Replay a single failing case by its reported seed.
+    pub fn replay<F>(case_seed: u64, mut prop: F)
+    where
+        F: FnMut(&mut Xoshiro256) -> Result<(), String>,
+    {
+        let mut rng = Xoshiro256::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("replayed case {case_seed:#x} still fails: {msg}");
+        }
+    }
+}
+
+/// Draw a vector of f32 in [lo, hi) of the given length.
+pub fn vec_f32(rng: &mut Xoshiro256, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.next_range_f32(lo, hi)).collect()
+}
+
+/// Draw a sparse binary vector with the given density.
+pub fn sparse_binary(rng: &mut Xoshiro256, len: usize, density: f32) -> Vec<f32> {
+    (0..len).map(|_| if rng.next_f32() < density { 1.0 } else { 0.0 }).collect()
+}
+
+/// Draw a usize in [lo, hi].
+pub fn usize_in(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {
+    lo + rng.next_below((hi - lo + 1) as u64) as usize
+}
+
+/// Pick one element of a slice.
+pub fn choose<'a, T>(rng: &mut Xoshiro256, xs: &'a [T]) -> &'a T {
+    &xs[rng.next_below(xs.len() as u64) as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        Runner::new(16, 1).run("always-true", |rng| {
+            count += 1;
+            let x = rng.next_below(100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(count, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        Runner::new(8, 2).run("always-false", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = Xoshiro256::new(3);
+        let v = vec_f32(&mut rng, 100, -1.0, 1.0);
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().all(|&x| (-1.0..1.0).contains(&x)));
+        let s = sparse_binary(&mut rng, 100, 0.3);
+        assert!(s.iter().all(|&x| x == 0.0 || x == 1.0));
+        for _ in 0..50 {
+            let u = usize_in(&mut rng, 3, 7);
+            assert!((3..=7).contains(&u));
+        }
+        let xs = [10, 20, 30];
+        assert!(xs.contains(choose(&mut rng, &xs)));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        Runner::new(4, 9).run("collect-a", |rng| {
+            a.push(rng.next_u64());
+            Ok(())
+        });
+        Runner::new(4, 9).run("collect-b", |rng| {
+            b.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

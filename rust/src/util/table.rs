@@ -1,0 +1,126 @@
+//! ASCII table rendering for the bench harness — the benches print
+//! paper-style rows (Table I / Table II) through this.
+
+/// A simple column-aligned table with a title and a header row.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let line = |cells: &[String], w: &[usize]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                s.push_str(&format!("{:>width$}", c, width = w[i]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.header, &w));
+        out.push_str(&format!("{}\n", "-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1))));
+        for row in &self.rows {
+            out.push_str(&line(row, &w));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a throughput in edges/second the way the paper does
+/// (TeraEdges/s with 2 decimals, or GigaEdges for small values).
+pub fn fmt_teps(edges_per_sec: f64) -> String {
+    if edges_per_sec >= 1e12 {
+        format!("{:.2} TEps", edges_per_sec / 1e12)
+    } else if edges_per_sec >= 1e9 {
+        format!("{:.2} GEps", edges_per_sec / 1e9)
+    } else if edges_per_sec >= 1e6 {
+        format!("{:.2} MEps", edges_per_sec / 1e6)
+    } else {
+        format!("{:.0} Eps", edges_per_sec)
+    }
+}
+
+/// Format seconds sensibly across µs..s scales.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_alignment() {
+        let mut t = Table::new("Demo", &["Neurons", "TEps"]);
+        t.row(vec!["1024".into(), "10.51".into()]);
+        t.row(vec!["65536".into(), "3.47".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("Neurons"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+        // Right-aligned: both data rows end at the same column.
+        assert_eq!(lines[2].len(), lines[3].len().max(lines[2].len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_teps(1.5e13), "15.00 TEps");
+        assert_eq!(fmt_teps(2.5e9), "2.50 GEps");
+        assert_eq!(fmt_teps(3.0e6), "3.00 MEps");
+        assert_eq!(fmt_teps(42.0), "42 Eps");
+        assert_eq!(fmt_secs(1.5), "1.500s");
+        assert_eq!(fmt_secs(0.0015), "1.500ms");
+        assert_eq!(fmt_secs(2e-6), "2.0us");
+    }
+}

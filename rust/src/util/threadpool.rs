@@ -1,0 +1,96 @@
+//! Scoped data-parallel helpers over std::thread (no rayon offline).
+//!
+//! The coordinator's worker pool has its own long-lived threads
+//! (`coordinator::pool`); this module is for one-shot fork/join
+//! parallelism inside the native engines.
+
+/// Run `f(chunk_index, chunk)` over `chunks` slices of `data` in parallel
+/// scoped threads. `nthreads == 1` short-circuits to the calling thread.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], nthreads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Send + Sync,
+{
+    let n = nthreads.max(1).min(data.len().max(1));
+    if n <= 1 {
+        f(0, data);
+        return;
+    }
+    let chunk = data.len().div_ceil(n);
+    std::thread::scope(|scope| {
+        for (i, slice) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(i, slice));
+        }
+    });
+}
+
+/// Map `f` over `0..n` splitting the index range across `nthreads`,
+/// collecting results in order.
+pub fn par_map_index<R: Send, F>(n: usize, nthreads: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Send + Sync,
+{
+    let threads = nthreads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        for (t, slice) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, slot) in slice.iter_mut().enumerate() {
+                    *slot = Some(f(t * chunk + j));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map_index: missing result")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_chunks_mut_covers_all() {
+        let mut data = vec![0u64; 1000];
+        par_chunks_mut(&mut data, 4, |_, chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn par_chunks_single_thread() {
+        let mut data = vec![1i32; 10];
+        par_chunks_mut(&mut data, 1, |i, chunk| {
+            assert_eq!(i, 0);
+            for x in chunk {
+                *x *= 2;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 2));
+    }
+
+    #[test]
+    fn par_chunks_empty() {
+        let mut data: Vec<i32> = vec![];
+        par_chunks_mut(&mut data, 4, |_, _| {});
+    }
+
+    #[test]
+    fn par_map_index_ordered() {
+        let out = par_map_index(100, 7, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_index_zero() {
+        let out: Vec<usize> = par_map_index(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+}

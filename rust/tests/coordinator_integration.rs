@@ -1,0 +1,101 @@
+//! Integration: the full coordinator (partitioning, pruning, streaming,
+//! multi-worker) over BOTH backends, validated against the challenge
+//! ground truth — the production path end to end.
+
+use std::path::PathBuf;
+
+use spdnn::coordinator::{run_inference, validate, Backend, RunOptions};
+use spdnn::data::Dataset;
+use spdnn::util::config::RuntimeConfig;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+        None
+    }
+}
+
+/// 64-neuron config served by the toy artifact (capacity 8).
+fn toy_cfg(workers: usize) -> RuntimeConfig {
+    RuntimeConfig { neurons: 64, layers: 6, k: 4, batch: 20, workers, ..Default::default() }
+}
+
+/// Real challenge-width config served by the 1024-neuron artifacts.
+fn challenge_cfg(batch: usize, layers: usize) -> RuntimeConfig {
+    RuntimeConfig { neurons: 1024, layers, k: 32, batch, workers: 1, ..Default::default() }
+}
+
+#[test]
+fn pjrt_backend_validates_toy_width() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ds = Dataset::generate(&toy_cfg(1)).unwrap();
+    let opts = RunOptions { backend: Backend::Pjrt { artifacts: dir }, ..Default::default() };
+    let report = run_inference(&ds, &opts).unwrap();
+    validate(&report, &ds).unwrap();
+    // Capacity is 8 < 20 features, so at least layer 0 had to chunk
+    // (3 dispatches), plus one dispatch per surviving layer.
+    assert!(report.workers[0].dispatches > 6, "expected chunked dispatches");
+}
+
+#[test]
+fn pjrt_backend_multi_worker() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ds = Dataset::generate(&toy_cfg(3)).unwrap();
+    let opts = RunOptions { backend: Backend::Pjrt { artifacts: dir }, ..Default::default() };
+    let report = run_inference(&ds, &opts).unwrap();
+    validate(&report, &ds).unwrap();
+    assert_eq!(report.workers.len(), 3);
+}
+
+#[test]
+fn pjrt_backend_challenge_width() {
+    let Some(dir) = artifacts_dir() else { return };
+    // 1024 neurons, RadiX-Net butterfly, challenge bias — a real (scaled)
+    // challenge instance through the AOT kernel.
+    let ds = Dataset::generate(&challenge_cfg(24, 4)).unwrap();
+    let opts = RunOptions { backend: Backend::Pjrt { artifacts: dir }, ..Default::default() };
+    let report = run_inference(&ds, &opts).unwrap();
+    validate(&report, &ds).unwrap();
+    assert!(report.edges_per_sec > 0.0);
+}
+
+#[test]
+fn pjrt_with_streamed_weights() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ds = Dataset::generate(&toy_cfg(2)).unwrap();
+    let tmp = std::env::temp_dir().join(format!("spdnn_ci_{}", std::process::id()));
+    ds.save(&tmp).unwrap();
+    let opts = RunOptions {
+        backend: Backend::Pjrt { artifacts: dir },
+        stream_from: Some(tmp.join("weights.bin")),
+        ..Default::default()
+    };
+    let report = run_inference(&ds, &opts).unwrap();
+    validate(&report, &ds).unwrap();
+}
+
+#[test]
+fn native_and_pjrt_agree_on_categories() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ds = Dataset::generate(&toy_cfg(2)).unwrap();
+    let native = run_inference(&ds, &RunOptions::default()).unwrap();
+    let pjrt = run_inference(
+        &ds,
+        &RunOptions { backend: Backend::Pjrt { artifacts: dir }, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(native.categories, pjrt.categories);
+}
+
+#[test]
+fn missing_artifact_width_is_clear_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = RuntimeConfig { neurons: 256, layers: 2, k: 4, batch: 4, ..Default::default() };
+    let ds = Dataset::generate(&cfg).unwrap();
+    let opts = RunOptions { backend: Backend::Pjrt { artifacts: dir }, ..Default::default() };
+    let err = run_inference(&ds, &opts).unwrap_err();
+    assert!(format!("{err:#}").contains("no layer_opt artifacts"), "{err:#}");
+}

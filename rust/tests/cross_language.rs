@@ -1,0 +1,143 @@
+//! Cross-language determinism: the Rust generators (PRNG, RadiX-Net
+//! topology, synthetic MNIST, the network oracle) must reproduce the
+//! Python implementations bit-for-bit / within float tolerance.
+//!
+//! The golden file is exported by python/tests/test_golden_export.py
+//! (`make test` runs pytest first); without it these tests skip.
+
+use spdnn::data::mnist_synth;
+use spdnn::engine::EllEngine;
+use spdnn::radixnet::{topology, RadixNet, Topology};
+use spdnn::util::json::Json;
+use spdnn::util::prng::Xoshiro256;
+
+fn golden() -> Option<Json> {
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/golden_cross.json");
+    match std::fs::read_to_string(&path) {
+        Ok(text) => Some(Json::parse(&text).expect("golden file parses")),
+        Err(_) => {
+            eprintln!("SKIP: {} missing — run pytest first (make test)", path.display());
+            None
+        }
+    }
+}
+
+#[test]
+fn prng_streams_match_python() {
+    let Some(g) = golden() else { return };
+    let want: Vec<u64> = g
+        .req_arr("xoshiro_seed42_u64")
+        .unwrap()
+        .iter()
+        .map(|v| v.as_str().unwrap().parse::<u64>().unwrap())
+        .collect();
+    let mut rng = Xoshiro256::new(42);
+    let got: Vec<u64> = (0..want.len()).map(|_| rng.next_u64()).collect();
+    assert_eq!(got, want);
+
+    let want_b: Vec<u64> = g
+        .req_arr("xoshiro_seed7_below10")
+        .unwrap()
+        .iter()
+        .map(|v| v.as_i64().unwrap() as u64)
+        .collect();
+    let mut rng = Xoshiro256::new(7);
+    let got_b: Vec<u64> = (0..want_b.len()).map(|_| rng.next_below(10)).collect();
+    assert_eq!(got_b, want_b);
+
+    let want_f: Vec<f64> =
+        g.req_arr("xoshiro_seed42_f32").unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+    let mut rng = Xoshiro256::new(42);
+    for w in want_f {
+        assert!((rng.next_f32() as f64 - w).abs() < 1e-7);
+    }
+}
+
+#[test]
+fn butterfly_topology_matches_python() {
+    let Some(g) = golden() else { return };
+    for (key, layer) in [("butterfly_n64_k4_l0_rows", 0usize), ("butterfly_n64_k4_l1_rows", 1)] {
+        let want: Vec<Vec<u32>> = g
+            .req_arr(key)
+            .unwrap()
+            .iter()
+            .map(|row| row.as_arr().unwrap().iter().map(|c| c.as_i64().unwrap() as u32).collect())
+            .collect();
+        let got = topology::butterfly_layer(64, 4, layer);
+        assert_eq!(&got[..want.len()], want.as_slice(), "{key}");
+    }
+    let want_strides: Vec<usize> = g
+        .req_arr("butterfly_n1024_k32_strides")
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    assert_eq!(topology::butterfly_strides(1024, 32), want_strides);
+}
+
+#[test]
+fn random_topology_matches_python() {
+    let Some(g) = golden() else { return };
+    let want: Vec<Vec<u32>> = g
+        .req_arr("random_n64_k4_l1_s5_rows")
+        .unwrap()
+        .iter()
+        .map(|row| row.as_arr().unwrap().iter().map(|c| c.as_i64().unwrap() as u32).collect())
+        .collect();
+    let got = topology::random_layer(64, 4, 1, 5);
+    assert_eq!(&got[..want.len()], want.as_slice());
+}
+
+#[test]
+fn mnist_images_match_python() {
+    let Some(g) = golden() else { return };
+    let want: Vec<Vec<u8>> = g
+        .req_arr("mnist_n256_c4_s2")
+        .unwrap()
+        .iter()
+        .map(|img| img.as_arr().unwrap().iter().map(|p| p.as_i64().unwrap() as u8).collect())
+        .collect();
+    let got = mnist_synth::generate(256, 4, 2).unwrap();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn network_run_matches_python_oracle() {
+    let Some(g) = golden() else { return };
+    let neurons = 64;
+    let layers = 6;
+    let k = 4;
+    let batch = 12;
+    let net = RadixNet::new(neurons, layers, k, Topology::Butterfly, 0x5BD1).unwrap();
+    let bias = vec![-0.3f32; neurons];
+    let mut y = mnist_synth::generate_features(neurons, batch, 11).unwrap();
+    let engine = EllEngine::new(1);
+    let mut scratch = vec![0f32; y.len()];
+    for l in 0..layers {
+        let w = net.layer_ell(l);
+        engine.layer(&w, &bias, &y, &mut scratch);
+        std::mem::swap(&mut y, &mut scratch);
+    }
+
+    let want_sum = g.req_f64("net_n64_l6_final_sum").unwrap();
+    let got_sum: f64 = y.iter().map(|&v| v as f64).sum();
+    assert!((got_sum - want_sum).abs() < 1e-2 * want_sum.abs().max(1.0), "{got_sum} vs {want_sum}");
+
+    let want_cats: Vec<usize> = g
+        .req_arr("net_n64_l6_categories")
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    let got_cats: Vec<usize> = (0..batch)
+        .filter(|&i| y[i * neurons..(i + 1) * neurons].iter().any(|&v| v > 0.0))
+        .collect();
+    assert_eq!(got_cats, want_cats);
+
+    let want_row: Vec<f64> =
+        g.req_arr("net_n64_l6_row0").unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+    for (a, b) in y[..neurons].iter().zip(&want_row) {
+        assert!((*a as f64 - b).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,119 @@
+//! Integration: the AOT HLO artifacts actually load, compile and execute
+//! through the PJRT CPU client, and their numerics match the native
+//! engines — the end-to-end proof of the three-layer architecture.
+//!
+//! Needs `make artifacts` (skips with a notice otherwise).
+
+use std::path::PathBuf;
+
+use spdnn::engine::EllEngine;
+use spdnn::formats::EllMatrix;
+use spdnn::radixnet::{RadixNet, Topology};
+use spdnn::runtime::{Kind, LayerLiterals, Manifest, PjrtBackend};
+use spdnn::util::prng::Xoshiro256;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts` first");
+        None
+    }
+}
+
+/// Toy problem matching the layer_toy_n64_c8 artifact.
+fn toy_problem(seed: u64) -> (EllMatrix, Vec<f32>, Vec<f32>) {
+    let net = RadixNet::new(64, 1, 4, Topology::Random, seed).unwrap();
+    let mut w = net.layer_ell(0);
+    let mut rng = Xoshiro256::new(seed ^ 0xF00D);
+    for v in w.value.iter_mut() {
+        *v = rng.next_range_f32(-0.4, 0.4);
+    }
+    let bias: Vec<f32> = (0..64).map(|_| rng.next_range_f32(-0.2, 0.05)).collect();
+    let y: Vec<f32> = (0..8 * 64).map(|_| if rng.next_f32() < 0.3 { 1.0 } else { 0.0 }).collect();
+    (w, bias, y)
+}
+
+#[test]
+fn toy_artifact_matches_native_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let artifact = manifest
+        .artifacts
+        .iter()
+        .find(|a| a.kind == Kind::LayerToy)
+        .expect("toy artifact present");
+    let backend = PjrtBackend::cpu().unwrap();
+    let exe = backend.compile(artifact).unwrap();
+
+    for seed in [1u64, 2, 3] {
+        let (w, bias, y) = toy_problem(seed);
+        let lits = LayerLiterals::new(&w.index, &w.value, &bias, 64, 4).unwrap();
+        let out = exe.run(&y, &lits).unwrap();
+
+        let mut want = vec![0.0f32; y.len()];
+        EllEngine::new(1).layer(&w, &bias, &y, &mut want);
+        assert_eq!(out.y_next.len(), want.len());
+        for (i, (a, b)) in out.y_next.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-4, "seed {seed} elem {i}: pjrt {a} vs native {b}");
+        }
+        // Activity flags agree with the panel contents.
+        for f in 0..8 {
+            let any = want[f * 64..(f + 1) * 64].iter().any(|&v| v > 0.0);
+            assert_eq!(out.active[f] != 0, any, "seed {seed} feature {f}");
+        }
+    }
+}
+
+#[test]
+fn short_panel_is_zero_padded() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let artifact = manifest.artifacts.iter().find(|a| a.kind == Kind::LayerToy).unwrap();
+    let backend = PjrtBackend::cpu().unwrap();
+    let exe = backend.compile(artifact).unwrap();
+
+    let (w, bias, y) = toy_problem(9);
+    let lits = LayerLiterals::new(&w.index, &w.value, &bias, 64, 4).unwrap();
+    // Only 3 of 8 capacity rows provided.
+    let out = exe.run(&y[..3 * 64], &lits).unwrap();
+    let mut want = vec![0.0f32; 3 * 64];
+    EllEngine::new(1).layer(&w, &bias, &y[..3 * 64], &mut want);
+    for (a, b) in out.y_next[..3 * 64].iter().zip(&want) {
+        assert!((a - b).abs() < 1e-4);
+    }
+    // Padded rows: bias is negative so activations and flags are zero.
+    assert!(out.y_next[3 * 64..].iter().all(|&v| v >= 0.0));
+    assert!(out.active[3..].iter().all(|&f| f == 0 || bias.iter().any(|&b| b > 0.0)));
+}
+
+#[test]
+fn run_rejects_bad_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let artifact = manifest.artifacts.iter().find(|a| a.kind == Kind::LayerToy).unwrap();
+    let backend = PjrtBackend::cpu().unwrap();
+    let exe = backend.compile(artifact).unwrap();
+    let (w, bias, y) = toy_problem(4);
+    let lits = LayerLiterals::new(&w.index, &w.value, &bias, 64, 4).unwrap();
+    // Oversized panel.
+    let big = vec![0.0f32; 9 * 64];
+    assert!(exe.run(&big, &lits).is_err());
+    // Non-multiple of neurons.
+    assert!(exe.run(&y[..65], &lits).is_err());
+    // Mismatched weights.
+    let bad = LayerLiterals::new(&w.index[..32 * 4], &w.value[..32 * 4], &bias[..32], 32, 4).unwrap();
+    assert!(exe.run(&y, &bad).is_err());
+}
+
+#[test]
+fn manifest_loads_real_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    assert_eq!(manifest.relu_cap, 32.0);
+    assert!(!manifest.capacity_ladder(1024).is_empty());
+    for a in &manifest.artifacts {
+        assert!(a.path.exists(), "{} missing", a.path.display());
+    }
+}

@@ -1,0 +1,92 @@
+//! Integration: serving mode over the PJRT backend + failure injection.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use spdnn::coordinator::batcher::{BatchPolicy, InferenceServer, ServeBackend, ServedModel};
+use spdnn::data::Dataset;
+use spdnn::util::config::RuntimeConfig;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+        None
+    }
+}
+
+fn model() -> (ServedModel, Dataset) {
+    let cfg = RuntimeConfig { neurons: 64, layers: 4, k: 4, batch: 12, ..Default::default() };
+    let ds = Dataset::generate(&cfg).unwrap();
+    (
+        ServedModel {
+            layers: Arc::new(ds.layers.clone()),
+            bias: ds.bias.clone(),
+            neurons: 64,
+            k: 4,
+        },
+        ds,
+    )
+}
+
+#[test]
+fn pjrt_server_matches_offline_truth() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (m, ds) = model();
+    let server = InferenceServer::start(
+        m,
+        ServeBackend::Pjrt { artifacts: dir },
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
+    );
+    for i in 0..ds.cfg.batch {
+        let feats = ds.features[i * 64..(i + 1) * 64].to_vec();
+        let resp = server.classify(feats).unwrap();
+        assert_eq!(resp.active, ds.truth_categories.contains(&i), "feature {i}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn pjrt_server_backend_failure_is_reported_not_hung() {
+    // Nonexistent artifacts directory: every request must get an error
+    // (not a hang, not a panic).
+    let (m, ds) = model();
+    let server = InferenceServer::start(
+        m,
+        ServeBackend::Pjrt { artifacts: PathBuf::from("/nonexistent/artifacts") },
+        BatchPolicy::default(),
+    );
+    let err = server.classify(ds.features[..64].to_vec());
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("backend init failed"), "{msg}");
+    server.shutdown();
+}
+
+#[test]
+fn server_survives_many_concurrent_clients() {
+    let (m, ds) = model();
+    let server = Arc::new(InferenceServer::start(
+        m,
+        ServeBackend::Native { threads: 1, minibatch: 12 },
+        BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
+    ));
+    let ds = Arc::new(ds);
+    std::thread::scope(|scope| {
+        for t in 0..4 {
+            let server = server.clone();
+            let ds = ds.clone();
+            scope.spawn(move || {
+                for i in 0..20 {
+                    let f = (t * 7 + i) % ds.cfg.batch;
+                    let feats = ds.features[f * 64..(f + 1) * 64].to_vec();
+                    let resp = server.classify(feats).unwrap();
+                    assert_eq!(resp.active, ds.truth_categories.contains(&f));
+                }
+            });
+        }
+    });
+}
