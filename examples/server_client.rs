@@ -1,0 +1,148 @@
+//! Closed-loop client sweep against the network serving subsystem.
+//!
+//!   cargo run --release --example server_client [-- --replicas 4 --requests 480]
+//!
+//! Starts a real `spdnn::server` instance on a loopback port, then drives
+//! it with 1/2/4/8 concurrent TCP clients, each running a closed loop
+//! (send, wait, send) over the JSON-lines protocol with retry-on-shed.
+//! Prints the throughput/latency frontier, the server's own `/stats`
+//! view (per-replica routing + imbalance), and finishes with a graceful
+//! remote shutdown — the serving-side analog of scaling_study.rs.
+
+use std::time::{Duration, Instant};
+
+use spdnn::coordinator::batcher::{BatchPolicy, ServeBackend, ServedModel};
+use spdnn::data::Dataset;
+use spdnn::server::{
+    AdmissionConfig, Client, ReferencePanel, Request, Server, ServerConfig, WireResponse,
+};
+use spdnn::util::cli::Args;
+use spdnn::util::config::RuntimeConfig;
+use spdnn::util::stats::Summary;
+use spdnn::util::table::{fmt_secs, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let replicas = args.usize_or("replicas", 2)?;
+    let requests = args.usize_or("requests", 240)?; // per concurrency level
+    let neurons = args.usize_or("neurons", 1024)?;
+    let layers = args.usize_or("layers", 12)?;
+    args.finish()?;
+
+    let cfg = RuntimeConfig {
+        neurons,
+        layers,
+        k: 32.min(neurons),
+        batch: 96,
+        ..Default::default()
+    };
+    let rows = cfg.batch;
+    let ds = Dataset::generate(&cfg)?;
+    let model = ServedModel::from_dataset(&ds);
+    let server_cfg = ServerConfig {
+        replicas,
+        policy: BatchPolicy { max_batch: 24, max_wait: Duration::from_millis(2) },
+        admission: AdmissionConfig {
+            queue_cap: 64,
+            deadline: Duration::from_secs(2),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let reference = ReferencePanel { features: ds.features.clone(), neurons: cfg.neurons };
+    let handle = Server::start(
+        server_cfg,
+        model,
+        ServeBackend::Native { threads: 1, minibatch: 12 },
+        Some(reference),
+    )?;
+    let addr = handle.addr();
+    println!("server: {addr} — {replicas} replicas, {}x{} model", cfg.neurons, cfg.layers);
+
+    let mut table = Table::new(
+        "Closed-loop client sweep (JSON-lines over TCP)",
+        &["clients", "req/s", "p50", "p95", "shed retries"],
+    );
+    for clients in [1usize, 2, 4, 8] {
+        let per_client = (requests / clients).max(1);
+        let t0 = Instant::now();
+        let mut all_lat: Vec<f64> = Vec::new();
+        let mut sheds = 0u64;
+        std::thread::scope(|scope| -> anyhow::Result<()> {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    scope.spawn(move || -> anyhow::Result<(Vec<f64>, u64)> {
+                        let mut client = Client::connect(addr)?;
+                        let mut lat = Vec::with_capacity(per_client);
+                        let mut shed = 0u64;
+                        for i in 0..per_client {
+                            let row = (c * 31 + i) % rows;
+                            let t = Instant::now();
+                            loop {
+                                match client.call(&Request::infer_row(row))? {
+                                    WireResponse::Infer { .. } => break,
+                                    WireResponse::Shed { reason, .. } if reason == "draining" => {
+                                        anyhow::bail!("server is draining; giving up");
+                                    }
+                                    WireResponse::Shed { retry_after_ms, .. } => {
+                                        shed += 1;
+                                        std::thread::sleep(Duration::from_secs_f64(
+                                            (retry_after_ms / 1e3).max(1e-4),
+                                        ));
+                                    }
+                                    other => anyhow::bail!("unexpected response: {other:?}"),
+                                }
+                            }
+                            lat.push(t.elapsed().as_secs_f64());
+                        }
+                        Ok((lat, shed))
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (lat, shed) = h.join().expect("client thread")?;
+                all_lat.extend(lat);
+                sheds += shed;
+            }
+            Ok(())
+        })?;
+        let total = t0.elapsed().as_secs_f64();
+        let s = Summary::of(&all_lat).expect("latency samples");
+        table.row(vec![
+            clients.to_string(),
+            format!("{:.0}", all_lat.len() as f64 / total),
+            fmt_secs(s.p50),
+            fmt_secs(s.p95),
+            sheds.to_string(),
+        ]);
+    }
+    table.print();
+
+    // The server's own view, over the same wire.
+    let mut client = Client::connect(addr)?;
+    if let WireResponse::Stats(stats) = client.call(&Request::Stats)? {
+        println!("\nserver stats:");
+        println!("  requests   {}", stats.req_usize("requests")?);
+        println!("  shed       {}", stats.req_usize("shed")?);
+        println!("  imbalance  {:.3}", stats.req_f64("imbalance")?);
+        if let Some(l) = stats.get("latency_ms") {
+            println!("  p50/p95    {:.2}ms / {:.2}ms", l.req_f64("p50")?, l.req_f64("p95")?);
+        }
+        for r in stats.req_arr("replicas")? {
+            println!(
+                "  replica {}  routed {}",
+                r.req_usize("replica")?,
+                r.req_usize("routed")?
+            );
+        }
+    }
+
+    let ack = client.call(&Request::Shutdown)?;
+    println!("\nshutdown acknowledged: {ack:?}");
+    let report = handle.wait();
+    println!(
+        "drained={} requests={} errors={} shed={}",
+        report.drained, report.requests, report.errors, report.shed
+    );
+    Ok(())
+}

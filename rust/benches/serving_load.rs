@@ -1,0 +1,120 @@
+//! Serving load bench: replica count × batch policy sweep through the
+//! serving core (router + batcher replicas; no TCP so the numbers are
+//! about the serving machinery, not loopback sockets).
+//!
+//! Eight closed-loop clients drive each configuration; the sweep prints
+//! the throughput/latency frontier and writes `BENCH_serving.json` so the
+//! perf trajectory of the serving path is tracked PR over PR.
+//!
+//! Usage: cargo bench --bench serving_load
+//! Scale with SPDNN_BENCH_ITERS (requests per client, default 40).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use spdnn::coordinator::batcher::{BatchPolicy, ServeBackend, ServedModel};
+use spdnn::data::Dataset;
+use spdnn::server::ReplicaRouter;
+use spdnn::util::config::RuntimeConfig;
+use spdnn::util::json::Json;
+use spdnn::util::stats::Summary;
+use spdnn::util::table::{fmt_secs, Table};
+
+fn main() -> anyhow::Result<()> {
+    let requests_per_client: usize = std::env::var("SPDNN_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+    let clients = 8usize;
+
+    let cfg = RuntimeConfig { neurons: 1024, layers: 12, k: 32, batch: 96, ..Default::default() };
+    let rows = cfg.batch;
+    let neurons = cfg.neurons;
+    let ds = Dataset::generate(&cfg)?;
+    let features = &ds.features;
+    let model = ServedModel::from_dataset(&ds);
+
+    let policies: [(usize, f64); 3] = [(1, 0.0), (8, 1.0), (48, 2.0)];
+    let replica_counts = [1usize, 2, 4];
+
+    let mut table = Table::new(
+        "Serving load: replicas x batch policy (8 closed-loop clients)",
+        &["replicas", "max_batch", "max_wait", "req/s", "p50", "p95", "imbalance"],
+    );
+    let mut results: Vec<Json> = Vec::new();
+    for &replicas in &replica_counts {
+        for &(max_batch, wait_ms) in &policies {
+            let policy =
+                BatchPolicy { max_batch, max_wait: Duration::from_secs_f64(wait_ms / 1e3) };
+            let router = Arc::new(ReplicaRouter::start(
+                model.clone(),
+                ServeBackend::Native { threads: 1, minibatch: 12 },
+                policy,
+                replicas,
+            )?);
+            let t0 = Instant::now();
+            let mut all_lat: Vec<f64> = Vec::new();
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..clients)
+                    .map(|c| {
+                        let router = router.clone();
+                        scope.spawn(move || {
+                            let mut lat = Vec::with_capacity(requests_per_client);
+                            for i in 0..requests_per_client {
+                                let row = (c * 13 + i) % rows;
+                                let feats =
+                                    features[row * neurons..(row + 1) * neurons].to_vec();
+                                let t = Instant::now();
+                                router.classify(feats).expect("classify");
+                                lat.push(t.elapsed().as_secs_f64());
+                            }
+                            lat
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    all_lat.extend(h.join().expect("client thread"));
+                }
+            });
+            let total = t0.elapsed().as_secs_f64();
+            let s = Summary::of(&all_lat).expect("latency samples");
+            let req_per_sec = all_lat.len() as f64 / total;
+            let imbalance = router.imbalance();
+            table.row(vec![
+                replicas.to_string(),
+                max_batch.to_string(),
+                format!("{wait_ms}ms"),
+                format!("{req_per_sec:.0}"),
+                fmt_secs(s.p50),
+                fmt_secs(s.p95),
+                format!("{imbalance:.3}"),
+            ]);
+            results.push(Json::obj(vec![
+                ("replicas", Json::Int(replicas as i64)),
+                ("max_batch", Json::Int(max_batch as i64)),
+                ("max_wait_ms", Json::Num(wait_ms)),
+                ("req_per_sec", Json::Num(req_per_sec)),
+                ("p50_ms", Json::Num(s.p50 * 1e3)),
+                ("p95_ms", Json::Num(s.p95 * 1e3)),
+                ("imbalance", Json::Num(imbalance)),
+            ]));
+            if let Ok(router) = Arc::try_unwrap(router) {
+                router.shutdown();
+            }
+        }
+    }
+    table.print();
+
+    let ncases = results.len();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("serving_load".into())),
+        ("neurons", Json::Int(cfg.neurons as i64)),
+        ("layers", Json::Int(cfg.layers as i64)),
+        ("clients", Json::Int(clients as i64)),
+        ("requests_per_client", Json::Int(requests_per_client as i64)),
+        ("results", Json::Arr(results)),
+    ]);
+    std::fs::write("BENCH_serving.json", format!("{doc}\n"))?;
+    println!("wrote BENCH_serving.json ({ncases} cases)");
+    Ok(())
+}

@@ -53,6 +53,19 @@ pub struct ServedModel {
     pub k: usize,
 }
 
+impl ServedModel {
+    /// Serve a generated/loaded challenge instance (weights go behind one
+    /// `Arc`, so replicas share rather than copy them).
+    pub fn from_dataset(ds: &crate::data::Dataset) -> ServedModel {
+        ServedModel {
+            layers: Arc::new(ds.layers.clone()),
+            bias: ds.bias.clone(),
+            neurons: ds.cfg.neurons,
+            k: ds.cfg.k,
+        }
+    }
+}
+
 /// Response to one classification request.
 #[derive(Clone, Debug)]
 pub struct Response {

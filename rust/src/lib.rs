@@ -24,5 +24,6 @@ pub mod engine;
 pub mod formats;
 pub mod radixnet;
 pub mod runtime;
+pub mod server;
 pub mod simulator;
 pub mod util;

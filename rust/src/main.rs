@@ -3,7 +3,9 @@
 //! Subcommands:
 //!   gen-data   generate a challenge instance (weights + features) to disk
 //!   infer      run one full inference pass, report TeraEdges/s, validate
-//!   serve      run the dynamic-batching server over a synthetic workload
+//!   serve      network-facing serving: sharded replicas + admission
+//!              control behind a TCP JSON-lines protocol
+//!   serve-demo run the dynamic-batching server over a synthetic workload
 //!   simulate   at-scale Summit simulation (Table I columns)
 //!   info       show the artifact manifest and resolved configuration
 //!
@@ -19,6 +21,7 @@ use spdnn::coordinator::batcher::{BatchPolicy, InferenceServer, ServeBackend, Se
 use spdnn::coordinator::{run_inference, validate, Backend, RunOptions};
 use spdnn::data::Dataset;
 use spdnn::runtime::Manifest;
+use spdnn::server::{AdmissionConfig, ReferencePanel, Server, ServerConfig};
 use spdnn::simulator::gpu_model::{a100, v100, KernelParams};
 use spdnn::simulator::network::summit;
 use spdnn::simulator::scaling::{ScalingSim, CHALLENGE_BATCH};
@@ -47,6 +50,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("gen-data") => cmd_gen_data(args),
         Some("infer") => cmd_infer(args),
         Some("serve") => cmd_serve(args),
+        Some("serve-demo") => cmd_serve_demo(args),
         Some("simulate") => cmd_simulate(args),
         Some("info") => cmd_info(args),
         Some("help") | None => {
@@ -60,10 +64,12 @@ fn dispatch(args: &Args) -> Result<()> {
 fn print_help() {
     println!(
         "spdnn — at-scale sparse DNN inference (HPEC 2020 reproduction)\n\n\
-         USAGE: spdnn <gen-data|infer|serve|simulate|info> [flags]\n\n\
+         USAGE: spdnn <gen-data|infer|serve|serve-demo|simulate|info> [flags]\n\n\
          Model:   --neurons N --layers L --k K --topology butterfly|random --seed S\n\
          Runtime: --batch B --workers W --minibatch MB --no-prune\n\
          Backend: --backend native|pjrt --artifacts DIR --threads T\n\
+         Serve:   --host H --port P --replicas R --max-batch B --max-wait-ms MS\n\
+                  --queue-cap N --deadline-ms MS\n\
          IO:      --config FILE --data DIR --stream\n\
          Sim:     --gpus LIST --gpu v100|a100"
     );
@@ -105,6 +111,30 @@ fn run_options(args: &Args) -> Result<RunOptions> {
         None
     };
     Ok(RunOptions { backend, stream_from, native_threads: args.usize_or("threads", 1)? })
+}
+
+/// Parse a `--key` millisecond flag into a Duration, rejecting negative,
+/// NaN and infinite values (`Duration::from_secs_f64` would panic).
+fn duration_ms_arg(args: &Args, key: &str, default_ms: f64) -> Result<std::time::Duration> {
+    let ms = args.f64_or(key, default_ms)?;
+    if !ms.is_finite() || ms < 0.0 {
+        bail!("--{key} must be a non-negative number of milliseconds, got {ms}");
+    }
+    Ok(std::time::Duration::from_secs_f64(ms / 1e3))
+}
+
+/// Shared `--backend native|pjrt` parsing for the serving subcommands.
+fn serve_backend(args: &Args, cfg: &RuntimeConfig) -> Result<ServeBackend> {
+    match args.get_or("backend", "native") {
+        "native" => Ok(ServeBackend::Native {
+            threads: args.usize_or("threads", 1)?,
+            minibatch: cfg.minibatch,
+        }),
+        "pjrt" => Ok(ServeBackend::Pjrt {
+            artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")),
+        }),
+        other => bail!("unknown backend {other:?}"),
+    }
 }
 
 fn cmd_gen_data(args: &Args) -> Result<()> {
@@ -168,32 +198,71 @@ fn cmd_infer(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = runtime_config(args)?;
+    let host = args.get_or("host", "127.0.0.1").to_string();
+    let port_raw = args.usize_or("port", 7878)?;
+    let port = u16::try_from(port_raw)
+        .map_err(|_| anyhow::anyhow!("--port {port_raw} is out of range (0-65535)"))?;
+    let replicas = args.usize_or("replicas", 2)?;
+    let max_batch = args.usize_or("max-batch", 48)?;
+    let max_wait = duration_ms_arg(args, "max-wait-ms", 2.0)?;
+    let queue_cap = args.usize_or("queue-cap", 256)?;
+    let deadline = duration_ms_arg(args, "deadline-ms", 250.0)?;
+    let backend = serve_backend(args, &cfg)?;
+    args.finish()?;
+
+    // The synthetic challenge instance doubles as the reference dataset
+    // clients can address by row ({"op":"infer","row":N}).
+    let ds = Dataset::generate(&cfg)?;
+    let model = ServedModel::from_dataset(&ds);
+    let server_cfg = ServerConfig {
+        host,
+        port,
+        replicas,
+        policy: BatchPolicy { max_batch, max_wait },
+        admission: AdmissionConfig { queue_cap, deadline, ..Default::default() },
+        ..Default::default()
+    };
+    let reference = ReferencePanel { features: ds.features.clone(), neurons: cfg.neurons };
+    let handle = Server::start(server_cfg, model, backend, Some(reference))?;
+
+    println!(
+        "spdnn server on {} — {} replicas, model {}x{} k={}, {} reference rows",
+        handle.addr(),
+        replicas,
+        cfg.neurons,
+        cfg.layers,
+        cfg.k,
+        cfg.batch
+    );
+    println!(
+        "protocol: JSON lines, e.g.  {{\"op\":\"infer\",\"row\":0}}  {{\"op\":\"stats\"}}  \
+         {{\"op\":\"shutdown\"}}"
+    );
+    let report = handle.wait();
+    println!(
+        "shutdown: drained={} requests={} errors={} shed={}",
+        report.drained, report.requests, report.errors, report.shed
+    );
+    Ok(())
+}
+
+fn cmd_serve_demo(args: &Args) -> Result<()> {
+    let cfg = runtime_config(args)?;
     let requests = args.usize_or("requests", 200)?;
     let max_batch = args.usize_or("max-batch", 48)?;
-    let max_wait_ms = args.f64_or("max-wait-ms", 2.0)?;
-    let backend = match args.get_or("backend", "native") {
-        "native" => {
-            ServeBackend::Native { threads: args.usize_or("threads", 1)?, minibatch: cfg.minibatch }
-        }
-        "pjrt" => {
-            ServeBackend::Pjrt { artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")) }
-        }
-        other => bail!("unknown backend {other:?}"),
-    };
+    let max_wait = duration_ms_arg(args, "max-wait-ms", 2.0)?;
+    let backend = serve_backend(args, &cfg)?;
     args.finish()?;
 
     let ds = Dataset::generate(&cfg)?;
-    let model = ServedModel {
-        layers: std::sync::Arc::new(ds.layers.clone()),
-        bias: ds.bias.clone(),
-        neurons: cfg.neurons,
-        k: cfg.k,
-    };
-    let policy =
-        BatchPolicy { max_batch, max_wait: std::time::Duration::from_secs_f64(max_wait_ms / 1e3) };
+    let model = ServedModel::from_dataset(&ds);
+    let policy = BatchPolicy { max_batch, max_wait };
     let server = InferenceServer::start(model, backend, policy);
 
-    println!("serving {requests} requests (max_batch={max_batch}, max_wait={max_wait_ms}ms)...");
+    println!(
+        "serving {requests} requests (max_batch={max_batch}, max_wait={:.1}ms)...",
+        max_wait.as_secs_f64() * 1e3
+    );
     let t = std::time::Instant::now();
     let rxs: Vec<_> = (0..requests)
         .map(|i| {

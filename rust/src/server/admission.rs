@@ -1,0 +1,347 @@
+//! Admission control: a bounded in-flight queue with backpressure,
+//! per-request deadlines and load shedding.
+//!
+//! At scale the batcher's unbounded mpsc queue is the failure mode: under
+//! sustained overload every request is eventually answered, all of them
+//! late. The admission controller bounds the number of requests in flight
+//! and sheds load *early* — a request is rejected up front (with a
+//! retry-after hint) when the queue is full or when the queued work
+//! ahead of it × the EWMA service-time estimate already exceeds its
+//! deadline, so clients get fast, honest backpressure instead of slow
+//! timeouts.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// EWMA weight for new service-time observations.
+const ALPHA: f64 = 0.2;
+
+/// Floor on the retry-after hint handed to shed clients.
+const MIN_RETRY: Duration = Duration::from_millis(1);
+
+/// Admission policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Hard cap on requests in flight (admitted but not yet answered).
+    pub queue_cap: usize,
+    /// Default per-request deadline (queue wait + service); requests may
+    /// override it with a `deadline_ms` field.
+    pub deadline: Duration,
+    /// Seed for the service-time estimate before any request completes.
+    pub initial_estimate: Duration,
+    /// How many queued requests the backend retires per service time
+    /// (replicas × panel size for the batcher). The predicted wait is
+    /// `est × ceil(depth / concurrency)` — modelling the queue as
+    /// draining in panels, not serially. 0 = let the server derive it.
+    pub concurrency: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            queue_cap: 256,
+            deadline: Duration::from_millis(250),
+            initial_estimate: Duration::from_micros(500),
+            concurrency: 0,
+        }
+    }
+}
+
+/// Why a request was turned away.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Rejection {
+    /// The in-flight queue is at capacity.
+    QueueFull { depth: usize, retry_after: Duration },
+    /// Depth × service estimate already exceeds the request's deadline.
+    Deadline { predicted: Duration, deadline: Duration, retry_after: Duration },
+    /// The server is draining for shutdown.
+    Draining,
+}
+
+impl Rejection {
+    pub fn reason(&self) -> &'static str {
+        match self {
+            Rejection::QueueFull { .. } => "queue full",
+            Rejection::Deadline { .. } => "deadline unmeetable",
+            Rejection::Draining => "draining",
+        }
+    }
+
+    /// Suggested client backoff before retrying (zero while draining:
+    /// this server will not come back).
+    pub fn retry_after(&self) -> Duration {
+        match self {
+            Rejection::QueueFull { retry_after, .. } => *retry_after,
+            Rejection::Deadline { retry_after, .. } => *retry_after,
+            Rejection::Draining => Duration::ZERO,
+        }
+    }
+}
+
+/// Shared admission state; one per server, touched by every connection
+/// thread, so everything is atomics.
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    depth: AtomicUsize,
+    draining: AtomicBool,
+    admitted: AtomicU64,
+    shed: AtomicU64,
+    /// EWMA of per-request service seconds, stored as f64 bits.
+    est_bits: AtomicU64,
+}
+
+impl AdmissionController {
+    pub fn new(mut cfg: AdmissionConfig) -> AdmissionController {
+        cfg.concurrency = cfg.concurrency.max(1);
+        let est = cfg.initial_estimate.as_secs_f64().max(1e-9);
+        AdmissionController {
+            cfg,
+            depth: AtomicUsize::new(0),
+            draining: AtomicBool::new(false),
+            admitted: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            est_bits: AtomicU64::new(est.to_bits()),
+        }
+    }
+
+    /// Current EWMA estimate of one request's service time.
+    pub fn service_estimate(&self) -> Duration {
+        Duration::from_secs_f64(f64::from_bits(self.est_bits.load(Ordering::Acquire)))
+    }
+
+    /// Requests currently in flight.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
+    }
+
+    pub fn queue_cap(&self) -> usize {
+        self.cfg.queue_cap
+    }
+
+    pub fn default_deadline(&self) -> Duration {
+        self.cfg.deadline
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Reject all new work from now on (graceful shutdown).
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// Try to admit one request. On success the returned [`Ticket`] holds
+    /// a queue slot until it is completed (or dropped). Associated
+    /// function (not a method) because the ticket keeps its own `Arc` to
+    /// the controller — slots can outlive the admitting connection (e.g.
+    /// a reaper waiting out a timed-out request).
+    pub fn try_admit(
+        ctl: &Arc<AdmissionController>,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket, Rejection> {
+        if ctl.is_draining() {
+            ctl.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(Rejection::Draining);
+        }
+        let deadline = deadline.unwrap_or(ctl.cfg.deadline);
+        let est = ctl.service_estimate();
+        loop {
+            let d = ctl.depth.load(Ordering::Acquire);
+            if d >= ctl.cfg.queue_cap {
+                ctl.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(Rejection::QueueFull { depth: d, retry_after: est.max(MIN_RETRY) });
+            }
+            // The queue ahead of us drains in waves of `concurrency`
+            // requests per service time (the batcher answers a whole
+            // panel at once); shed now if the predicted wait alone blows
+            // the deadline. At depth 0 there is no queue, predicted is
+            // zero and the request is always admitted — which also
+            // guarantees the estimator keeps getting observations so an
+            // inflated estimate can decay after an overload episode.
+            let waves = d.div_ceil(ctl.cfg.concurrency);
+            let predicted = est.mul_f64(waves as f64);
+            if predicted > deadline {
+                ctl.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(Rejection::Deadline {
+                    predicted,
+                    deadline,
+                    retry_after: (predicted - deadline).max(MIN_RETRY),
+                });
+            }
+            if ctl
+                .depth
+                .compare_exchange(d, d + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                break;
+            }
+        }
+        ctl.admitted.fetch_add(1, Ordering::Relaxed);
+        Ok(Ticket { ctl: Arc::clone(ctl), released: false })
+    }
+
+    /// Fold one observed service time into the EWMA estimate.
+    fn observe(&self, service: Duration) {
+        let s = service.as_secs_f64();
+        if !s.is_finite() || s <= 0.0 {
+            return;
+        }
+        let _ = self.est_bits.fetch_update(Ordering::AcqRel, Ordering::Acquire, |bits| {
+            let old = f64::from_bits(bits);
+            Some((old + ALPHA * (s - old)).to_bits())
+        });
+    }
+}
+
+/// RAII queue slot (owns an `Arc` to the controller, so it can travel to
+/// a reaper thread). `complete` feeds the observed service time back
+/// into the estimator; merely dropping the ticket (error paths) releases
+/// the slot without biasing the estimate.
+pub struct Ticket {
+    ctl: Arc<AdmissionController>,
+    released: bool,
+}
+
+impl Ticket {
+    /// Mark the request answered after `service` wall time.
+    pub fn complete(mut self, service: Duration) {
+        self.ctl.observe(service);
+        self.release();
+    }
+
+    fn release(&mut self) {
+        if !self.released {
+            self.released = true;
+            self.ctl.depth.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(cfg: AdmissionConfig) -> Arc<AdmissionController> {
+        Arc::new(AdmissionController::new(cfg))
+    }
+
+    fn lenient() -> AdmissionConfig {
+        AdmissionConfig {
+            queue_cap: 2,
+            deadline: Duration::from_secs(3600),
+            initial_estimate: Duration::from_micros(1),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn queue_cap_enforced_and_released() {
+        let a = ctl(lenient());
+        let t1 = AdmissionController::try_admit(&a, None).unwrap();
+        let _t2 = AdmissionController::try_admit(&a, None).unwrap();
+        assert_eq!(a.depth(), 2);
+        match AdmissionController::try_admit(&a, None) {
+            Err(Rejection::QueueFull { depth, retry_after }) => {
+                assert_eq!(depth, 2);
+                assert!(retry_after >= Duration::from_millis(1));
+            }
+            other => panic!("expected QueueFull, got {other:?}", other = other.err()),
+        }
+        assert_eq!(a.shed(), 1);
+        t1.complete(Duration::from_micros(5));
+        assert_eq!(a.depth(), 1);
+        let _t3 = AdmissionController::try_admit(&a, None).unwrap();
+        assert_eq!(a.admitted(), 3);
+    }
+
+    #[test]
+    fn deadline_sheds_when_queue_wait_predicted_too_long() {
+        let a = ctl(AdmissionConfig {
+            queue_cap: 100,
+            deadline: Duration::from_millis(150),
+            initial_estimate: Duration::from_millis(200),
+            concurrency: 1,
+        });
+        // depth 0 -> no queue ahead: always admitted, even though one
+        // service time (200ms) exceeds the deadline.
+        let _t = AdmissionController::try_admit(&a, None).unwrap();
+        // depth 1 -> 200ms of queue ahead > 150ms deadline: shed.
+        match AdmissionController::try_admit(&a, None) {
+            Err(Rejection::Deadline { predicted, deadline, retry_after }) => {
+                assert_eq!(predicted, Duration::from_millis(200));
+                assert_eq!(deadline, Duration::from_millis(150));
+                assert_eq!(retry_after, Duration::from_millis(50));
+            }
+            other => panic!("expected Deadline, got {other:?}", other = other.err()),
+        }
+        // A per-request deadline above the predicted wait still gets in.
+        let _t2 = AdmissionController::try_admit(&a, Some(Duration::from_secs(1))).unwrap();
+    }
+
+    #[test]
+    fn concurrency_drains_queue_in_waves() {
+        // A batcher retiring 10 requests per panel: 10 queued requests
+        // are one wave of wait (100ms <= 150ms deadline), 20 are two
+        // (200ms > 150ms -> shed).
+        let a = ctl(AdmissionConfig {
+            queue_cap: 100,
+            deadline: Duration::from_millis(150),
+            initial_estimate: Duration::from_millis(100),
+            concurrency: 10,
+        });
+        let generous = Some(Duration::from_secs(10));
+        let _first: Vec<_> = (0..10).map(|_| AdmissionController::try_admit(&a, generous).unwrap()).collect();
+        let t = AdmissionController::try_admit(&a, None).unwrap(); // depth 10 -> 1 wave -> 100ms, fits
+        drop(t);
+        let _second: Vec<_> = (0..10).map(|_| AdmissionController::try_admit(&a, generous).unwrap()).collect();
+        assert!(matches!(AdmissionController::try_admit(&a, None), Err(Rejection::Deadline { .. })));
+    }
+
+    #[test]
+    fn dropped_ticket_releases_slot() {
+        let a = ctl(lenient());
+        {
+            let _t = AdmissionController::try_admit(&a, None).unwrap();
+            assert_eq!(a.depth(), 1);
+        }
+        assert_eq!(a.depth(), 0);
+    }
+
+    #[test]
+    fn completion_moves_estimate() {
+        let a = ctl(lenient());
+        let before = a.service_estimate();
+        for _ in 0..20 {
+            let t = AdmissionController::try_admit(&a, None).unwrap();
+            t.complete(Duration::from_millis(10));
+        }
+        let after = a.service_estimate();
+        assert!(after > before);
+        assert!(after <= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn draining_rejects_everything() {
+        let a = ctl(lenient());
+        a.begin_drain();
+        assert!(matches!(AdmissionController::try_admit(&a, None), Err(Rejection::Draining)));
+        assert_eq!(Rejection::Draining.retry_after(), Duration::ZERO);
+        assert!(a.is_draining());
+    }
+}

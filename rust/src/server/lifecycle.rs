@@ -1,0 +1,434 @@
+//! Server lifecycle: bind, accept, serve, drain, shutdown.
+//!
+//! `Server::start` brings up the replica set and a non-blocking accept
+//! loop; each connection gets its own thread running the JSON-lines
+//! protocol. Shutdown is graceful by construction:
+//!
+//! 1. the stop flag halts the accept loop (the listener closes, new
+//!    connections are refused) and `begin_drain` makes admission reject
+//!    all new work with a `draining` shed;
+//! 2. in-flight requests keep their queue slots and are answered;
+//! 3. connection threads notice the stop flag at their next read-poll
+//!    and exit; dropping the last handle to the shared state tears the
+//!    replicas down (their batcher threads join on drop).
+//!
+//! A client can trigger the same sequence remotely with
+//! `{"op":"shutdown"}` — `ServerHandle::wait` (what the CLI sits in)
+//! returns once the drain completes.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::{BatchPolicy, ServeBackend, ServedModel};
+use crate::util::json::Json;
+
+use super::admission::{AdmissionConfig, AdmissionController};
+use super::protocol::{InferInput, InferRequest, Request, WireResponse};
+use super::router::ReplicaRouter;
+use super::stats::ServerStats;
+
+/// How often an idle connection read wakes up to check the stop flag.
+const READ_POLL: Duration = Duration::from_millis(100);
+/// Longest `shutdown`/`wait` blocks for in-flight requests to finish.
+const DRAIN_LIMIT: Duration = Duration::from_secs(10);
+/// Grace period for connection threads to notice the stop flag.
+const CONN_GRACE: Duration = Duration::from_secs(2);
+/// Hard cap on one buffered protocol line (a 65536-wide feature vector is
+/// ~1.5 MiB of JSON; a peer exceeding this is misbehaving).
+const MAX_LINE_BYTES: usize = 16 << 20;
+/// Longest a response write may block on a slow-reading client before the
+/// connection is dropped (otherwise a non-reading peer pins its thread
+/// through shutdown).
+const WRITE_LIMIT: Duration = Duration::from_secs(10);
+/// Longest a reaper waits for the batcher to finish a timed-out request
+/// before abandoning its queue slot.
+const REAP_LIMIT: Duration = Duration::from_secs(60);
+
+/// Everything `serve` needs beyond the model itself.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub host: String,
+    /// 0 = pick a free port (the bound address comes back on the handle).
+    pub port: u16,
+    /// Replica count (weights shared via `Arc`, features sharded).
+    pub replicas: usize,
+    pub policy: BatchPolicy,
+    pub admission: AdmissionConfig,
+    /// Latency samples kept for the /stats percentiles.
+    pub stats_window: usize,
+    /// Cap on concurrent connections (each costs one OS thread); above it
+    /// new connections get an error line and are closed immediately.
+    pub max_conns: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            host: "127.0.0.1".to_string(),
+            port: 0,
+            replicas: 2,
+            policy: BatchPolicy::default(),
+            admission: AdmissionConfig::default(),
+            stats_window: 4096,
+            max_conns: 1024,
+        }
+    }
+}
+
+/// Reference rows clients can address with `{"op":"infer","row":N}` —
+/// the wire protocol's "dataset handle" form.
+pub struct ReferencePanel {
+    /// `[rows, neurons]` row-major features.
+    pub features: Vec<f32>,
+    pub neurons: usize,
+}
+
+impl ReferencePanel {
+    pub fn rows(&self) -> usize {
+        if self.neurons == 0 {
+            0
+        } else {
+            self.features.len() / self.neurons
+        }
+    }
+
+    fn row(&self, i: usize) -> Option<Vec<f32>> {
+        (i < self.rows()).then(|| self.features[i * self.neurons..(i + 1) * self.neurons].to_vec())
+    }
+}
+
+/// State shared between the accept loop and every connection thread.
+struct Shared {
+    router: ReplicaRouter,
+    admission: Arc<AdmissionController>,
+    stats: ServerStats,
+    reference: Option<ReferencePanel>,
+    stop: AtomicBool,
+    conns: AtomicUsize,
+    max_conns: usize,
+}
+
+/// Namespace for [`Server::start`].
+pub struct Server;
+
+impl Server {
+    /// Bind, start the replicas and the accept loop; returns immediately.
+    pub fn start(
+        cfg: ServerConfig,
+        model: ServedModel,
+        backend: ServeBackend,
+        reference: Option<ReferencePanel>,
+    ) -> Result<ServerHandle> {
+        let router = ReplicaRouter::start(model, backend, cfg.policy, cfg.replicas)?;
+        let mut acfg = cfg.admission;
+        if acfg.concurrency == 0 {
+            // The batcher fleet retires up to replicas × panel size
+            // requests per service time; give admission that drain rate.
+            acfg.concurrency = (cfg.replicas * cfg.policy.max_batch.max(1)).max(1);
+        }
+        let admission = Arc::new(AdmissionController::new(acfg));
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+            .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            router,
+            admission,
+            stats: ServerStats::new(cfg.stats_window),
+            reference,
+            stop: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
+            max_conns: cfg.max_conns.max(1),
+        });
+        let accept = {
+            let shared = shared.clone();
+            std::thread::spawn(move || accept_loop(listener, shared))
+        };
+        Ok(ServerHandle { addr, shared, accept: Some(accept) })
+    }
+}
+
+/// What a graceful shutdown observed.
+#[derive(Clone, Debug)]
+pub struct ShutdownReport {
+    /// All admitted requests were answered before the drain limit.
+    pub drained: bool,
+    /// Inference requests processed (ok + error).
+    pub requests: u64,
+    pub errors: u64,
+    /// Requests rejected by admission control over the server's lifetime.
+    pub shed: u64,
+}
+
+/// Owner handle of a running server.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The actually-bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.admission.depth()
+    }
+
+    pub fn is_stopping(&self) -> bool {
+        self.shared.stop.load(Ordering::Acquire)
+    }
+
+    /// The same payload `{"op":"stats"}` returns, server-side.
+    pub fn stats_snapshot(&self) -> Json {
+        self.shared.stats.snapshot(&self.shared.admission, &self.shared.router)
+    }
+
+    /// Block until a client's shutdown op stops the accept loop, then
+    /// drain. The `serve` CLI subcommand sits in this call.
+    pub fn wait(mut self) -> ShutdownReport {
+        self.join_accept();
+        self.finish()
+    }
+
+    /// Initiate and complete a graceful shutdown from this side.
+    pub fn shutdown(mut self) -> ShutdownReport {
+        self.shared.admission.begin_drain();
+        self.shared.stop.store(true, Ordering::Release);
+        self.join_accept();
+        self.finish()
+    }
+
+    fn join_accept(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    fn finish(&self) -> ShutdownReport {
+        let t0 = Instant::now();
+        while self.shared.admission.depth() > 0 && t0.elapsed() < DRAIN_LIMIT {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let t1 = Instant::now();
+        while self.shared.conns.load(Ordering::Acquire) > 0 && t1.elapsed() < CONN_GRACE {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        ShutdownReport {
+            drained: self.shared.admission.depth() == 0,
+            requests: self.shared.stats.requests(),
+            errors: self.shared.stats.errors(),
+            shed: self.shared.admission.shed(),
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shared.admission.begin_drain();
+        self.shared.stop.store(true, Ordering::Release);
+        self.join_accept();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        if shared.stop.load(Ordering::Acquire) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // Admission bounds in-flight requests; this bounds the
+                // other resource — connections (one OS thread each).
+                if shared.conns.load(Ordering::Acquire) >= shared.max_conns {
+                    let mut stream = stream;
+                    let _ = stream.set_write_timeout(Some(Duration::from_millis(100)));
+                    let resp =
+                        WireResponse::Error { message: "connection limit reached".to_string() };
+                    let _ = writeln!(stream, "{}", resp.to_json());
+                    continue;
+                }
+                let shared = shared.clone();
+                shared.conns.fetch_add(1, Ordering::AcqRel);
+                std::thread::spawn(move || {
+                    let _ = handle_connection(stream, &shared);
+                    shared.conns.fetch_sub(1, Ordering::AcqRel);
+                });
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+    // Dropping the listener closes the socket: new connects are refused.
+}
+
+fn handle_connection(stream: TcpStream, shared: &Shared) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(READ_POLL)).context("setting read timeout")?;
+    stream.set_write_timeout(Some(WRITE_LIMIT)).context("setting write timeout")?;
+    // Operator verbs (shutdown/drain) are only honoured from loopback
+    // peers; a remote client must not hold a kill switch.
+    let peer_is_local = stream.peer_addr().map(|p| p.ip().is_loopback()).unwrap_or(false);
+    let mut writer = stream.try_clone().context("cloning connection")?;
+    let mut reader = stream;
+    // Own the line framing: raw reads into `buf`, split on b'\n'. (Going
+    // through BufRead::read_line would leave the buffer contents
+    // unspecified when a read times out mid-line.)
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    // Bytes of `buf` already scanned for a newline — resuming from here
+    // keeps framing linear when a large line arrives in many reads.
+    let mut scanned = 0usize;
+    loop {
+        // Serve every complete line currently buffered.
+        while let Some(rel) = buf[scanned..].iter().position(|&b| b == b'\n') {
+            let line_bytes: Vec<u8> = buf.drain(..=scanned + rel).collect();
+            scanned = 0;
+            let line = String::from_utf8_lossy(&line_bytes);
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let resp = match Request::parse_line(trimmed) {
+                Ok(req) => dispatch(req, shared, peer_is_local),
+                Err(e) => WireResponse::Error { message: format!("{e:#}") },
+            };
+            writeln!(writer, "{}", resp.to_json()).context("writing response")?;
+            writer.flush().ok();
+        }
+        scanned = buf.len();
+        if buf.len() > MAX_LINE_BYTES {
+            let resp = WireResponse::Error { message: "request line too long".to_string() };
+            let _ = writeln!(writer, "{}", resp.to_json());
+            return Ok(());
+        }
+        match reader.read(&mut chunk) {
+            Ok(0) => return Ok(()), // client EOF
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if shared.stop.load(Ordering::Acquire) {
+                    return Ok(()); // stopping server: close (partial lines dropped)
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("reading request"),
+        }
+    }
+}
+
+fn dispatch(req: Request, shared: &Shared, peer_is_local: bool) -> WireResponse {
+    match req {
+        Request::Ping => WireResponse::Pong,
+        Request::Stats => {
+            WireResponse::Stats(shared.stats.snapshot(&shared.admission, &shared.router))
+        }
+        Request::Shutdown => {
+            if !peer_is_local {
+                return WireResponse::Error {
+                    message: "shutdown is only accepted from loopback peers".to_string(),
+                };
+            }
+            shared.admission.begin_drain();
+            shared.stop.store(true, Ordering::Release);
+            WireResponse::Draining
+        }
+        Request::Infer(inf) => infer(inf, shared),
+    }
+}
+
+fn infer(req: InferRequest, shared: &Shared) -> WireResponse {
+    let want_activations = req.want_activations;
+    let features = match req.input {
+        InferInput::Features(f) => f,
+        InferInput::Row(i) => match shared.reference.as_ref().and_then(|p| p.row(i)) {
+            Some(f) => f,
+            None => {
+                shared.stats.record_error();
+                let message = match &shared.reference {
+                    Some(p) => format!("row {i} out of range (0..{})", p.rows()),
+                    None => "server holds no reference dataset; send \"features\"".to_string(),
+                };
+                return WireResponse::Error { message };
+            }
+        },
+    };
+    // Clamp client-supplied deadlines into [0, 1h]; `max` first turns a
+    // NaN into 0 so `from_secs_f64` cannot panic on hostile input.
+    let deadline = req.deadline_ms.map(|ms| Duration::from_secs_f64((ms / 1e3).max(0.0).min(3600.0)));
+    let ticket = match AdmissionController::try_admit(&shared.admission, deadline) {
+        Ok(t) => t,
+        Err(rej) => {
+            return WireResponse::Shed {
+                reason: rej.reason().to_string(),
+                retry_after_ms: rej.retry_after().as_secs_f64() * 1e3,
+            }
+        }
+    };
+    let effective = deadline.unwrap_or_else(|| shared.admission.default_deadline());
+    let t0 = Instant::now();
+    let (replica, rx) = match shared.router.submit(features) {
+        Ok(x) => x,
+        Err(e) => {
+            shared.stats.record_error();
+            return WireResponse::Error { message: format!("{e:#}") };
+        }
+    };
+    match rx.recv_timeout(effective) {
+        Ok(Ok(r)) => {
+            let elapsed = t0.elapsed();
+            ticket.complete(elapsed);
+            shared.stats.record_ok(elapsed.as_secs_f64());
+            WireResponse::Infer {
+                active: r.active,
+                replica,
+                batch_size: r.batch_size,
+                latency_ms: elapsed.as_secs_f64() * 1e3,
+                activations: want_activations.then_some(r.activations),
+            }
+        }
+        Ok(Err(e)) => {
+            // Drop, don't complete: fast-failing requests (e.g. a broken
+            // backend) must not drag the service-time estimate toward
+            // zero and defeat deadline shedding during an outage.
+            drop(ticket);
+            shared.stats.record_error();
+            WireResponse::Error { message: format!("inference failed: {e:#}") }
+        }
+        Err(RecvTimeoutError::Timeout) => {
+            // The batcher still holds this request, so the queue slot
+            // must stay occupied or queue_cap stops bounding the backend
+            // backlog. A detached reaper keeps the ticket until the
+            // panel actually completes, then feeds the TRUE service time
+            // into the estimator — under sustained overload the estimate
+            // rises to reality and admission sheds instead of admitting
+            // work that can only time out.
+            std::thread::spawn(move || match rx.recv_timeout(REAP_LIMIT) {
+                Ok(_) => ticket.complete(t0.elapsed()),
+                Err(_) => drop(ticket),
+            });
+            shared.stats.record_error();
+            WireResponse::Error {
+                message: format!(
+                    "deadline exceeded after {:.1}ms",
+                    effective.as_secs_f64() * 1e3
+                ),
+            }
+        }
+        Err(RecvTimeoutError::Disconnected) => {
+            drop(ticket);
+            shared.stats.record_error();
+            WireResponse::Error { message: "server shutting down".to_string() }
+        }
+    }
+}

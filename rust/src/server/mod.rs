@@ -1,0 +1,37 @@
+//! `spdnn::server` — the production serving subsystem.
+//!
+//! The paper's kernel is a serving primitive (§IV.C replicates weights
+//! across GPUs and statically partitions the feature stream); the
+//! coordinator's `batcher` exposes one in-process instance of it. This
+//! module is the layer between that batcher and the outside world:
+//!
+//! * [`protocol`] — a dependency-light JSON-lines wire protocol over
+//!   `std::net` (request = feature vector or dataset-row handle,
+//!   response = activations + activity flag + timing);
+//! * [`router`] — replica sharding via `coordinator::partition`:
+//!   N `InferenceServer` replicas share one `Arc` of the weight panels
+//!   (the paper's weight-duplication model) and split the request
+//!   stream evenly;
+//! * [`admission`] — bounded in-flight queue with backpressure,
+//!   per-request deadlines and early load shedding;
+//! * [`lifecycle`] — bind/accept/serve plus graceful drain + shutdown;
+//! * [`stats`] — p50/p95/p99 latency, queue depth, shed counts and
+//!   per-replica throughput behind the `{"op":"stats"}` verb.
+//!
+//! ```text
+//!   TCP clients ──► protocol ──► admission ──► router ──► batcher replicas
+//!                      │             │            │             │
+//!                      └───────── stats ◄─────────┴── imbalance ┘
+//! ```
+
+pub mod admission;
+pub mod lifecycle;
+pub mod protocol;
+pub mod router;
+pub mod stats;
+
+pub use admission::{AdmissionConfig, AdmissionController, Rejection, Ticket};
+pub use lifecycle::{ReferencePanel, Server, ServerConfig, ServerHandle, ShutdownReport};
+pub use protocol::{Client, InferInput, InferRequest, Request, WireResponse};
+pub use router::ReplicaRouter;
+pub use stats::ServerStats;

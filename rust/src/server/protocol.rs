@@ -1,0 +1,368 @@
+//! JSON-lines wire protocol over TCP.
+//!
+//! One request per line, one response per line, UTF-8 JSON through the
+//! dependency-light `util::json` — no serde, no framing beyond `\n`.
+//!
+//! Requests (`op` selects the verb):
+//!
+//! ```text
+//! {"op":"infer","features":[0.0,1.0,...]}            feature vector
+//! {"op":"infer","row":17}                            server-held dataset row
+//! {"op":"infer","row":3,"deadline_ms":50,"activations":false}
+//! {"op":"stats"}                                     introspection snapshot
+//! {"op":"ping"}                                      liveness
+//! {"op":"shutdown"}  (alias "drain")                 graceful drain + exit
+//! ```
+//!
+//! `shutdown`/`drain` are operator verbs: the server only honours them
+//! from loopback peers (remote clients get an error response).
+//!
+//! Responses always carry `ok` and `kind`; an inference answer is the
+//! final activations + activity flag + timing, a shed answer carries a
+//! `retry_after_ms` backpressure hint.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub const PROTOCOL_VERSION: i64 = 1;
+
+/// What an inference request classifies.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InferInput {
+    /// An explicit feature vector (row-major, `neurons` values).
+    Features(Vec<f32>),
+    /// A row of the server-held reference dataset.
+    Row(usize),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferRequest {
+    pub input: InferInput,
+    /// Per-request deadline override in milliseconds.
+    pub deadline_ms: Option<f64>,
+    /// Return the final activation vector (default true).
+    pub want_activations: bool,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Infer(InferRequest),
+    Stats,
+    Ping,
+    /// Stop accepting new work, answer in-flight requests, then exit.
+    Shutdown,
+}
+
+impl Request {
+    pub fn infer_features(features: Vec<f32>) -> Request {
+        Request::Infer(InferRequest {
+            input: InferInput::Features(features),
+            deadline_ms: None,
+            want_activations: true,
+        })
+    }
+
+    pub fn infer_row(row: usize) -> Request {
+        Request::Infer(InferRequest {
+            input: InferInput::Row(row),
+            deadline_ms: None,
+            want_activations: true,
+        })
+    }
+
+    pub fn parse_line(line: &str) -> Result<Request> {
+        let v = Json::parse(line).context("request is not valid JSON")?;
+        let op = v.req_str("op")?;
+        match op {
+            "infer" => {
+                let input = if let Some(f) = v.get("features") {
+                    InferInput::Features(parse_f32_array(f).context("\"features\"")?)
+                } else if let Some(r) = v.get("row") {
+                    InferInput::Row(
+                        r.as_usize().ok_or_else(|| anyhow!("\"row\" is not an unsigned int"))?,
+                    )
+                } else {
+                    bail!("infer request needs \"features\" or \"row\"");
+                };
+                let deadline_ms = match v.get("deadline_ms") {
+                    Some(j) => Some(
+                        j.as_f64().ok_or_else(|| anyhow!("\"deadline_ms\" is not a number"))?,
+                    ),
+                    None => None,
+                };
+                let want_activations = match v.get("activations") {
+                    Some(j) => {
+                        j.as_bool().ok_or_else(|| anyhow!("\"activations\" is not a bool"))?
+                    }
+                    None => true,
+                };
+                Ok(Request::Infer(InferRequest { input, deadline_ms, want_activations }))
+            }
+            "stats" => Ok(Request::Stats),
+            "ping" => Ok(Request::Ping),
+            "shutdown" | "drain" => Ok(Request::Shutdown),
+            other => bail!("unknown op {other:?}"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Infer(r) => {
+                let mut pairs = vec![("op", Json::Str("infer".into()))];
+                match &r.input {
+                    InferInput::Features(f) => {
+                        let xs: Vec<f64> = f.iter().map(|&x| x as f64).collect();
+                        pairs.push(("features", Json::arr_f64(&xs)));
+                    }
+                    InferInput::Row(i) => pairs.push(("row", Json::Int(*i as i64))),
+                }
+                if let Some(d) = r.deadline_ms {
+                    pairs.push(("deadline_ms", Json::Num(d)));
+                }
+                if !r.want_activations {
+                    pairs.push(("activations", Json::Bool(false)));
+                }
+                Json::obj(pairs)
+            }
+            Request::Stats => Json::obj(vec![("op", Json::Str("stats".into()))]),
+            Request::Ping => Json::obj(vec![("op", Json::Str("ping".into()))]),
+            Request::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".into()))]),
+        }
+    }
+}
+
+/// One response line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireResponse {
+    Infer {
+        active: bool,
+        replica: usize,
+        batch_size: usize,
+        latency_ms: f64,
+        /// Present unless the request opted out with `"activations":false`.
+        activations: Option<Vec<f32>>,
+    },
+    /// Load-shed: not processed, retry after the hinted backoff.
+    Shed { reason: String, retry_after_ms: f64 },
+    Stats(Json),
+    Pong,
+    /// Acknowledgement of a shutdown/drain op.
+    Draining,
+    Error { message: String },
+}
+
+impl WireResponse {
+    /// Whether the request was processed (shed and error are not-ok).
+    pub fn is_ok(&self) -> bool {
+        !matches!(self, WireResponse::Shed { .. } | WireResponse::Error { .. })
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            WireResponse::Infer { active, replica, batch_size, latency_ms, activations } => {
+                let mut pairs = vec![
+                    ("ok", Json::Bool(true)),
+                    ("kind", Json::Str("infer".into())),
+                    ("active", Json::Bool(*active)),
+                    ("replica", Json::Int(*replica as i64)),
+                    ("batch_size", Json::Int(*batch_size as i64)),
+                    ("latency_ms", Json::Num(*latency_ms)),
+                ];
+                if let Some(acts) = activations {
+                    let xs: Vec<f64> = acts.iter().map(|&x| x as f64).collect();
+                    pairs.push(("activations", Json::arr_f64(&xs)));
+                }
+                Json::obj(pairs)
+            }
+            WireResponse::Shed { reason, retry_after_ms } => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("kind", Json::Str("shed".into())),
+                ("reason", Json::Str(reason.clone())),
+                ("retry_after_ms", Json::Num(*retry_after_ms)),
+            ]),
+            WireResponse::Stats(s) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("kind", Json::Str("stats".into())),
+                ("stats", s.clone()),
+            ]),
+            WireResponse::Pong => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("kind", Json::Str("pong".into())),
+                ("version", Json::Int(PROTOCOL_VERSION)),
+            ]),
+            WireResponse::Draining => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("kind", Json::Str("draining".into())),
+            ]),
+            WireResponse::Error { message } => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("kind", Json::Str("error".into())),
+                ("error", Json::Str(message.clone())),
+            ]),
+        }
+    }
+
+    pub fn parse_line(line: &str) -> Result<WireResponse> {
+        let v = Json::parse(line).context("response is not valid JSON")?;
+        match v.req_str("kind")? {
+            "infer" => Ok(WireResponse::Infer {
+                active: v
+                    .req("active")?
+                    .as_bool()
+                    .ok_or_else(|| anyhow!("\"active\" is not a bool"))?,
+                replica: v.req_usize("replica")?,
+                batch_size: v.req_usize("batch_size")?,
+                latency_ms: v.req_f64("latency_ms")?,
+                activations: match v.get("activations") {
+                    Some(j) => Some(parse_f32_array(j)?),
+                    None => None,
+                },
+            }),
+            "shed" => Ok(WireResponse::Shed {
+                reason: v.req_str("reason")?.to_string(),
+                retry_after_ms: v.req_f64("retry_after_ms")?,
+            }),
+            "stats" => Ok(WireResponse::Stats(v.req("stats")?.clone())),
+            "pong" => Ok(WireResponse::Pong),
+            "draining" => Ok(WireResponse::Draining),
+            "error" => Ok(WireResponse::Error { message: v.req_str("error")?.to_string() }),
+            other => bail!("unknown response kind {other:?}"),
+        }
+    }
+}
+
+/// Parse a JSON array of numbers into f32, rejecting values that are (or
+/// become, after the f32 cast) non-finite — inf/NaN activations would
+/// serialize as invalid JSON on the way back out.
+pub fn parse_f32_array(j: &Json) -> Result<Vec<f32>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("expected an array of numbers"))?;
+    arr.iter()
+        .map(|x| {
+            let f = x.as_f64().ok_or_else(|| anyhow!("array element is not a number"))? as f32;
+            if !f.is_finite() {
+                bail!("array element is not a finite f32");
+            }
+            Ok(f)
+        })
+        .collect()
+}
+
+/// Blocking JSON-lines client — used by `examples/server_client.rs`, the
+/// loopback integration tests and any Rust-side tooling.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone().context("cloning stream")?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request and wait for its response line.
+    pub fn call(&mut self, req: &Request) -> Result<WireResponse> {
+        writeln!(self.writer, "{}", req.to_json()).context("writing request")?;
+        self.writer.flush().context("flushing request")?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).context("reading response")?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        WireResponse::parse_line(line.trim())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(req: Request) {
+        let line = req.to_json().to_string();
+        assert_eq!(Request::parse_line(&line).unwrap(), req, "line: {line}");
+    }
+
+    fn roundtrip_response(resp: WireResponse) {
+        let line = resp.to_json().to_string();
+        assert_eq!(WireResponse::parse_line(&line).unwrap(), resp, "line: {line}");
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_request(Request::infer_features(vec![0.0, 1.5, 0.25]));
+        roundtrip_request(Request::infer_row(17));
+        roundtrip_request(Request::Infer(InferRequest {
+            input: InferInput::Row(3),
+            deadline_ms: Some(50.0),
+            want_activations: false,
+        }));
+        roundtrip_request(Request::Stats);
+        roundtrip_request(Request::Ping);
+        roundtrip_request(Request::Shutdown);
+    }
+
+    #[test]
+    fn drain_is_shutdown_alias() {
+        assert_eq!(Request::parse_line(r#"{"op":"drain"}"#).unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        roundtrip_response(WireResponse::Infer {
+            active: true,
+            replica: 1,
+            batch_size: 8,
+            latency_ms: 2.5,
+            activations: Some(vec![0.0, 3.25]),
+        });
+        roundtrip_response(WireResponse::Infer {
+            active: false,
+            replica: 0,
+            batch_size: 1,
+            latency_ms: 0.5,
+            activations: None,
+        });
+        roundtrip_response(WireResponse::Shed {
+            reason: "queue full".into(),
+            retry_after_ms: 4.0,
+        });
+        roundtrip_response(WireResponse::Stats(Json::obj(vec![("requests", Json::Int(9))])));
+        roundtrip_response(WireResponse::Pong);
+        roundtrip_response(WireResponse::Draining);
+        roundtrip_response(WireResponse::Error { message: "boom".into() });
+    }
+
+    #[test]
+    fn ok_flag_matches_kind() {
+        assert!(WireResponse::Pong.is_ok());
+        assert!(WireResponse::Draining.is_ok());
+        assert!(!WireResponse::Shed { reason: "x".into(), retry_after_ms: 1.0 }.is_ok());
+        assert!(!WireResponse::Error { message: "x".into() }.is_ok());
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(Request::parse_line("not json").is_err());
+        assert!(Request::parse_line(r#"{"no_op":1}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"warp"}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"infer"}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"infer","features":"nope"}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"infer","row":-1}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"infer","row":1,"deadline_ms":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn wire_shapes_are_stable() {
+        // The exact field names are the protocol; lock them down.
+        let line = Request::infer_row(2).to_json().to_string();
+        assert_eq!(line, r#"{"op":"infer","row":2}"#);
+        let line = WireResponse::Pong.to_json().to_string();
+        assert_eq!(line, r#"{"kind":"pong","ok":true,"version":1}"#);
+    }
+}

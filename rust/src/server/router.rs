@@ -1,0 +1,176 @@
+//! Replica sharding: N batcher replicas behind one submit surface.
+//!
+//! The paper's multi-GPU model (§IV.C) replicates the weights on every
+//! rank and statically partitions the features. The router reproduces
+//! that shape for serving: every replica is a full `InferenceServer`
+//! holding the same `Arc`-shared weight panels (replication without
+//! copies), and the request stream is sharded by the same
+//! `partition_even` used for offline batch parallelism — the routing
+//! window has one slot per replica, so consecutive requests interleave
+//! across the fleet (a burst exercises every replica in parallel
+//! instead of filling one replica's panel while the rest idle).
+//! Per-replica routed counts feed the same `imbalance()` metric the
+//! offline coordinator reports.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::batcher::{BatchPolicy, InferenceServer, Response, ServeBackend, ServedModel};
+use crate::coordinator::partition::{imbalance, partition_even};
+
+/// N weight-sharing `InferenceServer` replicas plus the static routing
+/// table that shards requests across them.
+pub struct ReplicaRouter {
+    replicas: Vec<InferenceServer>,
+    /// Request-slot -> replica map derived from `partition_even` over one
+    /// routing window (one slot per replica: interleaved assignment).
+    slots: Vec<usize>,
+    seq: AtomicUsize,
+    routed: Vec<AtomicU64>,
+    neurons: usize,
+}
+
+impl ReplicaRouter {
+    /// Start `nreplicas` batcher replicas over the shared model. The
+    /// weight panels travel inside `ServedModel`'s `Arc`, so replication
+    /// costs one pointer per replica, not one copy.
+    pub fn start(
+        model: ServedModel,
+        backend: ServeBackend,
+        policy: BatchPolicy,
+        nreplicas: usize,
+    ) -> Result<ReplicaRouter> {
+        if nreplicas == 0 {
+            bail!("replicas must be positive");
+        }
+        let neurons = model.neurons;
+        let window = nreplicas;
+        let mut slots = vec![0usize; window];
+        for p in partition_even(window, nreplicas) {
+            for s in p.start..p.start + p.count {
+                slots[s] = p.worker;
+            }
+        }
+        let replicas: Vec<InferenceServer> = (0..nreplicas)
+            .map(|_| InferenceServer::start(model.clone(), backend.clone(), policy))
+            .collect();
+        let routed = (0..nreplicas).map(|_| AtomicU64::new(0)).collect();
+        Ok(ReplicaRouter { replicas, slots, seq: AtomicUsize::new(0), routed, neurons })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn neurons(&self) -> usize {
+        self.neurons
+    }
+
+    /// Route one request; returns the chosen replica and the response
+    /// channel.
+    pub fn submit(&self, features: Vec<f32>) -> Result<(usize, mpsc::Receiver<Result<Response>>)> {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let replica = self.slots[seq % self.slots.len()];
+        let rx = self.replicas[replica].submit(features)?;
+        self.routed[replica].fetch_add(1, Ordering::Relaxed);
+        Ok((replica, rx))
+    }
+
+    /// Blocking submit + receive.
+    pub fn classify(&self, features: Vec<f32>) -> Result<(usize, Response)> {
+        let (replica, rx) = self.submit(features)?;
+        let resp = rx.recv().map_err(|_| anyhow!("replica {replica} dropped the request"))??;
+        Ok((replica, resp))
+    }
+
+    /// Requests routed to each replica so far.
+    pub fn routed_counts(&self) -> Vec<u64> {
+        self.routed.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// max/mean over per-replica routed counts (1.0 = perfectly even) —
+    /// the serving-side analog of the coordinator's pruning imbalance.
+    pub fn imbalance(&self) -> f64 {
+        let counts: Vec<usize> = self.routed_counts().iter().map(|&c| c as usize).collect();
+        imbalance(&counts)
+    }
+
+    /// Shut every replica down (pending requests error out).
+    pub fn shutdown(self) {
+        for r in self.replicas {
+            r.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::util::config::RuntimeConfig;
+    use std::time::Duration;
+
+    fn model() -> (ServedModel, Dataset) {
+        let cfg = RuntimeConfig { neurons: 64, layers: 4, k: 4, batch: 8, ..Default::default() };
+        let ds = Dataset::generate(&cfg).unwrap();
+        (ServedModel::from_dataset(&ds), ds)
+    }
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) }
+    }
+
+    fn native() -> ServeBackend {
+        ServeBackend::Native { threads: 1, minibatch: 12 }
+    }
+
+    #[test]
+    fn slots_interleave_across_replicas() {
+        let (m, _) = model();
+        let router = ReplicaRouter::start(m, native(), policy(), 3).unwrap();
+        assert_eq!(router.replicas(), 3);
+        // One slot per replica: consecutive requests hit distinct replicas.
+        assert_eq!(router.slots, vec![0, 1, 2]);
+        router.shutdown();
+    }
+
+    #[test]
+    fn classify_matches_truth_and_spreads_load() {
+        let (m, ds) = model();
+        let router = ReplicaRouter::start(m, native(), policy(), 2).unwrap();
+        // Two full passes over the dataset: 16 sequential requests.
+        for pass in 0..2 {
+            for i in 0..ds.cfg.batch {
+                let feats = ds.features[i * 64..(i + 1) * 64].to_vec();
+                let (_, resp) = router.classify(feats).unwrap();
+                assert_eq!(
+                    resp.active,
+                    ds.truth_categories.contains(&i),
+                    "pass {pass} feature {i}"
+                );
+            }
+        }
+        let counts = router.routed_counts();
+        assert_eq!(counts.iter().sum::<u64>(), 16);
+        assert!(counts.iter().all(|&c| c > 0), "both replicas must see work: {counts:?}");
+        assert_eq!(counts[0], counts[1], "block round-robin is exactly even: {counts:?}");
+        assert!((router.imbalance() - 1.0).abs() < 1e-12);
+        router.shutdown();
+    }
+
+    #[test]
+    fn zero_replicas_rejected() {
+        let (m, _) = model();
+        assert!(ReplicaRouter::start(m, native(), policy(), 0).is_err());
+    }
+
+    #[test]
+    fn wrong_width_propagates_error() {
+        let (m, _) = model();
+        let router = ReplicaRouter::start(m, native(), policy(), 2).unwrap();
+        assert!(router.submit(vec![0.0; 3]).is_err());
+        router.shutdown();
+    }
+}

@@ -1,0 +1,199 @@
+//! Serving introspection: latency distribution, queue state, shed counts
+//! and per-replica throughput, surfaced through the `{"op":"stats"}`
+//! protocol verb.
+//!
+//! Latencies are kept in a fixed ring (default 4096 samples) so the
+//! percentile cost and memory stay bounded no matter how long the server
+//! runs; percentiles come from `util::stats::Summary`, the same machinery
+//! the offline bench harness uses.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+use super::admission::AdmissionController;
+use super::router::ReplicaRouter;
+
+/// Fixed-capacity ring of f64 samples.
+struct Ring {
+    cap: usize,
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring { cap: cap.max(1), buf: Vec::new(), next: 0 }
+    }
+
+    fn push(&mut self, x: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            self.buf[self.next] = x;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    fn samples(&self) -> Vec<f64> {
+        self.buf.clone()
+    }
+}
+
+/// Per-server counters shared by every connection thread.
+pub struct ServerStats {
+    started: Instant,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    /// Recent end-to-end inference latencies in seconds.
+    latencies: Mutex<Ring>,
+}
+
+impl ServerStats {
+    pub fn new(window: usize) -> ServerStats {
+        ServerStats {
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            latencies: Mutex::new(Ring::new(window)),
+        }
+    }
+
+    /// One answered inference request.
+    pub fn record_ok(&self, latency_secs: f64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.latencies.lock().expect("stats lock").push(latency_secs);
+    }
+
+    /// One failed inference request (admitted but not answered ok).
+    pub fn record_error(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    pub fn uptime_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn latency_summary(&self) -> Option<Summary> {
+        Summary::of(&self.latencies.lock().expect("stats lock").samples())
+    }
+
+    /// Full introspection snapshot — the `{"op":"stats"}` payload.
+    pub fn snapshot(&self, admission: &AdmissionController, router: &ReplicaRouter) -> Json {
+        let uptime = self.uptime_secs();
+        let replicas: Vec<Json> = router
+            .routed_counts()
+            .iter()
+            .enumerate()
+            .map(|(i, &routed)| {
+                Json::obj(vec![
+                    ("replica", Json::Int(i as i64)),
+                    ("routed", Json::Int(routed as i64)),
+                    ("req_per_sec", Json::Num(routed as f64 / uptime.max(1e-9))),
+                ])
+            })
+            .collect();
+        let mut pairs = vec![
+            ("uptime_secs", Json::Num(uptime)),
+            ("requests", Json::Int(self.requests() as i64)),
+            ("errors", Json::Int(self.errors() as i64)),
+            ("admitted", Json::Int(admission.admitted() as i64)),
+            ("shed", Json::Int(admission.shed() as i64)),
+            ("queue_depth", Json::Int(admission.depth() as i64)),
+            ("queue_cap", Json::Int(admission.queue_cap() as i64)),
+            ("draining", Json::Bool(admission.is_draining())),
+            ("service_estimate_ms", Json::Num(admission.service_estimate().as_secs_f64() * 1e3)),
+            ("imbalance", Json::Num(router.imbalance())),
+            ("replicas", Json::Arr(replicas)),
+        ];
+        if let Some(s) = self.latency_summary() {
+            pairs.push((
+                "latency_ms",
+                Json::obj(vec![
+                    ("count", Json::Int(s.count as i64)),
+                    ("mean", Json::Num(s.mean * 1e3)),
+                    ("p50", Json::Num(s.p50 * 1e3)),
+                    ("p95", Json::Num(s.p95 * 1e3)),
+                    ("p99", Json::Num(s.p99 * 1e3)),
+                    ("max", Json::Num(s.max * 1e3)),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::{BatchPolicy, ServeBackend, ServedModel};
+    use crate::data::Dataset;
+    use crate::server::admission::AdmissionConfig;
+    use crate::util::config::RuntimeConfig;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn ring_caps_and_wraps() {
+        let mut r = Ring::new(4);
+        for i in 0..10 {
+            r.push(i as f64);
+        }
+        let mut s = r.samples();
+        assert_eq!(s.len(), 4);
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Oldest samples were overwritten; the last four survive.
+        assert_eq!(s, vec![6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn counters_and_summary() {
+        let st = ServerStats::new(16);
+        st.record_ok(0.010);
+        st.record_ok(0.020);
+        st.record_error();
+        assert_eq!(st.requests(), 3);
+        assert_eq!(st.errors(), 1);
+        let s = st.latency_summary().unwrap();
+        assert_eq!(s.count, 2);
+        assert!((s.mean - 0.015).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_shape() {
+        let cfg = RuntimeConfig { neurons: 64, layers: 3, k: 4, batch: 4, ..Default::default() };
+        let ds = Dataset::generate(&cfg).unwrap();
+        let model = ServedModel::from_dataset(&ds);
+        let router = ReplicaRouter::start(
+            model,
+            ServeBackend::Native { threads: 1, minibatch: 12 },
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+            2,
+        )
+        .unwrap();
+        let admission = Arc::new(AdmissionController::new(AdmissionConfig::default()));
+        let st = ServerStats::new(16);
+        st.record_ok(0.001);
+
+        let snap = st.snapshot(&admission, &router);
+        assert_eq!(snap.req_usize("requests").unwrap(), 1);
+        assert_eq!(snap.req_usize("queue_depth").unwrap(), 0);
+        assert_eq!(snap.req_usize("queue_cap").unwrap(), 256);
+        assert_eq!(snap.req_arr("replicas").unwrap().len(), 2);
+        assert!(snap.req_f64("latency_ms").is_err()); // nested object, not a number
+        assert!(snap.get("latency_ms").unwrap().req_f64("p95").is_ok());
+        router.shutdown();
+    }
+}

@@ -1,0 +1,119 @@
+//! Property tests for `coordinator::partition` — the static sharding
+//! substrate used both by the offline coordinator (features -> workers)
+//! and by the serving router (request slots -> replicas).
+
+use spdnn::coordinator::partition::{imbalance, partition_even};
+use spdnn::util::proptest::{self, Runner};
+
+#[test]
+fn covers_each_index_exactly_once() {
+    Runner::new(128, 0x5EED).run("partition-cover-exactly-once", |rng| {
+        let workers = proptest::usize_in(rng, 1, 40);
+        // Half the cases force the batch < workers regime.
+        let batch = if rng.next_f32() < 0.5 {
+            proptest::usize_in(rng, 0, workers.saturating_sub(1))
+        } else {
+            proptest::usize_in(rng, 0, 400)
+        };
+        let parts = partition_even(batch, workers);
+        if parts.len() != workers {
+            return Err(format!("expected {workers} partitions, got {}", parts.len()));
+        }
+        let mut seen = vec![0usize; batch];
+        for p in &parts {
+            for i in p.start..p.start + p.count {
+                if i >= batch {
+                    return Err(format!("index {i} outside 0..{batch}"));
+                }
+                seen[i] += 1;
+            }
+        }
+        if let Some(i) = seen.iter().position(|&c| c != 1) {
+            return Err(format!("index {i} covered {} times", seen[i]));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partitions_differ_by_at_most_one() {
+    Runner::new(128, 0xBA1A).run("partition-even-sizes", |rng| {
+        let workers = proptest::usize_in(rng, 1, 40);
+        let batch = proptest::usize_in(rng, 0, 400);
+        let counts: Vec<usize> =
+            partition_even(batch, workers).iter().map(|p| p.count).collect();
+        let (mn, mx) = (*counts.iter().min().unwrap(), *counts.iter().max().unwrap());
+        if mx - mn > 1 {
+            return Err(format!("uneven split: min {mn}, max {mx}"));
+        }
+        // The remainder lands on the first partitions, so counts never
+        // increase along the worker axis.
+        if counts.windows(2).any(|w| w[0] < w[1]) {
+            return Err(format!("counts not non-increasing: {counts:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batch_smaller_than_workers_explicit() {
+    for batch in 0..5usize {
+        for extra in 1..5usize {
+            let workers = batch + extra;
+            let parts = partition_even(batch, workers);
+            assert_eq!(parts.len(), workers);
+            // The first `batch` workers get one feature, the rest none.
+            for (w, p) in parts.iter().enumerate() {
+                assert_eq!(p.worker, w);
+                assert_eq!(p.count, usize::from(w < batch), "batch={batch} workers={workers}");
+            }
+            assert_eq!(parts.iter().map(|p| p.count).sum::<usize>(), batch);
+        }
+    }
+}
+
+#[test]
+fn single_worker_takes_everything() {
+    let parts = partition_even(123, 1);
+    assert_eq!(parts.len(), 1);
+    assert_eq!(parts[0].start, 0);
+    assert_eq!(parts[0].count, 123);
+}
+
+#[test]
+fn imbalance_of_uniform_work_is_one() {
+    Runner::new(96, 0x1B1A).run("imbalance-uniform", |rng| {
+        let n = proptest::usize_in(rng, 1, 32);
+        let w = proptest::usize_in(rng, 0, 1000);
+        let work = vec![w; n];
+        let got = imbalance(&work);
+        if (got - 1.0).abs() > 1e-12 {
+            return Err(format!("imbalance({w} x {n}) = {got}, want 1.0"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn imbalance_is_at_least_one() {
+    Runner::new(96, 0xC0DE).run("imbalance-lower-bound", |rng| {
+        let n = proptest::usize_in(rng, 1, 24);
+        let work: Vec<usize> = (0..n).map(|_| proptest::usize_in(rng, 0, 500)).collect();
+        let got = imbalance(&work);
+        // max/mean >= 1 whenever mean > 0; the all-zero case pins to 1.0.
+        if got < 1.0 - 1e-12 {
+            return Err(format!("imbalance({work:?}) = {got} < 1"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn imbalance_concentrated_work_equals_worker_count() {
+    // One worker holds all the work: max/mean = n.
+    for n in [1usize, 2, 5, 8] {
+        let mut work = vec![0usize; n];
+        work[0] = 700;
+        assert!((imbalance(&work) - n as f64).abs() < 1e-12, "n={n}");
+    }
+}
