@@ -4,11 +4,12 @@
 //! Measures the native engine across MB (the same reuse lever) and prints
 //! the analytic weight-traffic model's view for the GPU kernel.
 
-use spdnn::bench::{bench, BenchConfig};
+use spdnn::bench::{bench, BenchCase, BenchConfig, BenchReport};
 use spdnn::data::mnist_synth;
 use spdnn::engine::EllEngine;
 use spdnn::radixnet::{RadixNet, Topology};
 use spdnn::simulator::gpu_model::{layer_traffic_bytes, KernelParams};
+use spdnn::util::json::Json;
 use spdnn::util::table::{fmt_teps, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -26,10 +27,14 @@ fn main() -> anyhow::Result<()> {
         "MINIBATCH ablation (paper optimum: 12)",
         &["MB", "p50", "Throughput", "Speedup vs MB=1", "Model weight-traffic"],
     );
+    let mut report = BenchReport::new("ablation_minibatch");
+    report.param("neurons", Json::Int(n as i64));
+    report.param("k", Json::Int(k as i64));
+    report.param("batch", Json::Int(batch as i64));
     let mut out = vec![0f32; y.len()];
     let mut base = None;
     for mb in [1usize, 2, 4, 8, 12, 16, 24, 48] {
-        let eng = EllEngine::with_mb(1, mb);
+        let eng = EllEngine::with_mb(1, mb)?;
         let m = bench(&bcfg, &format!("mb{mb}"), edges, || {
             eng.layer(&w, &bias, &y, &mut out);
         });
@@ -44,8 +49,19 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}x", base.unwrap() / m.secs.p50),
             format!("{:.1} MB", layer_traffic_bytes(&p, batch) / 1e6),
         ]);
+        report.case(
+            BenchCase::from_measurement(&m)
+                .with_extra("mb", Json::Int(mb as i64))
+                .with_extra("speedup_vs_mb1", Json::Num(base.unwrap() / m.secs.p50))
+                .with_extra(
+                    "model_weight_traffic_bytes",
+                    Json::Num(layer_traffic_bytes(&p, batch)),
+                ),
+        );
     }
     table.print();
+    let path = report.write()?;
+    println!("wrote {} ({} cases)", path.display(), report.cases.len());
     println!("weight traffic falls ~1/MB (register reuse); gains flatten once features dominate");
     Ok(())
 }

@@ -62,7 +62,9 @@ fn main() -> anyhow::Result<()> {
     );
     let irregular = random_matrix(1024, 32, 13);
     let uniform = RadixNet::new(1024, 1, 32, Topology::Butterfly, 0)?.layer_csr(0);
-    for (name, m) in [("irregular (1..32 nnz/row)", &irregular), ("RadiX-Net (uniform 32)", &uniform)] {
+    for (name, m) in
+        [("irregular (1..32 nnz/row)", &irregular), ("RadiX-Net (uniform 32)", &uniform)]
+    {
         let mut row = vec![name.to_string()];
         for slice in [32usize, 256, 1024] {
             let s = SlicedEll::from_csr(m, slice)?;

@@ -12,11 +12,12 @@
 //!
 //! Needs `make artifacts` for the AOT parts.
 
-use spdnn::bench::{bench, BenchConfig};
+use spdnn::bench::{bench, BenchCase, BenchConfig, BenchReport};
 use spdnn::data::mnist_synth;
 use spdnn::engine::{CsrEngine, EllEngine};
 use spdnn::radixnet::{RadixNet, Topology};
 use spdnn::runtime::{Kind, LayerLiterals, Manifest, PjrtBackend};
+use spdnn::util::json::Json;
 use spdnn::util::table::{fmt_teps, Table};
 
 fn main() -> anyhow::Result<()> {
@@ -34,6 +35,8 @@ fn main() -> anyhow::Result<()> {
         "Baseline vs optimized (paper: 5.56-11.84x on V100)",
         &["Path", "Variant", "p50", "Throughput", "Speedup"],
     );
+    let mut report = BenchReport::new("baseline_vs_optimized");
+    report.param("k", Json::Int(k as i64));
 
     // ---- AOT / PJRT ------------------------------------------------------
     let dir = std::path::PathBuf::from("artifacts");
@@ -86,6 +89,13 @@ fn main() -> anyhow::Result<()> {
             fmt_teps(m_opt.throughput()),
             format!("{:.2}x", m_feat.secs.p50 / m_opt.secs.p50),
         ]);
+        for m in [&m_feat, &m_base, &m_opt] {
+            report.case(
+                BenchCase::from_measurement(m)
+                    .with_extra("path", Json::Str("pjrt".into()))
+                    .with_extra("neurons", Json::Int(n as i64)),
+            );
+        }
     } else {
         eprintln!("(skipping PJRT comparison: run `make artifacts`)");
     }
@@ -100,9 +110,13 @@ fn main() -> anyhow::Result<()> {
         let y = mnist_synth::generate_features(nn, b, 3)?;
         let mut out = vec![0f32; y.len()];
         let e = (b * nn * k) as f64;
-        let m_csr = bench(&bcfg, "native_csr", e, || CsrEngine.layer(&csr, &bias, &y, &mut out));
+        let m_csr =
+            bench(&bcfg, &format!("native_csr_n{nn}"), e, || {
+                CsrEngine.layer(&csr, &bias, &y, &mut out)
+            });
         let eng = EllEngine::new(1);
-        let m_ell = bench(&bcfg, "native_ell", e, || eng.layer(&w, &bias, &y, &mut out));
+        let m_ell =
+            bench(&bcfg, &format!("native_ell_n{nn}"), e, || eng.layer(&w, &bias, &y, &mut out));
         table.row(vec![
             format!("native n={nn}"),
             "baseline CSR per-feature".into(),
@@ -117,8 +131,19 @@ fn main() -> anyhow::Result<()> {
             fmt_teps(m_ell.throughput()),
             format!("{:.2}x", m_csr.secs.p50 / m_ell.secs.p50),
         ]);
+        let speedup = m_csr.secs.p50 / m_ell.secs.p50;
+        for m in [&m_csr, &m_ell] {
+            report.case(
+                BenchCase::from_measurement(m)
+                    .with_extra("path", Json::Str("native".into()))
+                    .with_extra("neurons", Json::Int(nn as i64))
+                    .with_extra("speedup_vs_csr", Json::Num(speedup)),
+            );
+        }
     }
 
+    let path = report.write()?;
+    println!("wrote {} ({} cases)", path.display(), report.cases.len());
     table.print();
     println!(
         "paper reports 5.56-11.84x on V100 (DRAM-resident weights, uncoalesced baseline);\n\

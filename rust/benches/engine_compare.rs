@@ -1,0 +1,112 @@
+//! Engine v2 comparison: the three native layer kernels (CSR baseline,
+//! row-major ELL, transposed sliced-ELL) plus the autotuner's pick, on
+//! one challenge-shaped layer. Emits `BENCH_native.json` in the unified
+//! spdnn-bench-v1 schema — this is also the CI bench-smoke artifact.
+//!
+//! Usage: cargo bench --bench engine_compare
+//! Scale with SPDNN_BENCH_ITERS / SPDNN_BENCH_MAX_SECS.
+
+use spdnn::bench::{bench, BenchCase, BenchConfig, BenchReport, Measurement};
+use spdnn::data::mnist_synth;
+use spdnn::engine::{Autotuner, CsrEngine, EllEngine, EngineKind, SlicedEllEngine, TuneKey};
+use spdnn::formats::SlicedEll;
+use spdnn::radixnet::{RadixNet, Topology};
+use spdnn::util::json::Json;
+use spdnn::util::table::{fmt_teps, Table};
+use spdnn::util::threadpool::ThreadPool;
+
+fn main() -> anyhow::Result<()> {
+    let bcfg = BenchConfig::from_env();
+    let n = 1024usize;
+    let k = 32usize;
+    let batch = 240usize;
+    let net = RadixNet::new(n, 1, k, Topology::Butterfly, 7)?;
+    let ell = net.layer_ell(0);
+    let csr = net.layer_csr(0);
+    let bias = vec![-0.3f32; n];
+    let y = mnist_synth::generate_features(n, batch, 3)?;
+    let edges = (batch * n * k) as f64;
+    let mut out = vec![0f32; y.len()];
+
+    let mut report = BenchReport::new("native");
+    report.param("neurons", Json::Int(n as i64));
+    report.param("k", Json::Int(k as i64));
+    report.param("batch", Json::Int(batch as i64));
+
+    let mut table = Table::new(
+        "Native engine comparison (one 1024-wide layer)",
+        &["Case", "p50", "Throughput", "Speedup vs csr"],
+    );
+    let mut rows: Vec<Measurement> = Vec::new();
+
+    rows.push(bench(&bcfg, "csr", edges, || CsrEngine.layer(&csr, &bias, &y, &mut out)));
+
+    let ell_engine = EllEngine::with_mb(1, 12)?;
+    rows.push(bench(&bcfg, "ell mb=12", edges, || ell_engine.layer(&ell, &bias, &y, &mut out)));
+
+    for slice in [16usize, 32] {
+        let s = SlicedEll::from_ell(&ell, slice)?;
+        let engine = SlicedEllEngine::with_mb(1, 12)?;
+        rows.push(bench(&bcfg, &format!("sliced mb=12 slice={slice}"), edges, || {
+            engine.layer(&s, &bias, &y, &mut out)
+        }));
+    }
+
+    let pool_threads = ThreadPool::global().size().min(8);
+    if pool_threads > 1 {
+        let s = SlicedEll::from_ell(&ell, 32)?;
+        let engine = SlicedEllEngine::with_mb(pool_threads, 12)?;
+        let name = format!("sliced mb=12 slice=32 threads={pool_threads}");
+        rows.push(bench(&bcfg, &name, edges, || engine.layer(&s, &bias, &y, &mut out)));
+    }
+
+    // The autotuner's per-shape decision, re-measured as its own case.
+    let mut tuner = Autotuner::default();
+    let tuned = tuner.tune(TuneKey { neurons: n, k, layers: 1 })?;
+    let m_auto = match tuned.engine {
+        EngineKind::Csr => {
+            bench(&bcfg, "auto", edges, || CsrEngine.layer(&csr, &bias, &y, &mut out))
+        }
+        EngineKind::Ell => {
+            let engine = EllEngine::with_mb(tuned.threads, tuned.minibatch)?;
+            bench(&bcfg, "auto", edges, || engine.layer(&ell, &bias, &y, &mut out))
+        }
+        EngineKind::Sliced => {
+            let s = SlicedEll::from_ell(&ell, tuned.slice.max(1))?;
+            let engine = SlicedEllEngine::with_mb(tuned.threads, tuned.minibatch)?;
+            bench(&bcfg, "auto", edges, || engine.layer(&s, &bias, &y, &mut out))
+        }
+    };
+
+    let base_p50 = rows[0].secs.p50;
+    for m in &rows {
+        table.row(vec![
+            m.name.clone(),
+            format!("{:.2}ms", m.secs.p50 * 1e3),
+            fmt_teps(m.throughput()),
+            format!("{:.2}x", base_p50 / m.secs.p50),
+        ]);
+        report.case(BenchCase::from_measurement(m));
+    }
+    table.row(vec![
+        format!(
+            "auto -> {} mb={} slice={} threads={}",
+            tuned.engine, tuned.minibatch, tuned.slice, tuned.threads
+        ),
+        format!("{:.2}ms", m_auto.secs.p50 * 1e3),
+        fmt_teps(m_auto.throughput()),
+        format!("{:.2}x", base_p50 / m_auto.secs.p50),
+    ]);
+    report.case(
+        BenchCase::from_measurement(&m_auto)
+            .with_extra("engine", Json::Str(tuned.engine.as_str().to_string()))
+            .with_extra("minibatch", Json::Int(tuned.minibatch as i64))
+            .with_extra("slice", Json::Int(tuned.slice as i64))
+            .with_extra("threads", Json::Int(tuned.threads as i64)),
+    );
+    table.print();
+
+    let path = report.write()?;
+    println!("wrote {} ({} cases)", path.display(), report.cases.len());
+    Ok(())
+}

@@ -12,6 +12,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use spdnn::bench::{BenchCase, BenchReport};
 use spdnn::coordinator::batcher::{BatchPolicy, ServeBackend, ServedModel};
 use spdnn::data::Dataset;
 use spdnn::server::ReplicaRouter;
@@ -41,7 +42,15 @@ fn main() -> anyhow::Result<()> {
         "Serving load: replicas x batch policy (8 closed-loop clients)",
         &["replicas", "max_batch", "max_wait", "req/s", "p50", "p95", "imbalance"],
     );
-    let mut results: Vec<Json> = Vec::new();
+    // Unified spdnn-bench-v1 report: one request traverses the full
+    // network, so throughput converts to TeraEdges/s via layers*n*k.
+    let edges_per_request = (cfg.layers * cfg.neurons * cfg.k) as f64;
+    let mut report = BenchReport::new("serving");
+    report.param("neurons", Json::Int(cfg.neurons as i64));
+    report.param("layers", Json::Int(cfg.layers as i64));
+    report.param("k", Json::Int(cfg.k as i64));
+    report.param("clients", Json::Int(clients as i64));
+    report.param("requests_per_client", Json::Int(requests_per_client as i64));
     for &replicas in &replica_counts {
         for &(max_batch, wait_ms) in &policies {
             let policy =
@@ -89,15 +98,20 @@ fn main() -> anyhow::Result<()> {
                 fmt_secs(s.p95),
                 format!("{imbalance:.3}"),
             ]);
-            results.push(Json::obj(vec![
-                ("replicas", Json::Int(replicas as i64)),
-                ("max_batch", Json::Int(max_batch as i64)),
-                ("max_wait_ms", Json::Num(wait_ms)),
-                ("req_per_sec", Json::Num(req_per_sec)),
-                ("p50_ms", Json::Num(s.p50 * 1e3)),
-                ("p95_ms", Json::Num(s.p95 * 1e3)),
-                ("imbalance", Json::Num(imbalance)),
-            ]));
+            report.case(
+                BenchCase::from_parts(
+                    &format!("replicas={replicas} max_batch={max_batch} wait={wait_ms}ms"),
+                    edges_per_request,
+                    &s,
+                    req_per_sec * edges_per_request,
+                )
+                .with_extra("replicas", Json::Int(replicas as i64))
+                .with_extra("max_batch", Json::Int(max_batch as i64))
+                .with_extra("max_wait_ms", Json::Num(wait_ms))
+                .with_extra("req_per_sec", Json::Num(req_per_sec))
+                .with_extra("p95_ms", Json::Num(s.p95 * 1e3))
+                .with_extra("imbalance", Json::Num(imbalance)),
+            );
             if let Ok(router) = Arc::try_unwrap(router) {
                 router.shutdown();
             }
@@ -105,16 +119,7 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
 
-    let ncases = results.len();
-    let doc = Json::obj(vec![
-        ("bench", Json::Str("serving_load".into())),
-        ("neurons", Json::Int(cfg.neurons as i64)),
-        ("layers", Json::Int(cfg.layers as i64)),
-        ("clients", Json::Int(clients as i64)),
-        ("requests_per_client", Json::Int(requests_per_client as i64)),
-        ("results", Json::Arr(results)),
-    ]);
-    std::fs::write("BENCH_serving.json", format!("{doc}\n"))?;
-    println!("wrote BENCH_serving.json ({ncases} cases)");
+    let path = report.write()?;
+    println!("wrote {} ({} cases)", path.display(), report.cases.len());
     Ok(())
 }

@@ -103,6 +103,10 @@ fn main() -> anyhow::Result<()> {
     let t120 = trace120.with_layers(120);
     let best = sim.simulate(&p64, &t120, 768).edges_per_sec / 1e12;
     let single = sim.simulate(&p64, &t120, 1).edges_per_sec / 1e12;
-    println!("headline: 65536x120 @768 GPUs = {best:.0} TEps (paper: 180); 768-GPU speedup {:.0}x (paper: 51.8x)", best / single);
+    println!(
+        "headline: 65536x120 @768 GPUs = {best:.0} TEps (paper: 180); \
+         768-GPU speedup {:.0}x (paper: 51.8x)",
+        best / single
+    );
     Ok(())
 }

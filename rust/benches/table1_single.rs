@@ -8,7 +8,7 @@
 //! Usage: cargo bench --bench table1_single [-- --pjrt] ; scale with
 //! SPDNN_BENCH_ITERS / SPDNN_BENCH_MAX_SECS.
 
-use spdnn::bench::{bench, BenchConfig};
+use spdnn::bench::{bench, BenchCase, BenchConfig, BenchReport};
 use spdnn::coordinator::{run_inference, Backend, RunOptions};
 use spdnn::data::Dataset;
 use spdnn::simulator::gpu_model::{a100, v100, KernelParams};
@@ -16,6 +16,7 @@ use spdnn::simulator::network::summit;
 use spdnn::simulator::scaling::{ScalingSim, CHALLENGE_BATCH};
 use spdnn::simulator::trace::ActivityTrace;
 use spdnn::util::config::RuntimeConfig;
+use spdnn::util::json::Json;
 use spdnn::util::table::{fmt_teps, Table};
 
 /// Paper Table I: (neurons, layers) -> (V100 TEps, A100 TEps).
@@ -44,12 +45,17 @@ fn main() -> anyhow::Result<()> {
         "Measured single-worker throughput (scaled workloads, this machine)",
         &["Neurons", "Layers", "Batch", "Backend", "Throughput", "p50 wall"],
     );
+    let mut unified = BenchReport::new("table1_single");
+    unified.param("backend", Json::Str(if use_pjrt { "pjrt" } else { "native" }.into()));
     let mut anchor_trace: Option<ActivityTrace> = None;
     for (n, l, b) in [(1024usize, 24usize, 240usize), (1024, 120, 240), (4096, 24, 120)] {
         let cfg = RuntimeConfig { neurons: n, layers: l, k: 32, batch: b, ..Default::default() };
         let ds = Dataset::generate(&cfg)?;
         let opts = if use_pjrt {
-            RunOptions { backend: Backend::Pjrt { artifacts: "artifacts".into() }, ..Default::default() }
+            RunOptions {
+                backend: Backend::Pjrt { artifacts: "artifacts".into() },
+                ..Default::default()
+            }
         } else {
             RunOptions::default()
         };
@@ -69,8 +75,16 @@ fn main() -> anyhow::Result<()> {
             fmt_teps(m.throughput()),
             format!("{:.1}ms", m.secs.p50 * 1e3),
         ]);
+        unified.case(
+            BenchCase::from_measurement(&m)
+                .with_extra("neurons", Json::Int(n as i64))
+                .with_extra("layers", Json::Int(l as i64))
+                .with_extra("batch", Json::Int(b as i64)),
+        );
     }
     measured.print();
+    let bench_path = unified.write()?;
+    println!("wrote {} ({} cases)", bench_path.display(), unified.cases.len());
 
     // ---- Part 2: calibrated projection vs the paper ---------------------
     let trace120 = anchor_trace
@@ -82,7 +96,15 @@ fn main() -> anyhow::Result<()> {
 
     let mut table = Table::new(
         "Table I cols 1-2: single-GPU TeraEdges/s (simulated vs paper)",
-        &["Neurons", "Layers", "V100 sim", "V100 paper", "A100 sim", "A100 paper", "A100 speedup sim/paper"],
+        &[
+            "Neurons",
+            "Layers",
+            "V100 sim",
+            "V100 paper",
+            "A100 sim",
+            "A100 paper",
+            "A100 speedup sim/paper",
+        ],
     );
     for &(n, l, pv, pa) in PAPER {
         let trace = trace120.with_layers(l);

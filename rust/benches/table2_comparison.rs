@@ -43,7 +43,17 @@ fn main() -> anyhow::Result<()> {
 
     let mut table = Table::new(
         "Table II: speedup of this work over 2019 submissions (sim vs paper)",
-        &["Neurons", "Layers", "This work", "vs B&F", "paper", "vs Davis", "vs Ellis", "vs Wang19s", "vs cuSPARSE"],
+        &[
+            "Neurons",
+            "Layers",
+            "This work",
+            "vs B&F",
+            "paper",
+            "vs Davis",
+            "vs Ellis",
+            "vs Wang19s",
+            "vs cuSPARSE",
+        ],
     );
     let mut shape_ok = 0usize;
     for (i, &(n, l, bf, davis, ellis, wang, cusparse)) in REFS.iter().enumerate() {
@@ -55,7 +65,8 @@ fn main() -> anyhow::Result<()> {
             .map(|&g| sim.simulate(&p, &trace, g).edges_per_sec)
             .fold(0.0f64, f64::max);
         let s_bf = ours / bf;
-        let fmt_opt = |r: Option<f64>| r.map(|x| format!("{:.0}x", ours / x)).unwrap_or_else(|| "-".into());
+        let fmt_opt =
+            |r: Option<f64>| r.map(|x| format!("{:.0}x", ours / x)).unwrap_or_else(|| "-".into());
         table.row(vec![
             n.to_string(),
             l.to_string(),

@@ -1,8 +1,15 @@
 //! Shared bench harness (the offline crate set has no criterion):
-//! warmup + timed iterations + summary statistics + paper-style tables.
+//! warmup + timed iterations + summary statistics + paper-style tables,
+//! plus the unified `BENCH_*.json` report (`spdnn-bench-v1`) every bench
+//! emits so throughput is comparable in TeraEdges/s across benches and
+//! across PRs.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// Measurement configuration.
@@ -68,7 +75,12 @@ impl Measurement {
 }
 
 /// Run `f` under the config; returns per-iteration seconds.
-pub fn bench<F: FnMut()>(cfg: &BenchConfig, name: &str, work_per_iter: f64, mut f: F) -> Measurement {
+pub fn bench<F: FnMut()>(
+    cfg: &BenchConfig,
+    name: &str,
+    work_per_iter: f64,
+    mut f: F,
+) -> Measurement {
     for _ in 0..cfg.warmup_iters {
         f();
     }
@@ -87,6 +99,191 @@ pub fn bench<F: FnMut()>(cfg: &BenchConfig, name: &str, work_per_iter: f64, mut 
         secs: Summary::of(&samples).expect("at least one sample"),
         work_per_iter,
     }
+}
+
+// ---------------------------------------------------------------------------
+// Unified bench report (spdnn-bench-v1)
+// ---------------------------------------------------------------------------
+
+/// Schema tag every bench JSON carries.
+pub const BENCH_SCHEMA: &str = "spdnn-bench-v1";
+
+/// One case of a bench report. All timing fields are seconds; throughput
+/// is TeraEdges/s (the paper's comparison unit).
+#[derive(Clone, Debug)]
+pub struct BenchCase {
+    pub name: String,
+    /// Work per iteration in edges (`simulator::scaling` accounting).
+    pub edges_per_iter: f64,
+    pub iters: usize,
+    pub secs_mean: f64,
+    pub secs_p50: f64,
+    pub secs_min: f64,
+    /// Mean-time throughput.
+    pub teraedges_per_sec: f64,
+    /// Best-iteration throughput.
+    pub peak_teraedges_per_sec: f64,
+    /// Bench-specific extras (kept out of the required schema).
+    pub extra: Vec<(String, Json)>,
+}
+
+impl BenchCase {
+    pub fn from_measurement(m: &Measurement) -> BenchCase {
+        BenchCase {
+            name: m.name.clone(),
+            edges_per_iter: m.work_per_iter,
+            iters: m.secs.count,
+            secs_mean: m.secs.mean,
+            secs_p50: m.secs.p50,
+            secs_min: m.secs.min,
+            teraedges_per_sec: m.throughput() / 1e12,
+            peak_teraedges_per_sec: m.peak_throughput() / 1e12,
+            extra: Vec::new(),
+        }
+    }
+
+    /// Build from explicit timing + throughput (benches whose throughput
+    /// is not `work / mean_secs`, e.g. closed-loop serving).
+    pub fn from_parts(
+        name: &str,
+        edges_per_iter: f64,
+        secs: &Summary,
+        edges_per_sec: f64,
+    ) -> BenchCase {
+        BenchCase {
+            name: name.to_string(),
+            edges_per_iter,
+            iters: secs.count,
+            secs_mean: secs.mean,
+            secs_p50: secs.p50,
+            secs_min: secs.min,
+            teraedges_per_sec: edges_per_sec / 1e12,
+            peak_teraedges_per_sec: edges_per_sec / 1e12,
+            extra: Vec::new(),
+        }
+    }
+
+    pub fn with_extra(mut self, key: &str, value: Json) -> BenchCase {
+        self.extra.push((key.to_string(), value));
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("edges_per_iter", Json::Num(self.edges_per_iter)),
+            ("iters", Json::Int(self.iters as i64)),
+            ("secs_mean", Json::Num(self.secs_mean)),
+            ("secs_p50", Json::Num(self.secs_p50)),
+            ("secs_min", Json::Num(self.secs_min)),
+            ("teraedges_per_sec", Json::Num(self.teraedges_per_sec)),
+            ("peak_teraedges_per_sec", Json::Num(self.peak_teraedges_per_sec)),
+        ];
+        for (k, v) in &self.extra {
+            fields.push((k.as_str(), v.clone()));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// A whole bench run: run-level parameters + per-case measurements.
+/// Serializes to `BENCH_<name>.json` in the unified schema.
+#[derive(Clone, Debug, Default)]
+pub struct BenchReport {
+    pub bench: String,
+    pub params: Vec<(String, Json)>,
+    pub cases: Vec<BenchCase>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str) -> BenchReport {
+        BenchReport { bench: bench.to_string(), params: Vec::new(), cases: Vec::new() }
+    }
+
+    pub fn param(&mut self, key: &str, value: Json) {
+        self.params.push((key.to_string(), value));
+    }
+
+    pub fn case(&mut self, case: BenchCase) {
+        self.cases.push(case);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::Str(BENCH_SCHEMA.to_string())),
+            ("bench", Json::Str(self.bench.clone())),
+            (
+                "params",
+                Json::Obj(self.params.iter().map(|(k, v)| (k.clone(), v.clone())).collect()),
+            ),
+            ("cases", Json::Arr(self.cases.iter().map(BenchCase::to_json).collect())),
+        ])
+    }
+
+    /// Write `BENCH_<bench>.json` into `dir`; returns the path.
+    pub fn write_to(&self, dir: &Path) -> Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Write `BENCH_<bench>.json` into the working directory.
+    pub fn write(&self) -> Result<PathBuf> {
+        self.write_to(Path::new("."))
+    }
+}
+
+/// Validate a parsed bench JSON against the unified schema. This is the
+/// CI bench-smoke gate: shape and required fields only, never perf.
+pub fn validate_report(doc: &Json) -> Result<()> {
+    let schema = doc.req_str("schema")?;
+    if schema != BENCH_SCHEMA {
+        bail!("schema {schema:?} is not {BENCH_SCHEMA:?}");
+    }
+    if doc.req_str("bench")?.is_empty() {
+        bail!("empty bench name");
+    }
+    let cases = doc.req_arr("cases")?;
+    if cases.is_empty() {
+        bail!("no cases");
+    }
+    for (i, case) in cases.iter().enumerate() {
+        validate_case(case).with_context(|| format!("case {i}"))?;
+    }
+    Ok(())
+}
+
+fn validate_case(case: &Json) -> Result<()> {
+    if case.req_str("name")?.is_empty() {
+        bail!("empty case name");
+    }
+    let teps = case.req_f64("teraedges_per_sec")?;
+    if !teps.is_finite() || teps < 0.0 {
+        bail!("teraedges_per_sec {teps} is not a finite non-negative number");
+    }
+    let p50 = case.req_f64("secs_p50")?;
+    if !p50.is_finite() || p50 <= 0.0 {
+        bail!("secs_p50 {p50} is not a positive number");
+    }
+    for key in ["secs_mean", "secs_min"] {
+        let v = case.req_f64(key)?;
+        if !v.is_finite() || v <= 0.0 {
+            bail!("{key} {v} is not a positive number");
+        }
+    }
+    let peak = case.req_f64("peak_teraedges_per_sec")?;
+    if !peak.is_finite() || peak < 0.0 {
+        bail!("peak_teraedges_per_sec {peak} is not a finite non-negative number");
+    }
+    let edges = case.req_f64("edges_per_iter")?;
+    if !edges.is_finite() || edges < 0.0 {
+        bail!("edges_per_iter {edges} is not a finite non-negative number");
+    }
+    if case.req_usize("iters")? == 0 {
+        bail!("iters must be at least 1");
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -111,7 +308,79 @@ mod tests {
     #[test]
     fn budget_caps_iterations() {
         let cfg = BenchConfig { warmup_iters: 0, iters: 1000, max_secs: 0.02 };
-        let m = bench(&cfg, "slow", 1.0, || std::thread::sleep(std::time::Duration::from_millis(10)));
+        let m = bench(&cfg, "slow", 1.0, || {
+            std::thread::sleep(std::time::Duration::from_millis(10))
+        });
         assert!(m.secs.count < 1000);
+    }
+
+    fn sample_report() -> BenchReport {
+        let cfg = BenchConfig { warmup_iters: 0, iters: 2, max_secs: 5.0 };
+        let m = bench(&cfg, "case-a", 1e6, || {
+            std::thread::sleep(std::time::Duration::from_micros(200))
+        });
+        let mut report = BenchReport::new("unit_test");
+        report.param("neurons", Json::Int(1024));
+        report.case(BenchCase::from_measurement(&m).with_extra("speedup", Json::Num(1.0)));
+        report
+    }
+
+    #[test]
+    fn report_round_trips_and_validates() {
+        let report = sample_report();
+        let doc = report.to_json();
+        validate_report(&doc).unwrap();
+        let reparsed = Json::parse(&doc.to_string()).unwrap();
+        validate_report(&reparsed).unwrap();
+        assert_eq!(reparsed.req_str("schema").unwrap(), BENCH_SCHEMA);
+        assert_eq!(reparsed.req_str("bench").unwrap(), "unit_test");
+        let case = &reparsed.req_arr("cases").unwrap()[0];
+        assert!(case.req_f64("teraedges_per_sec").unwrap() > 0.0);
+        assert!(case.req_f64("speedup").is_ok()); // extras survive
+    }
+
+    #[test]
+    fn report_writes_bench_file() {
+        let report = sample_report();
+        let dir = std::env::temp_dir().join(format!("spdnn_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = report.write_to(&dir).unwrap();
+        assert!(path.ends_with("BENCH_unit_test.json"));
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        validate_report(&doc).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_reports() {
+        assert!(validate_report(&Json::parse(r#"{}"#).unwrap()).is_err());
+        assert!(validate_report(
+            &Json::parse(r#"{"schema":"other","bench":"x","cases":[]}"#).unwrap()
+        )
+        .is_err());
+        let empty_cases = format!(r#"{{"schema":"{BENCH_SCHEMA}","bench":"x","cases":[]}}"#);
+        assert!(validate_report(&Json::parse(&empty_cases).unwrap()).is_err());
+        let missing_teps = format!(
+            r#"{{"schema":"{BENCH_SCHEMA}","bench":"x","cases":[{{"name":"a","secs_p50":0.1,"edges_per_iter":1.0,"iters":1}}]}}"#
+        );
+        assert!(validate_report(&Json::parse(&missing_teps).unwrap()).is_err());
+        let bad_p50 = format!(
+            r#"{{"schema":"{BENCH_SCHEMA}","bench":"x","cases":[{{"name":"a","teraedges_per_sec":1.0,"secs_p50":0.0,"edges_per_iter":1.0,"iters":1}}]}}"#
+        );
+        assert!(validate_report(&Json::parse(&bad_p50).unwrap()).is_err());
+        // Every documented per-case field is required, not just the core.
+        let missing_mean = format!(
+            r#"{{"schema":"{BENCH_SCHEMA}","bench":"x","cases":[{{"name":"a","teraedges_per_sec":1.0,"secs_p50":0.1,"secs_min":0.1,"peak_teraedges_per_sec":1.0,"edges_per_iter":1.0,"iters":1}}]}}"#
+        );
+        assert!(validate_report(&Json::parse(&missing_mean).unwrap()).is_err());
+    }
+
+    #[test]
+    fn from_parts_uses_explicit_throughput() {
+        let secs = Summary::of(&[0.5, 1.0, 1.5]).unwrap();
+        let case = BenchCase::from_parts("serving", 2e6, &secs, 4e12);
+        assert_eq!(case.teraedges_per_sec, 4.0);
+        assert_eq!(case.iters, 3);
+        assert_eq!(case.secs_p50, 1.0);
     }
 }

@@ -94,7 +94,11 @@ pub struct InferenceServer {
 
 impl InferenceServer {
     /// Start the serving thread.
-    pub fn start(model: ServedModel, backend: ServeBackend, policy: BatchPolicy) -> InferenceServer {
+    pub fn start(
+        model: ServedModel,
+        backend: ServeBackend,
+        policy: BatchPolicy,
+    ) -> InferenceServer {
         let (tx, rx) = mpsc::channel::<Request>();
         let neurons = model.neurons;
         let handle = std::thread::spawn(move || serve_loop(model, backend, policy, rx));
@@ -143,20 +147,33 @@ enum ServeExec {
     Pjrt(Box<PjrtExec>),
 }
 
-fn serve_loop(model: ServedModel, backend: ServeBackend, policy: BatchPolicy, rx: mpsc::Receiver<Request>) {
+fn build_exec(model: &ServedModel, backend: &ServeBackend) -> Result<ServeExec> {
+    match backend {
+        ServeBackend::Native { threads, minibatch } => {
+            Ok(ServeExec::Native(EllEngine::with_mb(*threads, *minibatch)?))
+        }
+        ServeBackend::Pjrt { artifacts } => {
+            Ok(ServeExec::Pjrt(Box::new(PjrtExec::new(artifacts, model.neurons)?)))
+        }
+    }
+}
+
+fn serve_loop(
+    model: ServedModel,
+    backend: ServeBackend,
+    policy: BatchPolicy,
+    rx: mpsc::Receiver<Request>,
+) {
     // Backend construction happens on this thread (xla handles are !Send).
-    let mut exec = match &backend {
-        ServeBackend::Native { threads, minibatch } => ServeExec::Native(EllEngine::with_mb(*threads, *minibatch)),
-        ServeBackend::Pjrt { artifacts } => match PjrtExec::new(artifacts, model.neurons) {
-            Ok(p) => ServeExec::Pjrt(Box::new(p)),
-            Err(e) => {
-                // Fail every request with the construction error.
-                while let Ok(req) = rx.recv() {
-                    let _ = req.resp.send(Err(anyhow!("backend init failed: {e:#}")));
-                }
-                return;
+    let mut exec = match build_exec(&model, &backend) {
+        Ok(exec) => exec,
+        Err(e) => {
+            // Fail every request with the construction error.
+            while let Ok(req) = rx.recv() {
+                let _ = req.resp.send(Err(anyhow!("backend init failed: {e:#}")));
             }
-        },
+            return;
+        }
     };
 
     loop {
@@ -214,7 +231,12 @@ fn process_panel(model: &ServedModel, exec: &mut ServeExec, panel: Vec<Request>)
 
 /// Full network over a panel (no pruning: every request needs its final
 /// activations). Returns per-feature activity flags.
-fn run_network(model: &ServedModel, exec: &mut ServeExec, y: &mut Vec<f32>, count: usize) -> Result<Vec<bool>> {
+fn run_network(
+    model: &ServedModel,
+    exec: &mut ServeExec,
+    y: &mut Vec<f32>,
+    count: usize,
+) -> Result<Vec<bool>> {
     let n = model.neurons;
     match exec {
         ServeExec::Native(engine) => {

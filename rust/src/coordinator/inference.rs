@@ -8,7 +8,10 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::data::Dataset;
+use crate::engine::{Autotuner, EngineKind, TuneKey};
 use crate::util::config::RuntimeConfig;
+use crate::util::table::fmt_teps;
+use crate::{log_info, log_warn};
 
 use super::metrics::{InferenceReport, Timer};
 use super::partition::partition_even;
@@ -24,19 +27,111 @@ pub enum Backend {
     Pjrt { artifacts: PathBuf },
 }
 
+/// Native engine selection: a fixed kernel, or the autotuner's choice.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineSelect {
+    Fixed(EngineKind),
+    /// Calibrate per network shape and pick the fastest (engine v2
+    /// tuning table; persisted via `RunOptions::tune_cache`).
+    Auto,
+}
+
 /// Options of one inference run beyond the RuntimeConfig.
 #[derive(Clone, Debug)]
 pub struct RunOptions {
     pub backend: Backend,
     /// Stream weights out-of-core from this packed file instead of memory.
     pub stream_from: Option<PathBuf>,
-    /// Threads per native worker (ignored by Pjrt).
+    /// Threads per native worker (ignored by Pjrt; overridden by Auto).
     pub native_threads: usize,
+    /// Which native layer kernel runs (ignored by Pjrt).
+    pub engine: EngineSelect,
+    /// Slice granularity of the sliced engine (fixed selection only).
+    pub slice: usize,
+    /// Load/persist autotuning decisions at this path (Auto only).
+    pub tune_cache: Option<PathBuf>,
 }
 
 impl Default for RunOptions {
     fn default() -> Self {
-        RunOptions { backend: Backend::Native, stream_from: None, native_threads: 1 }
+        RunOptions {
+            backend: Backend::Native,
+            stream_from: None,
+            native_threads: 1,
+            engine: EngineSelect::Fixed(EngineKind::Ell),
+            slice: 32,
+            tune_cache: None,
+        }
+    }
+}
+
+/// Fully-resolved native engine configuration of one run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NativeSpec {
+    pub engine: EngineKind,
+    pub minibatch: usize,
+    pub slice: usize,
+    pub threads: usize,
+}
+
+/// Resolve `opts.engine` to a concrete native configuration. `Auto`
+/// consults (and extends) the tuning table; on tuning failure it reports
+/// why and falls back to the ELL engine with the run's own knobs.
+pub fn resolve_native_spec(cfg: &RuntimeConfig, opts: &RunOptions) -> NativeSpec {
+    let fixed = |kind: EngineKind| NativeSpec {
+        engine: kind,
+        minibatch: cfg.minibatch,
+        slice: opts.slice.max(1),
+        threads: opts.native_threads.max(1),
+    };
+    match &opts.engine {
+        EngineSelect::Fixed(kind) => fixed(*kind),
+        EngineSelect::Auto => {
+            let key = TuneKey { neurons: cfg.neurons, k: cfg.k, layers: cfg.layers };
+            let mut tuner = match &opts.tune_cache {
+                Some(p) if p.exists() => match Autotuner::load(p) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        log_warn!(
+                            "auto backend: tuning table {} unreadable ({e:#}); \
+                             recalibrating (the file will be rewritten on save)",
+                            p.display()
+                        );
+                        Autotuner::default()
+                    }
+                },
+                _ => Autotuner::default(),
+            };
+            match tuner.tune(key) {
+                Ok(t) => {
+                    if let Some(p) = &opts.tune_cache {
+                        if let Err(e) = tuner.save(p) {
+                            log_warn!("auto backend: could not persist tuning table: {e:#}");
+                        }
+                    }
+                    log_info!(
+                        "auto backend: engine={} mb={} slice={} threads={} (calibration {})",
+                        t.engine,
+                        t.minibatch,
+                        t.slice,
+                        t.threads,
+                        fmt_teps(t.edges_per_sec)
+                    );
+                    NativeSpec {
+                        engine: t.engine,
+                        minibatch: t.minibatch,
+                        slice: t.slice.max(1),
+                        threads: t.threads.max(1),
+                    }
+                }
+                Err(e) => {
+                    log_warn!(
+                        "auto backend: tuning failed ({e:#}); falling back to the ell engine"
+                    );
+                    fixed(EngineKind::Ell)
+                }
+            }
+        }
     }
 }
 
@@ -46,13 +141,24 @@ pub fn run_inference(dataset: &Dataset, opts: &RunOptions) -> Result<InferenceRe
     let n = cfg.neurons;
     let shared = Arc::new(dataset.layers.clone());
 
+    let native_spec = match &opts.backend {
+        Backend::Native => Some(resolve_native_spec(cfg, opts)),
+        Backend::Pjrt { .. } => None,
+    };
+
     let parts = partition_even(cfg.batch, cfg.workers);
     let mut tasks = Vec::with_capacity(parts.len());
     for p in parts {
         let features = dataset.features[p.start * n..(p.start + p.count) * n].to_vec();
-        let backend = match &opts.backend {
-            Backend::Native => BackendKind::Native { threads: opts.native_threads, minibatch: cfg.minibatch },
-            Backend::Pjrt { artifacts } => BackendKind::Pjrt { artifacts: artifacts.clone() },
+        let backend = match (&opts.backend, &native_spec) {
+            (Backend::Native, Some(spec)) => BackendKind::Native {
+                threads: spec.threads,
+                minibatch: spec.minibatch,
+                engine: spec.engine,
+                slice: spec.slice,
+            },
+            (Backend::Pjrt { artifacts }, _) => BackendKind::Pjrt { artifacts: artifacts.clone() },
+            (Backend::Native, None) => unreachable!("native spec resolved above"),
         };
         let weights = match &opts.stream_from {
             Some(path) => WeightSource::File(path.clone()),
@@ -145,6 +251,64 @@ mod tests {
         // The synthetic inputs always lose some features over 6 layers
         // with -0.3 bias; if not, this dataset is degenerate for tests.
         assert!(report.pruning_savings() >= 0.0);
+    }
+
+    #[test]
+    fn every_engine_select_validates() {
+        let ds = Dataset::generate(&cfg(2, true)).unwrap();
+        let want = run_inference(&ds, &RunOptions::default()).unwrap();
+        for engine in [EngineKind::Csr, EngineKind::Sliced] {
+            let opts =
+                RunOptions { engine: EngineSelect::Fixed(engine), ..Default::default() };
+            let report = run_inference(&ds, &opts).unwrap();
+            validate(&report, &ds).unwrap();
+            assert_eq!(report.categories, want.categories, "engine={engine}");
+        }
+    }
+
+    #[test]
+    fn auto_engine_selects_and_persists() {
+        let ds = Dataset::generate(&cfg(1, true)).unwrap();
+        let cache =
+            std::env::temp_dir().join(format!("spdnn_tune_inf_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&cache);
+        let opts = RunOptions {
+            engine: EngineSelect::Auto,
+            tune_cache: Some(cache.clone()),
+            ..Default::default()
+        };
+        let report = run_inference(&ds, &opts).unwrap();
+        validate(&report, &ds).unwrap();
+        // The tuning decision is persisted for the next run…
+        let tuner = Autotuner::load(&cache).unwrap();
+        let key = TuneKey { neurons: 64, k: 4, layers: 6 };
+        let tuned = *tuner.cached(&key).expect("decision cached");
+        assert!(tuned.edges_per_sec > 0.0);
+        // …and a second run reuses it (still valid).
+        let again = run_inference(&ds, &opts).unwrap();
+        validate(&again, &ds).unwrap();
+        let _ = std::fs::remove_file(&cache);
+    }
+
+    #[test]
+    fn resolve_fixed_spec_uses_run_knobs() {
+        let cfg = cfg(1, true);
+        let opts = RunOptions {
+            engine: EngineSelect::Fixed(EngineKind::Sliced),
+            slice: 16,
+            native_threads: 3,
+            ..Default::default()
+        };
+        let spec = resolve_native_spec(&cfg, &opts);
+        assert_eq!(
+            spec,
+            NativeSpec {
+                engine: EngineKind::Sliced,
+                minibatch: cfg.minibatch,
+                slice: 16,
+                threads: 3,
+            }
+        );
     }
 
     #[test]

@@ -71,7 +71,8 @@ impl InferenceReport {
 
     /// Per-layer time summary across workers.
     pub fn layer_summary(&self) -> Option<Summary> {
-        let all: Vec<f64> = self.workers.iter().flat_map(|w| w.layer_secs.iter().copied()).collect();
+        let all: Vec<f64> =
+            self.workers.iter().flat_map(|w| w.layer_secs.iter().copied()).collect();
         Summary::of(&all)
     }
 

@@ -12,6 +12,8 @@ pub mod pool;
 pub mod pruning;
 pub mod worker;
 
-pub use inference::{run_inference, validate, Backend, RunOptions};
+pub use inference::{
+    resolve_native_spec, run_inference, validate, Backend, EngineSelect, NativeSpec, RunOptions,
+};
 pub use metrics::{InferenceReport, WorkerMetrics};
 pub use worker::{BackendKind, WeightSource, WorkerResult, WorkerTask};

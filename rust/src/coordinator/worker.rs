@@ -13,8 +13,9 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::engine::EllEngine;
-use crate::formats::EllMatrix;
+use crate::engine::{CsrEngine, EllEngine, EngineKind, SlicedEllEngine};
+use crate::formats::convert::ell_to_csr;
+use crate::formats::{EllMatrix, SlicedEll};
 use crate::runtime::{CompiledLayer, Kind, LayerLiterals, Manifest, PjrtBackend, WeightStreamer};
 
 use super::metrics::{Timer, WorkerMetrics};
@@ -23,8 +24,9 @@ use super::pruning::{flags_from_i32, flags_from_panel, ActiveSet};
 /// Which execution backend a worker uses.
 #[derive(Clone, Debug)]
 pub enum BackendKind {
-    /// Native Rust ELL engine (oracle / no-PJRT fallback).
-    Native { threads: usize, minibatch: usize },
+    /// Native Rust engine (oracle / no-PJRT fallback). `engine` picks the
+    /// layer kernel; `slice` is the sliced engine's granularity.
+    Native { threads: usize, minibatch: usize, engine: EngineKind, slice: usize },
     /// AOT artifacts through the PJRT CPU client.
     Pjrt { artifacts: PathBuf },
 }
@@ -85,8 +87,82 @@ impl<'a> LayerSource<'a> {
 }
 
 enum Exec {
-    Native(EllEngine),
+    Native(NativeExec),
     Pjrt(PjrtExec),
+}
+
+/// The resolved native layer kernel of one worker.
+enum NativeExec {
+    Csr(CsrEngine),
+    Ell(EllEngine),
+    Sliced {
+        engine: SlicedEllEngine,
+        slice: usize,
+        /// Resident weights pre-sliced once at worker start (format
+        /// construction is preprocessing, not inference time). `None`
+        /// for streamed weights, which convert at fetch time.
+        cache: Option<Vec<SlicedEll>>,
+    },
+}
+
+impl NativeExec {
+    fn build(
+        threads: usize,
+        minibatch: usize,
+        engine: EngineKind,
+        slice: usize,
+        resident: Option<&[EllMatrix]>,
+    ) -> Result<NativeExec> {
+        match engine {
+            EngineKind::Csr => Ok(NativeExec::Csr(CsrEngine)),
+            EngineKind::Ell => Ok(NativeExec::Ell(EllEngine::with_mb(threads, minibatch)?)),
+            EngineKind::Sliced => {
+                let slice = slice.max(1);
+                let cache = match resident {
+                    Some(layers) => Some(
+                        layers
+                            .iter()
+                            .map(|w| SlicedEll::from_ell(w, slice))
+                            .collect::<Result<Vec<SlicedEll>>>()?,
+                    ),
+                    None => None,
+                };
+                Ok(NativeExec::Sliced {
+                    engine: SlicedEllEngine::with_mb(threads, minibatch)?,
+                    slice,
+                    cache,
+                })
+            }
+        }
+    }
+
+    /// Run layer `layer` over the live feature panel.
+    fn layer(
+        &self,
+        layer: usize,
+        w: &EllMatrix,
+        bias: &[f32],
+        y_in: &[f32],
+        y_out: &mut [f32],
+    ) -> Result<()> {
+        match self {
+            NativeExec::Csr(e) => {
+                // The baseline re-derives CSR per layer — the Listing-1
+                // cost model, kept honest for comparisons.
+                let csr = ell_to_csr(w)?;
+                e.layer(&csr, bias, y_in, y_out);
+            }
+            NativeExec::Ell(e) => e.layer(w, bias, y_in, y_out),
+            NativeExec::Sliced { engine, slice, cache } => match cache {
+                Some(layers) => engine.layer(&layers[layer], bias, y_in, y_out),
+                None => {
+                    let s = SlicedEll::from_ell(w, *slice)?;
+                    engine.layer(&s, bias, y_in, y_out);
+                }
+            },
+        }
+        Ok(())
+    }
 }
 
 /// PJRT execution state of one worker: one client plus a lazily-compiled
@@ -198,20 +274,28 @@ pub fn run_worker(task: WorkerTask) -> Result<WorkerResult> {
         bail!("feature partition not a multiple of neurons");
     }
 
+    let memory_layers: Option<Arc<Vec<EllMatrix>>> = match &task.weights {
+        WeightSource::Memory(m) => Some(m.clone()),
+        WeightSource::File(_) => None,
+    };
+
     let mut exec = match &task.backend {
-        BackendKind::Native { threads, minibatch } => {
-            Exec::Native(EllEngine::with_mb(*threads, *minibatch))
-        }
+        BackendKind::Native { threads, minibatch, engine, slice } => Exec::Native(
+            NativeExec::build(
+                *threads,
+                *minibatch,
+                *engine,
+                *slice,
+                memory_layers.as_ref().map(|m| m.as_slice()),
+            )
+            .with_context(|| format!("worker {} native engine init", task.id))?,
+        ),
         BackendKind::Pjrt { artifacts } => Exec::Pjrt(
             PjrtExec::new(artifacts, n)
                 .with_context(|| format!("worker {} backend init", task.id))?,
         ),
     };
 
-    let memory_layers: Option<Arc<Vec<EllMatrix>>> = match &task.weights {
-        WeightSource::Memory(m) => Some(m.clone()),
-        WeightSource::File(_) => None,
-    };
     let mut source = match &task.weights {
         WeightSource::Memory(_) => LayerSource::Mem(memory_layers.as_deref().unwrap()),
         WeightSource::File(p) => LayerSource::Stream(WeightStreamer::from_file(p, task.nlayers)),
@@ -242,7 +326,7 @@ pub fn run_worker(task: WorkerTask) -> Result<WorkerResult> {
         let flags = match &mut exec {
             Exec::Native(engine) => {
                 scratch.resize(live * n, 0.0);
-                engine.layer(&w, &task.bias, &y[..live * n], &mut scratch[..live * n]);
+                engine.layer(layer, &w, &task.bias, &y[..live * n], &mut scratch[..live * n])?;
                 std::mem::swap(&mut y, &mut scratch);
                 y.truncate(live * n);
                 flags_from_panel(&y, n, live)
@@ -284,7 +368,12 @@ mod tests {
     fn native_task(ds: &Dataset, prune: bool) -> WorkerTask {
         WorkerTask {
             id: 0,
-            backend: BackendKind::Native { threads: 1, minibatch: 12 },
+            backend: BackendKind::Native {
+                threads: 1,
+                minibatch: 12,
+                engine: EngineKind::Ell,
+                slice: 32,
+            },
             neurons: ds.cfg.neurons,
             k: ds.cfg.k,
             nlayers: ds.cfg.layers,
@@ -304,6 +393,53 @@ mod tests {
         assert_eq!(out.final_y.len(), out.categories.len() * 64);
         assert_eq!(out.metrics.layer_secs.len(), 5);
         assert_eq!(out.metrics.live_per_layer[0], 12);
+    }
+
+    #[test]
+    fn every_native_engine_matches_truth() {
+        let ds = Dataset::generate(&small_cfg()).unwrap();
+        let want = run_worker(native_task(&ds, true)).unwrap();
+        for engine in [EngineKind::Csr, EngineKind::Ell, EngineKind::Sliced] {
+            for slice in [1usize, 8, 64] {
+                let mut task = native_task(&ds, true);
+                task.backend =
+                    BackendKind::Native { threads: 1, minibatch: 12, engine, slice };
+                let out = run_worker(task).unwrap();
+                assert_eq!(out.categories, ds.truth_categories, "engine={engine} slice={slice}");
+                assert_eq!(out.final_y, want.final_y, "engine={engine} slice={slice}");
+            }
+        }
+    }
+
+    #[test]
+    fn sliced_engine_streams_weights() {
+        let ds = Dataset::generate(&small_cfg()).unwrap();
+        let dir = std::env::temp_dir().join(format!("spdnn_worker_sl_{}", std::process::id()));
+        ds.save(&dir).unwrap();
+        let mut task = native_task(&ds, true);
+        task.backend = BackendKind::Native {
+            threads: 1,
+            minibatch: 12,
+            engine: EngineKind::Sliced,
+            slice: 16,
+        };
+        task.weights = WeightSource::File(dir.join("weights.bin"));
+        let streamed = run_worker(task).unwrap();
+        assert_eq!(streamed.categories, ds.truth_categories);
+    }
+
+    #[test]
+    fn bad_minibatch_is_an_engine_init_error() {
+        let ds = Dataset::generate(&small_cfg()).unwrap();
+        let mut task = native_task(&ds, true);
+        task.backend = BackendKind::Native {
+            threads: 1,
+            minibatch: 0,
+            engine: EngineKind::Ell,
+            slice: 32,
+        };
+        let err = run_worker(task).unwrap_err().to_string();
+        assert!(err.contains("native engine init"), "unexpected error: {err}");
     }
 
     #[test]

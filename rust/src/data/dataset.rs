@@ -72,7 +72,12 @@ impl Dataset {
 }
 
 /// Reference ground truth through the native ELL engine.
-fn compute_truth(layers: &[EllMatrix], bias: &[f32], features: &[f32], neurons: usize) -> Vec<usize> {
+fn compute_truth(
+    layers: &[EllMatrix],
+    bias: &[f32],
+    features: &[f32],
+    neurons: usize,
+) -> Vec<usize> {
     let engine = EllEngine::new(1);
     let mut y = features.to_vec();
     let mut scratch = vec![0f32; y.len()];

@@ -1,0 +1,331 @@
+//! Per-network autotuner for the native engines.
+//!
+//! The paper fixes MINIBATCH=12 and warp-granularity slicing for the
+//! V100; the right point shifts with network shape and host (Gale et
+//! al.: layout-aware traversal plus per-problem tuning is where sparse
+//! kernels win). This module sweeps `(engine, minibatch, slice
+//! granularity, threads)` over a short calibration run on a synthetic
+//! layer of the requested shape, picks the fastest configuration by
+//! edges/second, and caches the decision in a tuning table keyed by
+//! `(neurons, k, layers)`. The table serializes to JSON
+//! (`spdnn-tune-v1`) so a deployment can persist tuning across runs
+//! (`--tune-cache`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::formats::convert::ell_to_csr;
+use crate::formats::SlicedEll;
+use crate::radixnet::{RadixNet, Topology};
+use crate::util::config::RuntimeConfig;
+use crate::util::json::Json;
+use crate::util::prng::Xoshiro256;
+use crate::util::threadpool::ThreadPool;
+
+use super::{CsrEngine, EllEngine, EngineKind, SlicedEllEngine};
+
+/// Schema tag of the serialized tuning table.
+pub const TUNE_SCHEMA: &str = "spdnn-tune-v1";
+
+/// Network shape a tuning decision applies to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TuneKey {
+    pub neurons: usize,
+    pub k: usize,
+    pub layers: usize,
+}
+
+/// One tuning decision: the engine and its knobs, plus the calibration
+/// throughput that backed the choice.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TunedConfig {
+    pub engine: EngineKind,
+    pub minibatch: usize,
+    /// Slice granularity (sliced engine only; 0 for csr/ell).
+    pub slice: usize,
+    pub threads: usize,
+    /// Calibration throughput (edges/second) of this configuration.
+    pub edges_per_sec: f64,
+}
+
+/// The autotuner: a calibration sweep plus the cached decision table.
+pub struct Autotuner {
+    table: BTreeMap<TuneKey, TunedConfig>,
+    /// Wall-clock budget of one calibration sweep (seconds). Once at
+    /// least one candidate is measured the sweep stops on exhaustion.
+    pub budget_secs: f64,
+    /// Timed repetitions per candidate (min is kept).
+    pub reps: usize,
+    /// Thread counts to sweep (clamped to the calibration batch).
+    pub thread_candidates: Vec<usize>,
+}
+
+impl Default for Autotuner {
+    fn default() -> Self {
+        let pool = ThreadPool::global().size();
+        let mut threads = vec![1];
+        if pool > 1 {
+            threads.push(pool.min(8));
+        }
+        Autotuner { table: BTreeMap::new(), budget_secs: 1.5, reps: 2, thread_candidates: threads }
+    }
+}
+
+impl Autotuner {
+    /// The cached decision for `key`, if one exists.
+    pub fn cached(&self, key: &TuneKey) -> Option<&TunedConfig> {
+        self.table.get(key)
+    }
+
+    /// Number of cached decisions.
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+
+    /// Seed or override a decision (used to preload persisted tables).
+    pub fn insert(&mut self, key: TuneKey, cfg: TunedConfig) {
+        self.table.insert(key, cfg);
+    }
+
+    /// The decision for `key`: cached if present, else calibrated now.
+    pub fn tune(&mut self, key: TuneKey) -> Result<TunedConfig> {
+        if let Some(c) = self.table.get(&key) {
+            return Ok(*c);
+        }
+        let choice = self.calibrate(&key)?;
+        self.table.insert(key, choice);
+        Ok(choice)
+    }
+
+    /// Measure every candidate on a synthetic layer of the key's shape
+    /// and return the fastest configuration.
+    fn calibrate(&self, key: &TuneKey) -> Result<TunedConfig> {
+        let n = key.neurons;
+        let k = key.k;
+        // Representative single layer + feature panel; RadixNet::new
+        // validates the shape (k <= n, n within u16 indices).
+        let net = RadixNet::new(n, 1, k, Topology::Random, 0xA11)?;
+        let ell = net.layer_ell(0);
+        let csr = ell_to_csr(&ell)?;
+        let bias = vec![RuntimeConfig::challenge_bias(n); n];
+        let batch = (1usize << 17).div_ceil(n.max(1)).clamp(16, 64);
+        let mut rng = Xoshiro256::new(0xFEED);
+        let y: Vec<f32> =
+            (0..batch * n).map(|_| if rng.next_f32() < 0.3 { 1.0 } else { 0.0 }).collect();
+        let edges = (batch * n * k) as f64;
+
+        // Candidate grid. Sorted + deduped so thread clamping cannot
+        // produce duplicate measurements; EngineKind order makes the
+        // sweep deterministic.
+        let mut cands: Vec<(EngineKind, usize, usize, usize)> = vec![(EngineKind::Csr, 1, 0, 1)];
+        for &t in &self.thread_candidates {
+            let t = t.clamp(1, batch);
+            for &mb in &[4usize, 12, 24] {
+                cands.push((EngineKind::Ell, mb, 0, t));
+                for &slice in &[16usize, 32] {
+                    cands.push((EngineKind::Sliced, mb, slice.min(n).max(1), t));
+                }
+            }
+        }
+        cands.sort_unstable();
+        cands.dedup();
+
+        let mut out = vec![0f32; y.len()];
+        let reps = self.reps.max(1);
+        let mut time = |run: &mut dyn FnMut(&mut [f32])| -> f64 {
+            run(&mut out); // warmup
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let t = Instant::now();
+                run(&mut out);
+                best = best.min(t.elapsed().as_secs_f64());
+            }
+            best.max(1e-9)
+        };
+
+        let started = Instant::now();
+        let mut best: Option<TunedConfig> = None;
+        for (engine, mb, slice, threads) in cands {
+            if best.is_some() && started.elapsed().as_secs_f64() > self.budget_secs {
+                break; // budget exhausted; keep the best so far
+            }
+            let secs = match engine {
+                EngineKind::Csr => time(&mut |out| CsrEngine.layer(&csr, &bias, &y, out)),
+                EngineKind::Ell => {
+                    let e = EllEngine::with_mb(threads, mb)?;
+                    time(&mut |out| e.layer(&ell, &bias, &y, out))
+                }
+                EngineKind::Sliced => {
+                    let s = SlicedEll::from_ell(&ell, slice)?;
+                    let e = SlicedEllEngine::with_mb(threads, mb)?;
+                    time(&mut |out| e.layer(&s, &bias, &y, out))
+                }
+            };
+            let eps = edges / secs;
+            let better = match &best {
+                None => true,
+                Some(b) => eps > b.edges_per_sec,
+            };
+            if better {
+                best =
+                    Some(TunedConfig { engine, minibatch: mb, slice, threads, edges_per_sec: eps });
+            }
+        }
+        best.ok_or_else(|| anyhow!("no calibration candidate completed"))
+    }
+
+    // ------------------------------------------------------- persistence
+
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .table
+            .iter()
+            .map(|(key, cfg)| {
+                Json::obj(vec![
+                    ("neurons", Json::Int(key.neurons as i64)),
+                    ("k", Json::Int(key.k as i64)),
+                    ("layers", Json::Int(key.layers as i64)),
+                    ("engine", Json::Str(cfg.engine.as_str().to_string())),
+                    ("minibatch", Json::Int(cfg.minibatch as i64)),
+                    ("slice", Json::Int(cfg.slice as i64)),
+                    ("threads", Json::Int(cfg.threads as i64)),
+                    ("edges_per_sec", Json::Num(cfg.edges_per_sec)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::Str(TUNE_SCHEMA.to_string())),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Merge a serialized table into this tuner.
+    pub fn load_table(&mut self, doc: &Json) -> Result<()> {
+        let schema = doc.req_str("schema")?;
+        if schema != TUNE_SCHEMA {
+            bail!("tuning table schema {schema:?} is not {TUNE_SCHEMA:?}");
+        }
+        for e in doc.req_arr("entries")? {
+            let key = TuneKey {
+                neurons: e.req_usize("neurons")?,
+                k: e.req_usize("k")?,
+                layers: e.req_usize("layers")?,
+            };
+            let cfg = TunedConfig {
+                engine: EngineKind::parse(e.req_str("engine")?)?,
+                minibatch: e.req_usize("minibatch")?,
+                slice: e.req_usize("slice")?,
+                threads: e.req_usize("threads")?,
+                edges_per_sec: e.req_f64("edges_per_sec")?,
+            };
+            self.table.insert(key, cfg);
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing tuning table {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Autotuner> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tuning table {}", path.display()))?;
+        let doc = Json::parse(&text).context("parsing tuning table")?;
+        let mut tuner = Autotuner::default();
+        tuner.load_table(&doc)?;
+        Ok(tuner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_tuner() -> Autotuner {
+        Autotuner {
+            table: BTreeMap::new(),
+            budget_secs: 0.25,
+            reps: 1,
+            thread_candidates: vec![1],
+        }
+    }
+
+    #[test]
+    fn tune_returns_and_caches_a_decision() {
+        let mut tuner = quick_tuner();
+        let key = TuneKey { neurons: 64, k: 4, layers: 3 };
+        let first = tuner.tune(key).unwrap();
+        assert!(first.edges_per_sec > 0.0);
+        assert!(first.minibatch >= 1);
+        assert_eq!(tuner.len(), 1);
+        // Second call must come from the table (identical, no re-measure).
+        let second = tuner.tune(key).unwrap();
+        assert_eq!(second, first);
+        assert_eq!(tuner.len(), 1);
+        assert_eq!(tuner.cached(&key), Some(&first));
+    }
+
+    #[test]
+    fn invalid_shapes_fail_to_tune() {
+        let mut tuner = quick_tuner();
+        assert!(tuner.tune(TuneKey { neurons: 16, k: 32, layers: 1 }).is_err());
+        assert!(tuner.tune(TuneKey { neurons: 1 << 17, k: 4, layers: 1 }).is_err());
+        assert!(tuner.is_empty());
+    }
+
+    #[test]
+    fn table_json_round_trips() {
+        let mut tuner = quick_tuner();
+        let key = TuneKey { neurons: 128, k: 8, layers: 7 };
+        tuner.insert(
+            key,
+            TunedConfig {
+                engine: EngineKind::Sliced,
+                minibatch: 12,
+                slice: 32,
+                threads: 4,
+                edges_per_sec: 1.5e9,
+            },
+        );
+        let doc = tuner.to_json();
+        let mut other = quick_tuner();
+        other.load_table(&doc).unwrap();
+        assert_eq!(other.cached(&key), tuner.cached(&key));
+    }
+
+    #[test]
+    fn save_and_load_file() {
+        let mut tuner = quick_tuner();
+        let key = TuneKey { neurons: 64, k: 4, layers: 2 };
+        tuner.insert(
+            key,
+            TunedConfig {
+                engine: EngineKind::Ell,
+                minibatch: 24,
+                slice: 0,
+                threads: 2,
+                edges_per_sec: 9.0e8,
+            },
+        );
+        let path = std::env::temp_dir().join(format!("spdnn_tune_{}.json", std::process::id()));
+        tuner.save(&path).unwrap();
+        let loaded = Autotuner::load(&path).unwrap();
+        assert_eq!(loaded.cached(&key), tuner.cached(&key));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bad_schema_rejected() {
+        let doc = Json::parse(r#"{"schema":"other","entries":[]}"#).unwrap();
+        let mut tuner = quick_tuner();
+        assert!(tuner.load_table(&doc).is_err());
+    }
+}

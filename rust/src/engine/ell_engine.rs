@@ -11,7 +11,10 @@
 //! * **thread parallelism** — the feature dimension is split across OS
 //!   threads (the multi-SM analog).
 
+use anyhow::{bail, Result};
+
 use crate::formats::EllMatrix;
+use crate::util::threadpool::{pool_chunks_mut, ThreadPool};
 
 use super::csr_engine::relu_clip;
 
@@ -19,10 +22,12 @@ use super::csr_engine::relu_clip;
 pub const MAX_MB: usize = 64;
 
 /// Optimized native engine.
+#[derive(Debug)]
 pub struct EllEngine {
     /// Feature-minibatch width (paper MINIBATCH, default 12).
     pub mb: usize,
-    /// OS threads for the feature dimension.
+    /// Worker threads for the feature dimension (jobs run on the
+    /// persistent `util::threadpool` global pool).
     pub threads: usize,
 }
 
@@ -31,14 +36,22 @@ impl EllEngine {
         EllEngine { mb: 12, threads: threads.max(1) }
     }
 
-    pub fn with_mb(threads: usize, mb: usize) -> EllEngine {
-        EllEngine { mb: mb.clamp(1, MAX_MB), threads: threads.max(1) }
+    /// Build with an explicit minibatch width.
+    ///
+    /// `mb` must lie in `1..=MAX_MB` — the accumulator panel is a fixed
+    /// stack array, so an out-of-range width is an error rather than the
+    /// silent clamp earlier revisions applied.
+    pub fn with_mb(threads: usize, mb: usize) -> Result<EllEngine> {
+        if mb == 0 || mb > MAX_MB {
+            bail!("minibatch {mb} out of range 1..={MAX_MB}");
+        }
+        Ok(EllEngine { mb, threads: threads.max(1) })
     }
 
     /// One layer over a dense [batch, neurons] row-major feature panel.
     ///
-    /// The batch is split across threads at *feature* granularity so no
-    /// thread ever sees a partial feature row.
+    /// The batch is split across pool workers at *feature* granularity so
+    /// no worker ever sees a partial feature row.
     pub fn layer(&self, w: &EllMatrix, bias: &[f32], y_in: &[f32], y_out: &mut [f32]) {
         let n = w.nrows;
         assert_eq!(w.ncols, n, "weight matrices are square");
@@ -51,13 +64,11 @@ impl EllEngine {
             self.layer_serial(w, bias, y_in, y_out);
             return;
         }
-        let feats_per = batch.div_ceil(threads);
-        std::thread::scope(|scope| {
-            for (t, out_chunk) in y_out.chunks_mut(feats_per * n).enumerate() {
-                let start = t * feats_per * n;
-                let in_chunk = &y_in[start..start + out_chunk.len()];
-                scope.spawn(move || self.layer_serial(w, bias, in_chunk, out_chunk));
-            }
+        let chunk = batch.div_ceil(threads) * n;
+        pool_chunks_mut(ThreadPool::global(), y_out, chunk, |t, out_chunk| {
+            let start = t * chunk;
+            let in_chunk = &y_in[start..start + out_chunk.len()];
+            self.layer_serial(w, bias, in_chunk, out_chunk);
         });
     }
 
@@ -96,7 +107,14 @@ impl EllEngine {
 
     /// One layer over a *compacted* active-feature panel: only the listed
     /// features exist in `y_in`/`y_out` (the coordinator's pruning path).
-    pub fn layer_active(&self, w: &EllMatrix, bias: &[f32], y_in: &[f32], y_out: &mut [f32], active: usize) {
+    pub fn layer_active(
+        &self,
+        w: &EllMatrix,
+        bias: &[f32],
+        y_in: &[f32],
+        y_out: &mut [f32],
+        active: usize,
+    ) {
         let n = w.nrows;
         assert!(active * n <= y_in.len());
         self.layer(w, bias, &y_in[..active * n], &mut y_out[..active * n]);
@@ -112,7 +130,12 @@ mod tests {
     use crate::util::prng::Xoshiro256;
     use crate::util::proptest::{self, Runner};
 
-    fn random_problem(rng: &mut Xoshiro256, n: usize, k: usize, batch: usize) -> (EllMatrix, Vec<f32>, Vec<f32>) {
+    fn random_problem(
+        rng: &mut Xoshiro256,
+        n: usize,
+        k: usize,
+        batch: usize,
+    ) -> (EllMatrix, Vec<f32>, Vec<f32>) {
         let net = RadixNet::new(n, 1, k, Topology::Random, rng.next_u64()).unwrap();
         let mut w = net.layer_ell(0);
         // Randomize values away from the constant 1/16 for a harder test.
@@ -150,12 +173,24 @@ mod tests {
         let mut rng = Xoshiro256::new(77);
         let (w, bias, y) = random_problem(&mut rng, 64, 8, 30);
         let mut want = vec![0.0; y.len()];
-        EllEngine::with_mb(1, 1).layer(&w, &bias, &y, &mut want);
+        EllEngine::with_mb(1, 1).unwrap().layer(&w, &bias, &y, &mut want);
         for mb in [2, 4, 12, 30, 64] {
             let mut got = vec![0.0; y.len()];
-            EllEngine::with_mb(1, mb.min(63)).layer(&w, &bias, &y, &mut got);
+            EllEngine::with_mb(1, mb).unwrap().layer(&w, &bias, &y, &mut got);
             assert_eq!(got, want, "mb={mb}");
         }
+    }
+
+    #[test]
+    fn with_mb_rejects_out_of_range() {
+        assert!(EllEngine::with_mb(1, 0).is_err());
+        assert!(EllEngine::with_mb(1, MAX_MB + 1).is_err());
+        assert!(EllEngine::with_mb(1, 1000).is_err());
+        assert_eq!(EllEngine::with_mb(1, 1).unwrap().mb, 1);
+        assert_eq!(EllEngine::with_mb(1, MAX_MB).unwrap().mb, MAX_MB);
+        // The error message names the accepted range.
+        let err = EllEngine::with_mb(1, 65).unwrap_err().to_string();
+        assert!(err.contains("1..=64"), "unexpected message: {err}");
     }
 
     #[test]

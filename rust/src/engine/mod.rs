@@ -1,10 +1,70 @@
-//! Native Rust inference engines: the Listing-1 baseline (CSR) and the
-//! Listing-2 optimized engine (ELL panels, minibatch reuse, threads).
-//! They serve as oracles for the PJRT path, as the no-PJRT fallback
-//! backend, and as comparator series in the benches.
+//! Native Rust inference engines: the Listing-1 baseline (CSR), the
+//! row-major panel engine (ELL, minibatch reuse) and the engine-v2
+//! sliced-ELL engine (transposed within-slice traversal — the paper's
+//! Listing-2 layout), plus the per-network autotuner that picks between
+//! them. They serve as oracles for the PJRT path, as the no-PJRT
+//! fallback backend, and as comparator series in the benches.
 
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+pub mod autotune;
 pub mod csr_engine;
 pub mod ell_engine;
+pub mod sliced_engine;
 
+pub use autotune::{Autotuner, TuneKey, TunedConfig};
 pub use csr_engine::{relu_clip, CsrEngine};
-pub use ell_engine::EllEngine;
+pub use ell_engine::{EllEngine, MAX_MB};
+pub use sliced_engine::SlicedEllEngine;
+
+/// Which native engine executes layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EngineKind {
+    /// Listing-1 baseline: per-feature CSR traversal, no weight reuse.
+    Csr,
+    /// Row-major ELL panels with minibatch register tiling.
+    Ell,
+    /// Engine v2: transposed sliced-ELL traversal (Listing 2).
+    Sliced,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        match s {
+            "csr" => Ok(EngineKind::Csr),
+            "ell" => Ok(EngineKind::Ell),
+            "sliced" => Ok(EngineKind::Sliced),
+            other => bail!("unknown engine {other:?} (csr|ell|sliced)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EngineKind::Csr => "csr",
+            EngineKind::Ell => "ell",
+            EngineKind::Sliced => "sliced",
+        }
+    }
+}
+
+impl fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_round_trips() {
+        for kind in [EngineKind::Csr, EngineKind::Ell, EngineKind::Sliced] {
+            assert_eq!(EngineKind::parse(kind.as_str()).unwrap(), kind);
+            assert_eq!(format!("{kind}"), kind.as_str());
+        }
+        assert!(EngineKind::parse("warp").is_err());
+    }
+}

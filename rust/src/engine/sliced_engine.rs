@@ -1,0 +1,256 @@
+//! Engine v2 — native execution directly over the paper's transposed
+//! sliced-ELL layout (Listing 2, §III.A.3).
+//!
+//! What the CUDA kernel gets from this layout, and the CPU analog here:
+//!
+//! * **coalesced weight reads** — within a slice the storage is
+//!   transposed (`index[displ + m * slice + lane]`), so the inner lane
+//!   loop walks *contiguous* memory the way consecutive CUDA lanes touch
+//!   consecutive addresses. The per-row `EllMatrix` walk reads one row's
+//!   panel at a time instead;
+//! * **register tiling** — each `(idx, val)` element is read once and
+//!   reused across a minibatch of `mb` features; accumulators live in a
+//!   fixed per-slice panel (`lanes × mb`);
+//! * **low padding** — slices pad to the *local* max row length
+//!   (`width[s]`), not the global max, so irregular rows cost little
+//!   (paper Figure 2);
+//! * **fused epilogue** — bias add + `relu_clip` happen on the
+//!   accumulator write-out, no second pass over the panel;
+//! * **persistent threads** — the feature dimension is split across the
+//!   process-wide `util::threadpool` pool, replacing per-layer thread
+//!   spawns.
+//!
+//! Accumulation order per output equals the CSR/ELL order (slices store
+//! row entries position-major), so outputs are bit-identical to
+//! `CsrEngine` and `EllEngine` — enforced by `tests/engine_equivalence`.
+
+use anyhow::{bail, Result};
+
+use crate::formats::SlicedEll;
+use crate::util::threadpool::{pool_chunks_mut, ThreadPool};
+
+use super::csr_engine::relu_clip;
+use super::ell_engine::MAX_MB;
+
+/// Native engine over the transposed sliced-ELL layout.
+#[derive(Debug)]
+pub struct SlicedEllEngine {
+    /// Feature-minibatch width (paper MINIBATCH, default 12).
+    pub mb: usize,
+    /// Worker threads for the feature dimension (jobs run on the
+    /// persistent `util::threadpool` global pool).
+    pub threads: usize,
+}
+
+impl SlicedEllEngine {
+    pub fn new(threads: usize) -> SlicedEllEngine {
+        SlicedEllEngine { mb: 12, threads: threads.max(1) }
+    }
+
+    /// Build with an explicit minibatch width; `mb` must lie in
+    /// `1..=MAX_MB` (same contract as `EllEngine::with_mb`).
+    pub fn with_mb(threads: usize, mb: usize) -> Result<SlicedEllEngine> {
+        if mb == 0 || mb > MAX_MB {
+            bail!("minibatch {mb} out of range 1..={MAX_MB}");
+        }
+        Ok(SlicedEllEngine { mb, threads: threads.max(1) })
+    }
+
+    /// One layer over a dense [batch, neurons] row-major feature panel.
+    pub fn layer(&self, w: &SlicedEll, bias: &[f32], y_in: &[f32], y_out: &mut [f32]) {
+        let n = w.nrows;
+        assert_eq!(w.ncols, n, "weight matrices are square");
+        assert_eq!(bias.len(), n);
+        assert_eq!(y_in.len(), y_out.len());
+        assert_eq!(y_in.len() % n.max(1), 0);
+        let batch = y_in.len() / n.max(1);
+        let threads = self.threads.min(batch.max(1));
+        if threads <= 1 {
+            self.layer_serial(w, bias, y_in, y_out);
+            return;
+        }
+        let chunk = batch.div_ceil(threads) * n;
+        pool_chunks_mut(ThreadPool::global(), y_out, chunk, |t, out_chunk| {
+            let start = t * chunk;
+            let in_chunk = &y_in[start..start + out_chunk.len()];
+            self.layer_serial(w, bias, in_chunk, out_chunk);
+        });
+    }
+
+    /// Serial sliced kernel (one worker's feature share).
+    fn layer_serial(&self, w: &SlicedEll, bias: &[f32], y_in: &[f32], y_out: &mut [f32]) {
+        let n = w.nrows;
+        let slice = w.slice;
+        let stride = self.mb; // accumulator lane stride (fixed across tails)
+        let batch = y_in.len() / n.max(1);
+        // One accumulator panel reused for every slice and minibatch.
+        let mut acc = vec![0.0f32; slice * stride];
+        let mut bstart = 0;
+        while bstart < batch {
+            let mb = self.mb.min(batch - bstart);
+            let yin = &y_in[bstart * n..(bstart + mb) * n];
+            let yout = &mut y_out[bstart * n..(bstart + mb) * n];
+            for s in 0..w.nslices() {
+                let (lanes, width, base) = w.slice_parts(s);
+                let lo = s * slice;
+                acc[..lanes * stride].fill(0.0);
+                for m in 0..width {
+                    let off = base + m * slice;
+                    // Contiguous lane run — the coalescing analog.
+                    let idx = &w.index[off..off + lanes];
+                    let val = &w.value[off..off + lanes];
+                    for lane in 0..lanes {
+                        let v = val[lane];
+                        if v == 0.0 {
+                            continue; // slice-local padding
+                        }
+                        let c = idx[lane] as usize;
+                        let a = &mut acc[lane * stride..lane * stride + mb];
+                        // Register tiling: one (idx, val) element feeds
+                        // the whole minibatch.
+                        for (f, slot) in a.iter_mut().enumerate() {
+                            *slot += yin[f * n + c] * v;
+                        }
+                    }
+                }
+                // Fused bias + clipped-ReLU epilogue.
+                for lane in 0..lanes {
+                    let i = lo + lane;
+                    let b = bias[i];
+                    for f in 0..mb {
+                        yout[f * n + i] = relu_clip(acc[lane * stride + f] + b);
+                    }
+                }
+            }
+            bstart += mb;
+        }
+    }
+
+    /// One layer over a *compacted* active-feature panel (the
+    /// coordinator's pruning path): only the first `active` features of
+    /// `y_in`/`y_out` are touched.
+    pub fn layer_active(
+        &self,
+        w: &SlicedEll,
+        bias: &[f32],
+        y_in: &[f32],
+        y_out: &mut [f32],
+        active: usize,
+    ) {
+        let n = w.nrows;
+        assert!(active * n <= y_in.len());
+        self.layer(w, bias, &y_in[..active * n], &mut y_out[..active * n]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::csr_engine::CsrEngine;
+    use crate::engine::ell_engine::EllEngine;
+    use crate::formats::convert::ell_to_csr;
+    use crate::formats::SlicedEll;
+    use crate::radixnet::{RadixNet, Topology};
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest::{self, Runner};
+
+    fn random_problem(
+        rng: &mut Xoshiro256,
+        n: usize,
+        k: usize,
+        batch: usize,
+    ) -> (crate::formats::EllMatrix, Vec<f32>, Vec<f32>) {
+        let net = RadixNet::new(n, 1, k, Topology::Random, rng.next_u64()).unwrap();
+        let mut w = net.layer_ell(0);
+        for v in w.value.iter_mut() {
+            *v = rng.next_range_f32(-0.5, 0.5);
+        }
+        let bias: Vec<f32> = (0..n).map(|_| rng.next_range_f32(-0.3, 0.1)).collect();
+        let y = proptest::sparse_binary(rng, batch * n, 0.3);
+        (w, bias, y)
+    }
+
+    #[test]
+    fn matches_csr_engine_bit_exact() {
+        Runner::new(24, 0x51E).run("sliced-vs-csr", |rng| {
+            let n = *proptest::choose(rng, &[16usize, 32, 64]);
+            let k = proptest::usize_in(rng, 1, 8.min(n));
+            let batch = proptest::usize_in(rng, 1, 20);
+            let slice = *proptest::choose(rng, &[1usize, 2, 7, 16]);
+            let (w, bias, y) = random_problem(rng, n, k, batch);
+            let csr = ell_to_csr(&w).unwrap();
+            let sliced = SlicedEll::from_ell(&w, slice).unwrap();
+            let mut a = vec![0.0; y.len()];
+            let mut b = vec![0.0; y.len()];
+            SlicedEllEngine::new(1).layer(&sliced, &bias, &y, &mut a);
+            CsrEngine.layer(&csr, &bias, &y, &mut b);
+            if a != b {
+                return Err(format!("outputs differ (n={n} k={k} batch={batch} slice={slice})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn minibatch_and_slice_do_not_change_results() {
+        let mut rng = Xoshiro256::new(0x2B);
+        let (w, bias, y) = random_problem(&mut rng, 64, 8, 30);
+        let base = SlicedEll::from_ell(&w, 16).unwrap();
+        let mut want = vec![0.0; y.len()];
+        SlicedEllEngine::with_mb(1, 1).unwrap().layer(&base, &bias, &y, &mut want);
+        for mb in [2, 5, 12, 30, 64] {
+            for slice in [1usize, 4, 16, 64] {
+                let s = SlicedEll::from_ell(&w, slice).unwrap();
+                let mut got = vec![0.0; y.len()];
+                SlicedEllEngine::with_mb(1, mb).unwrap().layer(&s, &bias, &y, &mut got);
+                assert_eq!(got, want, "mb={mb} slice={slice}");
+            }
+        }
+    }
+
+    #[test]
+    fn threading_does_not_change_results() {
+        let mut rng = Xoshiro256::new(0x2C);
+        let (w, bias, y) = random_problem(&mut rng, 32, 4, 48);
+        let s = SlicedEll::from_ell(&w, 8).unwrap();
+        let mut want = vec![0.0; y.len()];
+        SlicedEllEngine::new(1).layer(&s, &bias, &y, &mut want);
+        for t in [2, 3, 4, 8] {
+            let mut got = vec![0.0; y.len()];
+            SlicedEllEngine::new(t).layer(&s, &bias, &y, &mut got);
+            assert_eq!(got, want, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn matches_ell_engine_bit_exact_on_fixed_case() {
+        let mut rng = Xoshiro256::new(0x2D);
+        let (w, bias, y) = random_problem(&mut rng, 64, 4, 17);
+        let s = SlicedEll::from_ell(&w, 32).unwrap();
+        let mut a = vec![0.0; y.len()];
+        let mut b = vec![0.0; y.len()];
+        SlicedEllEngine::new(1).layer(&s, &bias, &y, &mut a);
+        EllEngine::new(1).layer(&w, &bias, &y, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn layer_active_prefix() {
+        let mut rng = Xoshiro256::new(0x2E);
+        let (w, bias, y) = random_problem(&mut rng, 32, 4, 10);
+        let s = SlicedEll::from_ell(&w, 8).unwrap();
+        let mut full = vec![0.0; y.len()];
+        SlicedEllEngine::new(1).layer(&s, &bias, &y, &mut full);
+        let mut partial = vec![0.0; y.len()];
+        SlicedEllEngine::new(1).layer_active(&s, &bias, &y, &mut partial, 4);
+        assert_eq!(&partial[..4 * 32], &full[..4 * 32]);
+        assert!(partial[4 * 32..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn with_mb_rejects_out_of_range() {
+        assert!(SlicedEllEngine::with_mb(1, 0).is_err());
+        assert!(SlicedEllEngine::with_mb(1, MAX_MB + 1).is_err());
+        assert_eq!(SlicedEllEngine::with_mb(2, MAX_MB).unwrap().mb, MAX_MB);
+    }
+}

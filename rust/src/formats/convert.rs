@@ -52,7 +52,10 @@ pub struct PackedWeights {
 }
 
 pub fn pack_weights(csr: &CsrMatrix, k: usize, slice: usize) -> Result<PackedWeights> {
-    Ok(PackedWeights { ell: EllMatrix::from_csr(csr, k)?, sliced: SlicedEll::from_csr(csr, slice)? })
+    Ok(PackedWeights {
+        ell: EllMatrix::from_csr(csr, k)?,
+        sliced: SlicedEll::from_csr(csr, slice)?,
+    })
 }
 
 #[cfg(test)]

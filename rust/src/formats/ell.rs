@@ -33,7 +33,12 @@ pub struct EllMatrix {
 
 impl EllMatrix {
     /// Pack per-row (column, value) lists into fixed-width panels.
-    pub fn from_rows(nrows: usize, ncols: usize, k: usize, rows: &[Vec<(u32, f32)>]) -> Result<EllMatrix> {
+    pub fn from_rows(
+        nrows: usize,
+        ncols: usize,
+        k: usize,
+        rows: &[Vec<(u32, f32)>],
+    ) -> Result<EllMatrix> {
         if rows.len() != nrows {
             bail!("expected {nrows} rows, got {}", rows.len());
         }
@@ -126,13 +131,44 @@ pub struct SlicedEll {
 
 impl SlicedEll {
     pub fn from_csr(csr: &CsrMatrix, slice: usize) -> Result<SlicedEll> {
+        let rows: Vec<Vec<(u16, f32)>> = (0..csr.nrows)
+            .map(|i| csr.row(i).map(|(c, v)| (c as u16, v)).collect())
+            .collect();
+        SlicedEll::pack(csr.nrows, csr.ncols, slice, &rows)
+    }
+
+    /// Repack fixed-width ELL panels into the sliced-transposed layout
+    /// (drops the zero padding, preserves per-row entry order, so the
+    /// sliced traversal accumulates in exactly the CSR/ELL order).
+    pub fn from_ell(ell: &EllMatrix, slice: usize) -> Result<SlicedEll> {
+        let rows: Vec<Vec<(u16, f32)>> = (0..ell.nrows)
+            .map(|i| {
+                let (idx, val) = ell.row(i);
+                idx.iter()
+                    .zip(val)
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(&c, &v)| (c, v))
+                    .collect()
+            })
+            .collect();
+        SlicedEll::pack(ell.nrows, ell.ncols, slice, &rows)
+    }
+
+    /// Shared packer: rows (already compacted, ordered) into the
+    /// transposed sliced storage.
+    fn pack(
+        nrows: usize,
+        ncols: usize,
+        slice: usize,
+        rows: &[Vec<(u16, f32)>],
+    ) -> Result<SlicedEll> {
         if slice == 0 {
             bail!("slice must be positive");
         }
-        if csr.ncols > (1 << 16) {
+        if ncols > (1 << 16) {
             bail!("ncols exceeds u16 range");
         }
-        let nslices = csr.nrows.div_ceil(slice);
+        let nslices = nrows.div_ceil(slice);
         let mut displ = Vec::with_capacity(nslices + 1);
         let mut width = Vec::with_capacity(nslices);
         let mut index = Vec::new();
@@ -140,17 +176,17 @@ impl SlicedEll {
         displ.push(0u32);
         for s in 0..nslices {
             let lo = s * slice;
-            let hi = (lo + slice).min(csr.nrows);
-            let w = (lo..hi).map(|i| csr.row_len(i)).max().unwrap_or(0);
+            let hi = (lo + slice).min(nrows);
+            let w = (lo..hi).map(|i| rows[i].len()).max().unwrap_or(0);
             width.push(w as u32);
             // Transposed: iterate position-major, lane-minor.
             for m in 0..w {
                 for lane in 0..slice {
                     let i = lo + lane;
-                    if i < csr.nrows && m < csr.row_len(i) {
-                        let off = csr.displ[i] as usize + m;
-                        index.push(csr.index[off] as u16);
-                        value.push(csr.value[off]);
+                    if i < nrows && m < rows[i].len() {
+                        let (c, v) = rows[i][m];
+                        index.push(c);
+                        value.push(v);
                     } else {
                         // Zero padding (red entries of Figure 2).
                         index.push(0);
@@ -160,7 +196,7 @@ impl SlicedEll {
             }
             displ.push(index.len() as u32);
         }
-        Ok(SlicedEll { nrows: csr.nrows, ncols: csr.ncols, slice, displ, width, index, value })
+        Ok(SlicedEll { nrows, ncols, slice, displ, width, index, value })
     }
 
     pub fn nslices(&self) -> usize {
@@ -185,6 +221,15 @@ impl SlicedEll {
             return 0.0;
         }
         self.padded_len() as f64 / real as f64 - 1.0
+    }
+
+    /// Traversal geometry of slice `s`: `(lane count, padded width, base
+    /// element offset)`. Lanes beyond `nrows` in the last slice are
+    /// excluded from the lane count but still occupy padded storage.
+    pub fn slice_parts(&self, s: usize) -> (usize, usize, usize) {
+        let lo = s * self.slice;
+        let lanes = self.slice.min(self.nrows - lo);
+        (lanes, self.width[s] as usize, self.displ[s] as usize)
     }
 
     /// Entry (row, m) where m < width of row's slice.
@@ -286,6 +331,33 @@ mod tests {
             s.spmv(&y_in, &mut got);
             assert_eq!(got, want, "slice={slice}");
         }
+    }
+
+    #[test]
+    fn from_ell_matches_from_csr() {
+        let csr = csr_toy();
+        let ell = EllMatrix::from_csr(&csr, 4).unwrap();
+        for slice in [1, 2, 3, 4, 8] {
+            let via_csr = SlicedEll::from_csr(&csr, slice).unwrap();
+            let via_ell = SlicedEll::from_ell(&ell, slice).unwrap();
+            assert_eq!(via_ell, via_csr, "slice={slice}");
+        }
+    }
+
+    #[test]
+    fn slice_parts_geometry() {
+        let csr = csr_toy();
+        // 4 rows at slice=3: slice 0 has 3 lanes, slice 1 only 1.
+        let s = SlicedEll::from_csr(&csr, 3).unwrap();
+        assert_eq!(s.nslices(), 2);
+        let (lanes0, width0, base0) = s.slice_parts(0);
+        assert_eq!((lanes0, base0), (3, 0));
+        assert_eq!(width0, 3); // rows {0,1,2} max len
+        let (lanes1, width1, base1) = s.slice_parts(1);
+        assert_eq!(lanes1, 1);
+        assert_eq!(width1, 1); // row 3 has one entry
+        assert_eq!(base1, 3 * 3);
+        assert_eq!(s.padded_len(), base1 + width1 * 3);
     }
 
     #[test]

@@ -6,20 +6,24 @@
 //!   serve      network-facing serving: sharded replicas + admission
 //!              control behind a TCP JSON-lines protocol
 //!   serve-demo run the dynamic-batching server over a synthetic workload
-//!   simulate   at-scale Summit simulation (Table I columns)
-//!   info       show the artifact manifest and resolved configuration
+//!   simulate    at-scale Summit simulation (Table I columns)
+//!   info        show the artifact manifest and resolved configuration
+//!   check-bench validate a BENCH_*.json against the unified schema
 //!
 //! Common flags: --neurons --layers --k --batch --workers --topology
-//!               --backend native|pjrt --artifacts DIR --config FILE
+//!               --backend native|csr|ell|sliced|auto|pjrt --artifacts DIR
+//!               --slice S --tune-cache FILE --config FILE
 //!               --no-prune --stream --seed
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+use spdnn::bench::validate_report;
 use spdnn::coordinator::batcher::{BatchPolicy, InferenceServer, ServeBackend, ServedModel};
-use spdnn::coordinator::{run_inference, validate, Backend, RunOptions};
+use spdnn::coordinator::{run_inference, validate, Backend, EngineSelect, RunOptions};
 use spdnn::data::Dataset;
+use spdnn::engine::EngineKind;
 use spdnn::runtime::Manifest;
 use spdnn::server::{AdmissionConfig, ReferencePanel, Server, ServerConfig};
 use spdnn::simulator::gpu_model::{a100, v100, KernelParams};
@@ -28,6 +32,7 @@ use spdnn::simulator::scaling::{ScalingSim, CHALLENGE_BATCH};
 use spdnn::simulator::trace::ActivityTrace;
 use spdnn::util::cli::Args;
 use spdnn::util::config::{Config, RuntimeConfig};
+use spdnn::util::json::Json;
 use spdnn::util::stats::Summary;
 use spdnn::util::table::{fmt_secs, fmt_teps, Table};
 
@@ -53,6 +58,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve-demo") => cmd_serve_demo(args),
         Some("simulate") => cmd_simulate(args),
         Some("info") => cmd_info(args),
+        Some("check-bench") => cmd_check_bench(args),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -64,14 +70,16 @@ fn dispatch(args: &Args) -> Result<()> {
 fn print_help() {
     println!(
         "spdnn — at-scale sparse DNN inference (HPEC 2020 reproduction)\n\n\
-         USAGE: spdnn <gen-data|infer|serve|serve-demo|simulate|info> [flags]\n\n\
+         USAGE: spdnn <gen-data|infer|serve|serve-demo|simulate|info|check-bench> [flags]\n\n\
          Model:   --neurons N --layers L --k K --topology butterfly|random --seed S\n\
          Runtime: --batch B --workers W --minibatch MB --no-prune\n\
-         Backend: --backend native|pjrt --artifacts DIR --threads T\n\
+         Backend: --backend native|csr|ell|sliced|auto|pjrt --artifacts DIR --threads T\n\
+                  --slice S --tune-cache FILE\n\
          Serve:   --host H --port P --replicas R --max-batch B --max-wait-ms MS\n\
                   --queue-cap N --deadline-ms MS\n\
          IO:      --config FILE --data DIR --stream\n\
-         Sim:     --gpus LIST --gpu v100|a100"
+         Sim:     --gpus LIST --gpu v100|a100\n\
+         Bench:   check-bench --file BENCH_x.json   (validate spdnn-bench-v1 schema)"
     );
 }
 
@@ -98,19 +106,31 @@ fn runtime_config(args: &Args) -> Result<RuntimeConfig> {
 }
 
 fn run_options(args: &Args) -> Result<RunOptions> {
-    let backend = match args.get_or("backend", "native") {
-        "native" => Backend::Native,
-        "pjrt" => Backend::Pjrt {
-            artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")),
-        },
-        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    let (backend, engine) = match args.get_or("backend", "native") {
+        // `native` keeps its historical meaning: the ELL engine.
+        "native" | "ell" => (Backend::Native, EngineSelect::Fixed(EngineKind::Ell)),
+        "csr" => (Backend::Native, EngineSelect::Fixed(EngineKind::Csr)),
+        "sliced" => (Backend::Native, EngineSelect::Fixed(EngineKind::Sliced)),
+        "auto" => (Backend::Native, EngineSelect::Auto),
+        "pjrt" => (
+            Backend::Pjrt { artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")) },
+            EngineSelect::Fixed(EngineKind::Ell),
+        ),
+        other => bail!("unknown backend {other:?} (native|csr|ell|sliced|auto|pjrt)"),
     };
     let stream_from = if args.flag("stream") {
         Some(PathBuf::from(args.get_or("data", "data")).join("weights.bin"))
     } else {
         None
     };
-    Ok(RunOptions { backend, stream_from, native_threads: args.usize_or("threads", 1)? })
+    Ok(RunOptions {
+        backend,
+        stream_from,
+        native_threads: args.usize_or("threads", 1)?,
+        engine,
+        slice: args.usize_or("slice", 32)?,
+        tune_cache: args.get("tune-cache").map(PathBuf::from),
+    })
 }
 
 /// Parse a `--key` millisecond flag into a Duration, rejecting negative,
@@ -133,7 +153,10 @@ fn serve_backend(args: &Args, cfg: &RuntimeConfig) -> Result<ServeBackend> {
         "pjrt" => Ok(ServeBackend::Pjrt {
             artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")),
         }),
-        other => bail!("unknown backend {other:?}"),
+        other => bail!(
+            "unknown serve backend {other:?} (serve accepts native|pjrt; \
+             csr|ell|sliced|auto are infer-only for now)"
+        ),
     }
 }
 
@@ -173,9 +196,10 @@ fn cmd_infer(args: &Args) -> Result<()> {
         ds.cfg.k,
         ds.cfg.batch,
         ds.cfg.workers,
-        match &opts.backend {
-            Backend::Native => "native",
-            Backend::Pjrt { .. } => "pjrt",
+        match (&opts.backend, &opts.engine) {
+            (Backend::Pjrt { .. }, _) => "pjrt".to_string(),
+            (Backend::Native, EngineSelect::Auto) => "auto".to_string(),
+            (Backend::Native, EngineSelect::Fixed(kind)) => format!("native/{kind}"),
         },
         ds.cfg.prune
     );
@@ -335,6 +359,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         }
     }
     table.print();
+    Ok(())
+}
+
+/// Validate a `BENCH_*.json` file against the unified spdnn-bench-v1
+/// schema. Exit code is the CI bench-smoke gate (shape only, no perf).
+fn cmd_check_bench(args: &Args) -> Result<()> {
+    let path = PathBuf::from(args.get_or("file", "BENCH_native.json"));
+    args.finish()?;
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let doc = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+    validate_report(&doc).with_context(|| format!("validating {}", path.display()))?;
+    let cases = doc.req_arr("cases")?.len();
+    println!("{}: valid spdnn-bench-v1 report ({cases} cases)", path.display());
     Ok(())
 }
 

@@ -58,7 +58,13 @@ pub struct RadixNet {
 }
 
 impl RadixNet {
-    pub fn new(neurons: usize, layers: usize, k: usize, topology: Topology, seed: u64) -> Result<RadixNet> {
+    pub fn new(
+        neurons: usize,
+        layers: usize,
+        k: usize,
+        topology: Topology,
+        seed: u64,
+    ) -> Result<RadixNet> {
         if neurons == 0 || layers == 0 || k == 0 {
             bail!("neurons/layers/k must be positive");
         }

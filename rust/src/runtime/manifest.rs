@@ -157,7 +157,12 @@ impl Manifest {
                     .collect::<Result<_>>()?,
             });
         }
-        Ok(Manifest { relu_cap: j.req_f64("relu_cap")? as f32, challenge_bias, artifacts, dir: dir.to_path_buf() })
+        Ok(Manifest {
+            relu_cap: j.req_f64("relu_cap")? as f32,
+            challenge_bias,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
     }
 
     /// All `layer_opt` capacities available for a width, ascending —

@@ -16,5 +16,7 @@ use std::path::PathBuf;
 
 /// Default artifacts directory: `$SPDNN_ARTIFACTS` or `./artifacts`.
 pub fn artifacts_dir() -> PathBuf {
-    std::env::var("SPDNN_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+    std::env::var("SPDNN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }

@@ -10,11 +10,12 @@
 //! exactly the paper's MPI model: weights replicated per rank, features
 //! partitioned (§IV.C).
 //!
-//! The `xla` crate is an optional dependency gated behind the `pjrt-xla`
-//! feature (it needs a downloaded xla_extension). Without the feature a
-//! build-time stub (end of this file) keeps the whole crate compiling;
-//! constructing a [`PjrtBackend`] then fails with a clear error and the
-//! native engine remains the fallback backend.
+//! The `xla` crate is an optional dependency gated behind the
+//! `pjrt-xla` + `xla-sys` feature pair (it needs a downloaded
+//! xla_extension). Without both features a build-time stub (end of this
+//! file) keeps the whole crate compiling; constructing a
+//! [`PjrtBackend`] then fails with a clear error and the native engine
+//! remains the fallback backend.
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -64,7 +65,13 @@ pub struct LayerLiterals {
 
 impl LayerLiterals {
     /// Build from host panels ([n, k] u16 idx / f32 val, [n] f32 bias).
-    pub fn new(idx: &[u16], val: &[f32], bias: &[f32], neurons: usize, k: usize) -> Result<LayerLiterals> {
+    pub fn new(
+        idx: &[u16],
+        val: &[f32],
+        bias: &[f32],
+        neurons: usize,
+        k: usize,
+    ) -> Result<LayerLiterals> {
         if idx.len() != neurons * k || val.len() != neurons * k || bias.len() != neurons {
             bail!("weight panel shape mismatch");
         }
@@ -114,7 +121,13 @@ impl CompiledLayer {
         let cap = self.artifact.capacity;
         let n = self.artifact.neurons;
         if w.neurons != n || w.k != self.artifact.k {
-            bail!("weights do not match executable ({}x{} vs {}x{})", w.neurons, w.k, n, self.artifact.k);
+            bail!(
+                "weights do not match executable ({}x{} vs {}x{})",
+                w.neurons,
+                w.k,
+                n,
+                self.artifact.k
+            );
         }
         if y.len() > cap * n || y.len() % n != 0 {
             bail!("feature panel of {} values does not fit capacity {cap}x{n}", y.len());
@@ -226,17 +239,22 @@ fn wrap_xla<E: std::fmt::Debug>(e: E) -> anyhow::Error {
 }
 
 // ---------------------------------------------------------------------------
-// Build-time stub for the optional `xla` crate (feature `pjrt-xla` off).
+// Build-time stub for the optional `xla` crate.
 //
 // The stub mirrors exactly the API surface this module touches; every
-// entry point that would reach XLA returns the same "built without
-// pjrt-xla" error, so `PjrtBackend::cpu()` fails fast and the coordinator
-// falls back to (or the caller selects) the native engine. This keeps
+// entry point that would reach XLA returns the same "built without the
+// real bindings" error, so `PjrtBackend::cpu()` fails fast and the
+// coordinator falls back to (or the caller selects) the native engine.
+//
+// It compiles in unless BOTH `pjrt-xla` and `xla-sys` are enabled:
+// `pjrt-xla` alone exercises the feature surface against the stub (the
+// CI feature-matrix leg), `xla-sys` additionally links the real crate
+// (requires the xla dependency uncommented in Cargo.toml). This keeps
 // `cargo build`/`cargo test` working in environments where the xla
 // dependency cannot be fetched.
 // ---------------------------------------------------------------------------
 
-#[cfg(not(feature = "pjrt-xla"))]
+#[cfg(not(all(feature = "pjrt-xla", feature = "xla-sys")))]
 #[doc(hidden)]
 pub mod xla {
     // Public (not private) because LayerLiterals/ScanLiterals expose
@@ -247,9 +265,9 @@ pub mod xla {
     pub type Error = String;
 
     fn unavailable() -> Error {
-        "spdnn was built without the `pjrt-xla` feature; the PJRT backend is \
+        "spdnn was built without the real XLA bindings; the PJRT backend is \
          unavailable (uncomment the xla dependency in Cargo.toml and rebuild \
-         with --features pjrt-xla, or use --backend native)"
+         with --features pjrt-xla,xla-sys, or use --backend native)"
             .to_string()
     }
 

@@ -53,7 +53,12 @@ impl WeightStreamer {
                 }
             }
         });
-        WeightStreamer::Stream { rx, handle: Some(handle), path: path.to_path_buf(), remaining: layers }
+        WeightStreamer::Stream {
+            rx,
+            handle: Some(handle),
+            path: path.to_path_buf(),
+            remaining: layers,
+        }
     }
 
     /// Number of layers still to be delivered.

@@ -306,11 +306,16 @@ mod tests {
             concurrency: 10,
         });
         let generous = Some(Duration::from_secs(10));
-        let _first: Vec<_> = (0..10).map(|_| AdmissionController::try_admit(&a, generous).unwrap()).collect();
+        let _first: Vec<_> =
+            (0..10).map(|_| AdmissionController::try_admit(&a, generous).unwrap()).collect();
         let t = AdmissionController::try_admit(&a, None).unwrap(); // depth 10 -> 1 wave -> 100ms, fits
         drop(t);
-        let _second: Vec<_> = (0..10).map(|_| AdmissionController::try_admit(&a, generous).unwrap()).collect();
-        assert!(matches!(AdmissionController::try_admit(&a, None), Err(Rejection::Deadline { .. })));
+        let _second: Vec<_> =
+            (0..10).map(|_| AdmissionController::try_admit(&a, generous).unwrap()).collect();
+        assert!(matches!(
+            AdmissionController::try_admit(&a, None),
+            Err(Rejection::Deadline { .. })
+        ));
     }
 
     #[test]

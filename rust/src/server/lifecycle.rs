@@ -365,7 +365,8 @@ fn infer(req: InferRequest, shared: &Shared) -> WireResponse {
     };
     // Clamp client-supplied deadlines into [0, 1h]; `max` first turns a
     // NaN into 0 so `from_secs_f64` cannot panic on hostile input.
-    let deadline = req.deadline_ms.map(|ms| Duration::from_secs_f64((ms / 1e3).max(0.0).min(3600.0)));
+    let deadline =
+        req.deadline_ms.map(|ms| Duration::from_secs_f64((ms / 1e3).max(0.0).min(3600.0)));
     let ticket = match AdmissionController::try_admit(&shared.admission, deadline) {
         Ok(t) => t,
         Err(rej) => {

@@ -17,7 +17,9 @@ use std::sync::mpsc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::batcher::{BatchPolicy, InferenceServer, Response, ServeBackend, ServedModel};
+use crate::coordinator::batcher::{
+    BatchPolicy, InferenceServer, Response, ServeBackend, ServedModel,
+};
 use crate::coordinator::partition::{imbalance, partition_even};
 
 /// N weight-sharing `InferenceServer` replicas plus the static routing

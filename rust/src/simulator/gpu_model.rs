@@ -203,8 +203,10 @@ mod tests {
         // The paper's §IV.B.2 observation: A100 speedup grows with width.
         let narrow = KernelParams::challenge(1024);
         let wide = KernelParams::challenge(65536);
-        let s_narrow = layer_time_s(&v100(), &narrow, 60000, 1.0) / layer_time_s(&a100(), &narrow, 60000, 1.0);
-        let s_wide = layer_time_s(&v100(), &wide, 60000, 1.0) / layer_time_s(&a100(), &wide, 60000, 1.0);
+        let s_narrow =
+            layer_time_s(&v100(), &narrow, 60000, 1.0) / layer_time_s(&a100(), &narrow, 60000, 1.0);
+        let s_wide =
+            layer_time_s(&v100(), &wide, 60000, 1.0) / layer_time_s(&a100(), &wide, 60000, 1.0);
         assert!(s_narrow > 1.0);
         assert!(s_wide > s_narrow);
     }

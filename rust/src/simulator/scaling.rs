@@ -61,7 +61,11 @@ pub struct ScalingSim {
 
 impl ScalingSim {
     /// Build with `alpha` fitted so the anchor cell reproduces the paper.
-    pub fn calibrated(gpu: GpuModel, cluster: ClusterModel, anchor_trace: &ActivityTrace) -> ScalingSim {
+    pub fn calibrated(
+        gpu: GpuModel,
+        cluster: ClusterModel,
+        anchor_trace: &ActivityTrace,
+    ) -> ScalingSim {
         let params = KernelParams::challenge(ANCHOR_NEURONS);
         let trace = anchor_trace.rescale(CHALLENGE_BATCH).with_layers(ANCHOR_LAYERS);
         let edges = total_edges(ANCHOR_NEURONS, ANCHOR_LAYERS, CHALLENGE_BATCH);
@@ -115,9 +119,12 @@ impl ScalingSim {
         // Kernel-only busy time (no launch constant, no stream floor):
         // the imbalance the paper reports is in the pruned compute itself.
         let kernel_busy = |live: usize| -> f64 {
-            use crate::simulator::gpu_model::{bandwidth_efficiency, layer_traffic_bytes, width_factor};
+            use crate::simulator::gpu_model::{
+                bandwidth_efficiency, layer_traffic_bytes, width_factor,
+            };
             let bytes = layer_traffic_bytes(params, live) * width_factor(params.neurons);
-            self.alpha * bytes / (self.gpu.mem_bw_gbs * 1e9 * bandwidth_efficiency(&self.gpu, params))
+            self.alpha * bytes
+                / (self.gpu.mem_bw_gbs * 1e9 * bandwidth_efficiency(&self.gpu, params))
         };
         let (mut busy_max, mut busy_mean, mut overhead) = (0.0, 0.0, 0.0);
         for &live in &trace.live {
@@ -143,7 +150,13 @@ fn layer_kernel_time(gpu: &GpuModel, params: &KernelParams, live: usize, alpha: 
 }
 
 /// Sum of per-layer times at `gpus` ranks (no scatter/gather overlap).
-fn layers_only_time(gpu: &GpuModel, params: &KernelParams, trace: &ActivityTrace, gpus: usize, alpha: f64) -> f64 {
+fn layers_only_time(
+    gpu: &GpuModel,
+    params: &KernelParams,
+    trace: &ActivityTrace,
+    gpus: usize,
+    alpha: f64,
+) -> f64 {
     trace
         .live
         .iter()

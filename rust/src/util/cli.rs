@@ -143,7 +143,10 @@ impl Args {
         if unknown.is_empty() {
             Ok(())
         } else {
-            bail!("unknown flag(s): {}", unknown.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", "))
+            bail!(
+                "unknown flag(s): {}",
+                unknown.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", ")
+            )
         }
     }
 }

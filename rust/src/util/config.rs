@@ -356,7 +356,8 @@ capacities = [12, 60, 240]
 
     #[test]
     fn total_edges() {
-        let rc = RuntimeConfig { neurons: 1024, layers: 120, k: 32, batch: 60000, ..Default::default() };
+        let rc =
+            RuntimeConfig { neurons: 1024, layers: 120, k: 32, batch: 60000, ..Default::default() };
         // The challenge's 1024x120 network: ~3.9G edge-traversals per pass
         // ... per feature set: 60000 * 120 * 32768.
         assert_eq!(rc.total_edges(), 60000 * 120 * 32 * 1024);

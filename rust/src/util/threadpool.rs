@@ -1,8 +1,145 @@
-//! Scoped data-parallel helpers over std::thread (no rayon offline).
+//! Data-parallel helpers over std::thread (no rayon offline).
+//!
+//! Two layers:
+//!
+//! * [`ThreadPool`] — a persistent pool of worker threads with a blocking
+//!   scoped-dispatch API ([`ThreadPool::scope_run`]). The native engines
+//!   dispatch per-layer work here instead of spawning fresh OS threads
+//!   for every layer (the spawn cost used to be paid `layers ×
+//!   threads` times per inference pass). [`ThreadPool::global`] is the
+//!   process-wide instance sized to the hardware.
+//! * [`par_chunks_mut`] / [`par_map_index`] — one-shot fork/join helpers
+//!   kept for callers that genuinely want fresh scoped threads.
 //!
 //! The coordinator's worker pool has its own long-lived threads
-//! (`coordinator::pool`); this module is for one-shot fork/join
-//! parallelism inside the native engines.
+//! (`coordinator::pool`); those model MPI ranks, not engine-internal
+//! parallelism, and stay separate.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A unit of work dispatched to the pool. The lifetime is the borrow
+/// scope of the data the job touches; [`ThreadPool::scope_run`] blocks
+/// until every job has finished, which is what makes non-'static jobs
+/// sound to run on 'static pool threads.
+pub type Job<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+/// Persistent fork/join thread pool.
+pub struct ThreadPool {
+    tx: Mutex<mpsc::Sender<Job<'static>>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` long-lived worker threads.
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job<'static>>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("spdnn-pool-{i}"))
+                .spawn(move || loop {
+                    // The job runs outside the receiver lock so workers
+                    // pull tasks concurrently.
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(job) => job,
+                        Err(_) => break, // pool dropped
+                    };
+                    job();
+                })
+                .expect("spawning pool worker thread");
+        }
+        ThreadPool { tx: Mutex::new(tx), size }
+    }
+
+    /// Worker-thread count.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// The process-wide pool, sized to the hardware on first use.
+    pub fn global() -> &'static ThreadPool {
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            ThreadPool::new(n)
+        })
+    }
+
+    /// Run every job on the pool and block until all have completed.
+    ///
+    /// Jobs may borrow from the caller's stack: the completion latch below
+    /// guarantees no job outlives this call. A panicking job is caught on
+    /// the worker (so the pool thread survives) and its payload is
+    /// re-raised here once the whole batch has drained, preserving the
+    /// original message the way `std::thread::scope` joins do.
+    pub fn scope_run<'scope>(&self, jobs: Vec<Job<'scope>>) {
+        type Payload = Box<dyn std::any::Any + Send>;
+        if jobs.is_empty() {
+            return;
+        }
+        // (remaining jobs, first panic payload)
+        let latch = Arc::new((Mutex::new((jobs.len(), None::<Payload>)), Condvar::new()));
+        {
+            let tx = self.tx.lock().unwrap();
+            for job in jobs {
+                // SAFETY: scope_run blocks until the latch reports every
+                // job finished, so borrows captured by `job` ('scope)
+                // strictly outlive its execution on the 'static worker.
+                // The transmute changes ONLY the trait-object lifetime.
+                #[allow(clippy::useless_transmute)]
+                let job: Job<'static> =
+                    unsafe { std::mem::transmute::<Job<'scope>, Job<'static>>(job) };
+                let latch = Arc::clone(&latch);
+                tx.send(Box::new(move || {
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                    let (state, cv) = &*latch;
+                    let mut st = state.lock().unwrap();
+                    st.0 -= 1;
+                    if let Err(payload) = result {
+                        st.1.get_or_insert(payload);
+                    }
+                    cv.notify_all();
+                }))
+                .expect("pool workers alive");
+            }
+        }
+        let (state, cv) = &*latch;
+        let mut st = state.lock().unwrap();
+        while st.0 > 0 {
+            st = cv.wait(st).unwrap();
+        }
+        if let Some(payload) = st.1.take() {
+            drop(st);
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Split `data` into `chunk_len`-sized chunks and run `f(chunk_index,
+/// chunk)` over them on `pool`, blocking until done. Single-chunk inputs
+/// short-circuit to the calling thread.
+pub fn pool_chunks_mut<T: Send, F>(pool: &ThreadPool, data: &mut [T], chunk_len: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Send + Sync,
+{
+    let chunk_len = chunk_len.max(1);
+    if data.len() <= chunk_len {
+        if !data.is_empty() {
+            f(0, data);
+        }
+        return;
+    }
+    let fref = &f;
+    let jobs: Vec<Job<'_>> = data
+        .chunks_mut(chunk_len)
+        .enumerate()
+        .map(|(i, chunk)| Box::new(move || fref(i, chunk)) as Job<'_>)
+        .collect();
+    pool.scope_run(jobs);
+}
 
 /// Run `f(chunk_index, chunk)` over `chunks` slices of `data` in parallel
 /// scoped threads. `nthreads == 1` short-circuits to the calling thread.
@@ -92,5 +229,73 @@ mod tests {
     fn par_map_index_zero() {
         let out: Vec<usize> = par_map_index(0, 4, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_runs_borrowed_jobs() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0u64; 97];
+        pool_chunks_mut(&pool, &mut data, 10, |_, chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 1));
+        // The pool survives for a second batch (persistence).
+        pool_chunks_mut(&pool, &mut data, 7, |_, chunk| {
+            for x in chunk {
+                *x *= 3;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 3));
+    }
+
+    #[test]
+    fn pool_chunk_indices_are_stable() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0usize; 40];
+        pool_chunks_mut(&pool, &mut data, 10, |i, chunk| {
+            for x in chunk {
+                *x = i;
+            }
+        });
+        let want: Vec<usize> = (0..40).map(|j| j / 10).collect();
+        assert_eq!(data, want);
+    }
+
+    #[test]
+    fn pool_single_chunk_short_circuits() {
+        let pool = ThreadPool::new(2);
+        let mut data = vec![1i32; 5];
+        pool_chunks_mut(&pool, &mut data, 100, |i, chunk| {
+            assert_eq!(i, 0);
+            for x in chunk {
+                *x = 9;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 9));
+        let mut empty: Vec<i32> = vec![];
+        pool_chunks_mut(&pool, &mut empty, 4, |_, _| panic!("no chunks expected"));
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn pool_propagates_job_panics_with_payload() {
+        let pool = ThreadPool::new(2);
+        let mut data = vec![0u8; 8];
+        pool_chunks_mut(&pool, &mut data, 2, |i, _| {
+            if i == 1 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = ThreadPool::global();
+        let b = ThreadPool::global();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.size() >= 1);
+        a.scope_run(vec![]);
     }
 }

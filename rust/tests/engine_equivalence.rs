@@ -1,0 +1,170 @@
+//! Cross-engine equivalence: `CsrEngine`, `EllEngine` and
+//! `SlicedEllEngine` must produce *bit-identical* outputs over randomized
+//! RadixNet-style topologies, batch sizes (including non-multiples of the
+//! minibatch), minibatch widths, slice granularities and thread counts.
+//!
+//! Bit-identity holds because all three engines accumulate each output in
+//! the same per-row entry order (CSR order, which ELL packing and sliced
+//! transposition both preserve) and fuse the same `relu_clip(acc + bias)`
+//! epilogue; threading splits features, never a single accumulation.
+
+use spdnn::engine::{CsrEngine, EllEngine, SlicedEllEngine};
+use spdnn::formats::convert::ell_to_csr;
+use spdnn::formats::{EllMatrix, SlicedEll};
+use spdnn::radixnet::{RadixNet, Topology};
+use spdnn::util::prng::Xoshiro256;
+use spdnn::util::proptest::{self, Runner};
+
+fn random_problem(
+    rng: &mut Xoshiro256,
+    n: usize,
+    k: usize,
+    batch: usize,
+    topology: Topology,
+) -> (EllMatrix, Vec<f32>, Vec<f32>) {
+    let net = RadixNet::new(n, 1, k, topology, rng.next_u64()).unwrap();
+    let mut w = net.layer_ell(0);
+    for v in w.value.iter_mut() {
+        *v = rng.next_range_f32(-0.5, 0.5);
+    }
+    let bias: Vec<f32> = (0..n).map(|_| rng.next_range_f32(-0.3, 0.1)).collect();
+    let y = proptest::sparse_binary(rng, batch * n, 0.3);
+    (w, bias, y)
+}
+
+#[test]
+fn all_engines_bit_identical_randomized() {
+    Runner::new(48, 0xEC0).run("engine-equivalence", |rng| {
+        let n = *proptest::choose(rng, &[16usize, 32, 64, 128]);
+        let k = proptest::usize_in(rng, 1, 8.min(n));
+        // Deliberately spans batches that are NOT multiples of mb.
+        let batch = proptest::usize_in(rng, 1, 37);
+        let mb = *proptest::choose(rng, &[1usize, 5, 12, 64]);
+        let slice = *proptest::choose(rng, &[1usize, 2, 7, 16, 32]);
+        let threads = *proptest::choose(rng, &[1usize, 2, 3]);
+        let topology =
+            if rng.next_f32() < 0.5 { Topology::Butterfly } else { Topology::Random };
+        let (w, bias, y) = random_problem(rng, n, k, batch, topology);
+        let csr = ell_to_csr(&w).unwrap();
+        let sliced = SlicedEll::from_ell(&w, slice).unwrap();
+
+        let mut want = vec![0.0f32; y.len()];
+        CsrEngine.layer(&csr, &bias, &y, &mut want);
+
+        let mut got_ell = vec![0.0f32; y.len()];
+        EllEngine::with_mb(threads, mb)
+            .unwrap()
+            .layer(&w, &bias, &y, &mut got_ell);
+        if got_ell != want {
+            return Err(format!(
+                "ell != csr (n={n} k={k} batch={batch} mb={mb} threads={threads})"
+            ));
+        }
+
+        let mut got_sliced = vec![0.0f32; y.len()];
+        SlicedEllEngine::with_mb(threads, mb)
+            .unwrap()
+            .layer(&sliced, &bias, &y, &mut got_sliced);
+        if got_sliced != want {
+            return Err(format!(
+                "sliced != csr (n={n} k={k} batch={batch} mb={mb} slice={slice} threads={threads})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn multi_layer_network_stays_bit_identical() {
+    // A deeper composition: errors would compound across layers if any
+    // engine diverged even in the last bit.
+    let mut rng = Xoshiro256::new(0xD0E);
+    let n = 64usize;
+    let k = 6usize;
+    let batch = 23usize; // not a multiple of 12
+    let layers = 8usize;
+    let net = RadixNet::new(n, layers, k, Topology::Random, 99).unwrap();
+    let weights: Vec<EllMatrix> = (0..layers)
+        .map(|l| {
+            let mut w = net.layer_ell(l);
+            for v in w.value.iter_mut() {
+                *v = rng.next_range_f32(-0.4, 0.4);
+            }
+            w
+        })
+        .collect();
+    let bias: Vec<f32> = (0..n).map(|_| rng.next_range_f32(-0.2, 0.05)).collect();
+    let y0 = proptest::sparse_binary(&mut rng, batch * n, 0.4);
+
+    let run_csr = |y0: &[f32]| {
+        let mut y = y0.to_vec();
+        let mut scratch = vec![0.0f32; y.len()];
+        for w in &weights {
+            let csr = ell_to_csr(w).unwrap();
+            CsrEngine.layer(&csr, &bias, &y, &mut scratch);
+            std::mem::swap(&mut y, &mut scratch);
+        }
+        y
+    };
+    let run_ell = |y0: &[f32], mb: usize, threads: usize| {
+        let engine = EllEngine::with_mb(threads, mb).unwrap();
+        let mut y = y0.to_vec();
+        let mut scratch = vec![0.0f32; y.len()];
+        for w in &weights {
+            engine.layer(w, &bias, &y, &mut scratch);
+            std::mem::swap(&mut y, &mut scratch);
+        }
+        y
+    };
+    let run_sliced = |y0: &[f32], mb: usize, slice: usize, threads: usize| {
+        let engine = SlicedEllEngine::with_mb(threads, mb).unwrap();
+        let mut y = y0.to_vec();
+        let mut scratch = vec![0.0f32; y.len()];
+        for w in &weights {
+            let s = SlicedEll::from_ell(w, slice).unwrap();
+            engine.layer(&s, &bias, &y, &mut scratch);
+            std::mem::swap(&mut y, &mut scratch);
+        }
+        y
+    };
+
+    let want = run_csr(&y0);
+    for mb in [1usize, 5, 12] {
+        for threads in [1usize, 4] {
+            assert_eq!(run_ell(&y0, mb, threads), want, "ell mb={mb} threads={threads}");
+            for slice in [1usize, 8, 32, 64] {
+                assert_eq!(
+                    run_sliced(&y0, mb, slice, threads),
+                    want,
+                    "sliced mb={mb} slice={slice} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_and_single_feature_batches() {
+    let mut rng = Xoshiro256::new(0xD0F);
+    let (w, bias, _) = random_problem(&mut rng, 32, 4, 1, Topology::Butterfly);
+    let csr = ell_to_csr(&w).unwrap();
+    let sliced = SlicedEll::from_ell(&w, 8).unwrap();
+
+    // Empty batch: all engines accept a zero-length panel.
+    let empty: Vec<f32> = vec![];
+    let mut out: Vec<f32> = vec![];
+    CsrEngine.layer(&csr, &bias, &empty, &mut out);
+    EllEngine::new(2).layer(&w, &bias, &empty, &mut out);
+    SlicedEllEngine::new(2).layer(&sliced, &bias, &empty, &mut out);
+
+    // Single feature: threads clamp down to the batch.
+    let y = proptest::sparse_binary(&mut rng, 32, 0.5);
+    let mut a = vec![0.0f32; 32];
+    let mut b = vec![0.0f32; 32];
+    let mut c = vec![0.0f32; 32];
+    CsrEngine.layer(&csr, &bias, &y, &mut a);
+    EllEngine::new(8).layer(&w, &bias, &y, &mut b);
+    SlicedEllEngine::new(8).layer(&sliced, &bias, &y, &mut c);
+    assert_eq!(a, b);
+    assert_eq!(a, c);
+}

@@ -103,7 +103,8 @@ fn run_rejects_bad_shapes() {
     // Non-multiple of neurons.
     assert!(exe.run(&y[..65], &lits).is_err());
     // Mismatched weights.
-    let bad = LayerLiterals::new(&w.index[..32 * 4], &w.value[..32 * 4], &bias[..32], 32, 4).unwrap();
+    let bad =
+        LayerLiterals::new(&w.index[..32 * 4], &w.value[..32 * 4], &bias[..32], 32, 4).unwrap();
     assert!(exe.run(&y, &bad).is_err());
 }
 
