@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     let handle = Server::start(
         server_cfg,
         model,
-        ServeBackend::Native { threads: 1, minibatch: 12 },
+        ServeBackend::native(1, 12),
         Some(reference),
     )?;
     let addr = handle.addr();

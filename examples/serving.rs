@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         };
         let server = InferenceServer::start(
             model.clone(),
-            ServeBackend::Native { threads: 1, minibatch: 12 },
+            ServeBackend::native(1, 12),
             policy,
         );
         let t = std::time::Instant::now();

@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
                 BatchPolicy { max_batch, max_wait: Duration::from_secs_f64(wait_ms / 1e3) };
             let router = Arc::new(ReplicaRouter::start(
                 model.clone(),
-                ServeBackend::Native { threads: 1, minibatch: 12 },
+                ServeBackend::native(1, 12),
                 policy,
                 replicas,
             )?);

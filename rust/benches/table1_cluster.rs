@@ -1,0 +1,113 @@
+//! Cluster scaling bench: TeraEdges/s vs worker-rank count, with each
+//! rank a separate OS process holding a full weight replica and a
+//! static feature partition — the shape of the paper's Table 1 scaling
+//! column, measured instead of simulated. Emits `BENCH_cluster.json`
+//! in the unified spdnn-bench-v1 schema (one case per rank count).
+//!
+//! Usage: cargo bench --bench table1_cluster
+//! Scale with SPDNN_BENCH_ITERS / SPDNN_BENCH_MAX_SECS; override the
+//! rank sweep with SPDNN_CLUSTER_RANKS=1,2,4.
+
+use std::path::PathBuf;
+
+use spdnn::bench::{bench, BenchCase, BenchConfig, BenchReport};
+use spdnn::cluster::{LocalCluster, ModelSpec};
+use spdnn::coordinator::NativeSpec;
+use spdnn::data::Dataset;
+use spdnn::engine::EngineKind;
+use spdnn::util::config::RuntimeConfig;
+use spdnn::util::json::Json;
+use spdnn::util::table::{fmt_teps, Table};
+
+/// The rank sweep. Strict about SPDNN_CLUSTER_RANKS: a typo must fail
+/// the bench, not silently shrink the coverage the CI gate sees.
+fn rank_counts() -> anyhow::Result<Vec<usize>> {
+    let s = match std::env::var("SPDNN_CLUSTER_RANKS") {
+        Ok(s) => s,
+        Err(_) => return Ok(vec![1, 2, 4]),
+    };
+    let mut counts = Vec::new();
+    for p in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let r: usize = p
+            .parse()
+            .map_err(|_| anyhow::anyhow!("SPDNN_CLUSTER_RANKS: bad entry {p:?}"))?;
+        anyhow::ensure!(r > 0, "SPDNN_CLUSTER_RANKS: rank counts must be positive");
+        counts.push(r);
+    }
+    anyhow::ensure!(!counts.is_empty(), "SPDNN_CLUSTER_RANKS is set but holds no rank counts");
+    Ok(counts)
+}
+
+fn main() -> anyhow::Result<()> {
+    let bcfg = BenchConfig::from_env();
+    let cfg = RuntimeConfig {
+        neurons: 1024,
+        layers: 24,
+        k: 32,
+        batch: 480,
+        workers: 1,
+        ..Default::default()
+    };
+    let ds = Dataset::generate(&cfg)?;
+    let model = ModelSpec::from_config(&cfg);
+    let spec = NativeSpec {
+        engine: EngineKind::Sliced,
+        minibatch: cfg.minibatch,
+        slice: 32,
+        threads: 1,
+    };
+    let program = PathBuf::from(env!("CARGO_BIN_EXE_spdnn"));
+    let edges = model.input_edges(cfg.batch) as f64;
+
+    let mut report = BenchReport::new("cluster");
+    report.param("neurons", Json::Int(cfg.neurons as i64));
+    report.param("layers", Json::Int(cfg.layers as i64));
+    report.param("k", Json::Int(cfg.k as i64));
+    report.param("batch", Json::Int(cfg.batch as i64));
+    report.param("engine", Json::Str(spec.engine.as_str().to_string()));
+
+    // The speedup baseline is the first swept rank count (1 by
+    // default, but SPDNN_CLUSTER_RANKS may start elsewhere).
+    let counts = rank_counts()?;
+    let speedup_header = format!("Speedup vs {} rank(s)", counts[0]);
+    let mut table = Table::new(
+        "Cluster scaling: TeraEdges/s vs rank count (replicated weights)",
+        &["ranks", "p50", "Throughput", speedup_header.as_str()],
+    );
+    let mut base_p50: Option<f64> = None;
+    for ranks in counts {
+        let mut cluster = LocalCluster::start(&program, ranks, &model, spec, cfg.prune)?;
+        // Correctness gate before timing: the scattered pass must stay
+        // bit-identical to the single-process ground truth.
+        let first = cluster.run(&ds.features)?;
+        anyhow::ensure!(
+            first.categories == ds.truth_categories,
+            "ranks={ranks}: cluster categories diverge from ground truth"
+        );
+        // Track the imbalance of the last *timed* pass: the cold
+        // validation pass above concentrates warmup skew on one rank.
+        let mut warm_imbalance = first.imbalance;
+        let m = bench(&bcfg, &format!("ranks={ranks}"), edges, || {
+            warm_imbalance = cluster.run(&ds.features).expect("cluster inference pass").imbalance;
+        });
+        cluster.stop()?;
+
+        let base = *base_p50.get_or_insert(m.secs.p50);
+        table.row(vec![
+            ranks.to_string(),
+            format!("{:.2}ms", m.secs.p50 * 1e3),
+            fmt_teps(m.throughput()),
+            format!("{:.2}x", base / m.secs.p50),
+        ]);
+        report.case(
+            BenchCase::from_measurement(&m)
+                .with_extra("ranks", Json::Int(ranks as i64))
+                .with_extra("imbalance", Json::Num(warm_imbalance)),
+        );
+    }
+    table.print();
+
+    let path = report.write()?;
+    println!("wrote {} ({} cases)", path.display(), report.cases.len());
+    Ok(())
+}

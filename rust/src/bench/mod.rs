@@ -12,6 +12,10 @@ use anyhow::{bail, Context, Result};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
+pub mod trend;
+
+pub use trend::{diff_reports, TrendCase, TrendReport, DEFAULT_THRESHOLD_PCT};
+
 /// Measurement configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchConfig {

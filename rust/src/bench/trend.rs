@@ -1,0 +1,192 @@
+//! Bench trendlines: diff TeraEdges/s between two spdnn-bench-v1
+//! artifacts (`BENCH_*.json` from different PRs / machines / configs)
+//! and flag regressions past a threshold.
+//!
+//! This is the CI-facing half of the unified bench schema: every bench
+//! emits comparable cases, so a PR's artifact can be gated against the
+//! previous one with `spdnn bench-trend old.json new.json`. Cases are
+//! matched by name; added/removed cases are reported but never fail the
+//! gate (benches legitimately grow), only a matched case whose
+//! throughput dropped more than the threshold does.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::validate_report;
+
+/// Default regression gate: −20% mean throughput. Wide enough to ride
+/// out shared-runner noise, tight enough to catch real cliffs.
+pub const DEFAULT_THRESHOLD_PCT: f64 = 20.0;
+
+/// One case present in both reports.
+#[derive(Clone, Debug)]
+pub struct TrendCase {
+    pub name: String,
+    pub old_teps: f64,
+    pub new_teps: f64,
+    /// Relative change in percent (negative = slower).
+    pub delta_pct: f64,
+}
+
+impl TrendCase {
+    pub fn is_regression(&self, threshold_pct: f64) -> bool {
+        self.delta_pct < -threshold_pct
+    }
+}
+
+/// The diff of two spdnn-bench-v1 reports.
+#[derive(Clone, Debug)]
+pub struct TrendReport {
+    pub old_bench: String,
+    pub new_bench: String,
+    /// Cases matched by name, in the new report's order.
+    pub cases: Vec<TrendCase>,
+    /// Case names only in the new report.
+    pub added: Vec<String>,
+    /// Case names only in the old report.
+    pub removed: Vec<String>,
+}
+
+impl TrendReport {
+    /// Matched cases that regressed past `threshold_pct`.
+    pub fn regressions(&self, threshold_pct: f64) -> Vec<&TrendCase> {
+        self.cases.iter().filter(|c| c.is_regression(threshold_pct)).collect()
+    }
+}
+
+fn case_teps(doc: &Json) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for case in doc.req_arr("cases")? {
+        out.push((case.req_str("name")?.to_string(), case.req_f64("teraedges_per_sec")?));
+    }
+    Ok(out)
+}
+
+/// Diff two parsed bench reports. Both must validate as spdnn-bench-v1;
+/// they do not need to come from the same bench (that mismatch is
+/// surfaced via `old_bench`/`new_bench` for the caller to judge).
+pub fn diff_reports(old: &Json, new: &Json) -> Result<TrendReport> {
+    validate_report(old).context("old report")?;
+    validate_report(new).context("new report")?;
+    let old_cases = case_teps(old)?;
+    let new_cases = case_teps(new)?;
+
+    let mut cases = Vec::new();
+    let mut added = Vec::new();
+    for (name, new_teps) in &new_cases {
+        match old_cases.iter().find(|(n, _)| n == name) {
+            Some((_, old_teps)) => {
+                let delta_pct = if *old_teps > 0.0 {
+                    (new_teps - old_teps) / old_teps * 100.0
+                } else {
+                    0.0
+                };
+                cases.push(TrendCase {
+                    name: name.clone(),
+                    old_teps: *old_teps,
+                    new_teps: *new_teps,
+                    delta_pct,
+                });
+            }
+            None => added.push(name.clone()),
+        }
+    }
+    let removed: Vec<String> = old_cases
+        .iter()
+        .filter(|(n, _)| !new_cases.iter().any(|(m, _)| m == n))
+        .map(|(n, _)| n.clone())
+        .collect();
+    if cases.is_empty() {
+        bail!("the two reports share no case names (nothing to compare)");
+    }
+    Ok(TrendReport {
+        old_bench: old.req_str("bench")?.to_string(),
+        new_bench: new.req_str("bench")?.to_string(),
+        cases,
+        added,
+        removed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::BENCH_SCHEMA;
+
+    fn report(bench: &str, cases: &[(&str, f64)]) -> Json {
+        let body: Vec<String> = cases
+            .iter()
+            .map(|(name, teps)| {
+                format!(
+                    r#"{{"name":"{name}","edges_per_iter":1.0,"iters":1,"secs_mean":0.1,
+                        "secs_p50":0.1,"secs_min":0.1,"teraedges_per_sec":{teps},
+                        "peak_teraedges_per_sec":{teps}}}"#
+                )
+            })
+            .collect();
+        Json::parse(&format!(
+            r#"{{"schema":"{BENCH_SCHEMA}","bench":"{bench}","cases":[{}]}}"#,
+            body.join(",")
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn diff_matches_by_name_and_computes_deltas() {
+        let old = report("native", &[("csr", 1.0), ("ell", 2.0), ("gone", 1.0)]);
+        let new = report("native", &[("csr", 1.1), ("ell", 1.0), ("fresh", 3.0)]);
+        let trend = diff_reports(&old, &new).unwrap();
+        assert_eq!(trend.cases.len(), 2);
+        assert_eq!(trend.added, vec!["fresh".to_string()]);
+        assert_eq!(trend.removed, vec!["gone".to_string()]);
+        let csr = &trend.cases[0];
+        assert_eq!(csr.name, "csr");
+        assert!((csr.delta_pct - 10.0).abs() < 1e-9, "delta {}", csr.delta_pct);
+        let ell = &trend.cases[1];
+        assert!((ell.delta_pct + 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn threshold_gates_regressions() {
+        let old = report("x", &[("a", 2.0), ("b", 2.0)]);
+        let new = report("x", &[("a", 1.0), ("b", 1.9)]);
+        let trend = diff_reports(&old, &new).unwrap();
+        // a dropped 50%, b dropped 5%.
+        assert_eq!(trend.regressions(20.0).len(), 1);
+        assert_eq!(trend.regressions(20.0)[0].name, "a");
+        assert_eq!(trend.regressions(60.0).len(), 0);
+        assert_eq!(trend.regressions(1.0).len(), 2);
+        // Improvements never count as regressions.
+        assert!(!TrendCase {
+            name: "up".into(),
+            old_teps: 1.0,
+            new_teps: 9.0,
+            delta_pct: 800.0
+        }
+        .is_regression(0.0));
+    }
+
+    #[test]
+    fn disjoint_reports_are_an_error() {
+        let old = report("x", &[("a", 1.0)]);
+        let new = report("x", &[("b", 1.0)]);
+        assert!(diff_reports(&old, &new).is_err());
+    }
+
+    #[test]
+    fn invalid_reports_are_rejected() {
+        let good = report("x", &[("a", 1.0)]);
+        let bad = Json::parse(r#"{"schema":"other"}"#).unwrap();
+        assert!(diff_reports(&bad, &good).is_err());
+        assert!(diff_reports(&good, &bad).is_err());
+    }
+
+    #[test]
+    fn zero_old_throughput_does_not_divide_by_zero() {
+        let old = report("x", &[("a", 0.0)]);
+        let new = report("x", &[("a", 1.0)]);
+        let trend = diff_reports(&old, &new).unwrap();
+        assert_eq!(trend.cases[0].delta_pct, 0.0);
+    }
+}

@@ -1,0 +1,440 @@
+//! Rank 0: scatter, compute, gather — the collective schedule of the
+//! paper's multi-GPU inference (§IV.C) over real OS processes.
+//!
+//! The coordinator statically partitions the input feature panel with
+//! the same `partition_even` the in-process pool uses, scatters one
+//! contiguous shard per rank, and gathers the shard results back in
+//! rank order. Because shards are contiguous, ordered and disjoint,
+//! reassembly is pure concatenation and the merged categories come back
+//! already ascending — bit-identical to a single-process pass over the
+//! unpartitioned panel.
+//!
+//! The gather also folds every rank's per-layer live-feature trajectory
+//! into a per-layer `imbalance()` series: the paper observes that
+//! pruning skews per-rank work as ranks multiply, and this report is
+//! where that skew becomes visible.
+
+use std::net::SocketAddr;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::partition::{imbalance, partition_even, Partition};
+use crate::coordinator::NativeSpec;
+
+use super::launcher::{Launcher, LauncherConfig};
+use super::transport::{
+    ClusterClient, ClusterReply, ClusterRequest, ModelSpec, ShardResult, CLUSTER_PROTOCOL_VERSION,
+};
+
+/// Longest a clean shutdown waits for worker processes to exit.
+const SHUTDOWN_LIMIT: Duration = Duration::from_secs(10);
+
+/// Rank 0's connection set: one blocking client per worker rank.
+pub struct ClusterCoordinator {
+    clients: Vec<ClusterClient>,
+    model: Option<ModelSpec>,
+}
+
+impl ClusterCoordinator {
+    /// Connect to every worker rank (rank order = `addrs` order) and
+    /// handshake: each rank must speak the same cluster protocol
+    /// version, so skewed binaries (manually started workers on other
+    /// hosts) fail with a clear diagnostic instead of a parse error
+    /// deep inside load/shard.
+    pub fn connect(addrs: &[SocketAddr]) -> Result<ClusterCoordinator> {
+        if addrs.is_empty() {
+            bail!("cluster needs at least one worker rank");
+        }
+        let mut clients = Vec::with_capacity(addrs.len());
+        for (rank, addr) in addrs.iter().enumerate() {
+            let mut client = ClusterClient::connect(*addr)
+                .with_context(|| format!("connecting worker rank {rank}"))?;
+            let reply = client
+                .call(&ClusterRequest::Ping)
+                .with_context(|| format!("handshake with rank {rank}"))?;
+            match reply {
+                ClusterReply::Pong { version } if version == CLUSTER_PROTOCOL_VERSION => {}
+                ClusterReply::Pong { version } => bail!(
+                    "rank {rank} speaks cluster protocol v{version}, this coordinator \
+                     speaks v{CLUSTER_PROTOCOL_VERSION} (mixed spdnn binaries?)"
+                ),
+                other => bail!("rank {rank}: unexpected handshake reply {other:?}"),
+            }
+            clients.push(client);
+        }
+        Ok(ClusterCoordinator { clients, model: None })
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// Replicate the model on every rank (each rebuilds the full weight
+    /// set locally from the shared recipe).
+    pub fn load(&mut self, model: &ModelSpec, spec: NativeSpec, prune: bool) -> Result<()> {
+        for (rank, client) in self.clients.iter_mut().enumerate() {
+            let reply = client
+                .call(&ClusterRequest::Load { rank, model: model.clone(), spec, prune })
+                .with_context(|| format!("loading model on rank {rank}"))?;
+            match reply {
+                ClusterReply::Loaded { neurons, layers, .. } => {
+                    if neurons != model.neurons || layers != model.layers {
+                        bail!(
+                            "rank {rank} loaded {neurons}x{layers}, expected {}x{}",
+                            model.neurons,
+                            model.layers
+                        );
+                    }
+                }
+                ClusterReply::Error { message } => bail!("rank {rank} load failed: {message}"),
+                other => bail!("rank {rank}: unexpected reply to load: {other:?}"),
+            }
+        }
+        self.model = Some(model.clone());
+        Ok(())
+    }
+
+    /// One full inference pass: scatter `features` (row-major
+    /// `[batch, neurons]`) across the ranks, run all layers on every
+    /// rank concurrently, gather and reassemble.
+    pub fn run(&mut self, features: &[f32]) -> Result<ClusterReport> {
+        let model =
+            self.model.clone().ok_or_else(|| anyhow!("load a model before running shards"))?;
+        let n = model.neurons;
+        if features.len() % n != 0 {
+            bail!("feature panel of {} values is not a multiple of neurons={n}", features.len());
+        }
+        let batch = features.len() / n;
+        let parts = partition_even(batch, self.clients.len());
+
+        let wall = Instant::now();
+        let mut slots: Vec<Option<Result<ShardResult>>> = Vec::new();
+        slots.resize_with(parts.len(), || None);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (client, part) in self.clients.iter_mut().zip(&parts) {
+                let shard = features[part.start * n..(part.start + part.count) * n].to_vec();
+                let start = part.start;
+                handles.push(scope.spawn(move || {
+                    match client.call(&ClusterRequest::Shard { start, features: shard }) {
+                        Ok(ClusterReply::Result(r)) => Ok(*r),
+                        Ok(ClusterReply::Error { message }) => Err(anyhow!("{message}")),
+                        Ok(other) => Err(anyhow!("unexpected reply to shard: {other:?}")),
+                        Err(e) => Err(e),
+                    }
+                }));
+            }
+            for (slot, h) in slots.iter_mut().zip(handles) {
+                *slot = Some(h.join().unwrap_or_else(|_| Err(anyhow!("scatter thread panicked"))));
+            }
+        });
+        let wall_secs = wall.elapsed().as_secs_f64();
+
+        let mut shards = Vec::with_capacity(slots.len());
+        for (rank, slot) in slots.into_iter().enumerate() {
+            shards.push(
+                slot.expect("slot filled").with_context(|| format!("shard on rank {rank}"))?,
+            );
+        }
+        ClusterReport::assemble(&model, parts, shards, wall_secs)
+    }
+
+    /// Send a shutdown op to every rank (errors ignored: a dead rank is
+    /// already shut down).
+    pub fn shutdown(mut self) {
+        for client in &mut self.clients {
+            let _ = client.call(&ClusterRequest::Shutdown);
+        }
+    }
+}
+
+/// The gathered result of one cluster inference pass.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    /// The scatter plan (exact cover of the input panel).
+    pub parts: Vec<Partition>,
+    /// Per-rank shard results, rank order.
+    pub shards: Vec<ShardResult>,
+    /// Merged surviving global feature ids, ascending.
+    pub categories: Vec<usize>,
+    /// Reassembled final activations `[categories.len(), neurons]`, in
+    /// `categories` order.
+    pub activations: Vec<f32>,
+    /// Rank-0 wall seconds for scatter + compute + gather.
+    pub wall_secs: f64,
+    /// The challenge metric numerator: batch × layers × (k × neurons).
+    pub input_edges: u64,
+    /// Input edges / wall seconds (Table 1's quantity).
+    pub edges_per_sec: f64,
+    pub edges_traversed: u64,
+    /// max/mean of per-rank live features entering each layer — the
+    /// pruning-induced skew of §IV.C, per layer.
+    pub per_layer_imbalance: Vec<f64>,
+    /// max/mean of per-rank busy (compute) seconds.
+    pub imbalance: f64,
+}
+
+impl ClusterReport {
+    fn assemble(
+        model: &ModelSpec,
+        parts: Vec<Partition>,
+        shards: Vec<ShardResult>,
+        wall_secs: f64,
+    ) -> Result<ClusterReport> {
+        let n = model.neurons;
+        // The gather trusts nothing: every shard must echo exactly the
+        // contiguous range it was assigned (exact cover, in order).
+        let mut pos = 0usize;
+        for (p, s) in parts.iter().zip(&shards) {
+            if s.start != p.start || s.count != p.count || p.start != pos {
+                bail!(
+                    "rank {} answered for features [{}, +{}) but was assigned [{}, +{})",
+                    s.rank,
+                    s.start,
+                    s.count,
+                    p.start,
+                    p.count
+                );
+            }
+            if s.activations.len() != s.categories.len() * n {
+                bail!(
+                    "rank {} returned {} activation values for {} categories (neurons={n})",
+                    s.rank,
+                    s.activations.len(),
+                    s.categories.len()
+                );
+            }
+            if s.categories.iter().any(|&c| c < p.start || c >= p.start + p.count) {
+                bail!("rank {} returned categories outside its shard range", s.rank);
+            }
+            if s.categories.windows(2).any(|w| w[0] >= w[1]) {
+                bail!("rank {} returned categories out of order or duplicated", s.rank);
+            }
+            pos += p.count;
+        }
+        let batch = pos;
+
+        // Contiguous disjoint shards, each strictly ascending (checked
+        // above): the concatenation is globally ascending, no merge
+        // sort needed.
+        let categories: Vec<usize> =
+            shards.iter().flat_map(|s| s.categories.iter().copied()).collect();
+        let activations: Vec<f32> =
+            shards.iter().flat_map(|s| s.activations.iter().copied()).collect();
+
+        let input_edges = model.input_edges(batch);
+        let edges_traversed = shards.iter().map(|s| s.edges_traversed).sum();
+        let mut per_layer_imbalance = Vec::with_capacity(model.layers);
+        for layer in 0..model.layers {
+            let live: Vec<usize> =
+                shards.iter().map(|s| s.live_per_layer.get(layer).copied().unwrap_or(0)).collect();
+            per_layer_imbalance.push(imbalance(&live));
+        }
+        let busy: Vec<f64> = shards.iter().map(|s| s.busy_secs()).collect();
+        let max = busy.iter().cloned().fold(0.0, f64::max);
+        let mean =
+            if busy.is_empty() { 0.0 } else { busy.iter().sum::<f64>() / busy.len() as f64 };
+        Ok(ClusterReport {
+            parts,
+            shards,
+            categories,
+            activations,
+            wall_secs,
+            input_edges,
+            edges_per_sec: if wall_secs > 0.0 { input_edges as f64 / wall_secs } else { 0.0 },
+            edges_traversed,
+            per_layer_imbalance,
+            imbalance: if mean > 0.0 { max / mean } else { 1.0 },
+        })
+    }
+
+    /// Fraction of input edges skipped thanks to pruning.
+    pub fn pruning_savings(&self) -> f64 {
+        if self.input_edges == 0 {
+            return 0.0;
+        }
+        1.0 - self.edges_traversed as f64 / self.input_edges as f64
+    }
+}
+
+/// A launcher + coordinator pair over local worker processes: the whole
+/// cluster behind one handle (what `cluster-run`, the scaling bench and
+/// the integration tests drive).
+pub struct LocalCluster {
+    launcher: Launcher,
+    coordinator: ClusterCoordinator,
+}
+
+impl LocalCluster {
+    /// Spawn `ranks` local worker processes of `program`, connect, and
+    /// replicate the model everywhere.
+    pub fn start(
+        program: &Path,
+        ranks: usize,
+        model: &ModelSpec,
+        spec: NativeSpec,
+        prune: bool,
+    ) -> Result<LocalCluster> {
+        let launcher = Launcher::spawn(&LauncherConfig::local(program.to_path_buf(), ranks))?;
+        let mut coordinator = ClusterCoordinator::connect(&launcher.addrs())?;
+        coordinator.load(model, spec, prune)?;
+        Ok(LocalCluster { launcher, coordinator })
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.coordinator.ranks()
+    }
+
+    /// One scattered inference pass over `features`. Dead or killed
+    /// worker processes surface as launcher errors naming the rank
+    /// before any scatter.
+    pub fn run(&mut self, features: &[f32]) -> Result<ClusterReport> {
+        self.launcher.check()?;
+        self.coordinator.run(features)
+    }
+
+    /// Fault-injection hook: kill one rank's process outright.
+    pub fn kill_rank(&mut self, rank: usize) -> Result<()> {
+        self.launcher.kill_rank(rank)
+    }
+
+    /// Graceful drain: shutdown ops to every rank, then reap the
+    /// processes within a deadline.
+    pub fn stop(self) -> Result<()> {
+        let LocalCluster { launcher, coordinator } = self;
+        coordinator.shutdown();
+        launcher.wait_exit(SHUTDOWN_LIMIT)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineKind;
+
+    fn model() -> ModelSpec {
+        ModelSpec {
+            neurons: 4,
+            layers: 2,
+            k: 2,
+            topology: "butterfly".into(),
+            seed: 1,
+            bias: -0.3,
+        }
+    }
+
+    fn shard(
+        rank: usize,
+        start: usize,
+        count: usize,
+        categories: Vec<usize>,
+        live: Vec<usize>,
+    ) -> ShardResult {
+        let activations = vec![0.5f32; categories.len() * 4];
+        ShardResult {
+            rank,
+            start,
+            count,
+            categories,
+            activations,
+            live_per_layer: live,
+            layer_secs: vec![0.5, 0.25],
+            edges_traversed: (count * 4 * 2) as u64,
+            secs: 1.0,
+        }
+    }
+
+    #[test]
+    fn assemble_merges_in_rank_order() {
+        let parts = partition_even(10, 2);
+        let shards = vec![
+            shard(0, 0, 5, vec![1, 4], vec![5, 3]),
+            shard(1, 5, 5, vec![5, 9], vec![5, 1]),
+        ];
+        let r = ClusterReport::assemble(&model(), parts, shards, 2.0).unwrap();
+        assert_eq!(r.categories, vec![1, 4, 5, 9]);
+        assert_eq!(r.activations.len(), 4 * 4);
+        assert_eq!(r.input_edges, 10 * 2 * 2 * 4);
+        assert_eq!(r.edges_traversed, 2 * 5 * 4 * 2);
+        // Layer 0 balanced (5 vs 5), layer 1 skewed (3 vs 1 -> 3/2).
+        assert_eq!(r.per_layer_imbalance, vec![1.0, 1.5]);
+        assert!((r.imbalance - 1.0).abs() < 1e-12);
+        assert!(r.edges_per_sec > 0.0);
+    }
+
+    #[test]
+    fn assemble_rejects_wrong_ranges() {
+        let parts = partition_even(10, 2);
+        let shards = vec![
+            shard(0, 0, 5, vec![], vec![5, 5]),
+            shard(1, 4, 6, vec![], vec![5, 5]), // overlaps rank 0
+        ];
+        assert!(ClusterReport::assemble(&model(), parts, shards, 1.0).is_err());
+    }
+
+    #[test]
+    fn assemble_rejects_unsorted_or_duplicate_categories() {
+        let parts = partition_even(10, 1);
+        let unsorted = shard(0, 0, 10, vec![4, 2], vec![10, 2]);
+        assert!(ClusterReport::assemble(&model(), parts.clone(), vec![unsorted], 1.0).is_err());
+        let duplicated = shard(0, 0, 10, vec![3, 3], vec![10, 2]);
+        assert!(ClusterReport::assemble(&model(), parts, vec![duplicated], 1.0).is_err());
+    }
+
+    #[test]
+    fn assemble_rejects_out_of_range_categories() {
+        let parts = partition_even(10, 2);
+        let shards = vec![
+            shard(0, 0, 5, vec![7], vec![5, 5]), // 7 belongs to rank 1
+            shard(1, 5, 5, vec![], vec![5, 5]),
+        ];
+        assert!(ClusterReport::assemble(&model(), parts, shards, 1.0).is_err());
+    }
+
+    #[test]
+    fn assemble_rejects_ragged_activations() {
+        let parts = partition_even(4, 1);
+        let mut s = shard(0, 0, 4, vec![0, 1], vec![4, 2]);
+        s.activations.pop();
+        assert!(ClusterReport::assemble(&model(), parts, vec![s], 1.0).is_err());
+    }
+
+    #[test]
+    fn empty_ranks_get_empty_parts() {
+        // More ranks than features: trailing ranks hold empty shards.
+        let parts = partition_even(1, 3);
+        let shards = vec![
+            shard(0, 0, 1, vec![0], vec![1, 1]),
+            shard(1, 1, 0, vec![], vec![0, 0]),
+            shard(2, 1, 0, vec![], vec![0, 0]),
+        ];
+        let r = ClusterReport::assemble(&model(), parts, shards, 1.0).unwrap();
+        assert_eq!(r.categories, vec![0]);
+        assert_eq!(r.per_layer_imbalance.len(), 2);
+    }
+
+    #[test]
+    fn pruning_savings_math() {
+        let parts = partition_even(10, 1);
+        let mut s = shard(0, 0, 10, vec![], vec![10, 5]);
+        s.edges_traversed = 80; // half of 10*2*2*4 = 160
+        let r = ClusterReport::assemble(&model(), parts, vec![s], 1.0).unwrap();
+        assert!((r.pruning_savings() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn connect_needs_ranks() {
+        assert!(ClusterCoordinator::connect(&[]).is_err());
+    }
+
+    #[test]
+    fn spec_is_copy_into_load() {
+        // Compile-time shape check that NativeSpec stays Copy for the
+        // scatter path.
+        let spec = NativeSpec { engine: EngineKind::Ell, minibatch: 12, slice: 32, threads: 1 };
+        let _a = spec;
+        let _b = spec;
+    }
+}

@@ -1,0 +1,282 @@
+//! Local process launcher: spawns and supervises worker-rank processes.
+//!
+//! Each rank is a real OS process (`<program> cluster-worker --listen
+//! host:0`), so the cluster exercises genuine process isolation — the
+//! thing `coordinator::pool`'s threads only simulate. The launcher owns
+//! the child handles:
+//!
+//! * **readiness** — a worker announces `SPDNN-CLUSTER-WORKER <addr>` on
+//!   stdout; the launcher scrapes it (with a timeout) before reporting
+//!   the rank as up, and keeps draining the pipe afterwards so a chatty
+//!   worker can never block on a full pipe;
+//! * **failure propagation** — `check()` turns an exited child into an
+//!   error naming the rank and exit status, so the coordinator surfaces
+//!   dead ranks instead of hanging on half a cluster;
+//! * **clean shutdown** — after the coordinator sends `shutdown` ops,
+//!   `wait_exit` reaps every child within a deadline and reports any
+//!   rank that had to be killed; `Drop` kills whatever is left so a
+//!   failed run cannot leak processes.
+
+use std::io::{BufRead, BufReader};
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::rank::READY_PREFIX;
+
+/// How the launcher starts a local rank fleet.
+#[derive(Clone, Debug)]
+pub struct LauncherConfig {
+    /// The spdnn binary to run (`std::env::current_exe()` for the CLI;
+    /// `env!("CARGO_BIN_EXE_spdnn")` in tests and benches).
+    pub program: PathBuf,
+    /// Worker-rank count (rank 0 is the coordinating caller itself).
+    pub ranks: usize,
+    /// Interface workers bind on (port 0 → each picks a free port).
+    pub host: String,
+    /// Longest a worker may take to announce readiness.
+    pub ready_timeout: Duration,
+}
+
+impl LauncherConfig {
+    pub fn local(program: PathBuf, ranks: usize) -> LauncherConfig {
+        LauncherConfig {
+            program,
+            ranks,
+            host: "127.0.0.1".to_string(),
+            ready_timeout: Duration::from_secs(20),
+        }
+    }
+}
+
+/// One supervised worker process.
+struct WorkerProc {
+    rank: usize,
+    addr: SocketAddr,
+    child: Child,
+}
+
+/// A running local rank fleet.
+pub struct Launcher {
+    workers: Vec<WorkerProc>,
+    /// Ranks removed by `kill_rank`: the fleet is permanently degraded
+    /// (partitioning still counts them), so `check` keeps failing with
+    /// a diagnostic naming the rank instead of an opaque socket error.
+    killed: Vec<usize>,
+}
+
+impl Launcher {
+    /// Spawn `cfg.ranks` worker processes and wait for every readiness
+    /// announcement. On any failure the already-spawned ranks are killed.
+    pub fn spawn(cfg: &LauncherConfig) -> Result<Launcher> {
+        if cfg.ranks == 0 {
+            bail!("cluster needs at least one worker rank");
+        }
+        let mut workers: Vec<WorkerProc> = Vec::with_capacity(cfg.ranks);
+        for rank in 0..cfg.ranks {
+            match spawn_worker(cfg, rank) {
+                Ok(w) => workers.push(w),
+                Err(e) => {
+                    for w in &mut workers {
+                        let _ = w.child.kill();
+                        let _ = w.child.wait();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(Launcher { workers, killed: Vec::new() })
+    }
+
+    /// Worker-rank count.
+    pub fn ranks(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Bound address of every rank, in rank order.
+    pub fn addrs(&self) -> Vec<SocketAddr> {
+        self.workers.iter().map(|w| w.addr).collect()
+    }
+
+    /// Propagate failures: error if any rank's process was killed or
+    /// has exited on its own.
+    pub fn check(&mut self) -> Result<()> {
+        if let Some(rank) = self.killed.first() {
+            bail!("worker rank {rank} was killed and not replaced");
+        }
+        for w in &mut self.workers {
+            if let Some(status) = w.child.try_wait().context("polling worker process")? {
+                bail!("worker rank {} exited early ({status})", w.rank);
+            }
+        }
+        Ok(())
+    }
+
+    /// Kill one rank outright (fault-injection hook for tests). The
+    /// launcher remembers the hole: subsequent `check` calls fail.
+    pub fn kill_rank(&mut self, rank: usize) -> Result<()> {
+        let idx = self
+            .workers
+            .iter()
+            .position(|w| w.rank == rank)
+            .ok_or_else(|| anyhow::anyhow!("no live worker rank {rank}"))?;
+        let mut w = self.workers.remove(idx);
+        w.child.kill().with_context(|| format!("killing rank {rank}"))?;
+        w.child.wait().with_context(|| format!("reaping rank {rank}"))?;
+        self.killed.push(rank);
+        Ok(())
+    }
+
+    /// Reap every child within `timeout` (call after the coordinator has
+    /// sent shutdown ops). Ranks that do not exit in time are killed and
+    /// reported as an unclean shutdown.
+    pub fn wait_exit(mut self, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        let mut failures: Vec<String> = Vec::new();
+        for w in &mut self.workers {
+            loop {
+                match w.child.try_wait() {
+                    Ok(Some(status)) => {
+                        if !status.success() {
+                            failures.push(format!("rank {} exited with {status}", w.rank));
+                        }
+                        break;
+                    }
+                    Ok(None) => {
+                        if Instant::now() >= deadline {
+                            let _ = w.child.kill();
+                            let _ = w.child.wait();
+                            failures.push(format!(
+                                "rank {} ignored shutdown and was killed",
+                                w.rank
+                            ));
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => {
+                        failures.push(format!("rank {}: {e}", w.rank));
+                        break;
+                    }
+                }
+            }
+        }
+        self.workers.clear();
+        if failures.is_empty() {
+            Ok(())
+        } else {
+            bail!("cluster shutdown was not clean: {}", failures.join("; "))
+        }
+    }
+}
+
+impl Drop for Launcher {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            let _ = w.child.kill();
+            let _ = w.child.wait();
+        }
+    }
+}
+
+fn spawn_worker(cfg: &LauncherConfig, rank: usize) -> Result<WorkerProc> {
+    let mut child = Command::new(&cfg.program)
+        .arg("cluster-worker")
+        .arg("--listen")
+        .arg(format!("{}:0", cfg.host))
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .with_context(|| {
+            format!("spawning worker rank {rank} ({})", cfg.program.display())
+        })?;
+    let stdout = child.stdout.take().expect("piped stdout");
+
+    // The reader thread scrapes the readiness line, then keeps draining
+    // stdout for the worker's lifetime (forwarding to our stderr) so the
+    // pipe can never fill up and block the worker.
+    let (tx, rx) = mpsc::channel::<Result<SocketAddr, String>>();
+    std::thread::spawn(move || {
+        let mut reader = BufReader::new(stdout);
+        let mut line = String::new();
+        let mut announced = false;
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) => {
+                    if !announced {
+                        let _ = tx.send(Err("exited before announcing readiness".to_string()));
+                    }
+                    break;
+                }
+                Ok(_) => {
+                    let t = line.trim();
+                    if !announced {
+                        if let Some(rest) = t.strip_prefix(READY_PREFIX) {
+                            announced = true;
+                            let _ = tx.send(
+                                rest.trim()
+                                    .parse::<SocketAddr>()
+                                    .map_err(|e| format!("bad ready line {t:?}: {e}")),
+                            );
+                            continue;
+                        }
+                    }
+                    if !t.is_empty() {
+                        eprintln!("[cluster rank {rank}] {t}");
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+    });
+
+    match rx.recv_timeout(cfg.ready_timeout) {
+        Ok(Ok(addr)) => Ok(WorkerProc { rank, addr, child }),
+        Ok(Err(msg)) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            bail!("worker rank {rank}: {msg}")
+        }
+        Err(_) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            bail!(
+                "worker rank {rank} did not announce readiness within {:?}",
+                cfg.ready_timeout
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_ranks_rejected() {
+        let cfg = LauncherConfig::local(PathBuf::from("/bin/true"), 0);
+        assert!(Launcher::spawn(&cfg).is_err());
+    }
+
+    #[test]
+    fn missing_program_is_a_spawn_error() {
+        let cfg = LauncherConfig::local(PathBuf::from("/nonexistent/spdnn"), 1);
+        assert!(Launcher::spawn(&cfg).is_err());
+    }
+
+    #[test]
+    fn non_announcing_program_times_out_or_errors() {
+        // `/bin/true` exits immediately without the ready line: the
+        // reader thread reports the early exit, not a hang.
+        let mut cfg = LauncherConfig::local(PathBuf::from("/bin/true"), 1);
+        cfg.ready_timeout = Duration::from_secs(5);
+        let err = Launcher::spawn(&cfg).unwrap_err().to_string();
+        assert!(err.contains("rank 0"), "unexpected error: {err}");
+    }
+}

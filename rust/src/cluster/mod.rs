@@ -1,0 +1,44 @@
+//! `spdnn::cluster` — multi-process distributed inference.
+//!
+//! The paper's at-scale numbers (§IV.C, Table 1) come from duplicating
+//! the weights on every GPU and statically partitioning the feature
+//! maps; `ReplicaRouter` and `coordinator::pool` only simulate that
+//! shape inside one OS process. This subsystem makes it real: a rank-0
+//! coordinator plus N worker ranks as separate OS processes, speaking
+//! the same JSON-lines TCP framing the serving layer uses.
+//!
+//! * [`transport`] — the collective vocabulary (`load` / `shard` /
+//!   `shutdown`) with bit-exact float round-tripping;
+//! * [`rank`] — a worker process: full weight replica (rebuilt
+//!   deterministically from the shared recipe), `run_worker` layer loop
+//!   on the v2 engines per scattered shard;
+//! * [`launcher`] — spawns/supervises local worker processes with a
+//!   readiness handshake, failure propagation and clean shutdown;
+//! * [`collective`] — rank 0's scatter/compute/gather schedule, the
+//!   reassembled [`ClusterReport`] (bit-identical to single-process
+//!   inference) and the per-layer cross-rank imbalance series.
+//!
+//! ```text
+//!   rank 0 (cluster-run)                         worker ranks (cluster-worker)
+//!   ┌─────────────────────┐   load (recipe)      ┌──────────────────────────┐
+//!   │ partition_even over │ ───────────────────► │ replicate weights (full) │
+//!   │ the feature panel   │   shard (features)   │ run all layers locally   │
+//!   │ gather + reassemble │ ◄─────────────────── │ categories + activations │
+//!   └─────────────────────┘   result             └──────────────────────────┘
+//! ```
+//!
+//! The CLI surface is `spdnn cluster-worker --listen H:P` and
+//! `spdnn cluster-run --ranks N`; `benches/table1_cluster.rs` sweeps the
+//! rank count into `BENCH_cluster.json` (Table 1's scaling column).
+
+pub mod collective;
+pub mod launcher;
+pub mod rank;
+pub mod transport;
+
+pub use collective::{ClusterCoordinator, ClusterReport, LocalCluster};
+pub use launcher::{Launcher, LauncherConfig};
+pub use rank::{serve_rank, READY_PREFIX};
+pub use transport::{
+    ClusterClient, ClusterReply, ClusterRequest, ModelSpec, ShardResult, CLUSTER_PROTOCOL_VERSION,
+};

@@ -1,0 +1,275 @@
+//! A worker rank: one OS process holding a full weight replica and
+//! executing the layer loop over whatever feature shard rank 0 scatters
+//! to it (paper §IV.C — weights duplicated, features partitioned).
+//!
+//! The process is started as `spdnn cluster-worker --listen HOST:PORT`
+//! (port 0 picks a free port), announces its bound address on stdout as
+//! `SPDNN-CLUSTER-WORKER <addr>` for the launcher to scrape, then serves
+//! coordinator connections sequentially until a `shutdown` op arrives.
+//!
+//! The compute path is exactly the in-process one: a `load` op rebuilds
+//! the weight set deterministically (same RadixNet topology + seed as
+//! rank 0, so replication costs generation time, not network transfer),
+//! and every `shard` op becomes a `coordinator::worker::WorkerTask` run
+//! through `run_worker` on the v2 engines — which is what makes cluster
+//! output bit-identical to single-process inference.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{BackendKind, NativeSpec, WeightSource, WorkerTask};
+use crate::formats::EllMatrix;
+use crate::radixnet::{RadixNet, Topology};
+use crate::{log_info, log_warn};
+
+use super::transport::{ClusterReply, ClusterRequest, ModelSpec, CLUSTER_PROTOCOL_VERSION};
+
+/// First stdout line of a worker: `SPDNN-CLUSTER-WORKER <addr>`.
+pub const READY_PREFIX: &str = "SPDNN-CLUSTER-WORKER";
+
+/// The weight replica plus the engine configuration a `load` op pinned.
+struct Replica {
+    rank: usize,
+    model: ModelSpec,
+    spec: NativeSpec,
+    prune: bool,
+    layers: Arc<Vec<EllMatrix>>,
+    bias: Vec<f32>,
+}
+
+/// Build the full weight set for `model` (deterministic replication:
+/// every rank generates identical layers from the shared recipe).
+pub fn build_replica_weights(model: &ModelSpec) -> Result<(Vec<EllMatrix>, Vec<f32>)> {
+    let topo = Topology::parse(&model.topology)?;
+    let net = RadixNet::new(model.neurons, model.layers, model.k, topo, model.seed)?;
+    let layers: Vec<EllMatrix> = (0..model.layers).map(|l| net.layer_ell(l)).collect();
+    let bias = vec![model.bias as f32; model.neurons];
+    Ok((layers, bias))
+}
+
+enum ConnOutcome {
+    /// Peer disconnected; go back to accept.
+    Disconnected,
+    /// A shutdown op was acknowledged; the process should exit.
+    Shutdown,
+}
+
+/// Serve one worker rank until a `shutdown` op arrives. Announces the
+/// bound address on stdout first (the launcher's readiness handshake).
+pub fn serve_rank(listener: TcpListener) -> Result<()> {
+    let addr = listener.local_addr().context("resolving bound address")?;
+    println!("{READY_PREFIX} {addr}");
+    std::io::stdout().flush().ok();
+
+    let mut replica: Option<Replica> = None;
+    loop {
+        let (stream, peer) = listener.accept().context("accepting coordinator connection")?;
+        log_info!("cluster worker: coordinator connected from {peer}");
+        match serve_connection(stream, &mut replica) {
+            Ok(ConnOutcome::Shutdown) => {
+                log_info!("cluster worker: shutdown acknowledged, exiting");
+                return Ok(());
+            }
+            Ok(ConnOutcome::Disconnected) => {}
+            Err(e) => log_warn!("cluster worker: connection error: {e:#}"),
+        }
+    }
+}
+
+fn serve_connection(stream: TcpStream, replica: &mut Option<Replica>) -> Result<ConnOutcome> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone().context("cloning connection")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).context("reading request line")?;
+        if n == 0 {
+            return Ok(ConnOutcome::Disconnected);
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let (reply, shutdown) = match ClusterRequest::parse_line(trimmed) {
+            Ok(ClusterRequest::Ping) => {
+                (ClusterReply::Pong { version: CLUSTER_PROTOCOL_VERSION }, false)
+            }
+            Ok(ClusterRequest::Load { rank, model, spec, prune }) => {
+                match load_replica(rank, model, spec, prune) {
+                    Ok(r) => {
+                        let reply = ClusterReply::Loaded {
+                            rank: r.rank,
+                            neurons: r.model.neurons,
+                            layers: r.model.layers,
+                        };
+                        *replica = Some(r);
+                        (reply, false)
+                    }
+                    Err(e) => (ClusterReply::Error { message: format!("{e:#}") }, false),
+                }
+            }
+            Ok(ClusterRequest::Shard { start, features }) => match replica.as_ref() {
+                Some(r) => match run_shard(r, start, features) {
+                    Ok(result) => (ClusterReply::Result(Box::new(result)), false),
+                    Err(e) => (ClusterReply::Error { message: format!("{e:#}") }, false),
+                },
+                None => (
+                    ClusterReply::Error {
+                        message: "no model loaded on this rank (send a load op first)".into(),
+                    },
+                    false,
+                ),
+            },
+            Ok(ClusterRequest::Shutdown) => (ClusterReply::Bye, true),
+            Err(e) => (ClusterReply::Error { message: format!("{e:#}") }, false),
+        };
+        writeln!(writer, "{}", reply.to_json()).context("writing reply")?;
+        writer.flush().ok();
+        if shutdown {
+            return Ok(ConnOutcome::Shutdown);
+        }
+    }
+}
+
+fn load_replica(rank: usize, model: ModelSpec, spec: NativeSpec, prune: bool) -> Result<Replica> {
+    let t = Instant::now();
+    let (layers, bias) = build_replica_weights(&model)?;
+    log_info!(
+        "cluster worker rank {rank}: replicated {} layers of {}x{} (k={}) in {:.1}ms \
+         [engine={} mb={} slice={} threads={}]",
+        layers.len(),
+        model.neurons,
+        model.layers,
+        model.k,
+        t.elapsed().as_secs_f64() * 1e3,
+        spec.engine,
+        spec.minibatch,
+        spec.slice,
+        spec.threads
+    );
+    Ok(Replica { rank, model, spec, prune, layers: Arc::new(layers), bias })
+}
+
+/// Run all layers over one scattered shard; the exact same code path as
+/// an in-process worker thread.
+fn run_shard(
+    replica: &Replica,
+    start: usize,
+    features: Vec<f32>,
+) -> Result<super::transport::ShardResult> {
+    let n = replica.model.neurons;
+    if n == 0 {
+        bail!("replica has zero-width model");
+    }
+    if features.len() % n != 0 {
+        bail!("shard of {} values is not a multiple of neurons={n}", features.len());
+    }
+    let count = features.len() / n;
+    let task = WorkerTask {
+        id: replica.rank,
+        backend: BackendKind::Native {
+            threads: replica.spec.threads,
+            minibatch: replica.spec.minibatch,
+            engine: replica.spec.engine,
+            slice: replica.spec.slice,
+        },
+        neurons: n,
+        k: replica.model.k,
+        nlayers: replica.model.layers,
+        bias: replica.bias.clone(),
+        prune: replica.prune,
+        features,
+        global_start: start,
+        weights: WeightSource::Memory(replica.layers.clone()),
+    };
+    let t = Instant::now();
+    let out = crate::coordinator::worker::run_worker(task)?;
+    Ok(super::transport::ShardResult {
+        rank: replica.rank,
+        start,
+        count,
+        categories: out.categories,
+        activations: out.final_y,
+        live_per_layer: out.metrics.live_per_layer,
+        layer_secs: out.metrics.layer_secs,
+        edges_traversed: out.metrics.edges_traversed,
+        secs: t.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::engine::EngineKind;
+    use crate::util::config::RuntimeConfig;
+
+    fn small_cfg() -> RuntimeConfig {
+        RuntimeConfig { neurons: 64, layers: 5, k: 4, batch: 12, ..Default::default() }
+    }
+
+    fn spec() -> NativeSpec {
+        NativeSpec { engine: EngineKind::Ell, minibatch: 12, slice: 32, threads: 1 }
+    }
+
+    #[test]
+    fn replica_weights_match_dataset_generation() {
+        let cfg = small_cfg();
+        let ds = Dataset::generate(&cfg).unwrap();
+        let (layers, bias) = build_replica_weights(&ModelSpec::from_config(&cfg)).unwrap();
+        assert_eq!(layers, ds.layers, "replicated weights must be bit-identical");
+        assert_eq!(bias, ds.bias);
+    }
+
+    #[test]
+    fn shard_runs_match_truth() {
+        let cfg = small_cfg();
+        let ds = Dataset::generate(&cfg).unwrap();
+        let model = ModelSpec::from_config(&cfg);
+        let replica = load_replica(0, model, spec(), true).unwrap();
+        let out = run_shard(&replica, 0, ds.features.clone()).unwrap();
+        assert_eq!(out.categories, ds.truth_categories);
+        assert_eq!(out.count, cfg.batch);
+        assert_eq!(out.live_per_layer.len(), cfg.layers);
+        assert_eq!(out.activations.len(), out.categories.len() * cfg.neurons);
+    }
+
+    #[test]
+    fn shard_offsets_are_global() {
+        let cfg = small_cfg();
+        let ds = Dataset::generate(&cfg).unwrap();
+        let replica = load_replica(1, ModelSpec::from_config(&cfg), spec(), true).unwrap();
+        let out = run_shard(&replica, 100, ds.features.clone()).unwrap();
+        let expect: Vec<usize> = ds.truth_categories.iter().map(|c| c + 100).collect();
+        assert_eq!(out.categories, expect);
+        assert_eq!(out.rank, 1);
+    }
+
+    #[test]
+    fn ragged_shard_rejected() {
+        let cfg = small_cfg();
+        let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true).unwrap();
+        assert!(run_shard(&replica, 0, vec![0.0; 63]).is_err());
+    }
+
+    #[test]
+    fn empty_shard_is_fine() {
+        let cfg = small_cfg();
+        let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true).unwrap();
+        let out = run_shard(&replica, 0, vec![]).unwrap();
+        assert!(out.categories.is_empty());
+        assert_eq!(out.count, 0);
+    }
+
+    #[test]
+    fn bad_topology_fails_load() {
+        let mut model = ModelSpec::from_config(&small_cfg());
+        model.topology = "mesh".into();
+        assert!(load_replica(0, model, spec(), true).is_err());
+    }
+}

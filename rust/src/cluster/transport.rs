@@ -1,0 +1,468 @@
+//! Cluster wire protocol: JSON-lines over TCP between rank 0 and the
+//! worker ranks.
+//!
+//! The framing is the same one the serving subsystem speaks
+//! (`server::protocol`): one UTF-8 JSON object per `\n`-terminated line,
+//! serialized through the dependency-light `util::json`. The verbs are
+//! the collective vocabulary of the paper's multi-GPU model (§IV.C):
+//!
+//! ```text
+//! {"op":"ping"}                                   liveness
+//! {"op":"load","rank":R,"model":{...},"spec":{...},"prune":true}
+//!                                                 replicate the weights
+//! {"op":"shard","start":S,"features":[...]}       scatter one partition
+//! {"op":"shutdown"}                               drain + exit
+//! ```
+//!
+//! `load` ships the *recipe* for the weight replica (shape, topology,
+//! seed, bias), not the weights themselves: every rank rebuilds the full
+//! weight set locally — replication without moving gigabytes through
+//! rank 0. `shard` then moves only this rank's feature partition, and
+//! the `result` reply carries the surviving categories, their final
+//! activations, and the per-layer trajectory rank 0 aggregates into the
+//! cluster imbalance report.
+//!
+//! Floats survive the wire bit-exactly: an `f32` widened to `f64`
+//! serializes via Rust's shortest-round-trip formatting and parses back
+//! to the identical bits, which is what makes cluster inference
+//! bit-identical to the single-process run.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::NativeSpec;
+use crate::engine::EngineKind;
+use crate::server::protocol::parse_f32_array;
+use crate::util::config::RuntimeConfig;
+use crate::util::json::Json;
+
+pub const CLUSTER_PROTOCOL_VERSION: i64 = 1;
+
+/// The recipe a worker rank needs to materialise its full weight
+/// replica: deterministic topology generation, not weight shipping.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub neurons: usize,
+    pub layers: usize,
+    pub k: usize,
+    pub topology: String,
+    pub seed: u64,
+    /// Resolved bias constant (one value per neuron).
+    pub bias: f64,
+}
+
+impl ModelSpec {
+    pub fn from_config(cfg: &RuntimeConfig) -> ModelSpec {
+        ModelSpec {
+            neurons: cfg.neurons,
+            layers: cfg.layers,
+            k: cfg.k,
+            topology: cfg.topology.clone(),
+            seed: cfg.seed,
+            bias: cfg.bias_value() as f64,
+        }
+    }
+
+    /// Input edges of one full pass over `batch` features.
+    pub fn input_edges(&self, batch: usize) -> u64 {
+        batch as u64 * self.layers as u64 * (self.k as u64 * self.neurons as u64)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("neurons", Json::Int(self.neurons as i64)),
+            ("layers", Json::Int(self.layers as i64)),
+            ("k", Json::Int(self.k as i64)),
+            ("topology", Json::Str(self.topology.clone())),
+            ("seed", Json::Int(self.seed as i64)),
+            ("bias", Json::Num(self.bias)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<ModelSpec> {
+        Ok(ModelSpec {
+            neurons: j.req_usize("neurons")?,
+            layers: j.req_usize("layers")?,
+            k: j.req_usize("k")?,
+            topology: j.req_str("topology")?.to_string(),
+            // The full u64 seed range round-trips through i64 bits (a
+            // seed above i64::MAX serializes negative and casts back).
+            seed: j
+                .req("seed")?
+                .as_i64()
+                .ok_or_else(|| anyhow!("\"seed\" is not an integer"))?
+                as u64,
+            bias: j.req_f64("bias")?,
+        })
+    }
+}
+
+fn spec_to_json(spec: &NativeSpec) -> Json {
+    Json::obj(vec![
+        ("engine", Json::Str(spec.engine.as_str().to_string())),
+        ("minibatch", Json::Int(spec.minibatch as i64)),
+        ("slice", Json::Int(spec.slice as i64)),
+        ("threads", Json::Int(spec.threads as i64)),
+    ])
+}
+
+fn spec_from_json(j: &Json) -> Result<NativeSpec> {
+    Ok(NativeSpec {
+        engine: EngineKind::parse(j.req_str("engine")?)?,
+        minibatch: j.req_usize("minibatch")?,
+        slice: j.req_usize("slice")?,
+        threads: j.req_usize("threads")?,
+    })
+}
+
+/// One coordinator-to-worker request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClusterRequest {
+    Ping,
+    /// Build the full weight replica on this rank.
+    Load { rank: usize, model: ModelSpec, spec: NativeSpec, prune: bool },
+    /// Run all layers over one statically-partitioned feature shard.
+    Shard { start: usize, features: Vec<f32> },
+    /// Finish the current work and exit the worker process.
+    Shutdown,
+}
+
+impl ClusterRequest {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ClusterRequest::Ping => Json::obj(vec![("op", Json::Str("ping".into()))]),
+            ClusterRequest::Load { rank, model, spec, prune } => Json::obj(vec![
+                ("op", Json::Str("load".into())),
+                ("rank", Json::Int(*rank as i64)),
+                ("model", model.to_json()),
+                ("spec", spec_to_json(spec)),
+                ("prune", Json::Bool(*prune)),
+            ]),
+            ClusterRequest::Shard { start, features } => {
+                let xs: Vec<f64> = features.iter().map(|&x| x as f64).collect();
+                Json::obj(vec![
+                    ("op", Json::Str("shard".into())),
+                    ("start", Json::Int(*start as i64)),
+                    ("features", Json::arr_f64(&xs)),
+                ])
+            }
+            ClusterRequest::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".into()))]),
+        }
+    }
+
+    pub fn parse_line(line: &str) -> Result<ClusterRequest> {
+        let v = Json::parse(line).context("cluster request is not valid JSON")?;
+        match v.req_str("op")? {
+            "ping" => Ok(ClusterRequest::Ping),
+            "load" => Ok(ClusterRequest::Load {
+                rank: v.req_usize("rank")?,
+                model: ModelSpec::from_json(v.req("model")?).context("\"model\"")?,
+                spec: spec_from_json(v.req("spec")?).context("\"spec\"")?,
+                prune: v
+                    .req("prune")?
+                    .as_bool()
+                    .ok_or_else(|| anyhow!("\"prune\" is not a bool"))?,
+            }),
+            "shard" => Ok(ClusterRequest::Shard {
+                start: v.req_usize("start")?,
+                features: parse_f32_array(v.req("features")?).context("\"features\"")?,
+            }),
+            "shutdown" => Ok(ClusterRequest::Shutdown),
+            other => bail!("unknown cluster op {other:?}"),
+        }
+    }
+}
+
+/// What one rank computed for its shard: the gather payload plus the
+/// per-layer trajectory the coordinator folds into the imbalance report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardResult {
+    pub rank: usize,
+    /// Global id of the shard's first feature (echoed for cover checks).
+    pub start: usize,
+    /// Features assigned to this shard (echoed for cover checks).
+    pub count: usize,
+    /// Surviving global feature ids, ascending.
+    pub categories: Vec<usize>,
+    /// Compacted final activations `[categories.len(), neurons]`.
+    pub activations: Vec<f32>,
+    /// Live features entering each layer.
+    pub live_per_layer: Vec<usize>,
+    /// Seconds per layer on this rank.
+    pub layer_secs: Vec<f64>,
+    pub edges_traversed: u64,
+    /// Whole-shard wall seconds on the worker (compute, not transport).
+    pub secs: f64,
+}
+
+impl ShardResult {
+    pub fn busy_secs(&self) -> f64 {
+        self.layer_secs.iter().sum()
+    }
+}
+
+/// One worker-to-coordinator reply.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClusterReply {
+    Pong { version: i64 },
+    Loaded { rank: usize, neurons: usize, layers: usize },
+    Result(Box<ShardResult>),
+    /// Acknowledgement of a shutdown; the worker exits after sending it.
+    Bye,
+    Error { message: String },
+}
+
+impl ClusterReply {
+    pub fn to_json(&self) -> Json {
+        match self {
+            ClusterReply::Pong { version } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("kind", Json::Str("pong".into())),
+                ("version", Json::Int(*version)),
+            ]),
+            ClusterReply::Loaded { rank, neurons, layers } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("kind", Json::Str("loaded".into())),
+                ("rank", Json::Int(*rank as i64)),
+                ("neurons", Json::Int(*neurons as i64)),
+                ("layers", Json::Int(*layers as i64)),
+            ]),
+            ClusterReply::Result(r) => {
+                let acts: Vec<f64> = r.activations.iter().map(|&x| x as f64).collect();
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("kind", Json::Str("result".into())),
+                    ("rank", Json::Int(r.rank as i64)),
+                    ("start", Json::Int(r.start as i64)),
+                    ("count", Json::Int(r.count as i64)),
+                    ("categories", Json::arr_usize(&r.categories)),
+                    ("activations", Json::arr_f64(&acts)),
+                    ("live_per_layer", Json::arr_usize(&r.live_per_layer)),
+                    ("layer_secs", Json::arr_f64(&r.layer_secs)),
+                    ("edges_traversed", Json::Int(r.edges_traversed as i64)),
+                    ("secs", Json::Num(r.secs)),
+                ])
+            }
+            ClusterReply::Bye => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("kind", Json::Str("bye".into())),
+            ]),
+            ClusterReply::Error { message } => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("kind", Json::Str("error".into())),
+                ("error", Json::Str(message.clone())),
+            ]),
+        }
+    }
+
+    pub fn parse_line(line: &str) -> Result<ClusterReply> {
+        let v = Json::parse(line).context("cluster reply is not valid JSON")?;
+        match v.req_str("kind")? {
+            "pong" => Ok(ClusterReply::Pong {
+                version: v
+                    .req("version")?
+                    .as_i64()
+                    .ok_or_else(|| anyhow!("\"version\" is not an int"))?,
+            }),
+            "loaded" => Ok(ClusterReply::Loaded {
+                rank: v.req_usize("rank")?,
+                neurons: v.req_usize("neurons")?,
+                layers: v.req_usize("layers")?,
+            }),
+            "result" => Ok(ClusterReply::Result(Box::new(ShardResult {
+                rank: v.req_usize("rank")?,
+                start: v.req_usize("start")?,
+                count: v.req_usize("count")?,
+                categories: parse_usize_array(v.req("categories")?).context("\"categories\"")?,
+                activations: parse_f32_array(v.req("activations")?).context("\"activations\"")?,
+                live_per_layer: parse_usize_array(v.req("live_per_layer")?)
+                    .context("\"live_per_layer\"")?,
+                layer_secs: parse_f64_array(v.req("layer_secs")?).context("\"layer_secs\"")?,
+                edges_traversed: v.req_usize("edges_traversed")? as u64,
+                secs: v.req_f64("secs")?,
+            }))),
+            "bye" => Ok(ClusterReply::Bye),
+            "error" => Ok(ClusterReply::Error { message: v.req_str("error")?.to_string() }),
+            other => bail!("unknown cluster reply kind {other:?}"),
+        }
+    }
+}
+
+fn parse_usize_array(j: &Json) -> Result<Vec<usize>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("expected an array of unsigned ints"))?;
+    arr.iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("array element is not an unsigned int")))
+        .collect()
+}
+
+fn parse_f64_array(j: &Json) -> Result<Vec<f64>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("expected an array of numbers"))?;
+    arr.iter()
+        .map(|x| {
+            let f = x.as_f64().ok_or_else(|| anyhow!("array element is not a number"))?;
+            if !f.is_finite() {
+                bail!("array element is not finite");
+            }
+            Ok(f)
+        })
+        .collect()
+}
+
+/// Blocking JSON-lines client held by rank 0, one per worker rank.
+pub struct ClusterClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl ClusterClient {
+    pub fn connect(addr: SocketAddr) -> Result<ClusterClient> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to rank at {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone().context("cloning cluster stream")?;
+        Ok(ClusterClient { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request and block for its reply line.
+    pub fn call(&mut self, req: &ClusterRequest) -> Result<ClusterReply> {
+        writeln!(self.writer, "{}", req.to_json()).context("writing cluster request")?;
+        self.writer.flush().context("flushing cluster request")?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).context("reading cluster reply")?;
+        if n == 0 {
+            bail!("worker closed the connection");
+        }
+        ClusterReply::parse_line(line.trim())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelSpec {
+        ModelSpec {
+            neurons: 64,
+            layers: 5,
+            k: 4,
+            topology: "butterfly".into(),
+            seed: 7,
+            bias: -0.3,
+        }
+    }
+
+    fn spec() -> NativeSpec {
+        NativeSpec { engine: EngineKind::Sliced, minibatch: 12, slice: 32, threads: 2 }
+    }
+
+    fn roundtrip_request(req: ClusterRequest) {
+        let line = req.to_json().to_string();
+        assert_eq!(ClusterRequest::parse_line(&line).unwrap(), req, "line: {line}");
+    }
+
+    fn roundtrip_reply(reply: ClusterReply) {
+        let line = reply.to_json().to_string();
+        assert_eq!(ClusterReply::parse_line(&line).unwrap(), reply, "line: {line}");
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        roundtrip_request(ClusterRequest::Ping);
+        roundtrip_request(ClusterRequest::Load {
+            rank: 3,
+            model: model(),
+            spec: spec(),
+            prune: true,
+        });
+        roundtrip_request(ClusterRequest::Shard {
+            start: 12,
+            features: vec![0.0, 1.5, 0.25, 3.125],
+        });
+        roundtrip_request(ClusterRequest::Shutdown);
+    }
+
+    #[test]
+    fn reply_roundtrips() {
+        roundtrip_reply(ClusterReply::Pong { version: CLUSTER_PROTOCOL_VERSION });
+        roundtrip_reply(ClusterReply::Loaded { rank: 1, neurons: 64, layers: 5 });
+        roundtrip_reply(ClusterReply::Result(Box::new(ShardResult {
+            rank: 2,
+            start: 8,
+            count: 4,
+            categories: vec![9, 11],
+            activations: vec![0.5, 0.0, 1.25, 32.0],
+            live_per_layer: vec![4, 3, 2, 2, 2],
+            layer_secs: vec![0.25, 0.125, 0.0625, 0.5, 0.125],
+            edges_traversed: 1234,
+            secs: 1.5,
+        })));
+        roundtrip_reply(ClusterReply::Bye);
+        roundtrip_reply(ClusterReply::Error { message: "boom".into() });
+    }
+
+    #[test]
+    fn f32_features_survive_the_wire_bit_exactly() {
+        // Awkward values: subnormal-ish, repeating-fraction, and large.
+        let feats: Vec<f32> = vec![0.1, 1.0 / 3.0, 1e-12, 31.999999, 0.0];
+        let req = ClusterRequest::Shard { start: 0, features: feats.clone() };
+        let back = ClusterRequest::parse_line(&req.to_json().to_string()).unwrap();
+        match back {
+            ClusterRequest::Shard { features, .. } => {
+                assert_eq!(features.len(), feats.len());
+                for (a, b) in features.iter().zip(&feats) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{a} != {b}");
+                }
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+    }
+
+    #[test]
+    fn model_spec_from_config_resolves_bias() {
+        let cfg = RuntimeConfig { neurons: 1024, ..Default::default() };
+        let m = ModelSpec::from_config(&cfg);
+        // The resolved challenge bias for 1024 neurons, widened losslessly.
+        assert_eq!(m.bias, (-0.3f32) as f64);
+        assert_eq!(m.bias as f32, -0.3f32);
+        assert_eq!(m.input_edges(10), 10 * 120 * 32 * 1024);
+    }
+
+    #[test]
+    fn seeds_above_i64_max_round_trip() {
+        let mut m = model();
+        m.seed = u64::MAX; // serializes as -1, casts back losslessly
+        roundtrip_request(ClusterRequest::Load {
+            rank: 0,
+            model: m,
+            spec: spec(),
+            prune: false,
+        });
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(ClusterRequest::parse_line("not json").is_err());
+        assert!(ClusterRequest::parse_line(r#"{"op":"warp"}"#).is_err());
+        assert!(ClusterRequest::parse_line(r#"{"op":"shard","start":0}"#).is_err());
+        assert!(ClusterReply::parse_line(r#"{"kind":"warp"}"#).is_err());
+        assert!(ClusterReply::parse_line(r#"{"kind":"result","rank":0}"#).is_err());
+    }
+
+    #[test]
+    fn shard_result_busy_secs() {
+        let r = ShardResult {
+            rank: 0,
+            start: 0,
+            count: 0,
+            categories: vec![],
+            activations: vec![],
+            live_per_layer: vec![],
+            layer_secs: vec![0.5, 0.25],
+            edges_traversed: 0,
+            secs: 1.0,
+        };
+        assert_eq!(r.busy_secs(), 0.75);
+    }
+}

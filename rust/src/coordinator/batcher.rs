@@ -15,11 +15,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::engine::EllEngine;
+use crate::engine::EngineKind;
 use crate::formats::EllMatrix;
 
+use super::inference::NativeSpec;
 use super::pruning::flags_from_panel;
-use super::worker::PjrtExec;
+use super::worker::{NativeExec, PjrtExec};
 use crate::runtime::LayerLiterals;
 
 /// Batching policy.
@@ -37,11 +38,22 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Server backend selection.
+/// Server backend selection. `Native` carries a fully-resolved engine
+/// configuration, so serving rides the same v2 kernels (csr/ell/sliced,
+/// or the autotuner's pick resolved by the caller) as offline inference.
 #[derive(Clone, Debug)]
 pub enum ServeBackend {
-    Native { threads: usize, minibatch: usize },
+    Native { spec: NativeSpec },
     Pjrt { artifacts: std::path::PathBuf },
+}
+
+impl ServeBackend {
+    /// The historical default: the ELL engine with the paper's knobs.
+    pub fn native(threads: usize, minibatch: usize) -> ServeBackend {
+        ServeBackend::Native {
+            spec: NativeSpec { engine: EngineKind::Ell, minibatch, slice: 32, threads },
+        }
+    }
 }
 
 /// The model a server instance serves.
@@ -143,14 +155,22 @@ impl Drop for InferenceServer {
 }
 
 enum ServeExec {
-    Native(EllEngine),
+    Native(NativeExec),
     Pjrt(Box<PjrtExec>),
 }
 
 fn build_exec(model: &ServedModel, backend: &ServeBackend) -> Result<ServeExec> {
     match backend {
-        ServeBackend::Native { threads, minibatch } => {
-            Ok(ServeExec::Native(EllEngine::with_mb(*threads, *minibatch)?))
+        ServeBackend::Native { spec } => {
+            // Resident weights: the sliced engine pre-slices them once at
+            // replica start, exactly like an offline worker.
+            Ok(ServeExec::Native(NativeExec::build(
+                spec.threads,
+                spec.minibatch,
+                spec.engine,
+                spec.slice,
+                Some(model.layers.as_slice()),
+            )?))
         }
         ServeBackend::Pjrt { artifacts } => {
             Ok(ServeExec::Pjrt(Box::new(PjrtExec::new(artifacts, model.neurons)?)))
@@ -241,8 +261,8 @@ fn run_network(
     match exec {
         ServeExec::Native(engine) => {
             let mut scratch = vec![0.0f32; y.len()];
-            for w in model.layers.iter() {
-                engine.layer(w, &model.bias, y, &mut scratch);
+            for (layer, w) in model.layers.iter().enumerate() {
+                engine.layer(layer, w, &model.bias, y, &mut scratch)?;
                 std::mem::swap(y, &mut scratch);
             }
         }
@@ -279,7 +299,7 @@ mod tests {
     }
 
     fn native() -> ServeBackend {
-        ServeBackend::Native { threads: 1, minibatch: 12 }
+        ServeBackend::native(1, 12)
     }
 
     #[test]
@@ -309,6 +329,37 @@ mod tests {
             rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap().batch_size).collect();
         // All six landed within the wait window -> at least one multi-request panel.
         assert!(sizes.iter().any(|&s| s > 1), "sizes={sizes:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn every_native_engine_serves_identically() {
+        let (m, ds) = model();
+        let reference = InferenceServer::start(m.clone(), native(), BatchPolicy::default());
+        for engine in [EngineKind::Csr, EngineKind::Ell, EngineKind::Sliced] {
+            let spec = NativeSpec { engine, minibatch: 12, slice: 16, threads: 1 };
+            let backend = ServeBackend::Native { spec };
+            let server = InferenceServer::start(m.clone(), backend, BatchPolicy::default());
+            for i in 0..ds.cfg.batch {
+                let feats = ds.features[i * 64..(i + 1) * 64].to_vec();
+                let want = reference.classify(feats.clone()).unwrap();
+                let got = server.classify(feats).unwrap();
+                assert_eq!(got.active, want.active, "engine={engine} feature {i}");
+                assert_eq!(got.activations, want.activations, "engine={engine} feature {i}");
+            }
+            server.shutdown();
+        }
+        reference.shutdown();
+    }
+
+    #[test]
+    fn bad_native_spec_fails_requests_cleanly() {
+        let (m, ds) = model();
+        let spec = NativeSpec { engine: EngineKind::Ell, minibatch: 0, slice: 32, threads: 1 };
+        let server =
+            InferenceServer::start(m, ServeBackend::Native { spec }, BatchPolicy::default());
+        let err = server.classify(ds.features[0..64].to_vec()).unwrap_err().to_string();
+        assert!(err.contains("backend init failed"), "unexpected error: {err}");
         server.shutdown();
     }
 

@@ -90,7 +90,20 @@ pub fn resolve_native_spec(cfg: &RuntimeConfig, opts: &RunOptions) -> NativeSpec
             let key = TuneKey { neurons: cfg.neurons, k: cfg.k, layers: cfg.layers };
             let mut tuner = match &opts.tune_cache {
                 Some(p) if p.exists() => match Autotuner::load(p) {
-                    Ok(t) => t,
+                    Ok(t) => match t.staleness() {
+                        // A table tuned on another machine (or without a
+                        // fingerprint) must not be silently reused:
+                        // warn, drop it, and retune on this host.
+                        Some(why) => {
+                            log_warn!(
+                                "auto backend: tuning table {} is stale ({why}); \
+                                 retuning on this host (the file will be rewritten on save)",
+                                p.display()
+                            );
+                            Autotuner::default()
+                        }
+                        None => t,
+                    },
                     Err(e) => {
                         log_warn!(
                             "auto backend: tuning table {} unreadable ({e:#}); \
@@ -287,6 +300,49 @@ mod tests {
         // …and a second run reuses it (still valid).
         let again = run_inference(&ds, &opts).unwrap();
         validate(&again, &ds).unwrap();
+        let _ = std::fs::remove_file(&cache);
+    }
+
+    #[test]
+    fn stale_tune_cache_is_retuned_not_reused() {
+        use crate::engine::{HostFingerprint, TunedConfig};
+        let ds = Dataset::generate(&cfg(1, true)).unwrap();
+        let key = TuneKey { neurons: 64, k: 4, layers: 6 };
+        // A table "from another machine": right key, absurd knobs that
+        // this host would never pick, foreign fingerprint.
+        let mut foreign = Autotuner::default();
+        foreign.tuned_host =
+            Some(HostFingerprint { hostname: "other-box".into(), cpus: 999, pool: 999 });
+        foreign.insert(
+            key,
+            TunedConfig {
+                engine: EngineKind::Csr,
+                minibatch: 63,
+                slice: 7,
+                threads: 1,
+                edges_per_sec: 1.0,
+            },
+        );
+        let cache =
+            std::env::temp_dir().join(format!("spdnn_tune_stale_{}.json", std::process::id()));
+        foreign.save(&cache).unwrap();
+        let opts = RunOptions {
+            engine: EngineSelect::Auto,
+            tune_cache: Some(cache.clone()),
+            ..Default::default()
+        };
+        let report = run_inference(&ds, &opts).unwrap();
+        validate(&report, &ds).unwrap();
+        // The stale table was replaced by a fresh calibration: the saved
+        // file now carries this host's fingerprint and a real decision.
+        let reloaded = Autotuner::load(&cache).unwrap();
+        assert_eq!(reloaded.staleness(), None, "rewritten table must be fresh");
+        let tuned = *reloaded.cached(&key).expect("decision recalibrated");
+        assert_ne!(
+            (tuned.engine, tuned.minibatch, tuned.slice),
+            (EngineKind::Csr, 63, 7),
+            "foreign knobs must not survive"
+        );
         let _ = std::fs::remove_file(&cache);
     }
 

@@ -91,8 +91,10 @@ enum Exec {
     Pjrt(PjrtExec),
 }
 
-/// The resolved native layer kernel of one worker.
-enum NativeExec {
+/// The resolved native layer kernel of one worker. Public because the
+/// serving batcher (`coordinator::batcher`) executes the same resolved
+/// engine over its request panels.
+pub enum NativeExec {
     Csr(CsrEngine),
     Ell(EllEngine),
     Sliced {
@@ -106,7 +108,7 @@ enum NativeExec {
 }
 
 impl NativeExec {
-    fn build(
+    pub fn build(
         threads: usize,
         minibatch: usize,
         engine: EngineKind,
@@ -137,7 +139,7 @@ impl NativeExec {
     }
 
     /// Run layer `layer` over the live feature panel.
-    fn layer(
+    pub fn layer(
         &self,
         layer: usize,
         w: &EllMatrix,

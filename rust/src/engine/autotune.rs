@@ -30,6 +30,75 @@ use super::{CsrEngine, EllEngine, EngineKind, SlicedEllEngine};
 /// Schema tag of the serialized tuning table.
 pub const TUNE_SCHEMA: &str = "spdnn-tune-v1";
 
+/// Identity of the machine a tuning table was calibrated on. A table
+/// tuned on one host is meaningless on another (different core count,
+/// pool size, cache hierarchy); persisted tables carry this fingerprint
+/// so `--tune-cache` can warn-and-retune instead of silently reusing a
+/// foreign table.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HostFingerprint {
+    pub hostname: String,
+    /// `std::thread::available_parallelism` at calibration time.
+    pub cpus: usize,
+    /// `util::threadpool::ThreadPool::global().size()` at calibration.
+    pub pool: usize,
+}
+
+impl HostFingerprint {
+    /// The fingerprint of the machine this process runs on.
+    pub fn current() -> HostFingerprint {
+        HostFingerprint {
+            hostname: read_hostname(),
+            cpus: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            pool: ThreadPool::global().size(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hostname", Json::Str(self.hostname.clone())),
+            ("cpus", Json::Int(self.cpus as i64)),
+            ("pool", Json::Int(self.pool as i64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<HostFingerprint> {
+        Ok(HostFingerprint {
+            hostname: j.req_str("hostname")?.to_string(),
+            cpus: j.req_usize("cpus")?,
+            pool: j.req_usize("pool")?,
+        })
+    }
+}
+
+/// Best-effort hostname without external crates. Kernel sources come
+/// first — they are stable across shells on the same machine, whereas
+/// `$HOSTNAME` is exported by some shells and absent in others (cron,
+/// CI), which would make the same host fingerprint two ways. Non-Linux
+/// hosts (no /proc, usually no /etc/hostname) fall back to one
+/// `hostname` exec before giving up.
+fn read_hostname() -> String {
+    for path in ["/proc/sys/kernel/hostname", "/etc/hostname"] {
+        if let Ok(h) = std::fs::read_to_string(path) {
+            if !h.trim().is_empty() {
+                return h.trim().to_string();
+            }
+        }
+    }
+    if let Ok(h) = std::env::var("HOSTNAME") {
+        if !h.trim().is_empty() {
+            return h.trim().to_string();
+        }
+    }
+    if let Ok(out) = std::process::Command::new("hostname").output() {
+        let h = String::from_utf8_lossy(&out.stdout);
+        if !h.trim().is_empty() {
+            return h.trim().to_string();
+        }
+    }
+    "unknown-host".to_string()
+}
+
 /// Network shape a tuning decision applies to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct TuneKey {
@@ -61,6 +130,10 @@ pub struct Autotuner {
     pub reps: usize,
     /// Thread counts to sweep (clamped to the calibration batch).
     pub thread_candidates: Vec<usize>,
+    /// Host the table's decisions were calibrated on. Fresh tuners carry
+    /// the current host; loaded tables carry whatever was persisted
+    /// (`None` for pre-fingerprint tables).
+    pub tuned_host: Option<HostFingerprint>,
 }
 
 impl Default for Autotuner {
@@ -70,7 +143,13 @@ impl Default for Autotuner {
         if pool > 1 {
             threads.push(pool.min(8));
         }
-        Autotuner { table: BTreeMap::new(), budget_secs: 1.5, reps: 2, thread_candidates: threads }
+        Autotuner {
+            table: BTreeMap::new(),
+            budget_secs: 1.5,
+            reps: 2,
+            thread_candidates: threads,
+            tuned_host: Some(HostFingerprint::current()),
+        }
     }
 }
 
@@ -183,6 +262,22 @@ impl Autotuner {
 
     // ------------------------------------------------------- persistence
 
+    /// Why this table should not be trusted on the current host, if any.
+    /// `None` means the fingerprint matches and the decisions apply.
+    pub fn staleness(&self) -> Option<String> {
+        let now = HostFingerprint::current();
+        match &self.tuned_host {
+            None => Some("table carries no host fingerprint (tuned before spdnn-tune-v1 \
+                          grew one)"
+                .to_string()),
+            Some(h) if *h != now => Some(format!(
+                "tuned on {} ({} cpus, pool {}), running on {} ({} cpus, pool {})",
+                h.hostname, h.cpus, h.pool, now.hostname, now.cpus, now.pool
+            )),
+            Some(_) => None,
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let entries: Vec<Json> = self
             .table
@@ -200,18 +295,28 @@ impl Autotuner {
                 ])
             })
             .collect();
-        Json::obj(vec![
+        let mut fields = vec![
             ("schema", Json::Str(TUNE_SCHEMA.to_string())),
             ("entries", Json::Arr(entries)),
-        ])
+        ];
+        if let Some(host) = &self.tuned_host {
+            fields.push(("host", host.to_json()));
+        }
+        Json::obj(fields)
     }
 
-    /// Merge a serialized table into this tuner.
+    /// Merge a serialized table into this tuner. The file's host
+    /// fingerprint (or its absence) replaces this tuner's, so staleness
+    /// reflects where the *table* came from.
     pub fn load_table(&mut self, doc: &Json) -> Result<()> {
         let schema = doc.req_str("schema")?;
         if schema != TUNE_SCHEMA {
             bail!("tuning table schema {schema:?} is not {TUNE_SCHEMA:?}");
         }
+        self.tuned_host = match doc.get("host") {
+            Some(h) => Some(HostFingerprint::from_json(h).context("\"host\"")?),
+            None => None,
+        };
         for e in doc.req_arr("entries")? {
             let key = TuneKey {
                 neurons: e.req_usize("neurons")?,
@@ -251,10 +356,10 @@ mod tests {
 
     fn quick_tuner() -> Autotuner {
         Autotuner {
-            table: BTreeMap::new(),
             budget_secs: 0.25,
             reps: 1,
             thread_candidates: vec![1],
+            ..Autotuner::default()
         }
     }
 
@@ -325,6 +430,57 @@ mod tests {
     #[test]
     fn bad_schema_rejected() {
         let doc = Json::parse(r#"{"schema":"other","entries":[]}"#).unwrap();
+        let mut tuner = quick_tuner();
+        assert!(tuner.load_table(&doc).is_err());
+    }
+
+    #[test]
+    fn fresh_tables_carry_the_current_host_and_are_not_stale() {
+        let tuner = quick_tuner();
+        assert_eq!(tuner.tuned_host, Some(HostFingerprint::current()));
+        assert_eq!(tuner.staleness(), None);
+        // The fingerprint survives a serialize/load round trip.
+        let mut other = quick_tuner();
+        other.load_table(&tuner.to_json()).unwrap();
+        assert_eq!(other.tuned_host, tuner.tuned_host);
+        assert_eq!(other.staleness(), None);
+    }
+
+    #[test]
+    fn foreign_host_tables_are_stale() {
+        let mut tuner = quick_tuner();
+        tuner.tuned_host = Some(HostFingerprint {
+            hostname: "some-other-box".into(),
+            cpus: 1234,
+            pool: 1234,
+        });
+        let why = tuner.staleness().expect("foreign table must be stale");
+        assert!(why.contains("some-other-box"), "staleness should name the host: {why}");
+        // And the foreign fingerprint survives persistence.
+        let mut loaded = quick_tuner();
+        loaded.load_table(&tuner.to_json()).unwrap();
+        assert!(loaded.staleness().is_some());
+    }
+
+    #[test]
+    fn fingerprintless_tables_are_stale() {
+        // Pre-fingerprint spdnn-tune-v1 files have no "host" key.
+        let doc = Json::parse(
+            r#"{"schema":"spdnn-tune-v1","entries":[{"neurons":64,"k":4,"layers":2,
+                "engine":"ell","minibatch":12,"slice":0,"threads":1,"edges_per_sec":1.0}]}"#,
+        )
+        .unwrap();
+        let mut tuner = quick_tuner();
+        tuner.load_table(&doc).unwrap();
+        assert_eq!(tuner.len(), 1, "entries still load");
+        assert!(tuner.staleness().is_some(), "but the table is flagged stale");
+    }
+
+    #[test]
+    fn malformed_host_rejected() {
+        let doc =
+            Json::parse(r#"{"schema":"spdnn-tune-v1","entries":[],"host":{"hostname":"x"}}"#)
+                .unwrap();
         let mut tuner = quick_tuner();
         assert!(tuner.load_table(&doc).is_err());
     }

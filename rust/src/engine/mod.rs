@@ -14,7 +14,7 @@ pub mod csr_engine;
 pub mod ell_engine;
 pub mod sliced_engine;
 
-pub use autotune::{Autotuner, TuneKey, TunedConfig};
+pub use autotune::{Autotuner, HostFingerprint, TuneKey, TunedConfig};
 pub use csr_engine::{relu_clip, CsrEngine};
 pub use ell_engine::{EllEngine, MAX_MB};
 pub use sliced_engine::SlicedEllEngine;

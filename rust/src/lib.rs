@@ -19,6 +19,11 @@
 //! Listing 2) behind a per-network autotuner (`engine::autotune`) —
 //! select with `--backend csr|ell|sliced|auto`.
 //!
+//! Beyond one process, `cluster` scales the same schedule across OS
+//! processes (paper §IV.C): rank 0 statically partitions the feature
+//! panel, worker ranks hold full weight replicas and run all layers
+//! locally, and the gather is bit-identical to single-process output.
+//!
 //! See DESIGN.md for the system inventory and the paper→repo mapping, and
 //! EXPERIMENTS.md for reproduced results.
 
@@ -30,6 +35,7 @@
 #![allow(clippy::too_many_arguments)]
 
 pub mod bench;
+pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod engine;

@@ -6,9 +6,13 @@
 //!   serve      network-facing serving: sharded replicas + admission
 //!              control behind a TCP JSON-lines protocol
 //!   serve-demo run the dynamic-batching server over a synthetic workload
+//!   cluster-run    multi-process inference: spawn N worker ranks,
+//!                  scatter the feature panel, gather + validate
+//!   cluster-worker one worker rank (normally started by cluster-run)
 //!   simulate    at-scale Summit simulation (Table I columns)
 //!   info        show the artifact manifest and resolved configuration
 //!   check-bench validate a BENCH_*.json against the unified schema
+//!   bench-trend diff TeraEdges/s between two BENCH_*.json artifacts
 //!
 //! Common flags: --neurons --layers --k --batch --workers --topology
 //!               --backend native|csr|ell|sliced|auto|pjrt --artifacts DIR
@@ -19,9 +23,12 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use spdnn::bench::validate_report;
+use spdnn::bench::{diff_reports, validate_report, DEFAULT_THRESHOLD_PCT};
+use spdnn::cluster::{serve_rank, LocalCluster, ModelSpec};
 use spdnn::coordinator::batcher::{BatchPolicy, InferenceServer, ServeBackend, ServedModel};
-use spdnn::coordinator::{run_inference, validate, Backend, EngineSelect, RunOptions};
+use spdnn::coordinator::{
+    resolve_native_spec, run_inference, validate, Backend, EngineSelect, RunOptions,
+};
 use spdnn::data::Dataset;
 use spdnn::engine::EngineKind;
 use spdnn::runtime::Manifest;
@@ -56,9 +63,12 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("infer") => cmd_infer(args),
         Some("serve") => cmd_serve(args),
         Some("serve-demo") => cmd_serve_demo(args),
+        Some("cluster-run") => cmd_cluster_run(args),
+        Some("cluster-worker") => cmd_cluster_worker(args),
         Some("simulate") => cmd_simulate(args),
         Some("info") => cmd_info(args),
         Some("check-bench") => cmd_check_bench(args),
+        Some("bench-trend") => cmd_bench_trend(args),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -70,16 +80,20 @@ fn dispatch(args: &Args) -> Result<()> {
 fn print_help() {
     println!(
         "spdnn — at-scale sparse DNN inference (HPEC 2020 reproduction)\n\n\
-         USAGE: spdnn <gen-data|infer|serve|serve-demo|simulate|info|check-bench> [flags]\n\n\
+         USAGE: spdnn <gen-data|infer|serve|serve-demo|cluster-run|cluster-worker|\n\
+                       simulate|info|check-bench|bench-trend> [flags]\n\n\
          Model:   --neurons N --layers L --k K --topology butterfly|random --seed S\n\
          Runtime: --batch B --workers W --minibatch MB --no-prune\n\
          Backend: --backend native|csr|ell|sliced|auto|pjrt --artifacts DIR --threads T\n\
                   --slice S --tune-cache FILE\n\
          Serve:   --host H --port P --replicas R --max-batch B --max-wait-ms MS\n\
                   --queue-cap N --deadline-ms MS\n\
+         Cluster: cluster-run --ranks N  (spawns N cluster-worker processes)\n\
+                  cluster-worker --listen H:P  (one rank; announces its address)\n\
          IO:      --config FILE --data DIR --stream\n\
          Sim:     --gpus LIST --gpu v100|a100\n\
-         Bench:   check-bench --file BENCH_x.json   (validate spdnn-bench-v1 schema)"
+         Bench:   check-bench --file BENCH_x.json   (validate spdnn-bench-v1 schema)\n\
+                  bench-trend OLD.json NEW.json [--threshold PCT]  (regression gate)"
     );
 }
 
@@ -143,20 +157,16 @@ fn duration_ms_arg(args: &Args, key: &str, default_ms: f64) -> Result<std::time:
     Ok(std::time::Duration::from_secs_f64(ms / 1e3))
 }
 
-/// Shared `--backend native|pjrt` parsing for the serving subcommands.
+/// Shared `--backend` parsing for the serving subcommands. Serving rides
+/// the same engine-v2 surface as `infer` (one backend-string match, in
+/// `run_options`): a fixed kernel (native|csr|ell|sliced) or the
+/// autotuner's pick (`auto`, optionally persisted with --tune-cache),
+/// resolved to a concrete NativeSpec here.
 fn serve_backend(args: &Args, cfg: &RuntimeConfig) -> Result<ServeBackend> {
-    match args.get_or("backend", "native") {
-        "native" => Ok(ServeBackend::Native {
-            threads: args.usize_or("threads", 1)?,
-            minibatch: cfg.minibatch,
-        }),
-        "pjrt" => Ok(ServeBackend::Pjrt {
-            artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")),
-        }),
-        other => bail!(
-            "unknown serve backend {other:?} (serve accepts native|pjrt; \
-             csr|ell|sliced|auto are infer-only for now)"
-        ),
+    let opts = run_options(args)?;
+    match &opts.backend {
+        Backend::Pjrt { artifacts } => Ok(ServeBackend::Pjrt { artifacts: artifacts.clone() }),
+        Backend::Native => Ok(ServeBackend::Native { spec: resolve_native_spec(cfg, &opts) }),
     }
 }
 
@@ -313,6 +323,156 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     println!("  active       {active}/{requests}");
     server.shutdown();
     Ok(())
+}
+
+/// One worker rank of the cluster. Normally spawned by `cluster-run`
+/// (or the `Launcher`); can be started by hand for multi-host setups.
+fn cmd_cluster_worker(args: &Args) -> Result<()> {
+    let listen = args.get_or("listen", "127.0.0.1:0").to_string();
+    args.finish()?;
+    let listener = std::net::TcpListener::bind(listen.as_str())
+        .with_context(|| format!("binding {listen}"))?;
+    serve_rank(listener)
+}
+
+/// Rank 0: spawn N local worker ranks, replicate the model, scatter the
+/// challenge feature panel, gather, and validate against ground truth.
+fn cmd_cluster_run(args: &Args) -> Result<()> {
+    let cfg = runtime_config(args)?;
+    let opts = run_options(args)?;
+    let ranks = args.usize_or("ranks", 2)?;
+    args.finish()?;
+    if matches!(opts.backend, Backend::Pjrt { .. }) {
+        bail!("cluster-run drives the native engines (--backend native|csr|ell|sliced|auto)");
+    }
+    let spec = resolve_native_spec(&cfg, &opts);
+
+    println!(
+        "cluster: {ranks} worker ranks, model {}x{} k={} batch={} \
+         engine={} mb={} slice={} threads={} prune={}",
+        cfg.neurons,
+        cfg.layers,
+        cfg.k,
+        cfg.batch,
+        spec.engine,
+        spec.minibatch,
+        spec.slice,
+        spec.threads,
+        cfg.prune
+    );
+    let ds = Dataset::generate(&cfg)?;
+    let model = ModelSpec::from_config(&cfg);
+    let program = std::env::current_exe().context("resolving the spdnn binary path")?;
+    let mut cluster = LocalCluster::start(&program, ranks, &model, spec, cfg.prune)?;
+    let report = cluster.run(&ds.features)?;
+
+    if report.categories != ds.truth_categories {
+        bail!(
+            "cluster categories diverge from single-process ground truth: \
+             got {} active features, expected {}",
+            report.categories.len(),
+            ds.truth_categories.len()
+        );
+    }
+
+    let mut table = Table::new(
+        "Per-rank shards (replicated weights, partitioned features)",
+        &["rank", "assigned", "categories", "busy", "edges"],
+    );
+    for (p, s) in report.parts.iter().zip(&report.shards) {
+        table.row(vec![
+            s.rank.to_string(),
+            p.count.to_string(),
+            s.categories.len().to_string(),
+            fmt_secs(s.busy_secs()),
+            s.edges_traversed.to_string(),
+        ]);
+    }
+    table.print();
+
+    let layer_imb = &report.per_layer_imbalance;
+    let worst = layer_imb
+        .iter()
+        .enumerate()
+        .fold((0usize, 1.0f64), |acc, (i, &v)| if v > acc.1 { (i, v) } else { acc });
+    println!("  wall time        {}", fmt_secs(report.wall_secs));
+    println!("  throughput       {}", fmt_teps(report.edges_per_sec));
+    println!("  edges (input)    {}", report.input_edges);
+    println!("  pruning saved    {:.1}%", report.pruning_savings() * 100.0);
+    println!("  busy imbalance   {:.3}", report.imbalance);
+    println!(
+        "  layer imbalance  mean {:.3}, worst {:.3} at layer {} (pruning skew, paper §IV.C)",
+        layer_imb.iter().sum::<f64>() / layer_imb.len().max(1) as f64,
+        worst.1,
+        worst.0
+    );
+    println!("  categories       {} / {} features", report.categories.len(), cfg.batch);
+    cluster.stop().context("cluster shutdown")?;
+    println!("  VALID (bit-identical to single-process ground truth; clean shutdown)");
+    Ok(())
+}
+
+/// Diff TeraEdges/s between two spdnn-bench-v1 artifacts and gate on
+/// regressions (`--threshold` percent, default 20).
+fn cmd_bench_trend(args: &Args) -> Result<()> {
+    let threshold = args.f64_or("threshold", DEFAULT_THRESHOLD_PCT)?;
+    args.finish()?;
+    if !threshold.is_finite() || threshold < 0.0 {
+        bail!("--threshold must be a non-negative percentage, got {threshold}");
+    }
+    if args.positional.len() != 2 {
+        bail!("usage: spdnn bench-trend <old.json> <new.json> [--threshold PCT]");
+    }
+    let old = read_bench_json(&args.positional[0])?;
+    let new = read_bench_json(&args.positional[1])?;
+    let trend = diff_reports(&old, &new)?;
+    if trend.old_bench != trend.new_bench {
+        println!(
+            "note: comparing different benches ({} vs {})",
+            trend.old_bench, trend.new_bench
+        );
+    }
+
+    let mut table = Table::new(
+        &format!("Bench trend ({} -> {}), TeraEdges/s", trend.old_bench, trend.new_bench),
+        &["case", "old", "new", "delta"],
+    );
+    for c in &trend.cases {
+        table.row(vec![
+            c.name.clone(),
+            format!("{:.4}", c.old_teps),
+            format!("{:.4}", c.new_teps),
+            format!("{:+.1}%", c.delta_pct),
+        ]);
+    }
+    table.print();
+    if !trend.added.is_empty() {
+        println!("  new cases (not gated): {}", trend.added.join(", "));
+    }
+    if !trend.removed.is_empty() {
+        println!("  removed cases (not gated): {}", trend.removed.join(", "));
+    }
+
+    let regressions = trend.regressions(threshold);
+    if !regressions.is_empty() {
+        let names: Vec<String> = regressions
+            .iter()
+            .map(|c| format!("{} ({:+.1}%)", c.name, c.delta_pct))
+            .collect();
+        bail!(
+            "{} case(s) regressed more than {threshold}%: {}",
+            regressions.len(),
+            names.join(", ")
+        );
+    }
+    println!("  no regressions past {threshold}% across {} cases", trend.cases.len());
+    Ok(())
+}
+
+fn read_bench_json(path: &str) -> Result<Json> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading bench report {path}"))?;
+    Json::parse(&text).with_context(|| format!("parsing bench report {path}"))
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {

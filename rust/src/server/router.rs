@@ -125,7 +125,7 @@ mod tests {
     }
 
     fn native() -> ServeBackend {
-        ServeBackend::Native { threads: 1, minibatch: 12 }
+        ServeBackend::native(1, 12)
     }
 
     #[test]

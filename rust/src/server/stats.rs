@@ -178,7 +178,7 @@ mod tests {
         let model = ServedModel::from_dataset(&ds);
         let router = ReplicaRouter::start(
             model,
-            ServeBackend::Native { threads: 1, minibatch: 12 },
+            ServeBackend::native(1, 12),
             BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
             2,
         )

@@ -1,0 +1,153 @@
+//! End-to-end cluster tests: real worker-rank OS processes (the built
+//! `spdnn` binary via CARGO_BIN_EXE) behind the rank-0 coordinator.
+//!
+//! Covers the acceptance bar of the cluster subsystem: bit-identity
+//! with single-process inference through the baseline CSR engine,
+//! exact cover of the scattered feature ranges, and clean drain when a
+//! worker process is killed mid-flight.
+
+use std::path::PathBuf;
+
+use spdnn::cluster::{LocalCluster, ModelSpec};
+use spdnn::coordinator::NativeSpec;
+use spdnn::data::Dataset;
+use spdnn::engine::{CsrEngine, EngineKind};
+use spdnn::formats::convert::ell_to_csr;
+use spdnn::util::config::RuntimeConfig;
+
+fn program() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_spdnn"))
+}
+
+fn small_cfg() -> RuntimeConfig {
+    RuntimeConfig { neurons: 64, layers: 6, k: 4, batch: 24, ..Default::default() }
+}
+
+fn spec(engine: EngineKind) -> NativeSpec {
+    NativeSpec { engine, minibatch: 12, slice: 16, threads: 1 }
+}
+
+/// Single-process reference through the baseline CSR engine: surviving
+/// categories plus their compacted final activations.
+fn csr_reference(ds: &Dataset) -> (Vec<usize>, Vec<f32>) {
+    let n = ds.cfg.neurons;
+    let mut y = ds.features.clone();
+    let mut scratch = vec![0f32; y.len()];
+    for w in &ds.layers {
+        let csr = ell_to_csr(w).unwrap();
+        CsrEngine.layer(&csr, &ds.bias, &y, &mut scratch);
+        std::mem::swap(&mut y, &mut scratch);
+    }
+    let mut categories = Vec::new();
+    let mut activations = Vec::new();
+    for i in 0..ds.cfg.batch {
+        let row = &y[i * n..(i + 1) * n];
+        if row.iter().any(|&v| v > 0.0) {
+            categories.push(i);
+            activations.extend_from_slice(row);
+        }
+    }
+    (categories, activations)
+}
+
+#[test]
+fn two_rank_cluster_is_bit_identical_to_single_process_csr() {
+    let cfg = small_cfg();
+    let ds = Dataset::generate(&cfg).unwrap();
+    let (want_cats, want_acts) = csr_reference(&ds);
+    assert_eq!(want_cats, ds.truth_categories, "reference sanity");
+
+    let model = ModelSpec::from_config(&cfg);
+    let mut cluster =
+        LocalCluster::start(&program(), 2, &model, spec(EngineKind::Ell), cfg.prune).unwrap();
+    assert_eq!(cluster.ranks(), 2);
+    let report = cluster.run(&ds.features).unwrap();
+    cluster.stop().expect("clean shutdown");
+
+    assert_eq!(report.categories, want_cats);
+    assert_eq!(report.activations.len(), want_acts.len());
+    for (i, (a, b)) in report.activations.iter().zip(&want_acts).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "activation {i}: {a} != {b}");
+    }
+    assert_eq!(report.per_layer_imbalance.len(), cfg.layers);
+    assert!(report.edges_per_sec > 0.0);
+}
+
+#[test]
+fn scatter_exactly_covers_the_feature_panel() {
+    let cfg = RuntimeConfig { neurons: 64, layers: 4, k: 4, batch: 23, ..Default::default() };
+    let ds = Dataset::generate(&cfg).unwrap();
+    let model = ModelSpec::from_config(&cfg);
+    let mut cluster =
+        LocalCluster::start(&program(), 3, &model, spec(EngineKind::Sliced), cfg.prune).unwrap();
+    let report = cluster.run(&ds.features).unwrap();
+    cluster.stop().expect("clean shutdown");
+
+    // Exact cover: contiguous, disjoint, ordered, summing to the batch.
+    assert_eq!(report.parts.len(), 3);
+    let mut pos = 0usize;
+    for (rank, (p, s)) in report.parts.iter().zip(&report.shards).enumerate() {
+        assert_eq!(p.worker, rank);
+        assert_eq!(p.start, pos, "partition {rank} not contiguous");
+        assert_eq!(s.start, p.start, "shard {rank} echoes its range");
+        assert_eq!(s.count, p.count);
+        // Every category a rank reports lives inside its own range.
+        assert!(s.categories.iter().all(|&c| c >= p.start && c < p.start + p.count));
+        pos += p.count;
+    }
+    assert_eq!(pos, cfg.batch, "partitions must cover the whole panel");
+    // 23 over 3 ranks: 8 + 8 + 7.
+    let counts: Vec<usize> = report.parts.iter().map(|p| p.count).collect();
+    assert_eq!(counts, vec![8, 8, 7]);
+    assert_eq!(report.categories, ds.truth_categories);
+}
+
+#[test]
+fn more_ranks_than_features_still_matches() {
+    let cfg = RuntimeConfig { neurons: 64, layers: 3, k: 4, batch: 2, ..Default::default() };
+    let ds = Dataset::generate(&cfg).unwrap();
+    let model = ModelSpec::from_config(&cfg);
+    // Rank 2 receives an empty shard and must still answer correctly.
+    let mut cluster =
+        LocalCluster::start(&program(), 3, &model, spec(EngineKind::Ell), cfg.prune).unwrap();
+    let report = cluster.run(&ds.features).unwrap();
+    cluster.stop().expect("clean shutdown");
+    assert_eq!(report.categories, ds.truth_categories);
+    assert_eq!(report.parts[2].count, 0);
+    assert!(report.shards[2].categories.is_empty());
+}
+
+#[test]
+fn killed_worker_propagates_and_the_rest_drain_cleanly() {
+    let cfg = small_cfg();
+    let ds = Dataset::generate(&cfg).unwrap();
+    let model = ModelSpec::from_config(&cfg);
+    let mut cluster =
+        LocalCluster::start(&program(), 2, &model, spec(EngineKind::Ell), cfg.prune).unwrap();
+    // A healthy pass first, so the failure below is attributable.
+    let report = cluster.run(&ds.features).unwrap();
+    assert_eq!(report.categories, ds.truth_categories);
+
+    cluster.kill_rank(0).unwrap();
+    let err = cluster.run(&ds.features).unwrap_err().to_string();
+    assert!(
+        err.contains("rank 0") || err.contains("connection"),
+        "error should surface the dead rank, got: {err}"
+    );
+    // The surviving rank still drains cleanly on shutdown.
+    cluster.stop().expect("surviving ranks must drain cleanly");
+}
+
+#[test]
+fn repeated_passes_reuse_the_loaded_replica() {
+    let cfg = small_cfg();
+    let ds = Dataset::generate(&cfg).unwrap();
+    let model = ModelSpec::from_config(&cfg);
+    let mut cluster =
+        LocalCluster::start(&program(), 2, &model, spec(EngineKind::Sliced), cfg.prune).unwrap();
+    for pass in 0..3 {
+        let report = cluster.run(&ds.features).unwrap();
+        assert_eq!(report.categories, ds.truth_categories, "pass {pass}");
+    }
+    cluster.stop().expect("clean shutdown");
+}

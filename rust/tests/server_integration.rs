@@ -23,7 +23,7 @@ fn model() -> (ServedModel, Dataset) {
 }
 
 fn native() -> ServeBackend {
-    ServeBackend::Native { threads: 1, minibatch: 12 }
+    ServeBackend::native(1, 12)
 }
 
 fn start(cfg: ServerConfig) -> (ServerHandle, Dataset) {

@@ -71,7 +71,7 @@ fn server_survives_many_concurrent_clients() {
     let (m, ds) = model();
     let server = Arc::new(InferenceServer::start(
         m,
-        ServeBackend::Native { threads: 1, minibatch: 12 },
+        ServeBackend::native(1, 12),
         BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(1) },
     ));
     let ds = Arc::new(ds);
