@@ -2,7 +2,10 @@
 //! rank a separate OS process holding a full weight replica and a
 //! static feature partition — the shape of the paper's Table 1 scaling
 //! column, measured instead of simulated. Emits `BENCH_cluster.json`
-//! in the unified spdnn-bench-v1 schema (one case per rank count).
+//! in the unified spdnn-bench-v1 schema (one case per rank count), plus
+//! a wire-format / chunk-size ablation: the same model and panel
+//! scattered as JSON numbers vs `spdnn-clu1` binary frames vs pipelined
+//! binary chunks, with measured scatter/gather bytes per pass.
 //!
 //! Usage: cargo bench --bench table1_cluster
 //! Scale with SPDNN_BENCH_ITERS / SPDNN_BENCH_MAX_SECS; override the
@@ -11,7 +14,7 @@
 use std::path::PathBuf;
 
 use spdnn::bench::{bench, BenchCase, BenchConfig, BenchReport};
-use spdnn::cluster::{LocalCluster, ModelSpec};
+use spdnn::cluster::{ClusterOptions, LocalCluster, ModelSpec, WireFormat};
 use spdnn::coordinator::NativeSpec;
 use spdnn::data::Dataset;
 use spdnn::engine::EngineKind;
@@ -102,10 +105,76 @@ fn main() -> anyhow::Result<()> {
         report.case(
             BenchCase::from_measurement(&m)
                 .with_extra("ranks", Json::Int(ranks as i64))
+                .with_extra("wire", Json::Str("bin".to_string()))
+                .with_extra("chunk", Json::Int(0))
                 .with_extra("imbalance", Json::Num(warm_imbalance)),
         );
     }
     table.print();
+
+    // Wire-format / chunk-size ablation at a fixed 2 ranks: the same
+    // model and panel through JSON numbers, whole binary frames, and
+    // pipelined binary chunks (§III.B overlap applied to the scatter).
+    // scatter_bytes per pass is the acceptance quantity: binary must
+    // cut it by >=3x vs JSON on this smoke topology.
+    let ablations: &[(&str, ClusterOptions)] = &[
+        ("wire=json", ClusterOptions { wire: WireFormat::Json, chunk_rows: None }),
+        ("wire=bin", ClusterOptions { wire: WireFormat::Bin, chunk_rows: None }),
+        ("wire=bin,chunk=16", ClusterOptions { wire: WireFormat::Bin, chunk_rows: Some(16) }),
+        ("wire=bin,chunk=64", ClusterOptions { wire: WireFormat::Bin, chunk_rows: Some(64) }),
+    ];
+    let mut wire_table = Table::new(
+        "Wire/chunk ablation (2 ranks): transport vs throughput",
+        &["case", "p50", "Throughput", "scatter KiB/pass", "gather KiB/pass"],
+    );
+    let mut json_scatter = 0u64;
+    let mut bin_scatter = 0u64;
+    for (name, opts) in ablations {
+        let mut cluster = LocalCluster::start_with(&program, 2, &model, spec, cfg.prune, *opts)?;
+        let first = cluster.run(&ds.features)?;
+        anyhow::ensure!(
+            first.categories == ds.truth_categories,
+            "{name}: cluster categories diverge from ground truth"
+        );
+        let mut scatter = first.scatter_bytes;
+        let mut gather = first.gather_bytes;
+        let m = bench(&bcfg, name, edges, || {
+            let r = cluster.run(&ds.features).expect("cluster inference pass");
+            scatter = r.scatter_bytes;
+            gather = r.gather_bytes;
+        });
+        cluster.stop()?;
+
+        if opts.chunk_rows.is_none() {
+            match opts.wire {
+                WireFormat::Json => json_scatter = scatter,
+                WireFormat::Bin => bin_scatter = scatter,
+            }
+        }
+        wire_table.row(vec![
+            name.to_string(),
+            format!("{:.2}ms", m.secs.p50 * 1e3),
+            fmt_teps(m.throughput()),
+            format!("{:.1}", scatter as f64 / 1024.0),
+            format!("{:.1}", gather as f64 / 1024.0),
+        ]);
+        report.case(
+            BenchCase::from_measurement(&m)
+                .with_extra("ranks", Json::Int(2))
+                .with_extra("wire", Json::Str(opts.wire.as_str().to_string()))
+                .with_extra("chunk", Json::Int(opts.chunk_rows.unwrap_or(0) as i64))
+                .with_extra("scatter_bytes", Json::Int(scatter as i64))
+                .with_extra("gather_bytes", Json::Int(gather as i64)),
+        );
+    }
+    wire_table.print();
+    if bin_scatter > 0 {
+        println!(
+            "binary transport: {:.1}x fewer scatter bytes than JSON per pass \
+             ({json_scatter} -> {bin_scatter})",
+            json_scatter as f64 / bin_scatter as f64
+        );
+    }
 
     let path = report.write()?;
     println!("wrote {} ({} cases)", path.display(), report.cases.len());

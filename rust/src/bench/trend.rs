@@ -7,7 +7,10 @@
 //! previous one with `spdnn bench-trend old.json new.json`. Cases are
 //! matched by name; added/removed cases are reported but never fail the
 //! gate (benches legitimately grow), only a matched case whose
-//! throughput dropped more than the threshold does.
+//! throughput dropped more than the threshold does. A matched case
+//! whose *old* throughput is zero is classified as zero-baseline and
+//! surfaced separately — a broken baseline artifact must never read as
+//! "no change".
 
 use anyhow::{bail, Context, Result};
 
@@ -25,13 +28,21 @@ pub struct TrendCase {
     pub name: String,
     pub old_teps: f64,
     pub new_teps: f64,
-    /// Relative change in percent (negative = slower).
-    pub delta_pct: f64,
+    /// Relative change in percent (negative = slower). `None` when the
+    /// old throughput is zero: such a case has no usable baseline — a
+    /// broken old artifact must read as "not comparable", never as
+    /// "no change", or it would mask real regressions.
+    pub delta_pct: Option<f64>,
 }
 
 impl TrendCase {
     pub fn is_regression(&self, threshold_pct: f64) -> bool {
-        self.delta_pct < -threshold_pct
+        matches!(self.delta_pct, Some(d) if d < -threshold_pct)
+    }
+
+    /// Matched by name but the old artifact reports zero throughput.
+    pub fn is_zero_baseline(&self) -> bool {
+        self.delta_pct.is_none()
     }
 }
 
@@ -52,6 +63,16 @@ impl TrendReport {
     /// Matched cases that regressed past `threshold_pct`.
     pub fn regressions(&self, threshold_pct: f64) -> Vec<&TrendCase> {
         self.cases.iter().filter(|c| c.is_regression(threshold_pct)).collect()
+    }
+
+    /// Matched cases with no usable baseline (old throughput was zero).
+    pub fn zero_baseline(&self) -> Vec<&TrendCase> {
+        self.cases.iter().filter(|c| c.is_zero_baseline()).collect()
+    }
+
+    /// Matched cases that actually have a delta to gate on.
+    pub fn comparable(&self) -> usize {
+        self.cases.iter().filter(|c| !c.is_zero_baseline()).count()
     }
 }
 
@@ -78,9 +99,9 @@ pub fn diff_reports(old: &Json, new: &Json) -> Result<TrendReport> {
         match old_cases.iter().find(|(n, _)| n == name) {
             Some((_, old_teps)) => {
                 let delta_pct = if *old_teps > 0.0 {
-                    (new_teps - old_teps) / old_teps * 100.0
+                    Some((new_teps - old_teps) / old_teps * 100.0)
                 } else {
-                    0.0
+                    None
                 };
                 cases.push(TrendCase {
                     name: name.clone(),
@@ -142,9 +163,12 @@ mod tests {
         assert_eq!(trend.removed, vec!["gone".to_string()]);
         let csr = &trend.cases[0];
         assert_eq!(csr.name, "csr");
-        assert!((csr.delta_pct - 10.0).abs() < 1e-9, "delta {}", csr.delta_pct);
+        let delta = csr.delta_pct.expect("positive baseline");
+        assert!((delta - 10.0).abs() < 1e-9, "delta {delta}");
         let ell = &trend.cases[1];
-        assert!((ell.delta_pct + 50.0).abs() < 1e-9);
+        assert!((ell.delta_pct.unwrap() + 50.0).abs() < 1e-9);
+        assert_eq!(trend.comparable(), 2);
+        assert!(trend.zero_baseline().is_empty());
     }
 
     #[test]
@@ -162,7 +186,7 @@ mod tests {
             name: "up".into(),
             old_teps: 1.0,
             new_teps: 9.0,
-            delta_pct: 800.0
+            delta_pct: Some(800.0)
         }
         .is_regression(0.0));
     }
@@ -183,10 +207,17 @@ mod tests {
     }
 
     #[test]
-    fn zero_old_throughput_does_not_divide_by_zero() {
-        let old = report("x", &[("a", 0.0)]);
-        let new = report("x", &[("a", 1.0)]);
+    fn zero_old_throughput_is_flagged_not_treated_as_no_change() {
+        let old = report("x", &[("a", 0.0), ("b", 2.0)]);
+        let new = report("x", &[("a", 1.0), ("b", 2.0)]);
         let trend = diff_reports(&old, &new).unwrap();
-        assert_eq!(trend.cases[0].delta_pct, 0.0);
+        let a = &trend.cases[0];
+        assert_eq!(a.name, "a");
+        assert_eq!(a.delta_pct, None, "zero baseline must not read as 0% change");
+        assert!(a.is_zero_baseline());
+        assert!(!a.is_regression(0.0), "uncomparable cases never gate");
+        assert_eq!(trend.comparable(), 1);
+        let zero: Vec<&str> = trend.zero_baseline().iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(zero, vec!["a"]);
     }
 }

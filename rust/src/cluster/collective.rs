@@ -9,10 +9,19 @@
 //! already ascending — bit-identical to a single-process pass over the
 //! unpartitioned panel.
 //!
+//! Transport is governed by [`ClusterOptions`]: the negotiated
+//! [`WireFormat`] (packed `spdnn-clu1` frames by default, JSON numbers
+//! for protocol archaeology) and an optional pipelined scatter that
+//! splits each shard into `chunk_rows`-row sub-panels, letting workers
+//! start layer 0 on the first chunk while later chunks are still in
+//! flight — the §III.B transfer/compute overlap, applied to the
+//! scatter. The scatter path writes every panel straight from the input
+//! slice: zero per-request panel copies on rank 0.
+//!
 //! The gather also folds every rank's per-layer live-feature trajectory
-//! into a per-layer `imbalance()` series: the paper observes that
-//! pruning skews per-rank work as ranks multiply, and this report is
-//! where that skew becomes visible.
+//! into a per-layer `imbalance()` series, and counts the bytes moved in
+//! each direction (`scatter_bytes`/`gather_bytes` — the quantity the
+//! wire-format ablation in `benches/table1_cluster.rs` reports).
 
 use std::net::SocketAddr;
 use std::path::Path;
@@ -25,50 +34,70 @@ use crate::coordinator::NativeSpec;
 
 use super::launcher::{Launcher, LauncherConfig};
 use super::transport::{
-    ClusterClient, ClusterReply, ClusterRequest, ModelSpec, ShardResult, CLUSTER_PROTOCOL_VERSION,
+    ClusterClient, ClusterReply, ClusterRequest, ModelSpec, ShardResult, WireFormat,
 };
 
 /// Longest a clean shutdown waits for worker processes to exit.
 const SHUTDOWN_LIMIT: Duration = Duration::from_secs(10);
 
+/// Transport options of one cluster session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClusterOptions {
+    /// Encoding of the data verbs, negotiated per connection.
+    pub wire: WireFormat,
+    /// Pipelined scatter granularity: split every shard into sub-panels
+    /// of this many feature rows so workers overlap compute with the
+    /// remaining transfer. `None` scatters whole shards.
+    pub chunk_rows: Option<usize>,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        ClusterOptions { wire: WireFormat::Bin, chunk_rows: None }
+    }
+}
+
 /// Rank 0's connection set: one blocking client per worker rank.
 pub struct ClusterCoordinator {
     clients: Vec<ClusterClient>,
     model: Option<ModelSpec>,
+    opts: ClusterOptions,
 }
 
 impl ClusterCoordinator {
-    /// Connect to every worker rank (rank order = `addrs` order) and
-    /// handshake: each rank must speak the same cluster protocol
-    /// version, so skewed binaries (manually started workers on other
-    /// hosts) fail with a clear diagnostic instead of a parse error
-    /// deep inside load/shard.
+    /// Connect with the default transport (binary wire, whole shards).
     pub fn connect(addrs: &[SocketAddr]) -> Result<ClusterCoordinator> {
+        ClusterCoordinator::connect_with(addrs, ClusterOptions::default())
+    }
+
+    /// Connect to every worker rank (rank order = `addrs` order) and
+    /// negotiate transport: each rank must speak the same cluster
+    /// protocol version and accept the proposed wire, so skewed
+    /// binaries (manually started workers on other hosts) fail with a
+    /// clear diagnostic instead of a parse error deep inside
+    /// load/shard.
+    pub fn connect_with(addrs: &[SocketAddr], opts: ClusterOptions) -> Result<ClusterCoordinator> {
         if addrs.is_empty() {
             bail!("cluster needs at least one worker rank");
         }
+        if opts.chunk_rows == Some(0) {
+            bail!("scatter chunking needs at least one feature row per chunk");
+        }
         let mut clients = Vec::with_capacity(addrs.len());
         for (rank, addr) in addrs.iter().enumerate() {
-            let mut client = ClusterClient::connect(*addr)
+            let client = ClusterClient::connect(*addr, opts.wire)
                 .with_context(|| format!("connecting worker rank {rank}"))?;
-            let reply = client
-                .call(&ClusterRequest::Ping)
-                .with_context(|| format!("handshake with rank {rank}"))?;
-            match reply {
-                ClusterReply::Pong { version } if version == CLUSTER_PROTOCOL_VERSION => {}
-                ClusterReply::Pong { version } => bail!(
-                    "rank {rank} speaks cluster protocol v{version}, this coordinator \
-                     speaks v{CLUSTER_PROTOCOL_VERSION} (mixed spdnn binaries?)"
-                ),
-                other => bail!("rank {rank}: unexpected handshake reply {other:?}"),
-            }
             clients.push(client);
         }
-        Ok(ClusterCoordinator { clients, model: None })
+        Ok(ClusterCoordinator { clients, model: None, opts })
     }
 
     pub fn ranks(&self) -> usize {
         self.clients.len()
+    }
+
+    pub fn options(&self) -> ClusterOptions {
+        self.opts
     }
 
     /// Replicate the model on every rank (each rebuilds the full weight
@@ -87,6 +116,8 @@ impl ClusterCoordinator {
                             model.layers
                         );
                     }
+                    // Data frames may now be model-sized: widen the cap.
+                    client.set_model(model.neurons);
                 }
                 ClusterReply::Error { message } => bail!("rank {rank} load failed: {message}"),
                 other => bail!("rank {rank}: unexpected reply to load: {other:?}"),
@@ -97,8 +128,9 @@ impl ClusterCoordinator {
     }
 
     /// One full inference pass: scatter `features` (row-major
-    /// `[batch, neurons]`) across the ranks, run all layers on every
-    /// rank concurrently, gather and reassemble.
+    /// `[batch, neurons]`) across the ranks — whole shards or pipelined
+    /// chunks, written straight from this slice — run all layers on
+    /// every rank concurrently, gather and reassemble.
     pub fn run(&mut self, features: &[f32]) -> Result<ClusterReport> {
         let model =
             self.model.clone().ok_or_else(|| anyhow!("load a model before running shards"))?;
@@ -108,21 +140,27 @@ impl ClusterCoordinator {
         }
         let batch = features.len() / n;
         let parts = partition_even(batch, self.clients.len());
+        let chunk_rows = self.opts.chunk_rows;
 
         let wall = Instant::now();
-        let mut slots: Vec<Option<Result<ShardResult>>> = Vec::new();
+        type ShardOutcome = Result<(ShardResult, u64, u64)>;
+        let mut slots: Vec<Option<ShardOutcome>> = Vec::new();
         slots.resize_with(parts.len(), || None);
         std::thread::scope(|scope| {
             let mut handles = Vec::new();
             for (client, part) in self.clients.iter_mut().zip(&parts) {
-                let shard = features[part.start * n..(part.start + part.count) * n].to_vec();
+                let shard = &features[part.start * n..(part.start + part.count) * n];
                 let start = part.start;
-                handles.push(scope.spawn(move || {
-                    match client.call(&ClusterRequest::Shard { start, features: shard }) {
-                        Ok(ClusterReply::Result(r)) => Ok(*r),
-                        Ok(ClusterReply::Error { message }) => Err(anyhow!("{message}")),
-                        Ok(other) => Err(anyhow!("unexpected reply to shard: {other:?}")),
-                        Err(e) => Err(e),
+                handles.push(scope.spawn(move || -> ShardOutcome {
+                    let sent0 = client.bytes_sent();
+                    let recv0 = client.bytes_received();
+                    let reply = client.send_shard(start, shard, n, chunk_rows)?;
+                    let sent = client.bytes_sent() - sent0;
+                    let recv = client.bytes_received() - recv0;
+                    match reply {
+                        ClusterReply::Result(r) => Ok((*r, sent, recv)),
+                        ClusterReply::Error { message } => Err(anyhow!("{message}")),
+                        other => Err(anyhow!("unexpected reply to shard: {other:?}")),
                     }
                 }));
             }
@@ -133,12 +171,16 @@ impl ClusterCoordinator {
         let wall_secs = wall.elapsed().as_secs_f64();
 
         let mut shards = Vec::with_capacity(slots.len());
+        let mut scatter_bytes = 0u64;
+        let mut gather_bytes = 0u64;
         for (rank, slot) in slots.into_iter().enumerate() {
-            shards.push(
-                slot.expect("slot filled").with_context(|| format!("shard on rank {rank}"))?,
-            );
+            let (shard, sent, recv) =
+                slot.expect("slot filled").with_context(|| format!("shard on rank {rank}"))?;
+            scatter_bytes += sent;
+            gather_bytes += recv;
+            shards.push(shard);
         }
-        ClusterReport::assemble(&model, parts, shards, wall_secs)
+        ClusterReport::assemble(&model, parts, shards, wall_secs, scatter_bytes, gather_bytes)
     }
 
     /// Send a shutdown op to every rank (errors ignored: a dead rank is
@@ -169,6 +211,10 @@ pub struct ClusterReport {
     /// Input edges / wall seconds (Table 1's quantity).
     pub edges_per_sec: f64,
     pub edges_traversed: u64,
+    /// Request bytes rank 0 wrote during the scatter, summed over ranks.
+    pub scatter_bytes: u64,
+    /// Reply bytes rank 0 read during the gather, summed over ranks.
+    pub gather_bytes: u64,
     /// max/mean of per-rank live features entering each layer — the
     /// pruning-induced skew of §IV.C, per layer.
     pub per_layer_imbalance: Vec<f64>,
@@ -182,6 +228,8 @@ impl ClusterReport {
         parts: Vec<Partition>,
         shards: Vec<ShardResult>,
         wall_secs: f64,
+        scatter_bytes: u64,
+        gather_bytes: u64,
     ) -> Result<ClusterReport> {
         let n = model.neurons;
         // The gather trusts nothing: every shard must echo exactly the
@@ -245,6 +293,8 @@ impl ClusterReport {
             input_edges,
             edges_per_sec: if wall_secs > 0.0 { input_edges as f64 / wall_secs } else { 0.0 },
             edges_traversed,
+            scatter_bytes,
+            gather_bytes,
             per_layer_imbalance,
             imbalance: if mean > 0.0 { max / mean } else { 1.0 },
         })
@@ -268,8 +318,8 @@ pub struct LocalCluster {
 }
 
 impl LocalCluster {
-    /// Spawn `ranks` local worker processes of `program`, connect, and
-    /// replicate the model everywhere.
+    /// Spawn `ranks` local worker processes of `program`, connect with
+    /// the default transport, and replicate the model everywhere.
     pub fn start(
         program: &Path,
         ranks: usize,
@@ -277,8 +327,21 @@ impl LocalCluster {
         spec: NativeSpec,
         prune: bool,
     ) -> Result<LocalCluster> {
+        LocalCluster::start_with(program, ranks, model, spec, prune, ClusterOptions::default())
+    }
+
+    /// `start` with explicit transport options (wire format, pipelined
+    /// scatter chunking).
+    pub fn start_with(
+        program: &Path,
+        ranks: usize,
+        model: &ModelSpec,
+        spec: NativeSpec,
+        prune: bool,
+        opts: ClusterOptions,
+    ) -> Result<LocalCluster> {
         let launcher = Launcher::spawn(&LauncherConfig::local(program.to_path_buf(), ranks))?;
-        let mut coordinator = ClusterCoordinator::connect(&launcher.addrs())?;
+        let mut coordinator = ClusterCoordinator::connect_with(&launcher.addrs(), opts)?;
         coordinator.load(model, spec, prune)?;
         Ok(LocalCluster { launcher, coordinator })
     }
@@ -346,6 +409,14 @@ mod tests {
         }
     }
 
+    fn assemble(
+        parts: Vec<Partition>,
+        shards: Vec<ShardResult>,
+        wall_secs: f64,
+    ) -> Result<ClusterReport> {
+        ClusterReport::assemble(&model(), parts, shards, wall_secs, 0, 0)
+    }
+
     #[test]
     fn assemble_merges_in_rank_order() {
         let parts = partition_even(10, 2);
@@ -353,7 +424,7 @@ mod tests {
             shard(0, 0, 5, vec![1, 4], vec![5, 3]),
             shard(1, 5, 5, vec![5, 9], vec![5, 1]),
         ];
-        let r = ClusterReport::assemble(&model(), parts, shards, 2.0).unwrap();
+        let r = assemble(parts, shards, 2.0).unwrap();
         assert_eq!(r.categories, vec![1, 4, 5, 9]);
         assert_eq!(r.activations.len(), 4 * 4);
         assert_eq!(r.input_edges, 10 * 2 * 2 * 4);
@@ -365,22 +436,31 @@ mod tests {
     }
 
     #[test]
+    fn assemble_carries_the_wire_byte_accounting() {
+        let parts = partition_even(4, 1);
+        let shards = vec![shard(0, 0, 4, vec![0], vec![4, 1])];
+        let r = ClusterReport::assemble(&model(), parts, shards, 1.0, 1234, 567).unwrap();
+        assert_eq!(r.scatter_bytes, 1234);
+        assert_eq!(r.gather_bytes, 567);
+    }
+
+    #[test]
     fn assemble_rejects_wrong_ranges() {
         let parts = partition_even(10, 2);
         let shards = vec![
             shard(0, 0, 5, vec![], vec![5, 5]),
             shard(1, 4, 6, vec![], vec![5, 5]), // overlaps rank 0
         ];
-        assert!(ClusterReport::assemble(&model(), parts, shards, 1.0).is_err());
+        assert!(assemble(parts, shards, 1.0).is_err());
     }
 
     #[test]
     fn assemble_rejects_unsorted_or_duplicate_categories() {
         let parts = partition_even(10, 1);
         let unsorted = shard(0, 0, 10, vec![4, 2], vec![10, 2]);
-        assert!(ClusterReport::assemble(&model(), parts.clone(), vec![unsorted], 1.0).is_err());
+        assert!(assemble(parts.clone(), vec![unsorted], 1.0).is_err());
         let duplicated = shard(0, 0, 10, vec![3, 3], vec![10, 2]);
-        assert!(ClusterReport::assemble(&model(), parts, vec![duplicated], 1.0).is_err());
+        assert!(assemble(parts, vec![duplicated], 1.0).is_err());
     }
 
     #[test]
@@ -390,7 +470,7 @@ mod tests {
             shard(0, 0, 5, vec![7], vec![5, 5]), // 7 belongs to rank 1
             shard(1, 5, 5, vec![], vec![5, 5]),
         ];
-        assert!(ClusterReport::assemble(&model(), parts, shards, 1.0).is_err());
+        assert!(assemble(parts, shards, 1.0).is_err());
     }
 
     #[test]
@@ -398,7 +478,7 @@ mod tests {
         let parts = partition_even(4, 1);
         let mut s = shard(0, 0, 4, vec![0, 1], vec![4, 2]);
         s.activations.pop();
-        assert!(ClusterReport::assemble(&model(), parts, vec![s], 1.0).is_err());
+        assert!(assemble(parts, vec![s], 1.0).is_err());
     }
 
     #[test]
@@ -410,7 +490,7 @@ mod tests {
             shard(1, 1, 0, vec![], vec![0, 0]),
             shard(2, 1, 0, vec![], vec![0, 0]),
         ];
-        let r = ClusterReport::assemble(&model(), parts, shards, 1.0).unwrap();
+        let r = assemble(parts, shards, 1.0).unwrap();
         assert_eq!(r.categories, vec![0]);
         assert_eq!(r.per_layer_imbalance.len(), 2);
     }
@@ -420,13 +500,28 @@ mod tests {
         let parts = partition_even(10, 1);
         let mut s = shard(0, 0, 10, vec![], vec![10, 5]);
         s.edges_traversed = 80; // half of 10*2*2*4 = 160
-        let r = ClusterReport::assemble(&model(), parts, vec![s], 1.0).unwrap();
+        let r = assemble(parts, vec![s], 1.0).unwrap();
         assert!((r.pruning_savings() - 0.5).abs() < 1e-12);
     }
 
     #[test]
     fn connect_needs_ranks() {
         assert!(ClusterCoordinator::connect(&[]).is_err());
+    }
+
+    #[test]
+    fn connect_rejects_zero_row_chunks() {
+        let addr: SocketAddr = "127.0.0.1:9".parse().unwrap();
+        let opts = ClusterOptions { wire: WireFormat::Bin, chunk_rows: Some(0) };
+        let err = ClusterCoordinator::connect_with(&[addr], opts).unwrap_err().to_string();
+        assert!(err.contains("at least one feature row"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn default_options_are_binary_whole_shard() {
+        let opts = ClusterOptions::default();
+        assert_eq!(opts.wire, WireFormat::Bin);
+        assert_eq!(opts.chunk_rows, None);
     }
 
     #[test]

@@ -5,40 +5,49 @@
 //! maps; `ReplicaRouter` and `coordinator::pool` only simulate that
 //! shape inside one OS process. This subsystem makes it real: a rank-0
 //! coordinator plus N worker ranks as separate OS processes, speaking
-//! the same JSON-lines TCP framing the serving layer uses.
+//! JSON control lines plus `spdnn-clu1` packed binary data frames over
+//! TCP.
 //!
-//! * [`transport`] — the collective vocabulary (`load` / `shard` /
-//!   `shutdown`) with bit-exact float round-tripping;
+//! * [`transport`] — the collective vocabulary (`hello` / `load` /
+//!   `shard` / `shard-begin`+`shard-chunk` / `shutdown`) on two
+//!   negotiated wires: JSON numbers or length-prefixed packed frames
+//!   (both bit-exact for f32), with hard frame caps on every read;
 //! * [`rank`] — a worker process: full weight replica (rebuilt
-//!   deterministically from the shared recipe), `run_worker` layer loop
-//!   on the v2 engines per scattered shard;
+//!   deterministically from the shared recipe), engine resolved once
+//!   per load, `run_resident_panel` layer loop per scattered shard or
+//!   pipelined chunk;
 //! * [`launcher`] — spawns/supervises local worker processes with a
 //!   readiness handshake, failure propagation and clean shutdown;
-//! * [`collective`] — rank 0's scatter/compute/gather schedule, the
+//! * [`collective`] — rank 0's scatter/compute/gather schedule behind
+//!   [`ClusterOptions`] (wire format + chunked scatter), the
 //!   reassembled [`ClusterReport`] (bit-identical to single-process
-//!   inference) and the per-layer cross-rank imbalance series.
+//!   inference, with scatter/gather byte accounting) and the per-layer
+//!   cross-rank imbalance series.
 //!
 //! ```text
 //!   rank 0 (cluster-run)                         worker ranks (cluster-worker)
 //!   ┌─────────────────────┐   load (recipe)      ┌──────────────────────────┐
 //!   │ partition_even over │ ───────────────────► │ replicate weights (full) │
-//!   │ the feature panel   │   shard (features)   │ run all layers locally   │
-//!   │ gather + reassemble │ ◄─────────────────── │ categories + activations │
-//!   └─────────────────────┘   result             └──────────────────────────┘
+//!   │ the feature panel   │   shard / chunks     │ run all layers locally,  │
+//!   │ gather + reassemble │ ◄─────────────────── │ overlapping chunk i with │
+//!   └─────────────────────┘   result             │ the transfer of i+1      │
+//!                                                └──────────────────────────┘
 //! ```
 //!
 //! The CLI surface is `spdnn cluster-worker --listen H:P` and
-//! `spdnn cluster-run --ranks N`; `benches/table1_cluster.rs` sweeps the
-//! rank count into `BENCH_cluster.json` (Table 1's scaling column).
+//! `spdnn cluster-run --ranks N --wire json|bin --chunk ROWS`;
+//! `benches/table1_cluster.rs` sweeps rank count plus a wire/chunk
+//! ablation into `BENCH_cluster.json`.
 
 pub mod collective;
 pub mod launcher;
 pub mod rank;
 pub mod transport;
 
-pub use collective::{ClusterCoordinator, ClusterReport, LocalCluster};
+pub use collective::{ClusterCoordinator, ClusterOptions, ClusterReport, LocalCluster};
 pub use launcher::{Launcher, LauncherConfig};
 pub use rank::{serve_rank, READY_PREFIX};
 pub use transport::{
-    ClusterClient, ClusterReply, ClusterRequest, ModelSpec, ShardResult, CLUSTER_PROTOCOL_VERSION,
+    data_frame_cap, ClusterClient, ClusterReply, ClusterRequest, ModelSpec, ReadOutcome,
+    ShardResult, WireFormat, CLUSTER_PROTOCOL_VERSION, CONTROL_FRAME_CAP,
 };

@@ -9,36 +9,51 @@
 //!
 //! The compute path is exactly the in-process one: a `load` op rebuilds
 //! the weight set deterministically (same RadixNet topology + seed as
-//! rank 0, so replication costs generation time, not network transfer),
-//! and every `shard` op becomes a `coordinator::worker::WorkerTask` run
-//! through `run_worker` on the v2 engines — which is what makes cluster
-//! output bit-identical to single-process inference.
+//! rank 0, so replication costs generation time, not network transfer)
+//! and resolves the v2 engine **once** — for the sliced engine that
+//! includes pre-slicing the resident weights, so shard ops pay zero
+//! setup. Every `shard` (or pipelined `shard-begin`/`shard-chunk`
+//! stream) then runs `coordinator::worker::run_resident_panel` over the
+//! borrowed bias and features — which is what makes cluster output
+//! bit-identical to single-process inference.
+//!
+//! Frame hygiene: every read is capped ([`CONTROL_FRAME_CAP`] before a
+//! model is loaded, [`data_frame_cap`] after), so a misbehaving or
+//! malicious peer cannot OOM the rank with one giant line; it gets a
+//! protocol-error reply and its connection is dropped, while the
+//! process stays up for the next coordinator.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::coordinator::{BackendKind, NativeSpec, WeightSource, WorkerTask};
+use crate::coordinator::worker::{run_resident_panel, NativeExec, PanelTask};
+use crate::coordinator::NativeSpec;
 use crate::formats::EllMatrix;
 use crate::radixnet::{RadixNet, Topology};
 use crate::{log_info, log_warn};
 
-use super::transport::{ClusterReply, ClusterRequest, ModelSpec, CLUSTER_PROTOCOL_VERSION};
+use super::transport::{
+    data_frame_cap, read_request, write_reply, ClusterReply, ClusterRequest, ModelSpec,
+    ReadOutcome, ShardResult, WireFormat, CLUSTER_PROTOCOL_VERSION, CONTROL_FRAME_CAP,
+};
 
 /// First stdout line of a worker: `SPDNN-CLUSTER-WORKER <addr>`.
 pub const READY_PREFIX: &str = "SPDNN-CLUSTER-WORKER";
 
-/// The weight replica plus the engine configuration a `load` op pinned.
+/// The weight replica plus the engine a `load` op resolved.
 struct Replica {
     rank: usize,
     model: ModelSpec,
-    spec: NativeSpec,
     prune: bool,
     layers: Arc<Vec<EllMatrix>>,
-    bias: Vec<f32>,
+    /// Shared bias panel — borrowed by every shard op, never cloned.
+    bias: Arc<Vec<f32>>,
+    /// Engine built once per load; owns the pre-sliced weight cache.
+    exec: NativeExec,
 }
 
 /// Build the full weight set for `model` (deterministic replication:
@@ -52,7 +67,7 @@ pub fn build_replica_weights(model: &ModelSpec) -> Result<(Vec<EllMatrix>, Vec<f
 }
 
 enum ConnOutcome {
-    /// Peer disconnected; go back to accept.
+    /// Peer disconnected (or broke protocol); go back to accept.
     Disconnected,
     /// A shutdown op was acknowledged; the process should exit.
     Shutdown,
@@ -80,26 +95,58 @@ pub fn serve_rank(listener: TcpListener) -> Result<()> {
     }
 }
 
+fn send(w: &mut impl Write, reply: &ClusterReply, wire: WireFormat) -> Result<()> {
+    write_reply(w, reply, wire)?;
+    w.flush().context("flushing reply")?;
+    Ok(())
+}
+
+fn frame_cap(replica: Option<&Replica>) -> usize {
+    replica.map(|r| data_frame_cap(r.model.neurons)).unwrap_or(CONTROL_FRAME_CAP)
+}
+
 fn serve_connection(stream: TcpStream, replica: &mut Option<Replica>) -> Result<ConnOutcome> {
     stream.set_nodelay(true).ok();
-    let mut writer = stream.try_clone().context("cloning connection")?;
+    let mut writer = BufWriter::new(stream.try_clone().context("cloning connection")?);
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
     loop {
-        line.clear();
-        let n = reader.read_line(&mut line).context("reading request line")?;
-        if n == 0 {
-            return Ok(ConnOutcome::Disconnected);
-        }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        let (reply, shutdown) = match ClusterRequest::parse_line(trimmed) {
-            Ok(ClusterRequest::Ping) => {
-                (ClusterReply::Pong { version: CLUSTER_PROTOCOL_VERSION }, false)
+        let cap = frame_cap(replica.as_ref());
+        let (req, wire) = match read_request(&mut reader, cap) {
+            Ok(ReadOutcome::Eof) => return Ok(ConnOutcome::Disconnected),
+            Ok(ReadOutcome::Msg(req, wire)) => (req, wire),
+            Ok(ReadOutcome::Invalid(e, wire)) => {
+                // The message was fully consumed (complete line or
+                // frame), so the stream is still in sync: answer with
+                // an error and keep serving, exactly like protocol v1.
+                let reply = ClusterReply::Error { message: format!("{e:#}") };
+                send(&mut writer, &reply, wire)?;
+                continue;
             }
-            Ok(ClusterRequest::Load { rank, model, spec, prune }) => {
+            Err(e) => {
+                // The stream cannot be resynced after a framing error
+                // (an oversized line, bad magic, a truncated frame):
+                // answer with a protocol error — instead of aborting
+                // the process or buffering a hostile line without
+                // bound — and drop the connection. The rank stays up
+                // for the next accept.
+                let reply = ClusterReply::Error { message: format!("protocol error: {e:#}") };
+                let _ = send(&mut writer, &reply, WireFormat::Json);
+                return Ok(ConnOutcome::Disconnected);
+            }
+        };
+        let (reply, reply_wire, outcome) = match req {
+            ClusterRequest::Ping => {
+                (ClusterReply::Pong { version: CLUSTER_PROTOCOL_VERSION }, wire, None)
+            }
+            ClusterRequest::Hello { wire: proposed } => (
+                // Echo the proposed wire: both encodings are understood,
+                // the handshake exists so version/wire skew fails loudly
+                // at connect time.
+                ClusterReply::Hello { version: CLUSTER_PROTOCOL_VERSION, wire: proposed },
+                wire,
+                None,
+            ),
+            ClusterRequest::Load { rank, model, spec, prune } => {
                 match load_replica(rank, model, spec, prune) {
                     Ok(r) => {
                         let reply = ClusterReply::Loaded {
@@ -108,37 +155,153 @@ fn serve_connection(stream: TcpStream, replica: &mut Option<Replica>) -> Result<
                             layers: r.model.layers,
                         };
                         *replica = Some(r);
-                        (reply, false)
+                        (reply, wire, None)
                     }
-                    Err(e) => (ClusterReply::Error { message: format!("{e:#}") }, false),
+                    Err(e) => (ClusterReply::Error { message: format!("{e:#}") }, wire, None),
                 }
             }
-            Ok(ClusterRequest::Shard { start, features }) => match replica.as_ref() {
-                Some(r) => match run_shard(r, start, features) {
-                    Ok(result) => (ClusterReply::Result(Box::new(result)), false),
-                    Err(e) => (ClusterReply::Error { message: format!("{e:#}") }, false),
+            ClusterRequest::Shard { start, features } => match replica.as_ref() {
+                Some(r) => match run_shard(r, start, &features) {
+                    Ok(result) => (ClusterReply::Result(Box::new(result)), wire, None),
+                    Err(e) => (ClusterReply::Error { message: format!("{e:#}") }, wire, None),
                 },
                 None => (
                     ClusterReply::Error {
                         message: "no model loaded on this rank (send a load op first)".into(),
                     },
-                    false,
+                    wire,
+                    None,
                 ),
             },
-            Ok(ClusterRequest::Shutdown) => (ClusterReply::Bye, true),
-            Err(e) => (ClusterReply::Error { message: format!("{e:#}") }, false),
+            ClusterRequest::ShardBegin { start, rows, chunks } => {
+                match receive_chunked(&mut reader, replica.as_ref(), start, rows, chunks, cap) {
+                    // The result goes back in the encoding the chunk
+                    // frames arrived in (shard-begin itself is always a
+                    // JSON control line, so its wire would wrongly
+                    // downgrade a binary gather).
+                    Ok((result, data_wire)) => {
+                        (ClusterReply::Result(Box::new(result)), data_wire, None)
+                    }
+                    Err(e) => {
+                        // Mid-stream failure: unread chunks may still be
+                        // in flight, so the stream is unrecoverable —
+                        // reply, then drop the connection.
+                        let reply = ClusterReply::Error { message: format!("{e:#}") };
+                        let _ = send(&mut writer, &reply, wire);
+                        return Ok(ConnOutcome::Disconnected);
+                    }
+                }
+            }
+            ClusterRequest::ShardChunk { index, .. } => (
+                ClusterReply::Error {
+                    message: format!(
+                        "shard-chunk {index} outside an active shard stream \
+                         (send shard-begin first)"
+                    ),
+                },
+                wire,
+                None,
+            ),
+            ClusterRequest::Shutdown => (ClusterReply::Bye, wire, Some(ConnOutcome::Shutdown)),
         };
-        writeln!(writer, "{}", reply.to_json()).context("writing reply")?;
-        writer.flush().ok();
-        if shutdown {
-            return Ok(ConnOutcome::Shutdown);
+        send(&mut writer, &reply, reply_wire)?;
+        if let Some(outcome) = outcome {
+            return Ok(outcome);
         }
     }
+}
+
+/// Drain one pipelined scatter (`chunks` shard-chunk messages after a
+/// shard-begin), computing each sub-panel the moment it arrives — the
+/// §III.B overlap: while chunk *i* runs the layer loop here, chunk
+/// *i+1* is still moving through the socket. The merged result is
+/// bit-identical to a whole-shard run because feature rows are
+/// independent through every layer (same argument that makes the
+/// rank-level scatter exact). Returns the merged result plus the wire
+/// the chunk frames arrived in, which is the encoding the result reply
+/// must use.
+fn receive_chunked(
+    reader: &mut impl BufRead,
+    replica: Option<&Replica>,
+    start: usize,
+    rows: usize,
+    chunks: usize,
+    cap: usize,
+) -> Result<(ShardResult, WireFormat)> {
+    let r =
+        replica.ok_or_else(|| anyhow!("no model loaded on this rank (send a load op first)"))?;
+    let nlayers = r.model.layers;
+    let t = Instant::now();
+    let mut categories = Vec::new();
+    let mut activations = Vec::new();
+    let mut live_per_layer = vec![0usize; nlayers];
+    let mut layer_secs = vec![0f64; nlayers];
+    let mut edges = 0u64;
+    let mut row = start;
+    // An empty stream (0 chunks) has no data frames to take the
+    // encoding from; JSON is always understood by the peer.
+    let mut data_wire = WireFormat::Json;
+    for index in 0..chunks {
+        let (req, wire) = match read_request(reader, cap)? {
+            ReadOutcome::Msg(req, wire) => (req, wire),
+            ReadOutcome::Eof => {
+                bail!("peer closed mid shard stream (chunk {index}/{chunks})")
+            }
+            ReadOutcome::Invalid(e, _) => {
+                bail!("invalid message mid shard stream (chunk {index}/{chunks}): {e:#}")
+            }
+        };
+        data_wire = wire;
+        let (got_index, chunk_start, features) = match req {
+            ClusterRequest::ShardChunk { index, start, features } => (index, start, features),
+            other => bail!("expected shard-chunk {index}, got a {} op", other.op()),
+        };
+        if got_index != index {
+            bail!("shard chunk out of order: got {got_index}, expected {index}");
+        }
+        if chunk_start != row {
+            bail!("shard chunk {index} starts at row {chunk_start}, expected {row}");
+        }
+        let out = run_shard(r, chunk_start, &features)?;
+        row += out.count;
+        if row > start + rows {
+            bail!("shard chunks overflow the announced {rows} rows");
+        }
+        categories.extend(out.categories);
+        activations.extend(out.activations);
+        for (acc, v) in live_per_layer.iter_mut().zip(&out.live_per_layer) {
+            *acc += v;
+        }
+        for (acc, v) in layer_secs.iter_mut().zip(&out.layer_secs) {
+            *acc += v;
+        }
+        edges += out.edges_traversed;
+    }
+    if row != start + rows {
+        bail!("shard chunks cover {} rows, shard-begin announced {rows}", row - start);
+    }
+    Ok((
+        ShardResult {
+            rank: r.rank,
+            start,
+            count: rows,
+            categories,
+            activations,
+            live_per_layer,
+            layer_secs,
+            edges_traversed: edges,
+            secs: t.elapsed().as_secs_f64(),
+        },
+        data_wire,
+    ))
 }
 
 fn load_replica(rank: usize, model: ModelSpec, spec: NativeSpec, prune: bool) -> Result<Replica> {
     let t = Instant::now();
     let (layers, bias) = build_replica_weights(&model)?;
+    let exec =
+        NativeExec::build(spec.threads, spec.minibatch, spec.engine, spec.slice, Some(&layers))
+            .context("cluster rank engine init")?;
     log_info!(
         "cluster worker rank {rank}: replicated {} layers of {}x{} (k={}) in {:.1}ms \
          [engine={} mb={} slice={} threads={}]",
@@ -152,16 +315,20 @@ fn load_replica(rank: usize, model: ModelSpec, spec: NativeSpec, prune: bool) ->
         spec.slice,
         spec.threads
     );
-    Ok(Replica { rank, model, spec, prune, layers: Arc::new(layers), bias })
+    Ok(Replica {
+        rank,
+        model,
+        prune,
+        layers: Arc::new(layers),
+        bias: Arc::new(bias),
+        exec,
+    })
 }
 
-/// Run all layers over one scattered shard; the exact same code path as
-/// an in-process worker thread.
-fn run_shard(
-    replica: &Replica,
-    start: usize,
-    features: Vec<f32>,
-) -> Result<super::transport::ShardResult> {
+/// Run all layers over one scattered panel; the exact same code path as
+/// an in-process worker thread, minus any per-op copies: the prebuilt
+/// engine, the shared bias and the feature slice are all borrowed.
+fn run_shard(replica: &Replica, start: usize, features: &[f32]) -> Result<ShardResult> {
     let n = replica.model.neurons;
     if n == 0 {
         bail!("replica has zero-width model");
@@ -170,26 +337,22 @@ fn run_shard(
         bail!("shard of {} values is not a multiple of neurons={n}", features.len());
     }
     let count = features.len() / n;
-    let task = WorkerTask {
-        id: replica.rank,
-        backend: BackendKind::Native {
-            threads: replica.spec.threads,
-            minibatch: replica.spec.minibatch,
-            engine: replica.spec.engine,
-            slice: replica.spec.slice,
-        },
-        neurons: n,
-        k: replica.model.k,
-        nlayers: replica.model.layers,
-        bias: replica.bias.clone(),
-        prune: replica.prune,
-        features,
-        global_start: start,
-        weights: WeightSource::Memory(replica.layers.clone()),
-    };
     let t = Instant::now();
-    let out = crate::coordinator::worker::run_worker(task)?;
-    Ok(super::transport::ShardResult {
+    let out = run_resident_panel(
+        &replica.exec,
+        &replica.layers,
+        &PanelTask {
+            id: replica.rank,
+            neurons: n,
+            k: replica.model.k,
+            nlayers: replica.model.layers,
+            bias: &replica.bias,
+            prune: replica.prune,
+            features,
+            global_start: start,
+        },
+    )?;
+    Ok(ShardResult {
         rank: replica.rank,
         start,
         count,
@@ -232,7 +395,7 @@ mod tests {
         let ds = Dataset::generate(&cfg).unwrap();
         let model = ModelSpec::from_config(&cfg);
         let replica = load_replica(0, model, spec(), true).unwrap();
-        let out = run_shard(&replica, 0, ds.features.clone()).unwrap();
+        let out = run_shard(&replica, 0, &ds.features).unwrap();
         assert_eq!(out.categories, ds.truth_categories);
         assert_eq!(out.count, cfg.batch);
         assert_eq!(out.live_per_layer.len(), cfg.layers);
@@ -240,11 +403,26 @@ mod tests {
     }
 
     #[test]
+    fn sliced_replica_preslices_once_and_matches_truth() {
+        let cfg = small_cfg();
+        let ds = Dataset::generate(&cfg).unwrap();
+        let sliced =
+            NativeSpec { engine: EngineKind::Sliced, minibatch: 12, slice: 16, threads: 1 };
+        let replica = load_replica(0, ModelSpec::from_config(&cfg), sliced, true).unwrap();
+        // Two shard ops against the same prebuilt engine: identical output.
+        let a = run_shard(&replica, 0, &ds.features).unwrap();
+        let b = run_shard(&replica, 0, &ds.features).unwrap();
+        assert_eq!(a.categories, ds.truth_categories);
+        assert_eq!(a.categories, b.categories);
+        assert_eq!(a.activations, b.activations);
+    }
+
+    #[test]
     fn shard_offsets_are_global() {
         let cfg = small_cfg();
         let ds = Dataset::generate(&cfg).unwrap();
         let replica = load_replica(1, ModelSpec::from_config(&cfg), spec(), true).unwrap();
-        let out = run_shard(&replica, 100, ds.features.clone()).unwrap();
+        let out = run_shard(&replica, 100, &ds.features).unwrap();
         let expect: Vec<usize> = ds.truth_categories.iter().map(|c| c + 100).collect();
         assert_eq!(out.categories, expect);
         assert_eq!(out.rank, 1);
@@ -254,16 +432,96 @@ mod tests {
     fn ragged_shard_rejected() {
         let cfg = small_cfg();
         let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true).unwrap();
-        assert!(run_shard(&replica, 0, vec![0.0; 63]).is_err());
+        assert!(run_shard(&replica, 0, &[0.0; 63]).is_err());
     }
 
     #[test]
     fn empty_shard_is_fine() {
         let cfg = small_cfg();
         let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true).unwrap();
-        let out = run_shard(&replica, 0, vec![]).unwrap();
+        let out = run_shard(&replica, 0, &[]).unwrap();
         assert!(out.categories.is_empty());
         assert_eq!(out.count, 0);
+    }
+
+    #[test]
+    fn chunked_receive_matches_whole_shard_bit_exactly() {
+        let cfg = small_cfg();
+        let ds = Dataset::generate(&cfg).unwrap();
+        let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true).unwrap();
+        let whole = run_shard(&replica, 0, &ds.features).unwrap();
+
+        // Feed the chunked receiver from an in-memory stream: 12 rows
+        // as chunks of 5 + 5 + 2.
+        let n = cfg.neurons;
+        let mut wire = Vec::new();
+        for (i, chunk) in ds.features.chunks(5 * n).enumerate() {
+            super::super::transport::write_shard_chunk(
+                &mut wire,
+                WireFormat::Bin,
+                i,
+                i * 5,
+                chunk,
+            )
+            .unwrap();
+        }
+        let (chunked, data_wire) = receive_chunked(
+            &mut &wire[..],
+            Some(&replica),
+            0,
+            cfg.batch,
+            3,
+            CONTROL_FRAME_CAP,
+        )
+        .unwrap();
+        // Binary chunk frames => the result reply must stay binary too.
+        assert_eq!(data_wire, WireFormat::Bin);
+        assert_eq!(chunked.categories, whole.categories);
+        assert_eq!(chunked.count, whole.count);
+        assert_eq!(chunked.live_per_layer, whole.live_per_layer);
+        assert_eq!(chunked.edges_traversed, whole.edges_traversed);
+        assert_eq!(chunked.activations.len(), whole.activations.len());
+        for (a, b) in chunked.activations.iter().zip(&whole.activations) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn chunked_receive_rejects_gaps_and_short_streams() {
+        let cfg = small_cfg();
+        let ds = Dataset::generate(&cfg).unwrap();
+        let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true).unwrap();
+        let n = cfg.neurons;
+
+        // Out-of-order chunk index.
+        let mut wire = Vec::new();
+        super::super::transport::write_shard_chunk(
+            &mut wire,
+            WireFormat::Bin,
+            1,
+            0,
+            &ds.features[..5 * n],
+        )
+        .unwrap();
+        let err = receive_chunked(&mut &wire[..], Some(&replica), 0, 12, 3, CONTROL_FRAME_CAP)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of order"), "unexpected error: {err}");
+
+        // Stream ends before the announced chunk count.
+        let mut wire = Vec::new();
+        super::super::transport::write_shard_chunk(
+            &mut wire,
+            WireFormat::Bin,
+            0,
+            0,
+            &ds.features[..5 * n],
+        )
+        .unwrap();
+        let err = receive_chunked(&mut &wire[..], Some(&replica), 0, 12, 3, CONTROL_FRAME_CAP)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("closed mid shard stream"), "unexpected error: {err}");
     }
 
     #[test]

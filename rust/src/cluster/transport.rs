@@ -1,44 +1,140 @@
-//! Cluster wire protocol: JSON-lines over TCP between rank 0 and the
-//! worker ranks.
+//! Cluster wire protocol: JSON control lines plus `spdnn-clu1` binary
+//! data frames, over TCP between rank 0 and the worker ranks.
 //!
-//! The framing is the same one the serving subsystem speaks
-//! (`server::protocol`): one UTF-8 JSON object per `\n`-terminated line,
-//! serialized through the dependency-light `util::json`. The verbs are
-//! the collective vocabulary of the paper's multi-GPU model (§IV.C):
+//! Two encodings share one stream and are distinguished by the first
+//! byte of each message (a JSON object always opens with `{`, a binary
+//! frame with the magic `S` of `"SCL1"`):
 //!
-//! ```text
-//! {"op":"ping"}                                   liveness
-//! {"op":"load","rank":R,"model":{...},"spec":{...},"prune":true}
-//!                                                 replicate the weights
-//! {"op":"shard","start":S,"features":[...]}       scatter one partition
-//! {"op":"shutdown"}                               drain + exit
-//! ```
+//! * **JSON lines** carry the low-rate control verbs — exactly the
+//!   framing the serving subsystem speaks (`server::protocol`):
 //!
-//! `load` ships the *recipe* for the weight replica (shape, topology,
-//! seed, bias), not the weights themselves: every rank rebuilds the full
-//! weight set locally — replication without moving gigabytes through
-//! rank 0. `shard` then moves only this rank's feature partition, and
-//! the `result` reply carries the surviving categories, their final
-//! activations, and the per-layer trajectory rank 0 aggregates into the
-//! cluster imbalance report.
+//!   ```text
+//!   {"op":"hello","wire":"bin"}                     connect-time negotiation
+//!   {"op":"ping"}                                   liveness
+//!   {"op":"load","rank":R,"model":{...},"spec":{...},"prune":true}
+//!                                                   replicate the weights
+//!   {"op":"shard","start":S,"features":[...]}       scatter (JSON wire)
+//!   {"op":"shard-begin","start":S,"rows":R,"chunks":C}
+//!                                                   open a chunked scatter
+//!   {"op":"shutdown"}                               drain + exit
+//!   ```
 //!
-//! Floats survive the wire bit-exactly: an `f32` widened to `f64`
-//! serializes via Rust's shortest-round-trip formatting and parses back
-//! to the identical bits, which is what makes cluster inference
-//! bit-identical to the single-process run.
+//! * **`spdnn-clu1` frames** carry the high-rate data payloads when the
+//!   binary wire is negotiated — `data::binio`'s packed little-endian
+//!   layout behind a length prefix:
+//!
+//!   ```text
+//!   ┌──────┬──────┬─────────┬──────────────────────────────┐
+//!   │"SCL1"│ kind │ u32 len │ payload (len bytes, LE)      │
+//!   │ 4 B  │ 1 B  │  4 B    │                              │
+//!   └──────┴──────┴─────────┴──────────────────────────────┘
+//!   kind 1  shard        u64 start | u64 n | panel
+//!   kind 3  shard-chunk  u64 index | u64 start | u64 n | panel
+//!   kind 4  result       u64 rank,start,count,ncats,nacts,nlive,
+//!                        nsecs,edges | f64 secs | u64×ncats cats |
+//!                        f32×nacts activations | u64×nlive live |
+//!                        f64×nsecs layer_secs
+//!
+//!   panel := u8 0 | f32×n                       dense
+//!          | u8 1 | f32 v | bitmap ⌈n/8⌉ B      sparse-uniform
+//!   ```
+//!
+//!   A panel whose values are all +0.0 or one shared bit pattern `v`
+//!   (the challenge's thresholded {0,1} images — i.e. essentially every
+//!   scatter) ships as a bitmap plus a single f32: ~1 bit per value
+//!   instead of the 4 bytes of dense f32 or the ~4 characters of JSON.
+//!   Arbitrary panels fall back to dense, still 3-5× tighter than JSON
+//!   for real-valued data.
+//!
+//! **Negotiation**: the coordinator opens every connection with a
+//! `hello` proposing a [`WireFormat`]; the worker echoes it together
+//! with its protocol version, so skewed binaries fail with a clear
+//! diagnostic instead of a parse error deep inside load/shard. Workers
+//! answer each request in the encoding it arrived in (a chunked
+//! scatter's result replies in the encoding of its chunk frames),
+//! which keeps the reader side stateless.
+//!
+//! **Frame caps**: every read — JSON line or binary payload — is
+//! bounded. Control traffic is capped at [`CONTROL_FRAME_CAP`]; once a
+//! model is negotiated the cap widens to [`data_frame_cap`] (generous,
+//! derived from the model width). One hostile or misbehaving peer can
+//! no longer OOM a rank with a single giant line; it gets a protocol
+//! error and the connection is dropped instead.
+//!
+//! Floats survive both wires bit-exactly: JSON widens `f32` to `f64`
+//! and round-trips through shortest formatting; the binary frames carry
+//! the raw little-endian bits. That equivalence is what keeps cluster
+//! inference bit-identical to the single-process run on either wire.
 
-use std::io::{BufRead, BufReader, Write};
+use std::fmt;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::NativeSpec;
+use crate::data::binio::{put_f64, put_u64, write_f32s, ByteCursor};
 use crate::engine::EngineKind;
 use crate::server::protocol::parse_f32_array;
 use crate::util::config::RuntimeConfig;
 use crate::util::json::Json;
 
-pub const CLUSTER_PROTOCOL_VERSION: i64 = 1;
+pub const CLUSTER_PROTOCOL_VERSION: i64 = 2;
+
+/// Magic prefix of one `spdnn-clu1` binary frame.
+pub const FRAME_MAGIC: &[u8; 4] = b"SCL1";
+const FRAME_KIND_SHARD: u8 = 1;
+const FRAME_KIND_SHARD_CHUNK: u8 = 3;
+const FRAME_KIND_RESULT: u8 = 4;
+/// magic + kind + u32 payload length.
+const FRAME_HEADER_BYTES: usize = 4 + 1 + 4;
+
+/// Frame cap while no model is negotiated: control verbs are tiny, so
+/// anything past this is hostile or corrupt.
+pub const CONTROL_FRAME_CAP: usize = 4 << 20;
+/// Ceiling no frame may exceed regardless of model size.
+const FRAME_CAP_CEILING: usize = 2 << 30;
+
+/// Per-connection frame cap once a model is known: generous — room for
+/// a million-row feature shard serialized as JSON numbers (~32 bytes a
+/// value) — but finite, so one unbounded line cannot OOM the process.
+pub fn data_frame_cap(neurons: usize) -> usize {
+    let per_row_json = neurons.saturating_mul(32);
+    per_row_json.saturating_mul(1 << 20).clamp(CONTROL_FRAME_CAP, FRAME_CAP_CEILING)
+}
+
+/// Which encoding the data verbs (`shard`, `shard-chunk`, `result`)
+/// travel in. Control verbs are JSON lines on both wires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFormat {
+    /// JSON number arrays (protocol v1's only encoding).
+    Json,
+    /// `spdnn-clu1` length-prefixed packed frames (the default).
+    Bin,
+}
+
+impl WireFormat {
+    pub fn parse(s: &str) -> Result<WireFormat> {
+        match s {
+            "json" => Ok(WireFormat::Json),
+            "bin" => Ok(WireFormat::Bin),
+            other => bail!("unknown wire format {other:?} (json|bin)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WireFormat::Json => "json",
+            WireFormat::Bin => "bin",
+        }
+    }
+}
+
+impl fmt::Display for WireFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
 
 /// The recipe a worker rank needs to materialise its full weight
 /// replica: deterministic topology generation, not weight shipping.
@@ -117,22 +213,51 @@ fn spec_from_json(j: &Json) -> Result<NativeSpec> {
     })
 }
 
+fn features_json(features: &[f32]) -> Json {
+    Json::Arr(features.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
 /// One coordinator-to-worker request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ClusterRequest {
     Ping,
+    /// Connect-time negotiation: propose a wire for the data verbs.
+    Hello { wire: WireFormat },
     /// Build the full weight replica on this rank.
     Load { rank: usize, model: ModelSpec, spec: NativeSpec, prune: bool },
     /// Run all layers over one statically-partitioned feature shard.
     Shard { start: usize, features: Vec<f32> },
+    /// Open a pipelined scatter: `chunks` shard-chunk messages follow,
+    /// covering `rows` feature rows from `start` in order.
+    ShardBegin { start: usize, rows: usize, chunks: usize },
+    /// One sub-panel of an open chunked scatter.
+    ShardChunk { index: usize, start: usize, features: Vec<f32> },
     /// Finish the current work and exit the worker process.
     Shutdown,
 }
 
 impl ClusterRequest {
+    /// Short verb name (for diagnostics that must not debug-print a
+    /// panel-sized payload).
+    pub fn op(&self) -> &'static str {
+        match self {
+            ClusterRequest::Ping => "ping",
+            ClusterRequest::Hello { .. } => "hello",
+            ClusterRequest::Load { .. } => "load",
+            ClusterRequest::Shard { .. } => "shard",
+            ClusterRequest::ShardBegin { .. } => "shard-begin",
+            ClusterRequest::ShardChunk { .. } => "shard-chunk",
+            ClusterRequest::Shutdown => "shutdown",
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         match self {
             ClusterRequest::Ping => Json::obj(vec![("op", Json::Str("ping".into()))]),
+            ClusterRequest::Hello { wire } => Json::obj(vec![
+                ("op", Json::Str("hello".into())),
+                ("wire", Json::Str(wire.as_str().into())),
+            ]),
             ClusterRequest::Load { rank, model, spec, prune } => Json::obj(vec![
                 ("op", Json::Str("load".into())),
                 ("rank", Json::Int(*rank as i64)),
@@ -140,14 +265,23 @@ impl ClusterRequest {
                 ("spec", spec_to_json(spec)),
                 ("prune", Json::Bool(*prune)),
             ]),
-            ClusterRequest::Shard { start, features } => {
-                let xs: Vec<f64> = features.iter().map(|&x| x as f64).collect();
-                Json::obj(vec![
-                    ("op", Json::Str("shard".into())),
-                    ("start", Json::Int(*start as i64)),
-                    ("features", Json::arr_f64(&xs)),
-                ])
-            }
+            ClusterRequest::Shard { start, features } => Json::obj(vec![
+                ("op", Json::Str("shard".into())),
+                ("start", Json::Int(*start as i64)),
+                ("features", features_json(features)),
+            ]),
+            ClusterRequest::ShardBegin { start, rows, chunks } => Json::obj(vec![
+                ("op", Json::Str("shard-begin".into())),
+                ("start", Json::Int(*start as i64)),
+                ("rows", Json::Int(*rows as i64)),
+                ("chunks", Json::Int(*chunks as i64)),
+            ]),
+            ClusterRequest::ShardChunk { index, start, features } => Json::obj(vec![
+                ("op", Json::Str("shard-chunk".into())),
+                ("index", Json::Int(*index as i64)),
+                ("start", Json::Int(*start as i64)),
+                ("features", features_json(features)),
+            ]),
             ClusterRequest::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".into()))]),
         }
     }
@@ -156,6 +290,7 @@ impl ClusterRequest {
         let v = Json::parse(line).context("cluster request is not valid JSON")?;
         match v.req_str("op")? {
             "ping" => Ok(ClusterRequest::Ping),
+            "hello" => Ok(ClusterRequest::Hello { wire: WireFormat::parse(v.req_str("wire")?)? }),
             "load" => Ok(ClusterRequest::Load {
                 rank: v.req_usize("rank")?,
                 model: ModelSpec::from_json(v.req("model")?).context("\"model\"")?,
@@ -166,6 +301,16 @@ impl ClusterRequest {
                     .ok_or_else(|| anyhow!("\"prune\" is not a bool"))?,
             }),
             "shard" => Ok(ClusterRequest::Shard {
+                start: v.req_usize("start")?,
+                features: parse_f32_array(v.req("features")?).context("\"features\"")?,
+            }),
+            "shard-begin" => Ok(ClusterRequest::ShardBegin {
+                start: v.req_usize("start")?,
+                rows: v.req_usize("rows")?,
+                chunks: v.req_usize("chunks")?,
+            }),
+            "shard-chunk" => Ok(ClusterRequest::ShardChunk {
+                index: v.req_usize("index")?,
                 start: v.req_usize("start")?,
                 features: parse_f32_array(v.req("features")?).context("\"features\"")?,
             }),
@@ -193,7 +338,8 @@ pub struct ShardResult {
     /// Seconds per layer on this rank.
     pub layer_secs: Vec<f64>,
     pub edges_traversed: u64,
-    /// Whole-shard wall seconds on the worker (compute, not transport).
+    /// Whole-shard wall seconds on the worker (for a chunked scatter:
+    /// first chunk received to last chunk computed).
     pub secs: f64,
 }
 
@@ -201,12 +347,32 @@ impl ShardResult {
     pub fn busy_secs(&self) -> f64 {
         self.layer_secs.iter().sum()
     }
+
+    fn to_json(&self) -> Json {
+        let acts: Vec<f64> = self.activations.iter().map(|&x| x as f64).collect();
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("kind", Json::Str("result".into())),
+            ("rank", Json::Int(self.rank as i64)),
+            ("start", Json::Int(self.start as i64)),
+            ("count", Json::Int(self.count as i64)),
+            ("categories", Json::arr_usize(&self.categories)),
+            ("activations", Json::arr_f64(&acts)),
+            ("live_per_layer", Json::arr_usize(&self.live_per_layer)),
+            ("layer_secs", Json::arr_f64(&self.layer_secs)),
+            ("edges_traversed", Json::Int(self.edges_traversed as i64)),
+            ("secs", Json::Num(self.secs)),
+        ])
+    }
 }
 
 /// One worker-to-coordinator reply.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ClusterReply {
     Pong { version: i64 },
+    /// Negotiation echo: the worker's protocol version plus the wire it
+    /// accepted for data frames.
+    Hello { version: i64, wire: WireFormat },
     Loaded { rank: usize, neurons: usize, layers: usize },
     Result(Box<ShardResult>),
     /// Acknowledgement of a shutdown; the worker exits after sending it.
@@ -222,6 +388,12 @@ impl ClusterReply {
                 ("kind", Json::Str("pong".into())),
                 ("version", Json::Int(*version)),
             ]),
+            ClusterReply::Hello { version, wire } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("kind", Json::Str("hello".into())),
+                ("version", Json::Int(*version)),
+                ("wire", Json::Str(wire.as_str().into())),
+            ]),
             ClusterReply::Loaded { rank, neurons, layers } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("kind", Json::Str("loaded".into())),
@@ -229,22 +401,7 @@ impl ClusterReply {
                 ("neurons", Json::Int(*neurons as i64)),
                 ("layers", Json::Int(*layers as i64)),
             ]),
-            ClusterReply::Result(r) => {
-                let acts: Vec<f64> = r.activations.iter().map(|&x| x as f64).collect();
-                Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("kind", Json::Str("result".into())),
-                    ("rank", Json::Int(r.rank as i64)),
-                    ("start", Json::Int(r.start as i64)),
-                    ("count", Json::Int(r.count as i64)),
-                    ("categories", Json::arr_usize(&r.categories)),
-                    ("activations", Json::arr_f64(&acts)),
-                    ("live_per_layer", Json::arr_usize(&r.live_per_layer)),
-                    ("layer_secs", Json::arr_f64(&r.layer_secs)),
-                    ("edges_traversed", Json::Int(r.edges_traversed as i64)),
-                    ("secs", Json::Num(r.secs)),
-                ])
-            }
+            ClusterReply::Result(r) => r.to_json(),
             ClusterReply::Bye => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("kind", Json::Str("bye".into())),
@@ -265,6 +422,13 @@ impl ClusterReply {
                     .req("version")?
                     .as_i64()
                     .ok_or_else(|| anyhow!("\"version\" is not an int"))?,
+            }),
+            "hello" => Ok(ClusterReply::Hello {
+                version: v
+                    .req("version")?
+                    .as_i64()
+                    .ok_or_else(|| anyhow!("\"version\" is not an int"))?,
+                wire: WireFormat::parse(v.req_str("wire")?)?,
             }),
             "loaded" => Ok(ClusterReply::Loaded {
                 rank: v.req_usize("rank")?,
@@ -310,37 +474,595 @@ fn parse_f64_array(j: &Json) -> Result<Vec<f64>> {
         .collect()
 }
 
-/// Blocking JSON-lines client held by rank 0, one per worker rank.
+// ---------------------------------------------------------------------------
+// Capped line reads
+// ---------------------------------------------------------------------------
+
+/// `read_line` with a hard byte cap: a peer that streams one giant line
+/// (or never sends a newline) gets an error instead of growing the
+/// buffer without bound. Returns the bytes consumed (0 on EOF).
+pub fn read_line_capped(r: &mut impl BufRead, line: &mut String, cap: usize) -> Result<usize> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let (done, used) = {
+            let chunk = r.fill_buf().context("reading wire line")?;
+            if chunk.is_empty() {
+                (true, 0)
+            } else {
+                match chunk.iter().position(|&b| b == b'\n') {
+                    Some(i) => {
+                        buf.extend_from_slice(&chunk[..=i]);
+                        (true, i + 1)
+                    }
+                    None => {
+                        buf.extend_from_slice(chunk);
+                        (false, chunk.len())
+                    }
+                }
+            }
+        };
+        r.consume(used);
+        if buf.len() > cap {
+            bail!("wire line of {}+ bytes exceeds the {cap}-byte frame cap", buf.len());
+        }
+        if done {
+            break;
+        }
+    }
+    let n = buf.len();
+    line.push_str(std::str::from_utf8(&buf).context("wire line is not UTF-8")?);
+    Ok(n)
+}
+
+// ---------------------------------------------------------------------------
+// spdnn-clu1 binary frames
+// ---------------------------------------------------------------------------
+
+fn frame_header(kind: u8, payload_len: usize) -> Result<[u8; FRAME_HEADER_BYTES]> {
+    let len = u32::try_from(payload_len).map_err(|_| {
+        anyhow!("frame payload of {payload_len} bytes exceeds the u32 length prefix")
+    })?;
+    let mut h = [0u8; FRAME_HEADER_BYTES];
+    h[..4].copy_from_slice(FRAME_MAGIC);
+    h[4] = kind;
+    h[5..9].copy_from_slice(&len.to_le_bytes());
+    Ok(h)
+}
+
+fn read_frame(r: &mut impl BufRead, cap: usize) -> Result<(u8, Vec<u8>)> {
+    let mut header = [0u8; FRAME_HEADER_BYTES];
+    r.read_exact(&mut header).context("reading binary frame header")?;
+    if &header[..4] != FRAME_MAGIC {
+        bail!("bad frame magic {:?} (not an spdnn-clu1 frame)", &header[..4]);
+    }
+    let kind = header[4];
+    let len = u32::from_le_bytes([header[5], header[6], header[7], header[8]]) as usize;
+    if len > cap {
+        bail!("binary frame of {len} bytes exceeds the {cap}-byte frame cap");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .with_context(|| format!("frame truncated (wanted {len} payload bytes)"))?;
+    Ok((kind, payload))
+}
+
+/// Panel payload encodings inside shard / shard-chunk frames.
+const ENC_DENSE: u8 = 0;
+const ENC_UNIFORM: u8 = 1;
+
+/// Detect the sparse-uniform case: every value is either +0.0 or one
+/// shared bit pattern `v`. The challenge's input features are
+/// thresholded binary images (exactly {0.0, 1.0}), so scatter panels
+/// almost always qualify — and a bitmap plus one f32 is ~32× smaller
+/// than dense. Bit-level comparison keeps the round trip exact (a -0.0
+/// background falls back to dense).
+fn uniform_value(features: &[f32]) -> Option<f32> {
+    let mut v = 0u32;
+    for &x in features {
+        let b = x.to_bits();
+        if b == 0 {
+            continue;
+        }
+        if v == 0 {
+            v = b;
+        } else if v != b {
+            return None;
+        }
+    }
+    // All-zero panels encode as value +0.0 with an empty bitmap.
+    Some(f32::from_bits(v))
+}
+
+fn panel_encoded_len(features: &[f32], uniform: Option<f32>) -> usize {
+    1 + match uniform {
+        Some(_) => 4 + features.len().div_ceil(8),
+        None => features.len() * 4,
+    }
+}
+
+/// Write `u8 enc` + the encoded panel, straight from the caller's
+/// slice (dense data streams through a fixed staging buffer; the
+/// uniform bitmap is 1/8th of the value count).
+fn write_panel(w: &mut impl Write, features: &[f32], uniform: Option<f32>) -> Result<()> {
+    match uniform {
+        Some(v) => {
+            let mut buf = Vec::with_capacity(1 + 4 + features.len().div_ceil(8));
+            buf.push(ENC_UNIFORM);
+            buf.extend_from_slice(&v.to_le_bytes());
+            let mut byte = 0u8;
+            for (i, &x) in features.iter().enumerate() {
+                if x.to_bits() != 0 {
+                    byte |= 1 << (i % 8);
+                }
+                if i % 8 == 7 {
+                    buf.push(byte);
+                    byte = 0;
+                }
+            }
+            if features.len() % 8 != 0 {
+                buf.push(byte);
+            }
+            w.write_all(&buf)?;
+            Ok(())
+        }
+        None => {
+            w.write_all(&[ENC_DENSE])?;
+            write_f32s(w, features)
+        }
+    }
+}
+
+fn read_panel(c: &mut ByteCursor<'_>, n: usize) -> Result<Vec<f32>> {
+    match c.u8()? {
+        ENC_DENSE => c.f32s(n),
+        ENC_UNIFORM => {
+            let v = c.f32()?;
+            let bitmap = c.bytes(n.div_ceil(8))?;
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                let set = (bitmap[i / 8] >> (i % 8)) & 1 == 1;
+                out.push(if set { v } else { 0.0 });
+            }
+            Ok(out)
+        }
+        other => bail!("unknown panel encoding {other}"),
+    }
+}
+
+/// Scatter one whole shard, writing straight from the caller's feature
+/// slice — the steady-state path makes no panel-sized copy on either
+/// wire.
+pub fn write_shard(
+    w: &mut impl Write,
+    wire: WireFormat,
+    start: usize,
+    features: &[f32],
+) -> Result<()> {
+    match wire {
+        WireFormat::Json => {
+            let obj = Json::obj(vec![
+                ("op", Json::Str("shard".into())),
+                ("start", Json::Int(start as i64)),
+                ("features", features_json(features)),
+            ]);
+            writeln!(w, "{obj}").context("writing shard line")
+        }
+        WireFormat::Bin => {
+            let uniform = uniform_value(features);
+            let payload_len = 16 + panel_encoded_len(features, uniform);
+            w.write_all(&frame_header(FRAME_KIND_SHARD, payload_len)?)?;
+            let mut meta = Vec::with_capacity(16);
+            put_u64(&mut meta, start as u64);
+            put_u64(&mut meta, features.len() as u64);
+            w.write_all(&meta)?;
+            write_panel(w, features, uniform).context("writing shard frame")
+        }
+    }
+}
+
+/// One sub-panel of a chunked scatter, written from the caller's slice.
+pub fn write_shard_chunk(
+    w: &mut impl Write,
+    wire: WireFormat,
+    index: usize,
+    start: usize,
+    features: &[f32],
+) -> Result<()> {
+    match wire {
+        WireFormat::Json => {
+            let obj = Json::obj(vec![
+                ("op", Json::Str("shard-chunk".into())),
+                ("index", Json::Int(index as i64)),
+                ("start", Json::Int(start as i64)),
+                ("features", features_json(features)),
+            ]);
+            writeln!(w, "{obj}").context("writing shard-chunk line")
+        }
+        WireFormat::Bin => {
+            let uniform = uniform_value(features);
+            let payload_len = 24 + panel_encoded_len(features, uniform);
+            w.write_all(&frame_header(FRAME_KIND_SHARD_CHUNK, payload_len)?)?;
+            let mut meta = Vec::with_capacity(24);
+            put_u64(&mut meta, index as u64);
+            put_u64(&mut meta, start as u64);
+            put_u64(&mut meta, features.len() as u64);
+            w.write_all(&meta)?;
+            write_panel(w, features, uniform).context("writing shard-chunk frame")
+        }
+    }
+}
+
+fn write_result_frame(w: &mut impl Write, r: &ShardResult) -> Result<()> {
+    let payload_len = 8 * 8
+        + 8
+        + r.categories.len() * 8
+        + r.activations.len() * 4
+        + r.live_per_layer.len() * 8
+        + r.layer_secs.len() * 8;
+    w.write_all(&frame_header(FRAME_KIND_RESULT, payload_len)?)?;
+    let mut buf = Vec::new();
+    for m in [
+        r.rank as u64,
+        r.start as u64,
+        r.count as u64,
+        r.categories.len() as u64,
+        r.activations.len() as u64,
+        r.live_per_layer.len() as u64,
+        r.layer_secs.len() as u64,
+        r.edges_traversed,
+    ] {
+        put_u64(&mut buf, m);
+    }
+    put_f64(&mut buf, r.secs);
+    for &c in &r.categories {
+        put_u64(&mut buf, c as u64);
+    }
+    w.write_all(&buf)?;
+    write_f32s(w, &r.activations)?;
+    buf.clear();
+    for &v in &r.live_per_layer {
+        put_u64(&mut buf, v as u64);
+    }
+    for &s in &r.layer_secs {
+        put_f64(&mut buf, s);
+    }
+    w.write_all(&buf).context("writing result frame")
+}
+
+fn usize_of(x: u64, what: &str) -> Result<usize> {
+    usize::try_from(x).map_err(|_| anyhow!("{what} {x} does not fit in usize"))
+}
+
+fn parse_request_frame(kind: u8, payload: &[u8]) -> Result<ClusterRequest> {
+    let mut c = ByteCursor::new(payload);
+    match kind {
+        FRAME_KIND_SHARD => {
+            let start = usize_of(c.u64()?, "shard start")?;
+            let n = usize_of(c.u64()?, "shard value count")?;
+            let features = read_panel(&mut c, n).context("shard frame features")?;
+            c.finish().context("shard frame")?;
+            Ok(ClusterRequest::Shard { start, features })
+        }
+        FRAME_KIND_SHARD_CHUNK => {
+            let index = usize_of(c.u64()?, "chunk index")?;
+            let start = usize_of(c.u64()?, "chunk start")?;
+            let n = usize_of(c.u64()?, "chunk value count")?;
+            let features = read_panel(&mut c, n).context("shard-chunk frame features")?;
+            c.finish().context("shard-chunk frame")?;
+            Ok(ClusterRequest::ShardChunk { index, start, features })
+        }
+        FRAME_KIND_RESULT => bail!("result frame is a reply, not a request"),
+        other => bail!("unknown request frame kind {other}"),
+    }
+}
+
+fn parse_reply_frame(kind: u8, payload: &[u8]) -> Result<ClusterReply> {
+    if kind != FRAME_KIND_RESULT {
+        bail!("unknown reply frame kind {kind}");
+    }
+    let mut c = ByteCursor::new(payload);
+    let rank = usize_of(c.u64()?, "result rank")?;
+    let start = usize_of(c.u64()?, "result start")?;
+    let count = usize_of(c.u64()?, "result count")?;
+    let ncats = usize_of(c.u64()?, "result category count")?;
+    let nacts = usize_of(c.u64()?, "result activation count")?;
+    let nlive = usize_of(c.u64()?, "result live count")?;
+    let nsecs = usize_of(c.u64()?, "result layer-secs count")?;
+    let edges_traversed = c.u64()?;
+    let secs = c.f64()?;
+    let categories = c
+        .u64s(ncats)
+        .context("result frame categories")?
+        .into_iter()
+        .map(|x| usize_of(x, "category"))
+        .collect::<Result<Vec<usize>>>()?;
+    let activations = c.f32s(nacts).context("result frame activations")?;
+    let live_per_layer = c
+        .u64s(nlive)
+        .context("result frame live_per_layer")?
+        .into_iter()
+        .map(|x| usize_of(x, "live count"))
+        .collect::<Result<Vec<usize>>>()?;
+    let layer_secs = c.f64s(nsecs).context("result frame layer_secs")?;
+    c.finish().context("result frame")?;
+    Ok(ClusterReply::Result(Box::new(ShardResult {
+        rank,
+        start,
+        count,
+        categories,
+        activations,
+        live_per_layer,
+        layer_secs,
+        edges_traversed,
+        secs,
+    })))
+}
+
+/// Serialize one request on the negotiated wire. Data verbs become
+/// binary frames on `Bin`; everything else is a JSON line on both.
+pub fn write_request(w: &mut impl Write, req: &ClusterRequest, wire: WireFormat) -> Result<()> {
+    match (wire, req) {
+        (WireFormat::Bin, ClusterRequest::Shard { start, features }) => {
+            write_shard(w, wire, *start, features)
+        }
+        (WireFormat::Bin, ClusterRequest::ShardChunk { index, start, features }) => {
+            write_shard_chunk(w, wire, *index, *start, features)
+        }
+        _ => writeln!(w, "{}", req.to_json()).context("writing cluster request"),
+    }
+}
+
+/// Serialize one reply on the negotiated wire (`result` is the only
+/// binary-capable reply).
+pub fn write_reply(w: &mut impl Write, reply: &ClusterReply, wire: WireFormat) -> Result<()> {
+    match (wire, reply) {
+        (WireFormat::Bin, ClusterReply::Result(r)) => write_result_frame(w, r),
+        _ => writeln!(w, "{}", reply.to_json()).context("writing cluster reply"),
+    }
+}
+
+/// Peek the first byte of the next message, consuming blank separators.
+fn peek_first_byte(r: &mut impl BufRead) -> Result<Option<u8>> {
+    loop {
+        let b = {
+            let buf = r.fill_buf().context("reading from cluster peer")?;
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            buf[0]
+        };
+        if b == b'\n' || b == b'\r' {
+            r.consume(1);
+            continue;
+        }
+        return Ok(Some(b));
+    }
+}
+
+/// What one read off the request stream produced. The split matters
+/// for connection lifetime: an [`ReadOutcome::Invalid`] message was
+/// fully consumed (newline-terminated line, or a complete frame), so
+/// the stream is still in sync and the server can reply with an error
+/// and keep serving — whereas a framing failure (cap exceeded, bad
+/// magic, truncated frame: the `Err` of [`read_request`]) leaves the
+/// stream unrecoverable and the connection must drop.
+pub enum ReadOutcome {
+    /// Clean EOF.
+    Eof,
+    /// A well-formed request plus the wire it arrived in.
+    Msg(ClusterRequest, WireFormat),
+    /// A fully-consumed but invalid message (unknown op, missing or
+    /// malformed field): reply with an error and keep reading.
+    Invalid(anyhow::Error, WireFormat),
+}
+
+/// Read one request off the stream — JSON line or binary frame, told
+/// apart by the first byte — enforcing `cap` on either encoding.
+/// Replies go back in the wire the request arrived in. `Err` means the
+/// stream itself broke (see [`ReadOutcome`]).
+pub fn read_request(r: &mut impl BufRead, cap: usize) -> Result<ReadOutcome> {
+    let first = match peek_first_byte(r)? {
+        None => return Ok(ReadOutcome::Eof),
+        Some(b) => b,
+    };
+    if first == FRAME_MAGIC[0] {
+        let (kind, payload) = read_frame(r, cap)?;
+        Ok(match parse_request_frame(kind, &payload) {
+            Ok(req) => ReadOutcome::Msg(req, WireFormat::Bin),
+            Err(e) => ReadOutcome::Invalid(e, WireFormat::Bin),
+        })
+    } else {
+        let mut line = String::new();
+        if read_line_capped(r, &mut line, cap)? == 0 {
+            return Ok(ReadOutcome::Eof);
+        }
+        Ok(match ClusterRequest::parse_line(line.trim()) {
+            Ok(req) => ReadOutcome::Msg(req, WireFormat::Json),
+            Err(e) => ReadOutcome::Invalid(e, WireFormat::Json),
+        })
+    }
+}
+
+/// Read one reply off the stream (see [`read_request`]).
+pub fn read_reply(r: &mut impl BufRead, cap: usize) -> Result<Option<ClusterReply>> {
+    let first = match peek_first_byte(r)? {
+        None => return Ok(None),
+        Some(b) => b,
+    };
+    if first == FRAME_MAGIC[0] {
+        let (kind, payload) = read_frame(r, cap)?;
+        Ok(Some(parse_reply_frame(kind, &payload)?))
+    } else {
+        let mut line = String::new();
+        if read_line_capped(r, &mut line, cap)? == 0 {
+            return Ok(None);
+        }
+        Ok(Some(ClusterReply::parse_line(line.trim())?))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rank-0 client
+// ---------------------------------------------------------------------------
+
+/// Byte-counting stream halves: the scatter/gather byte accounting the
+/// bench ablations report comes straight off these counters.
+struct CountingReader {
+    inner: TcpStream,
+    bytes: u64,
+}
+
+impl Read for CountingReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.bytes += n as u64;
+        Ok(n)
+    }
+}
+
+struct CountingWriter {
+    inner: TcpStream,
+    bytes: u64,
+}
+
+impl Write for CountingWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.bytes += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Blocking wire client held by rank 0, one per worker rank. Carries
+/// the negotiated [`WireFormat`] and the model-derived frame cap.
 pub struct ClusterClient {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
+    reader: BufReader<CountingReader>,
+    writer: BufWriter<CountingWriter>,
+    wire: WireFormat,
+    /// Reply frame cap; starts at the control cap, widened by
+    /// [`ClusterClient::set_model`] after a successful load.
+    cap: usize,
 }
 
 impl ClusterClient {
-    pub fn connect(addr: SocketAddr) -> Result<ClusterClient> {
+    /// Connect and negotiate `wire` for the data verbs. Both sides must
+    /// speak the same protocol version and the worker must echo the
+    /// proposed wire — skewed binaries fail here with a clear
+    /// diagnostic instead of a parse error deep inside load/shard.
+    pub fn connect(addr: SocketAddr, wire: WireFormat) -> Result<ClusterClient> {
         let stream =
             TcpStream::connect(addr).with_context(|| format!("connecting to rank at {addr}"))?;
         stream.set_nodelay(true).ok();
-        let writer = stream.try_clone().context("cloning cluster stream")?;
-        Ok(ClusterClient { reader: BufReader::new(stream), writer })
+        let wstream = stream.try_clone().context("cloning cluster stream")?;
+        let mut client = ClusterClient {
+            reader: BufReader::new(CountingReader { inner: stream, bytes: 0 }),
+            writer: BufWriter::new(CountingWriter { inner: wstream, bytes: 0 }),
+            wire,
+            cap: CONTROL_FRAME_CAP,
+        };
+        match client.call(&ClusterRequest::Hello { wire })? {
+            ClusterReply::Hello { version, wire: got }
+                if version == CLUSTER_PROTOCOL_VERSION && got == wire =>
+            {
+                Ok(client)
+            }
+            ClusterReply::Hello { version, .. } if version != CLUSTER_PROTOCOL_VERSION => bail!(
+                "worker speaks cluster protocol v{version}, this coordinator speaks \
+                 v{CLUSTER_PROTOCOL_VERSION} (mixed spdnn binaries?)"
+            ),
+            ClusterReply::Hello { wire: got, .. } => {
+                bail!("worker negotiated wire {got}, wanted {wire}")
+            }
+            ClusterReply::Error { message } => bail!("handshake rejected: {message}"),
+            other => bail!("unexpected handshake reply {other:?}"),
+        }
     }
 
-    /// Send one request and block for its reply line.
+    /// Widen the reply frame cap to the negotiated model (call after a
+    /// successful `load`).
+    pub fn set_model(&mut self, neurons: usize) {
+        self.cap = data_frame_cap(neurons);
+    }
+
+    pub fn wire(&self) -> WireFormat {
+        self.wire
+    }
+
+    /// Bytes written to the socket so far (flushed requests only).
+    pub fn bytes_sent(&self) -> u64 {
+        self.writer.get_ref().bytes
+    }
+
+    /// Bytes read off the socket so far.
+    pub fn bytes_received(&self) -> u64 {
+        self.reader.get_ref().bytes
+    }
+
+    /// Send one request and block for its reply.
     pub fn call(&mut self, req: &ClusterRequest) -> Result<ClusterReply> {
-        writeln!(self.writer, "{}", req.to_json()).context("writing cluster request")?;
+        write_request(&mut self.writer, req, self.wire)?;
         self.writer.flush().context("flushing cluster request")?;
-        let mut line = String::new();
-        let n = self.reader.read_line(&mut line).context("reading cluster reply")?;
-        if n == 0 {
-            bail!("worker closed the connection");
+        self.read_one_reply()
+    }
+
+    /// Scatter one shard straight from the caller's feature slice —
+    /// whole (`chunk_rows: None`), or as a pipelined stream of
+    /// `chunk_rows`-row sub-panels the worker starts computing on while
+    /// later chunks are still in flight (the §III.B overlap analog).
+    pub fn send_shard(
+        &mut self,
+        start: usize,
+        features: &[f32],
+        neurons: usize,
+        chunk_rows: Option<usize>,
+    ) -> Result<ClusterReply> {
+        let n = neurons.max(1);
+        match chunk_rows {
+            None => {
+                write_shard(&mut self.writer, self.wire, start, features)?;
+                self.writer.flush().context("flushing shard")?;
+            }
+            Some(rows_per_chunk) => {
+                let rows_per_chunk = rows_per_chunk.max(1);
+                let rows = features.len() / n;
+                let chunks = rows.div_ceil(rows_per_chunk);
+                let begin = ClusterRequest::ShardBegin { start, rows, chunks };
+                write_request(&mut self.writer, &begin, self.wire)?;
+                self.writer.flush().context("flushing shard-begin")?;
+                for (i, chunk) in features.chunks(rows_per_chunk * n).enumerate() {
+                    write_shard_chunk(
+                        &mut self.writer,
+                        self.wire,
+                        i,
+                        start + i * rows_per_chunk,
+                        chunk,
+                    )?;
+                    // Eager flush: the worker overlaps compute on this
+                    // chunk with the transfer of the next one.
+                    self.writer.flush().context("flushing shard chunk")?;
+                }
+            }
         }
-        ClusterReply::parse_line(line.trim())
+        self.read_one_reply()
+    }
+
+    fn read_one_reply(&mut self) -> Result<ClusterReply> {
+        match read_reply(&mut self.reader, self.cap).context("reading cluster reply")? {
+            Some(reply) => Ok(reply),
+            None => bail!("worker closed the connection"),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prng::Xoshiro256;
+    use crate::util::proptest::{self, Runner};
 
     fn model() -> ModelSpec {
         ModelSpec {
@@ -357,6 +1079,20 @@ mod tests {
         NativeSpec { engine: EngineKind::Sliced, minibatch: 12, slice: 32, threads: 2 }
     }
 
+    fn sample_result() -> ShardResult {
+        ShardResult {
+            rank: 2,
+            start: 8,
+            count: 4,
+            categories: vec![9, 11],
+            activations: vec![0.5, 0.0, 1.25, 32.0],
+            live_per_layer: vec![4, 3, 2, 2, 2],
+            layer_secs: vec![0.25, 0.125, 0.0625, 0.5, 0.125],
+            edges_traversed: 1234,
+            secs: 1.5,
+        }
+    }
+
     fn roundtrip_request(req: ClusterRequest) {
         let line = req.to_json().to_string();
         assert_eq!(ClusterRequest::parse_line(&line).unwrap(), req, "line: {line}");
@@ -367,9 +1103,41 @@ mod tests {
         assert_eq!(ClusterReply::parse_line(&line).unwrap(), reply, "line: {line}");
     }
 
+    /// Unwrap one well-formed request off a buffer.
+    fn read_msg(r: &mut &[u8], cap: usize) -> (ClusterRequest, WireFormat) {
+        match read_request(r, cap).unwrap() {
+            ReadOutcome::Msg(req, wire) => (req, wire),
+            ReadOutcome::Eof => panic!("unexpected EOF"),
+            ReadOutcome::Invalid(e, _) => panic!("invalid message: {e:#}"),
+        }
+    }
+
+    /// Round-trip through the full framed writer/reader pair.
+    fn roundtrip_request_wire(req: ClusterRequest, wire: WireFormat) {
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req, wire).unwrap();
+        let mut r = &buf[..];
+        let (back, _) = read_msg(&mut r, 1 << 24);
+        assert_eq!(back, req, "wire: {wire}");
+        assert!(
+            matches!(read_request(&mut r, 1 << 24).unwrap(), ReadOutcome::Eof),
+            "stream fully consumed"
+        );
+    }
+
+    fn roundtrip_reply_wire(reply: ClusterReply, wire: WireFormat) {
+        let mut buf = Vec::new();
+        write_reply(&mut buf, &reply, wire).unwrap();
+        let mut r = &buf[..];
+        let back = read_reply(&mut r, 1 << 24).unwrap().unwrap();
+        assert_eq!(back, reply, "wire: {wire}");
+    }
+
     #[test]
     fn request_roundtrips() {
         roundtrip_request(ClusterRequest::Ping);
+        roundtrip_request(ClusterRequest::Hello { wire: WireFormat::Bin });
+        roundtrip_request(ClusterRequest::Hello { wire: WireFormat::Json });
         roundtrip_request(ClusterRequest::Load {
             rank: 3,
             model: model(),
@@ -380,26 +1148,247 @@ mod tests {
             start: 12,
             features: vec![0.0, 1.5, 0.25, 3.125],
         });
+        roundtrip_request(ClusterRequest::ShardBegin { start: 4, rows: 12, chunks: 3 });
+        roundtrip_request(ClusterRequest::ShardChunk {
+            index: 1,
+            start: 8,
+            features: vec![2.5, -0.75],
+        });
         roundtrip_request(ClusterRequest::Shutdown);
     }
 
     #[test]
     fn reply_roundtrips() {
         roundtrip_reply(ClusterReply::Pong { version: CLUSTER_PROTOCOL_VERSION });
+        roundtrip_reply(ClusterReply::Hello {
+            version: CLUSTER_PROTOCOL_VERSION,
+            wire: WireFormat::Bin,
+        });
         roundtrip_reply(ClusterReply::Loaded { rank: 1, neurons: 64, layers: 5 });
-        roundtrip_reply(ClusterReply::Result(Box::new(ShardResult {
-            rank: 2,
-            start: 8,
-            count: 4,
-            categories: vec![9, 11],
-            activations: vec![0.5, 0.0, 1.25, 32.0],
-            live_per_layer: vec![4, 3, 2, 2, 2],
-            layer_secs: vec![0.25, 0.125, 0.0625, 0.5, 0.125],
-            edges_traversed: 1234,
-            secs: 1.5,
-        })));
+        roundtrip_reply(ClusterReply::Result(Box::new(sample_result())));
         roundtrip_reply(ClusterReply::Bye);
         roundtrip_reply(ClusterReply::Error { message: "boom".into() });
+    }
+
+    #[test]
+    fn every_request_roundtrips_on_both_wires() {
+        for wire in [WireFormat::Json, WireFormat::Bin] {
+            roundtrip_request_wire(ClusterRequest::Ping, wire);
+            roundtrip_request_wire(ClusterRequest::Hello { wire }, wire);
+            roundtrip_request_wire(
+                ClusterRequest::Load { rank: 0, model: model(), spec: spec(), prune: false },
+                wire,
+            );
+            roundtrip_request_wire(
+                ClusterRequest::Shard { start: 3, features: vec![0.1, 1.0 / 3.0, 31.5] },
+                wire,
+            );
+            roundtrip_request_wire(
+                ClusterRequest::ShardBegin { start: 0, rows: 7, chunks: 2 },
+                wire,
+            );
+            roundtrip_request_wire(
+                ClusterRequest::ShardChunk { index: 0, start: 0, features: vec![] },
+                wire,
+            );
+            roundtrip_request_wire(ClusterRequest::Shutdown, wire);
+            roundtrip_reply_wire(ClusterReply::Result(Box::new(sample_result())), wire);
+            roundtrip_reply_wire(ClusterReply::Error { message: "nope".into() }, wire);
+        }
+    }
+
+    #[test]
+    fn shard_bits_are_identical_across_wires() {
+        // The shortest-vs-packed equivalence: whatever f32 panel goes
+        // in, both encodings hand back the exact same bits.
+        Runner::new(32, 0xB1A5).run("wire-equivalence", |rng| {
+            let rows = proptest::usize_in(rng, 0, 24);
+            let feats = proptest::vec_f32(rng, rows * 16, -32.0, 32.0);
+            let req = ClusterRequest::Shard { start: rows, features: feats };
+            let mut bits: Vec<Vec<u32>> = Vec::new();
+            for wire in [WireFormat::Json, WireFormat::Bin] {
+                let mut buf = Vec::new();
+                write_request(&mut buf, &req, wire).unwrap();
+                let (back, got_wire) = read_msg(&mut &buf[..], 1 << 24);
+                if got_wire != wire {
+                    return Err(format!("dispatched as {got_wire}, wrote {wire}"));
+                }
+                match back {
+                    ClusterRequest::Shard { features, .. } => {
+                        bits.push(features.iter().map(|x| x.to_bits()).collect())
+                    }
+                    other => return Err(format!("wrong request {}", other.op())),
+                }
+            }
+            if bits[0] != bits[1] {
+                return Err("json and binary decode to different bits".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn binary_shard_is_at_least_3x_smaller_than_json() {
+        // The acceptance bar of the binary transport: ≥3× fewer scatter
+        // bytes than JSON for the same panel.
+        let mut rng = Xoshiro256::new(7);
+        let feats: Vec<f32> = (0..64 * 50).map(|_| rng.next_f32()).collect();
+        let req = ClusterRequest::Shard { start: 0, features: feats };
+        let mut json = Vec::new();
+        write_request(&mut json, &req, WireFormat::Json).unwrap();
+        let mut bin = Vec::new();
+        write_request(&mut bin, &req, WireFormat::Bin).unwrap();
+        assert!(
+            json.len() >= 3 * bin.len(),
+            "json {} bytes vs binary {} bytes",
+            json.len(),
+            bin.len()
+        );
+    }
+
+    #[test]
+    fn sparse_uniform_panels_encode_as_bitmaps() {
+        // The challenge's thresholded {0,1} images: one bit per value
+        // plus a single shared f32, instead of 4 bytes per value.
+        let mut rng = Xoshiro256::new(11);
+        let feats: Vec<f32> =
+            (0..1000).map(|_| if rng.next_f32() < 0.3 { 1.0 } else { 0.0 }).collect();
+        let req = ClusterRequest::Shard { start: 0, features: feats.clone() };
+        let mut bin = Vec::new();
+        write_request(&mut bin, &req, WireFormat::Bin).unwrap();
+        // header + meta + enc + value + bitmap, nothing panel-sized.
+        assert!(bin.len() <= 9 + 16 + 1 + 4 + 125, "frame too large: {} bytes", bin.len());
+        let (back, _) = read_msg(&mut &bin[..], 1 << 20);
+        match back {
+            ClusterRequest::Shard { features, .. } => {
+                assert_eq!(features.len(), feats.len());
+                for (a, b) in features.iter().zip(&feats) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+        // JSON spends ~4 bytes per "0.0"/"1.0" value: the bitmap beats
+        // the 3x acceptance bar with a wide margin on binary panels.
+        let mut json = Vec::new();
+        write_request(&mut json, &req, WireFormat::Json).unwrap();
+        assert!(json.len() >= 3 * bin.len(), "json {} vs bin {}", json.len(), bin.len());
+    }
+
+    #[test]
+    fn zero_sign_and_mixed_panels_round_trip_bit_exactly() {
+        let panels: [Vec<f32>; 5] = [
+            vec![],                          // empty shard
+            vec![0.0; 9],                    // all-zero panel
+            vec![-0.0; 6],                   // uniform on the -0.0 bits
+            vec![0.0, -0.0, 1.5, 0.0, 1.5],  // -0.0 forces dense
+            vec![2.5; 17],                   // uniform, non-multiple-of-8
+        ];
+        for feats in panels {
+            let req = ClusterRequest::Shard { start: 1, features: feats.clone() };
+            let mut bin = Vec::new();
+            write_request(&mut bin, &req, WireFormat::Bin).unwrap();
+            let (back, _) = read_msg(&mut &bin[..], 1 << 20);
+            match back {
+                ClusterRequest::Shard { features, .. } => {
+                    assert_eq!(features.len(), feats.len(), "panel {feats:?}");
+                    for (a, b) in features.iter().zip(&feats) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "panel {feats:?}");
+                    }
+                }
+                other => panic!("wrong request {other:?}"),
+            }
+        }
+    }
+
+    /// A stream-level (fatal) failure: the connection must drop.
+    fn read_fatal(buf: &[u8], cap: usize) -> String {
+        format!("{:#}", read_request(&mut &buf[..], cap).unwrap_err())
+    }
+
+    /// A fully-consumed but invalid message: reply-and-continue.
+    fn read_invalid(buf: &[u8], cap: usize) -> String {
+        match read_request(&mut &buf[..], cap).unwrap() {
+            ReadOutcome::Invalid(e, _) => format!("{e:#}"),
+            ReadOutcome::Msg(req, _) => panic!("unexpectedly parsed a {} op", req.op()),
+            ReadOutcome::Eof => panic!("unexpected EOF"),
+        }
+    }
+
+    #[test]
+    fn truncated_oversized_and_corrupt_frames_are_rejected_with_context() {
+        // Distinct values force the dense encoding, so every byte count
+        // below scales with the declared value count.
+        let feats: Vec<f32> = (0..8).map(|i| i as f32 * 1.5 + 0.5).collect();
+        let req = ClusterRequest::Shard { start: 0, features: feats };
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req, WireFormat::Bin).unwrap();
+
+        // Truncated payload: the stream itself is broken (fatal).
+        let cut = &buf[..buf.len() - 3];
+        let err = read_fatal(cut, 1 << 20);
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+
+        // Corrupt magic: fatal.
+        let mut bad = buf.clone();
+        bad[1] = b'X';
+        let err = read_fatal(&bad, 1 << 20);
+        assert!(err.contains("magic"), "unexpected error: {err}");
+
+        // Declared length past the cap: fatal, rejected before any
+        // allocation.
+        let err = read_fatal(&buf, 16);
+        assert!(err.contains("exceeds the 16-byte frame cap"), "unexpected error: {err}");
+
+        // A lying value count (larger than the payload holds): the
+        // frame was fully consumed, so this is an invalid message the
+        // server answers without dropping the connection.
+        let mut lying = buf.clone();
+        let count_at = FRAME_HEADER_BYTES + 8;
+        lying[count_at..count_at + 8].copy_from_slice(&9999u64.to_le_bytes());
+        let err = read_invalid(&lying, 1 << 20);
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+
+        // A lying value count (smaller: trailing bytes in the frame) —
+        // also fully consumed, also recoverable.
+        let mut trailing = buf.clone();
+        trailing[count_at..count_at + 8].copy_from_slice(&7u64.to_le_bytes());
+        let err = read_invalid(&trailing, 1 << 20);
+        assert!(err.contains("trailing"), "unexpected error: {err}");
+
+        // A result frame is never a valid request.
+        let mut reply = Vec::new();
+        write_reply(&mut reply, &ClusterReply::Result(Box::new(sample_result())), WireFormat::Bin)
+            .unwrap();
+        let err = read_invalid(&reply, 1 << 20);
+        assert!(err.contains("reply"), "unexpected error: {err}");
+
+        // An unknown op on a complete JSON line is likewise invalid,
+        // not fatal (v1 behavior preserved).
+        let err = read_invalid(b"{\"op\":\"warp\"}\n", 1 << 20);
+        assert!(err.contains("warp"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn read_line_capped_enforces_the_cap() {
+        let mut line = String::new();
+        let n = read_line_capped(&mut &b"{\"op\":\"ping\"}\nrest"[..], &mut line, 64).unwrap();
+        assert_eq!(n, 14);
+        assert_eq!(line.trim(), "{\"op\":\"ping\"}");
+
+        let giant = vec![b'x'; 100];
+        let err = read_line_capped(&mut &giant[..], &mut String::new(), 64).unwrap_err();
+        assert!(err.to_string().contains("64-byte frame cap"), "unexpected: {err}");
+
+        assert_eq!(read_line_capped(&mut &b""[..], &mut String::new(), 64).unwrap(), 0);
+    }
+
+    #[test]
+    fn data_frame_cap_is_generous_but_bounded() {
+        assert!(data_frame_cap(0) >= CONTROL_FRAME_CAP);
+        assert!(data_frame_cap(1024) > CONTROL_FRAME_CAP);
+        assert!(data_frame_cap(usize::MAX) <= FRAME_CAP_CEILING);
+        assert!(data_frame_cap(1024) <= data_frame_cap(65536));
     }
 
     #[test]
@@ -446,6 +1435,7 @@ mod tests {
         assert!(ClusterRequest::parse_line("not json").is_err());
         assert!(ClusterRequest::parse_line(r#"{"op":"warp"}"#).is_err());
         assert!(ClusterRequest::parse_line(r#"{"op":"shard","start":0}"#).is_err());
+        assert!(ClusterRequest::parse_line(r#"{"op":"hello","wire":"morse"}"#).is_err());
         assert!(ClusterReply::parse_line(r#"{"kind":"warp"}"#).is_err());
         assert!(ClusterReply::parse_line(r#"{"kind":"result","rank":0}"#).is_err());
     }

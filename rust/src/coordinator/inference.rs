@@ -153,6 +153,7 @@ pub fn run_inference(dataset: &Dataset, opts: &RunOptions) -> Result<InferenceRe
     let cfg: &RuntimeConfig = &dataset.cfg;
     let n = cfg.neurons;
     let shared = Arc::new(dataset.layers.clone());
+    let bias = Arc::new(dataset.bias.clone());
 
     let native_spec = match &opts.backend {
         Backend::Native => Some(resolve_native_spec(cfg, opts)),
@@ -183,7 +184,7 @@ pub fn run_inference(dataset: &Dataset, opts: &RunOptions) -> Result<InferenceRe
             neurons: n,
             k: cfg.k,
             nlayers: cfg.layers,
-            bias: dataset.bias.clone(),
+            bias: bias.clone(),
             prune: cfg.prune,
             features,
             global_start: p.start,

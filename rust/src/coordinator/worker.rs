@@ -48,7 +48,9 @@ pub struct WorkerTask {
     pub neurons: usize,
     pub k: usize,
     pub nlayers: usize,
-    pub bias: Vec<f32>,
+    /// Shared read-only bias panel: one allocation per model, not per
+    /// worker or per shard op.
+    pub bias: Arc<Vec<f32>>,
     /// Prune inactive features between layers.
     pub prune: bool,
     /// This worker's feature partition, [count, neurons] row-major.
@@ -56,6 +58,23 @@ pub struct WorkerTask {
     /// Global id of the first feature in the partition.
     pub global_start: usize,
     pub weights: WeightSource,
+}
+
+/// One borrowed feature-panel job: what `run_worker` (in-process pool
+/// threads) and the cluster rank's shard/chunk ops both hand the shared
+/// layer loop. Borrowing keeps the steady-state scatter path free of
+/// panel- and bias-sized copies.
+pub struct PanelTask<'a> {
+    pub id: usize,
+    pub neurons: usize,
+    pub k: usize,
+    pub nlayers: usize,
+    pub bias: &'a [f32],
+    pub prune: bool,
+    /// Feature panel, `[count, neurons]` row-major.
+    pub features: &'a [f32],
+    /// Global id of the first feature in the panel.
+    pub global_start: usize,
 }
 
 /// Worker result: surviving categories + final activations + metrics.
@@ -267,45 +286,31 @@ impl PjrtExec {
     }
 }
 
-/// Run one worker to completion (called on the worker's own thread; the
-/// PJRT client is created here because xla handles are not Send).
-pub fn run_worker(task: WorkerTask) -> Result<WorkerResult> {
+/// Borrowed execution handle into the shared layer loop.
+enum ExecMut<'a> {
+    Native(&'a NativeExec),
+    Pjrt(&'a mut PjrtExec),
+}
+
+/// The per-rank layer loop (Listing 1 host code): one borrowed feature
+/// panel through all layers with per-layer pruning. Shared verbatim by
+/// the in-process pool (`run_worker`) and the cluster rank's shard and
+/// chunk ops — the single code path is what keeps cluster inference
+/// bit-identical to single-process runs, chunked or not.
+fn run_panel(
+    mut exec: ExecMut<'_>,
+    source: &mut LayerSource<'_>,
+    task: &PanelTask<'_>,
+) -> Result<WorkerResult> {
     let n = task.neurons;
     let count = task.features.len() / n.max(1);
     if task.features.len() != count * n {
         bail!("feature partition not a multiple of neurons");
     }
 
-    let memory_layers: Option<Arc<Vec<EllMatrix>>> = match &task.weights {
-        WeightSource::Memory(m) => Some(m.clone()),
-        WeightSource::File(_) => None,
-    };
-
-    let mut exec = match &task.backend {
-        BackendKind::Native { threads, minibatch, engine, slice } => Exec::Native(
-            NativeExec::build(
-                *threads,
-                *minibatch,
-                *engine,
-                *slice,
-                memory_layers.as_ref().map(|m| m.as_slice()),
-            )
-            .with_context(|| format!("worker {} native engine init", task.id))?,
-        ),
-        BackendKind::Pjrt { artifacts } => Exec::Pjrt(
-            PjrtExec::new(artifacts, n)
-                .with_context(|| format!("worker {} backend init", task.id))?,
-        ),
-    };
-
-    let mut source = match &task.weights {
-        WeightSource::Memory(_) => LayerSource::Mem(memory_layers.as_deref().unwrap()),
-        WeightSource::File(p) => LayerSource::Stream(WeightStreamer::from_file(p, task.nlayers)),
-    };
-
     let mut metrics = WorkerMetrics { worker: task.id, assigned: count, ..Default::default() };
     let mut set = ActiveSet::new(task.global_start, count);
-    let mut y = task.features.clone();
+    let mut y = task.features.to_vec();
     let mut scratch: Vec<f32> = vec![0.0; y.len()];
 
     for layer in 0..task.nlayers {
@@ -326,15 +331,15 @@ pub fn run_worker(task: WorkerTask) -> Result<WorkerResult> {
 
         let t = Timer::start();
         let flags = match &mut exec {
-            Exec::Native(engine) => {
+            ExecMut::Native(engine) => {
                 scratch.resize(live * n, 0.0);
-                engine.layer(layer, &w, &task.bias, &y[..live * n], &mut scratch[..live * n])?;
+                engine.layer(layer, &w, task.bias, &y[..live * n], &mut scratch[..live * n])?;
                 std::mem::swap(&mut y, &mut scratch);
                 y.truncate(live * n);
                 flags_from_panel(&y, n, live)
             }
-            Exec::Pjrt(p) => {
-                let lits = LayerLiterals::new(&w.index, &w.value, &task.bias, n, task.k)?;
+            ExecMut::Pjrt(p) => {
+                let lits = LayerLiterals::new(&w.index, &w.value, task.bias, n, task.k)?;
                 let (y_next, flags) = p.run_panel(&y, live, &lits)?;
                 y = y_next;
                 flags
@@ -351,10 +356,69 @@ pub fn run_worker(task: WorkerTask) -> Result<WorkerResult> {
         }
     }
 
-    if let Exec::Pjrt(p) = &exec {
+    if let ExecMut::Pjrt(p) = &exec {
         metrics.dispatches = p.dispatches;
     }
     Ok(WorkerResult { id: task.id, categories: set.into_categories(), final_y: y, metrics })
+}
+
+/// Run one borrowed panel on a prebuilt native engine over resident
+/// weights — the cluster rank's shard hot path: the engine (with its
+/// pre-sliced weight cache) is built once per `load`, and neither the
+/// bias nor the features are copied per op.
+pub fn run_resident_panel(
+    exec: &NativeExec,
+    layers: &[EllMatrix],
+    task: &PanelTask<'_>,
+) -> Result<WorkerResult> {
+    let mut source = LayerSource::Mem(layers);
+    run_panel(ExecMut::Native(exec), &mut source, task)
+}
+
+/// Run one worker to completion (called on the worker's own thread; the
+/// PJRT client is created here because xla handles are not Send).
+pub fn run_worker(task: WorkerTask) -> Result<WorkerResult> {
+    let memory_layers: Option<Arc<Vec<EllMatrix>>> = match &task.weights {
+        WeightSource::Memory(m) => Some(m.clone()),
+        WeightSource::File(_) => None,
+    };
+
+    let mut exec = match &task.backend {
+        BackendKind::Native { threads, minibatch, engine, slice } => Exec::Native(
+            NativeExec::build(
+                *threads,
+                *minibatch,
+                *engine,
+                *slice,
+                memory_layers.as_ref().map(|m| m.as_slice()),
+            )
+            .with_context(|| format!("worker {} native engine init", task.id))?,
+        ),
+        BackendKind::Pjrt { artifacts } => Exec::Pjrt(
+            PjrtExec::new(artifacts, task.neurons)
+                .with_context(|| format!("worker {} backend init", task.id))?,
+        ),
+    };
+
+    let mut source = match &task.weights {
+        WeightSource::Memory(_) => LayerSource::Mem(memory_layers.as_deref().unwrap()),
+        WeightSource::File(p) => LayerSource::Stream(WeightStreamer::from_file(p, task.nlayers)),
+    };
+
+    let panel = PanelTask {
+        id: task.id,
+        neurons: task.neurons,
+        k: task.k,
+        nlayers: task.nlayers,
+        bias: &task.bias,
+        prune: task.prune,
+        features: &task.features,
+        global_start: task.global_start,
+    };
+    match &mut exec {
+        Exec::Native(e) => run_panel(ExecMut::Native(e), &mut source, &panel),
+        Exec::Pjrt(p) => run_panel(ExecMut::Pjrt(p), &mut source, &panel),
+    }
 }
 
 #[cfg(test)]
@@ -379,7 +443,7 @@ mod tests {
             neurons: ds.cfg.neurons,
             k: ds.cfg.k,
             nlayers: ds.cfg.layers,
-            bias: ds.bias.clone(),
+            bias: Arc::new(ds.bias.clone()),
             prune,
             features: ds.features.clone(),
             global_start: 0,
@@ -411,6 +475,32 @@ mod tests {
                 assert_eq!(out.final_y, want.final_y, "engine={engine} slice={slice}");
             }
         }
+    }
+
+    #[test]
+    fn resident_panel_path_matches_run_worker_bit_exactly() {
+        // The cluster rank's hot path (prebuilt engine, borrowed bias
+        // and features) must be the same computation as run_worker.
+        let ds = Dataset::generate(&small_cfg()).unwrap();
+        let want = run_worker(native_task(&ds, true)).unwrap();
+        let exec = NativeExec::build(1, 12, EngineKind::Sliced, 16, Some(&ds.layers)).unwrap();
+        let out = run_resident_panel(
+            &exec,
+            &ds.layers,
+            &PanelTask {
+                id: 0,
+                neurons: ds.cfg.neurons,
+                k: ds.cfg.k,
+                nlayers: ds.cfg.layers,
+                bias: &ds.bias,
+                prune: true,
+                features: &ds.features,
+                global_start: 0,
+            },
+        )
+        .unwrap();
+        assert_eq!(out.categories, want.categories);
+        assert_eq!(out.final_y, want.final_y);
     }
 
     #[test]

@@ -14,7 +14,7 @@
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::formats::EllMatrix;
 
@@ -68,13 +68,122 @@ fn write_u16s(w: &mut impl Write, xs: &[u16]) -> Result<()> {
     Ok(())
 }
 
-fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
-    let mut buf = Vec::with_capacity(xs.len() * 4);
+/// Append one packed little-endian u64.
+pub fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Append one packed little-endian f64.
+pub fn put_f64(buf: &mut Vec<u8>, x: f64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Append a packed little-endian f32 run (the same layout the weight and
+/// feature files above use; the cluster wire frames reuse it).
+pub fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.reserve(xs.len() * 4);
     for x in xs {
         buf.extend_from_slice(&x.to_le_bytes());
     }
-    w.write_all(&buf)?;
+}
+
+/// Stream a packed f32 run to a writer through a fixed staging buffer:
+/// no payload-sized intermediate allocation, whatever the run length.
+pub fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(4 * xs.len().clamp(1, 8192));
+    for chunk in xs.chunks(8192) {
+        buf.clear();
+        put_f32s(&mut buf, chunk);
+        w.write_all(&buf)?;
+    }
     Ok(())
+}
+
+/// Bounded little-endian reader over an in-memory payload. Every take is
+/// range-checked against the slice, so a lying length field surfaces as
+/// a "truncated payload" error instead of a panic or a huge allocation.
+pub struct ByteCursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteCursor<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteCursor<'a> {
+        ByteCursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                anyhow!(
+                    "truncated payload: wanted {n} more bytes at offset {} of {}",
+                    self.pos,
+                    self.buf.len()
+                )
+            })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes(b.try_into().expect("4-byte slice")))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    pub fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = n.checked_mul(4).ok_or_else(|| anyhow!("f32 run of {n} values overflows"))?;
+        let s = self.take(bytes)?;
+        Ok(s.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    pub fn u64s(&mut self, n: usize) -> Result<Vec<u64>> {
+        let bytes = n.checked_mul(8).ok_or_else(|| anyhow!("u64 run of {n} values overflows"))?;
+        let s = self.take(bytes)?;
+        Ok(s.chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+            .collect())
+    }
+
+    /// A raw byte run (e.g. a sparsity bitmap), range-checked.
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    pub fn f64s(&mut self, n: usize) -> Result<Vec<f64>> {
+        let bytes = n.checked_mul(8).ok_or_else(|| anyhow!("f64 run of {n} values overflows"))?;
+        let s = self.take(bytes)?;
+        Ok(s.chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+            .collect())
+    }
+
+    /// The payload must be fully consumed: trailing bytes mean a corrupt
+    /// or mis-declared frame.
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            let extra = self.buf.len() - self.pos;
+            bail!("payload has {extra} trailing bytes past offset {}", self.pos);
+        }
+        Ok(())
+    }
 }
 
 fn read_u16s(r: &mut impl Read, n: usize) -> Result<Vec<u16>> {
@@ -217,6 +326,47 @@ mod tests {
         assert!(read_weights(&path).is_err());
         std::fs::write(&path, b"SPDN\x01\x00\x00\x00\x02\x00\x00\x00").unwrap();
         assert!(read_weights(&path).is_err(), "wrong kind");
+    }
+
+    #[test]
+    fn byte_cursor_roundtrips_packed_runs() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 42);
+        put_f64(&mut buf, -0.5);
+        put_f32s(&mut buf, &[1.5, -2.25, 0.0]);
+        let mut c = ByteCursor::new(&buf);
+        assert_eq!(c.u64().unwrap(), 42);
+        assert_eq!(c.f64().unwrap(), -0.5);
+        assert_eq!(c.f32s(3).unwrap(), vec![1.5, -2.25, 0.0]);
+        c.finish().unwrap();
+    }
+
+    #[test]
+    fn byte_cursor_rejects_truncation_and_trailing_bytes() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 7);
+        let mut c = ByteCursor::new(&buf);
+        assert_eq!(c.u64().unwrap(), 7);
+        let err = c.u64().unwrap_err().to_string();
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+
+        let mut c = ByteCursor::new(&buf);
+        // A lying count can never over-read: range-checked before alloc.
+        assert!(c.f32s(usize::MAX / 2).is_err());
+
+        let c = ByteCursor::new(&buf);
+        let err = c.finish().unwrap_err().to_string();
+        assert!(err.contains("trailing"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn streamed_f32_write_matches_packed_layout() {
+        let xs: Vec<f32> = (0..20000).map(|i| i as f32 * 0.25).collect();
+        let mut streamed = Vec::new();
+        write_f32s(&mut streamed, &xs).unwrap();
+        let mut packed = Vec::new();
+        put_f32s(&mut packed, &xs);
+        assert_eq!(streamed, packed);
     }
 
     #[test]

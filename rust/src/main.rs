@@ -24,7 +24,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use spdnn::bench::{diff_reports, validate_report, DEFAULT_THRESHOLD_PCT};
-use spdnn::cluster::{serve_rank, LocalCluster, ModelSpec};
+use spdnn::cluster::{serve_rank, ClusterOptions, LocalCluster, ModelSpec, WireFormat};
 use spdnn::coordinator::batcher::{BatchPolicy, InferenceServer, ServeBackend, ServedModel};
 use spdnn::coordinator::{
     resolve_native_spec, run_inference, validate, Backend, EngineSelect, RunOptions,
@@ -89,6 +89,8 @@ fn print_help() {
          Serve:   --host H --port P --replicas R --max-batch B --max-wait-ms MS\n\
                   --queue-cap N --deadline-ms MS\n\
          Cluster: cluster-run --ranks N  (spawns N cluster-worker processes)\n\
+                  --wire json|bin (data-frame encoding, default bin)\n\
+                  --chunk ROWS (pipelined scatter sub-panels; 0 = whole shards)\n\
                   cluster-worker --listen H:P  (one rank; announces its address)\n\
          IO:      --config FILE --data DIR --stream\n\
          Sim:     --gpus LIST --gpu v100|a100\n\
@@ -341,15 +343,21 @@ fn cmd_cluster_run(args: &Args) -> Result<()> {
     let cfg = runtime_config(args)?;
     let opts = run_options(args)?;
     let ranks = args.usize_or("ranks", 2)?;
+    let wire = WireFormat::parse(args.get_or("wire", "bin"))?;
+    let chunk = args.usize_or("chunk", 0)?;
     args.finish()?;
     if matches!(opts.backend, Backend::Pjrt { .. }) {
         bail!("cluster-run drives the native engines (--backend native|csr|ell|sliced|auto)");
     }
     let spec = resolve_native_spec(&cfg, &opts);
+    let cluster_opts = ClusterOptions {
+        wire,
+        chunk_rows: if chunk == 0 { None } else { Some(chunk) },
+    };
 
     println!(
         "cluster: {ranks} worker ranks, model {}x{} k={} batch={} \
-         engine={} mb={} slice={} threads={} prune={}",
+         engine={} mb={} slice={} threads={} prune={} wire={} chunk={}",
         cfg.neurons,
         cfg.layers,
         cfg.k,
@@ -358,12 +366,18 @@ fn cmd_cluster_run(args: &Args) -> Result<()> {
         spec.minibatch,
         spec.slice,
         spec.threads,
-        cfg.prune
+        cfg.prune,
+        wire,
+        match cluster_opts.chunk_rows {
+            Some(rows) => format!("{rows} rows"),
+            None => "off (whole shards)".to_string(),
+        }
     );
     let ds = Dataset::generate(&cfg)?;
     let model = ModelSpec::from_config(&cfg);
     let program = std::env::current_exe().context("resolving the spdnn binary path")?;
-    let mut cluster = LocalCluster::start(&program, ranks, &model, spec, cfg.prune)?;
+    let mut cluster =
+        LocalCluster::start_with(&program, ranks, &model, spec, cfg.prune, cluster_opts)?;
     let report = cluster.run(&ds.features)?;
 
     if report.categories != ds.truth_categories {
@@ -399,6 +413,10 @@ fn cmd_cluster_run(args: &Args) -> Result<()> {
     println!("  throughput       {}", fmt_teps(report.edges_per_sec));
     println!("  edges (input)    {}", report.input_edges);
     println!("  pruning saved    {:.1}%", report.pruning_savings() * 100.0);
+    println!(
+        "  wire traffic     {} scatter B + {} gather B per pass ({wire})",
+        report.scatter_bytes, report.gather_bytes
+    );
     println!("  busy imbalance   {:.3}", report.imbalance);
     println!(
         "  layer imbalance  mean {:.3}, worst {:.3} at layer {} (pruning skew, paper §IV.C)",
@@ -442,7 +460,10 @@ fn cmd_bench_trend(args: &Args) -> Result<()> {
             c.name.clone(),
             format!("{:.4}", c.old_teps),
             format!("{:.4}", c.new_teps),
-            format!("{:+.1}%", c.delta_pct),
+            match c.delta_pct {
+                Some(d) => format!("{d:+.1}%"),
+                None => "n/a (zero baseline)".to_string(),
+            },
         ]);
     }
     table.print();
@@ -452,12 +473,20 @@ fn cmd_bench_trend(args: &Args) -> Result<()> {
     if !trend.removed.is_empty() {
         println!("  removed cases (not gated): {}", trend.removed.join(", "));
     }
+    let zero: Vec<&str> = trend.zero_baseline().iter().map(|c| c.name.as_str()).collect();
+    if !zero.is_empty() {
+        println!(
+            "  zero-baseline cases (old artifact reports 0 TEps; not comparable, \
+             NOT counted as unchanged): {}",
+            zero.join(", ")
+        );
+    }
 
     let regressions = trend.regressions(threshold);
     if !regressions.is_empty() {
         let names: Vec<String> = regressions
             .iter()
-            .map(|c| format!("{} ({:+.1}%)", c.name, c.delta_pct))
+            .map(|c| format!("{} ({:+.1}%)", c.name, c.delta_pct.unwrap_or(0.0)))
             .collect();
         bail!(
             "{} case(s) regressed more than {threshold}%: {}",
@@ -465,7 +494,11 @@ fn cmd_bench_trend(args: &Args) -> Result<()> {
             names.join(", ")
         );
     }
-    println!("  no regressions past {threshold}% across {} cases", trend.cases.len());
+    println!(
+        "  no regressions past {threshold}% across {} comparable case(s) ({} zero-baseline)",
+        trend.comparable(),
+        zero.len()
+    );
     Ok(())
 }
 

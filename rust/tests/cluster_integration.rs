@@ -2,13 +2,17 @@
 //! `spdnn` binary via CARGO_BIN_EXE) behind the rank-0 coordinator.
 //!
 //! Covers the acceptance bar of the cluster subsystem: bit-identity
-//! with single-process inference through the baseline CSR engine,
-//! exact cover of the scattered feature ranges, and clean drain when a
-//! worker process is killed mid-flight.
+//! with single-process inference through the baseline CSR engine — on
+//! both wire formats and under the pipelined chunked scatter — exact
+//! cover of the scattered feature ranges, the oversized-line frame cap,
+//! and clean drain when a worker process is killed mid-flight.
 
 use std::path::PathBuf;
 
-use spdnn::cluster::{LocalCluster, ModelSpec};
+use spdnn::cluster::{
+    ClusterClient, ClusterOptions, ClusterReply, ClusterRequest, Launcher, LauncherConfig,
+    LocalCluster, ModelSpec, WireFormat, CONTROL_FRAME_CAP,
+};
 use spdnn::coordinator::NativeSpec;
 use spdnn::data::Dataset;
 use spdnn::engine::{CsrEngine, EngineKind};
@@ -136,6 +140,93 @@ fn killed_worker_propagates_and_the_rest_drain_cleanly() {
     );
     // The surviving rank still drains cleanly on shutdown.
     cluster.stop().expect("surviving ranks must drain cleanly");
+}
+
+/// Tentpole acceptance: binary transport — whole-shard and pipelined
+/// chunked — is bit-identical to the JSON wire (which is itself pinned
+/// to the CSR reference above), and cuts scatter bytes by >=3x.
+#[test]
+fn binary_and_chunked_scatter_match_json_bit_exactly() {
+    let cfg = small_cfg();
+    let ds = Dataset::generate(&cfg).unwrap();
+    let model = ModelSpec::from_config(&cfg);
+    let run = |opts: ClusterOptions| {
+        let mut cluster =
+            LocalCluster::start_with(&program(), 2, &model, spec(EngineKind::Ell), cfg.prune, opts)
+                .unwrap();
+        let report = cluster.run(&ds.features).unwrap();
+        cluster.stop().expect("clean shutdown");
+        report
+    };
+    let json = run(ClusterOptions { wire: WireFormat::Json, chunk_rows: None });
+    let bin = run(ClusterOptions { wire: WireFormat::Bin, chunk_rows: None });
+    let chunked = run(ClusterOptions { wire: WireFormat::Bin, chunk_rows: Some(5) });
+
+    assert_eq!(json.categories, ds.truth_categories);
+    for (name, r) in [("bin", &bin), ("bin+chunk", &chunked)] {
+        assert_eq!(r.categories, json.categories, "{name}: categories");
+        assert_eq!(r.activations.len(), json.activations.len(), "{name}: activation count");
+        for (i, (a, b)) in r.activations.iter().zip(&json.activations).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{name}: activation {i}: {a} != {b}");
+        }
+        // Same compute, different transport: per-layer live trajectories
+        // (and thus the imbalance report) must agree exactly.
+        for (s_r, s_j) in r.shards.iter().zip(&json.shards) {
+            assert_eq!(s_r.live_per_layer, s_j.live_per_layer, "{name}: live trajectory");
+        }
+    }
+    // The headline claim of the binary wire (ISSUE 4 acceptance bar).
+    assert!(
+        json.scatter_bytes >= 3 * bin.scatter_bytes,
+        "binary scatter must be >=3x smaller: json {} B vs bin {} B",
+        json.scatter_bytes,
+        bin.scatter_bytes
+    );
+    // Chunking adds framing overhead but never panel bytes: stay well
+    // under the JSON volume.
+    assert!(chunked.scatter_bytes < json.scatter_bytes);
+}
+
+/// Satellite regression: a peer streaming one giant line (no newline
+/// until past the cap) gets a protocol error and a dropped connection —
+/// the worker process itself survives and keeps serving.
+#[test]
+fn oversized_line_gets_a_protocol_error_not_a_dead_worker() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let launcher = Launcher::spawn(&LauncherConfig::local(program(), 1)).unwrap();
+    let addr = launcher.addrs()[0];
+
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // No model is loaded on this connection, so the control cap is in
+    // force; exceed it without ever sending a newline. The writes may
+    // legitimately fail part-way once the worker drops the connection.
+    let junk = vec![b'x'; CONTROL_FRAME_CAP + (1 << 16)];
+    let _ = stream.write_all(&junk);
+    let _ = stream.flush();
+    let mut line = String::new();
+    let _ = reader.read_line(&mut line);
+    if !line.is_empty() {
+        assert!(
+            line.contains("exceeds") && line.contains("error"),
+            "expected a frame-cap protocol error, got: {line}"
+        );
+    }
+    drop(reader);
+    drop(stream);
+
+    // The rank must still be alive and serving fresh connections.
+    let mut client = ClusterClient::connect(addr, WireFormat::Bin).unwrap();
+    match client.call(&ClusterRequest::Ping).unwrap() {
+        ClusterReply::Pong { .. } => {}
+        other => panic!("worker did not survive the hostile line: {other:?}"),
+    }
+    match client.call(&ClusterRequest::Shutdown).unwrap() {
+        ClusterReply::Bye => {}
+        other => panic!("unexpected shutdown reply: {other:?}"),
+    }
+    launcher.wait_exit(std::time::Duration::from_secs(10)).unwrap();
 }
 
 #[test]
