@@ -100,6 +100,34 @@ impl ClusterCoordinator {
         self.opts
     }
 
+    /// Cumulative per-rank wire traffic, `(bytes written, bytes read)`
+    /// in connection order — the serving tier's `/stats` surfaces these
+    /// per rank, alongside the per-pass totals in [`ClusterReport`].
+    pub fn rank_bytes(&self) -> Vec<(u64, u64)> {
+        self.clients.iter().map(|c| (c.bytes_sent(), c.bytes_received())).collect()
+    }
+
+    /// Liveness probe across the whole connection set; the first
+    /// failure names the rank. Launcher-spawned serving fleets get
+    /// eager liveness from `RankHealth` stdout-EOF flags instead; this
+    /// probe is for supervisors of adopted (pre-started) ranks, which
+    /// have no local launcher to watch.
+    pub fn ping_all(&mut self) -> Result<()> {
+        for (rank, client) in self.clients.iter_mut().enumerate() {
+            client.ping().with_context(|| format!("pinging worker rank {rank}"))?;
+        }
+        Ok(())
+    }
+
+    /// Per-connection liveness sweep: ping every rank, reporting which
+    /// answered. Serving uses this to attribute a scatter failure to
+    /// specific connections when no launcher health flags exist
+    /// (adopted / pre-started fleets): a dead or severed rank's socket
+    /// errors immediately instead of answering.
+    pub fn ping_each(&mut self) -> Vec<bool> {
+        self.clients.iter_mut().map(|c| c.ping().is_ok()).collect()
+    }
+
     /// Replicate the model on every rank (each rebuilds the full weight
     /// set locally from the shared recipe).
     pub fn load(&mut self, model: &ModelSpec, spec: NativeSpec, prune: bool) -> Result<()> {

@@ -9,6 +9,11 @@
 //!   stdout; the launcher scrapes it (with a timeout) before reporting
 //!   the rank as up, and keeps draining the pipe afterwards so a chatty
 //!   worker can never block on a full pipe;
+//! * **eager death detection** — the same stdout-drain thread flips a
+//!   shared [`RankHealth`] flag the moment the pipe hits EOF (the OS
+//!   closes it when the process dies), so supervisors — notably the
+//!   cluster-backed serving tier — observe a dead rank within
+//!   milliseconds of the exit instead of at the next gather;
 //! * **failure propagation** — `check()` turns an exited child into an
 //!   error naming the rank and exit status, so the coordinator surfaces
 //!   dead ranks instead of hanging on half a cluster;
@@ -21,12 +26,56 @@ use std::io::{BufRead, BufReader};
 use std::net::SocketAddr;
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use super::rank::READY_PREFIX;
+
+/// Shared, clonable liveness view of a rank fleet. One flag per rank,
+/// flipped to dead by the launcher's stdout-drain thread the moment the
+/// worker's pipe hits EOF (which the OS delivers when the process
+/// exits, cleanly or not) — the eager counterpart of polling
+/// `Child::try_wait` at gather time. `kill_rank` flips the flag
+/// synchronously so a deliberate kill is visible before the reader
+/// thread wakes.
+#[derive(Clone)]
+pub struct RankHealth {
+    alive: Arc<Vec<AtomicBool>>,
+}
+
+impl RankHealth {
+    fn new(ranks: usize) -> RankHealth {
+        RankHealth { alive: Arc::new((0..ranks).map(|_| AtomicBool::new(true)).collect()) }
+    }
+
+    /// Liveness of one rank (out-of-range ranks read as dead).
+    pub fn alive(&self, rank: usize) -> bool {
+        self.alive.get(rank).map(|a| a.load(Ordering::Acquire)).unwrap_or(false)
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// Ranks currently marked dead, ascending.
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        (0..self.alive.len()).filter(|&r| !self.alive(r)).collect()
+    }
+
+    pub fn all_alive(&self) -> bool {
+        self.alive.iter().all(|a| a.load(Ordering::Acquire))
+    }
+
+    fn mark_dead(&self, rank: usize) {
+        if let Some(a) = self.alive.get(rank) {
+            a.store(false, Ordering::Release);
+        }
+    }
+}
 
 /// How the launcher starts a local rank fleet.
 #[derive(Clone, Debug)]
@@ -67,6 +116,7 @@ pub struct Launcher {
     /// (partitioning still counts them), so `check` keeps failing with
     /// a diagnostic naming the rank instead of an opaque socket error.
     killed: Vec<usize>,
+    health: RankHealth,
 }
 
 impl Launcher {
@@ -76,9 +126,10 @@ impl Launcher {
         if cfg.ranks == 0 {
             bail!("cluster needs at least one worker rank");
         }
+        let health = RankHealth::new(cfg.ranks);
         let mut workers: Vec<WorkerProc> = Vec::with_capacity(cfg.ranks);
         for rank in 0..cfg.ranks {
-            match spawn_worker(cfg, rank) {
+            match spawn_worker(cfg, rank, health.clone()) {
                 Ok(w) => workers.push(w),
                 Err(e) => {
                     for w in &mut workers {
@@ -89,7 +140,7 @@ impl Launcher {
                 }
             }
         }
-        Ok(Launcher { workers, killed: Vec::new() })
+        Ok(Launcher { workers, killed: Vec::new(), health })
     }
 
     /// Worker-rank count.
@@ -102,14 +153,26 @@ impl Launcher {
         self.workers.iter().map(|w| w.addr).collect()
     }
 
+    /// Shared liveness flags: supervisors clone this and observe rank
+    /// death eagerly (stdout-EOF) instead of at the next gather.
+    pub fn health(&self) -> RankHealth {
+        self.health.clone()
+    }
+
     /// Propagate failures: error if any rank's process was killed or
-    /// has exited on its own.
+    /// has exited on its own. The eager health flags are consulted
+    /// first, so a death the drain thread already observed surfaces
+    /// without a `try_wait` syscall per rank.
     pub fn check(&mut self) -> Result<()> {
         if let Some(rank) = self.killed.first() {
             bail!("worker rank {rank} was killed and not replaced");
         }
+        if let Some(&rank) = self.health.dead_ranks().first() {
+            bail!("worker rank {rank} died (stdout closed)");
+        }
         for w in &mut self.workers {
             if let Some(status) = w.child.try_wait().context("polling worker process")? {
+                self.health.mark_dead(w.rank);
                 bail!("worker rank {} exited early ({status})", w.rank);
             }
         }
@@ -127,6 +190,7 @@ impl Launcher {
         let mut w = self.workers.remove(idx);
         w.child.kill().with_context(|| format!("killing rank {rank}"))?;
         w.child.wait().with_context(|| format!("reaping rank {rank}"))?;
+        self.health.mark_dead(rank);
         self.killed.push(rank);
         Ok(())
     }
@@ -183,7 +247,7 @@ impl Drop for Launcher {
     }
 }
 
-fn spawn_worker(cfg: &LauncherConfig, rank: usize) -> Result<WorkerProc> {
+fn spawn_worker(cfg: &LauncherConfig, rank: usize, health: RankHealth) -> Result<WorkerProc> {
     let mut child = Command::new(&cfg.program)
         .arg("cluster-worker")
         .arg("--listen")
@@ -199,7 +263,9 @@ fn spawn_worker(cfg: &LauncherConfig, rank: usize) -> Result<WorkerProc> {
 
     // The reader thread scrapes the readiness line, then keeps draining
     // stdout for the worker's lifetime (forwarding to our stderr) so the
-    // pipe can never fill up and block the worker.
+    // pipe can never fill up and block the worker. The same thread is
+    // the eager death detector: stdout EOF means the process is gone,
+    // and the shared health flag flips before anyone polls `try_wait`.
     let (tx, rx) = mpsc::channel::<Result<SocketAddr, String>>();
     std::thread::spawn(move || {
         let mut reader = BufReader::new(stdout);
@@ -209,6 +275,7 @@ fn spawn_worker(cfg: &LauncherConfig, rank: usize) -> Result<WorkerProc> {
             line.clear();
             match reader.read_line(&mut line) {
                 Ok(0) => {
+                    health.mark_dead(rank);
                     if !announced {
                         let _ = tx.send(Err("exited before announcing readiness".to_string()));
                     }
@@ -231,7 +298,10 @@ fn spawn_worker(cfg: &LauncherConfig, rank: usize) -> Result<WorkerProc> {
                         eprintln!("[cluster rank {rank}] {t}");
                     }
                 }
-                Err(_) => break,
+                Err(_) => {
+                    health.mark_dead(rank);
+                    break;
+                }
             }
         }
     });
@@ -278,5 +348,22 @@ mod tests {
         cfg.ready_timeout = Duration::from_secs(5);
         let err = Launcher::spawn(&cfg).unwrap_err().to_string();
         assert!(err.contains("rank 0"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rank_health_flags_start_alive_and_flip_once() {
+        let h = RankHealth::new(3);
+        assert!(h.all_alive());
+        assert_eq!(h.ranks(), 3);
+        assert!(h.alive(2));
+        assert!(!h.alive(3), "out-of-range ranks read as dead");
+        h.mark_dead(1);
+        assert!(!h.all_alive());
+        assert!(!h.alive(1));
+        assert_eq!(h.dead_ranks(), vec![1]);
+        // Clones observe the same flags (shared Arc).
+        let clone = h.clone();
+        clone.mark_dead(0);
+        assert_eq!(h.dead_ranks(), vec![0, 1]);
     }
 }

@@ -45,7 +45,7 @@ pub mod rank;
 pub mod transport;
 
 pub use collective::{ClusterCoordinator, ClusterOptions, ClusterReport, LocalCluster};
-pub use launcher::{Launcher, LauncherConfig};
+pub use launcher::{Launcher, LauncherConfig, RankHealth};
 pub use rank::{serve_rank, READY_PREFIX};
 pub use transport::{
     data_frame_cap, ClusterClient, ClusterReply, ClusterRequest, ModelSpec, ReadOutcome,

@@ -949,10 +949,15 @@ pub struct ClusterClient {
 }
 
 impl ClusterClient {
-    /// Connect and negotiate `wire` for the data verbs. Both sides must
-    /// speak the same protocol version and the worker must echo the
-    /// proposed wire — skewed binaries fail here with a clear
-    /// diagnostic instead of a parse error deep inside load/shard.
+    /// Connect and negotiate `wire` for the data verbs. The worker
+    /// normally echoes the proposed wire; a peer that answers `json` to
+    /// a `bin` proposal (a v1-era binary whose only data encoding is
+    /// JSON lines) is **downgraded to** rather than rejected — every
+    /// coordinator speaks JSON, so no frames are lost, just bytes.
+    /// Anything else — a version this coordinator does not know, or a
+    /// peer claiming an encoding we did not propose and cannot assume —
+    /// fails here with a clear diagnostic instead of a parse error deep
+    /// inside load/shard.
     pub fn connect(addr: SocketAddr, wire: WireFormat) -> Result<ClusterClient> {
         let stream =
             TcpStream::connect(addr).with_context(|| format!("connecting to rank at {addr}"))?;
@@ -965,16 +970,44 @@ impl ClusterClient {
             cap: CONTROL_FRAME_CAP,
         };
         match client.call(&ClusterRequest::Hello { wire })? {
-            ClusterReply::Hello { version, wire: got }
-                if version == CLUSTER_PROTOCOL_VERSION && got == wire =>
-            {
-                Ok(client)
-            }
-            ClusterReply::Hello { version, .. } if version != CLUSTER_PROTOCOL_VERSION => bail!(
-                "worker speaks cluster protocol v{version}, this coordinator speaks \
-                 v{CLUSTER_PROTOCOL_VERSION} (mixed spdnn binaries?)"
-            ),
-            ClusterReply::Hello { wire: got, .. } => {
+            ClusterReply::Hello { version, wire: got } => {
+                if !(1..=CLUSTER_PROTOCOL_VERSION).contains(&version) {
+                    bail!(
+                        "worker speaks cluster protocol v{version}, this coordinator \
+                         speaks v{CLUSTER_PROTOCOL_VERSION} (mixed spdnn binaries?)"
+                    );
+                }
+                if got == wire && version == CLUSTER_PROTOCOL_VERSION {
+                    return Ok(client);
+                }
+                // Graceful downgrade: a peer that answers `json` — a
+                // v1-era binary whose only data encoding is JSON lines,
+                // or a v2 build refusing bin — settles the connection
+                // on json; every coordinator speaks it, so no frames
+                // are lost, just bytes. The reverse (echoing bin to a
+                // json proposal, or a v1 peer claiming bin) would put
+                // frames on a wire this caller did not propose, so it
+                // stays an error.
+                if got == WireFormat::Json {
+                    if wire == WireFormat::Bin {
+                        crate::log_warn!(
+                            "worker at {addr} speaks protocol v{version} with json-only \
+                             data frames; downgrading this connection from bin to json"
+                        );
+                    }
+                    client.wire = WireFormat::Json;
+                    return Ok(client);
+                }
+                if version != CLUSTER_PROTOCOL_VERSION {
+                    // An old peer claiming a non-json wire: the version
+                    // skew is the real problem — its binary framing
+                    // cannot be assumed compatible.
+                    bail!(
+                        "worker speaks cluster protocol v{version} but offered the {got} \
+                         wire; only json data frames are assumed across versions \
+                         (mixed spdnn binaries?)"
+                    );
+                }
                 bail!("worker negotiated wire {got}, wanted {wire}")
             }
             ClusterReply::Error { message } => bail!("handshake rejected: {message}"),
@@ -986,6 +1019,14 @@ impl ClusterClient {
     /// successful `load`).
     pub fn set_model(&mut self, neurons: usize) {
         self.cap = data_frame_cap(neurons);
+    }
+
+    /// Liveness probe: one ping round-trip (any protocol version).
+    pub fn ping(&mut self) -> Result<()> {
+        match self.call(&ClusterRequest::Ping)? {
+            ClusterReply::Pong { .. } => Ok(()),
+            other => bail!("unexpected ping reply {other:?}"),
+        }
     }
 
     pub fn wire(&self) -> WireFormat {

@@ -154,6 +154,31 @@ impl Drop for InferenceServer {
     }
 }
 
+/// Collect one panel off a request channel under `policy`: block for
+/// the first item, then hold the panel open for co-batched peers until
+/// `max_batch` items or `max_wait` elapses. Returns `None` once the
+/// channel is closed and empty (shutdown). Shared by the in-process
+/// batcher and the cluster serving replica (`server::cluster_backend`)
+/// so the panel-forming policy cannot diverge between the two — the
+/// bit-identity contract between them assumes identical batching.
+pub fn collect_panel<T>(rx: &mpsc::Receiver<T>, policy: BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut panel = vec![first];
+    let deadline = Instant::now() + policy.max_wait;
+    while panel.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => panel.push(r),
+            // Timeout or disconnect: dispatch what we have either way.
+            Err(_) => break,
+        }
+    }
+    Some(panel)
+}
+
 enum ServeExec {
     Native(NativeExec),
     Pjrt(Box<PjrtExec>),
@@ -197,24 +222,10 @@ fn serve_loop(
     };
 
     loop {
-        // Block for the first request of the next panel.
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all senders gone: shutdown
+        let panel = match collect_panel(&rx, policy) {
+            Some(p) => p,
+            None => return, // all senders gone: shutdown
         };
-        let mut panel = vec![first];
-        let deadline = Instant::now() + policy.max_wait;
-        while panel.len() < policy.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => panel.push(r),
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-        }
         process_panel(&model, &mut exec, panel);
     }
 }
@@ -312,6 +323,21 @@ mod tests {
             assert_eq!(resp.active, ds.truth_categories.contains(&i), "feature {i}");
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn collect_panel_fills_caps_and_signals_shutdown() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(20) };
+        // Buffered items fill to the cap without waiting out the window.
+        assert_eq!(collect_panel(&rx, policy), Some(vec![0, 1, 2]));
+        // A short panel dispatches once the window closes.
+        assert_eq!(collect_panel(&rx, policy), Some(vec![3, 4]));
+        drop(tx);
+        assert_eq!(collect_panel(&rx, policy), None, "closed empty channel = shutdown");
     }
 
     #[test]

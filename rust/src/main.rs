@@ -27,12 +27,15 @@ use spdnn::bench::{diff_reports, validate_report, DEFAULT_THRESHOLD_PCT};
 use spdnn::cluster::{serve_rank, ClusterOptions, LocalCluster, ModelSpec, WireFormat};
 use spdnn::coordinator::batcher::{BatchPolicy, InferenceServer, ServeBackend, ServedModel};
 use spdnn::coordinator::{
-    resolve_native_spec, run_inference, validate, Backend, EngineSelect, RunOptions,
+    resolve_native_spec, run_inference, validate, Backend, EngineSelect, NativeSpec, RunOptions,
 };
 use spdnn::data::Dataset;
 use spdnn::engine::EngineKind;
 use spdnn::runtime::Manifest;
-use spdnn::server::{AdmissionConfig, ReferencePanel, Server, ServerConfig};
+use spdnn::server::{
+    AdmissionConfig, Client, ClusterServeConfig, ReferencePanel, Request, Server, ServerConfig,
+    WireResponse,
+};
 use spdnn::simulator::gpu_model::{a100, v100, KernelParams};
 use spdnn::simulator::network::summit;
 use spdnn::simulator::scaling::{ScalingSim, CHALLENGE_BATCH};
@@ -63,6 +66,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("infer") => cmd_infer(args),
         Some("serve") => cmd_serve(args),
         Some("serve-demo") => cmd_serve_demo(args),
+        Some("serve-smoke") => cmd_serve_smoke(args),
         Some("cluster-run") => cmd_cluster_run(args),
         Some("cluster-worker") => cmd_cluster_worker(args),
         Some("simulate") => cmd_simulate(args),
@@ -80,14 +84,19 @@ fn dispatch(args: &Args) -> Result<()> {
 fn print_help() {
     println!(
         "spdnn — at-scale sparse DNN inference (HPEC 2020 reproduction)\n\n\
-         USAGE: spdnn <gen-data|infer|serve|serve-demo|cluster-run|cluster-worker|\n\
-                       simulate|info|check-bench|bench-trend> [flags]\n\n\
+         USAGE: spdnn <gen-data|infer|serve|serve-demo|serve-smoke|cluster-run|\n\
+                       cluster-worker|simulate|info|check-bench|bench-trend> [flags]\n\n\
          Model:   --neurons N --layers L --k K --topology butterfly|random --seed S\n\
          Runtime: --batch B --workers W --minibatch MB --no-prune\n\
          Backend: --backend native|csr|ell|sliced|auto|pjrt --artifacts DIR --threads T\n\
                   --slice S --tune-cache FILE\n\
          Serve:   --host H --port P --replicas R --max-batch B --max-wait-ms MS\n\
                   --queue-cap N --deadline-ms MS\n\
+                  --ranks N (execute replicas on N cluster-worker processes;\n\
+                  0 = in-process) --wire json|bin --chunk ROWS\n\
+                  --worker-addrs H:P,H:P (adopt pre-started cluster-workers)\n\
+                  serve-smoke --ranks N --requests R --stats-out FILE  (loopback\n\
+                  load + bit-identity gate vs in-process sliced serving)\n\
          Cluster: cluster-run --ranks N  (spawns N cluster-worker processes)\n\
                   --wire json|bin (data-frame encoding, default bin)\n\
                   --chunk ROWS (pipelined scatter sub-panels; 0 = whole shards)\n\
@@ -232,6 +241,68 @@ fn cmd_infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the cluster-serving flags shared by `serve` and `serve-smoke`:
+/// `--ranks N` (0 = in-process replicas), `--wire`, `--chunk`, and
+/// `--worker-addrs H:P,H:P,...` to adopt pre-started `cluster-worker`
+/// processes (multi-host fleets) instead of spawning local ones.
+fn serve_cluster_config(args: &Args) -> Result<Option<ClusterServeConfig>> {
+    let ranks = args.usize_or("ranks", 0)?;
+    let wire = WireFormat::parse(args.get_or("wire", "bin"))?;
+    let chunk = args.usize_or("chunk", 0)?;
+    let addrs = match args.get("worker-addrs") {
+        Some(list) => Some(
+            list.split(',')
+                .map(|s| {
+                    // ToSocketAddrs, not SocketAddr::parse: multi-host
+                    // fleets name their workers by hostname.
+                    use std::net::ToSocketAddrs;
+                    let s = s.trim();
+                    s.to_socket_addrs()
+                        .map_err(|e| anyhow::anyhow!("--worker-addrs entry {s:?}: {e}"))?
+                        .next()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("--worker-addrs entry {s:?} resolved to no address")
+                        })
+                })
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        None => None,
+    };
+    if ranks == 0 && addrs.is_none() {
+        return Ok(None);
+    }
+    if let Some(a) = &addrs {
+        if ranks != 0 && ranks != a.len() {
+            bail!(
+                "--ranks {ranks} conflicts with --worker-addrs ({} addresses); \
+                 drop --ranks or make them agree",
+                a.len()
+            );
+        }
+    }
+    let program = std::env::current_exe().context("resolving the spdnn binary path")?;
+    Ok(Some(ClusterServeConfig {
+        ranks: addrs.as_ref().map(|a| a.len()).unwrap_or(ranks),
+        options: ClusterOptions {
+            wire,
+            chunk_rows: if chunk == 0 { None } else { Some(chunk) },
+        },
+        program,
+        addrs,
+    }))
+}
+
+/// `serve --ranks N` drives the native engines only: extract the
+/// resolved spec the worker ranks will load.
+fn cluster_native_spec(backend: &ServeBackend) -> Result<NativeSpec> {
+    match backend {
+        ServeBackend::Native { spec } => Ok(*spec),
+        ServeBackend::Pjrt { .. } => {
+            bail!("serve --ranks drives the native engines (--backend native|csr|ell|sliced|auto)")
+        }
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = runtime_config(args)?;
     let host = args.get_or("host", "127.0.0.1").to_string();
@@ -244,12 +315,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let queue_cap = args.usize_or("queue-cap", 256)?;
     let deadline = duration_ms_arg(args, "deadline-ms", 250.0)?;
     let backend = serve_backend(args, &cfg)?;
+    let cluster = serve_cluster_config(args)?;
     args.finish()?;
 
     // The synthetic challenge instance doubles as the reference dataset
     // clients can address by row ({"op":"infer","row":N}).
     let ds = Dataset::generate(&cfg)?;
-    let model = ServedModel::from_dataset(&ds);
     let server_cfg = ServerConfig {
         host,
         port,
@@ -259,12 +330,49 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let reference = ReferencePanel { features: ds.features.clone(), neurons: cfg.neurons };
-    let handle = Server::start(server_cfg, model, backend, Some(reference))?;
+    let handle = match &cluster {
+        Some(ccfg) => {
+            let spec = cluster_native_spec(&backend)?;
+            Server::start_cluster(
+                server_cfg,
+                ccfg,
+                &ModelSpec::from_config(&cfg),
+                spec,
+                cfg.prune,
+                Some(reference),
+            )?
+        }
+        None => {
+            // Only the in-process path serves from a resident weight
+            // copy; cluster ranks rebuild theirs from the recipe, so
+            // cloning the layers here would only double startup memory.
+            let model = ServedModel::from_dataset(&ds);
+            Server::start(server_cfg, model, backend, Some(reference))?
+        }
+    };
 
+    // The router clamps the replica count to the rank count in cluster
+    // mode; report what actually runs, not what was asked for.
+    let effective_replicas = match &cluster {
+        Some(c) => replicas.min(c.ranks),
+        None => replicas,
+    };
     println!(
-        "spdnn server on {} — {} replicas, model {}x{} k={}, {} reference rows",
+        "spdnn server on {} — {} replicas{}, model {}x{} k={}, {} reference rows",
         handle.addr(),
-        replicas,
+        effective_replicas,
+        match &cluster {
+            Some(c) => format!(
+                " over {} cluster ranks (wire={}, chunk={})",
+                c.ranks,
+                c.options.wire,
+                match c.options.chunk_rows {
+                    Some(rows) => format!("{rows} rows"),
+                    None => "off".to_string(),
+                }
+            ),
+            None => String::new(),
+        },
         cfg.neurons,
         cfg.layers,
         cfg.k,
@@ -276,9 +384,129 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let report = handle.wait();
     println!(
-        "shutdown: drained={} requests={} errors={} shed={}",
-        report.drained, report.requests, report.errors, report.shed
+        "shutdown: drained={} requests={} errors={} shed={} workers_clean={}",
+        report.drained, report.requests, report.errors, report.shed, report.workers_clean
     );
+    Ok(())
+}
+
+/// CI gate for cluster-backed serving: start `serve --ranks N` on a
+/// loopback port, fire `--requests` inference requests at it, and
+/// assert zero protocol errors plus bit-identity against an in-process
+/// sliced-engine server answering the same feature vectors. The final
+/// `/stats` snapshot (rank liveness, per-rank scatter/gather bytes)
+/// goes to `--stats-out` for the CI artifact.
+fn cmd_serve_smoke(args: &Args) -> Result<()> {
+    let cfg = runtime_config(args)?;
+    let requests = args.usize_or("requests", 50)?;
+    let replicas = args.usize_or("replicas", 2)?;
+    let max_batch = args.usize_or("max-batch", 8)?;
+    let max_wait = duration_ms_arg(args, "max-wait-ms", 2.0)?;
+    let stats_out = args.get("stats-out").map(PathBuf::from);
+    let backend = serve_backend(args, &cfg)?;
+    let cluster = serve_cluster_config(args)?
+        .ok_or_else(|| anyhow::anyhow!("serve-smoke needs --ranks N (at least 1)"))?;
+    args.finish()?;
+    let spec = cluster_native_spec(&backend)?;
+
+    let ds = Dataset::generate(&cfg)?;
+    let n = cfg.neurons;
+
+    // The bit-identity oracle: a single-process batcher on the sliced
+    // engine (all native engines serve identical bits; sliced is the
+    // paper-shaped one the acceptance bar names).
+    let oracle_spec = NativeSpec {
+        engine: EngineKind::Sliced,
+        minibatch: cfg.minibatch,
+        slice: 32,
+        threads: 1,
+    };
+    let oracle = InferenceServer::start(
+        ServedModel::from_dataset(&ds),
+        ServeBackend::Native { spec: oracle_spec },
+        BatchPolicy::default(),
+    );
+
+    let server_cfg = ServerConfig {
+        host: "127.0.0.1".to_string(),
+        port: 0,
+        replicas,
+        policy: BatchPolicy { max_batch, max_wait },
+        ..Default::default()
+    };
+    let reference = ReferencePanel { features: ds.features.clone(), neurons: n };
+    let handle = Server::start_cluster(
+        server_cfg,
+        &cluster,
+        &ModelSpec::from_config(&cfg),
+        spec,
+        cfg.prune,
+        Some(reference),
+    )?;
+    println!(
+        "serve-smoke: {} requests against {} ({} replicas over {} ranks, wire={})",
+        requests,
+        handle.addr(),
+        replicas,
+        cluster.ranks,
+        cluster.options.wire
+    );
+
+    let mut client = Client::connect(handle.addr())?;
+    let mut mismatches = 0usize;
+    let mut protocol_errors = 0usize;
+    for i in 0..requests {
+        let row = i % cfg.batch;
+        let feats = ds.features[row * n..(row + 1) * n].to_vec();
+        let want = oracle.classify(feats.clone()).context("oracle inference")?;
+        match client.call(&Request::infer_features(feats))? {
+            WireResponse::Infer { active, activations, .. } => {
+                let got = activations.unwrap_or_default();
+                let bits_match = got.len() == want.activations.len()
+                    && got
+                        .iter()
+                        .zip(&want.activations)
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                if active != want.active || !bits_match {
+                    eprintln!("request {i} (row {row}): cluster answer diverges from oracle");
+                    mismatches += 1;
+                }
+            }
+            other => {
+                eprintln!("request {i}: unexpected response {other:?}");
+                protocol_errors += 1;
+            }
+        }
+    }
+
+    let stats = match client.call(&Request::Stats)? {
+        WireResponse::Stats(s) => s,
+        other => bail!("stats verb failed: {other:?}"),
+    };
+    if let Some(path) = &stats_out {
+        std::fs::write(path, format!("{stats}\n"))
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("  stats snapshot -> {}", path.display());
+    }
+    oracle.shutdown();
+    let report = handle.shutdown();
+
+    println!(
+        "  requests={} mismatches={mismatches} protocol_errors={protocol_errors} \
+         shed={} drained={} workers_clean={}",
+        report.requests, report.shed, report.drained, report.workers_clean
+    );
+    if mismatches > 0 || protocol_errors > 0 {
+        bail!("serve-smoke failed: {mismatches} mismatches, {protocol_errors} protocol errors");
+    }
+    if !report.drained || !report.workers_clean {
+        bail!(
+            "serve-smoke shutdown was not clean (drained={}, workers_clean={})",
+            report.drained,
+            report.workers_clean
+        );
+    }
+    println!("  SMOKE OK (bit-identical to in-process sliced serving; clean drain)");
     Ok(())
 }
 

@@ -319,6 +319,59 @@ mod tests {
     }
 
     #[test]
+    fn zero_ms_deadline_admits_at_empty_queue_and_sheds_behind_any_depth() {
+        // The epoch edge: a 0-ms deadline. At depth 0 the predicted
+        // queue wait is exactly zero, `0 > 0` is false, and the request
+        // is admitted (it will race the batcher and almost certainly
+        // come back as a deadline error — but that is the *serving*
+        // path's verdict, not admission's). Behind even one in-flight
+        // request the predicted wait is positive and the request sheds.
+        let a = ctl(AdmissionConfig {
+            queue_cap: 100,
+            deadline: Duration::from_secs(1),
+            initial_estimate: Duration::from_millis(10),
+            concurrency: 1,
+        });
+        let zero = Some(Duration::ZERO);
+        let held = AdmissionController::try_admit(&a, zero).expect("depth 0 admits 0ms");
+        match AdmissionController::try_admit(&a, zero) {
+            Err(Rejection::Deadline { predicted, deadline, retry_after }) => {
+                assert_eq!(predicted, Duration::from_millis(10));
+                assert_eq!(deadline, Duration::ZERO);
+                assert_eq!(retry_after, Duration::from_millis(10));
+            }
+            other => panic!("expected Deadline, got {other:?}", other = other.err()),
+        }
+        drop(held);
+        // Queue empty again: the 0-ms deadline is admitted once more.
+        assert!(AdmissionController::try_admit(&a, zero).is_ok());
+    }
+
+    #[test]
+    fn deadline_shorter_than_one_service_time_sheds_behind_depth_one() {
+        // A deadline below the scatter RTT (one service time) can only
+        // be met from an empty queue: with a single request ahead, the
+        // one-wave wait already exceeds it.
+        let a = ctl(AdmissionConfig {
+            queue_cap: 100,
+            deadline: Duration::from_secs(1),
+            initial_estimate: Duration::from_millis(50), // "scatter RTT"
+            concurrency: 4,
+        });
+        let tight = Some(Duration::from_millis(5));
+        let _held = AdmissionController::try_admit(&a, tight).expect("depth 0 admits");
+        match AdmissionController::try_admit(&a, tight) {
+            Err(Rejection::Deadline { predicted, retry_after, .. }) => {
+                // depth 1, concurrency 4 -> one wave of 50ms.
+                assert_eq!(predicted, Duration::from_millis(50));
+                assert_eq!(retry_after, Duration::from_millis(45));
+            }
+            other => panic!("expected Deadline, got {other:?}", other = other.err()),
+        }
+        assert_eq!(a.shed(), 1);
+    }
+
+    #[test]
     fn dropped_ticket_releases_slot() {
         let a = ctl(lenient());
         {

@@ -1,0 +1,497 @@
+//! Cluster-backed serving: batcher replicas whose panels execute on
+//! real worker-rank OS processes instead of in-process engine threads.
+//!
+//! `serve --ranks N` is the paper's §IV.C shape applied to the TCP
+//! serving tier: the server boots `N` `cluster-worker` processes via
+//! `cluster::launcher`, ships the weight recipe once per rank, and
+//! splits the rank fleet across the router's replicas with the same
+//! `partition_even` that shards everything else. Each replica owns a
+//! [`ClusterCoordinator`] over its rank subset and runs the exact
+//! batching loop of the in-process `InferenceServer` — but the panel is
+//! scattered over the replica's ranks (binary wire, optional pipelined
+//! chunking) and gathered back, so admitted requests execute across
+//! process boundaries while admission, deadlines, shedding and drain
+//! stay unchanged above.
+//!
+//! ```text
+//!   router ──► replica 0 (batcher thread) ──► ClusterCoordinator ──► ranks 0..r
+//!          ──► replica 1 (batcher thread) ──► ClusterCoordinator ──► ranks r..N
+//! ```
+//!
+//! **Failure model** — a dead rank degrades its replica, never the
+//! server process:
+//!
+//! * the launcher's [`RankHealth`] flags flip within milliseconds of a
+//!   worker exit (stdout EOF), and every replica consults them *before*
+//!   scattering a batch: a batch is failed fast instead of being
+//!   scattered at a corpse;
+//! * a scatter/gather error mid-panel (connection reset, protocol
+//!   error) fails that panel's requests and marks the replica **lame**;
+//! * the router stops routing to lame replicas (requests re-route to
+//!   the surviving fleet), and `/stats` reports per-replica lameness,
+//!   per-rank liveness and per-rank scatter/gather byte counters.
+//!
+//! **Drain fencing** — a replica's batch thread is sequential: closing
+//! its request channel fences new panels, the in-flight scatter (if
+//! any) completes and is answered, and only then does the thread send
+//! `shutdown` ops to its ranks. The server reaps the worker processes
+//! after every replica thread has joined, so no worker is torn down
+//! under an in-flight scatter.
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cluster::{
+    ClusterCoordinator, ClusterOptions, Launcher, LauncherConfig, ModelSpec, RankHealth,
+};
+use crate::coordinator::batcher::{collect_panel, BatchPolicy, Response};
+use crate::coordinator::NativeSpec;
+use crate::log_warn;
+
+/// How `serve --ranks N` builds and connects its rank fleet.
+#[derive(Clone, Debug)]
+pub struct ClusterServeConfig {
+    /// Worker-rank process count, split across the server's replicas.
+    pub ranks: usize,
+    /// Transport of every replica's coordinator connections (wire
+    /// format, pipelined scatter chunking).
+    pub options: ClusterOptions,
+    /// The spdnn binary worker ranks are spawned from
+    /// (`std::env::current_exe()` in the CLI, `CARGO_BIN_EXE_spdnn` in
+    /// tests).
+    pub program: PathBuf,
+    /// Pre-started worker addresses (multi-host fleets, or a fault
+    /// proxy in tests). When set, nothing is spawned, `ranks` is taken
+    /// from this list, and liveness comes from wire errors only.
+    pub addrs: Option<Vec<SocketAddr>>,
+}
+
+impl ClusterServeConfig {
+    pub fn local(program: PathBuf, ranks: usize) -> ClusterServeConfig {
+        ClusterServeConfig { ranks, options: ClusterOptions::default(), program, addrs: None }
+    }
+}
+
+/// The worker-rank process fleet behind a cluster-backed server: the
+/// launcher (when the server spawned the ranks itself) plus the
+/// addresses the replicas connect to.
+pub struct ClusterFleet {
+    launcher: Option<Launcher>,
+    addrs: Vec<SocketAddr>,
+}
+
+impl ClusterFleet {
+    /// Spawn the rank processes (or adopt the pre-started addresses).
+    pub fn start(cfg: &ClusterServeConfig) -> Result<ClusterFleet> {
+        match &cfg.addrs {
+            Some(addrs) => {
+                if addrs.is_empty() {
+                    bail!("cluster serving needs at least one worker address");
+                }
+                Ok(ClusterFleet { launcher: None, addrs: addrs.clone() })
+            }
+            None => {
+                if cfg.ranks == 0 {
+                    bail!("cluster serving needs at least one worker rank");
+                }
+                let launcher =
+                    Launcher::spawn(&LauncherConfig::local(cfg.program.clone(), cfg.ranks))
+                        .context("spawning cluster serving ranks")?;
+                let addrs = launcher.addrs();
+                Ok(ClusterFleet { launcher: Some(launcher), addrs })
+            }
+        }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.addrs.len()
+    }
+
+    pub fn addrs(&self) -> &[SocketAddr] {
+        &self.addrs
+    }
+
+    /// Eager liveness flags (launcher-spawned fleets only).
+    pub fn health(&self) -> Option<RankHealth> {
+        self.launcher.as_ref().map(|l| l.health())
+    }
+
+    /// Fault-injection hook: kill one rank's process outright.
+    pub fn kill_rank(&mut self, rank: usize) -> Result<()> {
+        match &mut self.launcher {
+            Some(l) => l.kill_rank(rank),
+            None => bail!("rank {rank} was not spawned by this server (pre-started address)"),
+        }
+    }
+
+    /// Reap the worker processes within `timeout`. Call only after
+    /// every replica has shut down (shutdown ops already fenced behind
+    /// the in-flight scatters). Deliberately-killed ranks are already
+    /// reaped and do not count against cleanliness.
+    pub fn wait_exit(self, timeout: Duration) -> Result<()> {
+        match self.launcher {
+            Some(l) => l.wait_exit(timeout),
+            None => Ok(()), // pre-started ranks belong to their starter
+        }
+    }
+}
+
+/// Per-owned-rank serving counters, shared between a replica's batch
+/// thread and the `/stats` snapshot.
+pub struct RankCounters {
+    /// Global rank id (index into the fleet, not the replica subset).
+    pub rank: usize,
+    scatter_bytes: AtomicU64,
+    gather_bytes: AtomicU64,
+    alive: AtomicBool,
+}
+
+impl RankCounters {
+    fn new(rank: usize) -> RankCounters {
+        RankCounters {
+            rank,
+            scatter_bytes: AtomicU64::new(0),
+            gather_bytes: AtomicU64::new(0),
+            alive: AtomicBool::new(true),
+        }
+    }
+
+    pub fn scatter_bytes(&self) -> u64 {
+        self.scatter_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn gather_bytes(&self) -> u64 {
+        self.gather_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn alive(&self) -> bool {
+        self.alive.load(Ordering::Acquire)
+    }
+}
+
+struct PanelRequest {
+    features: Vec<f32>,
+    enqueued: Instant,
+    resp: mpsc::Sender<Result<Response>>,
+}
+
+/// One rank-backed serving replica: the drop-in peer of the in-process
+/// `InferenceServer` whose panels run on a subset of cluster ranks.
+pub struct ClusterReplica {
+    /// `None` once shutdown began (fences new panels).
+    tx: Mutex<Option<mpsc::Sender<PanelRequest>>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+    lame: Arc<AtomicBool>,
+    counters: Arc<Vec<RankCounters>>,
+    neurons: usize,
+}
+
+impl ClusterReplica {
+    /// Connect to `addrs` (global ids `rank_ids`, same order), replicate
+    /// the model on each, and start the batch thread.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start(
+        rank_ids: Vec<usize>,
+        addrs: Vec<SocketAddr>,
+        model: &ModelSpec,
+        spec: NativeSpec,
+        prune: bool,
+        opts: ClusterOptions,
+        policy: BatchPolicy,
+        health: Option<RankHealth>,
+    ) -> Result<ClusterReplica> {
+        if rank_ids.is_empty() || rank_ids.len() != addrs.len() {
+            bail!(
+                "cluster replica needs a non-empty rank subset ({} ids, {} addrs)",
+                rank_ids.len(),
+                addrs.len()
+            );
+        }
+        let mut coordinator = ClusterCoordinator::connect_with(&addrs, opts)?;
+        coordinator.load(model, spec, prune).context("replicating weights on serving ranks")?;
+        let lame = Arc::new(AtomicBool::new(false));
+        let counters: Arc<Vec<RankCounters>> =
+            Arc::new(rank_ids.iter().map(|&r| RankCounters::new(r)).collect());
+        let (tx, rx) = mpsc::channel::<PanelRequest>();
+        let neurons = model.neurons;
+        let handle = {
+            let lame = lame.clone();
+            let counters = counters.clone();
+            std::thread::spawn(move || {
+                replica_loop(coordinator, policy, rx, neurons, lame, counters, health)
+            })
+        };
+        Ok(ClusterReplica {
+            tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(Some(handle)),
+            lame,
+            counters,
+            neurons,
+        })
+    }
+
+    /// Submit one request; returns a receiver for the response.
+    pub fn submit(&self, features: Vec<f32>) -> Result<mpsc::Receiver<Result<Response>>> {
+        if features.len() != self.neurons {
+            bail!("feature vector has {} values, model expects {}", features.len(), self.neurons);
+        }
+        let (rtx, rrx) = mpsc::channel();
+        let guard = self.tx.lock().expect("replica tx lock");
+        let tx = guard.as_ref().ok_or_else(|| anyhow!("replica stopped"))?;
+        tx.send(PanelRequest { features, enqueued: Instant::now(), resp: rtx })
+            .map_err(|_| anyhow!("replica stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Whether this replica has been degraded by a rank failure (the
+    /// router stops routing to it; the server keeps serving on the
+    /// surviving replicas).
+    pub fn is_lame(&self) -> bool {
+        self.lame.load(Ordering::Acquire)
+    }
+
+    /// Per-owned-rank liveness + wire counters for `/stats`.
+    pub fn rank_counters(&self) -> &[RankCounters] {
+        &self.counters
+    }
+
+    /// Fence + drain + stop: close the request channel (no new panels),
+    /// then join the batch thread — which answers any in-flight panel
+    /// and only then sends shutdown ops to its ranks. Safe to call
+    /// more than once.
+    pub fn shutdown(&self) {
+        drop(self.tx.lock().expect("replica tx lock").take());
+        if let Some(h) = self.handle.lock().expect("replica join lock").take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ClusterReplica {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn fail_panel(panel: Vec<PanelRequest>, message: &str) {
+    for req in panel {
+        let _ = req.resp.send(Err(anyhow!("{message}")));
+    }
+}
+
+fn replica_loop(
+    mut coordinator: ClusterCoordinator,
+    policy: BatchPolicy,
+    rx: mpsc::Receiver<PanelRequest>,
+    neurons: usize,
+    lame: Arc<AtomicBool>,
+    counters: Arc<Vec<RankCounters>>,
+    health: Option<RankHealth>,
+) {
+    loop {
+        // The panel forms through the in-process batcher's own
+        // `collect_panel`, so cluster serving changes *where* a panel
+        // runs, never *how* it forms.
+        let panel = match collect_panel(&rx, policy) {
+            Some(p) => p,
+            None => break, // channel closed: drain
+        };
+
+        if lame.load(Ordering::Acquire) {
+            // Stragglers submitted before the router observed the lame
+            // flag: fail fast, never scatter from a degraded replica.
+            fail_panel(panel, "replica is degraded (a cluster rank died); retry");
+            continue;
+        }
+        // Eager death check: the launcher's stdout-EOF flag flips
+        // within milliseconds of a worker exit, so a batch is failed
+        // here instead of being scattered at a dead rank. Every dead
+        // rank is marked (not just the first found), so /stats stays
+        // truthful when several ranks of one subset die together.
+        if let Some(h) = &health {
+            let mut first_dead = None;
+            for c in counters.iter() {
+                if !h.alive(c.rank) {
+                    c.alive.store(false, Ordering::Release);
+                    if first_dead.is_none() {
+                        first_dead = Some(c.rank);
+                    }
+                }
+            }
+            if let Some(rank) = first_dead {
+                lame.store(true, Ordering::Release);
+                fail_panel(
+                    panel,
+                    &format!("cluster rank {rank} died before the batch was scattered"),
+                );
+                continue;
+            }
+        }
+
+        let count = panel.len();
+        let mut y: Vec<f32> = Vec::with_capacity(count * neurons);
+        for r in &panel {
+            y.extend_from_slice(&r.features);
+        }
+        let result = coordinator.run(&y);
+        // Publish cumulative per-rank wire traffic for /stats — also
+        // after a failed panel, which may have scattered bytes before
+        // breaking.
+        for (c, (sent, recv)) in counters.iter().zip(coordinator.rank_bytes()) {
+            c.scatter_bytes.store(sent, Ordering::Relaxed);
+            c.gather_bytes.store(recv, Ordering::Relaxed);
+        }
+        match result {
+            Ok(report) => {
+                // Rebuild the full panel from the compacted gather: a
+                // surviving row's activations are bit-identical to the
+                // unpruned in-process panel (rows are independent
+                // through every layer), and an inactive row's final
+                // relu is exactly +0.0 everywhere — so zeros preserve
+                // bit-identity with single-process serving.
+                let mut cat = 0usize;
+                for (row, req) in panel.into_iter().enumerate() {
+                    let active = report.categories.get(cat) == Some(&row);
+                    let activations = if active {
+                        let a = report.activations[cat * neurons..(cat + 1) * neurons].to_vec();
+                        cat += 1;
+                        a
+                    } else {
+                        vec![0.0f32; neurons]
+                    };
+                    let _ = req.resp.send(Ok(Response {
+                        active,
+                        activations,
+                        batch_size: count,
+                        latency: req.enqueued.elapsed(),
+                    }));
+                }
+            }
+            Err(e) => {
+                // Scatter/gather failed mid-panel (dead rank,
+                // connection reset, protocol error): degrade this
+                // replica, answer the panel, keep the process alive.
+                lame.store(true, Ordering::Release);
+                match &health {
+                    Some(h) => {
+                        for c in counters.iter() {
+                            if !h.alive(c.rank) {
+                                c.alive.store(false, Ordering::Release);
+                            }
+                        }
+                    }
+                    None => {
+                        // Adopted fleets have no launcher flags: probe
+                        // each connection so /stats attributes the
+                        // failure. (run() joined all its scatter
+                        // threads, so the connections are idle; a dead
+                        // or severed one errors immediately.)
+                        for (c, ok) in counters.iter().zip(coordinator.ping_each()) {
+                            if !ok {
+                                c.alive.store(false, Ordering::Release);
+                            }
+                        }
+                    }
+                }
+                log_warn!("cluster replica degraded: {e:#}");
+                fail_panel(panel, &format!("cluster inference failed: {e:#}"));
+            }
+        }
+    }
+    // Drain fence: the loop above answered every in-flight panel before
+    // reaching here, so the shutdown ops cannot race a live scatter. A
+    // dead rank's connection just errors (ignored).
+    coordinator.shutdown();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_rejects_empty_configs() {
+        let cfg = ClusterServeConfig::local(PathBuf::from("/nonexistent/spdnn"), 0);
+        assert!(ClusterFleet::start(&cfg).is_err());
+        let cfg = ClusterServeConfig {
+            addrs: Some(vec![]),
+            ..ClusterServeConfig::local(PathBuf::from("/nonexistent/spdnn"), 2)
+        };
+        assert!(ClusterFleet::start(&cfg).is_err());
+    }
+
+    #[test]
+    fn fleet_adopts_prestarted_addresses_without_spawning() {
+        let addr: SocketAddr = "127.0.0.1:9".parse().unwrap();
+        let cfg = ClusterServeConfig {
+            addrs: Some(vec![addr, addr]),
+            // The program path is never touched when addresses are given.
+            ..ClusterServeConfig::local(PathBuf::from("/nonexistent/spdnn"), 0)
+        };
+        let mut fleet = ClusterFleet::start(&cfg).unwrap();
+        assert_eq!(fleet.ranks(), 2);
+        assert_eq!(fleet.addrs(), &[addr, addr]);
+        assert!(fleet.health().is_none(), "no launcher, no eager flags");
+        assert!(fleet.kill_rank(0).is_err(), "cannot kill what was not spawned");
+        fleet.wait_exit(Duration::from_millis(1)).unwrap();
+    }
+
+    #[test]
+    fn replica_rejects_mismatched_subsets() {
+        let addr: SocketAddr = "127.0.0.1:9".parse().unwrap();
+        let model = ModelSpec {
+            neurons: 4,
+            layers: 2,
+            k: 2,
+            topology: "butterfly".into(),
+            seed: 1,
+            bias: -0.3,
+        };
+        let spec = NativeSpec {
+            engine: crate::engine::EngineKind::Ell,
+            minibatch: 4,
+            slice: 16,
+            threads: 1,
+        };
+        let err = ClusterReplica::start(
+            vec![],
+            vec![],
+            &model,
+            spec,
+            true,
+            ClusterOptions::default(),
+            BatchPolicy::default(),
+            None,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("non-empty rank subset"), "unexpected error: {err}");
+        let err = ClusterReplica::start(
+            vec![0, 1],
+            vec![addr],
+            &model,
+            spec,
+            true,
+            ClusterOptions::default(),
+            BatchPolicy::default(),
+            None,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("non-empty rank subset"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rank_counters_start_alive_and_zero() {
+        let c = RankCounters::new(3);
+        assert_eq!(c.rank, 3);
+        assert!(c.alive());
+        assert_eq!(c.scatter_bytes(), 0);
+        assert_eq!(c.gather_bytes(), 0);
+    }
+}

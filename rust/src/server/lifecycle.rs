@@ -15,21 +15,36 @@
 //! A client can trigger the same sequence remotely with
 //! `{"op":"shutdown"}` — `ServerHandle::wait` (what the CLI sits in)
 //! returns once the drain completes.
+//!
+//! **Cluster mode** (`Server::start_cluster`) adds two things to the
+//! sequence. On the way up, the server boots the worker-rank fleet and
+//! rank-backed replicas before binding the listener. On the way down,
+//! after the in-flight requests drain, the router fences every
+//! replica's in-flight scatter (each replica thread joins only after
+//! answering its current panel and sending shutdown ops to its ranks),
+//! and only then are the worker processes reaped — so no worker is
+//! ever torn down under a live scatter. A rank that dies mid-serve
+//! never takes the server with it: its replica goes lame, the router
+//! re-routes, and the shutdown path skips the corpse.
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::RecvTimeoutError;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::cluster::ModelSpec;
 use crate::coordinator::batcher::{BatchPolicy, ServeBackend, ServedModel};
+use crate::coordinator::NativeSpec;
+use crate::log_warn;
 use crate::util::json::Json;
 
 use super::admission::{AdmissionConfig, AdmissionController};
+use super::cluster_backend::{ClusterFleet, ClusterServeConfig};
 use super::protocol::{InferInput, InferRequest, Request, WireResponse};
 use super::router::ReplicaRouter;
 use super::stats::ServerStats;
@@ -50,6 +65,9 @@ const WRITE_LIMIT: Duration = Duration::from_secs(10);
 /// Longest a reaper waits for the batcher to finish a timed-out request
 /// before abandoning its queue slot.
 const REAP_LIMIT: Duration = Duration::from_secs(60);
+/// Longest the shutdown path waits for worker-rank processes to exit
+/// after their shutdown ops (cluster mode only).
+const WORKER_EXIT_LIMIT: Duration = Duration::from_secs(10);
 
 /// Everything `serve` needs beyond the model itself.
 #[derive(Clone, Debug)]
@@ -113,13 +131,17 @@ struct Shared {
     stop: AtomicBool,
     conns: AtomicUsize,
     max_conns: usize,
+    /// Worker-rank processes behind a cluster-backed server; taken by
+    /// the shutdown path after the replicas have fenced their scatters.
+    fleet: Mutex<Option<ClusterFleet>>,
 }
 
-/// Namespace for [`Server::start`].
+/// Namespace for [`Server::start`] / [`Server::start_cluster`].
 pub struct Server;
 
 impl Server {
-    /// Bind, start the replicas and the accept loop; returns immediately.
+    /// Bind, start in-process replicas and the accept loop; returns
+    /// immediately.
     pub fn start(
         cfg: ServerConfig,
         model: ServedModel,
@@ -127,11 +149,46 @@ impl Server {
         reference: Option<ReferencePanel>,
     ) -> Result<ServerHandle> {
         let router = ReplicaRouter::start(model, backend, cfg.policy, cfg.replicas)?;
+        Server::start_with(cfg, router, None, reference)
+    }
+
+    /// Cluster mode: boot the worker-rank fleet (or adopt pre-started
+    /// addresses), replicate the weight recipe once per rank, split the
+    /// ranks across rank-backed replicas, then bind and serve. The
+    /// handle owns the worker processes; its shutdown path fences
+    /// in-flight scatters before reaping them.
+    pub fn start_cluster(
+        cfg: ServerConfig,
+        cluster: &ClusterServeConfig,
+        model: &ModelSpec,
+        spec: NativeSpec,
+        prune: bool,
+        reference: Option<ReferencePanel>,
+    ) -> Result<ServerHandle> {
+        let fleet = ClusterFleet::start(cluster)?;
+        let router = ReplicaRouter::start_cluster(
+            model,
+            spec,
+            prune,
+            cluster.options,
+            cfg.policy,
+            cfg.replicas,
+            &fleet,
+        )?;
+        Server::start_with(cfg, router, Some(fleet), reference)
+    }
+
+    fn start_with(
+        cfg: ServerConfig,
+        router: ReplicaRouter,
+        fleet: Option<ClusterFleet>,
+        reference: Option<ReferencePanel>,
+    ) -> Result<ServerHandle> {
         let mut acfg = cfg.admission;
         if acfg.concurrency == 0 {
             // The batcher fleet retires up to replicas × panel size
             // requests per service time; give admission that drain rate.
-            acfg.concurrency = (cfg.replicas * cfg.policy.max_batch.max(1)).max(1);
+            acfg.concurrency = (router.replicas() * cfg.policy.max_batch.max(1)).max(1);
         }
         let admission = Arc::new(AdmissionController::new(acfg));
         let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
@@ -146,6 +203,7 @@ impl Server {
             stop: AtomicBool::new(false),
             conns: AtomicUsize::new(0),
             max_conns: cfg.max_conns.max(1),
+            fleet: Mutex::new(fleet),
         });
         let accept = {
             let shared = shared.clone();
@@ -165,6 +223,10 @@ pub struct ShutdownReport {
     pub errors: u64,
     /// Requests rejected by admission control over the server's lifetime.
     pub shed: u64,
+    /// Cluster mode: every (not deliberately killed) worker-rank
+    /// process exited cleanly after its fenced shutdown op. Always
+    /// true for in-process serving.
+    pub workers_clean: bool,
 }
 
 /// Owner handle of a running server.
@@ -191,6 +253,26 @@ impl ServerHandle {
     /// The same payload `{"op":"stats"}` returns, server-side.
     pub fn stats_snapshot(&self) -> Json {
         self.shared.stats.snapshot(&self.shared.admission, &self.shared.router)
+    }
+
+    /// Whether this server executes on cluster ranks.
+    pub fn is_cluster(&self) -> bool {
+        self.shared.router.is_cluster()
+    }
+
+    /// Replicas the router still routes to (not lame).
+    pub fn live_replicas(&self) -> usize {
+        self.shared.router.live_replicas()
+    }
+
+    /// Fault-injection hook (tests and chaos drills): kill one
+    /// worker-rank process outright. The owning replica lame-ducks on
+    /// its next batch; the server keeps serving on the survivors.
+    pub fn kill_rank(&self, rank: usize) -> Result<()> {
+        match self.shared.fleet.lock().expect("fleet lock").as_mut() {
+            Some(f) => f.kill_rank(rank),
+            None => bail!("not a cluster-backed server"),
+        }
     }
 
     /// Block until a client's shutdown op stops the accept loop, then
@@ -223,11 +305,28 @@ impl ServerHandle {
         while self.shared.conns.load(Ordering::Acquire) > 0 && t1.elapsed() < CONN_GRACE {
             std::thread::sleep(Duration::from_millis(2));
         }
+        // Fence before reap: rank-backed replicas answer their in-flight
+        // panel and send shutdown ops to their ranks inside
+        // `router.shutdown()` (each replica thread joins only after
+        // both); the worker processes are reaped strictly afterwards,
+        // so no worker dies under a live scatter.
+        self.shared.router.shutdown();
+        let workers_clean = match self.shared.fleet.lock().expect("fleet lock").take() {
+            Some(fleet) => match fleet.wait_exit(WORKER_EXIT_LIMIT) {
+                Ok(()) => true,
+                Err(e) => {
+                    log_warn!("cluster serving shutdown was not clean: {e:#}");
+                    false
+                }
+            },
+            None => true,
+        };
         ShutdownReport {
             drained: self.shared.admission.depth() == 0,
             requests: self.shared.stats.requests(),
             errors: self.shared.stats.errors(),
             shed: self.shared.admission.shed(),
+            workers_clean,
         }
     }
 }

@@ -12,26 +12,37 @@
 //!   N `InferenceServer` replicas share one `Arc` of the weight panels
 //!   (the paper's weight-duplication model) and split the request
 //!   stream evenly;
+//! * [`cluster_backend`] — rank-backed replicas: `serve --ranks N`
+//!   boots N `cluster-worker` OS processes, splits them across the
+//!   router's replicas, and each replica scatters its panels over its
+//!   rank subset through a `ClusterCoordinator` (a dead rank
+//!   lame-ducks its replica instead of killing the server);
 //! * [`admission`] — bounded in-flight queue with backpressure,
 //!   per-request deadlines and early load shedding;
-//! * [`lifecycle`] — bind/accept/serve plus graceful drain + shutdown;
-//! * [`stats`] — p50/p95/p99 latency, queue depth, shed counts and
-//!   per-replica throughput behind the `{"op":"stats"}` verb.
+//! * [`lifecycle`] — bind/accept/serve plus graceful drain + shutdown
+//!   (cluster drains fence in-flight scatters before reaping workers);
+//! * [`stats`] — p50/p95/p99 latency, queue depth, shed counts,
+//!   per-replica throughput, per-rank liveness and scatter/gather byte
+//!   counters behind the `{"op":"stats"}` verb.
 //!
 //! ```text
 //!   TCP clients ──► protocol ──► admission ──► router ──► batcher replicas
 //!                      │             │            │             │
+//!                      │             │            │       cluster ranks
+//!                      │             │            │       (OS processes)
 //!                      └───────── stats ◄─────────┴── imbalance ┘
 //! ```
 
 pub mod admission;
+pub mod cluster_backend;
 pub mod lifecycle;
 pub mod protocol;
 pub mod router;
 pub mod stats;
 
 pub use admission::{AdmissionConfig, AdmissionController, Rejection, Ticket};
+pub use cluster_backend::{ClusterFleet, ClusterReplica, ClusterServeConfig, RankCounters};
 pub use lifecycle::{ReferencePanel, Server, ServerConfig, ServerHandle, ShutdownReport};
 pub use protocol::{Client, InferInput, InferRequest, Request, WireResponse};
-pub use router::ReplicaRouter;
+pub use router::{RankDetail, ReplicaDetail, ReplicaRouter};
 pub use stats::ServerStats;

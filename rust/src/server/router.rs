@@ -2,30 +2,86 @@
 //!
 //! The paper's multi-GPU model (§IV.C) replicates the weights on every
 //! rank and statically partitions the features. The router reproduces
-//! that shape for serving: every replica is a full `InferenceServer`
-//! holding the same `Arc`-shared weight panels (replication without
-//! copies), and the request stream is sharded by the same
+//! that shape for serving, over either of two replica kinds:
+//!
+//! * **native** — every replica is a full in-process `InferenceServer`
+//!   holding the same `Arc`-shared weight panels (replication without
+//!   copies);
+//! * **cluster** — every replica is a [`ClusterReplica`] owning a
+//!   subset of real worker-rank OS processes; its panels are scattered
+//!   over those ranks and gathered back.
+//!
+//! Either way the request stream is sharded by the same
 //! `partition_even` used for offline batch parallelism — the routing
 //! window has one slot per replica, so consecutive requests interleave
 //! across the fleet (a burst exercises every replica in parallel
 //! instead of filling one replica's panel while the rest idle).
-//! Per-replica routed counts feed the same `imbalance()` metric the
-//! offline coordinator reports.
+//!
+//! Cluster replicas can go **lame** (a rank died): the router skips
+//! them — the slot's request re-routes to the next live replica — and
+//! keeps serving on the survivors; only when every replica is degraded
+//! does submit fail. Per-replica routed counts feed the same
+//! `imbalance()` metric the offline coordinator reports.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::cluster::{ClusterOptions, ModelSpec};
 use crate::coordinator::batcher::{
     BatchPolicy, InferenceServer, Response, ServeBackend, ServedModel,
 };
 use crate::coordinator::partition::{imbalance, partition_even};
+use crate::coordinator::NativeSpec;
 
-/// N weight-sharing `InferenceServer` replicas plus the static routing
-/// table that shards requests across them.
+use super::cluster_backend::{ClusterFleet, ClusterReplica};
+
+/// One routing target: an in-process batcher or a rank-backed one.
+enum ReplicaUnit {
+    Native(InferenceServer),
+    Cluster(ClusterReplica),
+}
+
+impl ReplicaUnit {
+    fn submit(&self, features: Vec<f32>) -> Result<mpsc::Receiver<Result<Response>>> {
+        match self {
+            ReplicaUnit::Native(s) => s.submit(features),
+            ReplicaUnit::Cluster(c) => c.submit(features),
+        }
+    }
+
+    /// Native replicas share the process's fate and are never lame.
+    fn is_lame(&self) -> bool {
+        match self {
+            ReplicaUnit::Native(_) => false,
+            ReplicaUnit::Cluster(c) => c.is_lame(),
+        }
+    }
+}
+
+/// Liveness + wire counters of one rank a replica owns (`/stats`).
+#[derive(Clone, Debug)]
+pub struct RankDetail {
+    pub rank: usize,
+    pub alive: bool,
+    pub scatter_bytes: u64,
+    pub gather_bytes: u64,
+}
+
+/// Introspection snapshot of one replica (`/stats`).
+#[derive(Clone, Debug)]
+pub struct ReplicaDetail {
+    pub routed: u64,
+    pub lame: bool,
+    /// Owned ranks, global ids (empty for in-process replicas).
+    pub ranks: Vec<RankDetail>,
+}
+
+/// N weight-sharing replicas plus the static routing table that shards
+/// requests across them.
 pub struct ReplicaRouter {
-    replicas: Vec<InferenceServer>,
+    units: Vec<ReplicaUnit>,
     /// Request-slot -> replica map derived from `partition_even` over one
     /// routing window (one slot per replica: interleaved assignment).
     slots: Vec<usize>,
@@ -35,9 +91,9 @@ pub struct ReplicaRouter {
 }
 
 impl ReplicaRouter {
-    /// Start `nreplicas` batcher replicas over the shared model. The
-    /// weight panels travel inside `ServedModel`'s `Arc`, so replication
-    /// costs one pointer per replica, not one copy.
+    /// Start `nreplicas` in-process batcher replicas over the shared
+    /// model. The weight panels travel inside `ServedModel`'s `Arc`, so
+    /// replication costs one pointer per replica, not one copy.
     pub fn start(
         model: ServedModel,
         backend: ServeBackend,
@@ -48,6 +104,61 @@ impl ReplicaRouter {
             bail!("replicas must be positive");
         }
         let neurons = model.neurons;
+        let units: Vec<ReplicaUnit> = (0..nreplicas)
+            .map(|_| {
+                ReplicaUnit::Native(InferenceServer::start(model.clone(), backend.clone(), policy))
+            })
+            .collect();
+        Ok(ReplicaRouter::assemble(units, neurons))
+    }
+
+    /// Start rank-backed replicas over `fleet`: the rank list is split
+    /// across the replicas with `partition_even` (every replica owns a
+    /// contiguous, non-empty rank subset — the replica count is clamped
+    /// to the rank count so no replica is an empty shell). Each replica
+    /// connects its own `ClusterCoordinator` and replicates the weight
+    /// recipe on its ranks once, before the first request.
+    pub fn start_cluster(
+        model: &ModelSpec,
+        spec: NativeSpec,
+        prune: bool,
+        opts: ClusterOptions,
+        policy: BatchPolicy,
+        nreplicas: usize,
+        fleet: &ClusterFleet,
+    ) -> Result<ReplicaRouter> {
+        if nreplicas == 0 {
+            bail!("replicas must be positive");
+        }
+        let ranks = fleet.ranks();
+        // ClusterFleet::start guarantees ranks >= 1; clamp the replica
+        // count so every replica owns at least one rank.
+        let nreplicas = nreplicas.min(ranks);
+        let addrs = fleet.addrs();
+        let health = fleet.health();
+        let mut units = Vec::with_capacity(nreplicas);
+        for p in partition_even(ranks, nreplicas) {
+            let rank_ids: Vec<usize> = (p.start..p.start + p.count).collect();
+            let subset = addrs[p.start..p.start + p.count].to_vec();
+            units.push(ReplicaUnit::Cluster(
+                ClusterReplica::start(
+                    rank_ids,
+                    subset,
+                    model,
+                    spec,
+                    prune,
+                    opts,
+                    policy,
+                    health.clone(),
+                )
+                .map_err(|e| anyhow!("starting replica {}: {e:#}", p.worker))?,
+            ));
+        }
+        Ok(ReplicaRouter::assemble(units, model.neurons))
+    }
+
+    fn assemble(units: Vec<ReplicaUnit>, neurons: usize) -> ReplicaRouter {
+        let nreplicas = units.len();
         let window = nreplicas;
         let mut slots = vec![0usize; window];
         for p in partition_even(window, nreplicas) {
@@ -55,27 +166,43 @@ impl ReplicaRouter {
                 slots[s] = p.worker;
             }
         }
-        let replicas: Vec<InferenceServer> = (0..nreplicas)
-            .map(|_| InferenceServer::start(model.clone(), backend.clone(), policy))
-            .collect();
         let routed = (0..nreplicas).map(|_| AtomicU64::new(0)).collect();
-        Ok(ReplicaRouter { replicas, slots, seq: AtomicUsize::new(0), routed, neurons })
+        ReplicaRouter { units, slots, seq: AtomicUsize::new(0), routed, neurons }
     }
 
     pub fn replicas(&self) -> usize {
-        self.replicas.len()
+        self.units.len()
     }
 
     pub fn neurons(&self) -> usize {
         self.neurons
     }
 
+    /// Whether the replicas execute on cluster ranks.
+    pub fn is_cluster(&self) -> bool {
+        self.units.iter().any(|u| matches!(u, ReplicaUnit::Cluster(_)))
+    }
+
+    /// Replicas still routable (not lame).
+    pub fn live_replicas(&self) -> usize {
+        self.units.iter().filter(|u| !u.is_lame()).count()
+    }
+
     /// Route one request; returns the chosen replica and the response
-    /// channel.
+    /// channel. Lame replicas are skipped — their slots re-route to the
+    /// next live replica — so a dead rank degrades capacity, not
+    /// availability.
     pub fn submit(&self, features: Vec<f32>) -> Result<(usize, mpsc::Receiver<Result<Response>>)> {
         let seq = self.seq.fetch_add(1, Ordering::Relaxed);
-        let replica = self.slots[seq % self.slots.len()];
-        let rx = self.replicas[replica].submit(features)?;
+        let primary = self.slots[seq % self.slots.len()];
+        let n = self.units.len();
+        let replica = (0..n)
+            .map(|off| (primary + off) % n)
+            .find(|&r| !self.units[r].is_lame())
+            .ok_or_else(|| {
+                anyhow!("every replica is degraded (all cluster rank subsets lost a rank)")
+            })?;
+        let rx = self.units[replica].submit(features)?;
         self.routed[replica].fetch_add(1, Ordering::Relaxed);
         Ok((replica, rx))
     }
@@ -92,6 +219,31 @@ impl ReplicaRouter {
         self.routed.iter().map(|c| c.load(Ordering::Relaxed)).collect()
     }
 
+    /// Per-replica introspection: routed counts, lameness, and (for
+    /// rank-backed replicas) per-rank liveness + scatter/gather bytes.
+    pub fn details(&self) -> Vec<ReplicaDetail> {
+        self.units
+            .iter()
+            .zip(&self.routed)
+            .map(|(u, routed)| {
+                let ranks = match u {
+                    ReplicaUnit::Native(_) => Vec::new(),
+                    ReplicaUnit::Cluster(c) => c
+                        .rank_counters()
+                        .iter()
+                        .map(|rc| RankDetail {
+                            rank: rc.rank,
+                            alive: rc.alive(),
+                            scatter_bytes: rc.scatter_bytes(),
+                            gather_bytes: rc.gather_bytes(),
+                        })
+                        .collect(),
+                };
+                ReplicaDetail { routed: routed.load(Ordering::Relaxed), lame: u.is_lame(), ranks }
+            })
+            .collect()
+    }
+
     /// max/mean over per-replica routed counts (1.0 = perfectly even) —
     /// the serving-side analog of the coordinator's pruning imbalance.
     pub fn imbalance(&self) -> f64 {
@@ -99,10 +251,19 @@ impl ReplicaRouter {
         imbalance(&counts)
     }
 
-    /// Shut every replica down (pending requests error out).
-    pub fn shutdown(self) {
-        for r in self.replicas {
-            r.shutdown();
+    /// Shut every replica down. In-process replicas drop their pending
+    /// requests; cluster replicas fence in-flight scatters, then send
+    /// shutdown ops to their ranks (the caller reaps the processes
+    /// afterwards).
+    pub fn shutdown(&self) {
+        for u in &self.units {
+            match u {
+                // The in-process batcher drains on drop; an explicit
+                // idempotent stop surface only exists on the cluster
+                // replica, which must fence its scatters.
+                ReplicaUnit::Native(_) => {}
+                ReplicaUnit::Cluster(c) => c.shutdown(),
+            }
         }
     }
 }
@@ -135,6 +296,8 @@ mod tests {
         assert_eq!(router.replicas(), 3);
         // One slot per replica: consecutive requests hit distinct replicas.
         assert_eq!(router.slots, vec![0, 1, 2]);
+        assert!(!router.is_cluster());
+        assert_eq!(router.live_replicas(), 3);
         router.shutdown();
     }
 
@@ -159,6 +322,16 @@ mod tests {
         assert!(counts.iter().all(|&c| c > 0), "both replicas must see work: {counts:?}");
         assert_eq!(counts[0], counts[1], "block round-robin is exactly even: {counts:?}");
         assert!((router.imbalance() - 1.0).abs() < 1e-12);
+        router.shutdown();
+    }
+
+    #[test]
+    fn native_details_are_never_lame_and_rankless() {
+        let (m, _) = model();
+        let router = ReplicaRouter::start(m, native(), policy(), 2).unwrap();
+        let details = router.details();
+        assert_eq!(details.len(), 2);
+        assert!(details.iter().all(|d| !d.lame && d.ranks.is_empty()));
         router.shutdown();
     }
 

@@ -94,18 +94,47 @@ impl ServerStats {
     pub fn snapshot(&self, admission: &AdmissionController, router: &ReplicaRouter) -> Json {
         let uptime = self.uptime_secs();
         let replicas: Vec<Json> = router
-            .routed_counts()
-            .iter()
+            .details()
+            .into_iter()
             .enumerate()
-            .map(|(i, &routed)| {
-                Json::obj(vec![
+            .map(|(i, d)| {
+                let mut pairs = vec![
                     ("replica", Json::Int(i as i64)),
-                    ("routed", Json::Int(routed as i64)),
-                    ("req_per_sec", Json::Num(routed as f64 / uptime.max(1e-9))),
-                ])
+                    ("routed", Json::Int(d.routed as i64)),
+                    ("req_per_sec", Json::Num(d.routed as f64 / uptime.max(1e-9))),
+                    ("lame", Json::Bool(d.lame)),
+                ];
+                if !d.ranks.is_empty() {
+                    let ranks: Vec<Json> = d
+                        .ranks
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("rank", Json::Int(r.rank as i64)),
+                                ("alive", Json::Bool(r.alive)),
+                                ("scatter_bytes", Json::Int(r.scatter_bytes as i64)),
+                                ("gather_bytes", Json::Int(r.gather_bytes as i64)),
+                            ])
+                        })
+                        .collect();
+                    pairs.push(("ranks", Json::Arr(ranks)));
+                }
+                Json::obj(pairs)
             })
             .collect();
-        let mut pairs = vec![
+        // Latency percentiles are emitted unconditionally — zeros before
+        // the first answered request — so bench/trend consumers can
+        // always key into the field instead of probing for it.
+        let s = self.latency_summary().unwrap_or_default();
+        let latency = Json::obj(vec![
+            ("count", Json::Int(s.count as i64)),
+            ("mean", Json::Num(s.mean * 1e3)),
+            ("p50", Json::Num(s.p50 * 1e3)),
+            ("p95", Json::Num(s.p95 * 1e3)),
+            ("p99", Json::Num(s.p99 * 1e3)),
+            ("max", Json::Num(s.max * 1e3)),
+        ]);
+        Json::obj(vec![
             ("uptime_secs", Json::Num(uptime)),
             ("requests", Json::Int(self.requests() as i64)),
             ("errors", Json::Int(self.errors() as i64)),
@@ -116,22 +145,11 @@ impl ServerStats {
             ("draining", Json::Bool(admission.is_draining())),
             ("service_estimate_ms", Json::Num(admission.service_estimate().as_secs_f64() * 1e3)),
             ("imbalance", Json::Num(router.imbalance())),
+            ("cluster", Json::Bool(router.is_cluster())),
+            ("live_replicas", Json::Int(router.live_replicas() as i64)),
             ("replicas", Json::Arr(replicas)),
-        ];
-        if let Some(s) = self.latency_summary() {
-            pairs.push((
-                "latency_ms",
-                Json::obj(vec![
-                    ("count", Json::Int(s.count as i64)),
-                    ("mean", Json::Num(s.mean * 1e3)),
-                    ("p50", Json::Num(s.p50 * 1e3)),
-                    ("p95", Json::Num(s.p95 * 1e3)),
-                    ("p99", Json::Num(s.p99 * 1e3)),
-                    ("max", Json::Num(s.max * 1e3)),
-                ]),
-            ));
-        }
-        Json::obj(pairs)
+            ("latency_ms", latency),
+        ])
     }
 }
 
@@ -194,6 +212,40 @@ mod tests {
         assert_eq!(snap.req_arr("replicas").unwrap().len(), 2);
         assert!(snap.req_f64("latency_ms").is_err()); // nested object, not a number
         assert!(snap.get("latency_ms").unwrap().req_f64("p95").is_ok());
+        assert!(!snap.req("cluster").unwrap().as_bool().unwrap());
+        assert_eq!(snap.req_usize("live_replicas").unwrap(), 2);
+        for r in snap.req_arr("replicas").unwrap() {
+            assert!(!r.req("lame").unwrap().as_bool().unwrap());
+            assert!(r.get("ranks").is_none(), "native replicas own no ranks");
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn latency_field_is_emitted_before_any_request() {
+        // The regression of record: with zero answered requests (e.g. a
+        // server that only ever shed), `latency_ms` used to be omitted
+        // and trend consumers hit a missing key. It must be present,
+        // all-zero, from the very first snapshot.
+        let cfg = RuntimeConfig { neurons: 64, layers: 3, k: 4, batch: 4, ..Default::default() };
+        let ds = Dataset::generate(&cfg).unwrap();
+        let model = ServedModel::from_dataset(&ds);
+        let router = ReplicaRouter::start(
+            model,
+            ServeBackend::native(1, 12),
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+            1,
+        )
+        .unwrap();
+        let admission = Arc::new(AdmissionController::new(AdmissionConfig::default()));
+        let st = ServerStats::new(16);
+        let snap = st.snapshot(&admission, &router);
+        let lat = snap.req("latency_ms").unwrap();
+        assert_eq!(lat.req_usize("count").unwrap(), 0);
+        assert_eq!(lat.req_f64("p50").unwrap(), 0.0);
+        assert_eq!(lat.req_f64("p95").unwrap(), 0.0);
+        assert_eq!(lat.req_f64("p99").unwrap(), 0.0);
+        assert_eq!(lat.req_f64("max").unwrap(), 0.0);
         router.shutdown();
     }
 }

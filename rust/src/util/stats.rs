@@ -1,8 +1,11 @@
 //! Small statistics helpers shared by the bench harness, the metrics
 //! registry and the scaling simulator.
 
-/// Summary statistics over a sample of f64 measurements.
-#[derive(Clone, Debug, PartialEq)]
+/// Summary statistics over a sample of f64 measurements. The `Default`
+/// is the all-zero summary of an empty sample — what introspection
+/// surfaces report before the first observation, so their fields can be
+/// emitted unconditionally.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Summary {
     pub count: usize,
     pub mean: f64,

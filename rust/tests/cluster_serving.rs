@@ -1,0 +1,549 @@
+//! Cluster-backed serving end to end: `Server::start_cluster` routing
+//! real TCP requests onto real worker-rank OS processes, proven under
+//! fault injection via the reusable chaos proxy (`common::chaos`).
+//!
+//! The acceptance bar of ISSUE 5:
+//! * responses from a `--ranks 2` server are bit-identical to
+//!   single-process serving on the sliced engine;
+//! * a stalled rank produces deadline errors + sheds with exact
+//!   `/stats` accounting, and the server recovers when the stall ends;
+//! * a rank killed mid-request lame-ducks its replica (the router
+//!   re-routes; serving continues) and the drain is clean — without
+//!   the server process ever exiting;
+//! * wire-negotiation downgrade: a v1-era json-only peer behind the
+//!   chaos proxy settles on json with no frames lost (property test
+//!   over randomized payloads, chunking and arrival jitter).
+
+mod common;
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use common::chaos::{ChaosProxy, Fault};
+use spdnn::cluster::transport::{read_request, write_reply, ReadOutcome};
+use spdnn::cluster::{
+    ClusterClient, ClusterOptions, ClusterReply, ClusterRequest, Launcher, LauncherConfig,
+    ModelSpec, ShardResult, WireFormat, CONTROL_FRAME_CAP,
+};
+use spdnn::coordinator::batcher::{BatchPolicy, ServeBackend, ServedModel};
+use spdnn::coordinator::NativeSpec;
+use spdnn::data::Dataset;
+use spdnn::engine::EngineKind;
+use spdnn::server::{
+    AdmissionConfig, Client, ClusterServeConfig, InferInput, InferRequest, ReferencePanel,
+    Request, Server, ServerConfig, ServerHandle, WireResponse,
+};
+use spdnn::util::config::RuntimeConfig;
+use spdnn::util::json::Json;
+use spdnn::util::proptest::{self, Runner};
+
+const NEURONS: usize = 64;
+
+fn program() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_spdnn"))
+}
+
+fn small_cfg() -> RuntimeConfig {
+    RuntimeConfig { neurons: NEURONS, layers: 5, k: 4, batch: 12, ..Default::default() }
+}
+
+fn sliced_spec() -> NativeSpec {
+    NativeSpec { engine: EngineKind::Sliced, minibatch: 12, slice: 16, threads: 1 }
+}
+
+fn server_cfg(replicas: usize) -> ServerConfig {
+    ServerConfig {
+        replicas,
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        ..Default::default()
+    }
+}
+
+fn start_cluster_server(
+    cfg: ServerConfig,
+    ds: &Dataset,
+    ccfg: &ClusterServeConfig,
+) -> ServerHandle {
+    let model = ModelSpec::from_config(&ds.cfg);
+    let reference = ReferencePanel { features: ds.features.clone(), neurons: ds.cfg.neurons };
+    Server::start_cluster(cfg, ccfg, &model, sliced_spec(), ds.cfg.prune, Some(reference))
+        .expect("cluster server start")
+}
+
+fn infer_ok(client: &mut Client, req: &Request) -> (bool, Option<Vec<f32>>) {
+    match client.call(req).expect("wire call") {
+        WireResponse::Infer { active, activations, .. } => (active, activations),
+        other => panic!("expected infer response, got {other:?}"),
+    }
+}
+
+fn stats(client: &mut Client) -> Json {
+    match client.call(&Request::Stats).expect("stats call") {
+        WireResponse::Stats(s) => s,
+        other => panic!("expected stats response, got {other:?}"),
+    }
+}
+
+/// Acceptance: the same requests against `serve --ranks 2` and a
+/// single-process sliced-engine server answer with identical activity
+/// flags and bit-identical activations.
+#[test]
+fn cluster_serving_is_bit_identical_to_in_process_sliced_serving() {
+    let cfg = small_cfg();
+    let ds = Dataset::generate(&cfg).unwrap();
+
+    let oracle = Server::start(
+        server_cfg(2),
+        ServedModel::from_dataset(&ds),
+        ServeBackend::Native { spec: sliced_spec() },
+        Some(ReferencePanel { features: ds.features.clone(), neurons: NEURONS }),
+    )
+    .unwrap();
+    let ccfg = ClusterServeConfig::local(program(), 2);
+    let clustered = start_cluster_server(server_cfg(2), &ds, &ccfg);
+    assert!(clustered.is_cluster());
+    assert!(!oracle.is_cluster());
+
+    let mut a = Client::connect(oracle.addr()).unwrap();
+    let mut b = Client::connect(clustered.addr()).unwrap();
+    for pass in 0..2 {
+        for i in 0..cfg.batch {
+            let (want_active, want_acts) = infer_ok(&mut a, &Request::infer_row(i));
+            let (got_active, got_acts) = infer_ok(&mut b, &Request::infer_row(i));
+            assert_eq!(want_active, ds.truth_categories.contains(&i), "oracle sanity row {i}");
+            assert_eq!(got_active, want_active, "pass {pass} row {i}");
+            let want_acts = want_acts.expect("oracle activations");
+            let got_acts = got_acts.expect("cluster activations");
+            assert_eq!(got_acts.len(), want_acts.len(), "pass {pass} row {i}");
+            for (j, (x, y)) in got_acts.iter().zip(&want_acts).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "pass {pass} row {i} value {j}: {x} != {y}");
+            }
+        }
+    }
+    // An explicit feature vector takes the same path.
+    let feats = ds.features[..NEURONS].to_vec();
+    let (want_active, _) = infer_ok(&mut a, &Request::infer_features(feats.clone()));
+    let (got_active, _) = infer_ok(&mut b, &Request::infer_features(feats));
+    assert_eq!(got_active, want_active);
+
+    // Both replicas of the cluster server saw work, and its /stats
+    // carries the per-rank wire counters.
+    let snap = stats(&mut b);
+    assert!(snap.req("cluster").unwrap().as_bool().unwrap());
+    let replicas = snap.req_arr("replicas").unwrap();
+    assert_eq!(replicas.len(), 2);
+    for r in replicas {
+        assert!(r.req_usize("routed").unwrap() > 0, "both replicas must see work");
+        let ranks = r.req_arr("ranks").unwrap();
+        assert_eq!(ranks.len(), 1, "2 ranks over 2 replicas: one each");
+        assert!(ranks[0].req("alive").unwrap().as_bool().unwrap());
+        assert!(ranks[0].req_usize("scatter_bytes").unwrap() > 0);
+        assert!(ranks[0].req_usize("gather_bytes").unwrap() > 0);
+    }
+
+    let ra = oracle.shutdown();
+    assert!(ra.drained);
+    let rb = clustered.shutdown();
+    assert!(rb.drained, "cluster drain must answer everything");
+    assert!(rb.workers_clean, "worker ranks must exit cleanly after the fenced shutdown");
+    assert_eq!(rb.errors, 0);
+}
+
+/// Acceptance: a stalled (not dead) rank. Requests against its replica
+/// exceed their deadlines; the occupied queue slot sheds the traffic
+/// behind it with exact accounting; nobody is lame (a stall is not a
+/// death) and the server recovers the moment the stall clears.
+#[test]
+fn stalled_rank_sheds_and_deadline_errors_with_correct_accounting() {
+    let cfg = small_cfg();
+    let ds = Dataset::generate(&cfg).unwrap();
+    let launcher = Launcher::spawn(&LauncherConfig::local(program(), 2)).unwrap();
+    let worker_addrs = launcher.addrs();
+    let proxy = ChaosProxy::start(worker_addrs[0]);
+    let ccfg = ClusterServeConfig {
+        ranks: 2,
+        options: ClusterOptions::default(),
+        program: program(),
+        addrs: Some(vec![proxy.addr(), worker_addrs[1]]),
+    };
+    let mut scfg = server_cfg(2);
+    // One queue slot: the stalled request's held slot must shed
+    // everything behind it, deterministically.
+    scfg.admission = AdmissionConfig { queue_cap: 1, ..Default::default() };
+    let handle = start_cluster_server(scfg, &ds, &ccfg);
+    let mut client = Client::connect(handle.addr()).unwrap();
+
+    // Healthy pass through both replicas (seq 0 -> replica 0, 1 -> 1).
+    for i in 0..2 {
+        let (active, _) = infer_ok(&mut client, &Request::infer_row(i));
+        assert_eq!(active, ds.truth_categories.contains(&i), "healthy row {i}");
+    }
+
+    // Stall rank 0's request path: bytes still flow, just 1.5s late.
+    let stall = Duration::from_millis(1500);
+    proxy.set_fault(Fault::Delay { after: proxy.messages(), delay: stall });
+
+    // seq 2 -> replica 0: admitted (queue empty), then the 100ms
+    // deadline fires long before the stalled scatter answers.
+    let resp = client
+        .call(&Request::Infer(InferRequest {
+            input: InferInput::Row(0),
+            deadline_ms: Some(100.0),
+            want_activations: false,
+        }))
+        .unwrap();
+    match resp {
+        WireResponse::Error { message } => {
+            assert!(message.contains("deadline exceeded"), "unexpected error: {message}");
+        }
+        other => panic!("expected a deadline error, got {other:?}"),
+    }
+
+    // The timed-out request still occupies its queue slot (the batcher
+    // holds it until the stalled panel completes): a 1-deep queue now
+    // sheds everything.
+    for i in 0..3 {
+        match client.call(&Request::infer_row(1)).unwrap() {
+            WireResponse::Shed { reason, retry_after_ms } => {
+                assert_eq!(reason, "queue full", "shed {i}");
+                assert!(retry_after_ms > 0.0, "shed {i}");
+            }
+            other => panic!("expected a queue-full shed, got {other:?}"),
+        }
+    }
+
+    // Exact accounting while the stall is still in progress.
+    let snap = stats(&mut client);
+    assert_eq!(snap.req_usize("shed").unwrap(), 3);
+    assert_eq!(snap.req_usize("errors").unwrap(), 1);
+    assert_eq!(snap.req_usize("queue_depth").unwrap(), 1, "the reaped slot is still held");
+    assert!(snap.req("cluster").unwrap().as_bool().unwrap());
+    assert_eq!(snap.req_usize("live_replicas").unwrap(), 2, "a stall is not a death");
+    assert!(snap.get("latency_ms").unwrap().req_f64("p95").is_ok());
+    for r in snap.req_arr("replicas").unwrap() {
+        assert!(!r.req("lame").unwrap().as_bool().unwrap());
+        let ranks = r.req_arr("ranks").unwrap();
+        assert!(ranks[0].req("alive").unwrap().as_bool().unwrap());
+    }
+
+    // Clear the stall; once the in-flight panel drains the slot frees
+    // and both replicas serve again.
+    proxy.set_fault(Fault::None);
+    std::thread::sleep(stall + Duration::from_millis(1500));
+    for _ in 0..2 {
+        let (_, acts) = infer_ok(&mut client, &Request::infer_row(0));
+        assert!(acts.is_some());
+    }
+
+    assert_eq!(client.call(&Request::Shutdown).unwrap(), WireResponse::Draining);
+    let report = handle.wait();
+    assert!(report.drained);
+    assert!(report.workers_clean);
+    assert_eq!(report.shed, 3);
+    // The pre-started workers got their fenced shutdown ops through the
+    // replicas and exit cleanly.
+    launcher.wait_exit(Duration::from_secs(10)).expect("workers drain cleanly");
+}
+
+/// Acceptance: a rank killed mid-request. The in-flight request is
+/// answered with an error (never silently dropped), the owning replica
+/// lame-ducks, the router re-routes everything else, and the final
+/// drain is clean — the server process never exits.
+#[test]
+fn killed_rank_mid_request_lame_ducks_and_drains_cleanly() {
+    let cfg = small_cfg();
+    let ds = Dataset::generate(&cfg).unwrap();
+    let ccfg = ClusterServeConfig::local(program(), 2);
+    let mut scfg = server_cfg(2);
+    // A wide batching window so the kill lands while the request is
+    // still in flight inside replica 0 (even on a heavily loaded CI
+    // box, 40ms of sleep stays far inside 300ms).
+    scfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(300) };
+    let handle = start_cluster_server(scfg, &ds, &ccfg);
+    let addr = handle.addr();
+    assert!(handle.is_cluster());
+    assert_eq!(handle.live_replicas(), 2);
+
+    let mut client = Client::connect(addr).unwrap();
+    for i in 0..2 {
+        let (active, _) = infer_ok(&mut client, &Request::infer_row(i));
+        assert_eq!(active, ds.truth_categories.contains(&i), "healthy row {i}");
+    }
+
+    // seq 2 -> replica 0. Kill rank 0 while the request sits in the
+    // 300ms batching window; the eager health flag (flipped inside
+    // kill_rank) fails the panel before any scatter.
+    let t = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.call(&Request::infer_row(0)).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(40));
+    handle.kill_rank(0).expect("fault injection");
+    match t.join().expect("in-flight client") {
+        WireResponse::Error { message } => {
+            assert!(
+                message.contains("died") || message.contains("failed"),
+                "the in-flight request must surface the dead rank: {message}"
+            );
+        }
+        other => panic!("expected an error for the in-flight request, got {other:?}"),
+    }
+
+    // Replica 0 is lame; every subsequent request re-routes to replica
+    // 1 and succeeds.
+    assert_eq!(handle.live_replicas(), 1);
+    for i in 0..4 {
+        let (active, _) = infer_ok(&mut client, &Request::infer_row(i % cfg.batch));
+        assert_eq!(active, ds.truth_categories.contains(&(i % cfg.batch)), "re-routed row");
+    }
+
+    let snap = stats(&mut client);
+    let replicas = snap.req_arr("replicas").unwrap();
+    let lame: Vec<bool> =
+        replicas.iter().map(|r| r.req("lame").unwrap().as_bool().unwrap()).collect();
+    assert_eq!(lame, vec![true, false]);
+    let r0_ranks = replicas[0].req_arr("ranks").unwrap();
+    assert!(!r0_ranks[0].req("alive").unwrap().as_bool().unwrap(), "rank 0 reported dead");
+    let r1_ranks = replicas[1].req_arr("ranks").unwrap();
+    assert!(r1_ranks[0].req("alive").unwrap().as_bool().unwrap(), "rank 1 alive");
+    assert_eq!(snap.req_usize("live_replicas").unwrap(), 1);
+
+    // Remote drain: replica 1 fences + shuts its rank down, the killed
+    // rank is excluded from cleanliness, and everything was answered.
+    assert_eq!(client.call(&Request::Shutdown).unwrap(), WireResponse::Draining);
+    let report = handle.wait();
+    assert!(report.drained, "drain must answer all in-flight work");
+    assert!(report.workers_clean, "the surviving rank must exit cleanly");
+}
+
+/// The chaos proxy's frame-surgery faults: a truncated or corrupted
+/// scatter frame degrades the replica (detected at the protocol or
+/// gather-cover layer — never silently) while the server keeps serving.
+#[test]
+fn truncated_and_corrupt_frames_degrade_the_replica_not_the_server() {
+    let cfg = small_cfg();
+    let ds = Dataset::generate(&cfg).unwrap();
+    for kind in ["truncate", "corrupt"] {
+        let launcher = Launcher::spawn(&LauncherConfig::local(program(), 2)).unwrap();
+        let worker_addrs = launcher.addrs();
+        let proxy = ChaosProxy::start(worker_addrs[0]);
+        let ccfg = ClusterServeConfig {
+            ranks: 2,
+            options: ClusterOptions::default(),
+            program: program(),
+            addrs: Some(vec![proxy.addr(), worker_addrs[1]]),
+        };
+        let handle = start_cluster_server(server_cfg(2), &ds, &ccfg);
+        let mut client = Client::connect(handle.addr()).unwrap();
+        for i in 0..2 {
+            infer_ok(&mut client, &Request::infer_row(i));
+        }
+
+        let at = proxy.messages();
+        proxy.set_fault(match kind {
+            "truncate" => Fault::Truncate { index: at, keep: 12 },
+            _ => Fault::Corrupt { index: at },
+        });
+        match client.call(&Request::infer_row(0)).unwrap() {
+            WireResponse::Error { message } => {
+                assert!(message.contains("failed"), "{kind}: unexpected error: {message}");
+            }
+            other => panic!("{kind}: expected an error, got {other:?}"),
+        }
+        for _ in 0..3 {
+            infer_ok(&mut client, &Request::infer_row(1));
+        }
+        assert_eq!(handle.live_replicas(), 1, "{kind}: replica 0 must be lame");
+        let report = handle.shutdown();
+        assert!(report.drained, "{kind}");
+        // rank 0's connection broke mid-fault so it cannot receive a
+        // shutdown op; dropping the launcher reaps it. Cleanliness of a
+        // full fenced drain is asserted by the other tests.
+        drop(launcher);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire-negotiation downgrade (satellite): v1-era json-only peers
+// ---------------------------------------------------------------------------
+
+fn result_reply(start: usize, count: usize) -> ClusterReply {
+    ClusterReply::Result(Box::new(ShardResult {
+        rank: 0,
+        start,
+        count,
+        categories: vec![],
+        activations: vec![],
+        live_per_layer: vec![],
+        layer_secs: vec![],
+        edges_traversed: 0,
+        secs: 0.0,
+    }))
+}
+
+/// A protocol-v1-era peer: understands both framings on the read side
+/// (so a stray binary frame is *observed*, not hung on), but answers
+/// `hello` with `version:1, wire:json` and only ever speaks JSON.
+/// Every message it reads is reported back to the test together with
+/// the wire it arrived in.
+fn v1_json_peer(
+    listener: TcpListener,
+    neurons: usize,
+    tx: mpsc::Sender<(String, WireFormat, Option<Vec<f32>>)>,
+) {
+    use std::io::{BufReader, Write};
+    let Ok((stream, _)) = listener.accept() else { return };
+    stream.set_nodelay(true).ok();
+    let Ok(mut writer) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(stream);
+    // (start, rows, chunks left) of an open chunked scatter.
+    let mut pending: Option<(usize, usize, usize)> = None;
+    loop {
+        let (req, wire) = match read_request(&mut reader, CONTROL_FRAME_CAP) {
+            Ok(ReadOutcome::Msg(req, wire)) => (req, wire),
+            Ok(ReadOutcome::Invalid(e, wire)) => {
+                let _ = tx.send((format!("invalid: {e:#}"), wire, None));
+                return;
+            }
+            Ok(ReadOutcome::Eof) | Err(_) => return,
+        };
+        let payload = match &req {
+            ClusterRequest::Shard { features, .. }
+            | ClusterRequest::ShardChunk { features, .. } => Some(features.clone()),
+            _ => None,
+        };
+        let _ = tx.send((req.op().to_string(), wire, payload));
+        let reply = match req {
+            ClusterRequest::Hello { .. } => {
+                Some(ClusterReply::Hello { version: 1, wire: WireFormat::Json })
+            }
+            ClusterRequest::Ping => Some(ClusterReply::Pong { version: 1 }),
+            ClusterRequest::Load { model, .. } => Some(ClusterReply::Loaded {
+                rank: 0,
+                neurons: model.neurons,
+                layers: model.layers,
+            }),
+            ClusterRequest::Shard { start, features } => {
+                Some(result_reply(start, features.len() / neurons.max(1)))
+            }
+            ClusterRequest::ShardBegin { start, rows, chunks } => {
+                if chunks == 0 {
+                    Some(result_reply(start, rows))
+                } else {
+                    pending = Some((start, rows, chunks));
+                    None
+                }
+            }
+            ClusterRequest::ShardChunk { .. } => {
+                let done = match &mut pending {
+                    Some((_, _, left)) => {
+                        *left -= 1;
+                        Some(*left == 0)
+                    }
+                    None => None,
+                };
+                match done {
+                    None => Some(ClusterReply::Error { message: "no open shard stream".into() }),
+                    Some(false) => None,
+                    Some(true) => {
+                        let (start, rows, _) = pending.take().expect("open stream");
+                        Some(result_reply(start, rows))
+                    }
+                }
+            }
+            ClusterRequest::Shutdown => {
+                let _ = write_reply(&mut writer, &ClusterReply::Bye, WireFormat::Json);
+                let _ = writer.flush();
+                return;
+            }
+        };
+        if let Some(reply) = reply {
+            if write_reply(&mut writer, &reply, WireFormat::Json).is_err() {
+                return;
+            }
+            let _ = writer.flush();
+        }
+    }
+}
+
+/// Satellite property test: a bin-default coordinator connecting to a
+/// v1-only (json) peer — through the chaos proxy with randomized
+/// arrival jitter — must settle on json, and every subsequent message
+/// (ping, whole or chunked scatters with random payloads) must arrive
+/// on the json wire with its f32 payload bit-intact: no frames lost,
+/// no frames mis-encoded.
+#[test]
+fn v1_json_only_peer_downgrades_bin_coordinator_losslessly() {
+    let neurons = 8;
+    Runner::new(12, 0xD0C5).run("wire-downgrade", |rng| {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("peer listener");
+        let peer_addr = listener.local_addr().expect("peer addr");
+        let (tx, rx) = mpsc::channel();
+        let peer = std::thread::spawn(move || v1_json_peer(listener, neurons, tx));
+        // Randomized hello/frame arrival: every message is held for a
+        // random few milliseconds by the proxy.
+        let jitter = Duration::from_millis(proptest::usize_in(rng, 0, 15) as u64);
+        let proxy = ChaosProxy::start_with(peer_addr, Fault::Delay { after: 0, delay: jitter });
+
+        let mut client = match ClusterClient::connect(proxy.addr(), WireFormat::Bin) {
+            Ok(c) => c,
+            Err(e) => return Err(format!("handshake failed: {e:#}")),
+        };
+        if client.wire() != WireFormat::Json {
+            return Err(format!("settled on {}, expected json", client.wire()));
+        }
+        if let Err(e) = client.ping() {
+            return Err(format!("ping after downgrade: {e:#}"));
+        }
+
+        let rows = proptest::usize_in(rng, 1, 5);
+        let feats = proptest::vec_f32(rng, rows * neurons, -8.0, 8.0);
+        let chunk_rows = *proptest::choose(rng, &[None, Some(2)]);
+        let reply = match client.send_shard(3, &feats, neurons, chunk_rows) {
+            Ok(r) => r,
+            Err(e) => return Err(format!("scatter after downgrade: {e:#}")),
+        };
+        match reply {
+            ClusterReply::Result(r) => {
+                if r.start != 3 || r.count != rows {
+                    let (s, c) = (r.start, r.count);
+                    return Err(format!("peer echoed [{s}, +{c}), sent [3, +{rows})"));
+                }
+            }
+            other => return Err(format!("unexpected scatter reply {other:?}")),
+        }
+        match client.call(&ClusterRequest::Shutdown) {
+            Ok(ClusterReply::Bye) => {}
+            Ok(other) => return Err(format!("unexpected shutdown reply {other:?}")),
+            Err(e) => return Err(format!("shutdown: {e:#}")),
+        }
+        peer.join().map_err(|_| "peer thread panicked".to_string())?;
+
+        // Everything the peer observed must be json-framed, and the
+        // scatter payload must re-assemble bit-exactly.
+        let msgs: Vec<(String, WireFormat, Option<Vec<f32>>)> = rx.try_iter().collect();
+        if msgs.is_empty() {
+            return Err("peer observed no messages".into());
+        }
+        let mut received: Vec<f32> = Vec::new();
+        for (op, wire, payload) in &msgs {
+            if *wire != WireFormat::Json {
+                return Err(format!("{op} arrived as {wire} after a json downgrade"));
+            }
+            if op.starts_with("invalid") {
+                return Err(format!("peer could not parse a message: {op}"));
+            }
+            if let Some(p) = payload {
+                received.extend_from_slice(p);
+            }
+        }
+        if received.len() != feats.len()
+            || received.iter().zip(&feats).any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return Err("scatter payload lost or altered across the downgrade".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,235 @@
+//! A fault-injection TCP proxy for the cluster wire protocol.
+//!
+//! The proxy sits between a coordinator (rank 0 / a serving replica)
+//! and one worker rank, understands the protocol's message boundaries —
+//! JSON lines and `spdnn-clu1` binary frames, told apart by the first
+//! byte — and can delay, truncate, corrupt or sever the
+//! coordinator→worker stream on a chosen message. The worker→
+//! coordinator direction is piped verbatim, so a fault always models
+//! something happening to the *request* path of one rank.
+//!
+//! Faults are installed at runtime with [`ChaosProxy::set_fault`], so a
+//! test can bring a cluster up cleanly (hello/load untouched) and then
+//! break exactly the message it wants to break. Message indices are
+//! global across the proxy's lifetime ([`ChaosProxy::messages`] reads
+//! the current count).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// What the proxy does to the coordinator→worker stream.
+#[derive(Clone, Copy, Debug)]
+pub enum Fault {
+    /// Forward everything untouched.
+    None,
+    /// Hold every message from index `after` onwards for `delay`
+    /// before forwarding it (a stalled rank: the connection lives, the
+    /// bytes just do not arrive).
+    Delay { after: usize, delay: Duration },
+    /// Forward messages before index `after`, then shut both stream
+    /// halves down (a severed rank: connection reset mid-protocol).
+    Sever { after: usize },
+    /// Forward only the first `keep` bytes of message `index`, then
+    /// sever (a truncated frame: the peer sees a half message + EOF).
+    Truncate { index: usize, keep: usize },
+    /// Flip one byte of message `index`'s leading metadata (a
+    /// corrupted frame: framing survives, but the message fails
+    /// protocol-level validation). For a binary frame the flipped byte
+    /// is the first payload word — a shard's `start` — so the worker
+    /// echoes a range the gather's cover checks must reject; for a
+    /// JSON line it is an early structural character, so parsing
+    /// fails. Deliberately NOT a mid-panel f32 byte: that would be
+    /// silent data corruption no protocol layer can see.
+    Corrupt { index: usize },
+}
+
+/// One listening fault proxy in front of one worker-rank address.
+pub struct ChaosProxy {
+    addr: SocketAddr,
+    fault: Arc<Mutex<Fault>>,
+    messages: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ChaosProxy {
+    /// Listen on a fresh loopback port, forwarding to `target`.
+    pub fn start(target: SocketAddr) -> ChaosProxy {
+        ChaosProxy::start_with(target, Fault::None)
+    }
+
+    pub fn start_with(target: SocketAddr, fault: Fault) -> ChaosProxy {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("binding chaos proxy");
+        let addr = listener.local_addr().expect("proxy address");
+        listener.set_nonblocking(true).expect("nonblocking proxy listener");
+        let fault = Arc::new(Mutex::new(fault));
+        let messages = Arc::new(AtomicUsize::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        {
+            let fault = fault.clone();
+            let messages = messages.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || accept_loop(listener, target, fault, messages, stop));
+        }
+        ChaosProxy { addr, fault, messages, stop }
+    }
+
+    /// The address a coordinator should connect to instead of the rank.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Swap the active fault (applies to the next message read).
+    pub fn set_fault(&self, fault: Fault) {
+        *self.fault.lock().expect("fault lock") = fault;
+    }
+
+    /// Coordinator→worker messages seen so far (all connections).
+    pub fn messages(&self) -> usize {
+        self.messages.load(Ordering::SeqCst)
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    target: SocketAddr,
+    fault: Arc<Mutex<Fault>>,
+    messages: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+) {
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((client, _)) => {
+                let fault = fault.clone();
+                let messages = messages.clone();
+                std::thread::spawn(move || forward(client, target, fault, messages));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn forward(
+    client: TcpStream,
+    target: SocketAddr,
+    fault: Arc<Mutex<Fault>>,
+    messages: Arc<AtomicUsize>,
+) {
+    let Ok(upstream) = TcpStream::connect(target) else {
+        let _ = client.shutdown(Shutdown::Both);
+        return;
+    };
+    client.set_nodelay(true).ok();
+    upstream.set_nodelay(true).ok();
+    // Worker→coordinator: verbatim pipe on its own thread.
+    {
+        let Ok(up_read) = upstream.try_clone() else { return };
+        let Ok(down_write) = client.try_clone() else { return };
+        std::thread::spawn(move || pipe_raw(up_read, down_write));
+    }
+    // Coordinator→worker: message-framed, fault-aware.
+    let mut writer = upstream;
+    let mut reader = BufReader::new(client);
+    loop {
+        let mut msg = match read_message(&mut reader) {
+            Some(m) if !m.is_empty() => m,
+            _ => break,
+        };
+        let index = messages.fetch_add(1, Ordering::SeqCst);
+        let f = *fault.lock().expect("fault lock");
+        match f {
+            Fault::None => {}
+            Fault::Delay { after, delay } => {
+                if index >= after {
+                    std::thread::sleep(delay);
+                }
+            }
+            Fault::Sever { after } => {
+                if index >= after {
+                    break;
+                }
+            }
+            Fault::Truncate { index: at, keep } => {
+                if index == at {
+                    let keep = keep.min(msg.len());
+                    let _ = writer.write_all(&msg[..keep]);
+                    let _ = writer.flush();
+                    break;
+                }
+            }
+            Fault::Corrupt { index: at } => {
+                if index == at {
+                    let flip = if msg[0] == b'S' && msg.len() > 9 { 9 } else { 2 };
+                    msg[flip.min(msg.len() - 1)] ^= 0x55;
+                }
+            }
+        }
+        if writer.write_all(&msg).is_err() || writer.flush().is_err() {
+            break;
+        }
+    }
+    let _ = writer.shutdown(Shutdown::Both);
+    let _ = reader.get_ref().shutdown(Shutdown::Both);
+}
+
+fn pipe_raw(mut from: TcpStream, mut to: TcpStream) {
+    let mut buf = [0u8; 8192];
+    loop {
+        match from.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                if to.write_all(&buf[..n]).is_err() || to.flush().is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    let _ = to.shutdown(Shutdown::Both);
+    let _ = from.shutdown(Shutdown::Both);
+}
+
+/// Read one protocol message off the stream: a `spdnn-clu1` frame when
+/// the first byte is the magic's `S`, a newline-terminated JSON line
+/// otherwise. Returns `None` on EOF or a broken stream.
+fn read_message(r: &mut BufReader<TcpStream>) -> Option<Vec<u8>> {
+    let first = {
+        let buf = r.fill_buf().ok()?;
+        if buf.is_empty() {
+            return None;
+        }
+        buf[0]
+    };
+    if first == b'S' {
+        // magic(4) + kind(1) + u32 len(4), then the payload.
+        let mut header = [0u8; 9];
+        r.read_exact(&mut header).ok()?;
+        let len = u32::from_le_bytes([header[5], header[6], header[7], header[8]]) as usize;
+        let mut msg = Vec::with_capacity(9 + len);
+        msg.extend_from_slice(&header);
+        let mut payload = vec![0u8; len];
+        r.read_exact(&mut payload).ok()?;
+        msg.extend_from_slice(&payload);
+        Some(msg)
+    } else {
+        let mut line = Vec::new();
+        let n = r.read_until(b'\n', &mut line).ok()?;
+        if n == 0 {
+            return None;
+        }
+        Some(line)
+    }
+}

@@ -1,0 +1,6 @@
+//! Shared helpers for the integration-test binaries. Each test binary
+//! compiles its own copy (`mod common;`), so not every helper is used
+//! by every binary.
+#![allow(dead_code)]
+
+pub mod chaos;

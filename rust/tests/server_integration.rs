@@ -99,6 +99,7 @@ fn loopback_roundtrip_and_replica_sharding() {
     assert!(report.drained, "all in-flight work answered");
     assert_eq!(report.requests, 17);
     assert_eq!(report.errors, 0);
+    assert!(report.workers_clean, "in-process serving has no workers to reap");
 }
 
 #[test]
@@ -187,6 +188,94 @@ fn per_request_deadline_is_enforced() {
     }
     let report = handle.shutdown();
     assert_eq!(report.errors, 1);
+}
+
+#[test]
+fn epoch_edge_deadlines_are_clamped_and_answered_not_panicked() {
+    // The deadline math at the epoch edge: a 0-ms deadline is admitted
+    // against an empty queue (the predicted wait is exactly zero) and
+    // must come back as a clean deadline error — never a panic, never a
+    // hang. A negative deadline clamps to zero and behaves identically.
+    let (handle, ds) = start(ServerConfig {
+        replicas: 1,
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        ..Default::default()
+    });
+    let mut client = Client::connect(handle.addr()).unwrap();
+    for dl in [0.0, -5.0] {
+        let resp = client
+            .call(&Request::Infer(InferRequest {
+                input: InferInput::Features(ds.features[..NEURONS].to_vec()),
+                deadline_ms: Some(dl),
+                want_activations: false,
+            }))
+            .unwrap();
+        match resp {
+            WireResponse::Error { message } => {
+                assert!(
+                    message.contains("deadline exceeded after 0.0ms"),
+                    "deadline_ms={dl}: {message}"
+                );
+            }
+            other => panic!("deadline_ms={dl}: expected a deadline error, got {other:?}"),
+        }
+    }
+    // The abandoned slots are reaped once their panels complete; normal
+    // traffic flows immediately after.
+    assert!(matches!(
+        client.call(&Request::infer_features(ds.features[..NEURONS].to_vec())).unwrap(),
+        WireResponse::Infer { .. }
+    ));
+    let report = handle.shutdown();
+    assert_eq!(report.errors, 2);
+    assert!(report.drained);
+}
+
+#[test]
+fn deadline_shorter_than_backend_service_time_is_shed_once_queued() {
+    // A deadline below one backend service time (the cluster analog:
+    // shorter than one scatter RTT) is only meetable from an empty
+    // queue. Occupy the queue with a slow panel, and the tight-deadline
+    // request must be shed up front with the deadline reason — not
+    // admitted into guaranteed lateness.
+    let (handle, _ds) = start(ServerConfig {
+        replicas: 1,
+        policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(300) },
+        admission: AdmissionConfig {
+            queue_cap: 16,
+            deadline: Duration::from_secs(10),
+            // Pretend the backend needs 200ms per request: any queued
+            // work predicts a >=200ms wait.
+            initial_estimate: Duration::from_millis(200),
+            concurrency: 1,
+        },
+        ..Default::default()
+    });
+    let addr = handle.addr();
+    // Occupy one queue slot (its panel stays open for 300ms).
+    let holder = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.call(&Request::infer_features(vec![1.0; NEURONS])).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    let mut client = Client::connect(addr).unwrap();
+    let resp = client
+        .call(&Request::Infer(InferRequest {
+            input: InferInput::Features(vec![0.5; NEURONS]),
+            deadline_ms: Some(20.0), // < one 200ms service time
+            want_activations: false,
+        }))
+        .unwrap();
+    match resp {
+        WireResponse::Shed { reason, retry_after_ms } => {
+            assert_eq!(reason, "deadline unmeetable");
+            assert!(retry_after_ms > 0.0);
+        }
+        other => panic!("expected a deadline shed, got {other:?}"),
+    }
+    assert!(matches!(holder.join().unwrap(), WireResponse::Infer { .. }));
+    let report = handle.shutdown();
+    assert_eq!(report.shed, 1);
 }
 
 #[test]
