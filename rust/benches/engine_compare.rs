@@ -10,6 +10,8 @@ use spdnn::bench::{bench, BenchCase, BenchConfig, BenchReport, Measurement};
 use spdnn::data::mnist_synth;
 use spdnn::engine::{Autotuner, CsrEngine, EllEngine, EngineKind, SlicedEllEngine, TuneKey};
 use spdnn::formats::SlicedEll;
+use spdnn::obs::trace as otr;
+use spdnn::obs::TraceId;
 use spdnn::radixnet::{RadixNet, Topology};
 use spdnn::util::json::Json;
 use spdnn::util::table::{fmt_teps, Table};
@@ -43,6 +45,14 @@ fn main() -> anyhow::Result<()> {
 
     let ell_engine = EllEngine::with_mb(1, 12)?;
     rows.push(bench(&bcfg, "ell mb=12", edges, || ell_engine.layer(&ell, &bias, &y, &mut out)));
+
+    // The obs no-sink contract: with no trace sink attached, a span
+    // guard is one relaxed atomic load — this row must stay within
+    // noise of the bare "ell mb=12" row above.
+    rows.push(bench(&bcfg, "ell mb=12 obs-noop", edges, || {
+        let _span = otr::span("layer", TraceId::NONE);
+        ell_engine.layer(&ell, &bias, &y, &mut out)
+    }));
 
     for slice in [16usize, 32] {
         let s = SlicedEll::from_ell(&ell, slice)?;

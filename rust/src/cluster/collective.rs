@@ -31,6 +31,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::partition::{imbalance, partition_even, Partition};
 use crate::coordinator::NativeSpec;
+use crate::obs::metrics as om;
+use crate::obs::trace::{self as tr, TraceId};
 
 use super::launcher::{Launcher, LauncherConfig};
 use super::transport::{
@@ -160,6 +162,16 @@ impl ClusterCoordinator {
     /// chunks, written straight from this slice — run all layers on
     /// every rank concurrently, gather and reassemble.
     pub fn run(&mut self, features: &[f32]) -> Result<ClusterReport> {
+        self.run_traced(features, TraceId::NONE)
+    }
+
+    /// [`ClusterCoordinator::run`] carrying a trace context: the trace
+    /// id rides each scatter (to v3 ranks), the ranks answer with their
+    /// own spans, and those are re-recorded into this process's span
+    /// store on the rank's lane — one stitched end-to-end trace.
+    /// `TraceId::NONE` makes this exactly `run` (a no-op branch per
+    /// scatter when the recorder is disabled).
+    pub fn run_traced(&mut self, features: &[f32], trace: TraceId) -> Result<ClusterReport> {
         let model =
             self.model.clone().ok_or_else(|| anyhow!("load a model before running shards"))?;
         let n = model.neurons;
@@ -169,6 +181,9 @@ impl ClusterCoordinator {
         let batch = features.len() / n;
         let parts = partition_even(batch, self.clients.len());
         let chunk_rows = self.opts.chunk_rows;
+        let pass_span = tr::span("cluster-pass", trace)
+            .arg("ranks", self.clients.len())
+            .arg("rows", batch);
 
         let wall = Instant::now();
         type ShardOutcome = Result<(ShardResult, u64, u64)>;
@@ -176,15 +191,20 @@ impl ClusterCoordinator {
         slots.resize_with(parts.len(), || None);
         std::thread::scope(|scope| {
             let mut handles = Vec::new();
-            for (client, part) in self.clients.iter_mut().zip(&parts) {
+            for (rank, (client, part)) in self.clients.iter_mut().zip(&parts).enumerate() {
                 let shard = &features[part.start * n..(part.start + part.count) * n];
                 let start = part.start;
                 handles.push(scope.spawn(move || -> ShardOutcome {
+                    // One span per rank RPC: scatter write, the rank's
+                    // compute (whose own spans land on the rank lane),
+                    // and the gather read.
+                    let span = tr::span("shard-rpc", trace).arg("rank", rank);
                     let sent0 = client.bytes_sent();
                     let recv0 = client.bytes_received();
-                    let reply = client.send_shard(start, shard, n, chunk_rows)?;
+                    let reply = client.send_shard(start, shard, n, chunk_rows, trace)?;
                     let sent = client.bytes_sent() - sent0;
                     let recv = client.bytes_received() - recv0;
+                    drop(span.arg("sent_bytes", sent).arg("recv_bytes", recv));
                     match reply {
                         ClusterReply::Result(r) => Ok((*r, sent, recv)),
                         ClusterReply::Error { message } => Err(anyhow!("{message}")),
@@ -197,6 +217,7 @@ impl ClusterCoordinator {
             }
         });
         let wall_secs = wall.elapsed().as_secs_f64();
+        drop(pass_span);
 
         let mut shards = Vec::with_capacity(slots.len());
         let mut scatter_bytes = 0u64;
@@ -206,8 +227,30 @@ impl ClusterCoordinator {
                 slot.expect("slot filled").with_context(|| format!("shard on rank {rank}"))?;
             scatter_bytes += sent;
             gather_bytes += recv;
+            let rank_label = rank.to_string();
+            om::counter_labeled(
+                "spdnn_cluster_scatter_bytes_total",
+                &[("rank", &rank_label)],
+                "Request bytes rank 0 wrote to this rank.",
+            )
+            .add(sent);
+            om::counter_labeled(
+                "spdnn_cluster_gather_bytes_total",
+                &[("rank", &rank_label)],
+                "Reply bytes rank 0 read from this rank.",
+            )
+            .add(recv);
+            // Stitch the rank's remote spans into the local store on
+            // the rank's own Chrome lane.
+            if !shard.spans.is_empty() && tr::enabled() {
+                tr::register_lane_label(rank as u32 + 1, &format!("rank {rank}"));
+                for rec in shard.spans.iter().cloned() {
+                    tr::record(rec);
+                }
+            }
             shards.push(shard);
         }
+        om::counter("spdnn_cluster_passes_total", "Completed cluster inference passes.").inc();
         ClusterReport::assemble(&model, parts, shards, wall_secs, scatter_bytes, gather_bytes)
     }
 
@@ -386,6 +429,13 @@ impl LocalCluster {
         self.coordinator.run(features)
     }
 
+    /// [`LocalCluster::run`] carrying a trace context; see
+    /// [`ClusterCoordinator::run_traced`].
+    pub fn run_traced(&mut self, features: &[f32], trace: TraceId) -> Result<ClusterReport> {
+        self.launcher.check()?;
+        self.coordinator.run_traced(features, trace)
+    }
+
     /// Fault-injection hook: kill one rank's process outright.
     pub fn kill_rank(&mut self, rank: usize) -> Result<()> {
         self.launcher.kill_rank(rank)
@@ -434,6 +484,8 @@ mod tests {
             layer_secs: vec![0.5, 0.25],
             edges_traversed: (count * 4 * 2) as u64,
             secs: 1.0,
+            trace: TraceId::NONE,
+            spans: vec![],
         }
     }
 

@@ -34,6 +34,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::rank::READY_PREFIX;
+use crate::log_info;
 
 /// Shared, clonable liveness view of a rank fleet. One flag per rank,
 /// flipped to dead by the launcher's stdout-drain thread the moment the
@@ -295,7 +296,10 @@ fn spawn_worker(cfg: &LauncherConfig, rank: usize, health: RankHealth) -> Result
                         }
                     }
                     if !t.is_empty() {
-                        eprintln!("[cluster rank {rank}] {t}");
+                        // Forward worker chatter through the logger so
+                        // SPDNN_LOG filters it like everything else; the
+                        // rank tag keeps interleaved fleets attributable.
+                        log_info!("[rank {rank}] {t}");
                     }
                 }
                 Err(_) => {

@@ -33,6 +33,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::worker::{run_resident_panel, NativeExec, PanelTask};
 use crate::coordinator::NativeSpec;
 use crate::formats::EllMatrix;
+use crate::obs::trace::{now_unix_micros, SpanRecord, TraceId};
 use crate::radixnet::{RadixNet, Topology};
 use crate::{log_info, log_warn};
 
@@ -160,8 +161,8 @@ fn serve_connection(stream: TcpStream, replica: &mut Option<Replica>) -> Result<
                     Err(e) => (ClusterReply::Error { message: format!("{e:#}") }, wire, None),
                 }
             }
-            ClusterRequest::Shard { start, features } => match replica.as_ref() {
-                Some(r) => match run_shard(r, start, &features) {
+            ClusterRequest::Shard { start, features, trace } => match replica.as_ref() {
+                Some(r) => match run_shard(r, start, &features, trace) {
                     Ok(result) => (ClusterReply::Result(Box::new(result)), wire, None),
                     Err(e) => (ClusterReply::Error { message: format!("{e:#}") }, wire, None),
                 },
@@ -173,8 +174,10 @@ fn serve_connection(stream: TcpStream, replica: &mut Option<Replica>) -> Result<
                     None,
                 ),
             },
-            ClusterRequest::ShardBegin { start, rows, chunks } => {
-                match receive_chunked(&mut reader, replica.as_ref(), start, rows, chunks, cap) {
+            ClusterRequest::ShardBegin { start, rows, chunks, trace } => {
+                let got =
+                    receive_chunked(&mut reader, replica.as_ref(), start, rows, chunks, cap, trace);
+                match got {
                     // The result goes back in the encoding the chunk
                     // frames arrived in (shard-begin itself is always a
                     // JSON control line, so its wire would wrongly
@@ -227,16 +230,19 @@ fn receive_chunked(
     rows: usize,
     chunks: usize,
     cap: usize,
+    trace: TraceId,
 ) -> Result<(ShardResult, WireFormat)> {
     let r =
         replica.ok_or_else(|| anyhow!("no model loaded on this rank (send a load op first)"))?;
     let nlayers = r.model.layers;
+    let ts0 = now_unix_micros();
     let t = Instant::now();
     let mut categories = Vec::new();
     let mut activations = Vec::new();
     let mut live_per_layer = vec![0usize; nlayers];
     let mut layer_secs = vec![0f64; nlayers];
     let mut edges = 0u64;
+    let mut spans: Vec<SpanRecord> = Vec::new();
     let mut row = start;
     // An empty stream (0 chunks) has no data frames to take the
     // encoding from; JSON is always understood by the peer.
@@ -262,7 +268,7 @@ fn receive_chunked(
         if chunk_start != row {
             bail!("shard chunk {index} starts at row {chunk_start}, expected {row}");
         }
-        let out = run_shard(r, chunk_start, &features)?;
+        let out = run_shard(r, chunk_start, &features, trace)?;
         row += out.count;
         if row > start + rows {
             bail!("shard chunks overflow the announced {rows} rows");
@@ -276,9 +282,27 @@ fn receive_chunked(
             *acc += v;
         }
         edges += out.edges_traversed;
+        spans.extend(out.spans);
     }
     if row != start + rows {
         bail!("shard chunks cover {} rows, shard-begin announced {rows}", row - start);
+    }
+    let secs = t.elapsed().as_secs_f64();
+    if trace.is_some() {
+        // The stream span wraps every per-chunk compute span: its gaps
+        // are the §III.B transfer/compute overlap made visible.
+        spans.push(SpanRecord {
+            name: "rank-stream".into(),
+            ts_us: ts0,
+            dur_us: (secs * 1e6) as u64,
+            trace,
+            lane: r.rank as u32 + 1,
+            tid: 0,
+            args: vec![
+                ("rank".into(), r.rank.to_string()),
+                ("chunks".into(), chunks.to_string()),
+            ],
+        });
     }
     Ok((
         ShardResult {
@@ -290,7 +314,9 @@ fn receive_chunked(
             live_per_layer,
             layer_secs,
             edges_traversed: edges,
-            secs: t.elapsed().as_secs_f64(),
+            secs,
+            trace,
+            spans,
         },
         data_wire,
     ))
@@ -328,7 +354,17 @@ fn load_replica(rank: usize, model: ModelSpec, spec: NativeSpec, prune: bool) ->
 /// Run all layers over one scattered panel; the exact same code path as
 /// an in-process worker thread, minus any per-op copies: the prebuilt
 /// engine, the shared bias and the feature slice are all borrowed.
-fn run_shard(replica: &Replica, start: usize, features: &[f32]) -> Result<ShardResult> {
+///
+/// A non-NONE `trace` turns the per-layer timings the result already
+/// carries into spans on the rank's own lane (`rank + 1`), so the
+/// coordinator can stitch one end-to-end trace. Ranks keep no global
+/// recorder state: the spans live only in the result.
+fn run_shard(
+    replica: &Replica,
+    start: usize,
+    features: &[f32],
+    trace: TraceId,
+) -> Result<ShardResult> {
     let n = replica.model.neurons;
     if n == 0 {
         bail!("replica has zero-width model");
@@ -337,6 +373,7 @@ fn run_shard(replica: &Replica, start: usize, features: &[f32]) -> Result<ShardR
         bail!("shard of {} values is not a multiple of neurons={n}", features.len());
     }
     let count = features.len() / n;
+    let ts0 = now_unix_micros();
     let t = Instant::now();
     let out = run_resident_panel(
         &replica.exec,
@@ -352,6 +389,38 @@ fn run_shard(replica: &Replica, start: usize, features: &[f32]) -> Result<ShardR
             global_start: start,
         },
     )?;
+    let secs = t.elapsed().as_secs_f64();
+    let mut spans = Vec::new();
+    if trace.is_some() {
+        let lane = replica.rank as u32 + 1;
+        let rank_arg = ("rank".to_string(), replica.rank.to_string());
+        // Per-layer spans laid back-to-back from the shard's start: the
+        // layer loop runs them sequentially, so cumulative offsets of
+        // the measured durations reconstruct the real timeline.
+        let mut off = 0u64;
+        for (l, &s) in out.metrics.layer_secs.iter().enumerate() {
+            let dur = (s * 1e6) as u64;
+            spans.push(SpanRecord {
+                name: "layer".into(),
+                ts_us: ts0 + off,
+                dur_us: dur,
+                trace,
+                lane,
+                tid: 0,
+                args: vec![("layer".into(), l.to_string()), rank_arg.clone()],
+            });
+            off += dur;
+        }
+        spans.push(SpanRecord {
+            name: "rank-compute".into(),
+            ts_us: ts0,
+            dur_us: (secs * 1e6) as u64,
+            trace,
+            lane,
+            tid: 0,
+            args: vec![rank_arg, ("rows".into(), count.to_string())],
+        });
+    }
     Ok(ShardResult {
         rank: replica.rank,
         start,
@@ -361,7 +430,9 @@ fn run_shard(replica: &Replica, start: usize, features: &[f32]) -> Result<ShardR
         live_per_layer: out.metrics.live_per_layer,
         layer_secs: out.metrics.layer_secs,
         edges_traversed: out.metrics.edges_traversed,
-        secs: t.elapsed().as_secs_f64(),
+        secs,
+        trace,
+        spans,
     })
 }
 
@@ -395,7 +466,7 @@ mod tests {
         let ds = Dataset::generate(&cfg).unwrap();
         let model = ModelSpec::from_config(&cfg);
         let replica = load_replica(0, model, spec(), true).unwrap();
-        let out = run_shard(&replica, 0, &ds.features).unwrap();
+        let out = run_shard(&replica, 0, &ds.features, TraceId::NONE).unwrap();
         assert_eq!(out.categories, ds.truth_categories);
         assert_eq!(out.count, cfg.batch);
         assert_eq!(out.live_per_layer.len(), cfg.layers);
@@ -410,8 +481,8 @@ mod tests {
             NativeSpec { engine: EngineKind::Sliced, minibatch: 12, slice: 16, threads: 1 };
         let replica = load_replica(0, ModelSpec::from_config(&cfg), sliced, true).unwrap();
         // Two shard ops against the same prebuilt engine: identical output.
-        let a = run_shard(&replica, 0, &ds.features).unwrap();
-        let b = run_shard(&replica, 0, &ds.features).unwrap();
+        let a = run_shard(&replica, 0, &ds.features, TraceId::NONE).unwrap();
+        let b = run_shard(&replica, 0, &ds.features, TraceId::NONE).unwrap();
         assert_eq!(a.categories, ds.truth_categories);
         assert_eq!(a.categories, b.categories);
         assert_eq!(a.activations, b.activations);
@@ -422,7 +493,7 @@ mod tests {
         let cfg = small_cfg();
         let ds = Dataset::generate(&cfg).unwrap();
         let replica = load_replica(1, ModelSpec::from_config(&cfg), spec(), true).unwrap();
-        let out = run_shard(&replica, 100, &ds.features).unwrap();
+        let out = run_shard(&replica, 100, &ds.features, TraceId::NONE).unwrap();
         let expect: Vec<usize> = ds.truth_categories.iter().map(|c| c + 100).collect();
         assert_eq!(out.categories, expect);
         assert_eq!(out.rank, 1);
@@ -432,16 +503,36 @@ mod tests {
     fn ragged_shard_rejected() {
         let cfg = small_cfg();
         let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true).unwrap();
-        assert!(run_shard(&replica, 0, &[0.0; 63]).is_err());
+        assert!(run_shard(&replica, 0, &[0.0; 63], TraceId::NONE).is_err());
     }
 
     #[test]
     fn empty_shard_is_fine() {
         let cfg = small_cfg();
         let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true).unwrap();
-        let out = run_shard(&replica, 0, &[]).unwrap();
+        let out = run_shard(&replica, 0, &[], TraceId::NONE).unwrap();
         assert!(out.categories.is_empty());
         assert_eq!(out.count, 0);
+    }
+
+    #[test]
+    fn traced_shard_returns_rank_spans() {
+        let cfg = small_cfg();
+        let ds = Dataset::generate(&cfg).unwrap();
+        let replica = load_replica(1, ModelSpec::from_config(&cfg), spec(), true).unwrap();
+        let trace = TraceId(0xFEED);
+        let out = run_shard(&replica, 0, &ds.features, trace).unwrap();
+        assert_eq!(out.trace, trace);
+        // One span per layer plus the whole-shard compute span, all on
+        // the rank's own lane (rank + 1) carrying the request trace.
+        assert_eq!(out.spans.len(), cfg.layers + 1);
+        assert!(out.spans.iter().all(|s| s.trace == trace && s.lane == 2));
+        assert!(out.spans.iter().any(|s| s.name == "rank-compute"));
+        assert_eq!(out.spans.iter().filter(|s| s.name == "layer").count(), cfg.layers);
+        // Untraced shards stay span-free (the exact v2 result shape).
+        let out = run_shard(&replica, 0, &ds.features, TraceId::NONE).unwrap();
+        assert!(out.spans.is_empty());
+        assert!(out.trace.is_none());
     }
 
     #[test]
@@ -449,7 +540,7 @@ mod tests {
         let cfg = small_cfg();
         let ds = Dataset::generate(&cfg).unwrap();
         let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true).unwrap();
-        let whole = run_shard(&replica, 0, &ds.features).unwrap();
+        let whole = run_shard(&replica, 0, &ds.features, TraceId::NONE).unwrap();
 
         // Feed the chunked receiver from an in-memory stream: 12 rows
         // as chunks of 5 + 5 + 2.
@@ -472,6 +563,7 @@ mod tests {
             cfg.batch,
             3,
             CONTROL_FRAME_CAP,
+            TraceId::NONE,
         )
         .unwrap();
         // Binary chunk frames => the result reply must stay binary too.
@@ -503,9 +595,17 @@ mod tests {
             &ds.features[..5 * n],
         )
         .unwrap();
-        let err = receive_chunked(&mut &wire[..], Some(&replica), 0, 12, 3, CONTROL_FRAME_CAP)
-            .unwrap_err()
-            .to_string();
+        let err = receive_chunked(
+            &mut &wire[..],
+            Some(&replica),
+            0,
+            12,
+            3,
+            CONTROL_FRAME_CAP,
+            TraceId::NONE,
+        )
+        .unwrap_err()
+        .to_string();
         assert!(err.contains("out of order"), "unexpected error: {err}");
 
         // Stream ends before the announced chunk count.
@@ -518,9 +618,17 @@ mod tests {
             &ds.features[..5 * n],
         )
         .unwrap();
-        let err = receive_chunked(&mut &wire[..], Some(&replica), 0, 12, 3, CONTROL_FRAME_CAP)
-            .unwrap_err()
-            .to_string();
+        let err = receive_chunked(
+            &mut &wire[..],
+            Some(&replica),
+            0,
+            12,
+            3,
+            CONTROL_FRAME_CAP,
+            TraceId::NONE,
+        )
+        .unwrap_err()
+        .to_string();
         assert!(err.contains("closed mid shard stream"), "unexpected error: {err}");
     }
 

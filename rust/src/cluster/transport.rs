@@ -34,6 +34,9 @@
 //!                        nsecs,edges | f64 secs | u64×ncats cats |
 //!                        f32×nacts activations | u64×nlive live |
 //!                        f64×nsecs layer_secs
+//!   kind 5  shard (traced, v3)   u64 trace | kind-1 payload
+//!   kind 6  result (traced, v3)  u64 trace | u64 nspan | span JSON
+//!                                (nspan bytes) | kind-4 payload
 //!
 //!   panel := u8 0 | f32×n                       dense
 //!          | u8 1 | f32 v | bitmap ⌈n/8⌉ B      sparse-uniform
@@ -53,6 +56,16 @@
 //! answer each request in the encoding it arrived in (a chunked
 //! scatter's result replies in the encoding of its chunk frames),
 //! which keeps the reader side stateless.
+//!
+//! **Trace context (v3)**: scatters may carry an [`TraceId`] so one
+//! served request stitches coordinator and rank spans into a single
+//! end-to-end trace (`obs`). On the JSON wire it is an optional
+//! `"trace"` hex field on `shard` / `shard-begin`, and results answer
+//! with `"trace"` plus a `"spans"` array; on the binary wire the traced
+//! frame kinds 5/6 wrap the v2 payloads. The untraced kinds 1/3/4 are
+//! byte-identical to protocol v2, and the coordinator only emits traced
+//! messages to peers whose hello answered version ≥ 3 — a v2 peer on
+//! either wire keeps working, it just cannot contribute spans.
 //!
 //! **Frame caps**: every read — JSON line or binary payload — is
 //! bounded. Control traffic is capped at [`CONTROL_FRAME_CAP`]; once a
@@ -75,17 +88,25 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::NativeSpec;
 use crate::data::binio::{put_f64, put_u64, write_f32s, ByteCursor};
 use crate::engine::EngineKind;
+use crate::obs::trace::{spans_from_json, spans_to_json, SpanRecord, TraceId};
 use crate::server::protocol::parse_f32_array;
 use crate::util::config::RuntimeConfig;
 use crate::util::json::Json;
 
-pub const CLUSTER_PROTOCOL_VERSION: i64 = 2;
+/// v3 adds trace-context propagation (traced frame kinds 5/6 and the
+/// optional JSON `trace`/`spans` fields); v2 peers negotiate down to
+/// the untraced v2 subset, which is byte-identical.
+pub const CLUSTER_PROTOCOL_VERSION: i64 = 3;
+/// Oldest protocol whose binary framing is a compatible subset of ours.
+const CLUSTER_PROTOCOL_BIN_COMPAT: i64 = 2;
 
 /// Magic prefix of one `spdnn-clu1` binary frame.
 pub const FRAME_MAGIC: &[u8; 4] = b"SCL1";
 const FRAME_KIND_SHARD: u8 = 1;
 const FRAME_KIND_SHARD_CHUNK: u8 = 3;
 const FRAME_KIND_RESULT: u8 = 4;
+const FRAME_KIND_SHARD_TRACED: u8 = 5;
+const FRAME_KIND_RESULT_TRACED: u8 = 6;
 /// magic + kind + u32 payload length.
 const FRAME_HEADER_BYTES: usize = 4 + 1 + 4;
 
@@ -217,6 +238,17 @@ fn features_json(features: &[f32]) -> Json {
     Json::Arr(features.iter().map(|&x| Json::Num(x as f64)).collect())
 }
 
+/// Optional `"trace"` hex field; absent (the v2 encoding) means
+/// [`TraceId::NONE`].
+fn trace_from_json(v: &Json) -> Result<TraceId> {
+    match v.get("trace") {
+        None => Ok(TraceId::NONE),
+        Some(t) => {
+            TraceId::parse(t.as_str().ok_or_else(|| anyhow!("\"trace\" is not a string"))?)
+        }
+    }
+}
+
 /// One coordinator-to-worker request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ClusterRequest {
@@ -226,10 +258,14 @@ pub enum ClusterRequest {
     /// Build the full weight replica on this rank.
     Load { rank: usize, model: ModelSpec, spec: NativeSpec, prune: bool },
     /// Run all layers over one statically-partitioned feature shard.
-    Shard { start: usize, features: Vec<f32> },
+    /// `trace` stitches the rank's spans into the caller's request
+    /// trace; [`TraceId::NONE`] keeps the v2 encoding on both wires.
+    Shard { start: usize, features: Vec<f32>, trace: TraceId },
     /// Open a pipelined scatter: `chunks` shard-chunk messages follow,
-    /// covering `rows` feature rows from `start` in order.
-    ShardBegin { start: usize, rows: usize, chunks: usize },
+    /// covering `rows` feature rows from `start` in order. The trace
+    /// context of the whole stream rides here (shard-begin is a JSON
+    /// control line on both wires), not on each chunk.
+    ShardBegin { start: usize, rows: usize, chunks: usize, trace: TraceId },
     /// One sub-panel of an open chunked scatter.
     ShardChunk { index: usize, start: usize, features: Vec<f32> },
     /// Finish the current work and exit the worker process.
@@ -265,17 +301,29 @@ impl ClusterRequest {
                 ("spec", spec_to_json(spec)),
                 ("prune", Json::Bool(*prune)),
             ]),
-            ClusterRequest::Shard { start, features } => Json::obj(vec![
-                ("op", Json::Str("shard".into())),
-                ("start", Json::Int(*start as i64)),
-                ("features", features_json(features)),
-            ]),
-            ClusterRequest::ShardBegin { start, rows, chunks } => Json::obj(vec![
-                ("op", Json::Str("shard-begin".into())),
-                ("start", Json::Int(*start as i64)),
-                ("rows", Json::Int(*rows as i64)),
-                ("chunks", Json::Int(*chunks as i64)),
-            ]),
+            ClusterRequest::Shard { start, features, trace } => {
+                let mut pairs = vec![
+                    ("op", Json::Str("shard".into())),
+                    ("start", Json::Int(*start as i64)),
+                    ("features", features_json(features)),
+                ];
+                if trace.is_some() {
+                    pairs.push(("trace", Json::Str(trace.to_hex())));
+                }
+                Json::obj(pairs)
+            }
+            ClusterRequest::ShardBegin { start, rows, chunks, trace } => {
+                let mut pairs = vec![
+                    ("op", Json::Str("shard-begin".into())),
+                    ("start", Json::Int(*start as i64)),
+                    ("rows", Json::Int(*rows as i64)),
+                    ("chunks", Json::Int(*chunks as i64)),
+                ];
+                if trace.is_some() {
+                    pairs.push(("trace", Json::Str(trace.to_hex())));
+                }
+                Json::obj(pairs)
+            }
             ClusterRequest::ShardChunk { index, start, features } => Json::obj(vec![
                 ("op", Json::Str("shard-chunk".into())),
                 ("index", Json::Int(*index as i64)),
@@ -303,11 +351,13 @@ impl ClusterRequest {
             "shard" => Ok(ClusterRequest::Shard {
                 start: v.req_usize("start")?,
                 features: parse_f32_array(v.req("features")?).context("\"features\"")?,
+                trace: trace_from_json(&v)?,
             }),
             "shard-begin" => Ok(ClusterRequest::ShardBegin {
                 start: v.req_usize("start")?,
                 rows: v.req_usize("rows")?,
                 chunks: v.req_usize("chunks")?,
+                trace: trace_from_json(&v)?,
             }),
             "shard-chunk" => Ok(ClusterRequest::ShardChunk {
                 index: v.req_usize("index")?,
@@ -341,6 +391,12 @@ pub struct ShardResult {
     /// Whole-shard wall seconds on the worker (for a chunked scatter:
     /// first chunk received to last chunk computed).
     pub secs: f64,
+    /// Trace context echoed from the scatter ([`TraceId::NONE`] when
+    /// the shard carried none — the v2 encoding on both wires).
+    pub trace: TraceId,
+    /// The rank's own spans for that trace (empty when untraced);
+    /// re-recorded by the coordinator to stitch one end-to-end trace.
+    pub spans: Vec<SpanRecord>,
 }
 
 impl ShardResult {
@@ -350,7 +406,7 @@ impl ShardResult {
 
     fn to_json(&self) -> Json {
         let acts: Vec<f64> = self.activations.iter().map(|&x| x as f64).collect();
-        Json::obj(vec![
+        let mut pairs = vec![
             ("ok", Json::Bool(true)),
             ("kind", Json::Str("result".into())),
             ("rank", Json::Int(self.rank as i64)),
@@ -362,7 +418,14 @@ impl ShardResult {
             ("layer_secs", Json::arr_f64(&self.layer_secs)),
             ("edges_traversed", Json::Int(self.edges_traversed as i64)),
             ("secs", Json::Num(self.secs)),
-        ])
+        ];
+        if self.trace.is_some() {
+            pairs.push(("trace", Json::Str(self.trace.to_hex())));
+        }
+        if !self.spans.is_empty() {
+            pairs.push(("spans", spans_to_json(&self.spans)));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -446,6 +509,11 @@ impl ClusterReply {
                 layer_secs: parse_f64_array(v.req("layer_secs")?).context("\"layer_secs\"")?,
                 edges_traversed: v.req_usize("edges_traversed")? as u64,
                 secs: v.req_f64("secs")?,
+                trace: trace_from_json(&v)?,
+                spans: match v.get("spans") {
+                    Some(s) => spans_from_json(s).context("\"spans\"")?,
+                    None => Vec::new(),
+                },
             }))),
             "bye" => Ok(ClusterReply::Bye),
             "error" => Ok(ClusterReply::Error { message: v.req_str("error")?.to_string() }),
@@ -631,27 +699,37 @@ fn read_panel(c: &mut ByteCursor<'_>, n: usize) -> Result<Vec<f32>> {
 
 /// Scatter one whole shard, writing straight from the caller's feature
 /// slice — the steady-state path makes no panel-sized copy on either
-/// wire.
+/// wire. A [`TraceId::NONE`] keeps the exact v2 bytes; a real trace
+/// selects the traced v3 encoding (only send it to v3 peers).
 pub fn write_shard(
     w: &mut impl Write,
     wire: WireFormat,
     start: usize,
     features: &[f32],
+    trace: TraceId,
 ) -> Result<()> {
     match wire {
         WireFormat::Json => {
-            let obj = Json::obj(vec![
+            let mut pairs = vec![
                 ("op", Json::Str("shard".into())),
                 ("start", Json::Int(start as i64)),
                 ("features", features_json(features)),
-            ]);
-            writeln!(w, "{obj}").context("writing shard line")
+            ];
+            if trace.is_some() {
+                pairs.push(("trace", Json::Str(trace.to_hex())));
+            }
+            writeln!(w, "{}", Json::obj(pairs)).context("writing shard line")
         }
         WireFormat::Bin => {
             let uniform = uniform_value(features);
-            let payload_len = 16 + panel_encoded_len(features, uniform);
-            w.write_all(&frame_header(FRAME_KIND_SHARD, payload_len)?)?;
-            let mut meta = Vec::with_capacity(16);
+            let panel_len = 16 + panel_encoded_len(features, uniform);
+            let mut meta = Vec::with_capacity(24);
+            if trace.is_some() {
+                w.write_all(&frame_header(FRAME_KIND_SHARD_TRACED, 8 + panel_len)?)?;
+                put_u64(&mut meta, trace.0);
+            } else {
+                w.write_all(&frame_header(FRAME_KIND_SHARD, panel_len)?)?;
+            }
             put_u64(&mut meta, start as u64);
             put_u64(&mut meta, features.len() as u64);
             w.write_all(&meta)?;
@@ -693,14 +771,24 @@ pub fn write_shard_chunk(
 }
 
 fn write_result_frame(w: &mut impl Write, r: &ShardResult) -> Result<()> {
-    let payload_len = 8 * 8
+    let body_len = 8 * 8
         + 8
         + r.categories.len() * 8
         + r.activations.len() * 4
         + r.live_per_layer.len() * 8
         + r.layer_secs.len() * 8;
-    w.write_all(&frame_header(FRAME_KIND_RESULT, payload_len)?)?;
     let mut buf = Vec::new();
+    if r.trace.is_some() || !r.spans.is_empty() {
+        // Traced v3 result: trace id plus a length-prefixed span blob
+        // (JSON — spans are tiny and low-rate) ahead of the v2 body.
+        let blob = spans_to_json(&r.spans).to_string().into_bytes();
+        w.write_all(&frame_header(FRAME_KIND_RESULT_TRACED, 16 + blob.len() + body_len)?)?;
+        put_u64(&mut buf, r.trace.0);
+        put_u64(&mut buf, blob.len() as u64);
+        buf.extend_from_slice(&blob);
+    } else {
+        w.write_all(&frame_header(FRAME_KIND_RESULT, body_len)?)?;
+    }
     for m in [
         r.rank as u64,
         r.start as u64,
@@ -736,12 +824,17 @@ fn usize_of(x: u64, what: &str) -> Result<usize> {
 fn parse_request_frame(kind: u8, payload: &[u8]) -> Result<ClusterRequest> {
     let mut c = ByteCursor::new(payload);
     match kind {
-        FRAME_KIND_SHARD => {
+        FRAME_KIND_SHARD | FRAME_KIND_SHARD_TRACED => {
+            let trace = if kind == FRAME_KIND_SHARD_TRACED {
+                TraceId(c.u64().context("shard trace id")?)
+            } else {
+                TraceId::NONE
+            };
             let start = usize_of(c.u64()?, "shard start")?;
             let n = usize_of(c.u64()?, "shard value count")?;
             let features = read_panel(&mut c, n).context("shard frame features")?;
             c.finish().context("shard frame")?;
-            Ok(ClusterRequest::Shard { start, features })
+            Ok(ClusterRequest::Shard { start, features, trace })
         }
         FRAME_KIND_SHARD_CHUNK => {
             let index = usize_of(c.u64()?, "chunk index")?;
@@ -751,16 +844,28 @@ fn parse_request_frame(kind: u8, payload: &[u8]) -> Result<ClusterRequest> {
             c.finish().context("shard-chunk frame")?;
             Ok(ClusterRequest::ShardChunk { index, start, features })
         }
-        FRAME_KIND_RESULT => bail!("result frame is a reply, not a request"),
+        FRAME_KIND_RESULT | FRAME_KIND_RESULT_TRACED => {
+            bail!("result frame is a reply, not a request")
+        }
         other => bail!("unknown request frame kind {other}"),
     }
 }
 
 fn parse_reply_frame(kind: u8, payload: &[u8]) -> Result<ClusterReply> {
-    if kind != FRAME_KIND_RESULT {
+    if kind != FRAME_KIND_RESULT && kind != FRAME_KIND_RESULT_TRACED {
         bail!("unknown reply frame kind {kind}");
     }
     let mut c = ByteCursor::new(payload);
+    let (trace, spans) = if kind == FRAME_KIND_RESULT_TRACED {
+        let trace = TraceId(c.u64().context("result trace id")?);
+        let nspan = usize_of(c.u64()?, "result span blob length")?;
+        let blob = c.bytes(nspan).context("result frame span blob")?;
+        let doc = Json::parse(std::str::from_utf8(blob).context("result span blob is not UTF-8")?)
+            .context("result span blob")?;
+        (trace, spans_from_json(&doc).context("result frame spans")?)
+    } else {
+        (TraceId::NONE, Vec::new())
+    };
     let rank = usize_of(c.u64()?, "result rank")?;
     let start = usize_of(c.u64()?, "result start")?;
     let count = usize_of(c.u64()?, "result count")?;
@@ -795,6 +900,8 @@ fn parse_reply_frame(kind: u8, payload: &[u8]) -> Result<ClusterReply> {
         layer_secs,
         edges_traversed,
         secs,
+        trace,
+        spans,
     })))
 }
 
@@ -802,8 +909,8 @@ fn parse_reply_frame(kind: u8, payload: &[u8]) -> Result<ClusterReply> {
 /// binary frames on `Bin`; everything else is a JSON line on both.
 pub fn write_request(w: &mut impl Write, req: &ClusterRequest, wire: WireFormat) -> Result<()> {
     match (wire, req) {
-        (WireFormat::Bin, ClusterRequest::Shard { start, features }) => {
-            write_shard(w, wire, *start, features)
+        (WireFormat::Bin, ClusterRequest::Shard { start, features, trace }) => {
+            write_shard(w, wire, *start, features, *trace)
         }
         (WireFormat::Bin, ClusterRequest::ShardChunk { index, start, features }) => {
             write_shard_chunk(w, wire, *index, *start, features)
@@ -946,6 +1053,9 @@ pub struct ClusterClient {
     /// Reply frame cap; starts at the control cap, widened by
     /// [`ClusterClient::set_model`] after a successful load.
     cap: usize,
+    /// The protocol version the worker's hello answered; gates the
+    /// traced v3 encodings ([`ClusterClient::supports_trace`]).
+    peer_version: i64,
 }
 
 impl ClusterClient {
@@ -968,6 +1078,7 @@ impl ClusterClient {
             writer: BufWriter::new(CountingWriter { inner: wstream, bytes: 0 }),
             wire,
             cap: CONTROL_FRAME_CAP,
+            peer_version: CLUSTER_PROTOCOL_VERSION,
         };
         match client.call(&ClusterRequest::Hello { wire })? {
             ClusterReply::Hello { version, wire: got } => {
@@ -977,12 +1088,13 @@ impl ClusterClient {
                          speaks v{CLUSTER_PROTOCOL_VERSION} (mixed spdnn binaries?)"
                     );
                 }
+                client.peer_version = version;
                 if got == wire && version == CLUSTER_PROTOCOL_VERSION {
                     return Ok(client);
                 }
                 // Graceful downgrade: a peer that answers `json` — a
                 // v1-era binary whose only data encoding is JSON lines,
-                // or a v2 build refusing bin — settles the connection
+                // or a newer build refusing bin — settles the connection
                 // on json; every coordinator speaks it, so no frames
                 // are lost, just bytes. The reverse (echoing bin to a
                 // json proposal, or a v1 peer claiming bin) would put
@@ -996,6 +1108,18 @@ impl ClusterClient {
                         );
                     }
                     client.wire = WireFormat::Json;
+                    return Ok(client);
+                }
+                if got == wire && version >= CLUSTER_PROTOCOL_BIN_COMPAT {
+                    // v3's untraced frames are byte-identical to v2's
+                    // and the traced kinds are gated on this version,
+                    // so a v2 peer stays fully compatible on either
+                    // wire — it just cannot contribute trace spans.
+                    crate::log_warn!(
+                        "worker at {addr} speaks protocol v{version}; trace propagation \
+                         is disabled on this connection (coordinator is v{})",
+                        CLUSTER_PROTOCOL_VERSION
+                    );
                     return Ok(client);
                 }
                 if version != CLUSTER_PROTOCOL_VERSION {
@@ -1033,6 +1157,13 @@ impl ClusterClient {
         self.wire
     }
 
+    /// Whether the negotiated peer understands the traced v3 encodings.
+    /// When false, [`ClusterClient::send_shard`] silently drops the
+    /// trace context instead of sending frames the peer would reject.
+    pub fn supports_trace(&self) -> bool {
+        self.peer_version >= CLUSTER_PROTOCOL_VERSION
+    }
+
     /// Bytes written to the socket so far (flushed requests only).
     pub fn bytes_sent(&self) -> u64 {
         self.writer.get_ref().bytes
@@ -1060,18 +1191,22 @@ impl ClusterClient {
         features: &[f32],
         neurons: usize,
         chunk_rows: Option<usize>,
+        trace: TraceId,
     ) -> Result<ClusterReply> {
         let n = neurons.max(1);
+        // Never put traced encodings on a connection whose peer did not
+        // negotiate them; the shard still runs, just untraced.
+        let trace = if self.supports_trace() { trace } else { TraceId::NONE };
         match chunk_rows {
             None => {
-                write_shard(&mut self.writer, self.wire, start, features)?;
+                write_shard(&mut self.writer, self.wire, start, features, trace)?;
                 self.writer.flush().context("flushing shard")?;
             }
             Some(rows_per_chunk) => {
                 let rows_per_chunk = rows_per_chunk.max(1);
                 let rows = features.len() / n;
                 let chunks = rows.div_ceil(rows_per_chunk);
-                let begin = ClusterRequest::ShardBegin { start, rows, chunks };
+                let begin = ClusterRequest::ShardBegin { start, rows, chunks, trace };
                 write_request(&mut self.writer, &begin, self.wire)?;
                 self.writer.flush().context("flushing shard-begin")?;
                 for (i, chunk) in features.chunks(rows_per_chunk * n).enumerate() {
@@ -1131,6 +1266,35 @@ mod tests {
             layer_secs: vec![0.25, 0.125, 0.0625, 0.5, 0.125],
             edges_traversed: 1234,
             secs: 1.5,
+            trace: TraceId::NONE,
+            spans: vec![],
+        }
+    }
+
+    fn traced_result() -> ShardResult {
+        ShardResult {
+            trace: TraceId(0xDEAD_BEEF),
+            spans: vec![
+                SpanRecord {
+                    name: "compute".into(),
+                    ts_us: 1_000_000,
+                    dur_us: 1500,
+                    trace: TraceId(0xDEAD_BEEF),
+                    lane: 3,
+                    tid: 0,
+                    args: vec![("rank".into(), "2".into())],
+                },
+                SpanRecord {
+                    name: "layer".into(),
+                    ts_us: 1_000_100,
+                    dur_us: 200,
+                    trace: TraceId(0xDEAD_BEEF),
+                    lane: 3,
+                    tid: 0,
+                    args: vec![],
+                },
+            ],
+            ..sample_result()
         }
     }
 
@@ -1188,8 +1352,25 @@ mod tests {
         roundtrip_request(ClusterRequest::Shard {
             start: 12,
             features: vec![0.0, 1.5, 0.25, 3.125],
+            trace: TraceId::NONE,
         });
-        roundtrip_request(ClusterRequest::ShardBegin { start: 4, rows: 12, chunks: 3 });
+        roundtrip_request(ClusterRequest::Shard {
+            start: 12,
+            features: vec![1.0, 0.0],
+            trace: TraceId(0xAB),
+        });
+        roundtrip_request(ClusterRequest::ShardBegin {
+            start: 4,
+            rows: 12,
+            chunks: 3,
+            trace: TraceId::NONE,
+        });
+        roundtrip_request(ClusterRequest::ShardBegin {
+            start: 4,
+            rows: 12,
+            chunks: 3,
+            trace: TraceId::generate(),
+        });
         roundtrip_request(ClusterRequest::ShardChunk {
             index: 1,
             start: 8,
@@ -1207,6 +1388,7 @@ mod tests {
         });
         roundtrip_reply(ClusterReply::Loaded { rank: 1, neurons: 64, layers: 5 });
         roundtrip_reply(ClusterReply::Result(Box::new(sample_result())));
+        roundtrip_reply(ClusterReply::Result(Box::new(traced_result())));
         roundtrip_reply(ClusterReply::Bye);
         roundtrip_reply(ClusterReply::Error { message: "boom".into() });
     }
@@ -1221,11 +1403,27 @@ mod tests {
                 wire,
             );
             roundtrip_request_wire(
-                ClusterRequest::Shard { start: 3, features: vec![0.1, 1.0 / 3.0, 31.5] },
+                ClusterRequest::Shard {
+                    start: 3,
+                    features: vec![0.1, 1.0 / 3.0, 31.5],
+                    trace: TraceId::NONE,
+                },
                 wire,
             );
             roundtrip_request_wire(
-                ClusterRequest::ShardBegin { start: 0, rows: 7, chunks: 2 },
+                ClusterRequest::Shard {
+                    start: 3,
+                    features: vec![0.1, 1.0 / 3.0, 31.5],
+                    trace: TraceId(0x0123_4567_89AB_CDEF),
+                },
+                wire,
+            );
+            roundtrip_request_wire(
+                ClusterRequest::ShardBegin { start: 0, rows: 7, chunks: 2, trace: TraceId::NONE },
+                wire,
+            );
+            roundtrip_request_wire(
+                ClusterRequest::ShardBegin { start: 0, rows: 7, chunks: 2, trace: TraceId(9) },
                 wire,
             );
             roundtrip_request_wire(
@@ -1234,8 +1432,59 @@ mod tests {
             );
             roundtrip_request_wire(ClusterRequest::Shutdown, wire);
             roundtrip_reply_wire(ClusterReply::Result(Box::new(sample_result())), wire);
+            roundtrip_reply_wire(ClusterReply::Result(Box::new(traced_result())), wire);
             roundtrip_reply_wire(ClusterReply::Error { message: "nope".into() }, wire);
         }
+    }
+
+    #[test]
+    fn untraced_frames_are_byte_identical_to_v2() {
+        // A NONE trace must keep the exact v2 bytes — kind 1 shard
+        // frames and kind 4 result frames — so v2 peers parse them.
+        let req = ClusterRequest::Shard {
+            start: 3,
+            features: vec![0.5, 1.5],
+            trace: TraceId::NONE,
+        };
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req, WireFormat::Bin).unwrap();
+        assert_eq!(buf[4], 1, "untraced shard must stay frame kind 1");
+
+        let mut buf = Vec::new();
+        write_reply(&mut buf, &ClusterReply::Result(Box::new(sample_result())), WireFormat::Bin)
+            .unwrap();
+        assert_eq!(buf[4], 4, "untraced result must stay frame kind 4");
+
+        // Traced messages move to the v3 kinds.
+        let req = ClusterRequest::Shard {
+            start: 3,
+            features: vec![0.5, 1.5],
+            trace: TraceId(7),
+        };
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req, WireFormat::Bin).unwrap();
+        assert_eq!(buf[4], 5, "traced shard must use frame kind 5");
+
+        let mut buf = Vec::new();
+        write_reply(&mut buf, &ClusterReply::Result(Box::new(traced_result())), WireFormat::Bin)
+            .unwrap();
+        assert_eq!(buf[4], 6, "traced result must use frame kind 6");
+    }
+
+    #[test]
+    fn untraced_json_omits_the_trace_fields() {
+        // The optional fields must be absent (not empty) when untraced,
+        // so the v2 JSON shapes are preserved byte-for-byte.
+        let line = ClusterRequest::Shard {
+            start: 0,
+            features: vec![],
+            trace: TraceId::NONE,
+        }
+        .to_json()
+        .to_string();
+        assert!(!line.contains("trace"), "unexpected trace field: {line}");
+        let line = ClusterReply::Result(Box::new(sample_result())).to_json().to_string();
+        assert!(!line.contains("trace") && !line.contains("spans"), "v2 shape changed: {line}");
     }
 
     #[test]
@@ -1245,7 +1494,7 @@ mod tests {
         Runner::new(32, 0xB1A5).run("wire-equivalence", |rng| {
             let rows = proptest::usize_in(rng, 0, 24);
             let feats = proptest::vec_f32(rng, rows * 16, -32.0, 32.0);
-            let req = ClusterRequest::Shard { start: rows, features: feats };
+            let req = ClusterRequest::Shard { start: rows, features: feats, trace: TraceId::NONE };
             let mut bits: Vec<Vec<u32>> = Vec::new();
             for wire in [WireFormat::Json, WireFormat::Bin] {
                 let mut buf = Vec::new();
@@ -1274,7 +1523,7 @@ mod tests {
         // bytes than JSON for the same panel.
         let mut rng = Xoshiro256::new(7);
         let feats: Vec<f32> = (0..64 * 50).map(|_| rng.next_f32()).collect();
-        let req = ClusterRequest::Shard { start: 0, features: feats };
+        let req = ClusterRequest::Shard { start: 0, features: feats, trace: TraceId::NONE };
         let mut json = Vec::new();
         write_request(&mut json, &req, WireFormat::Json).unwrap();
         let mut bin = Vec::new();
@@ -1294,7 +1543,8 @@ mod tests {
         let mut rng = Xoshiro256::new(11);
         let feats: Vec<f32> =
             (0..1000).map(|_| if rng.next_f32() < 0.3 { 1.0 } else { 0.0 }).collect();
-        let req = ClusterRequest::Shard { start: 0, features: feats.clone() };
+        let req =
+            ClusterRequest::Shard { start: 0, features: feats.clone(), trace: TraceId::NONE };
         let mut bin = Vec::new();
         write_request(&mut bin, &req, WireFormat::Bin).unwrap();
         // header + meta + enc + value + bitmap, nothing panel-sized.
@@ -1326,7 +1576,8 @@ mod tests {
             vec![2.5; 17],                   // uniform, non-multiple-of-8
         ];
         for feats in panels {
-            let req = ClusterRequest::Shard { start: 1, features: feats.clone() };
+            let req =
+                ClusterRequest::Shard { start: 1, features: feats.clone(), trace: TraceId::NONE };
             let mut bin = Vec::new();
             write_request(&mut bin, &req, WireFormat::Bin).unwrap();
             let (back, _) = read_msg(&mut &bin[..], 1 << 20);
@@ -1361,7 +1612,7 @@ mod tests {
         // Distinct values force the dense encoding, so every byte count
         // below scales with the declared value count.
         let feats: Vec<f32> = (0..8).map(|i| i as f32 * 1.5 + 0.5).collect();
-        let req = ClusterRequest::Shard { start: 0, features: feats };
+        let req = ClusterRequest::Shard { start: 0, features: feats, trace: TraceId::NONE };
         let mut buf = Vec::new();
         write_request(&mut buf, &req, WireFormat::Bin).unwrap();
 
@@ -1436,7 +1687,8 @@ mod tests {
     fn f32_features_survive_the_wire_bit_exactly() {
         // Awkward values: subnormal-ish, repeating-fraction, and large.
         let feats: Vec<f32> = vec![0.1, 1.0 / 3.0, 1e-12, 31.999999, 0.0];
-        let req = ClusterRequest::Shard { start: 0, features: feats.clone() };
+        let req =
+            ClusterRequest::Shard { start: 0, features: feats.clone(), trace: TraceId::NONE };
         let back = ClusterRequest::parse_line(&req.to_json().to_string()).unwrap();
         match back {
             ClusterRequest::Shard { features, .. } => {
@@ -1493,6 +1745,8 @@ mod tests {
             layer_secs: vec![0.5, 0.25],
             edges_traversed: 0,
             secs: 1.0,
+            trace: TraceId::NONE,
+            spans: vec![],
         };
         assert_eq!(r.busy_secs(), 0.75);
     }

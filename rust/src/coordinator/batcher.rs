@@ -17,6 +17,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::engine::EngineKind;
 use crate::formats::EllMatrix;
+use crate::obs::trace::{self as tr, TraceId};
 
 use super::inference::NativeSpec;
 use super::pruning::flags_from_panel;
@@ -94,6 +95,7 @@ pub struct Response {
 struct Request {
     features: Vec<f32>,
     enqueued: Instant,
+    trace: TraceId,
     resp: mpsc::Sender<Result<Response>>,
 }
 
@@ -119,6 +121,16 @@ impl InferenceServer {
 
     /// Submit one request; returns a receiver for the response.
     pub fn submit(&self, features: Vec<f32>) -> Result<mpsc::Receiver<Result<Response>>> {
+        self.submit_traced(features, TraceId::NONE)
+    }
+
+    /// Submit one request carrying a trace context: the panel this
+    /// request lands in emits `batch`/`layer` spans under `trace`.
+    pub fn submit_traced(
+        &self,
+        features: Vec<f32>,
+        trace: TraceId,
+    ) -> Result<mpsc::Receiver<Result<Response>>> {
         if features.len() != self.neurons {
             bail!("feature vector has {} values, model expects {}", features.len(), self.neurons);
         }
@@ -126,7 +138,7 @@ impl InferenceServer {
         self.tx
             .as_ref()
             .expect("server running")
-            .send(Request { features, enqueued: Instant::now(), resp: rtx })
+            .send(Request { features, enqueued: Instant::now(), trace, resp: rtx })
             .map_err(|_| anyhow!("server stopped"))?;
         Ok(rrx)
     }
@@ -238,7 +250,13 @@ fn process_panel(model: &ServedModel, exec: &mut ServeExec, panel: Vec<Request>)
         y.extend_from_slice(&r.features);
     }
 
-    let result = run_network(model, exec, &mut y, count);
+    // One panel serves many requests; the batch span is attributed to
+    // the first traced request in it (co-batched peers share the work,
+    // so any one trace showing the whole panel is the honest picture).
+    let trace = panel.iter().map(|r| r.trace).find(|t| t.is_some()).unwrap_or(TraceId::NONE);
+    let batch_span = tr::span("batch", trace).arg("batch_size", count);
+    let result = run_network(model, exec, &mut y, count, trace);
+    drop(batch_span);
     match result {
         Ok(flags) => {
             for (i, req) in panel.into_iter().enumerate() {
@@ -267,20 +285,25 @@ fn run_network(
     exec: &mut ServeExec,
     y: &mut Vec<f32>,
     count: usize,
+    trace: TraceId,
 ) -> Result<Vec<bool>> {
     let n = model.neurons;
     match exec {
         ServeExec::Native(engine) => {
             let mut scratch = vec![0.0f32; y.len()];
             for (layer, w) in model.layers.iter().enumerate() {
+                let span = tr::span("layer", trace).arg("layer", layer);
                 engine.layer(layer, w, &model.bias, y, &mut scratch)?;
+                drop(span);
                 std::mem::swap(y, &mut scratch);
             }
         }
         ServeExec::Pjrt(p) => {
-            for w in model.layers.iter() {
+            for (layer, w) in model.layers.iter().enumerate() {
+                let span = tr::span("layer", trace).arg("layer", layer);
                 let lits = LayerLiterals::new(&w.index, &w.value, &model.bias, n, model.k)?;
                 let (y_next, _) = p.run_panel(y, count, &lits)?;
+                drop(span);
                 *y = y_next;
             }
         }

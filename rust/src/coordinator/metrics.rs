@@ -3,7 +3,12 @@
 
 use std::time::Instant;
 
+use crate::obs::metrics as om;
 use crate::util::stats::Summary;
+
+/// Live-feature counts per layer span 1..=60k in the challenge sizes;
+/// powers of four keep the pruning trajectory readable at every scale.
+const LIVE_BUCKETS: &[f64] = &[16.0, 64.0, 256.0, 1024.0, 4096.0, 16384.0, 65536.0];
 
 /// Metrics collected by one worker during a full inference pass.
 #[derive(Clone, Debug, Default)]
@@ -54,14 +59,34 @@ impl InferenceReport {
         categories: Vec<usize>,
         workers: Vec<WorkerMetrics>,
     ) -> InferenceReport {
-        let edges_traversed = workers.iter().map(|w| w.edges_traversed).sum();
+        let edges_traversed: u64 = workers.iter().map(|w| w.edges_traversed).sum();
+        // Every assembled report also feeds the process-wide registry,
+        // so `{"op":"metrics"}` and `spdnn check-metrics` see the same
+        // numbers that reach stdout reports.
+        om::counter("spdnn_input_edges_total", "Challenge-metric numerator: input edges per pass.")
+            .add(input_edges);
+        om::counter("spdnn_edges_traversed_total", "Edges actually traversed after pruning.")
+            .add(edges_traversed);
+        let live = om::histogram(
+            "spdnn_live_features_per_layer",
+            "Live features entering each layer (pruning trajectory).",
+            LIVE_BUCKETS,
+        );
+        for w in &workers {
+            for &l in &w.live_per_layer {
+                live.observe(l as f64);
+            }
+        }
         let busy: Vec<f64> = workers.iter().map(|w| w.total_secs()).collect();
         let max = busy.iter().cloned().fold(0.0, f64::max);
         let mean = if busy.is_empty() { 0.0 } else { busy.iter().sum::<f64>() / busy.len() as f64 };
+        let edges_per_sec = if wall_secs > 0.0 { input_edges as f64 / wall_secs } else { 0.0 };
+        om::gauge("spdnn_edges_per_sec", "Input edges / wall seconds of the last pass.")
+            .set(edges_per_sec as i64);
         InferenceReport {
             input_edges,
             wall_secs,
-            edges_per_sec: if wall_secs > 0.0 { input_edges as f64 / wall_secs } else { 0.0 },
+            edges_per_sec,
             edges_traversed,
             categories,
             workers,

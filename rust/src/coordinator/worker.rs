@@ -16,6 +16,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::engine::{CsrEngine, EllEngine, EngineKind, SlicedEllEngine};
 use crate::formats::convert::ell_to_csr;
 use crate::formats::{EllMatrix, SlicedEll};
+use crate::obs::trace::{self as tr, TraceId};
 use crate::runtime::{CompiledLayer, Kind, LayerLiterals, Manifest, PjrtBackend, WeightStreamer};
 
 use super::metrics::{Timer, WorkerMetrics};
@@ -329,7 +330,14 @@ fn run_panel(
             bail!("layer {layer} weights {}x{} do not match model {n}x{}", w.nrows, w.k, task.k);
         }
 
-        let t = Timer::start();
+        // `layer_secs` derives from the span, so the report and a
+        // `--trace-out` timeline can never disagree about a layer's
+        // duration. With recording off the guard only reads the clock
+        // (no args, nothing recorded) — same cost as the old Timer.
+        let mut t = tr::timed("layer", TraceId::NONE);
+        if tr::enabled() {
+            t = t.arg("layer", layer).arg("worker", task.id).arg("live", live);
+        }
         let flags = match &mut exec {
             ExecMut::Native(engine) => {
                 scratch.resize(live * n, 0.0);
@@ -345,7 +353,7 @@ fn run_panel(
                 flags
             }
         };
-        metrics.layer_secs.push(t.secs());
+        metrics.layer_secs.push(t.finish_secs());
         metrics.edges_traversed += (live * n * task.k) as u64;
 
         if task.prune {

@@ -395,7 +395,7 @@ mod tests {
         let nnz: usize = rows.iter().map(|r| r.len()).sum();
         assert_eq!(layer.padded_len(), 16 * 4);
         assert_eq!(layer.nnz(), nnz);
-        println!(
+        crate::log_debug!(
             "figure_walkthrough: nnz={nnz} warp={:.1}% block={:.1}% layer={:.1}%",
             warp.padding_overhead() * 100.0,
             block.padding_overhead() * 100.0,

@@ -40,6 +40,7 @@ pub mod coordinator;
 pub mod data;
 pub mod engine;
 pub mod formats;
+pub mod obs;
 pub mod radixnet;
 pub mod runtime;
 pub mod server;

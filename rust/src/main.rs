@@ -12,6 +12,7 @@
 //!   simulate    at-scale Summit simulation (Table I columns)
 //!   info        show the artifact manifest and resolved configuration
 //!   check-bench validate a BENCH_*.json against the unified schema
+//!   check-metrics validate a Prometheus metrics snapshot
 //!   bench-trend diff TeraEdges/s between two BENCH_*.json artifacts
 //!
 //! Common flags: --neurons --layers --k --batch --workers --topology
@@ -31,6 +32,9 @@ use spdnn::coordinator::{
 };
 use spdnn::data::Dataset;
 use spdnn::engine::EngineKind;
+use spdnn::obs::metrics::validate_exposition;
+use spdnn::obs::trace as otr;
+use spdnn::obs::TraceId;
 use spdnn::runtime::Manifest;
 use spdnn::server::{
     AdmissionConfig, Client, ClusterServeConfig, ReferencePanel, Request, Server, ServerConfig,
@@ -72,6 +76,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("simulate") => cmd_simulate(args),
         Some("info") => cmd_info(args),
         Some("check-bench") => cmd_check_bench(args),
+        Some("check-metrics") => cmd_check_metrics(args),
         Some("bench-trend") => cmd_bench_trend(args),
         Some("help") | None => {
             print_help();
@@ -85,7 +90,8 @@ fn print_help() {
     println!(
         "spdnn — at-scale sparse DNN inference (HPEC 2020 reproduction)\n\n\
          USAGE: spdnn <gen-data|infer|serve|serve-demo|serve-smoke|cluster-run|\n\
-                       cluster-worker|simulate|info|check-bench|bench-trend> [flags]\n\n\
+                       cluster-worker|simulate|info|check-bench|check-metrics|\n\
+                       bench-trend> [flags]\n\n\
          Model:   --neurons N --layers L --k K --topology butterfly|random --seed S\n\
          Runtime: --batch B --workers W --minibatch MB --no-prune\n\
          Backend: --backend native|csr|ell|sliced|auto|pjrt --artifacts DIR --threads T\n\
@@ -97,6 +103,10 @@ fn print_help() {
                   --worker-addrs H:P,H:P (adopt pre-started cluster-workers)\n\
                   serve-smoke --ranks N --requests R --stats-out FILE  (loopback\n\
                   load + bit-identity gate vs in-process sliced serving)\n\
+                  --metrics-out FILE (serve-smoke: {{\"op\":\"metrics\"}} snapshot)\n\
+         Obs:     --trace-out FILE on serve|serve-smoke|cluster-run (Chrome\n\
+                  trace-event JSON for chrome://tracing / Perfetto);\n\
+                  infer --spans-out FILE (same format, in-process pass)\n\
          Cluster: cluster-run --ranks N  (spawns N cluster-worker processes)\n\
                   --wire json|bin (data-frame encoding, default bin)\n\
                   --chunk ROWS (pipelined scatter sub-panels; 0 = whole shards)\n\
@@ -104,6 +114,7 @@ fn print_help() {
          IO:      --config FILE --data DIR --stream\n\
          Sim:     --gpus LIST --gpu v100|a100\n\
          Bench:   check-bench --file BENCH_x.json   (validate spdnn-bench-v1 schema)\n\
+                  check-metrics --file metrics.prom (validate Prometheus text)\n\
                   bench-trend OLD.json NEW.json [--threshold PCT]  (regression gate)"
     );
 }
@@ -204,7 +215,15 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let opts = run_options(args)?;
     let data_dir = args.get("data").map(PathBuf::from);
     let trace_out = args.get("trace-out").map(PathBuf::from);
+    let spans_out = args.get("spans-out").map(PathBuf::from);
     args.finish()?;
+    // `--trace-out` keeps its historical meaning (the per-layer activity
+    // trajectory that calibrates `simulate --trace`); `--spans-out` is
+    // the obs timeline in Chrome trace-event JSON.
+    if spans_out.is_some() {
+        otr::enable();
+        otr::set_process_lane(0, "spdnn");
+    }
 
     let ds = match &data_dir {
         Some(dir) if dir.join("weights.bin").exists() => Dataset::load(dir, &cfg)?,
@@ -237,6 +256,10 @@ fn cmd_infer(args: &Args) -> Result<()> {
         let trace = ActivityTrace::from_report(&report)?;
         trace.save(&path)?;
         println!("  trace          -> {} ({} layers)", path.display(), trace.layers());
+    }
+    if let Some(path) = &spans_out {
+        let events = otr::export_chrome(path).context("writing the Chrome trace")?;
+        println!("  spans          -> {} ({events} events)", path.display());
     }
     Ok(())
 }
@@ -314,6 +337,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_wait = duration_ms_arg(args, "max-wait-ms", 2.0)?;
     let queue_cap = args.usize_or("queue-cap", 256)?;
     let deadline = duration_ms_arg(args, "deadline-ms", 250.0)?;
+    let trace_out = args.get("trace-out").map(PathBuf::from);
     let backend = serve_backend(args, &cfg)?;
     let cluster = serve_cluster_config(args)?;
     args.finish()?;
@@ -327,6 +351,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         replicas,
         policy: BatchPolicy { max_batch, max_wait },
         admission: AdmissionConfig { queue_cap, deadline, ..Default::default() },
+        trace_out,
         ..Default::default()
     };
     let reference = ReferencePanel { features: ds.features.clone(), neurons: cfg.neurons };
@@ -403,6 +428,8 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     let max_batch = args.usize_or("max-batch", 8)?;
     let max_wait = duration_ms_arg(args, "max-wait-ms", 2.0)?;
     let stats_out = args.get("stats-out").map(PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    let trace_out = args.get("trace-out").map(PathBuf::from);
     let backend = serve_backend(args, &cfg)?;
     let cluster = serve_cluster_config(args)?
         .ok_or_else(|| anyhow::anyhow!("serve-smoke needs --ranks N (at least 1)"))?;
@@ -432,6 +459,7 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
         port: 0,
         replicas,
         policy: BatchPolicy { max_batch, max_wait },
+        trace_out: trace_out.clone(),
         ..Default::default()
     };
     let reference = ReferencePanel { features: ds.features.clone(), neurons: n };
@@ -488,8 +516,25 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
             .with_context(|| format!("writing {}", path.display()))?;
         println!("  stats snapshot -> {}", path.display());
     }
+    // The metrics verb is part of the smoke gate: the exposition must
+    // validate (the same check `spdnn check-metrics` applies in CI).
+    let metrics_text = match client.call(&Request::Metrics)? {
+        WireResponse::Metrics { text } => text,
+        other => bail!("metrics verb failed: {other:?}"),
+    };
+    let summary =
+        validate_exposition(&metrics_text).context("metrics exposition failed validation")?;
+    println!("  metrics: {} families, {} samples", summary.families, summary.samples);
+    if let Some(path) = &metrics_out {
+        std::fs::write(path, &metrics_text)
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("  metrics snapshot -> {}", path.display());
+    }
     oracle.shutdown();
     let report = handle.shutdown();
+    if let Some(path) = &trace_out {
+        println!("  trace -> {}", path.display());
+    }
 
     println!(
         "  requests={} mismatches={mismatches} protocol_errors={protocol_errors} \
@@ -573,6 +618,7 @@ fn cmd_cluster_run(args: &Args) -> Result<()> {
     let ranks = args.usize_or("ranks", 2)?;
     let wire = WireFormat::parse(args.get_or("wire", "bin"))?;
     let chunk = args.usize_or("chunk", 0)?;
+    let trace_out = args.get("trace-out").map(PathBuf::from);
     args.finish()?;
     if matches!(opts.backend, Backend::Pjrt { .. }) {
         bail!("cluster-run drives the native engines (--backend native|csr|ell|sliced|auto)");
@@ -606,7 +652,17 @@ fn cmd_cluster_run(args: &Args) -> Result<()> {
     let program = std::env::current_exe().context("resolving the spdnn binary path")?;
     let mut cluster =
         LocalCluster::start_with(&program, ranks, &model, spec, cfg.prune, cluster_opts)?;
-    let report = cluster.run(&ds.features)?;
+    // A trace sink turns the pass into a traced one: the TraceId rides
+    // the shard frames, each rank returns its spans, and the stitched
+    // timeline lands in Chrome trace-event JSON for Perfetto.
+    let trace = if trace_out.is_some() {
+        otr::enable();
+        otr::set_process_lane(0, "coordinator");
+        TraceId::generate()
+    } else {
+        TraceId::NONE
+    };
+    let report = cluster.run_traced(&ds.features, trace)?;
 
     if report.categories != ds.truth_categories {
         bail!(
@@ -653,6 +709,14 @@ fn cmd_cluster_run(args: &Args) -> Result<()> {
         worst.0
     );
     println!("  categories       {} / {} features", report.categories.len(), cfg.batch);
+    if let Some(path) = &trace_out {
+        let events = otr::export_chrome(path).context("writing the Chrome trace")?;
+        println!(
+            "  trace            -> {} ({events} events, trace {})",
+            path.display(),
+            trace.to_hex()
+        );
+    }
     cluster.stop().context("cluster shutdown")?;
     println!("  VALID (bit-identical to single-process ground truth; clean shutdown)");
     Ok(())
@@ -794,6 +858,26 @@ fn cmd_check_bench(args: &Args) -> Result<()> {
     validate_report(&doc).with_context(|| format!("validating {}", path.display()))?;
     let cases = doc.req_arr("cases")?.len();
     println!("{}: valid spdnn-bench-v1 report ({cases} cases)", path.display());
+    Ok(())
+}
+
+/// Validate a Prometheus text-exposition snapshot (what `{"op":"metrics"}`
+/// returns) the same way `check-bench` gates BENCH files: every sample
+/// must belong to a typed, HELP-ed family with a finite value. Exit code
+/// is the CI metrics gate.
+fn cmd_check_metrics(args: &Args) -> Result<()> {
+    let path = PathBuf::from(args.get_or("file", "metrics.prom"));
+    args.finish()?;
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let summary =
+        validate_exposition(&text).with_context(|| format!("validating {}", path.display()))?;
+    println!(
+        "{}: valid Prometheus exposition ({} families, {} samples)",
+        path.display(),
+        summary.families,
+        summary.samples
+    );
     Ok(())
 }
 

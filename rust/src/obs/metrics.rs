@@ -1,0 +1,534 @@
+//! Process-global metrics registry: named counters, gauges and
+//! histograms, registered once and rendered in Prometheus text
+//! exposition format (the `{"op":"metrics"}` serve verb and the
+//! `spdnn check-metrics` gate consume that rendering).
+//!
+//! Conventions:
+//!   * every family is `spdnn_<subsystem>_<what>[_total|_bytes|_seconds]`
+//!     — `check-metrics` enforces the `spdnn_` prefix;
+//!   * label cardinality stays tiny and bounded (`rank="N"` is the only
+//!     labelled family group); per-layer quantities go through a
+//!     histogram, never a per-layer label;
+//!   * handles are cheap `Arc` clones around atomics — registration cost
+//!     is paid once, updates are lock-free.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Result};
+
+// ---------------------------------------------------------------- handles
+
+/// Monotonic counter.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time signed value.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+struct HistogramInner {
+    /// Upper bounds (exclusive of the implicit `+Inf` bucket), ascending.
+    bounds: Vec<f64>,
+    /// Per-bucket observation counts (len = bounds.len() + 1 for +Inf).
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Sum of observations as f64 bits (CAS loop on update).
+    sum_bits: AtomicU64,
+}
+
+/// Fixed-bucket histogram.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramInner>);
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        let h = &self.0;
+        let idx = h.bounds.partition_point(|b| v > *b);
+        h.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        h.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = h.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match h.sum_bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Default latency buckets in seconds (100µs .. 30s, roughly ×3 apart).
+pub const LATENCY_BUCKETS: &[f64] =
+    &[0.0001, 0.0003, 0.001, 0.003, 0.01, 0.03, 0.1, 0.3, 1.0, 3.0, 10.0, 30.0];
+
+/// Default size buckets for count-valued histograms (1 .. 1M, ×4 apart).
+pub const SIZE_BUCKETS: &[f64] =
+    &[1.0, 4.0, 16.0, 64.0, 256.0, 1024.0, 4096.0, 16384.0, 65536.0, 262144.0, 1048576.0];
+
+// --------------------------------------------------------------- registry
+
+enum Series {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+struct Family {
+    help: String,
+    /// label-string ("" or `rank="0"`) → series, stable order.
+    series: BTreeMap<String, Series>,
+}
+
+fn kind_str(s: &Series) -> &'static str {
+    match s {
+        Series::Counter(_) => "counter",
+        Series::Gauge(_) => "gauge",
+        Series::Histogram(_) => "histogram",
+    }
+}
+
+static REGISTRY: OnceLock<Mutex<BTreeMap<String, Family>>> = OnceLock::new();
+
+fn registry() -> std::sync::MutexGuard<'static, BTreeMap<String, Family>> {
+    REGISTRY
+        .get_or_init(|| Mutex::new(BTreeMap::new()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn label_string(labels: &[(&str, &str)]) -> String {
+    labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{v}\""))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn register<F>(name: &str, labels: &[(&str, &str)], help: &str, make: F) -> Series
+where
+    F: FnOnce() -> Series,
+{
+    debug_assert!(name.starts_with("spdnn_"), "metric {name} must be spdnn_-prefixed");
+    let mut reg = registry();
+    let fam = reg.entry(name.to_string()).or_insert_with(|| Family {
+        help: help.to_string(),
+        series: BTreeMap::new(),
+    });
+    let key = label_string(labels);
+    let entry = fam.series.entry(key).or_insert_with(make);
+    match entry {
+        Series::Counter(c) => Series::Counter(c.clone()),
+        Series::Gauge(g) => Series::Gauge(g.clone()),
+        Series::Histogram(h) => Series::Histogram(h.clone()),
+    }
+}
+
+/// Register (or fetch) an unlabelled counter.
+pub fn counter(name: &str, help: &str) -> Counter {
+    counter_labeled(name, &[], help)
+}
+
+pub fn counter_labeled(name: &str, labels: &[(&str, &str)], help: &str) -> Counter {
+    match register(name, labels, help, || {
+        Series::Counter(Counter(Arc::new(AtomicU64::new(0))))
+    }) {
+        Series::Counter(c) => c,
+        // A name registered under another kind: hand out a detached
+        // handle rather than panicking the serving path.
+        _ => Counter(Arc::new(AtomicU64::new(0))),
+    }
+}
+
+pub fn gauge(name: &str, help: &str) -> Gauge {
+    gauge_labeled(name, &[], help)
+}
+
+pub fn gauge_labeled(name: &str, labels: &[(&str, &str)], help: &str) -> Gauge {
+    match register(name, labels, help, || Series::Gauge(Gauge(Arc::new(AtomicI64::new(0))))) {
+        Series::Gauge(g) => g,
+        _ => Gauge(Arc::new(AtomicI64::new(0))),
+    }
+}
+
+pub fn histogram(name: &str, help: &str, bounds: &[f64]) -> Histogram {
+    histogram_labeled(name, &[], help, bounds)
+}
+
+pub fn histogram_labeled(
+    name: &str,
+    labels: &[(&str, &str)],
+    help: &str,
+    bounds: &[f64],
+) -> Histogram {
+    match register(name, labels, help, || {
+        Series::Histogram(Histogram(Arc::new(HistogramInner {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        })))
+    }) {
+        Series::Histogram(h) => h,
+        _ => Histogram(Arc::new(HistogramInner {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        })),
+    }
+}
+
+// --------------------------------------------------------------- render
+
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{v:.1}")
+    } else {
+        format!("{v}")
+    }
+}
+
+fn series_name(base: &str, suffix: &str, labels: &str, extra: Option<&str>) -> String {
+    let mut l = String::new();
+    if !labels.is_empty() {
+        l.push_str(labels);
+    }
+    if let Some(e) = extra {
+        if !l.is_empty() {
+            l.push(',');
+        }
+        l.push_str(e);
+    }
+    if l.is_empty() {
+        format!("{base}{suffix}")
+    } else {
+        format!("{base}{suffix}{{{l}}}")
+    }
+}
+
+/// Render every registered family in Prometheus text exposition format.
+pub fn render() -> String {
+    let reg = registry();
+    let mut out = String::new();
+    for (name, fam) in reg.iter() {
+        let kind = match fam.series.values().next() {
+            Some(s) => kind_str(s),
+            None => continue,
+        };
+        out.push_str(&format!("# HELP {name} {}\n", fam.help));
+        out.push_str(&format!("# TYPE {name} {kind}\n"));
+        for (labels, series) in &fam.series {
+            match series {
+                Series::Counter(c) => {
+                    let series = series_name(name, "", labels, None);
+                    out.push_str(&format!("{series} {}\n", c.get()));
+                }
+                Series::Gauge(g) => {
+                    let series = series_name(name, "", labels, None);
+                    out.push_str(&format!("{series} {}\n", g.get()));
+                }
+                Series::Histogram(h) => {
+                    let mut cum = 0u64;
+                    for (i, b) in h.0.bounds.iter().enumerate() {
+                        cum += h.0.buckets[i].load(Ordering::Relaxed);
+                        let le = format!("le=\"{}\"", fmt_f64(*b));
+                        out.push_str(&format!(
+                            "{} {cum}\n",
+                            series_name(name, "_bucket", labels, Some(&le))
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{} {}\n",
+                        series_name(name, "_bucket", labels, Some("le=\"+Inf\"")),
+                        h.count()
+                    ));
+                    out.push_str(&format!(
+                        "{} {}\n",
+                        series_name(name, "_sum", labels, None),
+                        fmt_f64(h.sum())
+                    ));
+                    out.push_str(&format!(
+                        "{} {}\n",
+                        series_name(name, "_count", labels, None),
+                        h.count()
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------- validation
+
+/// Validated shape of an exposition document: family count and sample
+/// count, for `check-metrics` to report.
+pub struct ExpositionSummary {
+    pub families: usize,
+    pub samples: usize,
+}
+
+fn parse_sample_line(line: &str) -> Result<(String, String, f64)> {
+    // `name{labels} value` or `name value`; value may be +Inf/NaN per
+    // the exposition format, but we reject non-finite — nothing the
+    // registry renders produces one.
+    let (name_part, value_part) = match line.rfind(' ') {
+        Some(i) => (&line[..i], &line[i + 1..]),
+        None => bail!("sample line {line:?} has no value"),
+    };
+    let (name, labels) = match name_part.find('{') {
+        Some(i) => {
+            if !name_part.ends_with('}') {
+                bail!("unbalanced labels in {line:?}");
+            }
+            (&name_part[..i], &name_part[i + 1..name_part.len() - 1])
+        }
+        None => (name_part, ""),
+    };
+    if name.is_empty()
+        || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        || name.chars().next().is_some_and(|c| c.is_ascii_digit())
+    {
+        bail!("invalid metric name {name:?}");
+    }
+    let value: f64 = value_part
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad sample value {value_part:?} in {line:?}"))?;
+    if !value.is_finite() {
+        bail!("non-finite sample value in {line:?}");
+    }
+    Ok((name.to_string(), labels.to_string(), value))
+}
+
+/// Family a sample belongs to, accounting for histogram suffixes.
+fn family_of(name: &str, types: &BTreeMap<String, String>) -> String {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            if types.get(base).map(String::as_str) == Some("histogram") {
+                return base.to_string();
+            }
+        }
+    }
+    name.to_string()
+}
+
+/// Schema gate for the Prometheus exposition the `{"op":"metrics"}` verb
+/// returns (mirrors `bench::validate_report` for `spdnn-bench-v1`):
+/// every family must be `spdnn_`-prefixed, typed before sampled, with a
+/// known TYPE; histograms need a `+Inf` bucket, `_sum` and `_count`
+/// consistent with the bucket counts.
+pub fn validate_exposition(text: &str) -> Result<ExpositionSummary> {
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut helps: BTreeMap<String, bool> = BTreeMap::new();
+    let mut sampled: BTreeMap<String, usize> = BTreeMap::new();
+    // histogram (family, label set) → (+Inf bucket value, _count value).
+    let mut hist: BTreeMap<(String, String), (Option<f64>, Option<f64>)> = BTreeMap::new();
+    let mut samples = 0usize;
+    for raw in text.lines() {
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.splitn(2, ' ');
+            let name = it.next().unwrap_or_default();
+            let kind = it.next().unwrap_or_default();
+            if !matches!(kind, "counter" | "gauge" | "histogram") {
+                bail!("unknown TYPE {kind:?} for {name:?}");
+            }
+            if types.insert(name.to_string(), kind.to_string()).is_some() {
+                bail!("duplicate TYPE for {name:?}");
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split(' ').next().unwrap_or_default();
+            helps.insert(name.to_string(), true);
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // other comments are legal
+        }
+        let (name, labels, value) = parse_sample_line(line)?;
+        let family = family_of(&name, &types);
+        if !family.starts_with("spdnn_") {
+            bail!("family {family:?} is not spdnn_-prefixed");
+        }
+        let kind = match types.get(&family) {
+            Some(k) => k.clone(),
+            None => bail!("sample for {family:?} appears before its # TYPE line"),
+        };
+        if kind == "histogram" {
+            // Strip the `le` label to key per-series bookkeeping.
+            let base_labels: Vec<&str> =
+                labels.split(',').filter(|p| !p.is_empty() && !p.starts_with("le=")).collect();
+            let key = (family.clone(), base_labels.join(","));
+            let entry = hist.entry(key).or_insert((None, None));
+            if name.ends_with("_bucket") && labels.contains("le=\"+Inf\"") {
+                entry.0 = Some(value);
+            } else if name.ends_with("_count") {
+                entry.1 = Some(value);
+            } else if !name.ends_with("_bucket") && !name.ends_with("_sum") {
+                bail!("histogram {family:?} has stray sample {name:?}");
+            }
+        } else if value < 0.0 && kind == "counter" {
+            bail!("counter {name:?} is negative");
+        }
+        *sampled.entry(family).or_insert(0) += 1;
+        samples += 1;
+    }
+    if sampled.is_empty() {
+        bail!("no samples in exposition");
+    }
+    for family in sampled.keys() {
+        if !helps.contains_key(family) {
+            bail!("family {family:?} has no # HELP line");
+        }
+    }
+    for ((family, labels), (inf, count)) in &hist {
+        let inf = inf.ok_or_else(|| {
+            anyhow::anyhow!("histogram {family:?}{{{labels}}} lacks a +Inf bucket")
+        })?;
+        let count = count.ok_or_else(|| {
+            anyhow::anyhow!("histogram {family:?}{{{labels}}} lacks a _count sample")
+        })?;
+        if (inf - count).abs() > 0.0 {
+            bail!("histogram {family:?}: +Inf bucket {inf} != count {count}");
+        }
+    }
+    Ok(ExpositionSummary { families: sampled.len(), samples })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_histogram_roundtrip() {
+        let c = counter("spdnn_test_ops_total", "test counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(counter("spdnn_test_ops_total", "test counter").get(), 5);
+
+        let g = gauge("spdnn_test_depth", "test gauge");
+        g.set(7);
+        g.add(-2);
+        assert_eq!(g.get(), 5);
+
+        let h = histogram("spdnn_test_latency_seconds", "test histogram", LATENCY_BUCKETS);
+        h.observe(0.0002);
+        h.observe(0.5);
+        h.observe(100.0); // lands in +Inf
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 100.5002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn labeled_series_are_distinct() {
+        let a = counter_labeled("spdnn_test_bytes_total", &[("rank", "0")], "bytes");
+        let b = counter_labeled("spdnn_test_bytes_total", &[("rank", "1")], "bytes");
+        a.add(10);
+        b.add(20);
+        assert_eq!(a.get(), 10);
+        assert_eq!(b.get(), 20);
+        let text = render();
+        assert!(text.contains("spdnn_test_bytes_total{rank=\"0\"} 10"));
+        assert!(text.contains("spdnn_test_bytes_total{rank=\"1\"} 20"));
+    }
+
+    #[test]
+    fn render_passes_own_validation() {
+        counter("spdnn_test_render_total", "ensure at least one family").inc();
+        let h = histogram("spdnn_test_render_seconds", "histo", &[0.01, 0.1]);
+        h.observe(0.005);
+        h.observe(5.0);
+        let text = render();
+        let summary = validate_exposition(&text).expect("registry output must validate");
+        assert!(summary.families >= 2);
+        assert!(summary.samples >= 2);
+        // Histogram lines are cumulative and well-formed.
+        assert!(text.contains("spdnn_test_render_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("spdnn_test_render_seconds_count 2"));
+    }
+
+    #[test]
+    fn validation_rejects_malformed() {
+        assert!(validate_exposition("").is_err());
+        // Sample before TYPE.
+        assert!(validate_exposition("spdnn_x_total 1\n# TYPE spdnn_x_total counter\n").is_err());
+        // Non-spdnn prefix.
+        assert!(validate_exposition(
+            "# HELP other_total t\n# TYPE other_total counter\nother_total 1\n"
+        )
+        .is_err());
+        // Unknown TYPE.
+        assert!(validate_exposition("# TYPE spdnn_x summary\n").is_err());
+        // Histogram without +Inf.
+        let h = "# HELP spdnn_h h\n# TYPE spdnn_h histogram\n\
+                 spdnn_h_bucket{le=\"1.0\"} 1\nspdnn_h_sum 0.5\nspdnn_h_count 1\n";
+        assert!(validate_exposition(h).is_err());
+        // Histogram count mismatch.
+        let h2 = "# HELP spdnn_h h\n# TYPE spdnn_h histogram\n\
+                  spdnn_h_bucket{le=\"+Inf\"} 2\nspdnn_h_sum 0.5\nspdnn_h_count 1\n";
+        assert!(validate_exposition(h2).is_err());
+        // Bad value.
+        assert!(validate_exposition(
+            "# HELP spdnn_x x\n# TYPE spdnn_x gauge\nspdnn_x abc\n"
+        )
+        .is_err());
+        // Missing HELP.
+        assert!(validate_exposition("# TYPE spdnn_x counter\nspdnn_x 1\n").is_err());
+    }
+
+    #[test]
+    fn valid_exposition_accepted() {
+        let text = "# HELP spdnn_serve_requests_total answered\n\
+                    # TYPE spdnn_serve_requests_total counter\n\
+                    spdnn_serve_requests_total 42\n\
+                    # HELP spdnn_serve_queue_depth depth\n\
+                    # TYPE spdnn_serve_queue_depth gauge\n\
+                    spdnn_serve_queue_depth 3\n";
+        let s = validate_exposition(text).unwrap();
+        assert_eq!(s.families, 2);
+        assert_eq!(s.samples, 2);
+    }
+}

@@ -1,0 +1,24 @@
+//! `spdnn::obs` — end-to-end observability: RAII spans in a
+//! lock-sharded trace buffer, a per-request [`TraceId`] propagated over
+//! both wires (serve JSON protocol and `spdnn-clu1` frames), a
+//! Prometheus-rendered metrics registry, and Chrome trace-event export.
+//!
+//! Zero external dependencies, matching `util::logger`'s posture. The
+//! span recorder is disabled until a sink (`--trace-out`) attaches, and
+//! the disabled path is a single relaxed atomic load.
+//!
+//! The pre-existing instrumentation consumes this layer instead of
+//! duplicating it: `WorkerMetrics.layer_secs` and `ServerStats` latency
+//! samples are span durations, and cluster scatter/gather byte counts
+//! feed `spdnn_cluster_*_bytes_total` counters.
+
+pub mod metrics;
+pub mod trace;
+
+pub use trace::{chrome_events, chrome_json, export_chrome, SpanRecord, TraceId};
+pub use trace::{disable, drain, enable, enabled, register_lane_label, set_process_lane};
+pub use trace::{span, timed};
+
+// `obs::span!(...)` — the macro itself must live at the crate root
+// (#[macro_export]); re-export it under the module path users expect.
+pub use crate::obs_span as span;

@@ -1,0 +1,556 @@
+//! Span recording: RAII wall-time intervals in a lock-sharded in-memory
+//! buffer, stitched across processes by a per-request [`TraceId`] and
+//! exported as Chrome trace-event JSON (openable in `chrome://tracing`
+//! or Perfetto).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **No-op when disabled.** The recorder is off until a sink (a
+//!    `--trace-out` file) is attached. [`span`] checks one relaxed
+//!    atomic and returns an empty guard — no clock read, no allocation,
+//!    no lock. [`timed`] always measures (it replaces pre-existing
+//!    timers whose durations feed reports regardless of tracing) but
+//!    only *records* when enabled.
+//! 2. **Cross-process alignment.** Timestamps are UNIX-epoch
+//!    microseconds (`SystemTime`), not process-relative `Instant`s, so
+//!    spans shipped back from cluster rank processes land on the same
+//!    axis as coordinator spans without clock negotiation. Durations
+//!    still come from a monotonic `Instant` for precision.
+//! 3. **Lock sharding.** Recording threads hash to one of
+//!    [`SHARD_COUNT`] mutex-guarded vectors by a thread-local id, so
+//!    concurrent workers do not serialize on a single buffer lock.
+
+use std::fmt::Display;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------- TraceId
+
+/// Per-request identity propagated across the serve protocol and the
+/// `spdnn-clu1` cluster wire. Zero means "no trace"; the hex form is 16
+/// lowercase digits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TraceId(pub u64);
+
+impl TraceId {
+    pub const NONE: TraceId = TraceId(0);
+
+    pub fn is_none(self) -> bool {
+        self.0 == 0
+    }
+
+    pub fn is_some(self) -> bool {
+        self.0 != 0
+    }
+
+    /// Generate a process-unique, time-salted id (never zero).
+    pub fn generate() -> TraceId {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        static SALT: OnceLock<u64> = OnceLock::new();
+        let salt = *SALT.get_or_init(|| {
+            let nanos = SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(0);
+            let pid = std::process::id() as u64;
+            // SplitMix64 finalizer over time ^ pid: cheap, well mixed.
+            let mut z = nanos ^ (pid << 32) ^ 0x9E37_79B9_7F4A_7C15;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        });
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let id = salt.wrapping_add(seq.wrapping_mul(0x2545_F491_4F6C_DD1D));
+        TraceId(if id == 0 { 1 } else { id })
+    }
+
+    pub fn to_hex(self) -> String {
+        format!("{:016x}", self.0)
+    }
+
+    /// Parse the 16-digit hex form; returns `NONE` for empty input.
+    pub fn parse(s: &str) -> Result<TraceId> {
+        if s.is_empty() {
+            return Ok(TraceId::NONE);
+        }
+        let v = u64::from_str_radix(s, 16).with_context(|| format!("trace id {s:?} is not hex"))?;
+        Ok(TraceId(v))
+    }
+}
+
+// ------------------------------------------------------------ span store
+
+/// One completed span. `lane` is the Chrome `pid` (one lane per process:
+/// 0 = coordinator/server, rank+1 = cluster rank); `tid` is a small
+/// per-process thread index.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanRecord {
+    pub name: String,
+    /// UNIX-epoch microseconds at span start.
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub trace: TraceId,
+    pub lane: u32,
+    pub tid: u32,
+    pub args: Vec<(String, String)>,
+}
+
+const SHARD_COUNT: usize = 16;
+
+struct Store {
+    shards: Vec<Mutex<Vec<SpanRecord>>>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static STORE: OnceLock<Store> = OnceLock::new();
+static PROCESS_LANE: AtomicU32 = AtomicU32::new(0);
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+static LANE_LABELS: OnceLock<Mutex<Vec<(u32, String)>>> = OnceLock::new();
+
+thread_local! {
+    static THREAD_ID: u32 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+fn store() -> &'static Store {
+    STORE.get_or_init(|| Store {
+        shards: (0..SHARD_COUNT).map(|_| Mutex::new(Vec::new())).collect(),
+    })
+}
+
+fn lock_shard(shard: &Mutex<Vec<SpanRecord>>) -> std::sync::MutexGuard<'_, Vec<SpanRecord>> {
+    shard.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Attach the in-memory sink: spans recorded from here on are kept.
+pub fn enable() {
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Detach the sink; [`span`] returns to the no-op fast path.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Release);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// This process's trace lane (Chrome `pid`): 0 for the coordinator /
+/// server process, `rank + 1` for cluster rank processes.
+pub fn set_process_lane(lane: u32, label: &str) {
+    PROCESS_LANE.store(lane, Ordering::Relaxed);
+    register_lane_label(lane, label);
+}
+
+pub fn process_lane() -> u32 {
+    PROCESS_LANE.load(Ordering::Relaxed)
+}
+
+/// Name a lane in the exported trace (the coordinator also registers
+/// labels for remote rank lanes whose spans it re-records).
+pub fn register_lane_label(lane: u32, label: &str) {
+    let labels = LANE_LABELS.get_or_init(|| Mutex::new(Vec::new()));
+    let mut g = labels.lock().unwrap_or_else(|e| e.into_inner());
+    match g.iter_mut().find(|(l, _)| *l == lane) {
+        Some((_, s)) => *s = label.to_string(),
+        None => g.push((lane, label.to_string())),
+    }
+}
+
+fn lane_label(lane: u32) -> Option<String> {
+    let labels = LANE_LABELS.get_or_init(|| Mutex::new(Vec::new()));
+    let g = labels.lock().unwrap_or_else(|e| e.into_inner());
+    g.iter().find(|(l, _)| *l == lane).map(|(_, s)| s.clone())
+}
+
+/// Append one completed span to the buffer (no-op when disabled).
+pub fn record(rec: SpanRecord) {
+    if !enabled() {
+        return;
+    }
+    let tid = THREAD_ID.with(|t| *t);
+    let shard = &store().shards[tid as usize % SHARD_COUNT];
+    lock_shard(shard).push(rec);
+}
+
+/// Drain every shard, returning all spans recorded so far sorted by
+/// (lane, tid, start time).
+pub fn drain() -> Vec<SpanRecord> {
+    let mut out = Vec::new();
+    for shard in &store().shards {
+        out.append(&mut lock_shard(shard));
+    }
+    out.sort_by(|a, b| (a.lane, a.tid, a.ts_us).cmp(&(b.lane, b.tid, b.ts_us)));
+    out
+}
+
+pub fn now_unix_micros() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+// ------------------------------------------------------------ span guard
+
+struct LiveSpan {
+    name: &'static str,
+    trace: TraceId,
+    ts_us: u64,
+    start: Instant,
+    args: Vec<(String, String)>,
+    /// Record into the buffer on finish (false for `timed` guards taken
+    /// while the recorder is off — they still measure, silently).
+    sink: bool,
+}
+
+/// RAII span guard; records its interval when dropped (or explicitly via
+/// [`Span::finish_secs`]). Obtained from [`span`], [`timed`], or the
+/// `obs::span!` macro.
+pub struct Span {
+    inner: Option<LiveSpan>,
+}
+
+impl Span {
+    fn disabled() -> Span {
+        Span { inner: None }
+    }
+
+    /// Attach a key/value argument (no-op on a disabled guard).
+    pub fn arg(mut self, key: &str, value: impl Display) -> Span {
+        if let Some(live) = self.inner.as_mut() {
+            live.args.push((key.to_string(), value.to_string()));
+        }
+        self
+    }
+
+    /// Finish now, returning the measured duration in seconds (0.0 from
+    /// a fully disabled guard). This is the hook that lets existing
+    /// report fields (`layer_secs`, serve latencies) derive from the
+    /// span instead of keeping a parallel timer.
+    pub fn finish_secs(mut self) -> f64 {
+        match self.inner.take() {
+            Some(live) => finish(live),
+            None => 0.0,
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(live) = self.inner.take() {
+            finish(live);
+        }
+    }
+}
+
+fn finish(live: LiveSpan) -> f64 {
+    let dur = live.start.elapsed();
+    if live.sink && enabled() {
+        record(SpanRecord {
+            name: live.name.to_string(),
+            ts_us: live.ts_us,
+            dur_us: dur.as_micros() as u64,
+            trace: live.trace,
+            lane: process_lane(),
+            tid: THREAD_ID.with(|t| *t),
+            args: live.args,
+        });
+    }
+    dur.as_secs_f64()
+}
+
+fn live(name: &'static str, trace: TraceId) -> LiveSpan {
+    LiveSpan {
+        name,
+        trace,
+        ts_us: now_unix_micros(),
+        start: Instant::now(),
+        args: Vec::new(),
+        sink: true,
+    }
+}
+
+/// Start a span. When the recorder is disabled this is the no-op branch:
+/// one relaxed atomic load, no clock read, no allocation.
+pub fn span(name: &'static str, trace: TraceId) -> Span {
+    if !enabled() {
+        return Span::disabled();
+    }
+    Span { inner: Some(live(name, trace)) }
+}
+
+/// Start an always-measuring span: [`Span::finish_secs`] returns a real
+/// duration even when the recorder is off (nothing is recorded then).
+/// Use where the duration itself feeds a report.
+pub fn timed(name: &'static str, trace: TraceId) -> Span {
+    let mut l = live(name, trace);
+    l.sink = enabled();
+    Span { inner: Some(l) }
+}
+
+/// `obs::span!("layer", layer = 3, rank = 1)` — optionally with
+/// `trace = <TraceId>` as the first argument pair.
+#[macro_export]
+macro_rules! obs_span {
+    ($name:expr, trace = $t:expr $(, $k:ident = $v:expr)* $(,)?) => {
+        $crate::obs::trace::span($name, $t)$(.arg(stringify!($k), $v))*
+    };
+    ($name:expr $(, $k:ident = $v:expr)* $(,)?) => {
+        $crate::obs::trace::span($name, $crate::obs::TraceId::NONE)
+            $(.arg(stringify!($k), $v))*
+    };
+}
+
+// --------------------------------------------------------- wire encoding
+
+/// Spans as a JSON array — the form shipped inside `ShardResult` so rank
+/// processes contribute to the coordinator's stitched timeline.
+pub fn spans_to_json(spans: &[SpanRecord]) -> Json {
+    Json::Arr(
+        spans
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::Str(s.name.clone())),
+                    ("ts_us", Json::Int(s.ts_us as i64)),
+                    ("dur_us", Json::Int(s.dur_us as i64)),
+                    ("trace", Json::Str(s.trace.to_hex())),
+                    ("lane", Json::Int(s.lane as i64)),
+                    ("tid", Json::Int(s.tid as i64)),
+                    (
+                        "args",
+                        Json::obj(
+                            s.args
+                                .iter()
+                                .map(|(k, v)| (k.as_str(), Json::Str(v.clone())))
+                                .collect::<Vec<_>>(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+pub fn spans_from_json(doc: &Json) -> Result<Vec<SpanRecord>> {
+    let arr = doc.as_arr().context("spans: expected array")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for s in arr {
+        let mut args = Vec::new();
+        if let Some(a) = s.get("args").and_then(|a| a.as_obj()) {
+            for (k, v) in a {
+                args.push((k.clone(), v.as_str().unwrap_or_default().to_string()));
+            }
+        }
+        out.push(SpanRecord {
+            name: s.req_str("name")?.to_string(),
+            ts_us: s.req_usize("ts_us")? as u64,
+            dur_us: s.req_usize("dur_us")? as u64,
+            trace: TraceId::parse(s.req_str("trace")?)?,
+            lane: s.req_usize("lane")? as u32,
+            tid: s.req_usize("tid")? as u32,
+            args,
+        });
+    }
+    Ok(out)
+}
+
+// --------------------------------------------------------- chrome export
+
+/// Chrome trace-event JSON (the `traceEvents` envelope): one complete
+/// (`ph:"X"`) event per span plus `process_name` metadata naming each
+/// lane. Timestamps are shifted so the earliest span starts at 0 — the
+/// viewers cope with epoch offsets badly.
+pub fn chrome_json(spans: &[SpanRecord]) -> Json {
+    let t0 = spans.iter().map(|s| s.ts_us).min().unwrap_or(0);
+    let mut events: Vec<Json> = Vec::with_capacity(spans.len() + 8);
+    let mut lanes: Vec<u32> = spans.iter().map(|s| s.lane).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    for lane in &lanes {
+        let label = lane_label(*lane).unwrap_or_else(|| {
+            if *lane == 0 {
+                "coordinator".to_string()
+            } else {
+                format!("rank {}", lane - 1)
+            }
+        });
+        events.push(Json::obj(vec![
+            ("name", Json::Str("process_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Int(*lane as i64)),
+            ("tid", Json::Int(0)),
+            ("args", Json::obj(vec![("name", Json::Str(label))])),
+        ]));
+        events.push(Json::obj(vec![
+            ("name", Json::Str("process_sort_index".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Int(*lane as i64)),
+            ("tid", Json::Int(0)),
+            ("args", Json::obj(vec![("sort_index", Json::Int(*lane as i64))])),
+        ]));
+    }
+    for s in spans {
+        let mut args: Vec<(&str, Json)> = Vec::with_capacity(s.args.len() + 1);
+        if s.trace.is_some() {
+            args.push(("trace", Json::Str(s.trace.to_hex())));
+        }
+        for (k, v) in &s.args {
+            args.push((k.as_str(), Json::Str(v.clone())));
+        }
+        events.push(Json::obj(vec![
+            ("name", Json::Str(s.name.clone())),
+            ("ph", Json::Str("X".to_string())),
+            ("ts", Json::Int(s.ts_us.saturating_sub(t0) as i64)),
+            ("dur", Json::Int(s.dur_us as i64)),
+            ("pid", Json::Int(s.lane as i64)),
+            ("tid", Json::Int(s.tid as i64)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// Drain the buffer and write a Chrome trace-event file.
+pub fn export_chrome(path: &Path) -> Result<usize> {
+    let spans = drain();
+    let doc = chrome_json(&spans);
+    std::fs::write(path, doc.to_string())
+        .with_context(|| format!("writing trace to {}", path.display()))?;
+    Ok(spans.len())
+}
+
+/// Extract a rank's spans from a Chrome trace document, for tests and
+/// tooling that assert on exported files.
+pub fn chrome_events(doc: &Json) -> Result<&[Json]> {
+    match doc.req("traceEvents")?.as_arr() {
+        Some(a) => Ok(a),
+        None => bail!("traceEvents is not an array"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The recorder is process-global; tests that toggle it must not
+    /// interleave with each other (other suites' `timed` guards may
+    /// record while we're enabled — we filter by name, drain freely).
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn rec(name: &str, trace: TraceId, lane: u32, ts: u64) -> SpanRecord {
+        SpanRecord {
+            name: name.to_string(),
+            ts_us: ts,
+            dur_us: 5,
+            trace,
+            lane,
+            tid: 0,
+            args: vec![("layer".to_string(), "3".to_string())],
+        }
+    }
+
+    #[test]
+    fn trace_ids_unique_and_hex_roundtrip() {
+        let a = TraceId::generate();
+        let b = TraceId::generate();
+        assert_ne!(a, b);
+        assert!(a.is_some());
+        assert_eq!(TraceId::parse(&a.to_hex()).unwrap(), a);
+        assert_eq!(a.to_hex().len(), 16);
+        assert_eq!(TraceId::parse("").unwrap(), TraceId::NONE);
+        assert!(TraceId::parse("zz").is_err());
+    }
+
+    #[test]
+    fn disabled_span_is_noop() {
+        let _g = guard();
+        disable();
+        {
+            let _s = span("noop", TraceId(7)).arg("k", 1);
+        }
+        let t = timed("measured", TraceId(7));
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        assert!(t.finish_secs() > 0.0, "timed must measure even when off");
+        // Nothing reached the buffer on either path.
+        let names: Vec<String> = drain().into_iter().map(|s| s.name).collect();
+        assert!(!names.contains(&"noop".to_string()));
+        assert!(!names.contains(&"measured".to_string()));
+    }
+
+    #[test]
+    fn enabled_span_records_and_drains() {
+        let _g = guard();
+        enable();
+        {
+            let _s = span("work", TraceId(9)).arg("rank", 1);
+        }
+        let spans = drain();
+        disable();
+        let w = spans.iter().find(|s| s.name == "work" && s.trace == TraceId(9));
+        let w = w.expect("span recorded");
+        assert_eq!(w.args, vec![("rank".to_string(), "1".to_string())]);
+        assert!(drain().iter().all(|s| s.name != "work"), "drain empties");
+    }
+
+    #[test]
+    fn span_macro_forms() {
+        let _g = guard();
+        enable();
+        {
+            let _a = crate::obs_span!("m1");
+            let _b = crate::obs_span!("m2", layer = 3, rank = 1);
+            let _c = crate::obs_span!("m3", trace = TraceId(5), row = 2);
+        }
+        let spans = drain();
+        disable();
+        let m2 = spans.iter().find(|s| s.name == "m2").unwrap();
+        assert_eq!(m2.args[0], ("layer".to_string(), "3".to_string()));
+        let m3 = spans.iter().find(|s| s.name == "m3").unwrap();
+        assert_eq!(m3.trace, TraceId(5));
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let spans = vec![rec("compute", TraceId(0xabc), 2, 1000)];
+        let doc = spans_to_json(&spans);
+        let back = spans_from_json(&doc).unwrap();
+        assert_eq!(back, spans);
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let spans =
+            vec![rec("request", TraceId(0xabc), 0, 2000), rec("compute", TraceId(0xabc), 2, 2100)];
+        let doc = chrome_json(&spans);
+        let events = chrome_events(&doc).unwrap();
+        // 2 lanes × 2 metadata events + 2 span events.
+        assert_eq!(events.len(), 6);
+        let req = events.iter().find(|e| e.req_str("name").ok() == Some("request")).unwrap();
+        assert_eq!(req.req_str("ph").unwrap(), "X");
+        assert_eq!(req.req_usize("ts").unwrap(), 0, "timestamps rebased to 0");
+        assert_eq!(req.req("args").unwrap().req_str("trace").unwrap(), TraceId(0xabc).to_hex());
+        let meta = events
+            .iter()
+            .find(|e| {
+                e.req_str("ph").ok() == Some("M")
+                    && e.req_usize("pid").ok() == Some(2)
+                    && e.req_str("name").ok() == Some("process_name")
+            })
+            .unwrap();
+        assert_eq!(meta.req("args").unwrap().req_str("name").unwrap(), "rank 1");
+    }
+}

@@ -14,6 +14,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::obs::metrics as om;
+
 /// EWMA weight for new service-time observations.
 const ALPHA: f64 = 0.2;
 
@@ -89,6 +91,9 @@ pub struct AdmissionController {
     shed: AtomicU64,
     /// EWMA of per-request service seconds, stored as f64 bits.
     est_bits: AtomicU64,
+    /// Obs mirrors (process-global; the gauge sums across controllers).
+    m_shed: om::Counter,
+    m_depth: om::Gauge,
 }
 
 impl AdmissionController {
@@ -102,6 +107,14 @@ impl AdmissionController {
             admitted: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             est_bits: AtomicU64::new(est.to_bits()),
+            m_shed: om::counter(
+                "spdnn_serve_shed_total",
+                "Requests rejected by admission control (full queue, unmeetable deadline, drain).",
+            ),
+            m_depth: om::gauge(
+                "spdnn_serve_queue_depth",
+                "Requests currently in flight (admitted, not yet answered).",
+            ),
         }
     }
 
@@ -151,6 +164,7 @@ impl AdmissionController {
     ) -> Result<Ticket, Rejection> {
         if ctl.is_draining() {
             ctl.shed.fetch_add(1, Ordering::Relaxed);
+            ctl.m_shed.inc();
             return Err(Rejection::Draining);
         }
         let deadline = deadline.unwrap_or(ctl.cfg.deadline);
@@ -159,6 +173,7 @@ impl AdmissionController {
             let d = ctl.depth.load(Ordering::Acquire);
             if d >= ctl.cfg.queue_cap {
                 ctl.shed.fetch_add(1, Ordering::Relaxed);
+                ctl.m_shed.inc();
                 return Err(Rejection::QueueFull { depth: d, retry_after: est.max(MIN_RETRY) });
             }
             // The queue ahead of us drains in waves of `concurrency`
@@ -172,6 +187,7 @@ impl AdmissionController {
             let predicted = est.mul_f64(waves as f64);
             if predicted > deadline {
                 ctl.shed.fetch_add(1, Ordering::Relaxed);
+                ctl.m_shed.inc();
                 return Err(Rejection::Deadline {
                     predicted,
                     deadline,
@@ -183,6 +199,7 @@ impl AdmissionController {
                 .compare_exchange(d, d + 1, Ordering::AcqRel, Ordering::Acquire)
                 .is_ok()
             {
+                ctl.m_depth.add(1);
                 break;
             }
         }
@@ -223,6 +240,7 @@ impl Ticket {
         if !self.released {
             self.released = true;
             self.ctl.depth.fetch_sub(1, Ordering::AcqRel);
+            self.ctl.m_depth.add(-1);
         }
     }
 }

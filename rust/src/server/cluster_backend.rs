@@ -53,6 +53,7 @@ use crate::cluster::{
 use crate::coordinator::batcher::{collect_panel, BatchPolicy, Response};
 use crate::coordinator::NativeSpec;
 use crate::log_warn;
+use crate::obs::trace::TraceId;
 
 /// How `serve --ranks N` builds and connects its rank fleet.
 #[derive(Clone, Debug)]
@@ -178,6 +179,7 @@ impl RankCounters {
 struct PanelRequest {
     features: Vec<f32>,
     enqueued: Instant,
+    trace: TraceId,
     resp: mpsc::Sender<Result<Response>>,
 }
 
@@ -238,13 +240,24 @@ impl ClusterReplica {
 
     /// Submit one request; returns a receiver for the response.
     pub fn submit(&self, features: Vec<f32>) -> Result<mpsc::Receiver<Result<Response>>> {
+        self.submit_traced(features, TraceId::NONE)
+    }
+
+    /// Submit one request carrying a trace context. The panel it lands
+    /// in runs under that trace: the coordinator's scatter/gather spans
+    /// and the spans the worker ranks return all join the same id.
+    pub fn submit_traced(
+        &self,
+        features: Vec<f32>,
+        trace: TraceId,
+    ) -> Result<mpsc::Receiver<Result<Response>>> {
         if features.len() != self.neurons {
             bail!("feature vector has {} values, model expects {}", features.len(), self.neurons);
         }
         let (rtx, rrx) = mpsc::channel();
         let guard = self.tx.lock().expect("replica tx lock");
         let tx = guard.as_ref().ok_or_else(|| anyhow!("replica stopped"))?;
-        tx.send(PanelRequest { features, enqueued: Instant::now(), resp: rtx })
+        tx.send(PanelRequest { features, enqueued: Instant::now(), trace, resp: rtx })
             .map_err(|_| anyhow!("replica stopped"))?;
         Ok(rrx)
     }
@@ -339,7 +352,10 @@ fn replica_loop(
         for r in &panel {
             y.extend_from_slice(&r.features);
         }
-        let result = coordinator.run(&y);
+        // The panel runs under the first traced request's id (co-batched
+        // peers share the scatter, so one trace sees the whole panel).
+        let trace = panel.iter().map(|r| r.trace).find(|t| t.is_some()).unwrap_or(TraceId::NONE);
+        let result = coordinator.run_traced(&y, trace);
         // Publish cumulative per-rank wire traffic for /stats — also
         // after a failed panel, which may have scattered bytes before
         // breaking.

@@ -29,6 +29,7 @@
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::RecvTimeoutError;
 use std::sync::{Arc, Mutex};
@@ -40,8 +41,10 @@ use anyhow::{bail, Context, Result};
 use crate::cluster::ModelSpec;
 use crate::coordinator::batcher::{BatchPolicy, ServeBackend, ServedModel};
 use crate::coordinator::NativeSpec;
-use crate::log_warn;
+use crate::obs::metrics as om;
+use crate::obs::trace::{self as tr, TraceId};
 use crate::util::json::Json;
+use crate::{log_info, log_warn};
 
 use super::admission::{AdmissionConfig, AdmissionController};
 use super::cluster_backend::{ClusterFleet, ClusterServeConfig};
@@ -84,6 +87,9 @@ pub struct ServerConfig {
     /// Cap on concurrent connections (each costs one OS thread); above it
     /// new connections get an error line and are closed immediately.
     pub max_conns: usize,
+    /// When set, span recording is enabled for the server's lifetime and
+    /// a Chrome trace-event JSON is written here on shutdown.
+    pub trace_out: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -96,6 +102,7 @@ impl Default for ServerConfig {
             admission: AdmissionConfig::default(),
             stats_window: 4096,
             max_conns: 1024,
+            trace_out: None,
         }
     }
 }
@@ -134,6 +141,8 @@ struct Shared {
     /// Worker-rank processes behind a cluster-backed server; taken by
     /// the shutdown path after the replicas have fenced their scatters.
     fleet: Mutex<Option<ClusterFleet>>,
+    /// Chrome trace destination; written once by the shutdown path.
+    trace_out: Option<PathBuf>,
 }
 
 /// Namespace for [`Server::start`] / [`Server::start_cluster`].
@@ -195,6 +204,10 @@ impl Server {
             .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
         listener.set_nonblocking(true).context("nonblocking listener")?;
         let addr = listener.local_addr()?;
+        if cfg.trace_out.is_some() {
+            tr::enable();
+            tr::set_process_lane(0, "server");
+        }
         let shared = Arc::new(Shared {
             router,
             admission,
@@ -204,6 +217,7 @@ impl Server {
             conns: AtomicUsize::new(0),
             max_conns: cfg.max_conns.max(1),
             fleet: Mutex::new(fleet),
+            trace_out: cfg.trace_out.clone(),
         });
         let accept = {
             let shared = shared.clone();
@@ -321,6 +335,12 @@ impl ServerHandle {
             },
             None => true,
         };
+        if let Some(path) = &self.shared.trace_out {
+            match tr::export_chrome(path) {
+                Ok(n) => log_info!("wrote {n} trace events to {}", path.display()),
+                Err(e) => log_warn!("trace export to {} failed: {e:#}", path.display()),
+            }
+        }
         ShutdownReport {
             drained: self.shared.admission.depth() == 0,
             requests: self.shared.stats.requests(),
@@ -432,6 +452,7 @@ fn dispatch(req: Request, shared: &Shared, peer_is_local: bool) -> WireResponse 
         Request::Stats => {
             WireResponse::Stats(shared.stats.snapshot(&shared.admission, &shared.router))
         }
+        Request::Metrics => WireResponse::Metrics { text: om::render() },
         Request::Shutdown => {
             if !peer_is_local {
                 return WireResponse::Error {
@@ -448,6 +469,21 @@ fn dispatch(req: Request, shared: &Shared, peer_is_local: bool) -> WireResponse 
 
 fn infer(req: InferRequest, shared: &Shared) -> WireResponse {
     let want_activations = req.want_activations;
+    // One TraceId per admitted request, minted here (or pinned by the
+    // caller): every span this request produces — batcher, scatter,
+    // worker-rank compute — carries it, so the exported trace stitches
+    // the whole path under one id.
+    let trace = match req.trace.as_deref() {
+        Some(t) => match TraceId::parse(t) {
+            Ok(id) if id.is_some() => id,
+            Ok(_) => TraceId::generate(),
+            Err(e) => {
+                shared.stats.record_error();
+                return WireResponse::Error { message: format!("bad trace id: {e:#}") };
+            }
+        },
+        None => TraceId::generate(),
+    };
     let features = match req.input {
         InferInput::Features(f) => f,
         InferInput::Row(i) => match shared.reference.as_ref().and_then(|p| p.row(i)) {
@@ -477,7 +513,10 @@ fn infer(req: InferRequest, shared: &Shared) -> WireResponse {
     };
     let effective = deadline.unwrap_or_else(|| shared.admission.default_deadline());
     let t0 = Instant::now();
-    let (replica, rx) = match shared.router.submit(features) {
+    // `timed` measures even with recording disabled, so the /stats
+    // latency percentiles come from this span either way.
+    let req_span = tr::timed("request", trace);
+    let (replica, rx) = match shared.router.submit_traced(features, trace) {
         Ok(x) => x,
         Err(e) => {
             shared.stats.record_error();
@@ -488,12 +527,14 @@ fn infer(req: InferRequest, shared: &Shared) -> WireResponse {
         Ok(Ok(r)) => {
             let elapsed = t0.elapsed();
             ticket.complete(elapsed);
-            shared.stats.record_ok(elapsed.as_secs_f64());
+            let span = req_span.arg("replica", replica).arg("batch_size", r.batch_size);
+            shared.stats.record_ok(span.finish_secs());
             WireResponse::Infer {
                 active: r.active,
                 replica,
                 batch_size: r.batch_size,
                 latency_ms: elapsed.as_secs_f64() * 1e3,
+                trace: trace.to_hex(),
                 activations: want_activations.then_some(r.activations),
             }
         }

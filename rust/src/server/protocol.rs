@@ -9,10 +9,17 @@
 //! {"op":"infer","features":[0.0,1.0,...]}            feature vector
 //! {"op":"infer","row":17}                            server-held dataset row
 //! {"op":"infer","row":3,"deadline_ms":50,"activations":false}
+//! {"op":"infer","row":3,"trace":"00c0ffee00c0ffee"}  caller-pinned TraceId
 //! {"op":"stats"}                                     introspection snapshot
+//! {"op":"metrics"}                                   Prometheus exposition
 //! {"op":"ping"}                                      liveness
 //! {"op":"shutdown"}  (alias "drain")                 graceful drain + exit
 //! ```
+//!
+//! Every infer response carries a `trace` field — the request's
+//! `obs::TraceId` in hex, generated at admission when the caller did not
+//! pin one — so a client can correlate its reply with the server-side
+//! trace export (`--trace-out`).
 //!
 //! `shutdown`/`drain` are operator verbs: the server only honours them
 //! from loopback peers (remote clients get an error response).
@@ -46,12 +53,17 @@ pub struct InferRequest {
     pub deadline_ms: Option<f64>,
     /// Return the final activation vector (default true).
     pub want_activations: bool,
+    /// Caller-pinned trace id (16 hex digits); the server generates one
+    /// at admission when absent.
+    pub trace: Option<String>,
 }
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     Infer(InferRequest),
     Stats,
+    /// Prometheus text exposition of the obs metrics registry.
+    Metrics,
     Ping,
     /// Stop accepting new work, answer in-flight requests, then exit.
     Shutdown,
@@ -63,6 +75,7 @@ impl Request {
             input: InferInput::Features(features),
             deadline_ms: None,
             want_activations: true,
+            trace: None,
         })
     }
 
@@ -71,6 +84,7 @@ impl Request {
             input: InferInput::Row(row),
             deadline_ms: None,
             want_activations: true,
+            trace: None,
         })
     }
 
@@ -100,9 +114,18 @@ impl Request {
                     }
                     None => true,
                 };
-                Ok(Request::Infer(InferRequest { input, deadline_ms, want_activations }))
+                let trace = match v.get("trace") {
+                    Some(j) => Some(
+                        j.as_str()
+                            .ok_or_else(|| anyhow!("\"trace\" is not a string"))?
+                            .to_string(),
+                    ),
+                    None => None,
+                };
+                Ok(Request::Infer(InferRequest { input, deadline_ms, want_activations, trace }))
             }
             "stats" => Ok(Request::Stats),
+            "metrics" => Ok(Request::Metrics),
             "ping" => Ok(Request::Ping),
             "shutdown" | "drain" => Ok(Request::Shutdown),
             other => bail!("unknown op {other:?}"),
@@ -126,9 +149,13 @@ impl Request {
                 if !r.want_activations {
                     pairs.push(("activations", Json::Bool(false)));
                 }
+                if let Some(t) = &r.trace {
+                    pairs.push(("trace", Json::Str(t.clone())));
+                }
                 Json::obj(pairs)
             }
             Request::Stats => Json::obj(vec![("op", Json::Str("stats".into()))]),
+            Request::Metrics => Json::obj(vec![("op", Json::Str("metrics".into()))]),
             Request::Ping => Json::obj(vec![("op", Json::Str("ping".into()))]),
             Request::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".into()))]),
         }
@@ -143,12 +170,16 @@ pub enum WireResponse {
         replica: usize,
         batch_size: usize,
         latency_ms: f64,
+        /// The request's TraceId in hex (empty on pre-trace peers).
+        trace: String,
         /// Present unless the request opted out with `"activations":false`.
         activations: Option<Vec<f32>>,
     },
     /// Load-shed: not processed, retry after the hinted backoff.
     Shed { reason: String, retry_after_ms: f64 },
     Stats(Json),
+    /// Prometheus text exposition of the metrics registry.
+    Metrics { text: String },
     Pong,
     /// Acknowledgement of a shutdown/drain op.
     Draining,
@@ -163,7 +194,7 @@ impl WireResponse {
 
     pub fn to_json(&self) -> Json {
         match self {
-            WireResponse::Infer { active, replica, batch_size, latency_ms, activations } => {
+            WireResponse::Infer { active, replica, batch_size, latency_ms, trace, activations } => {
                 let mut pairs = vec![
                     ("ok", Json::Bool(true)),
                     ("kind", Json::Str("infer".into())),
@@ -172,6 +203,9 @@ impl WireResponse {
                     ("batch_size", Json::Int(*batch_size as i64)),
                     ("latency_ms", Json::Num(*latency_ms)),
                 ];
+                if !trace.is_empty() {
+                    pairs.push(("trace", Json::Str(trace.clone())));
+                }
                 if let Some(acts) = activations {
                     let xs: Vec<f64> = acts.iter().map(|&x| x as f64).collect();
                     pairs.push(("activations", Json::arr_f64(&xs)));
@@ -188,6 +222,11 @@ impl WireResponse {
                 ("ok", Json::Bool(true)),
                 ("kind", Json::Str("stats".into())),
                 ("stats", s.clone()),
+            ]),
+            WireResponse::Metrics { text } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("kind", Json::Str("metrics".into())),
+                ("text", Json::Str(text.clone())),
             ]),
             WireResponse::Pong => Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -217,6 +256,11 @@ impl WireResponse {
                 replica: v.req_usize("replica")?,
                 batch_size: v.req_usize("batch_size")?,
                 latency_ms: v.req_f64("latency_ms")?,
+                trace: v
+                    .get("trace")
+                    .and_then(|t| t.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
                 activations: match v.get("activations") {
                     Some(j) => Some(parse_f32_array(j)?),
                     None => None,
@@ -227,6 +271,7 @@ impl WireResponse {
                 retry_after_ms: v.req_f64("retry_after_ms")?,
             }),
             "stats" => Ok(WireResponse::Stats(v.req("stats")?.clone())),
+            "metrics" => Ok(WireResponse::Metrics { text: v.req_str("text")?.to_string() }),
             "pong" => Ok(WireResponse::Pong),
             "draining" => Ok(WireResponse::Draining),
             "error" => Ok(WireResponse::Error { message: v.req_str("error")?.to_string() }),
@@ -301,8 +346,16 @@ mod tests {
             input: InferInput::Row(3),
             deadline_ms: Some(50.0),
             want_activations: false,
+            trace: None,
+        }));
+        roundtrip_request(Request::Infer(InferRequest {
+            input: InferInput::Row(3),
+            deadline_ms: None,
+            want_activations: true,
+            trace: Some("00c0ffee00c0ffee".into()),
         }));
         roundtrip_request(Request::Stats);
+        roundtrip_request(Request::Metrics);
         roundtrip_request(Request::Ping);
         roundtrip_request(Request::Shutdown);
     }
@@ -319,6 +372,7 @@ mod tests {
             replica: 1,
             batch_size: 8,
             latency_ms: 2.5,
+            trace: "deadbeefdeadbeef".into(),
             activations: Some(vec![0.0, 3.25]),
         });
         roundtrip_response(WireResponse::Infer {
@@ -326,6 +380,7 @@ mod tests {
             replica: 0,
             batch_size: 1,
             latency_ms: 0.5,
+            trace: String::new(),
             activations: None,
         });
         roundtrip_response(WireResponse::Shed {
@@ -333,6 +388,10 @@ mod tests {
             retry_after_ms: 4.0,
         });
         roundtrip_response(WireResponse::Stats(Json::obj(vec![("requests", Json::Int(9))])));
+        roundtrip_response(WireResponse::Metrics {
+            text: "# TYPE spdnn_serve_requests_total counter\nspdnn_serve_requests_total 1\n"
+                .into(),
+        });
         roundtrip_response(WireResponse::Pong);
         roundtrip_response(WireResponse::Draining);
         roundtrip_response(WireResponse::Error { message: "boom".into() });
@@ -364,5 +423,17 @@ mod tests {
         assert_eq!(line, r#"{"op":"infer","row":2}"#);
         let line = WireResponse::Pong.to_json().to_string();
         assert_eq!(line, r#"{"kind":"pong","ok":true,"version":1}"#);
+        // Optional trace field: absent when unset, literal hex when set.
+        let line = Request::Infer(InferRequest {
+            input: InferInput::Row(2),
+            deadline_ms: None,
+            want_activations: true,
+            trace: Some("00000000000000ab".into()),
+        })
+        .to_json()
+        .to_string();
+        assert_eq!(line, r#"{"op":"infer","row":2,"trace":"00000000000000ab"}"#);
+        let line = Request::Metrics.to_json().to_string();
+        assert_eq!(line, r#"{"op":"metrics"}"#);
     }
 }

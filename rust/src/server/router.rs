@@ -34,6 +34,7 @@ use crate::coordinator::batcher::{
 };
 use crate::coordinator::partition::{imbalance, partition_even};
 use crate::coordinator::NativeSpec;
+use crate::obs::trace::TraceId;
 
 use super::cluster_backend::{ClusterFleet, ClusterReplica};
 
@@ -44,10 +45,14 @@ enum ReplicaUnit {
 }
 
 impl ReplicaUnit {
-    fn submit(&self, features: Vec<f32>) -> Result<mpsc::Receiver<Result<Response>>> {
+    fn submit(
+        &self,
+        features: Vec<f32>,
+        trace: TraceId,
+    ) -> Result<mpsc::Receiver<Result<Response>>> {
         match self {
-            ReplicaUnit::Native(s) => s.submit(features),
-            ReplicaUnit::Cluster(c) => c.submit(features),
+            ReplicaUnit::Native(s) => s.submit_traced(features, trace),
+            ReplicaUnit::Cluster(c) => c.submit_traced(features, trace),
         }
     }
 
@@ -193,6 +198,17 @@ impl ReplicaRouter {
     /// next live replica — so a dead rank degrades capacity, not
     /// availability.
     pub fn submit(&self, features: Vec<f32>) -> Result<(usize, mpsc::Receiver<Result<Response>>)> {
+        self.submit_traced(features, TraceId::NONE)
+    }
+
+    /// [`submit`](Self::submit) with a trace context: the chosen
+    /// replica's batch (and, for rank-backed replicas, its scatter and
+    /// the worker-rank spans) records under `trace`.
+    pub fn submit_traced(
+        &self,
+        features: Vec<f32>,
+        trace: TraceId,
+    ) -> Result<(usize, mpsc::Receiver<Result<Response>>)> {
         let seq = self.seq.fetch_add(1, Ordering::Relaxed);
         let primary = self.slots[seq % self.slots.len()];
         let n = self.units.len();
@@ -202,7 +218,7 @@ impl ReplicaRouter {
             .ok_or_else(|| {
                 anyhow!("every replica is degraded (all cluster rank subsets lost a rank)")
             })?;
-        let rx = self.units[replica].submit(features)?;
+        let rx = self.units[replica].submit(features, trace)?;
         self.routed[replica].fetch_add(1, Ordering::Relaxed);
         Ok((replica, rx))
     }

@@ -8,9 +8,10 @@
 //! the offline bench harness uses.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
 
+use crate::obs::metrics as om;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
@@ -50,6 +51,11 @@ pub struct ServerStats {
     errors: AtomicU64,
     /// Recent end-to-end inference latencies in seconds.
     latencies: Mutex<Ring>,
+    /// Process-global obs mirrors of the per-server counters, surfaced
+    /// through `{"op":"metrics"}`.
+    m_requests: om::Counter,
+    m_errors: om::Counter,
+    m_latency: om::Histogram,
 }
 
 impl ServerStats {
@@ -59,19 +65,45 @@ impl ServerStats {
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             latencies: Mutex::new(Ring::new(window)),
+            m_requests: om::counter(
+                "spdnn_serve_requests_total",
+                "Admitted inference requests (answered or failed).",
+            ),
+            m_errors: om::counter(
+                "spdnn_serve_errors_total",
+                "Admitted inference requests that failed.",
+            ),
+            m_latency: om::histogram(
+                "spdnn_serve_latency_seconds",
+                "End-to-end inference latency (admission to reply).",
+                om::LATENCY_BUCKETS,
+            ),
         }
     }
 
-    /// One answered inference request.
+    /// Lock the latency ring, recovering from a poisoned mutex: a
+    /// recorder thread that panicked mid-push can at worst lose its own
+    /// sample, never the introspection path for the server's lifetime.
+    fn latencies(&self) -> MutexGuard<'_, Ring> {
+        self.latencies.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// One answered inference request. The latency is the `request`
+    /// obs-span duration measured at the protocol layer — the span is
+    /// the single timing source, this just aggregates it.
     pub fn record_ok(&self, latency_secs: f64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        self.latencies.lock().expect("stats lock").push(latency_secs);
+        self.latencies().push(latency_secs);
+        self.m_requests.inc();
+        self.m_latency.observe(latency_secs);
     }
 
     /// One failed inference request (admitted but not answered ok).
     pub fn record_error(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.errors.fetch_add(1, Ordering::Relaxed);
+        self.m_requests.inc();
+        self.m_errors.inc();
     }
 
     pub fn requests(&self) -> u64 {
@@ -87,7 +119,7 @@ impl ServerStats {
     }
 
     pub fn latency_summary(&self) -> Option<Summary> {
-        Summary::of(&self.latencies.lock().expect("stats lock").samples())
+        Summary::of(&self.latencies().samples())
     }
 
     /// Full introspection snapshot — the `{"op":"stats"}` payload.
@@ -174,6 +206,23 @@ mod tests {
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         // Oldest samples were overwritten; the last four survive.
         assert_eq!(s, vec![6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn poisoned_latency_lock_recovers() {
+        let st = Arc::new(ServerStats::new(8));
+        st.record_ok(0.001);
+        let st2 = Arc::clone(&st);
+        // A recorder thread that panics while holding the ring lock
+        // poisons the mutex; /stats must keep working regardless.
+        let _ = std::thread::spawn(move || {
+            let _guard = st2.latencies();
+            panic!("poison the stats lock");
+        })
+        .join();
+        st.record_ok(0.002);
+        let s = st.latency_summary().expect("summary survives poisoning");
+        assert_eq!(s.count, 2);
     }
 
     #[test]

@@ -95,22 +95,89 @@ macro_rules! log_debug {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
+
+    /// `LEVEL` is process-global and these tests mutate it (and the
+    /// `SPDNN_LOG` env var); serialize them so parallel test threads
+    /// don't observe each other's state.
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Return `LEVEL` to the uninitialized sentinel so the next
+    /// `level()` call re-reads the environment.
+    fn reset() {
+        LEVEL.store(u8::MAX, Ordering::Relaxed);
+    }
 
     #[test]
     fn level_parsing() {
         assert_eq!(Level::from_str("error"), Level::Error);
         assert_eq!(Level::from_str("WARN"), Level::Warn);
+        assert_eq!(Level::from_str("warning"), Level::Warn);
         assert_eq!(Level::from_str("debug"), Level::Debug);
+        assert_eq!(Level::from_str("trace"), Level::Trace);
+        // Unknown values fall back to the default, not an error.
         assert_eq!(Level::from_str("bogus"), Level::Info);
+        assert_eq!(Level::from_str(""), Level::Info);
     }
 
     #[test]
     fn enabled_respects_order() {
+        let _g = guard();
         set_level(Level::Warn);
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
         set_level(Level::Trace);
         assert!(enabled(Level::Debug));
+    }
+
+    #[test]
+    fn env_initializes_lazily_and_unknown_falls_back() {
+        let _g = guard();
+        std::env::set_var("SPDNN_LOG", "debug");
+        reset();
+        assert_eq!(level(), Level::Debug);
+        // Unknown env values land on info, the documented default.
+        std::env::set_var("SPDNN_LOG", "chatty");
+        reset();
+        assert_eq!(level(), Level::Info);
+        std::env::remove_var("SPDNN_LOG");
+        reset();
+        assert_eq!(level(), Level::Info);
+    }
+
+    #[test]
+    fn set_level_overrides_lazy_env_level() {
+        let _g = guard();
+        std::env::set_var("SPDNN_LOG", "error");
+        reset();
+        assert_eq!(level(), Level::Error); // env won the first read...
+        set_level(Level::Trace); // ...but an explicit set wins after
+        assert_eq!(level(), Level::Trace);
+        // And a set *before* any read means the env is never consulted.
+        reset();
+        set_level(Level::Warn);
+        assert_eq!(level(), Level::Warn);
+        std::env::remove_var("SPDNN_LOG");
+        reset();
+    }
+
+    #[test]
+    fn concurrent_first_use_initializes_once() {
+        let _g = guard();
+        std::env::set_var("SPDNN_LOG", "debug");
+        reset();
+        let handles: Vec<_> = (0..8).map(|_| std::thread::spawn(level)).collect();
+        // Every racing first reader must observe the same parsed level —
+        // the benign store race writes the same value from all threads.
+        for h in handles {
+            assert_eq!(h.join().unwrap(), Level::Debug);
+        }
+        assert_eq!(level(), Level::Debug);
+        std::env::remove_var("SPDNN_LOG");
+        reset();
     }
 }

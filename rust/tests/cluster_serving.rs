@@ -31,6 +31,7 @@ use spdnn::coordinator::batcher::{BatchPolicy, ServeBackend, ServedModel};
 use spdnn::coordinator::NativeSpec;
 use spdnn::data::Dataset;
 use spdnn::engine::EngineKind;
+use spdnn::obs::TraceId;
 use spdnn::server::{
     AdmissionConfig, Client, ClusterServeConfig, InferInput, InferRequest, ReferencePanel,
     Request, Server, ServerConfig, ServerHandle, WireResponse,
@@ -192,6 +193,7 @@ fn stalled_rank_sheds_and_deadline_errors_with_correct_accounting() {
             input: InferInput::Row(0),
             deadline_ms: Some(100.0),
             want_activations: false,
+            trace: None,
         }))
         .unwrap();
     match resp {
@@ -380,6 +382,8 @@ fn result_reply(start: usize, count: usize) -> ClusterReply {
         layer_secs: vec![],
         edges_traversed: 0,
         secs: 0.0,
+        trace: TraceId::NONE,
+        spans: vec![],
     }))
 }
 
@@ -425,10 +429,10 @@ fn v1_json_peer(
                 neurons: model.neurons,
                 layers: model.layers,
             }),
-            ClusterRequest::Shard { start, features } => {
+            ClusterRequest::Shard { start, features, .. } => {
                 Some(result_reply(start, features.len() / neurons.max(1)))
             }
-            ClusterRequest::ShardBegin { start, rows, chunks } => {
+            ClusterRequest::ShardBegin { start, rows, chunks, .. } => {
                 if chunks == 0 {
                     Some(result_reply(start, rows))
                 } else {
@@ -501,7 +505,7 @@ fn v1_json_only_peer_downgrades_bin_coordinator_losslessly() {
         let rows = proptest::usize_in(rng, 1, 5);
         let feats = proptest::vec_f32(rng, rows * neurons, -8.0, 8.0);
         let chunk_rows = *proptest::choose(rng, &[None, Some(2)]);
-        let reply = match client.send_shard(3, &feats, neurons, chunk_rows) {
+        let reply = match client.send_shard(3, &feats, neurons, chunk_rows, TraceId::NONE) {
             Ok(r) => r,
             Err(e) => return Err(format!("scatter after downgrade: {e:#}")),
         };

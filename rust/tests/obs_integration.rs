@@ -1,0 +1,135 @@
+//! ISSUE 6 acceptance: end-to-end observability across the serving and
+//! cluster tiers.
+//!
+//! * A `serve --ranks 2` request produces a single stitched trace: one
+//!   TraceId spans admission -> batcher -> per-rank scatter/compute ->
+//!   reply, and the exported Chrome trace-event JSON contains spans
+//!   from both worker-rank OS processes under that TraceId.
+//! * The `{"op":"metrics"}` snapshot passes the same exposition check
+//!   `spdnn check-metrics` applies in CI.
+//!
+//! The span recorder is process-global, so everything that toggles it
+//! lives in this one test function (integration tests in other files
+//! run in their own processes).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use spdnn::cluster::ModelSpec;
+use spdnn::coordinator::batcher::BatchPolicy;
+use spdnn::coordinator::NativeSpec;
+use spdnn::data::Dataset;
+use spdnn::engine::EngineKind;
+use spdnn::obs::metrics::validate_exposition;
+use spdnn::obs::trace::chrome_events;
+use spdnn::server::{
+    Client, ClusterServeConfig, InferInput, InferRequest, ReferencePanel, Request, Server,
+    ServerConfig, WireResponse,
+};
+use spdnn::util::config::RuntimeConfig;
+use spdnn::util::json::Json;
+
+const NEURONS: usize = 64;
+
+fn program() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_spdnn"))
+}
+
+#[test]
+fn traced_request_stitches_across_both_rank_processes() {
+    let cfg = RuntimeConfig { neurons: NEURONS, layers: 5, k: 4, batch: 12, ..Default::default() };
+    let ds = Dataset::generate(&cfg).unwrap();
+    let trace_path =
+        std::env::temp_dir().join(format!("spdnn_obs_trace_{}.json", std::process::id()));
+
+    // One replica owning both ranks: every panel scatters across the
+    // two worker processes, so a single request's trace must contain
+    // spans from both.
+    let server_cfg = ServerConfig {
+        replicas: 1,
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        trace_out: Some(trace_path.clone()),
+        ..Default::default()
+    };
+    let spec = NativeSpec { engine: EngineKind::Sliced, minibatch: 12, slice: 16, threads: 1 };
+    let ccfg = ClusterServeConfig::local(program(), 2);
+    let reference = ReferencePanel { features: ds.features.clone(), neurons: NEURONS };
+    let handle = Server::start_cluster(
+        server_cfg,
+        &ccfg,
+        &ModelSpec::from_config(&cfg),
+        spec,
+        cfg.prune,
+        Some(reference),
+    )
+    .unwrap();
+
+    let mut client = Client::connect(handle.addr()).unwrap();
+    // Pin the TraceId so the assertion below knows what to look for;
+    // the response must echo it back.
+    let pinned = "00000000c0ffee01";
+    let resp = client
+        .call(&Request::Infer(InferRequest {
+            input: InferInput::Row(0),
+            deadline_ms: None,
+            want_activations: false,
+            trace: Some(pinned.to_string()),
+        }))
+        .unwrap();
+    match resp {
+        WireResponse::Infer { trace, .. } => assert_eq!(trace, pinned, "response echoes the id"),
+        other => panic!("expected infer response, got {other:?}"),
+    }
+    // A second, server-minted trace id must also round-trip.
+    let minted = match client.call(&Request::infer_row(1)).unwrap() {
+        WireResponse::Infer { trace, .. } => trace,
+        other => panic!("expected infer response, got {other:?}"),
+    };
+    assert_eq!(minted.len(), 16, "server mints a 16-hex-digit id, got {minted:?}");
+    assert_ne!(minted, pinned);
+
+    // The metrics verb returns a snapshot that passes the exposition
+    // validation `spdnn check-metrics` gates on.
+    let text = match client.call(&Request::Metrics).unwrap() {
+        WireResponse::Metrics { text } => text,
+        other => panic!("expected metrics response, got {other:?}"),
+    };
+    let summary = validate_exposition(&text).expect("metrics must validate");
+    assert!(summary.families > 0 && summary.samples > 0);
+    assert!(text.contains("spdnn_serve_requests_total"), "serve counters present:\n{text}");
+    assert!(text.contains("spdnn_cluster_scatter_bytes_total"), "cluster counters present");
+
+    // Shutdown writes the Chrome trace.
+    let report = handle.shutdown();
+    assert!(report.drained);
+    assert_eq!(report.errors, 0);
+
+    let doc = Json::parse(&std::fs::read_to_string(&trace_path).unwrap()).unwrap();
+    let events = chrome_events(&doc).unwrap();
+    let traced: Vec<&Json> = events
+        .iter()
+        .filter(|e| {
+            e.req("args")
+                .ok()
+                .and_then(|a| a.get("trace"))
+                .and_then(|t| t.as_str())
+                .map(|t| t == pinned)
+                .unwrap_or(false)
+        })
+        .collect();
+    let names: Vec<&str> =
+        traced.iter().filter_map(|e| e.req("name").ok().and_then(|n| n.as_str())).collect();
+    // Admission -> batcher -> coordinator scatter -> rank compute, all
+    // under the one pinned TraceId.
+    for want in ["request", "cluster-pass", "shard-rpc", "rank-compute"] {
+        assert!(names.contains(&want), "span {want:?} missing from {names:?}");
+    }
+    // Spans from BOTH rank processes: lanes (chrome pids) 1 and 2 are
+    // rank 0 and rank 1; lane 0 is the server process.
+    let lanes: Vec<i64> =
+        traced.iter().filter_map(|e| e.req("pid").ok().and_then(|p| p.as_i64())).collect();
+    for lane in [0i64, 1, 2] {
+        assert!(lanes.contains(&lane), "no spans on lane {lane} (lanes seen: {lanes:?})");
+    }
+    std::fs::remove_file(&trace_path).ok();
+}

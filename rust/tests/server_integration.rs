@@ -178,6 +178,7 @@ fn per_request_deadline_is_enforced() {
             input: InferInput::Features(ds.features[..NEURONS].to_vec()),
             deadline_ms: Some(1.0),
             want_activations: true,
+            trace: None,
         }))
         .unwrap();
     match resp {
@@ -208,6 +209,7 @@ fn epoch_edge_deadlines_are_clamped_and_answered_not_panicked() {
                 input: InferInput::Features(ds.features[..NEURONS].to_vec()),
                 deadline_ms: Some(dl),
                 want_activations: false,
+                trace: None,
             }))
             .unwrap();
         match resp {
@@ -264,6 +266,7 @@ fn deadline_shorter_than_backend_service_time_is_shed_once_queued() {
             input: InferInput::Features(vec![0.5; NEURONS]),
             deadline_ms: Some(20.0), // < one 200ms service time
             want_activations: false,
+            trace: None,
         }))
         .unwrap();
     match resp {
@@ -303,6 +306,7 @@ fn malformed_and_invalid_requests_get_clean_errors() {
             input: InferInput::Row(0),
             deadline_ms: None,
             want_activations: false,
+            trace: None,
         }))
         .unwrap()
     {
