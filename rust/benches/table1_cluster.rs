@@ -5,7 +5,10 @@
 //! in the unified spdnn-bench-v1 schema (one case per rank count), plus
 //! a wire-format / chunk-size ablation: the same model and panel
 //! scattered as JSON numbers vs `spdnn-clu1` binary frames vs pipelined
-//! binary chunks, with measured scatter/gather bytes per pass.
+//! binary chunks, with measured scatter/gather bytes per pass — and a
+//! partition ablation: the same pass with replicated weights vs
+//! row-sliced weights (`--partition weights`), with the per-layer
+//! exchange volume the weights scheme pays for its memory headroom.
 //!
 //! Usage: cargo bench --bench table1_cluster
 //! Scale with SPDNN_BENCH_ITERS / SPDNN_BENCH_MAX_SECS; override the
@@ -14,7 +17,7 @@
 use std::path::PathBuf;
 
 use spdnn::bench::{bench, BenchCase, BenchConfig, BenchReport};
-use spdnn::cluster::{ClusterOptions, LocalCluster, ModelSpec, WireFormat};
+use spdnn::cluster::{ClusterOptions, LocalCluster, ModelSpec, PartitionScheme, WireFormat};
 use spdnn::coordinator::NativeSpec;
 use spdnn::data::Dataset;
 use spdnn::engine::EngineKind;
@@ -118,10 +121,16 @@ fn main() -> anyhow::Result<()> {
     // scatter_bytes per pass is the acceptance quantity: binary must
     // cut it by >=3x vs JSON on this smoke topology.
     let ablations: &[(&str, ClusterOptions)] = &[
-        ("wire=json", ClusterOptions { wire: WireFormat::Json, chunk_rows: None }),
-        ("wire=bin", ClusterOptions { wire: WireFormat::Bin, chunk_rows: None }),
-        ("wire=bin,chunk=16", ClusterOptions { wire: WireFormat::Bin, chunk_rows: Some(16) }),
-        ("wire=bin,chunk=64", ClusterOptions { wire: WireFormat::Bin, chunk_rows: Some(64) }),
+        ("wire=json", ClusterOptions { wire: WireFormat::Json, ..Default::default() }),
+        ("wire=bin", ClusterOptions { wire: WireFormat::Bin, ..Default::default() }),
+        (
+            "wire=bin,chunk=16",
+            ClusterOptions { wire: WireFormat::Bin, chunk_rows: Some(16), ..Default::default() },
+        ),
+        (
+            "wire=bin,chunk=64",
+            ClusterOptions { wire: WireFormat::Bin, chunk_rows: Some(64), ..Default::default() },
+        ),
     ];
     let mut wire_table = Table::new(
         "Wire/chunk ablation (2 ranks): transport vs throughput",
@@ -175,6 +184,54 @@ fn main() -> anyhow::Result<()> {
             json_scatter as f64 / bin_scatter as f64
         );
     }
+
+    // Partition ablation at the same fixed 2 ranks: replicated weights
+    // (one scatter + one gather per pass) vs row-sliced weights (a
+    // boundary-activation exchange per layer). Both are gated on
+    // bit-identical categories first; the weights rows carry the total
+    // and peak per-layer exchange volume — the communication price of
+    // serving a model bigger than one rank's memory.
+    let partitions: &[(&str, PartitionScheme)] = &[
+        ("partition=features", PartitionScheme::Features),
+        ("partition=weights", PartitionScheme::Weights),
+    ];
+    let mut part_table = Table::new(
+        "Partition ablation (2 ranks): replicated vs row-sliced weights",
+        &["case", "p50", "Throughput", "exchange KiB/pass", "peak layer KiB"],
+    );
+    for (name, partition) in partitions {
+        let opts = ClusterOptions { partition: *partition, ..Default::default() };
+        let mut cluster = LocalCluster::start_with(&program, 2, &model, spec, cfg.prune, opts)?;
+        let first = cluster.run(&ds.features)?;
+        anyhow::ensure!(
+            first.categories == ds.truth_categories,
+            "{name}: cluster categories diverge from ground truth"
+        );
+        let mut exchange: u64 = first.per_layer_exchange_bytes.iter().sum();
+        let mut peak: u64 = first.per_layer_exchange_bytes.iter().copied().max().unwrap_or(0);
+        let m = bench(&bcfg, name, edges, || {
+            let r = cluster.run(&ds.features).expect("cluster inference pass");
+            exchange = r.per_layer_exchange_bytes.iter().sum();
+            peak = r.per_layer_exchange_bytes.iter().copied().max().unwrap_or(0);
+        });
+        cluster.stop()?;
+
+        part_table.row(vec![
+            name.to_string(),
+            format!("{:.2}ms", m.secs.p50 * 1e3),
+            fmt_teps(m.throughput()),
+            format!("{:.1}", exchange as f64 / 1024.0),
+            format!("{:.1}", peak as f64 / 1024.0),
+        ]);
+        report.case(
+            BenchCase::from_measurement(&m)
+                .with_extra("ranks", Json::Int(2))
+                .with_extra("partition", Json::Str(partition.as_str().to_string()))
+                .with_extra("exchange_bytes", Json::Int(exchange as i64))
+                .with_extra("peak_layer_exchange_bytes", Json::Int(peak as i64)),
+        );
+    }
+    part_table.print();
 
     let path = report.write()?;
     println!("wrote {} ({} cases)", path.display(), report.cases.len());

@@ -118,8 +118,14 @@ pub fn diff_reports(old: &Json, new: &Json) -> Result<TrendReport> {
         .filter(|(n, _)| !new_cases.iter().any(|(m, _)| m == n))
         .map(|(n, _)| n.clone())
         .collect();
-    if cases.is_empty() {
-        bail!("the two reports share no case names (nothing to compare)");
+    // No matched names is fine as long as the new report brought new
+    // cases: a bench that just grew a fresh ablation (or a brand-new
+    // bench file) has nothing to gate yet, but it is not an error —
+    // the rows surface as "added". Only a diff with nothing matched
+    // AND nothing added would be vacuous, and `validate_report`
+    // already rejects reports with no cases at all.
+    if cases.is_empty() && added.is_empty() {
+        bail!("the two reports share no case names and the new report adds none");
     }
     Ok(TrendReport {
         old_bench: old.req_str("bench")?.to_string(),
@@ -192,10 +198,18 @@ mod tests {
     }
 
     #[test]
-    fn disjoint_reports_are_an_error() {
+    fn disjoint_reports_surface_new_rows_instead_of_erroring() {
+        // An old artifact that predates a bench's new ablation rows
+        // must not fail the gate: the unmatched new rows are "added",
+        // the vanished old ones "removed", and nothing is comparable.
         let old = report("x", &[("a", 1.0)]);
         let new = report("x", &[("b", 1.0)]);
-        assert!(diff_reports(&old, &new).is_err());
+        let trend = diff_reports(&old, &new).unwrap();
+        assert!(trend.cases.is_empty());
+        assert_eq!(trend.added, vec!["b".to_string()]);
+        assert_eq!(trend.removed, vec!["a".to_string()]);
+        assert_eq!(trend.comparable(), 0);
+        assert!(trend.regressions(0.0).is_empty(), "added rows never gate");
     }
 
     #[test]

@@ -1,13 +1,28 @@
 //! Rank 0: scatter, compute, gather — the collective schedule of the
 //! paper's multi-GPU inference (§IV.C) over real OS processes.
 //!
-//! The coordinator statically partitions the input feature panel with
-//! the same `partition_even` the in-process pool uses, scatters one
-//! contiguous shard per rank, and gathers the shard results back in
-//! rank order. Because shards are contiguous, ordered and disjoint,
-//! reassembly is pure concatenation and the merged categories come back
-//! already ascending — bit-identical to a single-process pass over the
-//! unpartitioned panel.
+//! Two [`PartitionScheme`]s share the coordinator:
+//!
+//! * **Feature partitioning** (the default): the coordinator statically
+//!   partitions the input feature panel with the same `partition_even`
+//!   the in-process pool uses, scatters one contiguous shard per rank
+//!   (each holding a full weight replica), and gathers the shard
+//!   results back in rank order. Because shards are contiguous, ordered
+//!   and disjoint, reassembly is pure concatenation and the merged
+//!   categories come back already ascending — bit-identical to a
+//!   single-process pass over the unpartitioned panel.
+//!
+//! * **Weight partitioning** (`--partition weights`, protocol v4):
+//!   `partition_even` splits every layer's weight *rows* across ranks
+//!   instead, so the servable model is no longer capped by one rank's
+//!   memory. Each layer becomes an all-to-all boundary-activation
+//!   exchange: the full live panel goes out to every rank, each rank
+//!   answers its `[live, count]` partial over its row slice, and the
+//!   coordinator stitches the partials into the next layer's input,
+//!   pruning dead features itself. Row slicing preserves per-row
+//!   accumulation order, so this too is bit-identical to the
+//!   single-process engines. Per-layer communication volume lands in
+//!   [`ClusterReport::per_layer_exchange_bytes`].
 //!
 //! Transport is governed by [`ClusterOptions`]: the negotiated
 //! [`WireFormat`] (packed `spdnn-clu1` frames by default, JSON numbers
@@ -23,6 +38,7 @@
 //! each direction (`scatter_bytes`/`gather_bytes` — the quantity the
 //! wire-format ablation in `benches/table1_cluster.rs` reports).
 
+use std::fmt;
 use std::net::SocketAddr;
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -30,6 +46,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::partition::{imbalance, partition_even, Partition};
+use crate::coordinator::pruning::{flags_from_panel, ActiveSet};
 use crate::coordinator::NativeSpec;
 use crate::obs::metrics as om;
 use crate::obs::trace::{self as tr, TraceId};
@@ -42,6 +59,43 @@ use super::transport::{
 /// Longest a clean shutdown waits for worker processes to exit.
 const SHUTDOWN_LIMIT: Duration = Duration::from_secs(10);
 
+/// How the model is split across worker ranks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PartitionScheme {
+    /// Replicate the full weight set on every rank and partition the
+    /// feature panel (paper §IV.C — the default).
+    #[default]
+    Features,
+    /// Partition every layer's weight rows across ranks and exchange
+    /// boundary activations after each layer (protocol v4). Lifts the
+    /// one-rank memory cap on model size at the cost of per-layer
+    /// communication.
+    Weights,
+}
+
+impl PartitionScheme {
+    pub fn parse(s: &str) -> Result<PartitionScheme> {
+        match s {
+            "features" => Ok(PartitionScheme::Features),
+            "weights" => Ok(PartitionScheme::Weights),
+            other => bail!("unknown partition scheme {other:?} (features|weights)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PartitionScheme::Features => "features",
+            PartitionScheme::Weights => "weights",
+        }
+    }
+}
+
+impl fmt::Display for PartitionScheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Transport options of one cluster session.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ClusterOptions {
@@ -49,21 +103,57 @@ pub struct ClusterOptions {
     pub wire: WireFormat,
     /// Pipelined scatter granularity: split every shard into sub-panels
     /// of this many feature rows so workers overlap compute with the
-    /// remaining transfer. `None` scatters whole shards.
+    /// remaining transfer. `None` scatters whole shards. Feature
+    /// partitioning only.
     pub chunk_rows: Option<usize>,
+    /// Whether ranks replicate the weights (feature partitioning) or
+    /// hold row slices of them (weight partitioning).
+    pub partition: PartitionScheme,
 }
 
 impl Default for ClusterOptions {
     fn default() -> Self {
-        ClusterOptions { wire: WireFormat::Bin, chunk_rows: None }
+        ClusterOptions {
+            wire: WireFormat::Bin,
+            chunk_rows: None,
+            partition: PartitionScheme::Features,
+        }
     }
 }
 
 /// Rank 0's connection set: one blocking client per worker rank.
+///
+/// ```no_run
+/// use spdnn::cluster::{ClusterCoordinator, ClusterOptions, ModelSpec, PartitionScheme};
+/// use spdnn::coordinator::NativeSpec;
+/// use spdnn::engine::EngineKind;
+/// use spdnn::util::config::RuntimeConfig;
+///
+/// # fn main() -> anyhow::Result<()> {
+/// // Workers started elsewhere as `spdnn cluster-worker --listen ...`.
+/// let addrs: Vec<std::net::SocketAddr> =
+///     vec!["127.0.0.1:7001".parse()?, "127.0.0.1:7002".parse()?];
+/// let opts = ClusterOptions { partition: PartitionScheme::Weights, ..Default::default() };
+/// let mut coord = ClusterCoordinator::connect_with(&addrs, opts)?;
+///
+/// let cfg = RuntimeConfig { neurons: 1024, layers: 120, batch: 256, ..Default::default() };
+/// let model = ModelSpec::from_config(&cfg);
+/// let spec = NativeSpec { engine: EngineKind::Ell, minibatch: 12, slice: 32, threads: 1 };
+/// coord.load(&model, spec, true)?;
+///
+/// let features = vec![0.0f32; cfg.batch * cfg.neurons];
+/// let report = coord.run(&features)?;
+/// println!("{} features survived", report.categories.len());
+/// # Ok(())
+/// # }
+/// ```
 pub struct ClusterCoordinator {
     clients: Vec<ClusterClient>,
     model: Option<ModelSpec>,
     opts: ClusterOptions,
+    /// Whether to prune dead features between layers (set by `load`;
+    /// applied coordinator-side in weights mode, rank-side otherwise).
+    prune: bool,
 }
 
 impl ClusterCoordinator {
@@ -85,13 +175,22 @@ impl ClusterCoordinator {
         if opts.chunk_rows == Some(0) {
             bail!("scatter chunking needs at least one feature row per chunk");
         }
+        if opts.partition == PartitionScheme::Weights && opts.chunk_rows.is_some() {
+            bail!("pipelined scatter chunking applies to feature partitioning only");
+        }
         let mut clients = Vec::with_capacity(addrs.len());
         for (rank, addr) in addrs.iter().enumerate() {
             let client = ClusterClient::connect(*addr, opts.wire)
                 .with_context(|| format!("connecting worker rank {rank}"))?;
+            if opts.partition == PartitionScheme::Weights && !client.supports_weights() {
+                bail!(
+                    "worker rank {rank} speaks a protocol without weight partitioning; \
+                     upgrade it or run with --partition features"
+                );
+            }
             clients.push(client);
         }
-        Ok(ClusterCoordinator { clients, model: None, opts })
+        Ok(ClusterCoordinator { clients, model: None, opts, prune: true })
     }
 
     pub fn ranks(&self) -> usize {
@@ -130,12 +229,19 @@ impl ClusterCoordinator {
         self.clients.iter_mut().map(|c| c.ping().is_ok()).collect()
     }
 
-    /// Replicate the model on every rank (each rebuilds the full weight
-    /// set locally from the shared recipe).
+    /// Load the model on every rank, each rebuilding its share locally
+    /// from the shared recipe: the full weight set under feature
+    /// partitioning, or one `partition_even` row slice of every layer
+    /// under weight partitioning.
     pub fn load(&mut self, model: &ModelSpec, spec: NativeSpec, prune: bool) -> Result<()> {
+        let weight_parts = match self.opts.partition {
+            PartitionScheme::Features => None,
+            PartitionScheme::Weights => Some(partition_even(model.neurons, self.clients.len())),
+        };
         for (rank, client) in self.clients.iter_mut().enumerate() {
+            let shard = weight_parts.as_ref().map(|p| (p[rank].start, p[rank].count));
             let reply = client
-                .call(&ClusterRequest::Load { rank, model: model.clone(), spec, prune })
+                .call(&ClusterRequest::Load { rank, model: model.clone(), spec, prune, shard })
                 .with_context(|| format!("loading model on rank {rank}"))?;
             match reply {
                 ClusterReply::Loaded { neurons, layers, .. } => {
@@ -154,6 +260,7 @@ impl ClusterCoordinator {
             }
         }
         self.model = Some(model.clone());
+        self.prune = prune;
         Ok(())
     }
 
@@ -172,6 +279,15 @@ impl ClusterCoordinator {
     /// `TraceId::NONE` makes this exactly `run` (a no-op branch per
     /// scatter when the recorder is disabled).
     pub fn run_traced(&mut self, features: &[f32], trace: TraceId) -> Result<ClusterReport> {
+        match self.opts.partition {
+            PartitionScheme::Features => self.run_features_traced(features, trace),
+            PartitionScheme::Weights => self.run_weights_traced(features, trace),
+        }
+    }
+
+    /// Feature-partitioned pass: one scatter/compute/gather round trip
+    /// per rank, each rank running all layers over its feature shard.
+    fn run_features_traced(&mut self, features: &[f32], trace: TraceId) -> Result<ClusterReport> {
         let model =
             self.model.clone().ok_or_else(|| anyhow!("load a model before running shards"))?;
         let n = model.neurons;
@@ -254,6 +370,147 @@ impl ClusterCoordinator {
         ClusterReport::assemble(&model, parts, shards, wall_secs, scatter_bytes, gather_bytes)
     }
 
+    /// Weight-partitioned pass: the coordinator owns the layer loop.
+    /// Every layer is an all-to-all boundary-activation exchange — the
+    /// live panel goes out to each rank, each rank answers its
+    /// `[live, count]` partial over its weight-row slice, and the
+    /// partials are stitched back into the next layer's full panel.
+    /// Pruning runs here (ranks never see the whole panel's fate),
+    /// mirroring the single-process `run_panel` loop exactly, so the
+    /// final activations are bit-identical to it.
+    fn run_weights_traced(&mut self, features: &[f32], trace: TraceId) -> Result<ClusterReport> {
+        let model =
+            self.model.clone().ok_or_else(|| anyhow!("load a model before running shards"))?;
+        let n = model.neurons;
+        if features.len() % n != 0 {
+            bail!("feature panel of {} values is not a multiple of neurons={n}", features.len());
+        }
+        let batch = features.len() / n;
+        let parts = partition_even(n, self.clients.len());
+        let pass_span = tr::span("cluster-pass", trace)
+            .arg("ranks", self.clients.len())
+            .arg("rows", batch)
+            .arg("partition", "weights");
+
+        let wall = Instant::now();
+        let mut set = ActiveSet::new(0, batch);
+        let mut y = features.to_vec();
+        let mut live_per_layer = Vec::with_capacity(model.layers);
+        let mut per_layer_exchange_bytes = Vec::with_capacity(model.layers);
+        let mut rank_layer_secs: Vec<Vec<f64>> = vec![Vec::new(); self.clients.len()];
+        let mut scatter_bytes = 0u64;
+        let mut gather_bytes = 0u64;
+        let mut edges_traversed = 0u64;
+        type PartialOutcome = Result<(Vec<f32>, f64, u64, u64)>;
+        for layer in 0..model.layers {
+            let live = set.len();
+            live_per_layer.push(live);
+            if live == 0 {
+                per_layer_exchange_bytes.push(0);
+                for secs in rank_layer_secs.iter_mut() {
+                    secs.push(0.0);
+                }
+                continue;
+            }
+            let panel = &y[..live * n];
+            let layer_span = tr::span("exchange", trace).arg("layer", layer).arg("rows", live);
+            let mut slots: Vec<Option<PartialOutcome>> = Vec::new();
+            slots.resize_with(parts.len(), || None);
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for (rank, (client, part)) in self.clients.iter_mut().zip(&parts).enumerate() {
+                    let count = part.count;
+                    handles.push(scope.spawn(move || -> PartialOutcome {
+                        let span = tr::span("exchange-rpc", trace)
+                            .arg("rank", rank)
+                            .arg("layer", layer);
+                        let sent0 = client.bytes_sent();
+                        let recv0 = client.bytes_received();
+                        let reply = client.exchange(layer, panel, trace)?;
+                        let sent = client.bytes_sent() - sent0;
+                        let recv = client.bytes_received() - recv0;
+                        drop(span.arg("sent_bytes", sent).arg("recv_bytes", recv));
+                        match reply {
+                            ClusterReply::Partial { layer: got, count: c, secs, values, .. } => {
+                                if got != layer || c != count {
+                                    bail!(
+                                        "rank {rank} answered layer {got} x{c}, \
+                                         expected layer {layer} x{count}"
+                                    );
+                                }
+                                if values.len() != live * count {
+                                    bail!(
+                                        "rank {rank} returned {} partial values, expected {}",
+                                        values.len(),
+                                        live * count
+                                    );
+                                }
+                                Ok((values, secs, sent, recv))
+                            }
+                            ClusterReply::Error { message } => Err(anyhow!("{message}")),
+                            other => Err(anyhow!("unexpected reply to exchange: {other:?}")),
+                        }
+                    }));
+                }
+                for (slot, h) in slots.iter_mut().zip(handles) {
+                    *slot = Some(
+                        h.join().unwrap_or_else(|_| Err(anyhow!("exchange thread panicked"))),
+                    );
+                }
+            });
+            drop(layer_span);
+
+            let mut next = vec![0.0f32; live * n];
+            let mut layer_bytes = 0u64;
+            for (rank, slot) in slots.into_iter().enumerate() {
+                let (values, secs, sent, recv) = slot
+                    .expect("slot filled")
+                    .with_context(|| format!("exchange with rank {rank} at layer {layer}"))?;
+                let Partition { start, count, .. } = parts[rank];
+                for f in 0..live {
+                    let dst = f * n + start;
+                    next[dst..dst + count].copy_from_slice(&values[f * count..(f + 1) * count]);
+                }
+                rank_layer_secs[rank].push(secs);
+                scatter_bytes += sent;
+                gather_bytes += recv;
+                layer_bytes += sent + recv;
+                edges_traversed += (live * count * model.k) as u64;
+                let rank_label = rank.to_string();
+                om::counter_labeled(
+                    "spdnn_cluster_exchange_bytes_total",
+                    &[("rank", &rank_label)],
+                    "Exchange bytes (both directions) between rank 0 and this rank.",
+                )
+                .add(sent + recv);
+            }
+            per_layer_exchange_bytes.push(layer_bytes);
+
+            let flags = flags_from_panel(&next, n, live);
+            y = next;
+            if self.prune || layer == model.layers - 1 {
+                set.compact(&mut y, n, &flags);
+            }
+        }
+        let wall_secs = wall.elapsed().as_secs_f64();
+        drop(pass_span);
+        om::counter("spdnn_cluster_passes_total", "Completed cluster inference passes.").inc();
+        ClusterReport::assemble_weights(
+            &model,
+            parts,
+            batch,
+            set.into_categories(),
+            y,
+            live_per_layer,
+            rank_layer_secs,
+            wall_secs,
+            scatter_bytes,
+            gather_bytes,
+            per_layer_exchange_bytes,
+            edges_traversed,
+        )
+    }
+
     /// Send a shutdown op to every rank (errors ignored: a dead rank is
     /// already shut down).
     pub fn shutdown(mut self) {
@@ -266,7 +523,10 @@ impl ClusterCoordinator {
 /// The gathered result of one cluster inference pass.
 #[derive(Clone, Debug)]
 pub struct ClusterReport {
-    /// The scatter plan (exact cover of the input panel).
+    /// Which partitioning scheme produced this report.
+    pub partition: PartitionScheme,
+    /// The partition plan: an exact cover of the input panel (features
+    /// mode) or of every layer's weight rows (weights mode).
     pub parts: Vec<Partition>,
     /// Per-rank shard results, rank order.
     pub shards: Vec<ShardResult>,
@@ -286,6 +546,10 @@ pub struct ClusterReport {
     pub scatter_bytes: u64,
     /// Reply bytes rank 0 read during the gather, summed over ranks.
     pub gather_bytes: u64,
+    /// Weights mode only: bytes exchanged (both directions, all ranks)
+    /// at each layer boundary — the tentpole communication-volume
+    /// series. Empty under feature partitioning.
+    pub per_layer_exchange_bytes: Vec<u64>,
     /// max/mean of per-rank live features entering each layer — the
     /// pruning-induced skew of §IV.C, per layer.
     pub per_layer_imbalance: Vec<f64>,
@@ -356,6 +620,7 @@ impl ClusterReport {
         let mean =
             if busy.is_empty() { 0.0 } else { busy.iter().sum::<f64>() / busy.len() as f64 };
         Ok(ClusterReport {
+            partition: PartitionScheme::Features,
             parts,
             shards,
             categories,
@@ -366,6 +631,90 @@ impl ClusterReport {
             edges_traversed,
             scatter_bytes,
             gather_bytes,
+            per_layer_exchange_bytes: Vec::new(),
+            per_layer_imbalance,
+            imbalance: if mean > 0.0 { max / mean } else { 1.0 },
+        })
+    }
+
+    /// Weights-mode counterpart of `assemble`: the coordinator already
+    /// holds the final panel (it stitched every layer itself), so there
+    /// is nothing to merge — this folds the per-rank timing series into
+    /// the report's imbalance metrics and synthesizes one bookkeeping
+    /// [`ShardResult`] per rank (empty categories/activations: ranks
+    /// never own features in this mode).
+    #[allow(clippy::too_many_arguments)]
+    fn assemble_weights(
+        model: &ModelSpec,
+        parts: Vec<Partition>,
+        batch: usize,
+        categories: Vec<usize>,
+        activations: Vec<f32>,
+        live_per_layer: Vec<usize>,
+        rank_layer_secs: Vec<Vec<f64>>,
+        wall_secs: f64,
+        scatter_bytes: u64,
+        gather_bytes: u64,
+        per_layer_exchange_bytes: Vec<u64>,
+        edges_traversed: u64,
+    ) -> Result<ClusterReport> {
+        let n = model.neurons;
+        if activations.len() != categories.len() * n {
+            bail!(
+                "stitched panel holds {} values for {} categories (neurons={n})",
+                activations.len(),
+                categories.len()
+            );
+        }
+        let shards: Vec<ShardResult> = parts
+            .iter()
+            .zip(&rank_layer_secs)
+            .map(|(p, secs)| ShardResult {
+                rank: p.worker,
+                start: p.start,
+                count: p.count,
+                categories: vec![],
+                activations: vec![],
+                live_per_layer: live_per_layer.clone(),
+                layer_secs: secs.clone(),
+                edges_traversed: live_per_layer
+                    .iter()
+                    .map(|&live| (live * p.count * model.k) as u64)
+                    .sum(),
+                secs: secs.iter().sum(),
+                trace: TraceId::NONE,
+                spans: vec![],
+            })
+            .collect();
+        // Per-layer skew of rank compute time (every rank sees the same
+        // live count here, so the feature-count series would be flat).
+        let mut per_layer_imbalance = Vec::with_capacity(model.layers);
+        for layer in 0..model.layers {
+            let secs: Vec<f64> =
+                rank_layer_secs.iter().map(|s| s.get(layer).copied().unwrap_or(0.0)).collect();
+            let max = secs.iter().cloned().fold(0.0, f64::max);
+            let mean =
+                if secs.is_empty() { 0.0 } else { secs.iter().sum::<f64>() / secs.len() as f64 };
+            per_layer_imbalance.push(if mean > 0.0 { max / mean } else { 1.0 });
+        }
+        let busy: Vec<f64> = shards.iter().map(|s| s.busy_secs()).collect();
+        let max = busy.iter().cloned().fold(0.0, f64::max);
+        let mean =
+            if busy.is_empty() { 0.0 } else { busy.iter().sum::<f64>() / busy.len() as f64 };
+        let input_edges = model.input_edges(batch);
+        Ok(ClusterReport {
+            partition: PartitionScheme::Weights,
+            parts,
+            shards,
+            categories,
+            activations,
+            wall_secs,
+            input_edges,
+            edges_per_sec: if wall_secs > 0.0 { input_edges as f64 / wall_secs } else { 0.0 },
+            edges_traversed,
+            scatter_bytes,
+            gather_bytes,
+            per_layer_exchange_bytes,
             per_layer_imbalance,
             imbalance: if mean > 0.0 { max / mean } else { 1.0 },
         })
@@ -592,9 +941,24 @@ mod tests {
     #[test]
     fn connect_rejects_zero_row_chunks() {
         let addr: SocketAddr = "127.0.0.1:9".parse().unwrap();
-        let opts = ClusterOptions { wire: WireFormat::Bin, chunk_rows: Some(0) };
+        let opts = ClusterOptions { chunk_rows: Some(0), ..Default::default() };
         let err = ClusterCoordinator::connect_with(&[addr], opts).unwrap_err().to_string();
         assert!(err.contains("at least one feature row"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn connect_rejects_chunking_under_weight_partitioning() {
+        // Chunked scatter slices the feature panel; weights mode sends
+        // the whole live panel every layer, so the combination is a
+        // configuration error, caught before any socket is dialed.
+        let addr: SocketAddr = "127.0.0.1:9".parse().unwrap();
+        let opts = ClusterOptions {
+            chunk_rows: Some(8),
+            partition: PartitionScheme::Weights,
+            ..Default::default()
+        };
+        let err = ClusterCoordinator::connect_with(&[addr], opts).unwrap_err().to_string();
+        assert!(err.contains("feature partitioning only"), "unexpected error: {err}");
     }
 
     #[test]
@@ -602,6 +966,73 @@ mod tests {
         let opts = ClusterOptions::default();
         assert_eq!(opts.wire, WireFormat::Bin);
         assert_eq!(opts.chunk_rows, None);
+        assert_eq!(opts.partition, PartitionScheme::Features);
+    }
+
+    #[test]
+    fn partition_scheme_parses_and_prints() {
+        assert_eq!(PartitionScheme::parse("features").unwrap(), PartitionScheme::Features);
+        assert_eq!(PartitionScheme::parse("weights").unwrap(), PartitionScheme::Weights);
+        assert!(PartitionScheme::parse("columns").is_err());
+        assert_eq!(PartitionScheme::Weights.to_string(), "weights");
+        assert_eq!(PartitionScheme::default(), PartitionScheme::Features);
+    }
+
+    #[test]
+    fn assemble_weights_reports_per_layer_exchange_volume() {
+        let parts = partition_even(4, 2); // weight rows, not features
+        let rank_secs = vec![vec![0.5, 0.25], vec![0.25, 0.25]];
+        let r = ClusterReport::assemble_weights(
+            &model(),
+            parts,
+            3, // batch
+            vec![0, 2], // surviving features
+            vec![0.5f32; 2 * 4], // stitched [categories, neurons] panel
+            vec![3, 2], // live entering each layer
+            rank_secs,
+            2.0,
+            100,
+            40,
+            vec![90, 50],
+            40,
+        )
+        .unwrap();
+        assert_eq!(r.partition, PartitionScheme::Weights);
+        assert_eq!(r.per_layer_exchange_bytes, vec![90, 50]);
+        assert_eq!(r.categories, vec![0, 2]);
+        assert_eq!(r.activations.len(), 2 * 4);
+        assert_eq!(r.scatter_bytes, 100);
+        assert_eq!(r.gather_bytes, 40);
+        // Each synthesized shard echoes its weight-row slice and the
+        // shared live trajectory; edges follow live * count * k.
+        assert_eq!(r.shards.len(), 2);
+        assert_eq!((r.shards[0].start, r.shards[0].count), (0, 2));
+        assert_eq!(r.shards[0].edges_traversed, ((3 + 2) * 2 * 2) as u64);
+        // Layer 0: 0.5 vs 0.25 -> max/mean = 0.5/0.375; layer 1 flat.
+        assert!((r.per_layer_imbalance[0] - 0.5 / 0.375).abs() < 1e-12);
+        assert!((r.per_layer_imbalance[1] - 1.0).abs() < 1e-12);
+        // Busy skew: 0.75 vs 0.5 -> 0.75/0.625.
+        assert!((r.imbalance - 0.75 / 0.625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn assemble_weights_rejects_a_ragged_panel() {
+        let parts = partition_even(4, 1);
+        let r = ClusterReport::assemble_weights(
+            &model(),
+            parts,
+            2,
+            vec![0, 1],
+            vec![0.0f32; 7], // not 2 * 4
+            vec![2, 2],
+            vec![vec![0.1, 0.1]],
+            1.0,
+            0,
+            0,
+            vec![0, 0],
+            0,
+        );
+        assert!(r.is_err());
     }
 
     #[test]

@@ -19,32 +19,44 @@
 //! * [`launcher`] — spawns/supervises local worker processes with a
 //!   readiness handshake, failure propagation and clean shutdown;
 //! * [`collective`] — rank 0's scatter/compute/gather schedule behind
-//!   [`ClusterOptions`] (wire format + chunked scatter), the
-//!   reassembled [`ClusterReport`] (bit-identical to single-process
-//!   inference, with scatter/gather byte accounting) and the per-layer
-//!   cross-rank imbalance series.
+//!   [`ClusterOptions`] (wire format, chunked scatter, and the
+//!   [`PartitionScheme`]), the reassembled [`ClusterReport`]
+//!   (bit-identical to single-process inference, with scatter/gather
+//!   byte accounting) and the per-layer cross-rank imbalance series.
+//!
+//! Two partitioning schemes share this machinery:
 //!
 //! ```text
-//!   rank 0 (cluster-run)                         worker ranks (cluster-worker)
+//!   features (default)                           worker ranks (cluster-worker)
 //!   ┌─────────────────────┐   load (recipe)      ┌──────────────────────────┐
 //!   │ partition_even over │ ───────────────────► │ replicate weights (full) │
 //!   │ the feature panel   │   shard / chunks     │ run all layers locally,  │
 //!   │ gather + reassemble │ ◄─────────────────── │ overlapping chunk i with │
 //!   └─────────────────────┘   result             │ the transfer of i+1      │
 //!                                                └──────────────────────────┘
+//!
+//!   weights (--partition weights, protocol v4)
+//!   ┌─────────────────────┐   load (recipe + row range)   ┌─────────────────┐
+//!   │ partition_even over │ ────────────────────────────► │ slice every     │
+//!   │ each layer's weight │   exchange (live panel), ×L   │ layer's rows;   │
+//!   │ rows; stitch + prune│ ◄──────────────────────────── │ answer partials │
+//!   └─────────────────────┘   partial [live, count]       └─────────────────┘
 //! ```
 //!
 //! The CLI surface is `spdnn cluster-worker --listen H:P` and
-//! `spdnn cluster-run --ranks N --wire json|bin --chunk ROWS`;
-//! `benches/table1_cluster.rs` sweeps rank count plus a wire/chunk
-//! ablation into `BENCH_cluster.json`.
+//! `spdnn cluster-run --ranks N --wire json|bin --chunk ROWS
+//! --partition features|weights`; `benches/table1_cluster.rs` sweeps
+//! rank count plus a wire/chunk/partition ablation into
+//! `BENCH_cluster.json`.
 
 pub mod collective;
 pub mod launcher;
 pub mod rank;
 pub mod transport;
 
-pub use collective::{ClusterCoordinator, ClusterOptions, ClusterReport, LocalCluster};
+pub use collective::{
+    ClusterCoordinator, ClusterOptions, ClusterReport, LocalCluster, PartitionScheme,
+};
 pub use launcher::{Launcher, LauncherConfig, RankHealth};
 pub use rank::{serve_rank, READY_PREFIX};
 pub use transport::{

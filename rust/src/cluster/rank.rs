@@ -1,6 +1,18 @@
-//! A worker rank: one OS process holding a full weight replica and
-//! executing the layer loop over whatever feature shard rank 0 scatters
-//! to it (paper §IV.C — weights duplicated, features partitioned).
+//! A worker rank: one OS process holding its share of the weights and
+//! executing whatever rank 0 scatters to it.
+//!
+//! Two partitioning schemes share the process:
+//!
+//! * **Feature partitioning** (paper §IV.C, the default): the rank
+//!   holds a *full* weight replica and runs the whole layer loop over
+//!   its static feature shard (`shard` / `shard-begin` ops).
+//! * **Weight partitioning** (protocol v4): the `load` carries a
+//!   `(start, count)` row range and the rank keeps only that contiguous
+//!   row slice of every layer. Each `exchange` op then runs **one**
+//!   layer of the slice over the full live panel and answers with the
+//!   partial `[rows, count]` post-ReLU panel; the coordinator
+//!   reassembles the next layer's input (the all-to-all
+//!   boundary-activation exchange).
 //!
 //! The process is started as `spdnn cluster-worker --listen HOST:PORT`
 //! (port 0 picks a free port), announces its bound address on stdout as
@@ -45,11 +57,15 @@ use super::transport::{
 /// First stdout line of a worker: `SPDNN-CLUSTER-WORKER <addr>`.
 pub const READY_PREFIX: &str = "SPDNN-CLUSTER-WORKER";
 
-/// The weight replica plus the engine a `load` op resolved.
+/// The rank's resident weights plus the engine a `load` op resolved.
 struct Replica {
     rank: usize,
     model: ModelSpec,
     prune: bool,
+    /// `None`: full replica (feature partitioning). `Some((start,
+    /// count))`: `layers`/`bias` hold only that row slice of every
+    /// layer (weight partitioning).
+    shard: Option<(usize, usize)>,
     layers: Arc<Vec<EllMatrix>>,
     /// Shared bias panel — borrowed by every shard op, never cloned.
     bias: Arc<Vec<f32>>,
@@ -147,8 +163,8 @@ fn serve_connection(stream: TcpStream, replica: &mut Option<Replica>) -> Result<
                 wire,
                 None,
             ),
-            ClusterRequest::Load { rank, model, spec, prune } => {
-                match load_replica(rank, model, spec, prune) {
+            ClusterRequest::Load { rank, model, spec, prune, shard } => {
+                match load_replica(rank, model, spec, prune, shard) {
                     Ok(r) => {
                         let reply = ClusterReply::Loaded {
                             rank: r.rank,
@@ -195,6 +211,19 @@ fn serve_connection(stream: TcpStream, replica: &mut Option<Replica>) -> Result<
                     }
                 }
             }
+            ClusterRequest::Exchange { layer, features, trace: _ } => match replica.as_ref() {
+                Some(r) => match run_exchange(r, layer, &features) {
+                    Ok(reply) => (reply, wire, None),
+                    Err(e) => (ClusterReply::Error { message: format!("{e:#}") }, wire, None),
+                },
+                None => (
+                    ClusterReply::Error {
+                        message: "no model loaded on this rank (send a load op first)".into(),
+                    },
+                    wire,
+                    None,
+                ),
+            },
             ClusterRequest::ShardChunk { index, .. } => (
                 ClusterReply::Error {
                     message: format!(
@@ -322,14 +351,38 @@ fn receive_chunked(
     ))
 }
 
-fn load_replica(rank: usize, model: ModelSpec, spec: NativeSpec, prune: bool) -> Result<Replica> {
+fn load_replica(
+    rank: usize,
+    model: ModelSpec,
+    spec: NativeSpec,
+    prune: bool,
+    shard: Option<(usize, usize)>,
+) -> Result<Replica> {
     let t = Instant::now();
-    let (layers, bias) = build_replica_weights(&model)?;
+    let (mut layers, mut bias) = build_replica_weights(&model)?;
+    if let Some((start, count)) = shard {
+        if start.checked_add(count).is_none_or(|end| end > model.neurons) {
+            bail!(
+                "weight shard rows {start}..{start}+{count} exceed the model's {} neurons",
+                model.neurons
+            );
+        }
+        // Keep only this rank's contiguous row slice of every layer.
+        // Row slicing preserves each row's entry order, which is what
+        // keeps the reassembled cluster output bit-identical to a
+        // single-process run.
+        layers = layers.iter().map(|w| w.row_slice(start, count)).collect();
+        bias = bias[start..start + count].to_vec();
+    }
     let exec =
         NativeExec::build(spec.threads, spec.minibatch, spec.engine, spec.slice, Some(&layers))
             .context("cluster rank engine init")?;
+    let held = match shard {
+        None => "replicated".to_string(),
+        Some((start, count)) => format!("sharded rows {start}..{}", start + count),
+    };
     log_info!(
-        "cluster worker rank {rank}: replicated {} layers of {}x{} (k={}) in {:.1}ms \
+        "cluster worker rank {rank}: {held} {} layers of {}x{} (k={}) in {:.1}ms \
          [engine={} mb={} slice={} threads={}]",
         layers.len(),
         model.neurons,
@@ -345,6 +398,7 @@ fn load_replica(rank: usize, model: ModelSpec, spec: NativeSpec, prune: bool) ->
         rank,
         model,
         prune,
+        shard,
         layers: Arc::new(layers),
         bias: Arc::new(bias),
         exec,
@@ -365,6 +419,9 @@ fn run_shard(
     features: &[f32],
     trace: TraceId,
 ) -> Result<ShardResult> {
+    if replica.shard.is_some() {
+        bail!("this rank holds a weight shard; feature-partitioned ops need a full replica");
+    }
     let n = replica.model.neurons;
     if n == 0 {
         bail!("replica has zero-width model");
@@ -436,6 +493,30 @@ fn run_shard(
     })
 }
 
+/// Weight-sharded mode: run **one** layer of this rank's row shard over
+/// the full live panel `[rows, neurons]`, answering the partial
+/// `[rows, count]` post-ReLU panel. No pruning happens here — only the
+/// coordinator sees the reassembled full rows, so only it can decide
+/// which features died.
+fn run_exchange(replica: &Replica, layer: usize, features: &[f32]) -> Result<ClusterReply> {
+    let (_, count) = replica.shard.ok_or_else(|| {
+        anyhow!("this rank holds a full replica; exchange ops need a weight-sharded load")
+    })?;
+    let n = replica.model.neurons;
+    if layer >= replica.model.layers {
+        bail!("layer {layer} out of range (model has {} layers)", replica.model.layers);
+    }
+    if features.len() % n.max(1) != 0 {
+        bail!("exchange panel of {} values is not a multiple of neurons={n}", features.len());
+    }
+    let rows = features.len() / n.max(1);
+    let t = Instant::now();
+    let mut values = vec![0.0f32; rows * count];
+    replica.exec.layer(layer, &replica.layers[layer], &replica.bias, features, &mut values)?;
+    let secs = t.elapsed().as_secs_f64();
+    Ok(ClusterReply::Partial { rank: replica.rank, layer, count, secs, values })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -465,7 +546,7 @@ mod tests {
         let cfg = small_cfg();
         let ds = Dataset::generate(&cfg).unwrap();
         let model = ModelSpec::from_config(&cfg);
-        let replica = load_replica(0, model, spec(), true).unwrap();
+        let replica = load_replica(0, model, spec(), true, None).unwrap();
         let out = run_shard(&replica, 0, &ds.features, TraceId::NONE).unwrap();
         assert_eq!(out.categories, ds.truth_categories);
         assert_eq!(out.count, cfg.batch);
@@ -479,7 +560,7 @@ mod tests {
         let ds = Dataset::generate(&cfg).unwrap();
         let sliced =
             NativeSpec { engine: EngineKind::Sliced, minibatch: 12, slice: 16, threads: 1 };
-        let replica = load_replica(0, ModelSpec::from_config(&cfg), sliced, true).unwrap();
+        let replica = load_replica(0, ModelSpec::from_config(&cfg), sliced, true, None).unwrap();
         // Two shard ops against the same prebuilt engine: identical output.
         let a = run_shard(&replica, 0, &ds.features, TraceId::NONE).unwrap();
         let b = run_shard(&replica, 0, &ds.features, TraceId::NONE).unwrap();
@@ -492,7 +573,7 @@ mod tests {
     fn shard_offsets_are_global() {
         let cfg = small_cfg();
         let ds = Dataset::generate(&cfg).unwrap();
-        let replica = load_replica(1, ModelSpec::from_config(&cfg), spec(), true).unwrap();
+        let replica = load_replica(1, ModelSpec::from_config(&cfg), spec(), true, None).unwrap();
         let out = run_shard(&replica, 100, &ds.features, TraceId::NONE).unwrap();
         let expect: Vec<usize> = ds.truth_categories.iter().map(|c| c + 100).collect();
         assert_eq!(out.categories, expect);
@@ -502,14 +583,14 @@ mod tests {
     #[test]
     fn ragged_shard_rejected() {
         let cfg = small_cfg();
-        let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true).unwrap();
+        let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true, None).unwrap();
         assert!(run_shard(&replica, 0, &[0.0; 63], TraceId::NONE).is_err());
     }
 
     #[test]
     fn empty_shard_is_fine() {
         let cfg = small_cfg();
-        let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true).unwrap();
+        let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true, None).unwrap();
         let out = run_shard(&replica, 0, &[], TraceId::NONE).unwrap();
         assert!(out.categories.is_empty());
         assert_eq!(out.count, 0);
@@ -519,7 +600,7 @@ mod tests {
     fn traced_shard_returns_rank_spans() {
         let cfg = small_cfg();
         let ds = Dataset::generate(&cfg).unwrap();
-        let replica = load_replica(1, ModelSpec::from_config(&cfg), spec(), true).unwrap();
+        let replica = load_replica(1, ModelSpec::from_config(&cfg), spec(), true, None).unwrap();
         let trace = TraceId(0xFEED);
         let out = run_shard(&replica, 0, &ds.features, trace).unwrap();
         assert_eq!(out.trace, trace);
@@ -539,7 +620,7 @@ mod tests {
     fn chunked_receive_matches_whole_shard_bit_exactly() {
         let cfg = small_cfg();
         let ds = Dataset::generate(&cfg).unwrap();
-        let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true).unwrap();
+        let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true, None).unwrap();
         let whole = run_shard(&replica, 0, &ds.features, TraceId::NONE).unwrap();
 
         // Feed the chunked receiver from an in-memory stream: 12 rows
@@ -582,7 +663,7 @@ mod tests {
     fn chunked_receive_rejects_gaps_and_short_streams() {
         let cfg = small_cfg();
         let ds = Dataset::generate(&cfg).unwrap();
-        let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true).unwrap();
+        let replica = load_replica(0, ModelSpec::from_config(&cfg), spec(), true, None).unwrap();
         let n = cfg.neurons;
 
         // Out-of-order chunk index.
@@ -636,6 +717,72 @@ mod tests {
     fn bad_topology_fails_load() {
         let mut model = ModelSpec::from_config(&small_cfg());
         model.topology = "mesh".into();
-        assert!(load_replica(0, model, spec(), true).is_err());
+        assert!(load_replica(0, model, spec(), true, None).is_err());
+    }
+
+    #[test]
+    fn sharded_exchanges_reassemble_the_full_layer_bit_exactly() {
+        // Two weight-sharded ranks (uneven 43+21 split of 64 rows),
+        // each answering one exchange per layer; stitching the partial
+        // panels together must equal the full replica's layer output.
+        let cfg = small_cfg();
+        let ds = Dataset::generate(&cfg).unwrap();
+        let model = ModelSpec::from_config(&cfg);
+        let full = load_replica(0, model.clone(), spec(), true, None).unwrap();
+        let parts = [(0usize, 43usize), (43, 21)];
+        let replicas: Vec<Replica> = parts
+            .iter()
+            .enumerate()
+            .map(|(r, &(s, c))| {
+                load_replica(r, model.clone(), spec(), true, Some((s, c))).unwrap()
+            })
+            .collect();
+
+        let n = cfg.neurons;
+        let rows = cfg.batch;
+        let mut y = ds.features.clone();
+        for layer in 0..cfg.layers {
+            // Full-replica truth for this layer.
+            let mut want = vec![0.0f32; rows * n];
+            full.exec.layer(layer, &full.layers[layer], &full.bias, &y, &mut want).unwrap();
+            // Weight-sharded: stitch the two partial panels.
+            let mut got = vec![0.0f32; rows * n];
+            for (replica, &(s, c)) in replicas.iter().zip(&parts) {
+                let reply = run_exchange(replica, layer, &y).unwrap();
+                let ClusterReply::Partial { rank, layer: l, count, values, .. } = reply else {
+                    panic!("expected a partial reply");
+                };
+                assert_eq!(rank, replica.rank);
+                assert_eq!(l, layer);
+                assert_eq!(count, c);
+                assert_eq!(values.len(), rows * c);
+                for f in 0..rows {
+                    got[f * n + s..f * n + s + c].copy_from_slice(&values[f * c..(f + 1) * c]);
+                }
+            }
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "layer {layer}");
+            }
+            y = want;
+        }
+    }
+
+    #[test]
+    fn sharded_replica_rejects_feature_ops_and_vice_versa() {
+        let cfg = small_cfg();
+        let ds = Dataset::generate(&cfg).unwrap();
+        let model = ModelSpec::from_config(&cfg);
+        let sharded = load_replica(0, model.clone(), spec(), true, Some((0, 32))).unwrap();
+        let err = run_shard(&sharded, 0, &ds.features, TraceId::NONE).unwrap_err().to_string();
+        assert!(err.contains("weight shard"), "unexpected error: {err}");
+
+        let full = load_replica(0, model.clone(), spec(), true, None).unwrap();
+        let err = run_exchange(&full, 0, &ds.features).unwrap_err().to_string();
+        assert!(err.contains("full replica"), "unexpected error: {err}");
+
+        // Out-of-range layers and shard ranges fail cleanly too.
+        let err = run_exchange(&sharded, cfg.layers, &ds.features).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "unexpected error: {err}");
+        assert!(load_replica(0, model, spec(), true, Some((60, 8))).is_err());
     }
 }

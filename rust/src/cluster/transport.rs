@@ -37,6 +37,9 @@
 //!   kind 5  shard (traced, v3)   u64 trace | kind-1 payload
 //!   kind 6  result (traced, v3)  u64 trace | u64 nspan | span JSON
 //!                                (nspan bytes) | kind-4 payload
+//!   kind 7  exchange (v4)  u64 trace | u64 layer | u64 n | panel
+//!   kind 8  partial (v4)   u64 rank | u64 layer | u64 count |
+//!                          u64 n | f64 secs | panel
 //!
 //!   panel := u8 0 | f32×n                       dense
 //!          | u8 1 | f32 v | bitmap ⌈n/8⌉ B      sparse-uniform
@@ -67,6 +70,20 @@
 //! messages to peers whose hello answered version ≥ 3 — a v2 peer on
 //! either wire keeps working, it just cannot contribute spans.
 //!
+//! **Weight-sharded partitioning (v4)**: a `load` may carry an optional
+//! shard range (`shard_start`/`shard_count` on the JSON line) telling
+//! the rank to hold only that contiguous row slice of every layer's
+//! weights instead of a full replica. Inference then runs layer by
+//! layer: the coordinator scatters the full live panel with an
+//! `exchange` (kind 7 / `{"op":"exchange",...}`), each rank computes
+//! its partial `[rows, count]` post-ReLU slice and answers with a
+//! `partial` (kind 8 / `{"kind":"partial",...}`), and the coordinator
+//! reassembles the next layer's panel — the all-to-all
+//! boundary-activation exchange. Because an old worker's JSON parser
+//! would silently ignore the unknown shard fields (and compute a full
+//! replica), the coordinator refuses to run weights mode against peers
+//! older than v4 instead of degrading.
+//!
 //! **Frame caps**: every read — JSON line or binary payload — is
 //! bounded. Control traffic is capped at [`CONTROL_FRAME_CAP`]; once a
 //! model is negotiated the cap widens to [`data_frame_cap`] (generous,
@@ -93,12 +110,20 @@ use crate::server::protocol::parse_f32_array;
 use crate::util::config::RuntimeConfig;
 use crate::util::json::Json;
 
-/// v3 adds trace-context propagation (traced frame kinds 5/6 and the
-/// optional JSON `trace`/`spans` fields); v2 peers negotiate down to
-/// the untraced v2 subset, which is byte-identical.
-pub const CLUSTER_PROTOCOL_VERSION: i64 = 3;
+/// v4 adds weight-sharded partitioning (the optional shard range on
+/// `load` plus the exchange/partial frame kinds 7/8); v3 added
+/// trace-context propagation (traced frame kinds 5/6 and the optional
+/// JSON `trace`/`spans` fields). Older peers negotiate down to the
+/// subset they speak — the untraced v2 frames are byte-identical.
+pub const CLUSTER_PROTOCOL_VERSION: i64 = 4;
 /// Oldest protocol whose binary framing is a compatible subset of ours.
 const CLUSTER_PROTOCOL_BIN_COMPAT: i64 = 2;
+/// Oldest protocol that understands the traced encodings (frame kinds
+/// 5/6, JSON `trace`/`spans` fields).
+const CLUSTER_PROTOCOL_TRACE_MIN: i64 = 3;
+/// Oldest protocol that understands weight-sharded partitioning (the
+/// `load` shard range and frame kinds 7/8).
+const CLUSTER_PROTOCOL_WEIGHTS_MIN: i64 = 4;
 
 /// Magic prefix of one `spdnn-clu1` binary frame.
 pub const FRAME_MAGIC: &[u8; 4] = b"SCL1";
@@ -107,6 +132,8 @@ const FRAME_KIND_SHARD_CHUNK: u8 = 3;
 const FRAME_KIND_RESULT: u8 = 4;
 const FRAME_KIND_SHARD_TRACED: u8 = 5;
 const FRAME_KIND_RESULT_TRACED: u8 = 6;
+const FRAME_KIND_EXCHANGE: u8 = 7;
+const FRAME_KIND_PARTIAL: u8 = 8;
 /// magic + kind + u32 payload length.
 const FRAME_HEADER_BYTES: usize = 4 + 1 + 4;
 
@@ -255,8 +282,18 @@ pub enum ClusterRequest {
     Ping,
     /// Connect-time negotiation: propose a wire for the data verbs.
     Hello { wire: WireFormat },
-    /// Build the full weight replica on this rank.
-    Load { rank: usize, model: ModelSpec, spec: NativeSpec, prune: bool },
+    /// Build this rank's weights. `shard: None` replicates the full
+    /// weight set (feature partitioning); `Some((start, count))` holds
+    /// only that contiguous row slice of every layer (v4 weight
+    /// partitioning — never sent to pre-v4 peers, whose JSON parsers
+    /// would silently ignore the field and build a full replica).
+    Load {
+        rank: usize,
+        model: ModelSpec,
+        spec: NativeSpec,
+        prune: bool,
+        shard: Option<(usize, usize)>,
+    },
     /// Run all layers over one statically-partitioned feature shard.
     /// `trace` stitches the rank's spans into the caller's request
     /// trace; [`TraceId::NONE`] keeps the v2 encoding on both wires.
@@ -268,6 +305,12 @@ pub enum ClusterRequest {
     ShardBegin { start: usize, rows: usize, chunks: usize, trace: TraceId },
     /// One sub-panel of an open chunked scatter.
     ShardChunk { index: usize, start: usize, features: Vec<f32> },
+    /// Weight-sharded mode (v4): run **one** layer of this rank's row
+    /// shard over the full live feature panel `[rows, neurons]`. The
+    /// rank answers with a [`ClusterReply::Partial`] panel
+    /// `[rows, count]`. [`TraceId::NONE`] means untraced (the id is
+    /// always on the frame; these kinds are only sent to v4 peers).
+    Exchange { layer: usize, features: Vec<f32>, trace: TraceId },
     /// Finish the current work and exit the worker process.
     Shutdown,
 }
@@ -283,6 +326,7 @@ impl ClusterRequest {
             ClusterRequest::Shard { .. } => "shard",
             ClusterRequest::ShardBegin { .. } => "shard-begin",
             ClusterRequest::ShardChunk { .. } => "shard-chunk",
+            ClusterRequest::Exchange { .. } => "exchange",
             ClusterRequest::Shutdown => "shutdown",
         }
     }
@@ -294,13 +338,20 @@ impl ClusterRequest {
                 ("op", Json::Str("hello".into())),
                 ("wire", Json::Str(wire.as_str().into())),
             ]),
-            ClusterRequest::Load { rank, model, spec, prune } => Json::obj(vec![
-                ("op", Json::Str("load".into())),
-                ("rank", Json::Int(*rank as i64)),
-                ("model", model.to_json()),
-                ("spec", spec_to_json(spec)),
-                ("prune", Json::Bool(*prune)),
-            ]),
+            ClusterRequest::Load { rank, model, spec, prune, shard } => {
+                let mut pairs = vec![
+                    ("op", Json::Str("load".into())),
+                    ("rank", Json::Int(*rank as i64)),
+                    ("model", model.to_json()),
+                    ("spec", spec_to_json(spec)),
+                    ("prune", Json::Bool(*prune)),
+                ];
+                if let Some((start, count)) = shard {
+                    pairs.push(("shard_start", Json::Int(*start as i64)));
+                    pairs.push(("shard_count", Json::Int(*count as i64)));
+                }
+                Json::obj(pairs)
+            }
             ClusterRequest::Shard { start, features, trace } => {
                 let mut pairs = vec![
                     ("op", Json::Str("shard".into())),
@@ -330,6 +381,17 @@ impl ClusterRequest {
                 ("start", Json::Int(*start as i64)),
                 ("features", features_json(features)),
             ]),
+            ClusterRequest::Exchange { layer, features, trace } => {
+                let mut pairs = vec![
+                    ("op", Json::Str("exchange".into())),
+                    ("layer", Json::Int(*layer as i64)),
+                    ("features", features_json(features)),
+                ];
+                if trace.is_some() {
+                    pairs.push(("trace", Json::Str(trace.to_hex())));
+                }
+                Json::obj(pairs)
+            }
             ClusterRequest::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".into()))]),
         }
     }
@@ -347,6 +409,15 @@ impl ClusterRequest {
                     .req("prune")?
                     .as_bool()
                     .ok_or_else(|| anyhow!("\"prune\" is not a bool"))?,
+                shard: match v.get("shard_start") {
+                    None => None,
+                    Some(s) => {
+                        let start = s
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("\"shard_start\" is not an unsigned int"))?;
+                        Some((start, v.req_usize("shard_count")?))
+                    }
+                },
             }),
             "shard" => Ok(ClusterRequest::Shard {
                 start: v.req_usize("start")?,
@@ -363,6 +434,11 @@ impl ClusterRequest {
                 index: v.req_usize("index")?,
                 start: v.req_usize("start")?,
                 features: parse_f32_array(v.req("features")?).context("\"features\"")?,
+            }),
+            "exchange" => Ok(ClusterRequest::Exchange {
+                layer: v.req_usize("layer")?,
+                features: parse_f32_array(v.req("features")?).context("\"features\"")?,
+                trace: trace_from_json(&v)?,
             }),
             "shutdown" => Ok(ClusterRequest::Shutdown),
             other => bail!("unknown cluster op {other:?}"),
@@ -438,6 +514,11 @@ pub enum ClusterReply {
     Hello { version: i64, wire: WireFormat },
     Loaded { rank: usize, neurons: usize, layers: usize },
     Result(Box<ShardResult>),
+    /// Weight-sharded partial panel (v4): this rank's `[rows, count]`
+    /// post-ReLU slice of one layer, answering an
+    /// [`ClusterRequest::Exchange`]. `secs` is the rank's compute time
+    /// for the layer (the coordinator's imbalance accounting).
+    Partial { rank: usize, layer: usize, count: usize, secs: f64, values: Vec<f32> },
     /// Acknowledgement of a shutdown; the worker exits after sending it.
     Bye,
     Error { message: String },
@@ -465,6 +546,18 @@ impl ClusterReply {
                 ("layers", Json::Int(*layers as i64)),
             ]),
             ClusterReply::Result(r) => r.to_json(),
+            ClusterReply::Partial { rank, layer, count, secs, values } => {
+                let vals: Vec<f64> = values.iter().map(|&x| x as f64).collect();
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("kind", Json::Str("partial".into())),
+                    ("rank", Json::Int(*rank as i64)),
+                    ("layer", Json::Int(*layer as i64)),
+                    ("count", Json::Int(*count as i64)),
+                    ("secs", Json::Num(*secs)),
+                    ("values", Json::arr_f64(&vals)),
+                ])
+            }
             ClusterReply::Bye => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("kind", Json::Str("bye".into())),
@@ -515,6 +608,13 @@ impl ClusterReply {
                     None => Vec::new(),
                 },
             }))),
+            "partial" => Ok(ClusterReply::Partial {
+                rank: v.req_usize("rank")?,
+                layer: v.req_usize("layer")?,
+                count: v.req_usize("count")?,
+                secs: v.req_f64("secs")?,
+                values: parse_f32_array(v.req("values")?).context("\"values\"")?,
+            }),
             "bye" => Ok(ClusterReply::Bye),
             "error" => Ok(ClusterReply::Error { message: v.req_str("error")?.to_string() }),
             other => bail!("unknown cluster reply kind {other:?}"),
@@ -770,6 +870,65 @@ pub fn write_shard_chunk(
     }
 }
 
+/// Scatter one layer's full live panel for a weight-sharded pass,
+/// written straight from the caller's slice (no panel-sized copy on
+/// the binary wire). Unlike the shard kinds there is no untraced
+/// legacy shape to preserve — these frames only ever reach v4 peers —
+/// so the trace id is always on the frame, `0` meaning untraced.
+pub fn write_exchange(
+    w: &mut impl Write,
+    wire: WireFormat,
+    layer: usize,
+    features: &[f32],
+    trace: TraceId,
+) -> Result<()> {
+    match wire {
+        WireFormat::Json => {
+            let mut pairs = vec![
+                ("op", Json::Str("exchange".into())),
+                ("layer", Json::Int(layer as i64)),
+                ("features", features_json(features)),
+            ];
+            if trace.is_some() {
+                pairs.push(("trace", Json::Str(trace.to_hex())));
+            }
+            writeln!(w, "{}", Json::obj(pairs)).context("writing exchange line")
+        }
+        WireFormat::Bin => {
+            let uniform = uniform_value(features);
+            let payload_len = 24 + panel_encoded_len(features, uniform);
+            w.write_all(&frame_header(FRAME_KIND_EXCHANGE, payload_len)?)?;
+            let mut meta = Vec::with_capacity(24);
+            put_u64(&mut meta, trace.0);
+            put_u64(&mut meta, layer as u64);
+            put_u64(&mut meta, features.len() as u64);
+            w.write_all(&meta)?;
+            write_panel(w, features, uniform).context("writing exchange frame")
+        }
+    }
+}
+
+fn write_partial_frame(
+    w: &mut impl Write,
+    rank: usize,
+    layer: usize,
+    count: usize,
+    secs: f64,
+    values: &[f32],
+) -> Result<()> {
+    let uniform = uniform_value(values);
+    let payload_len = 40 + panel_encoded_len(values, uniform);
+    w.write_all(&frame_header(FRAME_KIND_PARTIAL, payload_len)?)?;
+    let mut meta = Vec::with_capacity(40);
+    put_u64(&mut meta, rank as u64);
+    put_u64(&mut meta, layer as u64);
+    put_u64(&mut meta, count as u64);
+    put_u64(&mut meta, values.len() as u64);
+    put_f64(&mut meta, secs);
+    w.write_all(&meta)?;
+    write_panel(w, values, uniform).context("writing partial frame")
+}
+
 fn write_result_frame(w: &mut impl Write, r: &ShardResult) -> Result<()> {
     let body_len = 8 * 8
         + 8
@@ -844,7 +1003,15 @@ fn parse_request_frame(kind: u8, payload: &[u8]) -> Result<ClusterRequest> {
             c.finish().context("shard-chunk frame")?;
             Ok(ClusterRequest::ShardChunk { index, start, features })
         }
-        FRAME_KIND_RESULT | FRAME_KIND_RESULT_TRACED => {
+        FRAME_KIND_EXCHANGE => {
+            let trace = TraceId(c.u64().context("exchange trace id")?);
+            let layer = usize_of(c.u64()?, "exchange layer")?;
+            let n = usize_of(c.u64()?, "exchange value count")?;
+            let features = read_panel(&mut c, n).context("exchange frame features")?;
+            c.finish().context("exchange frame")?;
+            Ok(ClusterRequest::Exchange { layer, features, trace })
+        }
+        FRAME_KIND_RESULT | FRAME_KIND_RESULT_TRACED | FRAME_KIND_PARTIAL => {
             bail!("result frame is a reply, not a request")
         }
         other => bail!("unknown request frame kind {other}"),
@@ -852,6 +1019,17 @@ fn parse_request_frame(kind: u8, payload: &[u8]) -> Result<ClusterRequest> {
 }
 
 fn parse_reply_frame(kind: u8, payload: &[u8]) -> Result<ClusterReply> {
+    if kind == FRAME_KIND_PARTIAL {
+        let mut c = ByteCursor::new(payload);
+        let rank = usize_of(c.u64()?, "partial rank")?;
+        let layer = usize_of(c.u64()?, "partial layer")?;
+        let count = usize_of(c.u64()?, "partial count")?;
+        let n = usize_of(c.u64()?, "partial value count")?;
+        let secs = c.f64()?;
+        let values = read_panel(&mut c, n).context("partial frame values")?;
+        c.finish().context("partial frame")?;
+        return Ok(ClusterReply::Partial { rank, layer, count, secs, values });
+    }
     if kind != FRAME_KIND_RESULT && kind != FRAME_KIND_RESULT_TRACED {
         bail!("unknown reply frame kind {kind}");
     }
@@ -915,15 +1093,21 @@ pub fn write_request(w: &mut impl Write, req: &ClusterRequest, wire: WireFormat)
         (WireFormat::Bin, ClusterRequest::ShardChunk { index, start, features }) => {
             write_shard_chunk(w, wire, *index, *start, features)
         }
+        (WireFormat::Bin, ClusterRequest::Exchange { layer, features, trace }) => {
+            write_exchange(w, wire, *layer, features, *trace)
+        }
         _ => writeln!(w, "{}", req.to_json()).context("writing cluster request"),
     }
 }
 
-/// Serialize one reply on the negotiated wire (`result` is the only
-/// binary-capable reply).
+/// Serialize one reply on the negotiated wire (`result` and `partial`
+/// are the binary-capable replies).
 pub fn write_reply(w: &mut impl Write, reply: &ClusterReply, wire: WireFormat) -> Result<()> {
     match (wire, reply) {
         (WireFormat::Bin, ClusterReply::Result(r)) => write_result_frame(w, r),
+        (WireFormat::Bin, ClusterReply::Partial { rank, layer, count, secs, values }) => {
+            write_partial_frame(w, *rank, *layer, *count, *secs, values)
+        }
         _ => writeln!(w, "{}", reply.to_json()).context("writing cluster reply"),
     }
 }
@@ -1111,13 +1295,15 @@ impl ClusterClient {
                     return Ok(client);
                 }
                 if got == wire && version >= CLUSTER_PROTOCOL_BIN_COMPAT {
-                    // v3's untraced frames are byte-identical to v2's
-                    // and the traced kinds are gated on this version,
-                    // so a v2 peer stays fully compatible on either
-                    // wire — it just cannot contribute trace spans.
+                    // The untraced v2 frames are a byte-identical
+                    // subset, and the newer encodings — traced kinds
+                    // 5/6, exchange kinds 7/8 — are gated on this
+                    // version, so an older peer stays fully compatible
+                    // on either wire; it just cannot contribute trace
+                    // spans (pre-v3) or hold a weight shard (pre-v4).
                     crate::log_warn!(
-                        "worker at {addr} speaks protocol v{version}; trace propagation \
-                         is disabled on this connection (coordinator is v{})",
+                        "worker at {addr} speaks protocol v{version}; newer protocol \
+                         features are disabled on this connection (coordinator is v{})",
                         CLUSTER_PROTOCOL_VERSION
                     );
                     return Ok(client);
@@ -1161,7 +1347,16 @@ impl ClusterClient {
     /// When false, [`ClusterClient::send_shard`] silently drops the
     /// trace context instead of sending frames the peer would reject.
     pub fn supports_trace(&self) -> bool {
-        self.peer_version >= CLUSTER_PROTOCOL_VERSION
+        self.peer_version >= CLUSTER_PROTOCOL_TRACE_MIN
+    }
+
+    /// Whether the negotiated peer understands weight-sharded loads and
+    /// the v4 exchange/partial encodings. Unlike traces there is no
+    /// silent degradation: an old worker's JSON parser would ignore the
+    /// shard range and build a full replica, so the coordinator must
+    /// refuse weights mode against a peer where this is false.
+    pub fn supports_weights(&self) -> bool {
+        self.peer_version >= CLUSTER_PROTOCOL_WEIGHTS_MIN
     }
 
     /// Bytes written to the socket so far (flushed requests only).
@@ -1223,6 +1418,21 @@ impl ClusterClient {
                 }
             }
         }
+        self.read_one_reply()
+    }
+
+    /// Weight-sharded mode: scatter one layer's full live panel
+    /// straight from the caller's slice and block for the rank's
+    /// [`ClusterReply::Partial`]. Only valid on peers where
+    /// [`ClusterClient::supports_weights`] holds.
+    pub fn exchange(
+        &mut self,
+        layer: usize,
+        features: &[f32],
+        trace: TraceId,
+    ) -> Result<ClusterReply> {
+        write_exchange(&mut self.writer, self.wire, layer, features, trace)?;
+        self.writer.flush().context("flushing exchange")?;
         self.read_one_reply()
     }
 
@@ -1348,6 +1558,14 @@ mod tests {
             model: model(),
             spec: spec(),
             prune: true,
+            shard: None,
+        });
+        roundtrip_request(ClusterRequest::Load {
+            rank: 1,
+            model: model(),
+            spec: spec(),
+            prune: false,
+            shard: Some((22, 21)),
         });
         roundtrip_request(ClusterRequest::Shard {
             start: 12,
@@ -1376,6 +1594,16 @@ mod tests {
             start: 8,
             features: vec![2.5, -0.75],
         });
+        roundtrip_request(ClusterRequest::Exchange {
+            layer: 3,
+            features: vec![0.0, 1.25, 0.5],
+            trace: TraceId::NONE,
+        });
+        roundtrip_request(ClusterRequest::Exchange {
+            layer: 0,
+            features: vec![1.0, 0.0],
+            trace: TraceId(0xC0FFEE),
+        });
         roundtrip_request(ClusterRequest::Shutdown);
     }
 
@@ -1389,6 +1617,13 @@ mod tests {
         roundtrip_reply(ClusterReply::Loaded { rank: 1, neurons: 64, layers: 5 });
         roundtrip_reply(ClusterReply::Result(Box::new(sample_result())));
         roundtrip_reply(ClusterReply::Result(Box::new(traced_result())));
+        roundtrip_reply(ClusterReply::Partial {
+            rank: 1,
+            layer: 4,
+            count: 21,
+            secs: 0.125,
+            values: vec![0.0, 32.0, 0.5],
+        });
         roundtrip_reply(ClusterReply::Bye);
         roundtrip_reply(ClusterReply::Error { message: "boom".into() });
     }
@@ -1399,7 +1634,23 @@ mod tests {
             roundtrip_request_wire(ClusterRequest::Ping, wire);
             roundtrip_request_wire(ClusterRequest::Hello { wire }, wire);
             roundtrip_request_wire(
-                ClusterRequest::Load { rank: 0, model: model(), spec: spec(), prune: false },
+                ClusterRequest::Load {
+                    rank: 0,
+                    model: model(),
+                    spec: spec(),
+                    prune: false,
+                    shard: None,
+                },
+                wire,
+            );
+            roundtrip_request_wire(
+                ClusterRequest::Load {
+                    rank: 2,
+                    model: model(),
+                    spec: spec(),
+                    prune: true,
+                    shard: Some((43, 21)),
+                },
                 wire,
             );
             roundtrip_request_wire(
@@ -1430,11 +1681,74 @@ mod tests {
                 ClusterRequest::ShardChunk { index: 0, start: 0, features: vec![] },
                 wire,
             );
+            roundtrip_request_wire(
+                ClusterRequest::Exchange {
+                    layer: 2,
+                    features: vec![0.0, 1.0, 1.0, 0.0],
+                    trace: TraceId::NONE,
+                },
+                wire,
+            );
+            roundtrip_request_wire(
+                ClusterRequest::Exchange { layer: 2, features: vec![0.5, 0.25], trace: TraceId(7) },
+                wire,
+            );
             roundtrip_request_wire(ClusterRequest::Shutdown, wire);
             roundtrip_reply_wire(ClusterReply::Result(Box::new(sample_result())), wire);
             roundtrip_reply_wire(ClusterReply::Result(Box::new(traced_result())), wire);
+            roundtrip_reply_wire(
+                ClusterReply::Partial {
+                    rank: 0,
+                    layer: 1,
+                    count: 32,
+                    secs: 0.5,
+                    values: vec![0.0, 2.0, 2.0],
+                },
+                wire,
+            );
             roundtrip_reply_wire(ClusterReply::Error { message: "nope".into() }, wire);
         }
+    }
+
+    #[test]
+    fn exchange_and_partial_use_the_v4_frame_kinds() {
+        let req = ClusterRequest::Exchange {
+            layer: 1,
+            features: vec![0.5, 1.5],
+            trace: TraceId::NONE,
+        };
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req, WireFormat::Bin).unwrap();
+        assert_eq!(buf[4], 7, "exchange must use frame kind 7");
+
+        let reply = ClusterReply::Partial {
+            rank: 0,
+            layer: 1,
+            count: 2,
+            secs: 0.25,
+            values: vec![0.5, 1.5],
+        };
+        let mut buf = Vec::new();
+        write_reply(&mut buf, &reply, WireFormat::Bin).unwrap();
+        assert_eq!(buf[4], 8, "partial must use frame kind 8");
+
+        // A partial frame is never a valid request.
+        let err = read_invalid(&buf, 1 << 20);
+        assert!(err.contains("reply"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn sparse_exchange_panels_use_the_bitmap_encoding() {
+        // Live post-ReLU panels keep the {0,v} bitmap benefit whenever
+        // a layer saturates to a shared clip value (or goes all-zero).
+        let feats = vec![0.0f32; 800];
+        let req = ClusterRequest::Exchange { layer: 0, features: feats, trace: TraceId::NONE };
+        let mut bin = Vec::new();
+        write_request(&mut bin, &req, WireFormat::Bin).unwrap();
+        // header + trace/layer/count meta + enc + value + bitmap.
+        assert!(bin.len() <= 9 + 24 + 1 + 4 + 100, "frame too large: {} bytes", bin.len());
+        let (back, _) = read_msg(&mut &bin[..], 1 << 20);
+        assert_eq!(back, req);
     }
 
     #[test]
@@ -1720,6 +2034,7 @@ mod tests {
             model: m,
             spec: spec(),
             prune: false,
+            shard: None,
         });
     }
 

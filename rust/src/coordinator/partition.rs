@@ -1,5 +1,10 @@
-//! Static feature partitioning across workers (paper §IV.C: "weights are
+//! Static partitioning across workers (paper §IV.C: "weights are
 //! replicated between GPUs and the features are partitioned evenly").
+//!
+//! The same primitive shards everything contiguous in the codebase:
+//! feature rows across the offline worker pool, request slots across
+//! serving replicas, and — under `--partition weights` — each layer's
+//! weight *rows* across cluster ranks.
 
 /// One worker's contiguous feature range.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -9,8 +14,27 @@ pub struct Partition {
     pub count: usize,
 }
 
-/// Split `batch` features across `workers` as evenly as possible
-/// (first `batch % workers` partitions get one extra feature).
+/// Split `batch` items across `workers` as evenly as possible
+/// (first `batch % workers` partitions get one extra item).
+///
+/// The result is contiguous, disjoint, ordered and exact: partition
+/// `w` starts where `w - 1` ended and the counts sum to `batch`.
+///
+/// ```
+/// use spdnn::coordinator::partition::partition_even;
+///
+/// // 10 features over 4 workers: the remainder lands up front.
+/// let parts = partition_even(10, 4);
+/// let counts: Vec<usize> = parts.iter().map(|p| p.count).collect();
+/// assert_eq!(counts, [3, 3, 2, 2]);
+/// assert_eq!(parts[1].start, 3);
+/// // Exact cover, no overlap — also for workers that don't divide batch.
+/// assert_eq!(counts.iter().sum::<usize>(), 10);
+/// ```
+///
+/// # Panics
+///
+/// Panics when `workers` is zero.
 pub fn partition_even(batch: usize, workers: usize) -> Vec<Partition> {
     assert!(workers > 0, "workers must be positive");
     let base = batch / workers;

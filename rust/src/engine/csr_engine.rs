@@ -18,18 +18,21 @@ pub fn relu_clip(x: f32) -> f32 {
 pub struct CsrEngine;
 
 impl CsrEngine {
-    /// One layer over a dense [batch, neurons] row-major feature panel.
+    /// One layer over a dense row-major feature panel: `[batch, ncols]`
+    /// in, `[batch, nrows]` out. Square matrices are the whole-network
+    /// case; rectangular ones are row slices of a layer (weight-sharded
+    /// cluster ranks compute `[batch, shard_rows]` partial panels).
     pub fn layer(&self, w: &CsrMatrix, bias: &[f32], y_in: &[f32], y_out: &mut [f32]) {
-        let n = w.nrows;
-        assert_eq!(w.ncols, n, "weight matrices are square");
-        assert_eq!(bias.len(), n);
-        assert_eq!(y_in.len(), y_out.len());
-        let batch = y_in.len() / n;
+        let (nout, nin) = (w.nrows, w.ncols);
+        assert_eq!(bias.len(), nout);
+        assert_eq!(y_in.len() % nin.max(1), 0);
+        let batch = y_in.len() / nin.max(1);
+        assert_eq!(y_out.len(), batch * nout);
         for b in 0..batch {
-            let row_in = &y_in[b * n..(b + 1) * n];
-            let row_out = &mut y_out[b * n..(b + 1) * n];
+            let row_in = &y_in[b * nin..(b + 1) * nin];
+            let row_out = &mut y_out[b * nout..(b + 1) * nout];
             // Per-feature pass: weights re-read for every feature.
-            for i in 0..n {
+            for i in 0..nout {
                 let mut acc = 0.0f32;
                 for (c, v) in w.row(i) {
                     acc += row_in[c as usize] * v;

@@ -48,42 +48,44 @@ impl EllEngine {
         Ok(EllEngine { mb, threads: threads.max(1) })
     }
 
-    /// One layer over a dense [batch, neurons] row-major feature panel.
+    /// One layer over a dense row-major feature panel: `[batch, ncols]`
+    /// in, `[batch, nrows]` out (square for whole-network layers,
+    /// rectangular for weight-sharded row slices).
     ///
     /// The batch is split across pool workers at *feature* granularity so
     /// no worker ever sees a partial feature row.
     pub fn layer(&self, w: &EllMatrix, bias: &[f32], y_in: &[f32], y_out: &mut [f32]) {
-        let n = w.nrows;
-        assert_eq!(w.ncols, n, "weight matrices are square");
-        assert_eq!(bias.len(), n);
-        assert_eq!(y_in.len(), y_out.len());
-        assert_eq!(y_in.len() % n, 0);
-        let batch = y_in.len() / n;
+        let (nout, nin) = (w.nrows, w.ncols);
+        assert_eq!(bias.len(), nout);
+        assert_eq!(y_in.len() % nin.max(1), 0);
+        let batch = y_in.len() / nin.max(1);
+        assert_eq!(y_out.len(), batch * nout);
         let threads = self.threads.min(batch.max(1));
-        if threads <= 1 {
+        if threads <= 1 || nout == 0 {
             self.layer_serial(w, bias, y_in, y_out);
             return;
         }
-        let chunk = batch.div_ceil(threads) * n;
-        pool_chunks_mut(ThreadPool::global(), y_out, chunk, |t, out_chunk| {
-            let start = t * chunk;
-            let in_chunk = &y_in[start..start + out_chunk.len()];
+        let rows = batch.div_ceil(threads);
+        pool_chunks_mut(ThreadPool::global(), y_out, rows * nout, |t, out_chunk| {
+            let fstart = t * rows;
+            let count = out_chunk.len() / nout;
+            let in_chunk = &y_in[fstart * nin..(fstart + count) * nin];
             self.layer_serial(w, bias, in_chunk, out_chunk);
         });
     }
 
     /// Serial minibatched kernel (one thread's share).
     fn layer_serial(&self, w: &EllMatrix, bias: &[f32], y_in: &[f32], y_out: &mut [f32]) {
-        let n = w.nrows;
+        let (nout, nin) = (w.nrows, w.ncols);
         let k = w.k;
-        let batch = y_in.len() / n;
+        let batch = y_in.len() / nin.max(1);
         let mut bstart = 0;
         while bstart < batch {
             let mb = self.mb.min(batch - bstart);
-            let yin = &y_in[bstart * n..(bstart + mb) * n];
-            let yout = &mut y_out[bstart * n..(bstart + mb) * n];
+            let yin = &y_in[bstart * nin..(bstart + mb) * nin];
+            let yout = &mut y_out[bstart * nout..(bstart + mb) * nout];
             // Register tiling: one (idx, val) panel row feeds `mb` features.
-            for i in 0..n {
+            for i in 0..nout {
                 let idx = &w.index[i * k..(i + 1) * k];
                 let val = &w.value[i * k..(i + 1) * k];
                 let mut acc = [0.0f32; MAX_MB];
@@ -93,12 +95,12 @@ impl EllEngine {
                     }
                     let c = c as usize;
                     for f in 0..mb {
-                        acc[f] += yin[f * n + c] * v;
+                        acc[f] += yin[f * nin + c] * v;
                     }
                 }
                 let b = bias[i];
                 for f in 0..mb {
-                    yout[f * n + i] = relu_clip(acc[f] + b);
+                    yout[f * nout + i] = relu_clip(acc[f] + b);
                 }
             }
             bstart += mb;
@@ -115,9 +117,8 @@ impl EllEngine {
         y_out: &mut [f32],
         active: usize,
     ) {
-        let n = w.nrows;
-        assert!(active * n <= y_in.len());
-        self.layer(w, bias, &y_in[..active * n], &mut y_out[..active * n]);
+        assert!(active * w.ncols <= y_in.len());
+        self.layer(w, bias, &y_in[..active * w.ncols], &mut y_out[..active * w.nrows]);
     }
 }
 

@@ -56,40 +56,42 @@ impl SlicedEllEngine {
         Ok(SlicedEllEngine { mb, threads: threads.max(1) })
     }
 
-    /// One layer over a dense [batch, neurons] row-major feature panel.
+    /// One layer over a dense row-major feature panel: `[batch, ncols]`
+    /// in, `[batch, nrows]` out (square for whole-network layers,
+    /// rectangular for weight-sharded row slices).
     pub fn layer(&self, w: &SlicedEll, bias: &[f32], y_in: &[f32], y_out: &mut [f32]) {
-        let n = w.nrows;
-        assert_eq!(w.ncols, n, "weight matrices are square");
-        assert_eq!(bias.len(), n);
-        assert_eq!(y_in.len(), y_out.len());
-        assert_eq!(y_in.len() % n.max(1), 0);
-        let batch = y_in.len() / n.max(1);
+        let (nout, nin) = (w.nrows, w.ncols);
+        assert_eq!(bias.len(), nout);
+        assert_eq!(y_in.len() % nin.max(1), 0);
+        let batch = y_in.len() / nin.max(1);
+        assert_eq!(y_out.len(), batch * nout);
         let threads = self.threads.min(batch.max(1));
-        if threads <= 1 {
+        if threads <= 1 || nout == 0 {
             self.layer_serial(w, bias, y_in, y_out);
             return;
         }
-        let chunk = batch.div_ceil(threads) * n;
-        pool_chunks_mut(ThreadPool::global(), y_out, chunk, |t, out_chunk| {
-            let start = t * chunk;
-            let in_chunk = &y_in[start..start + out_chunk.len()];
+        let rows = batch.div_ceil(threads);
+        pool_chunks_mut(ThreadPool::global(), y_out, rows * nout, |t, out_chunk| {
+            let fstart = t * rows;
+            let count = out_chunk.len() / nout;
+            let in_chunk = &y_in[fstart * nin..(fstart + count) * nin];
             self.layer_serial(w, bias, in_chunk, out_chunk);
         });
     }
 
     /// Serial sliced kernel (one worker's feature share).
     fn layer_serial(&self, w: &SlicedEll, bias: &[f32], y_in: &[f32], y_out: &mut [f32]) {
-        let n = w.nrows;
+        let (nout, nin) = (w.nrows, w.ncols);
         let slice = w.slice;
         let stride = self.mb; // accumulator lane stride (fixed across tails)
-        let batch = y_in.len() / n.max(1);
+        let batch = y_in.len() / nin.max(1);
         // One accumulator panel reused for every slice and minibatch.
         let mut acc = vec![0.0f32; slice * stride];
         let mut bstart = 0;
         while bstart < batch {
             let mb = self.mb.min(batch - bstart);
-            let yin = &y_in[bstart * n..(bstart + mb) * n];
-            let yout = &mut y_out[bstart * n..(bstart + mb) * n];
+            let yin = &y_in[bstart * nin..(bstart + mb) * nin];
+            let yout = &mut y_out[bstart * nout..(bstart + mb) * nout];
             for s in 0..w.nslices() {
                 let (lanes, width, base) = w.slice_parts(s);
                 let lo = s * slice;
@@ -109,7 +111,7 @@ impl SlicedEllEngine {
                         // Register tiling: one (idx, val) element feeds
                         // the whole minibatch.
                         for (f, slot) in a.iter_mut().enumerate() {
-                            *slot += yin[f * n + c] * v;
+                            *slot += yin[f * nin + c] * v;
                         }
                     }
                 }
@@ -118,7 +120,7 @@ impl SlicedEllEngine {
                     let i = lo + lane;
                     let b = bias[i];
                     for f in 0..mb {
-                        yout[f * n + i] = relu_clip(acc[lane * stride + f] + b);
+                        yout[f * nout + i] = relu_clip(acc[lane * stride + f] + b);
                     }
                 }
             }
@@ -137,9 +139,8 @@ impl SlicedEllEngine {
         y_out: &mut [f32],
         active: usize,
     ) {
-        let n = w.nrows;
-        assert!(active * n <= y_in.len());
-        self.layer(w, bias, &y_in[..active * n], &mut y_out[..active * n]);
+        assert!(active * w.ncols <= y_in.len());
+        self.layer(w, bias, &y_in[..active * w.ncols], &mut y_out[..active * w.nrows]);
     }
 }
 
@@ -252,5 +253,47 @@ mod tests {
         assert!(SlicedEllEngine::with_mb(1, 0).is_err());
         assert!(SlicedEllEngine::with_mb(1, MAX_MB + 1).is_err());
         assert_eq!(SlicedEllEngine::with_mb(2, MAX_MB).unwrap().mb, MAX_MB);
+    }
+
+    /// Rectangular (weight-sharded) layers: running each row slice of a
+    /// layer and stitching the partial panels back together must be
+    /// bit-identical to the full square layer — on all three engines.
+    #[test]
+    fn rectangular_row_slices_match_full_layer_bit_exact() {
+        use crate::coordinator::partition::partition_even;
+        Runner::new(16, 0x5A4D).run("row-slices-vs-full", |rng| {
+            let n = *proptest::choose(rng, &[32usize, 64]);
+            let batch = proptest::usize_in(rng, 1, 12);
+            let ranks = proptest::usize_in(rng, 1, 5); // often ranks ∤ n
+            let (w, bias, y) = random_problem(rng, n, 8.min(n), batch);
+            let full_sliced = SlicedEll::from_ell(&w, 8).unwrap();
+            let mut want = vec![0.0; y.len()];
+            SlicedEllEngine::new(1).layer(&full_sliced, &bias, &y, &mut want);
+
+            let mut got = vec![0.0; y.len()];
+            for part in partition_even(n, ranks) {
+                let sub = w.row_slice(part.start, part.count);
+                let sub_bias = &bias[part.start..part.start + part.count];
+                let mut partial = vec![0.0; batch * part.count];
+                match part.worker % 3 {
+                    0 => SlicedEllEngine::new(2).layer(
+                        &SlicedEll::from_ell(&sub, 8).unwrap(),
+                        sub_bias,
+                        &y,
+                        &mut partial,
+                    ),
+                    1 => EllEngine::new(2).layer(&sub, sub_bias, &y, &mut partial),
+                    _ => CsrEngine.layer(&ell_to_csr(&sub).unwrap(), sub_bias, &y, &mut partial),
+                }
+                for f in 0..batch {
+                    got[f * n + part.start..f * n + part.start + part.count]
+                        .copy_from_slice(&partial[f * part.count..(f + 1) * part.count]);
+                }
+            }
+            if got != want {
+                return Err(format!("stitched output differs (n={n} ranks={ranks})"));
+            }
+            Ok(())
+        });
     }
 }

@@ -59,8 +59,8 @@ impl CsrMatrix {
         (0..self.nrows).map(|i| self.row_len(i)).max().unwrap_or(0)
     }
 
-    /// y_out[i] = sum_j A[i,j] * y_in[j] — single-vector SpMV, used as the
-    /// innermost oracle.
+    /// `y_out[i] = sum_j A[i,j] * y_in[j]` — single-vector SpMV, used as
+    /// the innermost oracle.
     pub fn spmv(&self, y_in: &[f32], y_out: &mut [f32]) {
         assert_eq!(y_in.len(), self.ncols);
         assert_eq!(y_out.len(), self.nrows);

@@ -98,6 +98,22 @@ impl EllMatrix {
         self.index.len() * 4 + self.value.len() * 4
     }
 
+    /// A contiguous row slice `[start, start + count)` as its own
+    /// rectangular panel (`nrows = count`, `ncols` unchanged). This is
+    /// the weight-sharding primitive: per-row entry order is preserved
+    /// verbatim, so any engine run over the slice accumulates each
+    /// output in exactly the full-matrix order (bit-identical results).
+    pub fn row_slice(&self, start: usize, count: usize) -> EllMatrix {
+        assert!(start + count <= self.nrows, "row slice out of range");
+        EllMatrix {
+            nrows: count,
+            ncols: self.ncols,
+            k: self.k,
+            index: self.index[start * self.k..(start + count) * self.k].to_vec(),
+            value: self.value[start * self.k..(start + count) * self.k].to_vec(),
+        }
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.index.len() != self.nrows * self.k || self.value.len() != self.nrows * self.k {
             bail!("panel size mismatch");
@@ -294,6 +310,24 @@ mod tests {
         // The paper's ~33% is index bytes halved out of a 2:4 index:value mix:
         // (2+4)/(4+4) = 0.75 -> 25% here; the paper counts map+windex so 33%.
         assert!((u16b / u32b - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_slice_covers_and_preserves_rows() {
+        let ell = EllMatrix::from_csr(&csr_toy(), 4).unwrap();
+        let a = ell.row_slice(0, 1);
+        let b = ell.row_slice(1, 2);
+        let c = ell.row_slice(3, 1);
+        assert_eq!((a.nrows, a.ncols, a.k), (1, 8, 4));
+        assert_eq!(a.row(0), ell.row(0));
+        assert_eq!(b.row(0), ell.row(1));
+        assert_eq!(b.row(1), ell.row(2));
+        assert_eq!(c.row(0), ell.row(3));
+        // Concatenated slices reconstruct the full panel storage.
+        let index: Vec<u16> = [&a.index[..], &b.index[..], &c.index[..]].concat();
+        assert_eq!(index, ell.index);
+        // Empty slices are legal (ranks > rows).
+        assert_eq!(ell.row_slice(2, 0).nrows, 0);
     }
 
     #[test]

@@ -25,7 +25,9 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use spdnn::bench::{diff_reports, validate_report, DEFAULT_THRESHOLD_PCT};
-use spdnn::cluster::{serve_rank, ClusterOptions, LocalCluster, ModelSpec, WireFormat};
+use spdnn::cluster::{
+    serve_rank, ClusterOptions, LocalCluster, ModelSpec, PartitionScheme, WireFormat,
+};
 use spdnn::coordinator::batcher::{BatchPolicy, InferenceServer, ServeBackend, ServedModel};
 use spdnn::coordinator::{
     resolve_native_spec, run_inference, validate, Backend, EngineSelect, NativeSpec, RunOptions,
@@ -100,6 +102,7 @@ fn print_help() {
                   --queue-cap N --deadline-ms MS\n\
                   --ranks N (execute replicas on N cluster-worker processes;\n\
                   0 = in-process) --wire json|bin --chunk ROWS\n\
+                  --partition features|weights (how ranks split the model)\n\
                   --worker-addrs H:P,H:P (adopt pre-started cluster-workers)\n\
                   serve-smoke --ranks N --requests R --stats-out FILE  (loopback\n\
                   load + bit-identity gate vs in-process sliced serving)\n\
@@ -110,6 +113,9 @@ fn print_help() {
          Cluster: cluster-run --ranks N  (spawns N cluster-worker processes)\n\
                   --wire json|bin (data-frame encoding, default bin)\n\
                   --chunk ROWS (pipelined scatter sub-panels; 0 = whole shards)\n\
+                  --partition features|weights (replicate weights and split the\n\
+                  feature panel, or split weight rows and exchange activations\n\
+                  per layer; default features)\n\
                   cluster-worker --listen H:P  (one rank; announces its address)\n\
          IO:      --config FILE --data DIR --stream\n\
          Sim:     --gpus LIST --gpu v100|a100\n\
@@ -272,6 +278,7 @@ fn serve_cluster_config(args: &Args) -> Result<Option<ClusterServeConfig>> {
     let ranks = args.usize_or("ranks", 0)?;
     let wire = WireFormat::parse(args.get_or("wire", "bin"))?;
     let chunk = args.usize_or("chunk", 0)?;
+    let partition = PartitionScheme::parse(args.get_or("partition", "features"))?;
     let addrs = match args.get("worker-addrs") {
         Some(list) => Some(
             list.split(',')
@@ -309,6 +316,7 @@ fn serve_cluster_config(args: &Args) -> Result<Option<ClusterServeConfig>> {
         options: ClusterOptions {
             wire,
             chunk_rows: if chunk == 0 { None } else { Some(chunk) },
+            partition,
         },
         program,
         addrs,
@@ -388,13 +396,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         effective_replicas,
         match &cluster {
             Some(c) => format!(
-                " over {} cluster ranks (wire={}, chunk={})",
+                " over {} cluster ranks (wire={}, chunk={}, partition={})",
                 c.ranks,
                 c.options.wire,
                 match c.options.chunk_rows {
                     Some(rows) => format!("{rows} rows"),
                     None => "off".to_string(),
-                }
+                },
+                c.options.partition
             ),
             None => String::new(),
         },
@@ -618,6 +627,7 @@ fn cmd_cluster_run(args: &Args) -> Result<()> {
     let ranks = args.usize_or("ranks", 2)?;
     let wire = WireFormat::parse(args.get_or("wire", "bin"))?;
     let chunk = args.usize_or("chunk", 0)?;
+    let partition = PartitionScheme::parse(args.get_or("partition", "features"))?;
     let trace_out = args.get("trace-out").map(PathBuf::from);
     args.finish()?;
     if matches!(opts.backend, Backend::Pjrt { .. }) {
@@ -627,11 +637,12 @@ fn cmd_cluster_run(args: &Args) -> Result<()> {
     let cluster_opts = ClusterOptions {
         wire,
         chunk_rows: if chunk == 0 { None } else { Some(chunk) },
+        partition,
     };
 
     println!(
         "cluster: {ranks} worker ranks, model {}x{} k={} batch={} \
-         engine={} mb={} slice={} threads={} prune={} wire={} chunk={}",
+         engine={} mb={} slice={} threads={} prune={} wire={} chunk={} partition={}",
         cfg.neurons,
         cfg.layers,
         cfg.k,
@@ -645,7 +656,8 @@ fn cmd_cluster_run(args: &Args) -> Result<()> {
         match cluster_opts.chunk_rows {
             Some(rows) => format!("{rows} rows"),
             None => "off (whole shards)".to_string(),
-        }
+        },
+        partition
     );
     let ds = Dataset::generate(&cfg)?;
     let model = ModelSpec::from_config(&cfg);
@@ -673,20 +685,52 @@ fn cmd_cluster_run(args: &Args) -> Result<()> {
         );
     }
 
-    let mut table = Table::new(
-        "Per-rank shards (replicated weights, partitioned features)",
-        &["rank", "assigned", "categories", "busy", "edges"],
-    );
-    for (p, s) in report.parts.iter().zip(&report.shards) {
-        table.row(vec![
-            s.rank.to_string(),
-            p.count.to_string(),
-            s.categories.len().to_string(),
-            fmt_secs(s.busy_secs()),
-            s.edges_traversed.to_string(),
-        ]);
+    match partition {
+        PartitionScheme::Features => {
+            let mut table = Table::new(
+                "Per-rank shards (replicated weights, partitioned features)",
+                &["rank", "assigned", "categories", "busy", "edges"],
+            );
+            for (p, s) in report.parts.iter().zip(&report.shards) {
+                table.row(vec![
+                    s.rank.to_string(),
+                    p.count.to_string(),
+                    s.categories.len().to_string(),
+                    fmt_secs(s.busy_secs()),
+                    s.edges_traversed.to_string(),
+                ]);
+            }
+            table.print();
+        }
+        PartitionScheme::Weights => {
+            let mut table = Table::new(
+                "Per-rank weight shards (partitioned rows, exchanged activations)",
+                &["rank", "rows", "busy", "edges"],
+            );
+            for (p, s) in report.parts.iter().zip(&report.shards) {
+                table.row(vec![
+                    s.rank.to_string(),
+                    p.count.to_string(),
+                    fmt_secs(s.busy_secs()),
+                    s.edges_traversed.to_string(),
+                ]);
+            }
+            table.print();
+            // The tentpole observable: how much the per-layer all-to-all
+            // costs on the wire as pruning thins the live panel.
+            let xb = &report.per_layer_exchange_bytes;
+            let total: u64 = xb.iter().sum();
+            let peak = xb.iter().enumerate().max_by_key(|(_, &b)| b).unwrap_or((0, &0));
+            println!(
+                "  exchange volume  {total} B over {} layers (peak {} B at layer {}, \
+                 final {} B)",
+                xb.len(),
+                peak.1,
+                peak.0,
+                xb.last().copied().unwrap_or(0)
+            );
+        }
     }
-    table.print();
 
     let layer_imb = &report.per_layer_imbalance;
     let worst = layer_imb

@@ -17,7 +17,7 @@
 //!    axis as coordinator spans without clock negotiation. Durations
 //!    still come from a monotonic `Instant` for precision.
 //! 3. **Lock sharding.** Recording threads hash to one of
-//!    [`SHARD_COUNT`] mutex-guarded vectors by a thread-local id, so
+//!    `SHARD_COUNT` mutex-guarded vectors by a thread-local id, so
 //!    concurrent workers do not serialize on a single buffer lock.
 
 use std::fmt::Display;
@@ -213,6 +213,16 @@ struct LiveSpan {
 /// RAII span guard; records its interval when dropped (or explicitly via
 /// [`Span::finish_secs`]). Obtained from [`span`], [`timed`], or the
 /// `obs::span!` macro.
+///
+/// ```
+/// use spdnn::obs::{timed, TraceId};
+///
+/// // `timed` measures even with no trace sink attached, which is how
+/// // report fields (layer_secs, serve latency) derive from spans.
+/// let span = timed("layer", TraceId::NONE).arg("layer", 3);
+/// let secs = span.finish_secs();
+/// assert!(secs >= 0.0);
+/// ```
 pub struct Span {
     inner: Option<LiveSpan>,
 }
@@ -297,6 +307,16 @@ pub fn timed(name: &'static str, trace: TraceId) -> Span {
 
 /// `obs::span!("layer", layer = 3, rank = 1)` — optionally with
 /// `trace = <TraceId>` as the first argument pair.
+///
+/// ```
+/// use spdnn::obs::TraceId;
+///
+/// // Untraced span with args (one relaxed atomic load while the
+/// // recorder is off; dropping it records when a sink is attached):
+/// let _s = spdnn::obs::span!("layer", layer = 3, rank = 1);
+/// // Pinned to a request's trace id:
+/// let _t = spdnn::obs::span!("exchange", trace = TraceId(5), layer = 7);
+/// ```
 #[macro_export]
 macro_rules! obs_span {
     ($name:expr, trace = $t:expr $(, $k:ident = $v:expr)* $(,)?) => {

@@ -64,7 +64,7 @@ pub struct LayerLiterals {
 }
 
 impl LayerLiterals {
-    /// Build from host panels ([n, k] u16 idx / f32 val, [n] f32 bias).
+    /// Build from host panels (`[n, k]` u16 idx / f32 val, `[n]` f32 bias).
     pub fn new(
         idx: &[u16],
         val: &[f32],
@@ -91,9 +91,9 @@ impl LayerLiterals {
 /// Output of one layer dispatch.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LayerOut {
-    /// Activated features, [capacity, neurons] row-major.
+    /// Activated features, `[capacity, neurons]` row-major.
     pub y_next: Vec<f32>,
-    /// Per-feature activity flags, [capacity].
+    /// Per-feature activity flags, `[capacity]`.
     pub active: Vec<i32>,
 }
 

@@ -11,7 +11,11 @@
 //! scattered over the replica's ranks (binary wire, optional pipelined
 //! chunking) and gathered back, so admitted requests execute across
 //! process boundaries while admission, deadlines, shedding and drain
-//! stay unchanged above.
+//! stay unchanged above. The replica's coordinator honours the session's
+//! [`PartitionScheme`](crate::cluster::PartitionScheme), so `serve
+//! --partition weights` serves models whose weights exceed one rank's
+//! memory: each rank subset holds row slices and the panel flows through
+//! per-layer boundary-activation exchanges instead of one scatter.
 //!
 //! ```text
 //!   router ──► replica 0 (batcher thread) ──► ClusterCoordinator ──► ranks 0..r
@@ -60,8 +64,11 @@ use crate::obs::trace::TraceId;
 pub struct ClusterServeConfig {
     /// Worker-rank process count, split across the server's replicas.
     pub ranks: usize,
-    /// Transport of every replica's coordinator connections (wire
-    /// format, pipelined scatter chunking).
+    /// Transport and partitioning of every replica's coordinator
+    /// connections (wire format, pipelined scatter chunking, and the
+    /// feature/weight [`PartitionScheme`](crate::cluster::PartitionScheme)
+    /// — `serve --partition weights` makes each replica's rank subset
+    /// hold row slices instead of full replicas).
     pub options: ClusterOptions,
     /// The spdnn binary worker ranks are spawned from
     /// (`std::env::current_exe()` in the CLI, `CARGO_BIN_EXE_spdnn` in
@@ -216,7 +223,7 @@ impl ClusterReplica {
             );
         }
         let mut coordinator = ClusterCoordinator::connect_with(&addrs, opts)?;
-        coordinator.load(model, spec, prune).context("replicating weights on serving ranks")?;
+        coordinator.load(model, spec, prune).context("loading the model on serving ranks")?;
         let lame = Arc::new(AtomicBool::new(false));
         let counters: Arc<Vec<RankCounters>> =
             Arc::new(rank_ids.iter().map(|&r| RankCounters::new(r)).collect());

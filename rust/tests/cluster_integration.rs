@@ -3,15 +3,17 @@
 //!
 //! Covers the acceptance bar of the cluster subsystem: bit-identity
 //! with single-process inference through the baseline CSR engine — on
-//! both wire formats and under the pipelined chunked scatter — exact
-//! cover of the scattered feature ranges, the oversized-line frame cap,
-//! and clean drain when a worker process is killed mid-flight.
+//! both wire formats, under the pipelined chunked scatter, and in
+//! weight-sharded mode (`--partition weights`, at rank counts that do
+//! and do not divide the row count) — exact cover of the scattered
+//! feature ranges, the oversized-line frame cap, and clean drain when a
+//! worker process is killed mid-flight.
 
 use std::path::PathBuf;
 
 use spdnn::cluster::{
     ClusterClient, ClusterOptions, ClusterReply, ClusterRequest, Launcher, LauncherConfig,
-    LocalCluster, ModelSpec, WireFormat, CONTROL_FRAME_CAP,
+    LocalCluster, ModelSpec, PartitionScheme, WireFormat, CONTROL_FRAME_CAP,
 };
 use spdnn::coordinator::NativeSpec;
 use spdnn::data::Dataset;
@@ -158,9 +160,10 @@ fn binary_and_chunked_scatter_match_json_bit_exactly() {
         cluster.stop().expect("clean shutdown");
         report
     };
-    let json = run(ClusterOptions { wire: WireFormat::Json, chunk_rows: None });
-    let bin = run(ClusterOptions { wire: WireFormat::Bin, chunk_rows: None });
-    let chunked = run(ClusterOptions { wire: WireFormat::Bin, chunk_rows: Some(5) });
+    let json = run(ClusterOptions { wire: WireFormat::Json, ..Default::default() });
+    let bin = run(ClusterOptions { wire: WireFormat::Bin, ..Default::default() });
+    let chunked =
+        run(ClusterOptions { wire: WireFormat::Bin, chunk_rows: Some(5), ..Default::default() });
 
     assert_eq!(json.categories, ds.truth_categories);
     for (name, r) in [("bin", &bin), ("bin+chunk", &chunked)] {
@@ -185,6 +188,56 @@ fn binary_and_chunked_scatter_match_json_bit_exactly() {
     // Chunking adds framing overhead but never panel bytes: stay well
     // under the JSON volume.
     assert!(chunked.scatter_bytes < json.scatter_bytes);
+}
+
+/// Tentpole acceptance: weight-sharded execution (`--partition
+/// weights`) is bit-identical to single-process inference through the
+/// sliced engine, at a rank count that divides the row count evenly (2)
+/// and one that does not (3 over 64 rows: 22 + 21 + 21). The report
+/// must carry the per-layer exchange volume.
+#[test]
+fn weight_sharded_passes_match_the_sliced_engine_bit_exactly() {
+    let cfg = small_cfg();
+    let ds = Dataset::generate(&cfg).unwrap();
+    let (want_cats, want_acts) = csr_reference(&ds);
+    assert_eq!(want_cats, ds.truth_categories, "reference sanity");
+
+    let model = ModelSpec::from_config(&cfg);
+    for ranks in [2usize, 3] {
+        let opts = ClusterOptions { partition: PartitionScheme::Weights, ..Default::default() };
+        let mut cluster = LocalCluster::start_with(
+            &program(),
+            ranks,
+            &model,
+            spec(EngineKind::Sliced),
+            cfg.prune,
+            opts,
+        )
+        .unwrap();
+        let report = cluster.run(&ds.features).unwrap();
+        cluster.stop().expect("clean shutdown");
+
+        assert_eq!(report.partition, PartitionScheme::Weights, "ranks={ranks}");
+        assert_eq!(report.categories, want_cats, "ranks={ranks}: categories");
+        assert_eq!(report.activations.len(), want_acts.len(), "ranks={ranks}");
+        for (i, (a, b)) in report.activations.iter().zip(&want_acts).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "ranks={ranks}: activation {i}: {a} != {b}");
+        }
+        // The parts cover the weight rows, not the feature panel.
+        let rows: usize = report.parts.iter().map(|p| p.count).sum();
+        assert_eq!(rows, cfg.neurons, "ranks={ranks}: weight rows exactly covered");
+        // Per-layer communication volume: one entry per layer, every
+        // pre-extinction layer non-zero (live features always remain on
+        // this instance), totals matching the pass-level counters.
+        let xb = &report.per_layer_exchange_bytes;
+        assert_eq!(xb.len(), cfg.layers, "ranks={ranks}");
+        assert!(xb.iter().all(|&b| b > 0), "ranks={ranks}: every layer exchanged bytes");
+        assert_eq!(
+            xb.iter().sum::<u64>(),
+            report.scatter_bytes + report.gather_bytes,
+            "ranks={ranks}: exchange series must sum to the wire totals"
+        );
+    }
 }
 
 /// Satellite regression: a peer streaming one giant line (no newline

@@ -12,7 +12,9 @@
 //!   the server process ever exiting;
 //! * wire-negotiation downgrade: a v1-era json-only peer behind the
 //!   chaos proxy settles on json with no frames lost (property test
-//!   over randomized payloads, chunking and arrival jitter).
+//!   over randomized payloads, chunking and arrival jitter);
+//! * weight-sharded serving (`--partition weights`) survives a severed
+//!   exchange frame mid-layer: clean error, lame replica, live server.
 
 mod common;
 
@@ -25,7 +27,7 @@ use common::chaos::{ChaosProxy, Fault};
 use spdnn::cluster::transport::{read_request, write_reply, ReadOutcome};
 use spdnn::cluster::{
     ClusterClient, ClusterOptions, ClusterReply, ClusterRequest, Launcher, LauncherConfig,
-    ModelSpec, ShardResult, WireFormat, CONTROL_FRAME_CAP,
+    ModelSpec, PartitionScheme, ShardResult, WireFormat, CONTROL_FRAME_CAP,
 };
 use spdnn::coordinator::batcher::{BatchPolicy, ServeBackend, ServedModel};
 use spdnn::coordinator::NativeSpec;
@@ -367,6 +369,79 @@ fn truncated_and_corrupt_frames_degrade_the_replica_not_the_server() {
     }
 }
 
+/// Weight-sharded serving under fault injection: a weights-mode replica
+/// whose rank subset loses one rank's connection mid-pass — the chaos
+/// proxy severs an exchange frame partway through the layer loop. The
+/// panel gets a clean error (never a hang or a crash), the replica
+/// lame-ducks, the server keeps serving on the surviving replica, and
+/// the severed worker process itself survives to answer fresh
+/// connections.
+#[test]
+fn severed_exchange_mid_layer_degrades_the_replica_not_the_server() {
+    let cfg = small_cfg();
+    let ds = Dataset::generate(&cfg).unwrap();
+    // 4 ranks over 2 replicas: replica 0 holds a genuine 2-rank weight
+    // shard (rows split 32/32) with rank 0 behind the proxy.
+    let launcher = Launcher::spawn(&LauncherConfig::local(program(), 4)).unwrap();
+    let worker_addrs = launcher.addrs();
+    let proxy = ChaosProxy::start(worker_addrs[0]);
+    let ccfg = ClusterServeConfig {
+        ranks: 4,
+        options: ClusterOptions { partition: PartitionScheme::Weights, ..Default::default() },
+        program: program(),
+        addrs: Some(vec![proxy.addr(), worker_addrs[1], worker_addrs[2], worker_addrs[3]]),
+    };
+    let handle = start_cluster_server(server_cfg(2), &ds, &ccfg);
+    let mut client = Client::connect(handle.addr()).unwrap();
+
+    // Healthy weights-mode pass through both replicas first.
+    for i in 0..2 {
+        let (active, _) = infer_ok(&mut client, &Request::infer_row(i));
+        assert_eq!(active, ds.truth_categories.contains(&i), "healthy row {i}");
+    }
+
+    // Sever rank 0's request path on its next message: the replica's
+    // layer loop dies partway through the per-layer exchanges.
+    proxy.set_fault(Fault::Sever { after: proxy.messages() });
+    match client.call(&Request::infer_row(0)).unwrap() {
+        WireResponse::Error { message } => {
+            assert!(message.contains("failed"), "unexpected error: {message}");
+        }
+        other => panic!("expected a clean error for the severed pass, got {other:?}"),
+    }
+
+    // The surviving replica keeps answering, bit-correct.
+    for i in 0..4 {
+        let (active, _) = infer_ok(&mut client, &Request::infer_row(i % cfg.batch));
+        assert_eq!(active, ds.truth_categories.contains(&(i % cfg.batch)), "re-routed row");
+    }
+    assert_eq!(handle.live_replicas(), 1, "replica 0 must be lame");
+    let snap = stats(&mut client);
+    let lame: Vec<bool> = snap
+        .req_arr("replicas")
+        .unwrap()
+        .iter()
+        .map(|r| r.req("lame").unwrap().as_bool().unwrap())
+        .collect();
+    assert_eq!(lame, vec![true, false]);
+
+    let report = handle.shutdown();
+    assert!(report.drained, "every request answered despite the severed rank");
+
+    // The severed worker process itself is still alive and serving: the
+    // cut was a connection, not a rank.
+    let mut direct = ClusterClient::connect(worker_addrs[0], WireFormat::Bin).unwrap();
+    match direct.call(&ClusterRequest::Ping).unwrap() {
+        ClusterReply::Pong { .. } => {}
+        other => panic!("severed worker did not survive: {other:?}"),
+    }
+    match direct.call(&ClusterRequest::Shutdown).unwrap() {
+        ClusterReply::Bye => {}
+        other => panic!("unexpected shutdown reply: {other:?}"),
+    }
+    drop(launcher);
+}
+
 // ---------------------------------------------------------------------------
 // Wire-negotiation downgrade (satellite): v1-era json-only peers
 // ---------------------------------------------------------------------------
@@ -456,6 +531,11 @@ fn v1_json_peer(
                         Some(result_reply(start, rows))
                     }
                 }
+            }
+            ClusterRequest::Exchange { .. } => {
+                // v4-only verb; a v1 peer would never see it (the
+                // coordinator refuses weights mode at connect).
+                Some(ClusterReply::Error { message: "unknown op".into() })
             }
             ClusterRequest::Shutdown => {
                 let _ = write_reply(&mut writer, &ClusterReply::Bye, WireFormat::Json);

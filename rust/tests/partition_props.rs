@@ -1,8 +1,10 @@
 //! Property tests for `coordinator::partition` — the static sharding
-//! substrate used both by the offline coordinator (features -> workers)
-//! and by the serving router (request slots -> replicas).
+//! substrate used by the offline coordinator (features -> workers), the
+//! serving router (request slots -> replicas) and the weight-sharded
+//! cluster mode (weight rows -> ranks, stitched back per layer).
 
 use spdnn::coordinator::partition::{imbalance, partition_even};
+use spdnn::formats::ell::EllMatrix;
 use spdnn::util::proptest::{self, Runner};
 
 #[test]
@@ -30,6 +32,72 @@ fn covers_each_index_exactly_once() {
         }
         if let Some(i) = seen.iter().position(|&c| c != 1) {
             return Err(format!("index {i} covered {} times", seen[i]));
+        }
+        Ok(())
+    });
+}
+
+/// Weights-mode sharding property (tentpole): partitioning a layer's
+/// weight rows with `partition_even` and slicing with `row_slice` must
+/// cover every row of every layer exactly once — index and value panels
+/// bit-identical to the original, no overlap, no gap — including rank
+/// counts that do NOT divide the neuron count.
+#[test]
+fn weight_row_shards_cover_every_layer_exactly_once() {
+    Runner::new(64, 0x0EE1).run("weight-shard-cover", |rng| {
+        let neurons = proptest::usize_in(rng, 1, 96);
+        let k = proptest::usize_in(rng, 1, neurons.min(4));
+        let ranks = proptest::usize_in(rng, 1, 7);
+        // A small multi-layer "model" with randomized sparsity patterns.
+        let layers: Vec<EllMatrix> = (0..3)
+            .map(|_| {
+                let rows: Vec<Vec<(u32, f32)>> = (0..neurons)
+                    .map(|_| {
+                        (0..k)
+                            .map(|_| {
+                                let c = proptest::usize_in(rng, 0, neurons - 1) as u32;
+                                (c, rng.next_f32() - 0.5)
+                            })
+                            .collect()
+                    })
+                    .collect();
+                EllMatrix::from_rows(neurons, neurons, k, &rows).expect("ell build")
+            })
+            .collect();
+
+        let parts = partition_even(neurons, ranks);
+        for (l, w) in layers.iter().enumerate() {
+            let mut pos = 0usize;
+            let mut index = Vec::with_capacity(w.index.len());
+            let mut value = Vec::with_capacity(w.value.len());
+            for p in &parts {
+                if p.start != pos {
+                    return Err(format!(
+                        "layer {l}: rank {} starts at {} (gap/overlap at {pos})",
+                        p.worker, p.start
+                    ));
+                }
+                let s = w.row_slice(p.start, p.count);
+                if s.nrows != p.count || s.ncols != neurons || s.k != k {
+                    return Err(format!("layer {l}: rank {} slice shape wrong", p.worker));
+                }
+                index.extend_from_slice(&s.index);
+                value.extend_from_slice(&s.value);
+                pos += p.count;
+            }
+            if pos != neurons {
+                return Err(format!("layer {l}: shards cover {pos} of {neurons} rows"));
+            }
+            // Exact cover: re-concatenating the slices reproduces the
+            // layer's packed panels bit-for-bit.
+            if index != w.index {
+                return Err(format!("layer {l}: stitched index panel differs"));
+            }
+            if value.len() != w.value.len()
+                || value.iter().zip(&w.value).any(|(a, b)| a.to_bits() != b.to_bits())
+            {
+                return Err(format!("layer {l}: stitched value panel differs"));
+            }
         }
         Ok(())
     });
