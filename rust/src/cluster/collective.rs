@@ -48,6 +48,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::partition::{imbalance, partition_even, Partition};
 use crate::coordinator::pruning::{flags_from_panel, ActiveSet};
 use crate::coordinator::NativeSpec;
+use crate::obs::flight::FlightEvent;
 use crate::obs::metrics as om;
 use crate::obs::trace::{self as tr, TraceId};
 
@@ -511,13 +512,82 @@ impl ClusterCoordinator {
         )
     }
 
+    /// Pull telemetry from every rank: its Prometheus exposition plus
+    /// its recent flight-recorder events. Never fails as a whole — a
+    /// dead, severed or pre-v5 rank answers with `text: None` and the
+    /// reason in `error`, so one lame rank cannot blind the fleet view.
+    pub fn metrics_each(&mut self) -> Vec<RankTelemetry> {
+        self.clients
+            .iter_mut()
+            .enumerate()
+            .map(|(rank, client)| {
+                if !client.supports_metrics() {
+                    return RankTelemetry {
+                        rank,
+                        text: None,
+                        events: Vec::new(),
+                        error: Some("peer pre-dates the metrics verb (protocol < 5)".into()),
+                    };
+                }
+                match client.call(&ClusterRequest::Metrics) {
+                    Ok(ClusterReply::Metrics { text, events }) => {
+                        RankTelemetry { rank, text: Some(text), events, error: None }
+                    }
+                    Ok(_) => RankTelemetry {
+                        rank,
+                        text: None,
+                        events: Vec::new(),
+                        error: Some("unexpected reply to the metrics pull".into()),
+                    },
+                    Err(e) => RankTelemetry {
+                        rank,
+                        text: None,
+                        events: Vec::new(),
+                        error: Some(format!("{e:#}")),
+                    },
+                }
+            })
+            .collect()
+    }
+
+    /// The federated fleet view: every live rank's exposition merged
+    /// with this process's own registry into one rank-labeled,
+    /// `validate_exposition`-clean document. Unreachable ranks are
+    /// annotated via the synthesized `spdnn_fleet_rank_up` gauge.
+    pub fn metrics_all(&mut self) -> Result<String> {
+        let pulled = self.metrics_each();
+        let ranks: Vec<om::RankExposition<'_>> = pulled
+            .iter()
+            .map(|t| om::RankExposition {
+                rank: t.rank,
+                up: t.text.is_some(),
+                text: t.text.as_deref(),
+            })
+            .collect();
+        om::merge_expositions(&om::render(), &ranks)
+    }
+
     /// Send a shutdown op to every rank (errors ignored: a dead rank is
     /// already shut down).
-    pub fn shutdown(mut self) {
+    pub fn shutdown(&mut self) {
         for client in &mut self.clients {
             let _ = client.call(&ClusterRequest::Shutdown);
         }
     }
+}
+
+/// One rank's answer to the telemetry pull
+/// ([`ClusterCoordinator::metrics_each`]).
+pub struct RankTelemetry {
+    pub rank: usize,
+    /// The rank's Prometheus exposition; `None` when the pull failed or
+    /// the peer pre-dates the metrics verb.
+    pub text: Option<String>,
+    /// The rank's recent flight-recorder events. Sequence numbers order
+    /// events within that rank's process only.
+    pub events: Vec<FlightEvent>,
+    /// Why `text` is `None`.
+    pub error: Option<String>,
 }
 
 /// The gathered result of one cluster inference pass.
@@ -790,10 +860,21 @@ impl LocalCluster {
         self.launcher.kill_rank(rank)
     }
 
+    /// Per-rank telemetry pulls; see [`ClusterCoordinator::metrics_each`].
+    pub fn metrics_each(&mut self) -> Vec<RankTelemetry> {
+        self.coordinator.metrics_each()
+    }
+
+    /// The federated fleet metrics document; see
+    /// [`ClusterCoordinator::metrics_all`].
+    pub fn metrics_all(&mut self) -> Result<String> {
+        self.coordinator.metrics_all()
+    }
+
     /// Graceful drain: shutdown ops to every rank, then reap the
     /// processes within a deadline.
     pub fn stop(self) -> Result<()> {
-        let LocalCluster { launcher, coordinator } = self;
+        let LocalCluster { launcher, mut coordinator } = self;
         coordinator.shutdown();
         launcher.wait_exit(SHUTDOWN_LIMIT)
     }

@@ -55,7 +55,7 @@ pub mod rank;
 pub mod transport;
 
 pub use collective::{
-    ClusterCoordinator, ClusterOptions, ClusterReport, LocalCluster, PartitionScheme,
+    ClusterCoordinator, ClusterOptions, ClusterReport, LocalCluster, PartitionScheme, RankTelemetry,
 };
 pub use launcher::{Launcher, LauncherConfig, RankHealth};
 pub use rank::{serve_rank, READY_PREFIX};

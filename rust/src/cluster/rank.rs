@@ -45,6 +45,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::worker::{run_resident_panel, NativeExec, PanelTask};
 use crate::coordinator::NativeSpec;
 use crate::formats::EllMatrix;
+use crate::obs::flight;
+use crate::obs::metrics as om;
 use crate::obs::trace::{now_unix_micros, SpanRecord, TraceId};
 use crate::radixnet::{RadixNet, Topology};
 use crate::{log_info, log_warn};
@@ -97,6 +99,12 @@ pub fn serve_rank(listener: TcpListener) -> Result<()> {
     println!("{READY_PREFIX} {addr}");
     std::io::stdout().flush().ok();
 
+    // Keep a flight record for the life of the process, and register
+    // the rank's counter families eagerly so a metrics pull arriving
+    // before any traffic still answers a non-empty exposition.
+    flight::enable();
+    rank_counters();
+
     let mut replica: Option<Replica> = None;
     loop {
         let (stream, peer) = listener.accept().context("accepting coordinator connection")?;
@@ -110,6 +118,16 @@ pub fn serve_rank(listener: TcpListener) -> Result<()> {
             Err(e) => log_warn!("cluster worker: connection error: {e:#}"),
         }
     }
+}
+
+/// The worker-side counter families. Fetching is a registry lookup, so
+/// the hot paths call this per operation rather than caching handles.
+fn rank_counters() -> (om::Counter, om::Counter, om::Counter) {
+    (
+        om::counter("spdnn_rank_shards_total", "Shard and shard-chunk panels computed"),
+        om::counter("spdnn_rank_exchanges_total", "Weight-sharded exchange layers computed"),
+        om::counter("spdnn_rank_edges_total", "Edges traversed by this rank"),
+    )
 }
 
 fn send(w: &mut impl Write, reply: &ClusterReply, wire: WireFormat) -> Result<()> {
@@ -146,6 +164,7 @@ fn serve_connection(stream: TcpStream, replica: &mut Option<Replica>) -> Result<
                 // the process or buffering a hostile line without
                 // bound — and drop the connection. The rank stays up
                 // for the next accept.
+                flight::record(flight::FRAME_ERROR, || format!("dropping connection: {e:#}"));
                 let reply = ClusterReply::Error { message: format!("protocol error: {e:#}") };
                 let _ = send(&mut writer, &reply, WireFormat::Json);
                 return Ok(ConnOutcome::Disconnected);
@@ -166,6 +185,9 @@ fn serve_connection(stream: TcpStream, replica: &mut Option<Replica>) -> Result<
             ClusterRequest::Load { rank, model, spec, prune, shard } => {
                 match load_replica(rank, model, spec, prune, shard) {
                     Ok(r) => {
+                        // The load op is where this process learns its
+                        // fleet identity; stamp stderr with it.
+                        crate::util::logger::set_role(&format!("rank {}", r.rank));
                         let reply = ClusterReply::Loaded {
                             rank: r.rank,
                             neurons: r.model.neurons,
@@ -234,6 +256,16 @@ fn serve_connection(stream: TcpStream, replica: &mut Option<Replica>) -> Result<
                 wire,
                 None,
             ),
+            ClusterRequest::Metrics => {
+                // The telemetry pull: this rank's whole registry plus
+                // its recent flight events, for the coordinator to
+                // federate (rank-relabeling happens there).
+                (
+                    ClusterReply::Metrics { text: om::render(), events: flight::snapshot() },
+                    wire,
+                    None,
+                )
+            }
             ClusterRequest::Shutdown => (ClusterReply::Bye, wire, Some(ConnOutcome::Shutdown)),
         };
         send(&mut writer, &reply, reply_wire)?;
@@ -447,6 +479,9 @@ fn run_shard(
         },
     )?;
     let secs = t.elapsed().as_secs_f64();
+    let (m_shards, _, m_edges) = rank_counters();
+    m_shards.inc();
+    m_edges.add(out.metrics.edges_traversed);
     let mut spans = Vec::new();
     if trace.is_some() {
         let lane = replica.rank as u32 + 1;
@@ -514,6 +549,7 @@ fn run_exchange(replica: &Replica, layer: usize, features: &[f32]) -> Result<Clu
     let mut values = vec![0.0f32; rows * count];
     replica.exec.layer(layer, &replica.layers[layer], &replica.bias, features, &mut values)?;
     let secs = t.elapsed().as_secs_f64();
+    rank_counters().1.inc();
     Ok(ClusterReply::Partial { rank: replica.rank, layer, count, secs, values })
 }
 

@@ -16,6 +16,7 @@
 //!   {"op":"shard","start":S,"features":[...]}       scatter (JSON wire)
 //!   {"op":"shard-begin","start":S,"rows":R,"chunks":C}
 //!                                                   open a chunked scatter
+//!   {"op":"metrics"}                                telemetry pull (v5)
 //!   {"op":"shutdown"}                               drain + exit
 //!   ```
 //!
@@ -105,17 +106,21 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::NativeSpec;
 use crate::data::binio::{put_f64, put_u64, write_f32s, ByteCursor};
 use crate::engine::EngineKind;
+use crate::obs::flight::{self, FlightEvent};
 use crate::obs::trace::{spans_from_json, spans_to_json, SpanRecord, TraceId};
 use crate::server::protocol::parse_f32_array;
 use crate::util::config::RuntimeConfig;
 use crate::util::json::Json;
 
-/// v4 adds weight-sharded partitioning (the optional shard range on
-/// `load` plus the exchange/partial frame kinds 7/8); v3 added
-/// trace-context propagation (traced frame kinds 5/6 and the optional
-/// JSON `trace`/`spans` fields). Older peers negotiate down to the
-/// subset they speak — the untraced v2 frames are byte-identical.
-pub const CLUSTER_PROTOCOL_VERSION: i64 = 4;
+/// v5 adds the telemetry pull (the `metrics` control verb: the rank's
+/// Prometheus exposition plus its recent flight-recorder events, both
+/// JSON lines on either wire); v4 added weight-sharded partitioning
+/// (the optional shard range on `load` plus the exchange/partial frame
+/// kinds 7/8); v3 added trace-context propagation (traced frame kinds
+/// 5/6 and the optional JSON `trace`/`spans` fields). Older peers
+/// negotiate down to the subset they speak — the untraced v2 frames
+/// are byte-identical.
+pub const CLUSTER_PROTOCOL_VERSION: i64 = 5;
 /// Oldest protocol whose binary framing is a compatible subset of ours.
 const CLUSTER_PROTOCOL_BIN_COMPAT: i64 = 2;
 /// Oldest protocol that understands the traced encodings (frame kinds
@@ -124,6 +129,8 @@ const CLUSTER_PROTOCOL_TRACE_MIN: i64 = 3;
 /// Oldest protocol that understands weight-sharded partitioning (the
 /// `load` shard range and frame kinds 7/8).
 const CLUSTER_PROTOCOL_WEIGHTS_MIN: i64 = 4;
+/// Oldest protocol that answers the `metrics` telemetry pull.
+const CLUSTER_PROTOCOL_METRICS_MIN: i64 = 5;
 
 /// Magic prefix of one `spdnn-clu1` binary frame.
 pub const FRAME_MAGIC: &[u8; 4] = b"SCL1";
@@ -311,6 +318,10 @@ pub enum ClusterRequest {
     /// `[rows, count]`. [`TraceId::NONE`] means untraced (the id is
     /// always on the frame; these kinds are only sent to v4 peers).
     Exchange { layer: usize, features: Vec<f32>, trace: TraceId },
+    /// Telemetry pull (v5): the rank answers with its Prometheus
+    /// exposition and recent flight-recorder events. Only sent to peers
+    /// whose hello answered version ≥ 5.
+    Metrics,
     /// Finish the current work and exit the worker process.
     Shutdown,
 }
@@ -327,6 +338,7 @@ impl ClusterRequest {
             ClusterRequest::ShardBegin { .. } => "shard-begin",
             ClusterRequest::ShardChunk { .. } => "shard-chunk",
             ClusterRequest::Exchange { .. } => "exchange",
+            ClusterRequest::Metrics => "metrics",
             ClusterRequest::Shutdown => "shutdown",
         }
     }
@@ -392,6 +404,7 @@ impl ClusterRequest {
                 }
                 Json::obj(pairs)
             }
+            ClusterRequest::Metrics => Json::obj(vec![("op", Json::Str("metrics".into()))]),
             ClusterRequest::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".into()))]),
         }
     }
@@ -440,6 +453,7 @@ impl ClusterRequest {
                 features: parse_f32_array(v.req("features")?).context("\"features\"")?,
                 trace: trace_from_json(&v)?,
             }),
+            "metrics" => Ok(ClusterRequest::Metrics),
             "shutdown" => Ok(ClusterRequest::Shutdown),
             other => bail!("unknown cluster op {other:?}"),
         }
@@ -519,6 +533,10 @@ pub enum ClusterReply {
     /// [`ClusterRequest::Exchange`]. `secs` is the rank's compute time
     /// for the layer (the coordinator's imbalance accounting).
     Partial { rank: usize, layer: usize, count: usize, secs: f64, values: Vec<f32> },
+    /// Telemetry answer (v5): the rank's Prometheus exposition plus its
+    /// recent flight-recorder events, shipped home so a coordinator
+    /// post-mortem shows both sides of a severed connection.
+    Metrics { text: String, events: Vec<FlightEvent> },
     /// Acknowledgement of a shutdown; the worker exits after sending it.
     Bye,
     Error { message: String },
@@ -558,6 +576,12 @@ impl ClusterReply {
                     ("values", Json::arr_f64(&vals)),
                 ])
             }
+            ClusterReply::Metrics { text, events } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("kind", Json::Str("metrics".into())),
+                ("text", Json::Str(text.clone())),
+                ("events", flight::events_to_json(events)),
+            ]),
             ClusterReply::Bye => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("kind", Json::Str("bye".into())),
@@ -614,6 +638,13 @@ impl ClusterReply {
                 count: v.req_usize("count")?,
                 secs: v.req_f64("secs")?,
                 values: parse_f32_array(v.req("values")?).context("\"values\"")?,
+            }),
+            "metrics" => Ok(ClusterReply::Metrics {
+                text: v.req_str("text")?.to_string(),
+                events: match v.get("events") {
+                    Some(e) => flight::events_from_json(e).context("\"events\"")?,
+                    None => Vec::new(),
+                },
             }),
             "bye" => Ok(ClusterReply::Bye),
             "error" => Ok(ClusterReply::Error { message: v.req_str("error")?.to_string() }),
@@ -1267,6 +1298,9 @@ impl ClusterClient {
         match client.call(&ClusterRequest::Hello { wire })? {
             ClusterReply::Hello { version, wire: got } => {
                 if !(1..=CLUSTER_PROTOCOL_VERSION).contains(&version) {
+                    flight::record(flight::HELLO_REFUSED, || {
+                        format!("worker at {addr} speaks unsupported protocol v{version}")
+                    });
                     bail!(
                         "worker speaks cluster protocol v{version}, this coordinator \
                          speaks v{CLUSTER_PROTOCOL_VERSION} (mixed spdnn binaries?)"
@@ -1286,6 +1320,9 @@ impl ClusterClient {
                 // stays an error.
                 if got == WireFormat::Json {
                     if wire == WireFormat::Bin {
+                        flight::record(flight::HELLO_DOWNGRADE, || {
+                            format!("worker at {addr} (v{version}): bin wire downgraded to json")
+                        });
                         crate::log_warn!(
                             "worker at {addr} speaks protocol v{version} with json-only \
                              data frames; downgrading this connection from bin to json"
@@ -1301,6 +1338,12 @@ impl ClusterClient {
                     // version, so an older peer stays fully compatible
                     // on either wire; it just cannot contribute trace
                     // spans (pre-v3) or hold a weight shard (pre-v4).
+                    flight::record(flight::HELLO_DOWNGRADE, || {
+                        format!(
+                            "worker at {addr} answered v{version}; \
+                             v{CLUSTER_PROTOCOL_VERSION} features disabled"
+                        )
+                    });
                     crate::log_warn!(
                         "worker at {addr} speaks protocol v{version}; newer protocol \
                          features are disabled on this connection (coordinator is v{})",
@@ -1308,6 +1351,9 @@ impl ClusterClient {
                     );
                     return Ok(client);
                 }
+                flight::record(flight::HELLO_REFUSED, || {
+                    format!("worker at {addr} (v{version}) offered wire {got}, wanted {wire}")
+                });
                 if version != CLUSTER_PROTOCOL_VERSION {
                     // An old peer claiming a non-json wire: the version
                     // skew is the real problem — its binary framing
@@ -1320,7 +1366,12 @@ impl ClusterClient {
                 }
                 bail!("worker negotiated wire {got}, wanted {wire}")
             }
-            ClusterReply::Error { message } => bail!("handshake rejected: {message}"),
+            ClusterReply::Error { message } => {
+                flight::record(flight::HELLO_REFUSED, || {
+                    format!("worker at {addr} rejected the handshake: {message}")
+                });
+                bail!("handshake rejected: {message}")
+            }
             other => bail!("unexpected handshake reply {other:?}"),
         }
     }
@@ -1357,6 +1408,13 @@ impl ClusterClient {
     /// refuse weights mode against a peer where this is false.
     pub fn supports_weights(&self) -> bool {
         self.peer_version >= CLUSTER_PROTOCOL_WEIGHTS_MIN
+    }
+
+    /// Whether the negotiated peer answers the `metrics` telemetry
+    /// pull. A pre-v5 peer keeps serving shards; the federated document
+    /// just reports it down (`spdnn_fleet_rank_up 0`).
+    pub fn supports_metrics(&self) -> bool {
+        self.peer_version >= CLUSTER_PROTOCOL_METRICS_MIN
     }
 
     /// Bytes written to the socket so far (flushed requests only).
@@ -1604,6 +1662,7 @@ mod tests {
             features: vec![1.0, 0.0],
             trace: TraceId(0xC0FFEE),
         });
+        roundtrip_request(ClusterRequest::Metrics);
         roundtrip_request(ClusterRequest::Shutdown);
     }
 
@@ -1623,6 +1682,19 @@ mod tests {
             count: 21,
             secs: 0.125,
             values: vec![0.0, 32.0, 0.5],
+        });
+        roundtrip_reply(ClusterReply::Metrics { text: String::new(), events: vec![] });
+        roundtrip_reply(ClusterReply::Metrics {
+            text: "# HELP spdnn_rank_shards_total shards\n\
+                   # TYPE spdnn_rank_shards_total counter\n\
+                   spdnn_rank_shards_total 3\n"
+                .into(),
+            events: vec![FlightEvent {
+                seq: 7,
+                ts_us: 1_000_000,
+                kind: flight::FRAME_ERROR.into(),
+                detail: "bad magic".into(),
+            }],
         });
         roundtrip_reply(ClusterReply::Bye);
         roundtrip_reply(ClusterReply::Error { message: "boom".into() });
@@ -1693,6 +1765,7 @@ mod tests {
                 ClusterRequest::Exchange { layer: 2, features: vec![0.5, 0.25], trace: TraceId(7) },
                 wire,
             );
+            roundtrip_request_wire(ClusterRequest::Metrics, wire);
             roundtrip_request_wire(ClusterRequest::Shutdown, wire);
             roundtrip_reply_wire(ClusterReply::Result(Box::new(sample_result())), wire);
             roundtrip_reply_wire(ClusterReply::Result(Box::new(traced_result())), wire);

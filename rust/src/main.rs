@@ -6,6 +6,8 @@
 //!   serve      network-facing serving: sharded replicas + admission
 //!              control behind a TCP JSON-lines protocol
 //!   serve-demo run the dynamic-batching server over a synthetic workload
+//!   watch       poll a serving address's health + stats into a
+//!               refreshing terminal table
 //!   cluster-run    multi-process inference: spawn N worker ranks,
 //!                  scatter the feature panel, gather + validate
 //!   cluster-worker one worker rank (normally started by cluster-run)
@@ -34,6 +36,7 @@ use spdnn::coordinator::{
 };
 use spdnn::data::Dataset;
 use spdnn::engine::EngineKind;
+use spdnn::obs::flight as ofl;
 use spdnn::obs::metrics::validate_exposition;
 use spdnn::obs::trace as otr;
 use spdnn::obs::TraceId;
@@ -73,6 +76,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("serve-demo") => cmd_serve_demo(args),
         Some("serve-smoke") => cmd_serve_smoke(args),
+        Some("watch") => cmd_watch(args),
         Some("cluster-run") => cmd_cluster_run(args),
         Some("cluster-worker") => cmd_cluster_worker(args),
         Some("simulate") => cmd_simulate(args),
@@ -91,9 +95,9 @@ fn dispatch(args: &Args) -> Result<()> {
 fn print_help() {
     println!(
         "spdnn — at-scale sparse DNN inference (HPEC 2020 reproduction)\n\n\
-         USAGE: spdnn <gen-data|infer|serve|serve-demo|serve-smoke|cluster-run|\n\
-                       cluster-worker|simulate|info|check-bench|check-metrics|\n\
-                       bench-trend> [flags]\n\n\
+         USAGE: spdnn <gen-data|infer|serve|serve-demo|serve-smoke|watch|\n\
+                       cluster-run|cluster-worker|simulate|info|check-bench|\n\
+                       check-metrics|bench-trend> [flags]\n\n\
          Model:   --neurons N --layers L --k K --topology butterfly|random --seed S\n\
          Runtime: --batch B --workers W --minibatch MB --no-prune\n\
          Backend: --backend native|csr|ell|sliced|auto|pjrt --artifacts DIR --threads T\n\
@@ -106,10 +110,15 @@ fn print_help() {
                   --worker-addrs H:P,H:P (adopt pre-started cluster-workers)\n\
                   serve-smoke --ranks N --requests R --stats-out FILE  (loopback\n\
                   load + bit-identity gate vs in-process sliced serving)\n\
-                  --metrics-out FILE (serve-smoke: {{\"op\":\"metrics\"}} snapshot)\n\
+                  watch HOST:PORT [--interval-ms MS] [--count N]  (poll health +\n\
+                  stats into a refreshing table; count 0 = forever)\n\
          Obs:     --trace-out FILE on serve|serve-smoke|cluster-run (Chrome\n\
                   trace-event JSON for chrome://tracing / Perfetto);\n\
-                  infer --spans-out FILE (same format, in-process pass)\n\
+                  --metrics-out FILE on serve|serve-smoke|cluster-run (fleet-\n\
+                  federated {{\"op\":\"metrics\"}} exposition, rank-labeled);\n\
+                  --flight-out FILE on serve|serve-smoke|cluster-run (flight-\n\
+                  recorder dump, local + per-rank events, JSON);\n\
+                  infer --spans-out FILE (Chrome trace, in-process pass)\n\
          Cluster: cluster-run --ranks N  (spawns N cluster-worker processes)\n\
                   --wire json|bin (data-frame encoding, default bin)\n\
                   --chunk ROWS (pipelined scatter sub-panels; 0 = whole shards)\n\
@@ -346,6 +355,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let queue_cap = args.usize_or("queue-cap", 256)?;
     let deadline = duration_ms_arg(args, "deadline-ms", 250.0)?;
     let trace_out = args.get("trace-out").map(PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    let flight_out = args.get("flight-out").map(PathBuf::from);
     let backend = serve_backend(args, &cfg)?;
     let cluster = serve_cluster_config(args)?;
     args.finish()?;
@@ -360,6 +371,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy: BatchPolicy { max_batch, max_wait },
         admission: AdmissionConfig { queue_cap, deadline, ..Default::default() },
         trace_out,
+        metrics_out,
+        flight_out,
         ..Default::default()
     };
     let reference = ReferencePanel { features: ds.features.clone(), neurons: cfg.neurons };
@@ -414,7 +427,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!(
         "protocol: JSON lines, e.g.  {{\"op\":\"infer\",\"row\":0}}  {{\"op\":\"stats\"}}  \
-         {{\"op\":\"shutdown\"}}"
+         {{\"op\":\"metrics\"}}  {{\"op\":\"health\"}}  {{\"op\":\"flight\"}}  {{\"op\":\"shutdown\"}}"
     );
     let report = handle.wait();
     println!(
@@ -439,6 +452,7 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     let stats_out = args.get("stats-out").map(PathBuf::from);
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
     let trace_out = args.get("trace-out").map(PathBuf::from);
+    let flight_out = args.get("flight-out").map(PathBuf::from);
     let backend = serve_backend(args, &cfg)?;
     let cluster = serve_cluster_config(args)?
         .ok_or_else(|| anyhow::anyhow!("serve-smoke needs --ranks N (at least 1)"))?;
@@ -469,6 +483,7 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
         replicas,
         policy: BatchPolicy { max_batch, max_wait },
         trace_out: trace_out.clone(),
+        flight_out: flight_out.clone(),
         ..Default::default()
     };
     let reference = ReferencePanel { features: ds.features.clone(), neurons: n };
@@ -534,6 +549,27 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     let summary =
         validate_exposition(&metrics_text).context("metrics exposition failed validation")?;
     println!("  metrics: {} families, {} samples", summary.families, summary.samples);
+    // The pull is federated: every worker rank must show up as a
+    // liveness sample, and at least one rank-labeled counter from the
+    // worker processes must have made it into the merged document.
+    for rank in 0..cluster.ranks {
+        let sample = format!("spdnn_fleet_rank_up{{rank=\"{rank}\"}} 1");
+        if !metrics_text.lines().any(|l| l == sample) {
+            bail!("federated metrics are missing `{sample}`");
+        }
+    }
+    if !metrics_text.contains("spdnn_rank_shards_total{rank=\"0\"}") {
+        bail!("federated metrics carry no rank-labeled worker counters");
+    }
+    let health = match client.call(&Request::Health)? {
+        WireResponse::Health(h) => h,
+        other => bail!("health verb failed: {other:?}"),
+    };
+    let verdict = health.req_str("verdict")?.to_string();
+    println!("  health: {verdict}");
+    if verdict != "ok" {
+        bail!("health verdict is `{verdict}` on a healthy smoke fleet: {health}");
+    }
     if let Some(path) = &metrics_out {
         std::fs::write(path, &metrics_text)
             .with_context(|| format!("writing {}", path.display()))?;
@@ -543,6 +579,9 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     let report = handle.shutdown();
     if let Some(path) = &trace_out {
         println!("  trace -> {}", path.display());
+    }
+    if let Some(path) = &flight_out {
+        println!("  flight dump -> {}", path.display());
     }
 
     println!(
@@ -561,6 +600,124 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
         );
     }
     println!("  SMOKE OK (bit-identical to in-process sliced serving; clean drain)");
+    Ok(())
+}
+
+/// Live fleet watch: poll `{"op":"health"}` and `{"op":"stats"}` on a
+/// serving address and render them as a refreshing terminal table.
+/// `--count 0` (the default) polls until interrupted or until the
+/// server stops answering; a finite `--count` makes it scriptable.
+fn cmd_watch(args: &Args) -> Result<()> {
+    let addr_str = args.positional.first().cloned().ok_or_else(|| {
+        anyhow::anyhow!("usage: spdnn watch HOST:PORT [--interval-ms MS] [--count N]")
+    })?;
+    let interval = duration_ms_arg(args, "interval-ms", 1000.0)?;
+    let count = args.usize_or("count", 0)?;
+    args.finish()?;
+    use std::net::ToSocketAddrs;
+    let addr = addr_str
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr_str}"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("{addr_str} resolved to no address"))?;
+
+    let clear = std::io::IsTerminal::is_terminal(&std::io::stdout());
+    let mut tick = 0usize;
+    loop {
+        tick += 1;
+        if clear {
+            // Home the cursor and wipe below it so the table refreshes
+            // in place instead of scrolling.
+            print!("\x1b[H\x1b[J");
+        }
+        // One connection per tick: the watch survives server restarts.
+        if let Err(e) = watch_tick(addr) {
+            println!("watch {addr_str}: {e:#}");
+            if count == 0 {
+                // An unattended watch on a stopped server should end,
+                // not spin on connection refusals forever.
+                bail!("server at {addr_str} stopped answering");
+            }
+        }
+        if count != 0 && tick >= count {
+            break;
+        }
+        std::thread::sleep(interval);
+    }
+    Ok(())
+}
+
+/// One poll of the watched server: health verdict header, SLO numbers,
+/// then the per-replica / per-rank liveness table.
+fn watch_tick(addr: std::net::SocketAddr) -> Result<()> {
+    let mut client = Client::connect(addr)?;
+    let health = match client.call(&Request::Health)? {
+        WireResponse::Health(h) => h,
+        other => bail!("health verb failed: {other:?}"),
+    };
+    let stats = match client.call(&Request::Stats)? {
+        WireResponse::Stats(s) => s,
+        other => bail!("stats verb failed: {other:?}"),
+    };
+
+    let lat = health.req("latency_ms")?;
+    println!(
+        "spdnn watch — health {} at {:.0}s uptime",
+        health.req_str("verdict")?,
+        health.req_f64("uptime_secs")?
+    );
+    for reason in health.req_arr("reasons")? {
+        println!("  ! {}", reason.as_str().unwrap_or("?"));
+    }
+    println!(
+        "  latency p50 {:.2} ms, p95 {:.2} ms, p99 {:.2} ms | shed {:.1}% | \
+         {:.4} TeraEdges/s | {} requests, {} errors, queue {}/{}",
+        lat.req_f64("p50")?,
+        lat.req_f64("p95")?,
+        lat.req_f64("p99")?,
+        health.req_f64("shed_rate")? * 100.0,
+        health.req_f64("teraedges_per_sec")?,
+        stats.req_usize("requests")?,
+        stats.req_usize("errors")?,
+        stats.req_usize("queue_depth")?,
+        stats.req_usize("queue_cap")?
+    );
+
+    let mut table = Table::new(
+        &format!(
+            "Replicas ({} live / {}, ranks {} alive / {})",
+            health.req_usize("live_replicas")?,
+            health.req_usize("replicas")?,
+            health.req_usize("ranks_alive")?,
+            health.req_usize("ranks_total")?
+        ),
+        &["replica", "routed", "req/s", "state", "ranks"],
+    );
+    for r in stats.req_arr("replicas")? {
+        let lame = r.req("lame")?.as_bool().unwrap_or(false);
+        let ranks = match r.get("ranks") {
+            Some(Json::Arr(items)) => {
+                let cells: Vec<String> = items
+                    .iter()
+                    .map(|d| {
+                        let rank = d.req_usize("rank").unwrap_or(0);
+                        let alive = d.req("alive").ok().and_then(Json::as_bool).unwrap_or(false);
+                        format!("{rank}:{}", if alive { "up" } else { "DEAD" })
+                    })
+                    .collect();
+                cells.join(" ")
+            }
+            _ => "-".to_string(),
+        };
+        table.row(vec![
+            r.req_usize("replica")?.to_string(),
+            r.req_usize("routed")?.to_string(),
+            format!("{:.1}", r.req_f64("req_per_sec")?),
+            if lame { "LAME".to_string() } else { "ok".to_string() },
+            ranks,
+        ]);
+    }
+    table.print();
     Ok(())
 }
 
@@ -629,7 +786,15 @@ fn cmd_cluster_run(args: &Args) -> Result<()> {
     let chunk = args.usize_or("chunk", 0)?;
     let partition = PartitionScheme::parse(args.get_or("partition", "features"))?;
     let trace_out = args.get("trace-out").map(PathBuf::from);
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    let flight_out = args.get("flight-out").map(PathBuf::from);
     args.finish()?;
+    spdnn::util::logger::set_role("coordinator");
+    if flight_out.is_some() {
+        // Capture hello downgrades/refusals and frame errors from the
+        // coordinator side of the wire too, not just the worker ranks.
+        ofl::enable();
+    }
     if matches!(opts.backend, Backend::Pjrt { .. }) {
         bail!("cluster-run drives the native engines (--backend native|csr|ell|sliced|auto)");
     }
@@ -761,9 +926,51 @@ fn cmd_cluster_run(args: &Args) -> Result<()> {
             trace.to_hex()
         );
     }
+    if let Some(path) = &metrics_out {
+        let text = cluster.metrics_all().context("federating rank metrics")?;
+        let summary =
+            validate_exposition(&text).context("federated exposition failed validation")?;
+        std::fs::write(path, &text).with_context(|| format!("writing {}", path.display()))?;
+        println!(
+            "  metrics          -> {} ({} families, {} samples, {ranks} ranks)",
+            path.display(),
+            summary.families,
+            summary.samples
+        );
+    }
+    if let Some(path) = &flight_out {
+        let dump = flight_dump_json(cluster.metrics_each());
+        std::fs::write(path, format!("{dump}\n"))
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("  flight dump      -> {}", path.display());
+    }
     cluster.stop().context("cluster shutdown")?;
     println!("  VALID (bit-identical to single-process ground truth; clean shutdown)");
     Ok(())
+}
+
+/// Assemble the coordinator-local flight events plus each rank's
+/// shipped-home recent events into one JSON document (the same shape
+/// the serving `{"op":"flight"}` verb returns).
+fn flight_dump_json(telemetry: Vec<spdnn::cluster::RankTelemetry>) -> Json {
+    let ranks: Vec<Json> = telemetry
+        .into_iter()
+        .map(|t| {
+            let mut fields = vec![
+                ("rank", Json::Int(t.rank as i64)),
+                ("alive", Json::Bool(t.text.is_some())),
+                ("events", ofl::events_to_json(&t.events)),
+            ];
+            if let Some(err) = t.error {
+                fields.push(("error", Json::Str(err)));
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("local", ofl::events_to_json(&ofl::snapshot())),
+        ("ranks", Json::Arr(ranks)),
+    ])
 }
 
 /// Diff TeraEdges/s between two spdnn-bench-v1 artifacts and gate on

@@ -1,0 +1,248 @@
+//! Flight recorder: a fixed-capacity, lock-sharded ring buffer of the
+//! structured events an operator needs *after* something went wrong —
+//! admission sheds, frame-decode failures, rank deaths, lame-duck and
+//! drain transitions, hello downgrades/refusals.
+//!
+//! The span buffer (`obs::trace`) answers "where did the time go"; the
+//! flight recorder answers "what did the fleet do in the seconds before
+//! the failure". Same design constraints, in the same order:
+//!
+//! 1. **No-op when disabled.** [`record`] checks one relaxed atomic and
+//!    returns — the detail string is built lazily (a closure), so the
+//!    disabled path never formats, allocates or locks.
+//! 2. **Bounded memory.** Each shard is a ring capped at
+//!    `CAPACITY / SHARD_COUNT` events; old events fall off the front.
+//!    A recorder left enabled for weeks cannot grow.
+//! 3. **Lock sharding.** Recording threads hash to one of
+//!    `SHARD_COUNT` mutexes by a thread-local id, like the span store.
+//!
+//! Every event carries a process-wide **sequence number** (total order
+//! of recording within one process — what the chaos tests assert on,
+//! e.g. rank-death strictly before lame-duck) and a UNIX-epoch
+//! microsecond timestamp (cross-process alignment, same axis as spans).
+//!
+//! Worker ranks ship their recent events home inside the metrics-verb
+//! reply on the cluster wire, so one `{"op":"flight"}` dump shows both
+//! sides of a severed connection. Remote sequence numbers order events
+//! *within* their origin process only.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{Context, Result};
+
+use crate::obs::trace::now_unix_micros;
+use crate::util::json::Json;
+
+// Event kinds (the taxonomy DESIGN.md documents). A &'static str per
+// kind instead of an enum keeps the wire form open: a newer worker's
+// kinds still round-trip through an older coordinator's dump.
+/// Admission control turned a request away (queue full, unmeetable
+/// deadline, drain).
+pub const ADMISSION_SHED: &str = "admission-shed";
+/// A wire frame or control line failed to decode; the connection drops.
+pub const FRAME_ERROR: &str = "frame-error";
+/// A worker rank's process died (stdout EOF) or stopped answering.
+pub const RANK_DEATH: &str = "rank-death";
+/// A serving replica degraded; the router stops routing to it.
+pub const LAME_DUCK: &str = "lame-duck";
+/// The server began draining (operator shutdown or handle drop).
+pub const DRAIN: &str = "drain";
+/// Connect-time negotiation settled on a downgraded wire/protocol.
+pub const HELLO_DOWNGRADE: &str = "hello-downgrade";
+/// Connect-time negotiation failed outright.
+pub const HELLO_REFUSED: &str = "hello-refused";
+
+/// One recorded event. `seq` totally orders events recorded by one
+/// process; `ts_us` is UNIX-epoch microseconds (the spans' time axis).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlightEvent {
+    pub seq: u64,
+    pub ts_us: u64,
+    pub kind: String,
+    pub detail: String,
+}
+
+/// Total event capacity across all shards.
+pub const CAPACITY: usize = 1024;
+const SHARD_COUNT: usize = 8;
+const SHARD_CAP: usize = CAPACITY / SHARD_COUNT;
+
+struct Store {
+    shards: Vec<Mutex<VecDeque<FlightEvent>>>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SEQ: AtomicU64 = AtomicU64::new(0);
+static STORE: OnceLock<Store> = OnceLock::new();
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+thread_local! {
+    static THREAD_ID: u32 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+fn store() -> &'static Store {
+    STORE.get_or_init(|| Store {
+        shards: (0..SHARD_COUNT).map(|_| Mutex::new(VecDeque::new())).collect(),
+    })
+}
+
+fn lock_shard(
+    shard: &Mutex<VecDeque<FlightEvent>>,
+) -> std::sync::MutexGuard<'_, VecDeque<FlightEvent>> {
+    shard.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Start keeping events. Cheap enough to leave on for the life of a
+/// server or worker process (memory is bounded by [`CAPACITY`]).
+pub fn enable() {
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Stop keeping events; [`record`] returns to the no-op fast path.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Release);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Record one event. The detail closure runs only when the recorder is
+/// enabled — the disabled path is one relaxed load, no formatting.
+pub fn record(kind: &str, detail: impl FnOnce() -> String) {
+    if !enabled() {
+        return;
+    }
+    let ev = FlightEvent {
+        seq: SEQ.fetch_add(1, Ordering::Relaxed),
+        ts_us: now_unix_micros(),
+        kind: kind.to_string(),
+        detail: detail(),
+    };
+    let tid = THREAD_ID.with(|t| *t);
+    let mut shard = lock_shard(&store().shards[tid as usize % SHARD_COUNT]);
+    if shard.len() >= SHARD_CAP {
+        shard.pop_front();
+    }
+    shard.push_back(ev);
+}
+
+/// Copy (not drain) every retained event, sorted by sequence number —
+/// a dump must not erase the record it reports.
+pub fn snapshot() -> Vec<FlightEvent> {
+    let mut out = Vec::new();
+    for shard in &store().shards {
+        out.extend(lock_shard(shard).iter().cloned());
+    }
+    out.sort_by_key(|e| e.seq);
+    out
+}
+
+/// Empty the buffer (tests; the recorder stays enabled/disabled as-is).
+pub fn clear() {
+    for shard in &store().shards {
+        lock_shard(shard).clear();
+    }
+}
+
+// --------------------------------------------------------- wire encoding
+
+/// Events as a JSON array — the form shipped inside the cluster
+/// metrics-verb reply and the `{"op":"flight"}` dump.
+pub fn events_to_json(events: &[FlightEvent]) -> Json {
+    Json::Arr(
+        events
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("seq", Json::Int(e.seq as i64)),
+                    ("ts_us", Json::Int(e.ts_us as i64)),
+                    ("kind", Json::Str(e.kind.clone())),
+                    ("detail", Json::Str(e.detail.clone())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+pub fn events_from_json(doc: &Json) -> Result<Vec<FlightEvent>> {
+    let arr = doc.as_arr().context("flight events: expected array")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for e in arr {
+        out.push(FlightEvent {
+            seq: e.req_usize("seq")? as u64,
+            ts_us: e.req_usize("ts_us")? as u64,
+            kind: e.req_str("kind")?.to_string(),
+            detail: e.req_str("detail")?.to_string(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The recorder is process-global; tests that toggle it serialize
+    /// (same discipline as the span-store tests).
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_record_is_noop_and_never_formats() {
+        let _g = guard();
+        disable();
+        clear();
+        record(RANK_DEATH, || panic!("detail must not be built while disabled"));
+        assert!(snapshot().is_empty());
+    }
+
+    #[test]
+    fn events_are_sequenced_and_snapshot_preserves_them() {
+        let _g = guard();
+        enable();
+        clear();
+        record(RANK_DEATH, || "rank 0 died".to_string());
+        record(LAME_DUCK, || "replica 0 lame".to_string());
+        let events = snapshot();
+        disable();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, RANK_DEATH);
+        assert_eq!(events[1].kind, LAME_DUCK);
+        assert!(events[0].seq < events[1].seq, "sequence numbers order the record");
+        assert!(events[0].ts_us > 0);
+        // Snapshot copies; the record survives a dump.
+        assert_eq!(snapshot().len(), 2);
+    }
+
+    #[test]
+    fn ring_caps_per_shard() {
+        let _g = guard();
+        enable();
+        clear();
+        // Single-threaded: everything lands in one shard of cap
+        // CAPACITY / SHARD_COUNT; the oldest events fall off the front.
+        for i in 0..(SHARD_CAP + 10) {
+            record(ADMISSION_SHED, || format!("shed {i}"));
+        }
+        let events = snapshot();
+        disable();
+        assert_eq!(events.len(), SHARD_CAP);
+        assert_eq!(events.last().unwrap().detail, format!("shed {}", SHARD_CAP + 9));
+        clear();
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let events = vec![
+            FlightEvent { seq: 3, ts_us: 99, kind: RANK_DEATH.into(), detail: "rank 1".into() },
+            FlightEvent { seq: 4, ts_us: 100, kind: DRAIN.into(), detail: "operator".into() },
+        ];
+        let back = events_from_json(&events_to_json(&events)).unwrap();
+        assert_eq!(back, events);
+    }
+}

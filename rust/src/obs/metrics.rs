@@ -71,6 +71,19 @@ struct HistogramInner {
 pub struct Histogram(Arc<HistogramInner>);
 
 impl Histogram {
+    /// A detached (unregistered) histogram. Registered families are
+    /// process-global — every `ServerStats` in one process would share
+    /// them — so per-instance summaries observe into one of these and
+    /// mirror into the registered family separately.
+    pub fn with_buckets(bounds: &[f64]) -> Histogram {
+        Histogram(Arc::new(HistogramInner {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }))
+    }
+
     pub fn observe(&self, v: f64) {
         let h = &self.0;
         let idx = h.bounds.partition_point(|b| v > *b);
@@ -93,6 +106,35 @@ impl Histogram {
 
     pub fn sum(&self) -> f64 {
         f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Bucket-based quantile estimate, `q` in [0, 1]: walk the
+    /// cumulative counts to the bucket where `q × count` falls and
+    /// interpolate linearly inside it (the classic Prometheus
+    /// `histogram_quantile`). Observations in the `+Inf` bucket clamp
+    /// to the last finite bound; an empty histogram reports 0.0.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let h = &self.0;
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * total as f64;
+        let mut cum = 0u64;
+        for (i, bound) in h.bounds.iter().enumerate() {
+            let in_bucket = h.buckets[i].load(Ordering::Relaxed);
+            let below = cum as f64;
+            cum += in_bucket;
+            if cum as f64 >= target {
+                let lo = if i == 0 { 0.0 } else { h.bounds[i - 1] };
+                if in_bucket == 0 {
+                    return lo;
+                }
+                let frac = ((target - below) / in_bucket as f64).clamp(0.0, 1.0);
+                return lo + (bound - lo) * frac;
+            }
+        }
+        h.bounds.last().copied().unwrap_or(0.0)
     }
 }
 
@@ -208,12 +250,7 @@ pub fn histogram_labeled(
         })))
     }) {
         Series::Histogram(h) => h,
-        _ => Histogram(Arc::new(HistogramInner {
-            bounds: bounds.to_vec(),
-            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
-            count: AtomicU64::new(0),
-            sum_bits: AtomicU64::new(0f64.to_bits()),
-        })),
+        _ => Histogram::with_buckets(bounds),
     }
 }
 
@@ -354,8 +391,8 @@ fn family_of(name: &str, types: &BTreeMap<String, String>) -> String {
 /// Schema gate for the Prometheus exposition the `{"op":"metrics"}` verb
 /// returns (mirrors `bench::validate_report` for `spdnn-bench-v1`):
 /// every family must be `spdnn_`-prefixed, typed before sampled, with a
-/// known TYPE; histograms need a `+Inf` bucket, `_sum` and `_count`
-/// consistent with the bucket counts.
+/// known TYPE declared at most once (HELP likewise); histograms need a
+/// `+Inf` bucket, `_sum` and `_count` consistent with the bucket counts.
 pub fn validate_exposition(text: &str) -> Result<ExpositionSummary> {
     let mut types: BTreeMap<String, String> = BTreeMap::new();
     let mut helps: BTreeMap<String, bool> = BTreeMap::new();
@@ -382,7 +419,11 @@ pub fn validate_exposition(text: &str) -> Result<ExpositionSummary> {
         }
         if let Some(rest) = line.strip_prefix("# HELP ") {
             let name = rest.split(' ').next().unwrap_or_default();
-            helps.insert(name.to_string(), true);
+            // Duplicate family metadata is the federation merge's
+            // failure mode — reject it like duplicate TYPE.
+            if helps.insert(name.to_string(), true).is_some() {
+                bail!("duplicate HELP for {name:?}");
+            }
             continue;
         }
         if line.starts_with('#') {
@@ -436,6 +477,151 @@ pub fn validate_exposition(text: &str) -> Result<ExpositionSummary> {
         }
     }
     Ok(ExpositionSummary { families: sampled.len(), samples })
+}
+
+// ------------------------------------------------------------- federation
+
+/// One worker rank's contribution to a federated exposition.
+pub struct RankExposition<'a> {
+    /// Global rank id — becomes the injected `rank="N"` label.
+    pub rank: usize,
+    /// Whether the rank answered the pull (drives `spdnn_fleet_rank_up`).
+    pub up: bool,
+    /// The rank's own exposition; `None` when unreachable, lame, or on
+    /// a pre-metrics protocol version.
+    pub text: Option<&'a str>,
+}
+
+struct MergedFamily {
+    help: String,
+    kind: String,
+    samples: Vec<String>,
+}
+
+/// Merge the local registry rendering with per-rank expositions into one
+/// `validate_exposition`-clean document: HELP/TYPE appear once per
+/// family (first writer wins; a cross-document kind conflict is an
+/// error), every rank sample gains a `rank="N"` label unless it already
+/// carries one, and a synthesized `spdnn_fleet_rank_up` gauge records
+/// which ranks answered the pull.
+pub fn merge_expositions(local: &str, ranks: &[RankExposition]) -> Result<String> {
+    let mut fams: BTreeMap<String, MergedFamily> = BTreeMap::new();
+    if !local.trim().is_empty() {
+        ingest_exposition(&mut fams, local, None).map_err(|e| e.context("local exposition"))?;
+    }
+    for r in ranks {
+        if let Some(text) = r.text {
+            ingest_exposition(&mut fams, text, Some(r.rank))
+                .map_err(|e| e.context(format!("rank {} exposition", r.rank)))?;
+        }
+    }
+    if !ranks.is_empty() {
+        let up = fams.entry("spdnn_fleet_rank_up".to_string()).or_insert_with(|| MergedFamily {
+            help: "Whether each worker rank answered the federated metrics pull \
+                   (0 = down, lame, or pre-metrics protocol)."
+                .to_string(),
+            kind: "gauge".to_string(),
+            samples: Vec::new(),
+        });
+        for r in ranks {
+            up.samples
+                .push(format!("spdnn_fleet_rank_up{{rank=\"{}\"}} {}", r.rank, u8::from(r.up)));
+        }
+    }
+    let mut out = String::new();
+    for (name, fam) in &fams {
+        if fam.samples.is_empty() {
+            continue;
+        }
+        out.push_str(&format!("# HELP {name} {}\n", fam.help));
+        out.push_str(&format!("# TYPE {name} {}\n", fam.kind));
+        for s in &fam.samples {
+            out.push_str(s);
+            out.push('\n');
+        }
+    }
+    validate_exposition(&out).map_err(|e| e.context("merged exposition"))?;
+    Ok(out)
+}
+
+/// Fold one (already individually valid) exposition document into the
+/// merged family map, injecting `rank="N"` into sample labels when
+/// `rank` is given.
+fn ingest_exposition(
+    fams: &mut BTreeMap<String, MergedFamily>,
+    text: &str,
+    rank: Option<usize>,
+) -> Result<()> {
+    // Per-document grammar check first: TYPE-before-sample and
+    // HELP-per-family below rely on it.
+    validate_exposition(text)?;
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    for raw in text.lines() {
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.splitn(2, ' ');
+            let name = it.next().unwrap_or_default().to_string();
+            let kind = it.next().unwrap_or_default().to_string();
+            types.insert(name.clone(), kind.clone());
+            let fam = fams.entry(name.clone()).or_insert_with(|| MergedFamily {
+                help: String::new(),
+                kind: String::new(),
+                samples: Vec::new(),
+            });
+            if fam.kind.is_empty() {
+                fam.kind = kind; // HELP may have created the entry first
+            } else if fam.kind != kind {
+                bail!("family {name:?} is {} in one document and {kind} in another", fam.kind);
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let mut it = rest.splitn(2, ' ');
+            let name = it.next().unwrap_or_default().to_string();
+            let help = it.next().unwrap_or_default().to_string();
+            let fam = fams.entry(name).or_insert_with(|| MergedFamily {
+                help: String::new(),
+                kind: String::new(),
+                samples: Vec::new(),
+            });
+            if fam.help.is_empty() {
+                fam.help = help; // first writer wins
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        let (name, labels, _value) = parse_sample_line(line)?;
+        let family = family_of(&name, &types);
+        let sample = match rank {
+            // Inject the rank label first so every series from this
+            // document is distinct from its siblings'. A sample that
+            // already carries `rank=` keeps it.
+            Some(r) if !labels.split(',').any(|p| p.starts_with("rank=")) => {
+                let value_part = &line[line.rfind(' ').unwrap_or(0) + 1..];
+                let injected = if labels.is_empty() {
+                    format!("rank=\"{r}\"")
+                } else {
+                    format!("rank=\"{r}\",{labels}")
+                };
+                format!("{name}{{{injected}}} {value_part}")
+            }
+            _ => line.to_string(),
+        };
+        fams.entry(family)
+            .or_insert_with(|| MergedFamily {
+                help: String::new(),
+                kind: String::new(),
+                samples: Vec::new(),
+            })
+            .samples
+            .push(sample);
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -517,6 +703,91 @@ mod tests {
         .is_err());
         // Missing HELP.
         assert!(validate_exposition("# TYPE spdnn_x counter\nspdnn_x 1\n").is_err());
+    }
+
+    #[test]
+    fn histogram_quantiles_interpolate_within_buckets() {
+        let h = Histogram::with_buckets(&[0.01, 0.1, 1.0]);
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram reports 0");
+        for _ in 0..50 {
+            h.observe(0.005); // bucket (0, 0.01]
+        }
+        for _ in 0..50 {
+            h.observe(0.05); // bucket (0.01, 0.1]
+        }
+        let p25 = h.quantile(0.25);
+        assert!(p25 > 0.0 && p25 < 0.01, "p25 {p25} interpolates inside the first bucket");
+        assert!((h.quantile(0.5) - 0.01).abs() < 1e-12, "p50 lands on the bucket edge");
+        let p75 = h.quantile(0.75);
+        assert!(p75 > 0.01 && p75 < 0.1, "p75 {p75} interpolates inside the second bucket");
+        h.observe(50.0); // +Inf bucket
+        assert_eq!(h.quantile(1.0), 1.0, "overflow observations clamp to the last bound");
+    }
+
+    #[test]
+    fn validation_rejects_duplicate_family_metadata() {
+        let dup_help = "# HELP spdnn_x x\n# TYPE spdnn_x counter\nspdnn_x 1\n# HELP spdnn_x again\n";
+        let err = validate_exposition(dup_help).unwrap_err().to_string();
+        assert!(err.contains("duplicate HELP"), "got {err:?}");
+        let dup_type = "# HELP spdnn_x x\n# TYPE spdnn_x counter\nspdnn_x 1\n\
+                        # TYPE spdnn_x counter\nspdnn_x 2\n";
+        let err = validate_exposition(dup_type).unwrap_err().to_string();
+        assert!(err.contains("duplicate TYPE"), "got {err:?}");
+    }
+
+    #[test]
+    fn merge_federates_rank_documents() {
+        let local = "# HELP spdnn_serve_requests_total answered\n\
+                     # TYPE spdnn_serve_requests_total counter\n\
+                     spdnn_serve_requests_total 5\n";
+        let rank_doc = |n: u64| {
+            format!(
+                "# HELP spdnn_rank_shards_total shards run\n\
+                 # TYPE spdnn_rank_shards_total counter\n\
+                 spdnn_rank_shards_total {n}\n\
+                 # HELP spdnn_rank_run_seconds run time\n\
+                 # TYPE spdnn_rank_run_seconds histogram\n\
+                 spdnn_rank_run_seconds_bucket{{le=\"1.0\"}} {n}\n\
+                 spdnn_rank_run_seconds_bucket{{le=\"+Inf\"}} {n}\n\
+                 spdnn_rank_run_seconds_sum 0.5\n\
+                 spdnn_rank_run_seconds_count {n}\n"
+            )
+        };
+        let (r0, r1) = (rank_doc(3), rank_doc(4));
+        let merged = merge_expositions(
+            local,
+            &[
+                RankExposition { rank: 0, up: true, text: Some(&r0) },
+                RankExposition { rank: 1, up: true, text: Some(&r1) },
+                RankExposition { rank: 2, up: false, text: None },
+            ],
+        )
+        .unwrap();
+        // HELP/TYPE once per family despite two source documents.
+        assert_eq!(merged.matches("# TYPE spdnn_rank_shards_total").count(), 1);
+        assert_eq!(merged.matches("# HELP spdnn_rank_shards_total").count(), 1);
+        // Rank-relabeled samples from both documents survive.
+        assert!(merged.contains("spdnn_rank_shards_total{rank=\"0\"} 3"));
+        assert!(merged.contains("spdnn_rank_shards_total{rank=\"1\"} 4"));
+        assert!(merged.contains("spdnn_rank_run_seconds_bucket{rank=\"1\",le=\"+Inf\"} 4"));
+        // The local (unlabelled) sample is untouched.
+        assert!(merged.contains("spdnn_serve_requests_total 5"));
+        // The synthesized liveness gauge names the dead rank.
+        assert!(merged.contains("spdnn_fleet_rank_up{rank=\"2\"} 0"));
+        assert!(merged.contains("spdnn_fleet_rank_up{rank=\"0\"} 1"));
+        validate_exposition(&merged).expect("merged document must self-validate");
+    }
+
+    #[test]
+    fn merge_rejects_cross_document_kind_conflicts() {
+        let local = "# HELP spdnn_thing t\n# TYPE spdnn_thing counter\nspdnn_thing 1\n";
+        let rank = "# HELP spdnn_thing t\n# TYPE spdnn_thing gauge\nspdnn_thing 2\n";
+        let err = merge_expositions(
+            local,
+            &[RankExposition { rank: 0, up: true, text: Some(rank) }],
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("counter"), "got {err:#}");
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! `spdnn::obs` — end-to-end observability: RAII spans in a
 //! lock-sharded trace buffer, a per-request [`TraceId`] propagated over
 //! both wires (serve JSON protocol and `spdnn-clu1` frames), a
-//! Prometheus-rendered metrics registry, and Chrome trace-event export.
+//! Prometheus-rendered metrics registry, a flight recorder of
+//! structured failure events, and Chrome trace-event export.
 //!
 //! Zero external dependencies, matching `util::logger`'s posture. The
 //! span recorder is disabled until a sink (`--trace-out`) attaches, and
@@ -12,9 +13,11 @@
 //! samples are span durations, and cluster scatter/gather byte counts
 //! feed `spdnn_cluster_*_bytes_total` counters.
 
+pub mod flight;
 pub mod metrics;
 pub mod trace;
 
+pub use flight::FlightEvent;
 pub use trace::{chrome_events, chrome_json, export_chrome, SpanRecord, TraceId};
 pub use trace::{disable, drain, enable, enabled, register_lane_label, set_process_lane};
 pub use trace::{span, timed};

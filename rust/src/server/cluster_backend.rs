@@ -33,7 +33,13 @@
 //!   error) fails that panel's requests and marks the replica **lame**;
 //! * the router stops routing to lame replicas (requests re-route to
 //!   the surviving fleet), and `/stats` reports per-replica lameness,
-//!   per-rank liveness and per-rank scatter/gather byte counters.
+//!   per-rank liveness and per-rank scatter/gather byte counters;
+//! * each fresh rank death and lame transition lands in the flight
+//!   recorder (`rank-death` strictly before `lame-duck`), and
+//!   [`ClusterReplica::observe_ranks`] pulls each live rank's metrics
+//!   exposition and recent flight events over the replica's existing
+//!   coordinator connections for the federated `{"op":"metrics"}` /
+//!   `{"op":"flight"}` views.
 //!
 //! **Drain fencing** — a replica's batch thread is sequential: closing
 //! its request channel fences new panels, the in-flight scatter (if
@@ -57,6 +63,7 @@ use crate::cluster::{
 use crate::coordinator::batcher::{collect_panel, BatchPolicy, Response};
 use crate::coordinator::NativeSpec;
 use crate::log_warn;
+use crate::obs::flight::{self, FlightEvent};
 use crate::obs::trace::TraceId;
 
 /// How `serve --ranks N` builds and connects its rank fleet.
@@ -190,12 +197,33 @@ struct PanelRequest {
     resp: mpsc::Sender<Result<Response>>,
 }
 
+/// One worker rank's telemetry as seen from its serving replica: the
+/// liveness flag `/stats` reports, plus (for live ranks speaking
+/// protocol ≥ 5) the rank's Prometheus exposition and recent
+/// flight-recorder events.
+pub struct RankObservation {
+    /// Global rank id (index into the fleet, not the replica subset).
+    pub rank: usize,
+    pub alive: bool,
+    /// The rank's exposition; `None` when the pull failed (dead or
+    /// pre-v5 rank), with the reason in `error`.
+    pub text: Option<String>,
+    /// The rank's recent flight events. Sequence numbers order events
+    /// within that rank's process only.
+    pub events: Vec<FlightEvent>,
+    pub error: Option<String>,
+}
+
 /// One rank-backed serving replica: the drop-in peer of the in-process
 /// `InferenceServer` whose panels run on a subset of cluster ranks.
 pub struct ClusterReplica {
     /// `None` once shutdown began (fences new panels).
     tx: Mutex<Option<mpsc::Sender<PanelRequest>>>,
     handle: Mutex<Option<JoinHandle<()>>>,
+    /// Shared with the batch thread: worker ranks serve one connection
+    /// at a time, so telemetry pulls must ride the replica's existing
+    /// connections — the mutex serialises them against panel scatters.
+    coordinator: Arc<Mutex<ClusterCoordinator>>,
     lame: Arc<AtomicBool>,
     counters: Arc<Vec<RankCounters>>,
     neurons: usize,
@@ -224,12 +252,14 @@ impl ClusterReplica {
         }
         let mut coordinator = ClusterCoordinator::connect_with(&addrs, opts)?;
         coordinator.load(model, spec, prune).context("loading the model on serving ranks")?;
+        let coordinator = Arc::new(Mutex::new(coordinator));
         let lame = Arc::new(AtomicBool::new(false));
         let counters: Arc<Vec<RankCounters>> =
             Arc::new(rank_ids.iter().map(|&r| RankCounters::new(r)).collect());
         let (tx, rx) = mpsc::channel::<PanelRequest>();
         let neurons = model.neurons;
         let handle = {
+            let coordinator = coordinator.clone();
             let lame = lame.clone();
             let counters = counters.clone();
             std::thread::spawn(move || {
@@ -239,6 +269,7 @@ impl ClusterReplica {
         Ok(ClusterReplica {
             tx: Mutex::new(Some(tx)),
             handle: Mutex::new(Some(handle)),
+            coordinator,
             lame,
             counters,
             neurons,
@@ -281,6 +312,26 @@ impl ClusterReplica {
         &self.counters
     }
 
+    /// Pull telemetry (metrics exposition + flight events) from every
+    /// rank of this replica over its existing coordinator connections.
+    /// Blocks until the in-flight panel, if any, releases the
+    /// coordinator; a dead or pre-v5 rank answers with `text: None` and
+    /// the reason in `error` instead of failing the pull.
+    pub fn observe_ranks(&self) -> Vec<RankObservation> {
+        let telemetry = lock_coordinator(&self.coordinator).metrics_each();
+        telemetry
+            .into_iter()
+            .zip(self.counters.iter())
+            .map(|(t, c)| RankObservation {
+                rank: c.rank,
+                alive: c.alive(),
+                text: t.text,
+                events: t.events,
+                error: t.error,
+            })
+            .collect()
+    }
+
     /// Fence + drain + stop: close the request channel (no new panels),
     /// then join the batch thread — which answers any in-flight panel
     /// and only then sends shutdown ops to its ranks. Safe to call
@@ -305,8 +356,29 @@ fn fail_panel(panel: Vec<PanelRequest>, message: &str) {
     }
 }
 
+/// A poisoned coordinator lock means the batch thread panicked; the
+/// clients inside are plain sockets, so telemetry pulls and shutdown
+/// ops stay safe — each just errors per-rank if its connection broke.
+fn lock_coordinator(
+    coordinator: &Mutex<ClusterCoordinator>,
+) -> std::sync::MutexGuard<'_, ClusterCoordinator> {
+    match coordinator.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Flip a rank's liveness flag, recording a `rank-death` flight event
+/// on the first observation only (the flag may be re-checked every
+/// panel after a death).
+fn mark_rank_dead(c: &RankCounters, why: &str) {
+    if c.alive.swap(false, Ordering::Release) {
+        flight::record(flight::RANK_DEATH, || format!("rank {} died ({why})", c.rank));
+    }
+}
+
 fn replica_loop(
-    mut coordinator: ClusterCoordinator,
+    coordinator: Arc<Mutex<ClusterCoordinator>>,
     policy: BatchPolicy,
     rx: mpsc::Receiver<PanelRequest>,
     neurons: usize,
@@ -338,14 +410,20 @@ fn replica_loop(
             let mut first_dead = None;
             for c in counters.iter() {
                 if !h.alive(c.rank) {
-                    c.alive.store(false, Ordering::Release);
+                    mark_rank_dead(c, "worker process exited");
                     if first_dead.is_none() {
                         first_dead = Some(c.rank);
                     }
                 }
             }
             if let Some(rank) = first_dead {
-                lame.store(true, Ordering::Release);
+                // Deaths recorded above, the lame transition after: the
+                // flight recorder shows cause strictly before effect.
+                if !lame.swap(true, Ordering::Release) {
+                    flight::record(flight::LAME_DUCK, || {
+                        format!("replica lame: rank {rank} died before the batch was scattered")
+                    });
+                }
                 fail_panel(
                     panel,
                     &format!("cluster rank {rank} died before the batch was scattered"),
@@ -362,11 +440,15 @@ fn replica_loop(
         // The panel runs under the first traced request's id (co-batched
         // peers share the scatter, so one trace sees the whole panel).
         let trace = panel.iter().map(|r| r.trace).find(|t| t.is_some()).unwrap_or(TraceId::NONE);
-        let result = coordinator.run_traced(&y, trace);
+        // Telemetry pulls wait at this lock for the panel to finish (the
+        // lock is released each time the loop goes back to waiting on
+        // `collect_panel`).
+        let mut coord = lock_coordinator(&coordinator);
+        let result = coord.run_traced(&y, trace);
         // Publish cumulative per-rank wire traffic for /stats — also
         // after a failed panel, which may have scattered bytes before
         // breaking.
-        for (c, (sent, recv)) in counters.iter().zip(coordinator.rank_bytes()) {
+        for (c, (sent, recv)) in counters.iter().zip(coord.rank_bytes()) {
             c.scatter_bytes.store(sent, Ordering::Relaxed);
             c.gather_bytes.store(recv, Ordering::Relaxed);
         }
@@ -400,12 +482,13 @@ fn replica_loop(
                 // Scatter/gather failed mid-panel (dead rank,
                 // connection reset, protocol error): degrade this
                 // replica, answer the panel, keep the process alive.
-                lame.store(true, Ordering::Release);
+                // Rank deaths are attributed first so their flight
+                // events precede the lame transition.
                 match &health {
                     Some(h) => {
                         for c in counters.iter() {
                             if !h.alive(c.rank) {
-                                c.alive.store(false, Ordering::Release);
+                                mark_rank_dead(c, "worker process exited");
                             }
                         }
                     }
@@ -415,12 +498,17 @@ fn replica_loop(
                         // failure. (run() joined all its scatter
                         // threads, so the connections are idle; a dead
                         // or severed one errors immediately.)
-                        for (c, ok) in counters.iter().zip(coordinator.ping_each()) {
+                        for (c, ok) in counters.iter().zip(coord.ping_each()) {
                             if !ok {
-                                c.alive.store(false, Ordering::Release);
+                                mark_rank_dead(c, "connection lost");
                             }
                         }
                     }
+                }
+                if !lame.swap(true, Ordering::Release) {
+                    flight::record(flight::LAME_DUCK, || {
+                        format!("replica degraded mid-panel: {e:#}")
+                    });
                 }
                 log_warn!("cluster replica degraded: {e:#}");
                 fail_panel(panel, &format!("cluster inference failed: {e:#}"));
@@ -430,7 +518,7 @@ fn replica_loop(
     // Drain fence: the loop above answered every in-flight panel before
     // reaching here, so the shutdown ops cannot race a live scatter. A
     // dead rank's connection just errors (ignored).
-    coordinator.shutdown();
+    lock_coordinator(&coordinator).shutdown();
 }
 
 #[cfg(test)]

@@ -41,6 +41,7 @@ use anyhow::{bail, Context, Result};
 use crate::cluster::ModelSpec;
 use crate::coordinator::batcher::{BatchPolicy, ServeBackend, ServedModel};
 use crate::coordinator::NativeSpec;
+use crate::obs::flight as fl;
 use crate::obs::metrics as om;
 use crate::obs::trace::{self as tr, TraceId};
 use crate::util::json::Json;
@@ -82,14 +83,18 @@ pub struct ServerConfig {
     pub replicas: usize,
     pub policy: BatchPolicy,
     pub admission: AdmissionConfig,
-    /// Latency samples kept for the /stats percentiles.
-    pub stats_window: usize,
     /// Cap on concurrent connections (each costs one OS thread); above it
     /// new connections get an error line and are closed immediately.
     pub max_conns: usize,
     /// When set, span recording is enabled for the server's lifetime and
     /// a Chrome trace-event JSON is written here on shutdown.
     pub trace_out: Option<PathBuf>,
+    /// When set, the final fleet-federated Prometheus exposition is
+    /// written here on shutdown (before the ranks are torn down).
+    pub metrics_out: Option<PathBuf>,
+    /// When set, the final flight-recorder dump (local + per-rank
+    /// events) is written here on shutdown, JSON.
+    pub flight_out: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -100,9 +105,10 @@ impl Default for ServerConfig {
             replicas: 2,
             policy: BatchPolicy::default(),
             admission: AdmissionConfig::default(),
-            stats_window: 4096,
             max_conns: 1024,
             trace_out: None,
+            metrics_out: None,
+            flight_out: None,
         }
     }
 }
@@ -135,6 +141,9 @@ struct Shared {
     admission: Arc<AdmissionController>,
     stats: ServerStats,
     reference: Option<ReferencePanel>,
+    /// Edges one answered request traverses (layers × k × neurons) —
+    /// the TeraEdges/s numerator in `{"op":"health"}`.
+    edges_per_row: u64,
     stop: AtomicBool,
     conns: AtomicUsize,
     max_conns: usize,
@@ -143,6 +152,10 @@ struct Shared {
     fleet: Mutex<Option<ClusterFleet>>,
     /// Chrome trace destination; written once by the shutdown path.
     trace_out: Option<PathBuf>,
+    /// Federated-metrics / flight-dump destinations; written once by
+    /// the shutdown path, before the ranks are torn down.
+    metrics_out: Option<PathBuf>,
+    flight_out: Option<PathBuf>,
 }
 
 /// Namespace for [`Server::start`] / [`Server::start_cluster`].
@@ -157,8 +170,9 @@ impl Server {
         backend: ServeBackend,
         reference: Option<ReferencePanel>,
     ) -> Result<ServerHandle> {
+        let edges_per_row = (model.layers.len() * model.k * model.neurons) as u64;
         let router = ReplicaRouter::start(model, backend, cfg.policy, cfg.replicas)?;
-        Server::start_with(cfg, router, None, reference)
+        Server::start_with(cfg, router, None, reference, edges_per_row)
     }
 
     /// Cluster mode: boot the worker-rank fleet (or adopt pre-started
@@ -184,7 +198,7 @@ impl Server {
             cfg.replicas,
             &fleet,
         )?;
-        Server::start_with(cfg, router, Some(fleet), reference)
+        Server::start_with(cfg, router, Some(fleet), reference, model.input_edges(1))
     }
 
     fn start_with(
@@ -192,6 +206,7 @@ impl Server {
         router: ReplicaRouter,
         fleet: Option<ClusterFleet>,
         reference: Option<ReferencePanel>,
+        edges_per_row: u64,
     ) -> Result<ServerHandle> {
         let mut acfg = cfg.admission;
         if acfg.concurrency == 0 {
@@ -208,16 +223,24 @@ impl Server {
             tr::enable();
             tr::set_process_lane(0, "server");
         }
+        // The flight recorder is always on while serving: its cost is a
+        // bounded ring write per event, and a post-mortem without the
+        // events it would have held is worth far less than the write.
+        fl::enable();
+        crate::util::logger::set_role("server");
         let shared = Arc::new(Shared {
             router,
             admission,
-            stats: ServerStats::new(cfg.stats_window),
+            stats: ServerStats::new(),
             reference,
+            edges_per_row,
             stop: AtomicBool::new(false),
             conns: AtomicUsize::new(0),
             max_conns: cfg.max_conns.max(1),
             fleet: Mutex::new(fleet),
             trace_out: cfg.trace_out.clone(),
+            metrics_out: cfg.metrics_out.clone(),
+            flight_out: cfg.flight_out.clone(),
         });
         let accept = {
             let shared = shared.clone();
@@ -269,6 +292,11 @@ impl ServerHandle {
         self.shared.stats.snapshot(&self.shared.admission, &self.shared.router)
     }
 
+    /// The same payload `{"op":"health"}` returns, server-side.
+    pub fn health_snapshot(&self) -> Json {
+        self.shared.stats.health(&self.shared.admission, &self.shared.router)
+    }
+
     /// Whether this server executes on cluster ranks.
     pub fn is_cluster(&self) -> bool {
         self.shared.router.is_cluster()
@@ -298,6 +326,7 @@ impl ServerHandle {
 
     /// Initiate and complete a graceful shutdown from this side.
     pub fn shutdown(mut self) -> ShutdownReport {
+        fl::record(fl::DRAIN, || "drain started by the server handle".to_string());
         self.shared.admission.begin_drain();
         self.shared.stop.store(true, Ordering::Release);
         self.join_accept();
@@ -318,6 +347,25 @@ impl ServerHandle {
         let t1 = Instant::now();
         while self.shared.conns.load(Ordering::Acquire) > 0 && t1.elapsed() < CONN_GRACE {
             std::thread::sleep(Duration::from_millis(2));
+        }
+        // Final telemetry exports happen before the replicas fence their
+        // ranks: the federated pull and the remote flight events need
+        // the worker processes still answering.
+        if let Some(path) = &self.shared.metrics_out {
+            match federated_metrics(&self.shared) {
+                Ok(text) => match std::fs::write(path, &text) {
+                    Ok(()) => log_info!("wrote federated metrics to {}", path.display()),
+                    Err(e) => log_warn!("metrics export to {} failed: {e:#}", path.display()),
+                },
+                Err(e) => log_warn!("metrics federation failed: {e:#}"),
+            }
+        }
+        if let Some(path) = &self.shared.flight_out {
+            let dump = flight_dump(&self.shared).to_string();
+            match std::fs::write(path, &dump) {
+                Ok(()) => log_info!("wrote flight dump to {}", path.display()),
+                Err(e) => log_warn!("flight export to {} failed: {e:#}", path.display()),
+            }
         }
         // Fence before reap: rank-backed replicas answer their in-flight
         // panel and send shutdown ops to their ranks inside
@@ -446,19 +494,66 @@ fn handle_connection(stream: TcpStream, shared: &Shared) -> Result<()> {
     }
 }
 
+/// One Prometheus document for the whole fleet: this process's registry
+/// merged with every cluster rank's pulled exposition, rank-relabeled.
+/// For an all-native server this is just the local registry.
+fn federated_metrics(shared: &Shared) -> Result<String> {
+    let observed = shared.router.observe_ranks();
+    let ranks: Vec<om::RankExposition<'_>> = observed
+        .iter()
+        .map(|o| om::RankExposition { rank: o.rank, up: o.text.is_some(), text: o.text.as_deref() })
+        .collect();
+    om::merge_expositions(&om::render(), &ranks)
+}
+
+/// The `{"op":"flight"}` payload: this process's recent flight events
+/// plus each rank's (shipped home in the metrics-verb reply), so a
+/// post-mortem shows both sides of a severed connection. Remote
+/// sequence numbers order events within their origin process only.
+fn flight_dump(shared: &Shared) -> Json {
+    let ranks: Vec<Json> = shared
+        .router
+        .observe_ranks()
+        .into_iter()
+        .map(|o| {
+            let mut pairs = vec![
+                ("rank", Json::Int(o.rank as i64)),
+                ("alive", Json::Bool(o.alive)),
+                ("events", fl::events_to_json(&o.events)),
+            ];
+            if let Some(e) = o.error {
+                pairs.push(("error", Json::Str(e)));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::obj(vec![
+        ("local", fl::events_to_json(&fl::snapshot())),
+        ("ranks", Json::Arr(ranks)),
+    ])
+}
+
 fn dispatch(req: Request, shared: &Shared, peer_is_local: bool) -> WireResponse {
     match req {
         Request::Ping => WireResponse::Pong,
         Request::Stats => {
             WireResponse::Stats(shared.stats.snapshot(&shared.admission, &shared.router))
         }
-        Request::Metrics => WireResponse::Metrics { text: om::render() },
+        Request::Metrics => match federated_metrics(shared) {
+            Ok(text) => WireResponse::Metrics { text },
+            Err(e) => WireResponse::Error { message: format!("metrics federation failed: {e:#}") },
+        },
+        Request::Flight => WireResponse::Flight(flight_dump(shared)),
+        Request::Health => {
+            WireResponse::Health(shared.stats.health(&shared.admission, &shared.router))
+        }
         Request::Shutdown => {
             if !peer_is_local {
                 return WireResponse::Error {
                     message: "shutdown is only accepted from loopback peers".to_string(),
                 };
             }
+            fl::record(fl::DRAIN, || "drain requested by a loopback peer".to_string());
             shared.admission.begin_drain();
             shared.stop.store(true, Ordering::Release);
             WireResponse::Draining
@@ -505,10 +600,17 @@ fn infer(req: InferRequest, shared: &Shared) -> WireResponse {
     let ticket = match AdmissionController::try_admit(&shared.admission, deadline) {
         Ok(t) => t,
         Err(rej) => {
+            fl::record(fl::ADMISSION_SHED, || {
+                format!(
+                    "{} (retry after {:.1}ms)",
+                    rej.reason(),
+                    rej.retry_after().as_secs_f64() * 1e3
+                )
+            });
             return WireResponse::Shed {
                 reason: rej.reason().to_string(),
                 retry_after_ms: rej.retry_after().as_secs_f64() * 1e3,
-            }
+            };
         }
     };
     let effective = deadline.unwrap_or_else(|| shared.admission.default_deadline());
@@ -529,6 +631,7 @@ fn infer(req: InferRequest, shared: &Shared) -> WireResponse {
             ticket.complete(elapsed);
             let span = req_span.arg("replica", replica).arg("batch_size", r.batch_size);
             shared.stats.record_ok(span.finish_secs());
+            shared.stats.record_edges(shared.edges_per_row);
             WireResponse::Infer {
                 active: r.active,
                 replica,

@@ -21,9 +21,12 @@
 //!   per-request deadlines and early load shedding;
 //! * [`lifecycle`] — bind/accept/serve plus graceful drain + shutdown
 //!   (cluster drains fence in-flight scatters before reaping workers);
-//! * [`stats`] — p50/p95/p99 latency, queue depth, shed counts,
-//!   per-replica throughput, per-rank liveness and scatter/gather byte
-//!   counters behind the `{"op":"stats"}` verb.
+//!   also home of the federated `{"op":"metrics"}` pull and the
+//!   `{"op":"flight"}` recorder dump;
+//! * [`stats`] — p50/p95/p99 latency (bucket-interpolated from the obs
+//!   histogram), queue depth, shed counts, per-replica throughput,
+//!   per-rank liveness and scatter/gather byte counters behind the
+//!   `{"op":"stats"}` verb, plus the `{"op":"health"}` SLO verdict.
 //!
 //! ```text
 //!   TCP clients ──► protocol ──► admission ──► router ──► batcher replicas
@@ -41,8 +44,10 @@ pub mod router;
 pub mod stats;
 
 pub use admission::{AdmissionConfig, AdmissionController, Rejection, Ticket};
-pub use cluster_backend::{ClusterFleet, ClusterReplica, ClusterServeConfig, RankCounters};
+pub use cluster_backend::{
+    ClusterFleet, ClusterReplica, ClusterServeConfig, RankCounters, RankObservation,
+};
 pub use lifecycle::{ReferencePanel, Server, ServerConfig, ServerHandle, ShutdownReport};
 pub use protocol::{Client, InferInput, InferRequest, Request, WireResponse};
 pub use router::{RankDetail, ReplicaDetail, ReplicaRouter};
-pub use stats::ServerStats;
+pub use stats::{LatencySummary, ServerStats};

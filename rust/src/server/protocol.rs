@@ -11,7 +11,9 @@
 //! {"op":"infer","row":3,"deadline_ms":50,"activations":false}
 //! {"op":"infer","row":3,"trace":"00c0ffee00c0ffee"}  caller-pinned TraceId
 //! {"op":"stats"}                                     introspection snapshot
-//! {"op":"metrics"}                                   Prometheus exposition
+//! {"op":"metrics"}                                   Prometheus exposition (fleet-federated)
+//! {"op":"flight"}                                    flight-recorder dump
+//! {"op":"health"}                                    health/SLO verdict
 //! {"op":"ping"}                                      liveness
 //! {"op":"shutdown"}  (alias "drain")                 graceful drain + exit
 //! ```
@@ -62,8 +64,14 @@ pub struct InferRequest {
 pub enum Request {
     Infer(InferRequest),
     Stats,
-    /// Prometheus text exposition of the obs metrics registry.
+    /// Prometheus text exposition of the obs metrics registry — for a
+    /// cluster-backed server, federated across the whole rank fleet.
     Metrics,
+    /// Flight-recorder dump: the server's own events plus each cluster
+    /// rank's recent events.
+    Flight,
+    /// Health/SLO verdict (`ok`/`degraded`/`critical` with reasons).
+    Health,
     Ping,
     /// Stop accepting new work, answer in-flight requests, then exit.
     Shutdown,
@@ -126,6 +134,8 @@ impl Request {
             }
             "stats" => Ok(Request::Stats),
             "metrics" => Ok(Request::Metrics),
+            "flight" => Ok(Request::Flight),
+            "health" => Ok(Request::Health),
             "ping" => Ok(Request::Ping),
             "shutdown" | "drain" => Ok(Request::Shutdown),
             other => bail!("unknown op {other:?}"),
@@ -156,6 +166,8 @@ impl Request {
             }
             Request::Stats => Json::obj(vec![("op", Json::Str("stats".into()))]),
             Request::Metrics => Json::obj(vec![("op", Json::Str("metrics".into()))]),
+            Request::Flight => Json::obj(vec![("op", Json::Str("flight".into()))]),
+            Request::Health => Json::obj(vec![("op", Json::Str("health".into()))]),
             Request::Ping => Json::obj(vec![("op", Json::Str("ping".into()))]),
             Request::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".into()))]),
         }
@@ -180,6 +192,10 @@ pub enum WireResponse {
     Stats(Json),
     /// Prometheus text exposition of the metrics registry.
     Metrics { text: String },
+    /// Flight-recorder dump: `{"local":[events...],"ranks":[...]}`.
+    Flight(Json),
+    /// Health/SLO verdict document.
+    Health(Json),
     Pong,
     /// Acknowledgement of a shutdown/drain op.
     Draining,
@@ -228,6 +244,16 @@ impl WireResponse {
                 ("kind", Json::Str("metrics".into())),
                 ("text", Json::Str(text.clone())),
             ]),
+            WireResponse::Flight(f) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("kind", Json::Str("flight".into())),
+                ("flight", f.clone()),
+            ]),
+            WireResponse::Health(h) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("kind", Json::Str("health".into())),
+                ("health", h.clone()),
+            ]),
             WireResponse::Pong => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("kind", Json::Str("pong".into())),
@@ -272,6 +298,8 @@ impl WireResponse {
             }),
             "stats" => Ok(WireResponse::Stats(v.req("stats")?.clone())),
             "metrics" => Ok(WireResponse::Metrics { text: v.req_str("text")?.to_string() }),
+            "flight" => Ok(WireResponse::Flight(v.req("flight")?.clone())),
+            "health" => Ok(WireResponse::Health(v.req("health")?.clone())),
             "pong" => Ok(WireResponse::Pong),
             "draining" => Ok(WireResponse::Draining),
             "error" => Ok(WireResponse::Error { message: v.req_str("error")?.to_string() }),
@@ -356,6 +384,8 @@ mod tests {
         }));
         roundtrip_request(Request::Stats);
         roundtrip_request(Request::Metrics);
+        roundtrip_request(Request::Flight);
+        roundtrip_request(Request::Health);
         roundtrip_request(Request::Ping);
         roundtrip_request(Request::Shutdown);
     }
@@ -392,6 +422,14 @@ mod tests {
             text: "# TYPE spdnn_serve_requests_total counter\nspdnn_serve_requests_total 1\n"
                 .into(),
         });
+        roundtrip_response(WireResponse::Flight(Json::obj(vec![
+            ("local", Json::Arr(vec![])),
+            ("ranks", Json::Arr(vec![])),
+        ])));
+        roundtrip_response(WireResponse::Health(Json::obj(vec![
+            ("verdict", Json::Str("degraded".into())),
+            ("reasons", Json::Arr(vec![Json::Str("replica 1 is lame".into())])),
+        ])));
         roundtrip_response(WireResponse::Pong);
         roundtrip_response(WireResponse::Draining);
         roundtrip_response(WireResponse::Error { message: "boom".into() });

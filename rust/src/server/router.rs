@@ -36,7 +36,7 @@ use crate::coordinator::partition::{imbalance, partition_even};
 use crate::coordinator::NativeSpec;
 use crate::obs::trace::TraceId;
 
-use super::cluster_backend::{ClusterFleet, ClusterReplica};
+use super::cluster_backend::{ClusterFleet, ClusterReplica, RankObservation};
 
 /// One routing target: an in-process batcher or a rank-backed one.
 enum ReplicaUnit {
@@ -256,6 +256,20 @@ impl ReplicaRouter {
                         .collect(),
                 };
                 ReplicaDetail { routed: routed.load(Ordering::Relaxed), lame: u.is_lame(), ranks }
+            })
+            .collect()
+    }
+
+    /// Pull telemetry (metrics exposition + flight events) from every
+    /// cluster rank across all replicas, in global rank order. Empty
+    /// for an all-native router — native replicas live in this process
+    /// and are already covered by its own registry and recorder.
+    pub fn observe_ranks(&self) -> Vec<RankObservation> {
+        self.units
+            .iter()
+            .flat_map(|u| match u {
+                ReplicaUnit::Native(_) => Vec::new(),
+                ReplicaUnit::Cluster(c) => c.observe_ranks(),
             })
             .collect()
     }

@@ -1,46 +1,54 @@
 //! Serving introspection: latency distribution, queue state, shed counts
 //! and per-replica throughput, surfaced through the `{"op":"stats"}`
-//! protocol verb.
+//! protocol verb — plus the `{"op":"health"}` SLO verdict derived from
+//! the same numbers.
 //!
-//! Latencies are kept in a fixed ring (default 4096 samples) so the
-//! percentile cost and memory stay bounded no matter how long the server
-//! runs; percentiles come from `util::stats::Summary`, the same machinery
-//! the offline bench harness uses.
+//! Latencies aggregate straight into the obs
+//! `spdnn_serve_latency_seconds` histogram; `/stats` percentiles come
+//! from bucket interpolation over that histogram
+//! ([`om::Histogram::quantile`]), so the `/stats` summary and the
+//! Prometheus exposition can never disagree — they read one aggregate.
+//! Only the maximum is tracked exactly on the side (buckets merely
+//! bound it).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard};
 use std::time::Instant;
 
 use crate::obs::metrics as om;
 use crate::util::json::Json;
-use crate::util::stats::Summary;
 
 use super::admission::AdmissionController;
 use super::router::ReplicaRouter;
 
-/// Fixed-capacity ring of f64 samples.
-struct Ring {
-    cap: usize,
-    buf: Vec<f64>,
-    next: usize,
+/// Shed-rate thresholds behind the health verdict (documented in
+/// DESIGN.md "Observability"): above `SHED_DEGRADED` the fleet is
+/// shedding more than noise; above `SHED_CRITICAL` most offered load is
+/// being turned away.
+const SHED_DEGRADED: f64 = 0.05;
+const SHED_CRITICAL: f64 = 0.5;
+
+/// Latency aggregate derived from the serve histogram — the single
+/// timing source behind `/stats`, `{"op":"health"}` and the Prometheus
+/// exposition. Quantiles are bucket-interpolated; `max` is exact.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
 }
 
-impl Ring {
-    fn new(cap: usize) -> Ring {
-        Ring { cap: cap.max(1), buf: Vec::new(), next: 0 }
-    }
-
-    fn push(&mut self, x: f64) {
-        if self.buf.len() < self.cap {
-            self.buf.push(x);
-        } else {
-            self.buf[self.next] = x;
-            self.next = (self.next + 1) % self.cap;
+/// Lock-free exact-max tracking over f64 bits (latencies are ≥ 0, so
+/// the zero initialisation is the identity).
+fn raise_max(cell: &AtomicU64, x: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while x > f64::from_bits(cur) {
+        match cell.compare_exchange_weak(cur, x.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
         }
-    }
-
-    fn samples(&self) -> Vec<f64> {
-        self.buf.clone()
     }
 }
 
@@ -49,22 +57,32 @@ pub struct ServerStats {
     started: Instant,
     requests: AtomicU64,
     errors: AtomicU64,
-    /// Recent end-to-end inference latencies in seconds.
-    latencies: Mutex<Ring>,
+    /// Edges traversed by answered requests (throughput numerator).
+    edges: AtomicU64,
+    max_latency_bits: AtomicU64,
+    /// Private latency aggregate behind the `/stats` percentiles.
+    /// Detached rather than registered because registered families are
+    /// process-global: two server instances in one test process would
+    /// otherwise pollute each other's summaries.
+    latency: om::Histogram,
     /// Process-global obs mirrors of the per-server counters, surfaced
-    /// through `{"op":"metrics"}`.
+    /// through `{"op":"metrics"}`. `m_latency` sees the exact
+    /// observation stream `latency` does.
     m_requests: om::Counter,
     m_errors: om::Counter,
+    m_edges: om::Counter,
     m_latency: om::Histogram,
 }
 
 impl ServerStats {
-    pub fn new(window: usize) -> ServerStats {
+    pub fn new() -> ServerStats {
         ServerStats {
             started: Instant::now(),
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
-            latencies: Mutex::new(Ring::new(window)),
+            edges: AtomicU64::new(0),
+            max_latency_bits: AtomicU64::new(0),
+            latency: om::Histogram::with_buckets(om::LATENCY_BUCKETS),
             m_requests: om::counter(
                 "spdnn_serve_requests_total",
                 "Admitted inference requests (answered or failed).",
@@ -72,6 +90,10 @@ impl ServerStats {
             m_errors: om::counter(
                 "spdnn_serve_errors_total",
                 "Admitted inference requests that failed.",
+            ),
+            m_edges: om::counter(
+                "spdnn_serve_edges_total",
+                "Edges traversed by answered inference requests.",
             ),
             m_latency: om::histogram(
                 "spdnn_serve_latency_seconds",
@@ -81,19 +103,13 @@ impl ServerStats {
         }
     }
 
-    /// Lock the latency ring, recovering from a poisoned mutex: a
-    /// recorder thread that panicked mid-push can at worst lose its own
-    /// sample, never the introspection path for the server's lifetime.
-    fn latencies(&self) -> MutexGuard<'_, Ring> {
-        self.latencies.lock().unwrap_or_else(|e| e.into_inner())
-    }
-
     /// One answered inference request. The latency is the `request`
     /// obs-span duration measured at the protocol layer — the span is
     /// the single timing source, this just aggregates it.
     pub fn record_ok(&self, latency_secs: f64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        self.latencies().push(latency_secs);
+        raise_max(&self.max_latency_bits, latency_secs);
+        self.latency.observe(latency_secs);
         self.m_requests.inc();
         self.m_latency.observe(latency_secs);
     }
@@ -106,6 +122,13 @@ impl ServerStats {
         self.m_errors.inc();
     }
 
+    /// Edges traversed by an answered request's model pass — feeds the
+    /// TeraEdges/s throughput in `{"op":"health"}`.
+    pub fn record_edges(&self, edges: u64) {
+        self.edges.fetch_add(edges, Ordering::Relaxed);
+        self.m_edges.add(edges);
+    }
+
     pub fn requests(&self) -> u64 {
         self.requests.load(Ordering::Relaxed)
     }
@@ -114,12 +137,27 @@ impl ServerStats {
         self.errors.load(Ordering::Relaxed)
     }
 
+    pub fn edges(&self) -> u64 {
+        self.edges.load(Ordering::Relaxed)
+    }
+
     pub fn uptime_secs(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
     }
 
-    pub fn latency_summary(&self) -> Option<Summary> {
-        Summary::of(&self.latencies().samples())
+    pub fn latency_summary(&self) -> Option<LatencySummary> {
+        let count = self.latency.count();
+        if count == 0 {
+            return None;
+        }
+        Some(LatencySummary {
+            count,
+            mean: self.latency.sum() / count as f64,
+            p50: self.latency.quantile(0.50),
+            p95: self.latency.quantile(0.95),
+            p99: self.latency.quantile(0.99),
+            max: f64::from_bits(self.max_latency_bits.load(Ordering::Relaxed)),
+        })
     }
 
     /// Full introspection snapshot — the `{"op":"stats"}` payload.
@@ -183,6 +221,80 @@ impl ServerStats {
             ("latency_ms", latency),
         ])
     }
+
+    /// The `{"op":"health"}` payload: an `ok`/`degraded`/`critical`
+    /// verdict with one reason line per violated rule, plus the numbers
+    /// behind it (latency quantiles, shed rate, TeraEdges/s, fleet
+    /// liveness). Verdict rules: **critical** when no replica is
+    /// routable or the shed rate exceeds 50%; **degraded** when any
+    /// replica is lame, any rank is dead, the server is draining, or
+    /// the shed rate exceeds 5%; **ok** otherwise.
+    pub fn health(&self, admission: &AdmissionController, router: &ReplicaRouter) -> Json {
+        let uptime = self.uptime_secs();
+        let s = self.latency_summary().unwrap_or_default();
+        let shed = admission.shed();
+        let offered = admission.admitted() + shed;
+        let shed_rate = if offered == 0 { 0.0 } else { shed as f64 / offered as f64 };
+        let teraedges = self.edges() as f64 / uptime.max(1e-9) / 1e12;
+        let details = router.details();
+        let live = router.live_replicas();
+        let (mut ranks_alive, mut ranks_total) = (0i64, 0i64);
+        let mut reasons: Vec<String> = Vec::new();
+        for (i, d) in details.iter().enumerate() {
+            if d.lame {
+                reasons.push(format!("replica {i} is lame"));
+            }
+            for r in &d.ranks {
+                ranks_total += 1;
+                if r.alive {
+                    ranks_alive += 1;
+                } else {
+                    reasons.push(format!("rank {} is dead (replica {i})", r.rank));
+                }
+            }
+        }
+        if live == 0 {
+            reasons.push("no live replicas".into());
+        }
+        if admission.is_draining() {
+            reasons.push("server is draining".into());
+        }
+        if shed_rate > SHED_DEGRADED {
+            reasons.push(format!("shed rate {:.1}%", shed_rate * 100.0));
+        }
+        let verdict = if live == 0 || shed_rate > SHED_CRITICAL {
+            "critical"
+        } else if !reasons.is_empty() {
+            "degraded"
+        } else {
+            "ok"
+        };
+        Json::obj(vec![
+            ("verdict", Json::Str(verdict.into())),
+            ("reasons", Json::Arr(reasons.into_iter().map(Json::Str).collect())),
+            ("uptime_secs", Json::Num(uptime)),
+            (
+                "latency_ms",
+                Json::obj(vec![
+                    ("p50", Json::Num(s.p50 * 1e3)),
+                    ("p95", Json::Num(s.p95 * 1e3)),
+                    ("p99", Json::Num(s.p99 * 1e3)),
+                ]),
+            ),
+            ("shed_rate", Json::Num(shed_rate)),
+            ("teraedges_per_sec", Json::Num(teraedges)),
+            ("live_replicas", Json::Int(live as i64)),
+            ("replicas", Json::Int(details.len() as i64)),
+            ("ranks_alive", Json::Int(ranks_alive)),
+            ("ranks_total", Json::Int(ranks_total)),
+        ])
+    }
+}
+
+impl Default for ServerStats {
+    fn default() -> ServerStats {
+        ServerStats::new()
+    }
 }
 
 #[cfg(test)]
@@ -196,46 +308,67 @@ mod tests {
     use std::time::Duration;
 
     #[test]
-    fn ring_caps_and_wraps() {
-        let mut r = Ring::new(4);
-        for i in 0..10 {
-            r.push(i as f64);
-        }
-        let mut s = r.samples();
-        assert_eq!(s.len(), 4);
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        // Oldest samples were overwritten; the last four survive.
-        assert_eq!(s, vec![6.0, 7.0, 8.0, 9.0]);
-    }
-
-    #[test]
-    fn poisoned_latency_lock_recovers() {
-        let st = Arc::new(ServerStats::new(8));
-        st.record_ok(0.001);
-        let st2 = Arc::clone(&st);
-        // A recorder thread that panics while holding the ring lock
-        // poisons the mutex; /stats must keep working regardless.
-        let _ = std::thread::spawn(move || {
-            let _guard = st2.latencies();
-            panic!("poison the stats lock");
-        })
-        .join();
-        st.record_ok(0.002);
-        let s = st.latency_summary().expect("summary survives poisoning");
-        assert_eq!(s.count, 2);
-    }
-
-    #[test]
     fn counters_and_summary() {
-        let st = ServerStats::new(16);
+        let st = ServerStats::new();
         st.record_ok(0.010);
         st.record_ok(0.020);
         st.record_error();
+        st.record_edges(1000);
         assert_eq!(st.requests(), 3);
         assert_eq!(st.errors(), 1);
+        assert_eq!(st.edges(), 1000);
         let s = st.latency_summary().unwrap();
         assert_eq!(s.count, 2);
+        // Mean comes from the histogram's exact sum, max is tracked
+        // exactly on the side; only the quantiles are interpolated.
         assert!((s.mean - 0.015).abs() < 1e-12);
+        assert!((s.max - 0.020).abs() < 1e-12);
+        assert!(s.p50 > 0.0 && s.p50 <= s.p95 && s.p95 <= s.p99);
+    }
+
+    #[test]
+    fn summary_quantiles_come_from_histogram_buckets() {
+        let st = ServerStats::new();
+        // 98 fast requests and two slow ones: p50/p95 stay inside the
+        // fast bucket range, p99 reaches into the slow bucket.
+        for _ in 0..98 {
+            st.record_ok(0.0005);
+        }
+        st.record_ok(0.5);
+        st.record_ok(0.5);
+        let s = st.latency_summary().unwrap();
+        assert_eq!(s.count, 100);
+        assert!(s.p50 <= 0.001, "p50 {} must sit in the fastest buckets", s.p50);
+        assert!(s.p95 <= 0.001, "p95 {} must sit in the fastest buckets", s.p95);
+        assert!(s.p99 > 0.001, "p99 {} must feel the slow outlier", s.p99);
+        assert!((s.max - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn health_reports_ok_for_a_live_native_fleet() {
+        let cfg = RuntimeConfig { neurons: 64, layers: 3, k: 4, batch: 4, ..Default::default() };
+        let ds = Dataset::generate(&cfg).unwrap();
+        let model = ServedModel::from_dataset(&ds);
+        let router = ReplicaRouter::start(
+            model,
+            ServeBackend::native(1, 12),
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+            2,
+        )
+        .unwrap();
+        let admission = Arc::new(AdmissionController::new(AdmissionConfig::default()));
+        let st = ServerStats::new();
+        st.record_ok(0.002);
+        st.record_edges(64 * 3 * 4);
+        let h = st.health(&admission, &router);
+        assert_eq!(h.req_str("verdict").unwrap(), "ok");
+        assert!(h.req_arr("reasons").unwrap().is_empty());
+        assert_eq!(h.req_f64("shed_rate").unwrap(), 0.0);
+        assert!(h.req_f64("teraedges_per_sec").unwrap() > 0.0);
+        assert_eq!(h.req_usize("live_replicas").unwrap(), 2);
+        assert_eq!(h.req_usize("ranks_total").unwrap(), 0);
+        assert!(h.req("latency_ms").unwrap().req_f64("p95").is_ok());
+        router.shutdown();
     }
 
     #[test]
@@ -251,7 +384,7 @@ mod tests {
         )
         .unwrap();
         let admission = Arc::new(AdmissionController::new(AdmissionConfig::default()));
-        let st = ServerStats::new(16);
+        let st = ServerStats::new();
         st.record_ok(0.001);
 
         let snap = st.snapshot(&admission, &router);
@@ -287,7 +420,7 @@ mod tests {
         )
         .unwrap();
         let admission = Arc::new(AdmissionController::new(AdmissionConfig::default()));
-        let st = ServerStats::new(16);
+        let st = ServerStats::new();
         let snap = st.snapshot(&admission, &router);
         let lat = snap.req("latency_ms").unwrap();
         assert_eq!(lat.req_usize("count").unwrap(), 0);

@@ -1,5 +1,13 @@
 //! Tiny leveled logger (no external crates). Level comes from the
 //! `SPDNN_LOG` env var: `error`, `warn`, `info` (default), `debug`, `trace`.
+//!
+//! Every line carries a monotonic since-start timestamp, and — once
+//! [`set_role`] has run — the process's fleet role, so interleaved
+//! stderr from a coordinator and its worker ranks stays attributable:
+//!
+//! ```text
+//! [   12.0432s INFO  rank 2 spdnn::cluster::rank] ready on 127.0.0.1:40331
+//! ```
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -38,6 +46,20 @@ impl Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
 static START: OnceLock<Instant> = OnceLock::new();
+static ROLE: OnceLock<String> = OnceLock::new();
+
+/// Tag every subsequent log line with this process's fleet role —
+/// `rank 2`, `server`, `coordinator`. First caller wins: the role is
+/// part of process identity and must not flap mid-run, so later calls
+/// (e.g. a test harness re-entering `serve_rank`) are ignored.
+pub fn set_role(role: &str) {
+    let _ = ROLE.set(role.to_string());
+}
+
+/// The fleet role set by [`set_role`], if any.
+pub fn role() -> Option<&'static str> {
+    ROLE.get().map(String::as_str)
+}
 
 pub fn level() -> Level {
     let raw = LEVEL.load(Ordering::Relaxed);
@@ -69,7 +91,17 @@ pub fn log(lvl: Level, module: &str, msg: &str) {
     }
     let start = START.get_or_init(Instant::now);
     let t = start.elapsed().as_secs_f64();
-    eprintln!("[{t:10.4}s {} {module}] {msg}", lvl.tag());
+    eprintln!("{}", format_line(t, lvl, role(), module, msg));
+}
+
+/// Render one log line. Pure so the format is unit-testable: the role
+/// segment sits between the level tag and the module path, and is
+/// omitted entirely until `set_role` has run.
+fn format_line(t: f64, lvl: Level, role: Option<&str>, module: &str, msg: &str) -> String {
+    match role {
+        Some(role) => format!("[{t:10.4}s {} {role} {module}] {msg}", lvl.tag()),
+        None => format!("[{t:10.4}s {} {module}] {msg}", lvl.tag()),
+    }
 }
 
 #[macro_export]
@@ -109,6 +141,18 @@ mod tests {
     /// `level()` call re-reads the environment.
     fn reset() {
         LEVEL.store(u8::MAX, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn line_format_carries_timestamp_and_role() {
+        let line = format_line(12.0432, Level::Info, Some("rank 2"), "spdnn::cluster", "ready");
+        assert_eq!(line, "[   12.0432s INFO  rank 2 spdnn::cluster] ready");
+        // No role set yet: the segment is absent, not an empty gap.
+        let bare = format_line(0.5, Level::Warn, None, "spdnn::server", "draining");
+        assert_eq!(bare, "[    0.5000s WARN  spdnn::server] draining");
+        // Error tags are not padded past their five columns.
+        let err = format_line(100.0, Level::Error, Some("server"), "m", "boom");
+        assert_eq!(err, "[  100.0000s ERROR server m] boom");
     }
 
     #[test]

@@ -14,7 +14,10 @@
 //!   chaos proxy settles on json with no frames lost (property test
 //!   over randomized payloads, chunking and arrival jitter);
 //! * weight-sharded serving (`--partition weights`) survives a severed
-//!   exchange frame mid-layer: clean error, lame replica, live server.
+//!   exchange frame mid-layer: clean error, lame replica, live server;
+//! * the flight recorder captures a chaos rank kill as rank-death
+//!   strictly before lame-duck (by sequence number), and
+//!   `{"op":"health"}` downgrades to `degraded` naming the casualty.
 
 mod common;
 
@@ -33,6 +36,7 @@ use spdnn::coordinator::batcher::{BatchPolicy, ServeBackend, ServedModel};
 use spdnn::coordinator::NativeSpec;
 use spdnn::data::Dataset;
 use spdnn::engine::EngineKind;
+use spdnn::obs::flight;
 use spdnn::obs::TraceId;
 use spdnn::server::{
     AdmissionConfig, Client, ClusterServeConfig, InferInput, InferRequest, ReferencePanel,
@@ -320,6 +324,93 @@ fn killed_rank_mid_request_lame_ducks_and_drains_cleanly() {
     let report = handle.wait();
     assert!(report.drained, "drain must answer all in-flight work");
     assert!(report.workers_clean, "the surviving rank must exit cleanly");
+}
+
+/// Satellite: the black box under chaos. Kill a rank mid-fleet; the
+/// flight recorder must hold the rank-death event strictly before the
+/// lame-duck it caused (ordered by sequence number), and
+/// `{"op":"health"}` must downgrade from `ok` to `degraded` naming the
+/// lame replica and the dead rank.
+#[test]
+fn flight_recorder_and_health_capture_a_chaos_rank_kill() {
+    let cfg = small_cfg();
+    let ds = Dataset::generate(&cfg).unwrap();
+    let ccfg = ClusterServeConfig::local(program(), 2);
+    let handle = start_cluster_server(server_cfg(2), &ds, &ccfg);
+    let mut client = Client::connect(handle.addr()).unwrap();
+
+    let health = |client: &mut Client| match client.call(&Request::Health).expect("health call") {
+        WireResponse::Health(h) => h,
+        other => panic!("expected health response, got {other:?}"),
+    };
+
+    // Healthy fleet first: the verdict is ok with no reasons.
+    for i in 0..2 {
+        infer_ok(&mut client, &Request::infer_row(i));
+    }
+    let before = health(&mut client);
+    assert_eq!(before.req_str("verdict").unwrap(), "ok");
+    assert!(before.req_arr("reasons").unwrap().is_empty(), "{before}");
+    assert_eq!(before.req_usize("ranks_alive").unwrap(), 2);
+
+    // Kill rank 0, then drive a request into its replica (request
+    // seq 2 -> replica 0) so the death is observed and recorded.
+    handle.kill_rank(0).expect("fault injection");
+    match client.call(&Request::infer_row(0)).unwrap() {
+        WireResponse::Error { message } => {
+            assert!(message.contains("died"), "unexpected error: {message}");
+        }
+        other => panic!("expected an error from the lame replica, got {other:?}"),
+    }
+
+    // The verdict names the casualty.
+    let after = health(&mut client);
+    assert_eq!(after.req_str("verdict").unwrap(), "degraded", "{after}");
+    let reasons: Vec<String> = after
+        .req_arr("reasons")
+        .unwrap()
+        .iter()
+        .map(|r| r.as_str().unwrap().to_string())
+        .collect();
+    assert!(reasons.iter().any(|r| r == "replica 0 is lame"), "{reasons:?}");
+    assert!(reasons.iter().any(|r| r == "rank 0 is dead (replica 0)"), "{reasons:?}");
+    assert_eq!(after.req_usize("live_replicas").unwrap(), 1);
+    assert_eq!(after.req_usize("ranks_alive").unwrap(), 1);
+    assert_eq!(after.req_usize("ranks_total").unwrap(), 2);
+
+    // The flight recorder holds the forensic record, cause before
+    // effect. (The ring is process-global and other tests in this
+    // binary also down ranks, so scope every match to rank 0's detail
+    // strings; each lame-duck is recorded after its rank-death, so the
+    // first matching death must precede the first matching lame-duck.)
+    let dump = match client.call(&Request::Flight).expect("flight call") {
+        WireResponse::Flight(f) => f,
+        other => panic!("expected flight response, got {other:?}"),
+    };
+    let local = flight::events_from_json(dump.req("local").unwrap()).expect("flight events");
+    let death = local
+        .iter()
+        .find(|e| e.kind == flight::RANK_DEATH && e.detail.contains("rank 0"))
+        .expect("a rank-death event for rank 0");
+    let lame = local
+        .iter()
+        .find(|e| e.kind == flight::LAME_DUCK && e.detail.contains("rank 0"))
+        .expect("a lame-duck event for rank 0");
+    assert!(
+        death.seq < lame.seq,
+        "rank-death (seq {}) must precede lame-duck (seq {})",
+        death.seq,
+        lame.seq
+    );
+    // The dump also carries per-rank telemetry: the dead rank cannot
+    // answer, the surviving one ships its events home.
+    let ranks = dump.req_arr("ranks").unwrap();
+    assert_eq!(ranks.len(), 2);
+    assert!(!ranks[0].req("alive").unwrap().as_bool().unwrap(), "rank 0 is dead");
+    assert!(ranks[1].req("alive").unwrap().as_bool().unwrap(), "rank 1 answers");
+
+    let report = handle.shutdown();
+    assert!(report.drained);
 }
 
 /// The chaos proxy's frame-surgery faults: a truncated or corrupted
