@@ -1,21 +1,33 @@
-//! Serving load bench: replica count × batch policy sweep through the
-//! serving core (router + batcher replicas; no TCP so the numbers are
-//! about the serving machinery, not loopback sockets).
+//! Serving load bench, two sweeps into one `BENCH_serving.json`:
 //!
-//! Eight closed-loop clients drive each configuration; the sweep prints
-//! the throughput/latency frontier and writes `BENCH_serving.json` so the
-//! perf trajectory of the serving path is tracked PR over PR.
+//! 1. replica count × batch policy through the serving core (router +
+//!    batcher replicas; no TCP so the numbers are about the serving
+//!    machinery, not loopback sockets), and
+//! 2. QPS × connection count over real loopback TCP for each I/O
+//!    engine (`io=reactor` vs `io=threads`, binary client wire), the
+//!    tentpole observable for the reactor refactor. Total work per
+//!    cell is constant — more connections each send fewer requests —
+//!    so the sweep measures connection scaling, not extra compute.
+//!
+//! Eight closed-loop clients drive each in-process configuration; the
+//! sweeps print the throughput/latency frontier and write
+//! `BENCH_serving.json` so the perf trajectory is tracked PR over PR.
 //!
 //! Usage: cargo bench --bench serving_load
-//! Scale with SPDNN_BENCH_ITERS (requests per client, default 40).
+//! Scale with SPDNN_BENCH_ITERS (requests per client, default 40) and
+//! SPDNN_SERVE_CONNS (comma list of connection counts, default 4,32,128).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use spdnn::bench::{BenchCase, BenchReport};
+use spdnn::cluster::WireFormat;
 use spdnn::coordinator::batcher::{BatchPolicy, ServeBackend, ServedModel};
 use spdnn::data::Dataset;
-use spdnn::server::ReplicaRouter;
+use spdnn::server::{
+    AdmissionConfig, Client, IoMode, ReferencePanel, ReplicaRouter, Request, Server, ServerConfig,
+    WireResponse,
+};
 use spdnn::util::config::RuntimeConfig;
 use spdnn::util::json::Json;
 use spdnn::util::stats::Summary;
@@ -118,6 +130,98 @@ fn main() -> anyhow::Result<()> {
         }
     }
     table.print();
+
+    // Sweep 2: QPS × connections over loopback TCP, per I/O engine.
+    let conn_counts: Vec<usize> = std::env::var("SPDNN_SERVE_CONNS")
+        .ok()
+        .map(|s| s.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![4, 32, 128]);
+    let mut tcp_table = Table::new(
+        "Serving load over TCP: io engine x connections (closed loop, binary wire)",
+        &["io", "conns", "req/conn", "req/s", "p50", "p95"],
+    );
+    for io in [IoMode::Reactor, IoMode::Threads] {
+        for &conns in &conn_counts {
+            let server_cfg = ServerConfig {
+                replicas: 2,
+                policy: BatchPolicy { max_batch: 48, max_wait: Duration::from_millis(1) },
+                // No shedding in the sweep: a shed reply would be a
+                // bench bug, not a measurement.
+                admission: AdmissionConfig {
+                    queue_cap: 4096,
+                    deadline: Duration::from_secs(60),
+                    ..Default::default()
+                },
+                max_conns: conns + 64,
+                io,
+                ..Default::default()
+            };
+            let reference = ReferencePanel { features: ds.features.clone(), neurons };
+            let handle = Server::start(
+                server_cfg,
+                model.clone(),
+                ServeBackend::native(1, 12),
+                Some(reference),
+            )?;
+            let addr = handle.addr();
+            let per_conn = (requests_per_client * 8 / conns).max(2);
+            let t0 = Instant::now();
+            let mut all_lat: Vec<f64> = Vec::new();
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..conns)
+                    .map(|c| {
+                        scope.spawn(move || {
+                            let mut client =
+                                Client::connect_wire(addr, WireFormat::Bin).expect("connect");
+                            let mut lat = Vec::with_capacity(per_conn);
+                            for i in 0..per_conn {
+                                let row = (c * 13 + i) % rows;
+                                let feats =
+                                    features[row * neurons..(row + 1) * neurons].to_vec();
+                                let t = Instant::now();
+                                match client.call(&Request::infer_features(feats)).expect("call") {
+                                    WireResponse::Infer { .. } => {}
+                                    other => panic!("unexpected response: {other:?}"),
+                                }
+                                lat.push(t.elapsed().as_secs_f64());
+                            }
+                            lat
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    all_lat.extend(h.join().expect("client thread"));
+                }
+            });
+            let total = t0.elapsed().as_secs_f64();
+            let s = Summary::of(&all_lat).expect("latency samples");
+            let req_per_sec = all_lat.len() as f64 / total;
+            tcp_table.row(vec![
+                io.as_str().to_string(),
+                conns.to_string(),
+                per_conn.to_string(),
+                format!("{req_per_sec:.0}"),
+                fmt_secs(s.p50),
+                fmt_secs(s.p95),
+            ]);
+            report.case(
+                BenchCase::from_parts(
+                    &format!("io={} conns={conns}", io.as_str()),
+                    edges_per_request,
+                    &s,
+                    req_per_sec * edges_per_request,
+                )
+                .with_extra("io", Json::Str(io.as_str().to_string()))
+                .with_extra("conns", Json::Int(conns as i64))
+                .with_extra("req_per_conn", Json::Int(per_conn as i64))
+                .with_extra("req_per_sec", Json::Num(req_per_sec))
+                .with_extra("p95_ms", Json::Num(s.p95 * 1e3)),
+            );
+            handle.shutdown();
+        }
+    }
+    tcp_table.print();
 
     let path = report.write()?;
     println!("wrote {} ({} cases)", path.display(), report.cases.len());

@@ -110,6 +110,11 @@ pub struct ClusterOptions {
     /// Whether ranks replicate the weights (feature partitioning) or
     /// hold row slices of them (weight partitioning).
     pub partition: PartitionScheme,
+    /// Per-connection socket I/O deadline: a rank that stops making
+    /// read/write progress for this long fails the in-flight collective
+    /// (recorded as a rank-death flight event) instead of hanging the
+    /// coordinator on a wedged-but-connected peer. `None` waits forever.
+    pub io_timeout: Option<std::time::Duration>,
 }
 
 impl Default for ClusterOptions {
@@ -118,6 +123,7 @@ impl Default for ClusterOptions {
             wire: WireFormat::Bin,
             chunk_rows: None,
             partition: PartitionScheme::Features,
+            io_timeout: None,
         }
     }
 }
@@ -181,8 +187,11 @@ impl ClusterCoordinator {
         }
         let mut clients = Vec::with_capacity(addrs.len());
         for (rank, addr) in addrs.iter().enumerate() {
-            let client = ClusterClient::connect(*addr, opts.wire)
+            let mut client = ClusterClient::connect(*addr, opts.wire)
                 .with_context(|| format!("connecting worker rank {rank}"))?;
+            client
+                .set_io_timeout(opts.io_timeout)
+                .with_context(|| format!("setting worker rank {rank} I/O deadline"))?;
             if opts.partition == PartitionScheme::Weights && !client.supports_weights() {
                 bail!(
                     "worker rank {rank} speaks a protocol without weight partitioning; \

@@ -100,6 +100,7 @@
 use std::fmt;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -142,7 +143,7 @@ const FRAME_KIND_RESULT_TRACED: u8 = 6;
 const FRAME_KIND_EXCHANGE: u8 = 7;
 const FRAME_KIND_PARTIAL: u8 = 8;
 /// magic + kind + u32 payload length.
-const FRAME_HEADER_BYTES: usize = 4 + 1 + 4;
+pub(crate) const FRAME_HEADER_BYTES: usize = 4 + 1 + 4;
 
 /// Frame cap while no model is negotiated: control verbs are tiny, so
 /// anything past this is hostile or corrupt.
@@ -677,47 +678,16 @@ fn parse_f64_array(j: &Json) -> Result<Vec<f64>> {
 // Capped line reads
 // ---------------------------------------------------------------------------
 
-/// `read_line` with a hard byte cap: a peer that streams one giant line
-/// (or never sends a newline) gets an error instead of growing the
-/// buffer without bound. Returns the bytes consumed (0 on EOF).
-pub fn read_line_capped(r: &mut impl BufRead, line: &mut String, cap: usize) -> Result<usize> {
-    let mut buf: Vec<u8> = Vec::new();
-    loop {
-        let (done, used) = {
-            let chunk = r.fill_buf().context("reading wire line")?;
-            if chunk.is_empty() {
-                (true, 0)
-            } else {
-                match chunk.iter().position(|&b| b == b'\n') {
-                    Some(i) => {
-                        buf.extend_from_slice(&chunk[..=i]);
-                        (true, i + 1)
-                    }
-                    None => {
-                        buf.extend_from_slice(chunk);
-                        (false, chunk.len())
-                    }
-                }
-            }
-        };
-        r.consume(used);
-        if buf.len() > cap {
-            bail!("wire line of {}+ bytes exceeds the {cap}-byte frame cap", buf.len());
-        }
-        if done {
-            break;
-        }
-    }
-    let n = buf.len();
-    line.push_str(std::str::from_utf8(&buf).context("wire line is not UTF-8")?);
-    Ok(n)
-}
+/// Bounds-checked line framing, shared with the serving front-end — the
+/// implementation lives in [`crate::util::netio`]; this re-export keeps
+/// the cluster-wire call sites and public path stable.
+pub use crate::util::netio::read_line_capped;
 
 // ---------------------------------------------------------------------------
 // spdnn-clu1 binary frames
 // ---------------------------------------------------------------------------
 
-fn frame_header(kind: u8, payload_len: usize) -> Result<[u8; FRAME_HEADER_BYTES]> {
+pub(crate) fn frame_header(kind: u8, payload_len: usize) -> Result<[u8; FRAME_HEADER_BYTES]> {
     let len = u32::try_from(payload_len).map_err(|_| {
         anyhow!("frame payload of {payload_len} bytes exceeds the u32 length prefix")
     })?;
@@ -728,7 +698,7 @@ fn frame_header(kind: u8, payload_len: usize) -> Result<[u8; FRAME_HEADER_BYTES]
     Ok(h)
 }
 
-fn read_frame(r: &mut impl BufRead, cap: usize) -> Result<(u8, Vec<u8>)> {
+pub(crate) fn read_frame(r: &mut impl BufRead, cap: usize) -> Result<(u8, Vec<u8>)> {
     let mut header = [0u8; FRAME_HEADER_BYTES];
     r.read_exact(&mut header).context("reading binary frame header")?;
     if &header[..4] != FRAME_MAGIC {
@@ -755,7 +725,7 @@ const ENC_UNIFORM: u8 = 1;
 /// almost always qualify — and a bitmap plus one f32 is ~32× smaller
 /// than dense. Bit-level comparison keeps the round trip exact (a -0.0
 /// background falls back to dense).
-fn uniform_value(features: &[f32]) -> Option<f32> {
+pub(crate) fn uniform_value(features: &[f32]) -> Option<f32> {
     let mut v = 0u32;
     for &x in features {
         let b = x.to_bits();
@@ -772,7 +742,7 @@ fn uniform_value(features: &[f32]) -> Option<f32> {
     Some(f32::from_bits(v))
 }
 
-fn panel_encoded_len(features: &[f32], uniform: Option<f32>) -> usize {
+pub(crate) fn panel_encoded_len(features: &[f32], uniform: Option<f32>) -> usize {
     1 + match uniform {
         Some(_) => 4 + features.len().div_ceil(8),
         None => features.len() * 4,
@@ -782,7 +752,11 @@ fn panel_encoded_len(features: &[f32], uniform: Option<f32>) -> usize {
 /// Write `u8 enc` + the encoded panel, straight from the caller's
 /// slice (dense data streams through a fixed staging buffer; the
 /// uniform bitmap is 1/8th of the value count).
-fn write_panel(w: &mut impl Write, features: &[f32], uniform: Option<f32>) -> Result<()> {
+pub(crate) fn write_panel(
+    w: &mut impl Write,
+    features: &[f32],
+    uniform: Option<f32>,
+) -> Result<()> {
     match uniform {
         Some(v) => {
             let mut buf = Vec::with_capacity(1 + 4 + features.len().div_ceil(8));
@@ -811,7 +785,7 @@ fn write_panel(w: &mut impl Write, features: &[f32], uniform: Option<f32>) -> Re
     }
 }
 
-fn read_panel(c: &mut ByteCursor<'_>, n: usize) -> Result<Vec<f32>> {
+pub(crate) fn read_panel(c: &mut ByteCursor<'_>, n: usize) -> Result<Vec<f32>> {
     match c.u8()? {
         ENC_DENSE => c.f32s(n),
         ENC_UNIFORM => {
@@ -1271,6 +1245,10 @@ pub struct ClusterClient {
     /// The protocol version the worker's hello answered; gates the
     /// traced v3 encodings ([`ClusterClient::supports_trace`]).
     peer_version: i64,
+    /// The rank's address — names the corpse in timeout flight events.
+    addr: SocketAddr,
+    /// Socket read/write deadline set by [`ClusterClient::set_io_timeout`].
+    io_timeout: Option<Duration>,
 }
 
 impl ClusterClient {
@@ -1294,6 +1272,8 @@ impl ClusterClient {
             wire,
             cap: CONTROL_FRAME_CAP,
             peer_version: CLUSTER_PROTOCOL_VERSION,
+            addr,
+            io_timeout: None,
         };
         match client.call(&ClusterRequest::Hello { wire })? {
             ClusterReply::Hello { version, wire: got } => {
@@ -1417,6 +1397,48 @@ impl ClusterClient {
         self.peer_version >= CLUSTER_PROTOCOL_METRICS_MIN
     }
 
+    /// Set (or clear) a socket read/write deadline for every subsequent
+    /// collective on this connection. A rank that stops making I/O
+    /// progress for this long fails the in-flight call — surfaced as a
+    /// [`flight::RANK_DEATH`] event naming the rank — instead of
+    /// hanging the coordinator forever on a wedged-but-connected peer.
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.reader
+            .get_ref()
+            .inner
+            .set_read_timeout(timeout)
+            .context("setting cluster read timeout")?;
+        self.writer
+            .get_ref()
+            .inner
+            .set_write_timeout(timeout)
+            .context("setting cluster write timeout")?;
+        self.io_timeout = timeout;
+        Ok(())
+    }
+
+    /// Run one wire interaction; if it fails on an I/O deadline, record
+    /// the rank-death flight event before handing the error up (the
+    /// caller's rank-failure path then lame-ducks as for a dead peer).
+    fn guard<T>(&mut self, f: impl FnOnce(&mut Self) -> Result<T>) -> Result<T> {
+        match f(self) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                if error_is_timeout(&e) {
+                    let (addr, timeout) = (self.addr, self.io_timeout);
+                    flight::record(flight::RANK_DEATH, || {
+                        format!(
+                            "rank at {addr} made no socket progress within {:.0}ms; \
+                             treating it as dead",
+                            timeout.unwrap_or_default().as_secs_f64() * 1e3
+                        )
+                    });
+                }
+                Err(e)
+            }
+        }
+    }
+
     /// Bytes written to the socket so far (flushed requests only).
     pub fn bytes_sent(&self) -> u64 {
         self.writer.get_ref().bytes
@@ -1429,9 +1451,11 @@ impl ClusterClient {
 
     /// Send one request and block for its reply.
     pub fn call(&mut self, req: &ClusterRequest) -> Result<ClusterReply> {
-        write_request(&mut self.writer, req, self.wire)?;
-        self.writer.flush().context("flushing cluster request")?;
-        self.read_one_reply()
+        self.guard(|c| {
+            write_request(&mut c.writer, req, c.wire)?;
+            c.writer.flush().context("flushing cluster request")?;
+            c.read_one_reply()
+        })
     }
 
     /// Scatter one shard straight from the caller's feature slice —
@@ -1450,33 +1474,35 @@ impl ClusterClient {
         // Never put traced encodings on a connection whose peer did not
         // negotiate them; the shard still runs, just untraced.
         let trace = if self.supports_trace() { trace } else { TraceId::NONE };
-        match chunk_rows {
-            None => {
-                write_shard(&mut self.writer, self.wire, start, features, trace)?;
-                self.writer.flush().context("flushing shard")?;
-            }
-            Some(rows_per_chunk) => {
-                let rows_per_chunk = rows_per_chunk.max(1);
-                let rows = features.len() / n;
-                let chunks = rows.div_ceil(rows_per_chunk);
-                let begin = ClusterRequest::ShardBegin { start, rows, chunks, trace };
-                write_request(&mut self.writer, &begin, self.wire)?;
-                self.writer.flush().context("flushing shard-begin")?;
-                for (i, chunk) in features.chunks(rows_per_chunk * n).enumerate() {
-                    write_shard_chunk(
-                        &mut self.writer,
-                        self.wire,
-                        i,
-                        start + i * rows_per_chunk,
-                        chunk,
-                    )?;
-                    // Eager flush: the worker overlaps compute on this
-                    // chunk with the transfer of the next one.
-                    self.writer.flush().context("flushing shard chunk")?;
+        self.guard(|c| {
+            match chunk_rows {
+                None => {
+                    write_shard(&mut c.writer, c.wire, start, features, trace)?;
+                    c.writer.flush().context("flushing shard")?;
+                }
+                Some(rows_per_chunk) => {
+                    let rows_per_chunk = rows_per_chunk.max(1);
+                    let rows = features.len() / n;
+                    let chunks = rows.div_ceil(rows_per_chunk);
+                    let begin = ClusterRequest::ShardBegin { start, rows, chunks, trace };
+                    write_request(&mut c.writer, &begin, c.wire)?;
+                    c.writer.flush().context("flushing shard-begin")?;
+                    for (i, chunk) in features.chunks(rows_per_chunk * n).enumerate() {
+                        write_shard_chunk(
+                            &mut c.writer,
+                            c.wire,
+                            i,
+                            start + i * rows_per_chunk,
+                            chunk,
+                        )?;
+                        // Eager flush: the worker overlaps compute on this
+                        // chunk with the transfer of the next one.
+                        c.writer.flush().context("flushing shard chunk")?;
+                    }
                 }
             }
-        }
-        self.read_one_reply()
+            c.read_one_reply()
+        })
     }
 
     /// Weight-sharded mode: scatter one layer's full live panel
@@ -1489,9 +1515,11 @@ impl ClusterClient {
         features: &[f32],
         trace: TraceId,
     ) -> Result<ClusterReply> {
-        write_exchange(&mut self.writer, self.wire, layer, features, trace)?;
-        self.writer.flush().context("flushing exchange")?;
-        self.read_one_reply()
+        self.guard(|c| {
+            write_exchange(&mut c.writer, c.wire, layer, features, trace)?;
+            c.writer.flush().context("flushing exchange")?;
+            c.read_one_reply()
+        })
     }
 
     fn read_one_reply(&mut self) -> Result<ClusterReply> {
@@ -1500,6 +1528,19 @@ impl ClusterClient {
             None => bail!("worker closed the connection"),
         }
     }
+}
+
+/// Whether an error chain bottoms out in a socket deadline expiry.
+/// `WouldBlock` is included: reads against a timeout-configured stream
+/// report it on some platforms.
+fn error_is_timeout(e: &anyhow::Error) -> bool {
+    e.chain().any(|cause| match cause.downcast_ref::<std::io::Error>() {
+        Some(io) => matches!(
+            io.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ),
+        None => false,
+    })
 }
 
 #[cfg(test)]

@@ -92,11 +92,34 @@ pub struct Response {
     pub latency: Duration,
 }
 
+/// How a finished request reaches whoever asked for it. The blocking
+/// front-end parks on a channel; the reactor hands in a callback so the
+/// batcher thread can notify the event loop without a thread per
+/// in-flight request. Dropping an un-sent `Reply` drops whatever the
+/// callback captured (admission tickets, connection handles), so a
+/// panel lost to a dying batcher still releases its resources.
+pub enum Reply {
+    Channel(mpsc::Sender<Result<Response>>),
+    Callback(Box<dyn FnOnce(Result<Response>) + Send>),
+}
+
+impl Reply {
+    /// Deliver the outcome; a gone receiver is not an error.
+    pub fn send(self, r: Result<Response>) {
+        match self {
+            Reply::Channel(tx) => {
+                let _ = tx.send(r);
+            }
+            Reply::Callback(f) => f(r),
+        }
+    }
+}
+
 struct Request {
     features: Vec<f32>,
     enqueued: Instant,
     trace: TraceId,
-    resp: mpsc::Sender<Result<Response>>,
+    resp: Reply,
 }
 
 /// A running inference server.
@@ -131,16 +154,23 @@ impl InferenceServer {
         features: Vec<f32>,
         trace: TraceId,
     ) -> Result<mpsc::Receiver<Result<Response>>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.submit_reply(features, trace, Reply::Channel(rtx))?;
+        Ok(rrx)
+    }
+
+    /// Submit one request whose outcome is delivered through `reply`
+    /// instead of a fresh channel — the reactor's non-blocking path.
+    pub fn submit_reply(&self, features: Vec<f32>, trace: TraceId, reply: Reply) -> Result<()> {
         if features.len() != self.neurons {
             bail!("feature vector has {} values, model expects {}", features.len(), self.neurons);
         }
-        let (rtx, rrx) = mpsc::channel();
         self.tx
             .as_ref()
             .expect("server running")
-            .send(Request { features, enqueued: Instant::now(), trace, resp: rtx })
+            .send(Request { features, enqueued: Instant::now(), trace, resp: reply })
             .map_err(|_| anyhow!("server stopped"))?;
-        Ok(rrx)
+        Ok(())
     }
 
     /// Blocking classify.
@@ -227,7 +257,7 @@ fn serve_loop(
         Err(e) => {
             // Fail every request with the construction error.
             while let Ok(req) = rx.recv() {
-                let _ = req.resp.send(Err(anyhow!("backend init failed: {e:#}")));
+                req.resp.send(Err(anyhow!("backend init failed: {e:#}")));
             }
             return;
         }
@@ -266,13 +296,13 @@ fn process_panel(model: &ServedModel, exec: &mut ServeExec, panel: Vec<Request>)
                     batch_size: count,
                     latency: req.enqueued.elapsed(),
                 };
-                let _ = req.resp.send(Ok(resp));
+                req.resp.send(Ok(resp));
             }
         }
         Err(e) => {
             let msg = format!("{e:#}");
             for req in panel {
-                let _ = req.resp.send(Err(anyhow!("inference failed: {msg}")));
+                req.resp.send(Err(anyhow!("inference failed: {msg}")));
             }
         }
     }

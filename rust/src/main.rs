@@ -42,8 +42,8 @@ use spdnn::obs::trace as otr;
 use spdnn::obs::TraceId;
 use spdnn::runtime::Manifest;
 use spdnn::server::{
-    AdmissionConfig, Client, ClusterServeConfig, ReferencePanel, Request, Server, ServerConfig,
-    WireResponse,
+    AdmissionConfig, Client, ClusterServeConfig, IoMode, ReferencePanel, Request, Server,
+    ServerConfig, WireResponse,
 };
 use spdnn::simulator::gpu_model::{a100, v100, KernelParams};
 use spdnn::simulator::network::summit;
@@ -104,14 +104,19 @@ fn print_help() {
                   --slice S --tune-cache FILE\n\
          Serve:   --host H --port P --replicas R --max-batch B --max-wait-ms MS\n\
                   --queue-cap N --deadline-ms MS\n\
+                  --io reactor|threads (client I/O engine; default reactor:\n\
+                  one poll(2) thread multiplexes every connection)\n\
                   --ranks N (execute replicas on N cluster-worker processes;\n\
                   0 = in-process) --wire json|bin --chunk ROWS\n\
                   --partition features|weights (how ranks split the model)\n\
+                  --io-timeout-ms MS (per-socket rank deadline; 0 = forever)\n\
                   --worker-addrs H:P,H:P (adopt pre-started cluster-workers)\n\
                   serve-smoke --ranks N --requests R --stats-out FILE  (loopback\n\
                   load + bit-identity gate vs in-process sliced serving)\n\
+                  --client-wire json|bin (smoke client encoding; bin negotiates\n\
+                  the v2 binary infer frames via {{\"op\":\"hello\"}})\n\
                   watch HOST:PORT [--interval-ms MS] [--count N]  (poll health +\n\
-                  stats into a refreshing table; count 0 = forever)\n\
+                  stats over one persistent connection; count 0 = forever)\n\
          Obs:     --trace-out FILE on serve|serve-smoke|cluster-run (Chrome\n\
                   trace-event JSON for chrome://tracing / Perfetto);\n\
                   --metrics-out FILE on serve|serve-smoke|cluster-run (fleet-\n\
@@ -125,6 +130,8 @@ fn print_help() {
                   --partition features|weights (replicate weights and split the\n\
                   feature panel, or split weight rows and exchange activations\n\
                   per layer; default features)\n\
+                  --io-timeout-ms MS (fail a silent rank socket after MS\n\
+                  instead of hanging the collective; 0 = wait forever)\n\
                   cluster-worker --listen H:P  (one rank; announces its address)\n\
          IO:      --config FILE --data DIR --stream\n\
          Sim:     --gpus LIST --gpu v100|a100\n\
@@ -192,6 +199,16 @@ fn duration_ms_arg(args: &Args, key: &str, default_ms: f64) -> Result<std::time:
         bail!("--{key} must be a non-negative number of milliseconds, got {ms}");
     }
     Ok(std::time::Duration::from_secs_f64(ms / 1e3))
+}
+
+/// `--io-timeout-ms MS` on the cluster paths: per-socket deadline for
+/// coordinator-to-rank I/O. A rank that makes no socket progress within
+/// the window fails the collective (recorded as a rank death in the
+/// flight recorder) instead of hanging it. 0 (the default) waits
+/// forever — the pre-deadline behaviour.
+fn cluster_io_timeout(args: &Args) -> Result<Option<std::time::Duration>> {
+    let d = duration_ms_arg(args, "io-timeout-ms", 0.0)?;
+    Ok(if d.is_zero() { None } else { Some(d) })
 }
 
 /// Shared `--backend` parsing for the serving subcommands. Serving rides
@@ -288,6 +305,9 @@ fn serve_cluster_config(args: &Args) -> Result<Option<ClusterServeConfig>> {
     let wire = WireFormat::parse(args.get_or("wire", "bin"))?;
     let chunk = args.usize_or("chunk", 0)?;
     let partition = PartitionScheme::parse(args.get_or("partition", "features"))?;
+    // Consumed before the in-process early return so `args.finish()`
+    // never trips over the flag when --ranks is 0.
+    let io_timeout = cluster_io_timeout(args)?;
     let addrs = match args.get("worker-addrs") {
         Some(list) => Some(
             list.split(',')
@@ -326,6 +346,7 @@ fn serve_cluster_config(args: &Args) -> Result<Option<ClusterServeConfig>> {
             wire,
             chunk_rows: if chunk == 0 { None } else { Some(chunk) },
             partition,
+            io_timeout,
         },
         program,
         addrs,
@@ -354,6 +375,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_wait = duration_ms_arg(args, "max-wait-ms", 2.0)?;
     let queue_cap = args.usize_or("queue-cap", 256)?;
     let deadline = duration_ms_arg(args, "deadline-ms", 250.0)?;
+    let io = IoMode::parse(args.get_or("io", "reactor"))?;
     let trace_out = args.get("trace-out").map(PathBuf::from);
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
     let flight_out = args.get("flight-out").map(PathBuf::from);
@@ -370,6 +392,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         replicas,
         policy: BatchPolicy { max_batch, max_wait },
         admission: AdmissionConfig { queue_cap, deadline, ..Default::default() },
+        io,
         trace_out,
         metrics_out,
         flight_out,
@@ -404,7 +427,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => replicas,
     };
     println!(
-        "spdnn server on {} — {} replicas{}, model {}x{} k={}, {} reference rows",
+        "spdnn server on {} (io={io}) — {} replicas{}, model {}x{} k={}, {} reference rows",
         handle.addr(),
         effective_replicas,
         match &cluster {
@@ -427,7 +450,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!(
         "protocol: JSON lines, e.g.  {{\"op\":\"infer\",\"row\":0}}  {{\"op\":\"stats\"}}  \
-         {{\"op\":\"metrics\"}}  {{\"op\":\"health\"}}  {{\"op\":\"flight\"}}  {{\"op\":\"shutdown\"}}"
+         {{\"op\":\"metrics\"}}  {{\"op\":\"health\"}}  {{\"op\":\"flight\"}}  {{\"op\":\"shutdown\"}};\n\
+         \x20         {{\"op\":\"hello\"}} negotiates the length-prefixed binary infer wire (v2)"
     );
     let report = handle.wait();
     println!(
@@ -449,6 +473,8 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     let replicas = args.usize_or("replicas", 2)?;
     let max_batch = args.usize_or("max-batch", 8)?;
     let max_wait = duration_ms_arg(args, "max-wait-ms", 2.0)?;
+    let io = IoMode::parse(args.get_or("io", "reactor"))?;
+    let client_wire = WireFormat::parse(args.get_or("client-wire", "bin"))?;
     let stats_out = args.get("stats-out").map(PathBuf::from);
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
     let trace_out = args.get("trace-out").map(PathBuf::from);
@@ -482,6 +508,7 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
         port: 0,
         replicas,
         policy: BatchPolicy { max_batch, max_wait },
+        io,
         trace_out: trace_out.clone(),
         flight_out: flight_out.clone(),
         ..Default::default()
@@ -496,7 +523,7 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
         Some(reference),
     )?;
     println!(
-        "serve-smoke: {} requests against {} ({} replicas over {} ranks, wire={})",
+        "serve-smoke: {} requests against {} (io={io}, {} replicas over {} ranks, wire={})",
         requests,
         handle.addr(),
         replicas,
@@ -504,7 +531,11 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
         cluster.options.wire
     );
 
-    let mut client = Client::connect(handle.addr())?;
+    // One persistent connection for the whole run; `--client-wire bin`
+    // (the default) negotiates the length-prefixed infer frames via
+    // {"op":"hello"} and downgrades to JSON against a pre-v2 server.
+    let mut client = Client::connect_wire(handle.addr(), client_wire)?;
+    println!("  client wire: {} (asked for {client_wire})", client.wire());
     let mut mismatches = 0usize;
     let mut protocol_errors = 0usize;
     for i in 0..requests {
@@ -623,6 +654,10 @@ fn cmd_watch(args: &Args) -> Result<()> {
 
     let clear = std::io::IsTerminal::is_terminal(&std::io::stdout());
     let mut tick = 0usize;
+    // One connection reused across ticks (it negotiates the binary wire
+    // where available, though the control verbs are JSON either way):
+    // polling costs a round trip, not a fresh TCP handshake.
+    let mut client: Option<Client> = None;
     loop {
         tick += 1;
         if clear {
@@ -630,8 +665,15 @@ fn cmd_watch(args: &Args) -> Result<()> {
             // in place instead of scrolling.
             print!("\x1b[H\x1b[J");
         }
-        // One connection per tick: the watch survives server restarts.
-        if let Err(e) = watch_tick(addr) {
+        // A failure on a *reused* connection gets one retry on a fresh
+        // one, so a server restart between ticks reads as a reconnect,
+        // not an outage.
+        let reused = client.is_some();
+        let mut outcome = watch_poll(&mut client, addr);
+        if outcome.is_err() && reused {
+            outcome = watch_poll(&mut client, addr);
+        }
+        if let Err(e) = outcome {
             println!("watch {addr_str}: {e:#}");
             if count == 0 {
                 // An unattended watch on a stopped server should end,
@@ -647,10 +689,22 @@ fn cmd_watch(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One watch poll over the persistent connection: connect if there is
+/// none, run the tick, and hand the connection back only on success (an
+/// errored connection is dropped so the next poll reconnects).
+fn watch_poll(client: &mut Option<Client>, addr: std::net::SocketAddr) -> Result<()> {
+    let mut c = match client.take() {
+        Some(c) => c,
+        None => Client::connect_wire(addr, WireFormat::Bin)?,
+    };
+    watch_tick(&mut c)?;
+    *client = Some(c);
+    Ok(())
+}
+
 /// One poll of the watched server: health verdict header, SLO numbers,
 /// then the per-replica / per-rank liveness table.
-fn watch_tick(addr: std::net::SocketAddr) -> Result<()> {
-    let mut client = Client::connect(addr)?;
+fn watch_tick(client: &mut Client) -> Result<()> {
     let health = match client.call(&Request::Health)? {
         WireResponse::Health(h) => h,
         other => bail!("health verb failed: {other:?}"),
@@ -785,6 +839,7 @@ fn cmd_cluster_run(args: &Args) -> Result<()> {
     let wire = WireFormat::parse(args.get_or("wire", "bin"))?;
     let chunk = args.usize_or("chunk", 0)?;
     let partition = PartitionScheme::parse(args.get_or("partition", "features"))?;
+    let io_timeout = cluster_io_timeout(args)?;
     let trace_out = args.get("trace-out").map(PathBuf::from);
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
     let flight_out = args.get("flight-out").map(PathBuf::from);
@@ -803,6 +858,7 @@ fn cmd_cluster_run(args: &Args) -> Result<()> {
         wire,
         chunk_rows: if chunk == 0 { None } else { Some(chunk) },
         partition,
+        io_timeout,
     };
 
     println!(

@@ -49,6 +49,9 @@ pub const RANK_DEATH: &str = "rank-death";
 pub const LAME_DUCK: &str = "lame-duck";
 /// The server began draining (operator shutdown or handle drop).
 pub const DRAIN: &str = "drain";
+/// A client connection stalled past its I/O deadline (slowloris read,
+/// or a peer not draining its responses) and was dropped.
+pub const CONN_STALLED: &str = "conn-stalled";
 /// Connect-time negotiation settled on a downgraded wire/protocol.
 pub const HELLO_DOWNGRADE: &str = "hello-downgrade";
 /// Connect-time negotiation failed outright.

@@ -60,7 +60,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::cluster::{
     ClusterCoordinator, ClusterOptions, Launcher, LauncherConfig, ModelSpec, RankHealth,
 };
-use crate::coordinator::batcher::{collect_panel, BatchPolicy, Response};
+use crate::coordinator::batcher::{collect_panel, BatchPolicy, Reply, Response};
 use crate::coordinator::NativeSpec;
 use crate::log_warn;
 use crate::obs::flight::{self, FlightEvent};
@@ -194,7 +194,7 @@ struct PanelRequest {
     features: Vec<f32>,
     enqueued: Instant,
     trace: TraceId,
-    resp: mpsc::Sender<Result<Response>>,
+    resp: Reply,
 }
 
 /// One worker rank's telemetry as seen from its serving replica: the
@@ -289,15 +289,22 @@ impl ClusterReplica {
         features: Vec<f32>,
         trace: TraceId,
     ) -> Result<mpsc::Receiver<Result<Response>>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.submit_reply(features, trace, Reply::Channel(rtx))?;
+        Ok(rrx)
+    }
+
+    /// Submit one request answered through `reply` instead of a fresh
+    /// channel — the reactor's non-blocking path.
+    pub fn submit_reply(&self, features: Vec<f32>, trace: TraceId, reply: Reply) -> Result<()> {
         if features.len() != self.neurons {
             bail!("feature vector has {} values, model expects {}", features.len(), self.neurons);
         }
-        let (rtx, rrx) = mpsc::channel();
         let guard = self.tx.lock().expect("replica tx lock");
         let tx = guard.as_ref().ok_or_else(|| anyhow!("replica stopped"))?;
-        tx.send(PanelRequest { features, enqueued: Instant::now(), trace, resp: rtx })
+        tx.send(PanelRequest { features, enqueued: Instant::now(), trace, resp: reply })
             .map_err(|_| anyhow!("replica stopped"))?;
-        Ok(rrx)
+        Ok(())
     }
 
     /// Whether this replica has been degraded by a rank failure (the
@@ -352,7 +359,7 @@ impl Drop for ClusterReplica {
 
 fn fail_panel(panel: Vec<PanelRequest>, message: &str) {
     for req in panel {
-        let _ = req.resp.send(Err(anyhow!("{message}")));
+        req.resp.send(Err(anyhow!("{message}")));
     }
 }
 
@@ -470,7 +477,7 @@ fn replica_loop(
                     } else {
                         vec![0.0f32; neurons]
                     };
-                    let _ = req.resp.send(Ok(Response {
+                    req.resp.send(Ok(Response {
                         active,
                         activations,
                         batch_size: count,

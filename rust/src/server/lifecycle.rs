@@ -1,8 +1,12 @@
 //! Server lifecycle: bind, accept, serve, drain, shutdown.
 //!
-//! `Server::start` brings up the replica set and a non-blocking accept
-//! loop; each connection gets its own thread running the JSON-lines
-//! protocol. Shutdown is graceful by construction:
+//! `Server::start` brings up the replica set and one of two I/O
+//! engines ([`IoMode`]): the default readiness-driven reactor
+//! (`server::reactor` — one thread multiplexes every client socket) or
+//! the legacy thread-per-connection path. Both frame messages through
+//! the same [`protocol::extract_message`] and serialize through the
+//! same `response_bytes`, so their wire behavior is identical by
+//! construction. Shutdown is graceful either way:
 //!
 //! 1. the stop flag halts the accept loop (the listener closes, new
 //!    connections are refused) and `begin_drain` makes admission reject
@@ -47,9 +51,11 @@ use crate::obs::trace::{self as tr, TraceId};
 use crate::util::json::Json;
 use crate::{log_info, log_warn};
 
-use super::admission::{AdmissionConfig, AdmissionController};
+use super::admission::{AdmissionConfig, AdmissionController, Ticket};
 use super::cluster_backend::{ClusterFleet, ClusterServeConfig};
-use super::protocol::{InferInput, InferRequest, Request, WireResponse};
+use super::protocol::{
+    self, InferInput, InferRequest, Request, ServeMsg, WireResponse, PROTOCOL_VERSION,
+};
 use super::router::ReplicaRouter;
 use super::stats::ServerStats;
 
@@ -57,11 +63,12 @@ use super::stats::ServerStats;
 const READ_POLL: Duration = Duration::from_millis(100);
 /// Longest `shutdown`/`wait` blocks for in-flight requests to finish.
 const DRAIN_LIMIT: Duration = Duration::from_secs(10);
-/// Grace period for connection threads to notice the stop flag.
-const CONN_GRACE: Duration = Duration::from_secs(2);
-/// Hard cap on one buffered protocol line (a 65536-wide feature vector is
-/// ~1.5 MiB of JSON; a peer exceeding this is misbehaving).
-const MAX_LINE_BYTES: usize = 16 << 20;
+/// Grace period for connection threads (or the reactor's drain pass) to
+/// notice the stop flag.
+pub(crate) const CONN_GRACE: Duration = Duration::from_secs(2);
+/// Hard cap on one buffered protocol message (a 65536-wide feature
+/// vector is ~1.5 MiB of JSON; a peer exceeding this is misbehaving).
+pub(crate) const MAX_LINE_BYTES: usize = 16 << 20;
 /// Longest a response write may block on a slow-reading client before the
 /// connection is dropped (otherwise a non-reading peer pins its thread
 /// through shutdown).
@@ -73,6 +80,41 @@ const REAP_LIMIT: Duration = Duration::from_secs(60);
 /// after their shutdown ops (cluster mode only).
 const WORKER_EXIT_LIMIT: Duration = Duration::from_secs(10);
 
+/// Which I/O engine drives client connections.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoMode {
+    /// One OS thread per accepted connection (the legacy path, kept
+    /// until the reactor's bit-identity has soaked in production).
+    Threads,
+    /// Readiness-driven reactor: one thread multiplexes every client
+    /// socket through poll(2); idle and slow connections cost no
+    /// threads.
+    Reactor,
+}
+
+impl IoMode {
+    pub fn parse(s: &str) -> Result<IoMode> {
+        match s {
+            "threads" => Ok(IoMode::Threads),
+            "reactor" => Ok(IoMode::Reactor),
+            other => bail!("unknown io mode {other:?} (threads|reactor)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            IoMode::Threads => "threads",
+            IoMode::Reactor => "reactor",
+        }
+    }
+}
+
+impl std::fmt::Display for IoMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Everything `serve` needs beyond the model itself.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -83,9 +125,21 @@ pub struct ServerConfig {
     pub replicas: usize,
     pub policy: BatchPolicy,
     pub admission: AdmissionConfig,
-    /// Cap on concurrent connections (each costs one OS thread); above it
-    /// new connections get an error line and are closed immediately.
+    /// Cap on concurrent connections (each costs one OS thread under
+    /// `IoMode::Threads`, a few hundred bytes of reactor state under
+    /// `IoMode::Reactor`); above it new connections get an error line
+    /// and are closed immediately.
     pub max_conns: usize,
+    /// I/O engine for client connections.
+    pub io: IoMode,
+    /// Reactor only: longest a partially-received message may sit
+    /// without further bytes before the connection is dropped (the
+    /// slowloris guard). Idle connections — no partial message — are
+    /// never killed by this.
+    pub read_stall: Duration,
+    /// Reactor only: longest a queued response may sit without the
+    /// peer accepting bytes before the connection is dropped.
+    pub write_stall: Duration,
     /// When set, span recording is enabled for the server's lifetime and
     /// a Chrome trace-event JSON is written here on shutdown.
     pub trace_out: Option<PathBuf>,
@@ -106,6 +160,9 @@ impl Default for ServerConfig {
             policy: BatchPolicy::default(),
             admission: AdmissionConfig::default(),
             max_conns: 1024,
+            io: IoMode::Reactor,
+            read_stall: Duration::from_secs(30),
+            write_stall: WRITE_LIMIT,
             trace_out: None,
             metrics_out: None,
             flight_out: None,
@@ -135,18 +192,19 @@ impl ReferencePanel {
     }
 }
 
-/// State shared between the accept loop and every connection thread.
-struct Shared {
-    router: ReplicaRouter,
-    admission: Arc<AdmissionController>,
-    stats: ServerStats,
-    reference: Option<ReferencePanel>,
+/// State shared between the I/O engine (accept loop + connection
+/// threads, or the reactor) and the server handle.
+pub(crate) struct Shared {
+    pub(crate) router: ReplicaRouter,
+    pub(crate) admission: Arc<AdmissionController>,
+    pub(crate) stats: ServerStats,
+    pub(crate) reference: Option<ReferencePanel>,
     /// Edges one answered request traverses (layers × k × neurons) —
     /// the TeraEdges/s numerator in `{"op":"health"}`.
-    edges_per_row: u64,
-    stop: AtomicBool,
-    conns: AtomicUsize,
-    max_conns: usize,
+    pub(crate) edges_per_row: u64,
+    pub(crate) stop: AtomicBool,
+    pub(crate) conns: AtomicUsize,
+    pub(crate) max_conns: usize,
     /// Worker-rank processes behind a cluster-backed server; taken by
     /// the shutdown path after the replicas have fenced their scatters.
     fleet: Mutex<Option<ClusterFleet>>,
@@ -244,7 +302,16 @@ impl Server {
         });
         let accept = {
             let shared = shared.clone();
-            std::thread::spawn(move || accept_loop(listener, shared))
+            match cfg.io {
+                IoMode::Threads => std::thread::spawn(move || accept_loop(listener, shared)),
+                IoMode::Reactor => {
+                    let rcfg = super::reactor::ReactorConfig {
+                        read_stall: cfg.read_stall,
+                        write_stall: cfg.write_stall,
+                    };
+                    std::thread::spawn(move || super::reactor::run(listener, shared, rcfg))
+                }
+            }
         };
         Ok(ServerHandle { addr, shared, accept: Some(accept) })
     }
@@ -426,9 +493,11 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
                 }
                 let shared = shared.clone();
                 shared.conns.fetch_add(1, Ordering::AcqRel);
+                shared.stats.conn_opened();
                 std::thread::spawn(move || {
                     let _ = handle_connection(stream, &shared);
                     shared.conns.fetch_sub(1, Ordering::AcqRel);
+                    shared.stats.conn_closed();
                 });
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
@@ -440,6 +509,32 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     // Dropping the listener closes the socket: new connects are refused.
 }
 
+/// Turn one frame off the serve wire into a request. Only infer has a
+/// frame form today; anything else is a protocol violation.
+pub(crate) fn parse_frame_request(kind: u8, payload: &[u8]) -> Result<Request> {
+    match kind {
+        protocol::FRAME_KIND_INFER_REQ => {
+            Ok(Request::Infer(protocol::decode_infer_frame(payload)?))
+        }
+        other => bail!("unexpected frame kind {other} in a serve request"),
+    }
+}
+
+/// Serialize one response in the encoding its request arrived in: a
+/// binary frame for a framed infer, a JSON line otherwise (shed, error
+/// and control replies stay JSON on both wires). Both I/O engines
+/// write through here, so their bytes cannot diverge.
+pub(crate) fn response_bytes(resp: &WireResponse, framed: bool) -> Vec<u8> {
+    if framed {
+        if let Ok(frame) = protocol::encode_infer_response_frame(resp) {
+            return frame;
+        }
+    }
+    let mut line = resp.to_json().to_string().into_bytes();
+    line.push(b'\n');
+    line
+}
+
 fn handle_connection(stream: TcpStream, shared: &Shared) -> Result<()> {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(READ_POLL)).context("setting read timeout")?;
@@ -449,36 +544,45 @@ fn handle_connection(stream: TcpStream, shared: &Shared) -> Result<()> {
     let peer_is_local = stream.peer_addr().map(|p| p.ip().is_loopback()).unwrap_or(false);
     let mut writer = stream.try_clone().context("cloning connection")?;
     let mut reader = stream;
-    // Own the line framing: raw reads into `buf`, split on b'\n'. (Going
-    // through BufRead::read_line would leave the buffer contents
-    // unspecified when a read times out mid-line.)
+    // Own the framing: raw reads into `buf`, messages popped off the
+    // front by the shared incremental framer. (Going through
+    // BufRead::read_line would leave the buffer contents unspecified
+    // when a read times out mid-line.)
     let mut buf: Vec<u8> = Vec::new();
     let mut chunk = [0u8; 4096];
     // Bytes of `buf` already scanned for a newline — resuming from here
     // keeps framing linear when a large line arrives in many reads.
     let mut scanned = 0usize;
     loop {
-        // Serve every complete line currently buffered.
-        while let Some(rel) = buf[scanned..].iter().position(|&b| b == b'\n') {
-            let line_bytes: Vec<u8> = buf.drain(..=scanned + rel).collect();
-            scanned = 0;
-            let line = String::from_utf8_lossy(&line_bytes);
-            let trimmed = line.trim();
-            if trimmed.is_empty() {
-                continue;
+        // Serve every complete message currently buffered.
+        loop {
+            match protocol::extract_message(&mut buf, &mut scanned, MAX_LINE_BYTES) {
+                Ok(Some(msg)) => {
+                    let (parsed, framed) = match msg {
+                        ServeMsg::Line(line) => (Request::parse_line(&line), false),
+                        ServeMsg::Frame(kind, payload) => {
+                            (parse_frame_request(kind, &payload), true)
+                        }
+                    };
+                    let resp = match parsed {
+                        Ok(req) => dispatch(req, shared, peer_is_local),
+                        Err(e) => WireResponse::Error { message: format!("{e:#}") },
+                    };
+                    writer
+                        .write_all(&response_bytes(&resp, framed))
+                        .context("writing response")?;
+                    writer.flush().ok();
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    // Protocol violation (over-cap message, bad magic):
+                    // report and drop the connection.
+                    fl::record(fl::FRAME_ERROR, || format!("{e:#}"));
+                    let resp = WireResponse::Error { message: format!("{e:#}") };
+                    let _ = writer.write_all(&response_bytes(&resp, false));
+                    return Ok(());
+                }
             }
-            let resp = match Request::parse_line(trimmed) {
-                Ok(req) => dispatch(req, shared, peer_is_local),
-                Err(e) => WireResponse::Error { message: format!("{e:#}") },
-            };
-            writeln!(writer, "{}", resp.to_json()).context("writing response")?;
-            writer.flush().ok();
-        }
-        scanned = buf.len();
-        if buf.len() > MAX_LINE_BYTES {
-            let resp = WireResponse::Error { message: "request line too long".to_string() };
-            let _ = writeln!(writer, "{}", resp.to_json());
-            return Ok(());
         }
         match reader.read(&mut chunk) {
             Ok(0) => return Ok(()), // client EOF
@@ -497,7 +601,7 @@ fn handle_connection(stream: TcpStream, shared: &Shared) -> Result<()> {
 /// One Prometheus document for the whole fleet: this process's registry
 /// merged with every cluster rank's pulled exposition, rank-relabeled.
 /// For an all-native server this is just the local registry.
-fn federated_metrics(shared: &Shared) -> Result<String> {
+pub(crate) fn federated_metrics(shared: &Shared) -> Result<String> {
     let observed = shared.router.observe_ranks();
     let ranks: Vec<om::RankExposition<'_>> = observed
         .iter()
@@ -510,7 +614,7 @@ fn federated_metrics(shared: &Shared) -> Result<String> {
 /// plus each rank's (shipped home in the metrics-verb reply), so a
 /// post-mortem shows both sides of a severed connection. Remote
 /// sequence numbers order events within their origin process only.
-fn flight_dump(shared: &Shared) -> Json {
+pub(crate) fn flight_dump(shared: &Shared) -> Json {
     let ranks: Vec<Json> = shared
         .router
         .observe_ranks()
@@ -533,9 +637,13 @@ fn flight_dump(shared: &Shared) -> Json {
     ])
 }
 
-fn dispatch(req: Request, shared: &Shared, peer_is_local: bool) -> WireResponse {
+pub(crate) fn dispatch(req: Request, shared: &Shared, peer_is_local: bool) -> WireResponse {
     match req {
         Request::Ping => WireResponse::Pong,
+        // Capability discovery: a v2 client learns the server speaks
+        // binary frames. No per-connection state changes hands — the
+        // server always answers each message in the encoding it came in.
+        Request::Hello => WireResponse::Hello { version: PROTOCOL_VERSION, frames: true },
         Request::Stats => {
             WireResponse::Stats(shared.stats.snapshot(&shared.admission, &shared.router))
         }
@@ -562,43 +670,64 @@ fn dispatch(req: Request, shared: &Shared, peer_is_local: bool) -> WireResponse 
     }
 }
 
-fn infer(req: InferRequest, shared: &Shared) -> WireResponse {
-    let want_activations = req.want_activations;
-    // One TraceId per admitted request, minted here (or pinned by the
-    // caller): every span this request produces — batcher, scatter,
-    // worker-rank compute — carries it, so the exported trace stitches
-    // the whole path under one id.
-    let trace = match req.trace.as_deref() {
+/// Mint (or validate) the one TraceId an admitted request carries:
+/// every span this request produces — batcher, scatter, worker-rank
+/// compute — carries it, so the exported trace stitches the whole path
+/// under one id. A malformed caller-pinned id is a recorded error.
+pub(crate) fn mint_trace(
+    raw: Option<&str>,
+    shared: &Shared,
+) -> std::result::Result<TraceId, WireResponse> {
+    match raw {
         Some(t) => match TraceId::parse(t) {
-            Ok(id) if id.is_some() => id,
-            Ok(_) => TraceId::generate(),
+            Ok(id) if id.is_some() => Ok(id),
+            Ok(_) => Ok(TraceId::generate()),
             Err(e) => {
                 shared.stats.record_error();
-                return WireResponse::Error { message: format!("bad trace id: {e:#}") };
+                Err(WireResponse::Error { message: format!("bad trace id: {e:#}") })
             }
         },
-        None => TraceId::generate(),
-    };
-    let features = match req.input {
-        InferInput::Features(f) => f,
+        None => Ok(TraceId::generate()),
+    }
+}
+
+/// Materialize the feature vector: inline features pass through, a
+/// reference-row handle resolves against the server's dataset.
+pub(crate) fn resolve_features(
+    input: InferInput,
+    shared: &Shared,
+) -> std::result::Result<Vec<f32>, WireResponse> {
+    match input {
+        InferInput::Features(f) => Ok(f),
         InferInput::Row(i) => match shared.reference.as_ref().and_then(|p| p.row(i)) {
-            Some(f) => f,
+            Some(f) => Ok(f),
             None => {
                 shared.stats.record_error();
                 let message = match &shared.reference {
                     Some(p) => format!("row {i} out of range (0..{})", p.rows()),
                     None => "server holds no reference dataset; send \"features\"".to_string(),
                 };
-                return WireResponse::Error { message };
+                Err(WireResponse::Error { message })
             }
         },
-    };
-    // Clamp client-supplied deadlines into [0, 1h]; `max` first turns a
-    // NaN into 0 so `from_secs_f64` cannot panic on hostile input.
-    let deadline =
-        req.deadline_ms.map(|ms| Duration::from_secs_f64((ms / 1e3).max(0.0).min(3600.0)));
-    let ticket = match AdmissionController::try_admit(&shared.admission, deadline) {
-        Ok(t) => t,
+    }
+}
+
+/// Clamp client-supplied deadlines into [0, 1h]; `max` first turns a
+/// NaN into 0 so `from_secs_f64` cannot panic on hostile input.
+pub(crate) fn clamp_deadline(ms: Option<f64>) -> Option<Duration> {
+    ms.map(|ms| Duration::from_secs_f64((ms / 1e3).max(0.0).min(3600.0)))
+}
+
+/// Queue-aware admission: a rejection becomes the wire-visible shed
+/// (and a flight event); an admission hands back the ticket that holds
+/// the queue slot until completed or dropped.
+pub(crate) fn admit(
+    shared: &Shared,
+    deadline: Option<Duration>,
+) -> std::result::Result<Ticket, WireResponse> {
+    match AdmissionController::try_admit(&shared.admission, deadline) {
+        Ok(t) => Ok(t),
         Err(rej) => {
             fl::record(fl::ADMISSION_SHED, || {
                 format!(
@@ -607,11 +736,28 @@ fn infer(req: InferRequest, shared: &Shared) -> WireResponse {
                     rej.retry_after().as_secs_f64() * 1e3
                 )
             });
-            return WireResponse::Shed {
+            Err(WireResponse::Shed {
                 reason: rej.reason().to_string(),
                 retry_after_ms: rej.retry_after().as_secs_f64() * 1e3,
-            };
+            })
         }
+    }
+}
+
+fn infer(req: InferRequest, shared: &Shared) -> WireResponse {
+    let want_activations = req.want_activations;
+    let trace = match mint_trace(req.trace.as_deref(), shared) {
+        Ok(t) => t,
+        Err(resp) => return resp,
+    };
+    let features = match resolve_features(req.input, shared) {
+        Ok(f) => f,
+        Err(resp) => return resp,
+    };
+    let deadline = clamp_deadline(req.deadline_ms);
+    let ticket = match admit(shared, deadline) {
+        Ok(t) => t,
+        Err(resp) => return resp,
     };
     let effective = deadline.unwrap_or_else(|| shared.admission.default_deadline());
     let t0 = Instant::now();

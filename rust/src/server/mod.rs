@@ -23,6 +23,13 @@
 //!   (cluster drains fence in-flight scatters before reaping workers);
 //!   also home of the federated `{"op":"metrics"}` pull and the
 //!   `{"op":"flight"}` recorder dump;
+//! * `reactor` (crate-internal) — the default I/O engine
+//!   (`--io reactor`): one thread
+//!   multiplexes every client socket through poll(2) with
+//!   per-connection state machines, queue-aware admission off a lazy
+//!   field scan, and slowloris/write-stall eviction — 10k idle
+//!   connections cost pollfds, not threads (`--io threads` keeps the
+//!   legacy thread-per-connection engine);
 //! * [`stats`] — p50/p95/p99 latency (bucket-interpolated from the obs
 //!   histogram), queue depth, shed counts, per-replica throughput,
 //!   per-rank liveness and scatter/gather byte counters behind the
@@ -40,6 +47,7 @@ pub mod admission;
 pub mod cluster_backend;
 pub mod lifecycle;
 pub mod protocol;
+pub(crate) mod reactor;
 pub mod router;
 pub mod stats;
 
@@ -47,7 +55,7 @@ pub use admission::{AdmissionConfig, AdmissionController, Rejection, Ticket};
 pub use cluster_backend::{
     ClusterFleet, ClusterReplica, ClusterServeConfig, RankCounters, RankObservation,
 };
-pub use lifecycle::{ReferencePanel, Server, ServerConfig, ServerHandle, ShutdownReport};
+pub use lifecycle::{IoMode, ReferencePanel, Server, ServerConfig, ServerHandle, ShutdownReport};
 pub use protocol::{Client, InferInput, InferRequest, Request, WireResponse};
 pub use router::{RankDetail, ReplicaDetail, ReplicaRouter};
 pub use stats::{LatencySummary, ServerStats};

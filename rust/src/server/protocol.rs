@@ -29,12 +29,30 @@
 //! Responses always carry `ok` and `kind`; an inference answer is the
 //! final activations + activity flag + timing, a shed answer carries a
 //! `retry_after_ms` backpressure hint.
+//!
+//! **Client wire v2 (binary frames)** — a client discovers frame
+//! support with `{"op":"hello"}`: a v2 server answers
+//! `{"kind":"hello","ok":true,"version":1,"frames":true}`, an older
+//! one answers an `unknown op` error and the client stays on JSON.
+//! Once discovered, infer requests and responses may travel as `SCL1`
+//! length-prefixed frames (kinds [`FRAME_KIND_INFER_REQ`] /
+//! [`FRAME_KIND_INFER_RESP`]) whose feature/activation panels reuse
+//! the cluster wire's codec — dense f32 or bitmap sparse-uniform.
+//! There is no per-connection mode switch: the server answers each
+//! message in the encoding it arrived in, control verbs stay JSON
+//! lines on both wires, and the two encodings may interleave freely on
+//! one connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::cluster::transport::{
+    frame_header, read_frame, read_panel, uniform_value, write_panel, WireFormat,
+    FRAME_HEADER_BYTES, FRAME_MAGIC,
+};
+use crate::data::binio::{put_f64, put_u64, ByteCursor};
 use crate::util::json::Json;
 
 pub const PROTOCOL_VERSION: i64 = 1;
@@ -73,6 +91,10 @@ pub enum Request {
     /// Health/SLO verdict (`ok`/`degraded`/`critical` with reasons).
     Health,
     Ping,
+    /// Capability discovery: a v2 server answers [`WireResponse::Hello`]
+    /// (protocol version + frame support); an older server answers
+    /// `unknown op` and the client stays on the JSON wire.
+    Hello,
     /// Stop accepting new work, answer in-flight requests, then exit.
     Shutdown,
 }
@@ -137,6 +159,7 @@ impl Request {
             "flight" => Ok(Request::Flight),
             "health" => Ok(Request::Health),
             "ping" => Ok(Request::Ping),
+            "hello" => Ok(Request::Hello),
             "shutdown" | "drain" => Ok(Request::Shutdown),
             other => bail!("unknown op {other:?}"),
         }
@@ -169,6 +192,7 @@ impl Request {
             Request::Flight => Json::obj(vec![("op", Json::Str("flight".into()))]),
             Request::Health => Json::obj(vec![("op", Json::Str("health".into()))]),
             Request::Ping => Json::obj(vec![("op", Json::Str("ping".into()))]),
+            Request::Hello => Json::obj(vec![("op", Json::Str("hello".into()))]),
             Request::Shutdown => Json::obj(vec![("op", Json::Str("shutdown".into()))]),
         }
     }
@@ -197,6 +221,8 @@ pub enum WireResponse {
     /// Health/SLO verdict document.
     Health(Json),
     Pong,
+    /// Answer to `{"op":"hello"}`: what this server speaks.
+    Hello { version: i64, frames: bool },
     /// Acknowledgement of a shutdown/drain op.
     Draining,
     Error { message: String },
@@ -259,6 +285,12 @@ impl WireResponse {
                 ("kind", Json::Str("pong".into())),
                 ("version", Json::Int(PROTOCOL_VERSION)),
             ]),
+            WireResponse::Hello { version, frames } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("kind", Json::Str("hello".into())),
+                ("version", Json::Int(*version)),
+                ("frames", Json::Bool(*frames)),
+            ]),
             WireResponse::Draining => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("kind", Json::Str("draining".into())),
@@ -301,6 +333,13 @@ impl WireResponse {
             "flight" => Ok(WireResponse::Flight(v.req("flight")?.clone())),
             "health" => Ok(WireResponse::Health(v.req("health")?.clone())),
             "pong" => Ok(WireResponse::Pong),
+            "hello" => Ok(WireResponse::Hello {
+                version: v
+                    .req("version")?
+                    .as_i64()
+                    .ok_or_else(|| anyhow!("\"version\" is not an int"))?,
+                frames: v.get("frames").and_then(|f| f.as_bool()).unwrap_or(false),
+            }),
             "draining" => Ok(WireResponse::Draining),
             "error" => Ok(WireResponse::Error { message: v.req_str("error")?.to_string() }),
             other => bail!("unknown response kind {other:?}"),
@@ -324,11 +363,437 @@ pub fn parse_f32_array(j: &Json) -> Result<Vec<f32>> {
         .collect()
 }
 
-/// Blocking JSON-lines client — used by `examples/server_client.rs`, the
-/// loopback integration tests and any Rust-side tooling.
+// ---------------------------------------------------------------------------
+// Client wire v2: binary infer frames
+// ---------------------------------------------------------------------------
+
+/// Frame kind of a binary infer request (wire v2).
+pub const FRAME_KIND_INFER_REQ: u8 = 16;
+/// Frame kind of a binary infer response (wire v2).
+pub const FRAME_KIND_INFER_RESP: u8 = 17;
+
+/// Hard cap on one serve-wire message, frame payload or JSON line — a
+/// 65536-wide feature vector is ~1.5 MiB of JSON and ~256 KiB framed;
+/// a peer exceeding this is misbehaving.
+pub const SERVE_FRAME_CAP: usize = 16 << 20;
+
+/// Widest feature/activation panel a serve frame may claim. A hostile
+/// sparse-uniform header could otherwise name a panel width far larger
+/// than its bitmap and force a giant allocation before the width check.
+const SERVE_MAX_FEATURES: usize = 2 << 20;
+
+const REQ_WANT_ACTIVATIONS: u8 = 1 << 0;
+const REQ_HAS_DEADLINE: u8 = 1 << 1;
+const REQ_INPUT_IS_ROW: u8 = 1 << 2;
+const REQ_HAS_TRACE: u8 = 1 << 3;
+
+const RESP_ACTIVE: u8 = 1 << 0;
+const RESP_HAS_ACTIVATIONS: u8 = 1 << 1;
+
+fn put_short_str(payload: &mut Vec<u8>, s: &str) -> Result<()> {
+    let b = s.as_bytes();
+    if b.len() > u8::MAX as usize {
+        bail!("string of {} bytes does not fit a frame's u8 length prefix", b.len());
+    }
+    payload.push(b.len() as u8);
+    payload.extend_from_slice(b);
+    Ok(())
+}
+
+fn read_short_str(c: &mut ByteCursor<'_>) -> Result<String> {
+    let len = c.u8()? as usize;
+    Ok(std::str::from_utf8(c.bytes(len)?).context("frame string is not UTF-8")?.to_string())
+}
+
+/// Encode one infer request as a complete `SCL1` frame (header +
+/// payload). The trace id travels as its hex string, so the server's
+/// mint/validate behavior is identical on both wires.
+pub fn encode_infer_frame(r: &InferRequest) -> Result<Vec<u8>> {
+    let mut payload = Vec::new();
+    let mut flags = 0u8;
+    if r.want_activations {
+        flags |= REQ_WANT_ACTIVATIONS;
+    }
+    if r.deadline_ms.is_some() {
+        flags |= REQ_HAS_DEADLINE;
+    }
+    if matches!(r.input, InferInput::Row(_)) {
+        flags |= REQ_INPUT_IS_ROW;
+    }
+    if r.trace.is_some() {
+        flags |= REQ_HAS_TRACE;
+    }
+    payload.push(flags);
+    if let Some(d) = r.deadline_ms {
+        put_f64(&mut payload, d);
+    }
+    if let Some(t) = &r.trace {
+        put_short_str(&mut payload, t)?;
+    }
+    match &r.input {
+        InferInput::Row(i) => put_u64(&mut payload, *i as u64),
+        InferInput::Features(f) => {
+            put_u64(&mut payload, f.len() as u64);
+            write_panel(&mut payload, f, uniform_value(f))?;
+        }
+    }
+    let mut frame = frame_header(FRAME_KIND_INFER_REQ, payload.len())?.to_vec();
+    frame.extend_from_slice(&payload);
+    Ok(frame)
+}
+
+/// Decode the payload of a [`FRAME_KIND_INFER_REQ`] frame.
+pub fn decode_infer_frame(payload: &[u8]) -> Result<InferRequest> {
+    let mut c = ByteCursor::new(payload);
+    let flags = c.u8().context("reading infer frame flags")?;
+    let deadline_ms =
+        if flags & REQ_HAS_DEADLINE != 0 { Some(c.f64().context("frame deadline")?) } else { None };
+    let trace = if flags & REQ_HAS_TRACE != 0 { Some(read_short_str(&mut c)?) } else { None };
+    let input = if flags & REQ_INPUT_IS_ROW != 0 {
+        InferInput::Row(usize::try_from(c.u64().context("frame row")?).context("frame row")?)
+    } else {
+        let n = usize::try_from(c.u64().context("frame panel width")?)
+            .context("frame panel width")?;
+        if n > SERVE_MAX_FEATURES {
+            bail!("feature panel of {n} values exceeds the serve frame limit");
+        }
+        InferInput::Features(read_panel(&mut c, n)?)
+    };
+    c.finish()?;
+    Ok(InferRequest {
+        input,
+        deadline_ms,
+        want_activations: flags & REQ_WANT_ACTIVATIONS != 0,
+        trace,
+    })
+}
+
+/// Encode one infer answer as a complete `SCL1` frame. Only
+/// [`WireResponse::Infer`] has a frame form — shed, error and control
+/// replies stay JSON lines on both wires.
+pub fn encode_infer_response_frame(resp: &WireResponse) -> Result<Vec<u8>> {
+    let (active, replica, batch_size, latency_ms, trace, activations) = match resp {
+        WireResponse::Infer { active, replica, batch_size, latency_ms, trace, activations } => {
+            (*active, *replica, *batch_size, *latency_ms, trace, activations)
+        }
+        _ => bail!("only infer responses have a binary frame encoding"),
+    };
+    let mut payload = Vec::new();
+    let mut flags = 0u8;
+    if active {
+        flags |= RESP_ACTIVE;
+    }
+    if activations.is_some() {
+        flags |= RESP_HAS_ACTIVATIONS;
+    }
+    payload.push(flags);
+    put_short_str(&mut payload, trace)?;
+    put_u64(&mut payload, replica as u64);
+    put_u64(&mut payload, batch_size as u64);
+    put_f64(&mut payload, latency_ms);
+    if let Some(acts) = activations {
+        put_u64(&mut payload, acts.len() as u64);
+        write_panel(&mut payload, acts, uniform_value(acts))?;
+    }
+    let mut frame = frame_header(FRAME_KIND_INFER_RESP, payload.len())?.to_vec();
+    frame.extend_from_slice(&payload);
+    Ok(frame)
+}
+
+/// Decode the payload of a [`FRAME_KIND_INFER_RESP`] frame.
+pub fn decode_infer_response_frame(payload: &[u8]) -> Result<WireResponse> {
+    let mut c = ByteCursor::new(payload);
+    let flags = c.u8().context("reading infer response flags")?;
+    let trace = read_short_str(&mut c)?;
+    let replica = usize::try_from(c.u64().context("frame replica")?).context("frame replica")?;
+    let batch_size =
+        usize::try_from(c.u64().context("frame batch size")?).context("frame batch size")?;
+    let latency_ms = c.f64().context("frame latency")?;
+    let activations = if flags & RESP_HAS_ACTIVATIONS != 0 {
+        let n = usize::try_from(c.u64().context("frame panel width")?)
+            .context("frame panel width")?;
+        if n > SERVE_MAX_FEATURES {
+            bail!("activation panel of {n} values exceeds the serve frame limit");
+        }
+        Some(read_panel(&mut c, n)?)
+    } else {
+        None
+    };
+    c.finish()?;
+    Ok(WireResponse::Infer {
+        active: flags & RESP_ACTIVE != 0,
+        replica,
+        batch_size,
+        latency_ms,
+        trace,
+        activations,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Incremental message framing
+// ---------------------------------------------------------------------------
+
+/// One complete client message, however it arrived on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeMsg {
+    /// A JSON request line, trimmed (never empty).
+    Line(String),
+    /// One binary frame: kind + payload.
+    Frame(u8, Vec<u8>),
+}
+
+/// Pop one complete message — JSON line or `SCL1` frame — off the
+/// front of a connection's receive buffer, or return `None` when more
+/// bytes are needed. Both serving I/O paths (thread-per-connection and
+/// the reactor) frame through here, so the wire behavior cannot
+/// diverge between them. `scanned` is the index up to which a newline
+/// search already ran; the caller keeps it across reads so framing a
+/// large line arriving in many small reads stays linear. An error
+/// (over-cap line or frame, bad magic) is a protocol violation: the
+/// caller reports it and drops the connection.
+pub fn extract_message(
+    buf: &mut Vec<u8>,
+    scanned: &mut usize,
+    cap: usize,
+) -> Result<Option<ServeMsg>> {
+    loop {
+        // Skip inter-message whitespace (blank lines between requests).
+        let lead = buf
+            .iter()
+            .take_while(|&&b| b == b'\n' || b == b'\r' || b == b' ' || b == b'\t')
+            .count();
+        if lead > 0 {
+            buf.drain(..lead);
+            *scanned = 0;
+        }
+        let first = match buf.first() {
+            Some(&b) => b,
+            None => return Ok(None),
+        };
+        if first == FRAME_MAGIC[0] {
+            // Binary frame. Validate as much of the magic as has
+            // arrived so line traffic starting with 'S' fails fast.
+            let have = buf.len().min(FRAME_MAGIC.len());
+            if buf[..have] != FRAME_MAGIC[..have] {
+                bail!("bad frame magic {:?} (not an spdnn-clu1 frame)", &buf[..have]);
+            }
+            if buf.len() < FRAME_HEADER_BYTES {
+                return Ok(None);
+            }
+            let kind = buf[4];
+            let len = u32::from_le_bytes(buf[5..9].try_into().expect("4-byte slice")) as usize;
+            if len > cap {
+                bail!("frame payload of {len} bytes exceeds the {cap}-byte serve frame cap");
+            }
+            if buf.len() < FRAME_HEADER_BYTES + len {
+                return Ok(None);
+            }
+            let payload = buf[FRAME_HEADER_BYTES..FRAME_HEADER_BYTES + len].to_vec();
+            buf.drain(..FRAME_HEADER_BYTES + len);
+            *scanned = 0;
+            return Ok(Some(ServeMsg::Frame(kind, payload)));
+        }
+        // JSON line: find the newline, resuming where the last scan
+        // left off.
+        match buf[*scanned..].iter().position(|&b| b == b'\n') {
+            Some(rel) => {
+                let end = *scanned + rel;
+                let line = String::from_utf8_lossy(&buf[..end]).trim().to_string();
+                buf.drain(..=end);
+                *scanned = 0;
+                if line.is_empty() {
+                    continue;
+                }
+                return Ok(Some(ServeMsg::Line(line)));
+            }
+            None => {
+                *scanned = buf.len();
+                if buf.len() > cap {
+                    bail!("request line too long");
+                }
+                return Ok(None);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lazy request scanning
+// ---------------------------------------------------------------------------
+
+/// The admission-relevant fields of one request line, extracted by a
+/// single forward scan with no tree build — what the reactor needs to
+/// route and admit before deciding whether a full parse is worth it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestHint<'a> {
+    pub op: &'a str,
+    /// Caller-pinned trace id, verbatim (not yet validated).
+    pub trace: Option<&'a str>,
+    pub deadline_ms: Option<f64>,
+}
+
+/// Scan one JSON request line for `op`/`trace`/`deadline_ms` without
+/// building a tree. Returns `None` whenever the line uses anything the
+/// scanner keeps deliberately out of scope — string escapes, malformed
+/// syntax, a missing `op` — and the caller falls back to the full
+/// parser, so the lazy path can only ever agree with it.
+pub fn scan_request_line(line: &str) -> Option<RequestHint<'_>> {
+    let b = line.as_bytes();
+    let mut i = skip_ws(b, 0);
+    if b.get(i) != Some(&b'{') {
+        return None;
+    }
+    i += 1;
+    let mut op = None;
+    let mut trace = None;
+    let mut deadline_ms = None;
+    loop {
+        i = skip_ws(b, i);
+        match b.get(i)? {
+            b'}' => {
+                i += 1;
+                break;
+            }
+            b',' => {
+                i += 1;
+                continue;
+            }
+            b'"' => {}
+            _ => return None,
+        }
+        let (key, next) = scan_string(line, i)?;
+        i = skip_ws(b, next);
+        if b.get(i) != Some(&b':') {
+            return None;
+        }
+        i = skip_ws(b, i + 1);
+        match key {
+            "op" | "trace" => {
+                let (val, next) = scan_string(line, i)?;
+                if key == "op" {
+                    op = Some(val);
+                } else {
+                    trace = Some(val);
+                }
+                i = next;
+            }
+            "deadline_ms" => {
+                let (val, next) = scan_number(b, i)?;
+                deadline_ms = Some(val);
+                i = next;
+            }
+            _ => i = skip_value(b, i)?,
+        }
+    }
+    // Trailing garbage would make the full parser error; don't let the
+    // lazy path accept what the strict one rejects.
+    if skip_ws(b, i) != b.len() {
+        return None;
+    }
+    Some(RequestHint { op: op?, trace, deadline_ms })
+}
+
+fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while matches!(b.get(i), Some(b' ' | b'\t' | b'\r' | b'\n')) {
+        i += 1;
+    }
+    i
+}
+
+/// Scan the JSON string starting at `i` (the opening quote), returning
+/// its raw content and the index past the closing quote. Escapes bail
+/// to the full parser rather than allocating an unescape buffer here.
+fn scan_string(line: &str, i: usize) -> Option<(&str, usize)> {
+    let b = line.as_bytes();
+    if b.get(i) != Some(&b'"') {
+        return None;
+    }
+    let start = i + 1;
+    let mut j = start;
+    loop {
+        match b.get(j)? {
+            b'"' => return line.get(start..j).map(|s| (s, j + 1)),
+            b'\\' => return None,
+            _ => j += 1,
+        }
+    }
+}
+
+fn scan_number(b: &[u8], i: usize) -> Option<(f64, usize)> {
+    let mut j = i;
+    while matches!(b.get(j), Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')) {
+        j += 1;
+    }
+    if j == i {
+        return None;
+    }
+    std::str::from_utf8(&b[i..j]).ok()?.parse::<f64>().ok().map(|v| (v, j))
+}
+
+/// Skip one JSON value (scalar, array or object) starting at `i`,
+/// returning the index past it. Strings with escapes return `None`.
+fn skip_value(b: &[u8], i: usize) -> Option<usize> {
+    match b.get(i)? {
+        b'"' => scan_str_bytes(b, i),
+        b'[' | b'{' => {
+            let mut depth = 0usize;
+            let mut j = i;
+            loop {
+                match b.get(j)? {
+                    b'[' | b'{' => {
+                        depth += 1;
+                        j += 1;
+                    }
+                    b']' | b'}' => {
+                        depth -= 1;
+                        j += 1;
+                        if depth == 0 {
+                            return Some(j);
+                        }
+                    }
+                    b'"' => j = scan_str_bytes(b, j)?,
+                    _ => j += 1,
+                }
+            }
+        }
+        b't' | b'f' | b'n' | b'-' | b'0'..=b'9' => {
+            let mut j = i + 1;
+            while !matches!(
+                b.get(j),
+                None | Some(b',' | b'}' | b']' | b' ' | b'\t' | b'\r' | b'\n')
+            ) {
+                j += 1;
+            }
+            Some(j)
+        }
+        _ => None,
+    }
+}
+
+/// Byte-level string skip: `i` points at the opening quote; returns the
+/// index past the closing quote, `None` on an escape or unterminated
+/// string.
+fn scan_str_bytes(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i + 1;
+    loop {
+        match b.get(j)? {
+            b'"' => return Some(j + 1),
+            b'\\' => return None,
+            _ => j += 1,
+        }
+    }
+}
+
+/// Blocking protocol client — used by `examples/server_client.rs`, the
+/// loopback integration tests, `spdnn watch`/`serve-smoke` and any
+/// Rust-side tooling. Speaks JSON lines by default; after a successful
+/// hello ([`Client::connect_wire`] with [`WireFormat::Bin`]) its infer
+/// calls travel as binary frames.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    wire: WireFormat,
 }
 
 impl Client {
@@ -336,13 +801,58 @@ impl Client {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
         stream.set_nodelay(true).ok();
         let writer = stream.try_clone().context("cloning stream")?;
-        Ok(Client { reader: BufReader::new(stream), writer })
+        Ok(Client { reader: BufReader::new(stream), writer, wire: WireFormat::Json })
     }
 
-    /// Send one request and wait for its response line.
+    /// Connect and, for [`WireFormat::Bin`], negotiate the binary infer
+    /// wire via `{"op":"hello"}`. A pre-v2 server (which answers the
+    /// hello with an error) downgrades the connection to JSON instead
+    /// of failing it.
+    pub fn connect_wire(addr: SocketAddr, want: WireFormat) -> Result<Client> {
+        let mut c = Client::connect(addr)?;
+        if want == WireFormat::Bin {
+            if let WireResponse::Hello { frames: true, .. } = c.call(&Request::Hello)? {
+                c.wire = WireFormat::Bin;
+            }
+        }
+        Ok(c)
+    }
+
+    /// The encoding infer calls travel in after negotiation.
+    pub fn wire(&self) -> WireFormat {
+        self.wire
+    }
+
+    /// Send one request and wait for its response.
     pub fn call(&mut self, req: &Request) -> Result<WireResponse> {
-        writeln!(self.writer, "{}", req.to_json()).context("writing request")?;
+        match (self.wire, req) {
+            (WireFormat::Bin, Request::Infer(r)) => {
+                let frame = encode_infer_frame(r)?;
+                self.writer.write_all(&frame).context("writing request frame")?;
+            }
+            _ => writeln!(self.writer, "{}", req.to_json()).context("writing request")?,
+        }
         self.writer.flush().context("flushing request")?;
+        self.read_response()
+    }
+
+    /// Read one response, whichever encoding the server chose (framed
+    /// infer answers and JSON lines interleave on the same socket).
+    fn read_response(&mut self) -> Result<WireResponse> {
+        let first = {
+            let b = self.reader.fill_buf().context("reading response")?;
+            match b.first() {
+                Some(&f) => f,
+                None => bail!("server closed the connection"),
+            }
+        };
+        if first == FRAME_MAGIC[0] {
+            let (kind, payload) = read_frame(&mut self.reader, SERVE_FRAME_CAP)?;
+            if kind != FRAME_KIND_INFER_RESP {
+                bail!("unexpected frame kind {kind} in a serve response");
+            }
+            return decode_infer_response_frame(&payload);
+        }
         let mut line = String::new();
         let n = self.reader.read_line(&mut line).context("reading response")?;
         if n == 0 {
@@ -473,5 +983,220 @@ mod tests {
         assert_eq!(line, r#"{"op":"infer","row":2,"trace":"00000000000000ab"}"#);
         let line = Request::Metrics.to_json().to_string();
         assert_eq!(line, r#"{"op":"metrics"}"#);
+    }
+
+    #[test]
+    fn hello_roundtrips_and_shape_is_stable() {
+        roundtrip_request(Request::Hello);
+        roundtrip_response(WireResponse::Hello { version: 1, frames: true });
+        roundtrip_response(WireResponse::Hello { version: 1, frames: false });
+        assert_eq!(Request::Hello.to_json().to_string(), r#"{"op":"hello"}"#);
+        assert_eq!(
+            WireResponse::Hello { version: PROTOCOL_VERSION, frames: true }.to_json().to_string(),
+            r#"{"frames":true,"kind":"hello","ok":true,"version":1}"#,
+        );
+        assert!(WireResponse::Hello { version: 1, frames: true }.is_ok());
+    }
+
+    fn frame_roundtrip_request(req: &InferRequest) {
+        let frame = encode_infer_frame(req).unwrap();
+        assert_eq!(&frame[..4], FRAME_MAGIC);
+        assert_eq!(frame[4], FRAME_KIND_INFER_REQ);
+        let got = decode_infer_frame(&frame[FRAME_HEADER_BYTES..]).unwrap();
+        assert_eq!(&got, req);
+    }
+
+    fn frame_roundtrip_response(resp: &WireResponse) {
+        let frame = encode_infer_response_frame(resp).unwrap();
+        assert_eq!(frame[4], FRAME_KIND_INFER_RESP);
+        let got = decode_infer_response_frame(&frame[FRAME_HEADER_BYTES..]).unwrap();
+        assert_eq!(&got, resp);
+    }
+
+    #[test]
+    fn infer_frames_roundtrip() {
+        frame_roundtrip_request(&InferRequest {
+            input: InferInput::Features(vec![0.0, 1.5, -0.25, 1e30]),
+            deadline_ms: None,
+            want_activations: true,
+            trace: None,
+        });
+        // All-zero panel exercises the sparse-uniform encoding.
+        frame_roundtrip_request(&InferRequest {
+            input: InferInput::Features(vec![0.0; 64]),
+            deadline_ms: Some(50.0),
+            want_activations: false,
+            trace: Some("00c0ffee00c0ffee".into()),
+        });
+        frame_roundtrip_request(&InferRequest {
+            input: InferInput::Row(17),
+            deadline_ms: Some(2.5),
+            want_activations: true,
+            trace: None,
+        });
+        frame_roundtrip_response(&WireResponse::Infer {
+            active: true,
+            replica: 3,
+            batch_size: 48,
+            latency_ms: 1.75,
+            trace: "deadbeefdeadbeef".into(),
+            activations: Some(vec![0.5, 0.0, 2.25]),
+        });
+        frame_roundtrip_response(&WireResponse::Infer {
+            active: false,
+            replica: 0,
+            batch_size: 1,
+            latency_ms: 0.5,
+            trace: String::new(),
+            activations: Some(vec![0.0; 128]),
+        });
+        frame_roundtrip_response(&WireResponse::Infer {
+            active: false,
+            replica: 1,
+            batch_size: 2,
+            latency_ms: 0.25,
+            trace: "00000000000000ab".into(),
+            activations: None,
+        });
+    }
+
+    #[test]
+    fn only_infer_responses_have_frames() {
+        assert!(encode_infer_response_frame(&WireResponse::Pong).is_err());
+        assert!(encode_infer_response_frame(&WireResponse::Error { message: "x".into() })
+            .is_err());
+    }
+
+    #[test]
+    fn hostile_frame_widths_rejected() {
+        // A frame claiming a giant panel must fail the width check, not
+        // attempt the allocation.
+        let mut payload = vec![REQ_WANT_ACTIVATIONS];
+        crate::data::binio::put_u64(&mut payload, u64::MAX);
+        let err = decode_infer_frame(&payload).unwrap_err().to_string();
+        assert!(err.contains("serve frame limit") || err.contains("panel width"), "{err}");
+    }
+
+    fn pump(buf: &mut Vec<u8>, scanned: &mut usize) -> Option<ServeMsg> {
+        extract_message(buf, scanned, SERVE_FRAME_CAP).unwrap()
+    }
+
+    #[test]
+    fn extract_message_frames_lines_and_frames() {
+        let mut buf = Vec::new();
+        let mut scanned = 0usize;
+        assert_eq!(pump(&mut buf, &mut scanned), None);
+
+        // A line arriving in pieces.
+        buf.extend_from_slice(b"{\"op\":");
+        assert_eq!(pump(&mut buf, &mut scanned), None);
+        buf.extend_from_slice(b"\"ping\"}\r\n");
+        assert_eq!(pump(&mut buf, &mut scanned), Some(ServeMsg::Line("{\"op\":\"ping\"}".into())));
+        assert_eq!(pump(&mut buf, &mut scanned), None);
+        assert!(buf.is_empty());
+
+        // Blank lines are skipped, not surfaced.
+        buf.extend_from_slice(b"\n\r\n  \n{\"op\":\"stats\"}\n");
+        assert_eq!(
+            pump(&mut buf, &mut scanned),
+            Some(ServeMsg::Line("{\"op\":\"stats\"}".into()))
+        );
+
+        // A frame arriving in pieces, then a line after it.
+        let frame = encode_infer_frame(&InferRequest {
+            input: InferInput::Features(vec![1.0, 0.0]),
+            deadline_ms: None,
+            want_activations: true,
+            trace: None,
+        })
+        .unwrap();
+        buf.extend_from_slice(&frame[..6]);
+        assert_eq!(pump(&mut buf, &mut scanned), None);
+        buf.extend_from_slice(&frame[6..]);
+        buf.extend_from_slice(b"{\"op\":\"ping\"}\n");
+        match pump(&mut buf, &mut scanned) {
+            Some(ServeMsg::Frame(kind, payload)) => {
+                assert_eq!(kind, FRAME_KIND_INFER_REQ);
+                assert_eq!(payload, frame[FRAME_HEADER_BYTES..].to_vec());
+            }
+            other => panic!("expected a frame, got {other:?}"),
+        }
+        assert_eq!(pump(&mut buf, &mut scanned), Some(ServeMsg::Line("{\"op\":\"ping\"}".into())));
+    }
+
+    #[test]
+    fn extract_message_rejects_protocol_violations() {
+        // Over-cap JSON line.
+        let mut buf = vec![b'{'; 64];
+        let mut scanned = 0usize;
+        let err = extract_message(&mut buf, &mut scanned, 32).unwrap_err().to_string();
+        assert!(err.contains("request line too long"), "{err}");
+
+        // 'S' start that is not the frame magic.
+        let mut buf = b"SOMETHING".to_vec();
+        let mut scanned = 0usize;
+        let err =
+            extract_message(&mut buf, &mut scanned, SERVE_FRAME_CAP).unwrap_err().to_string();
+        assert!(err.contains("bad frame magic"), "{err}");
+
+        // Valid magic, hostile length prefix.
+        let mut buf = FRAME_MAGIC.to_vec();
+        buf.push(FRAME_KIND_INFER_REQ);
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut scanned = 0usize;
+        let err =
+            extract_message(&mut buf, &mut scanned, SERVE_FRAME_CAP).unwrap_err().to_string();
+        assert!(err.contains("serve frame cap"), "{err}");
+    }
+
+    #[test]
+    fn lazy_scan_extracts_admission_fields() {
+        let hint = scan_request_line(r#"{"op":"ping"}"#).unwrap();
+        assert_eq!(hint, RequestHint { op: "ping", trace: None, deadline_ms: None });
+
+        let hint = scan_request_line(
+            r#"{"op":"infer","row":3,"deadline_ms":50.5,"trace":"00c0ffee00c0ffee"}"#,
+        )
+        .unwrap();
+        assert_eq!(hint.op, "infer");
+        assert_eq!(hint.trace, Some("00c0ffee00c0ffee"));
+        assert_eq!(hint.deadline_ms, Some(50.5));
+
+        // A large features array is skipped, not parsed.
+        let hint = scan_request_line(
+            r#"{"op":"infer","features":[0.0,1.5,-2.25,3e-1],"activations":false}"#,
+        )
+        .unwrap();
+        assert_eq!(hint.op, "infer");
+        assert_eq!(hint.deadline_ms, None);
+
+        // Nested objects and out-of-scope keys don't confuse it.
+        let hint =
+            scan_request_line(r#"{"meta":{"a":[1,{"b":"x"}]},"op":"stats","extra":true}"#).unwrap();
+        assert_eq!(hint.op, "stats");
+    }
+
+    #[test]
+    fn lazy_scan_defers_to_the_full_parser() {
+        // Escapes, malformed syntax, missing op, trailing garbage: all
+        // fall back (None) so the lazy path can't accept what the
+        // strict parser rejects — or vice versa.
+        assert_eq!(scan_request_line(r#"{"op":"pi\ng"}"#), None, "escape falls back");
+        assert_eq!(scan_request_line(r#"{"op":"ping""#), None);
+        assert_eq!(scan_request_line(r#"{"op":}"#), None);
+        assert_eq!(scan_request_line(r#"not json"#), None);
+        assert_eq!(scan_request_line(r#"{"trace":"abc"}"#), None, "op is required");
+        assert_eq!(scan_request_line(r#"{"op":"ping"} trailing"#), None);
+        assert_eq!(scan_request_line(r#"{"op":"ping","deadline_ms":"x"}"#), None);
+
+        // Everything the scanner accepts, the full parser accepts too.
+        for line in [
+            r#"{"op":"ping"}"#,
+            r#"{"op":"infer","row":1,"deadline_ms":5}"#,
+            r#"{"op":"infer","features":[1.0],"trace":"00000000000000ab"}"#,
+        ] {
+            assert!(scan_request_line(line).is_some(), "{line}");
+            assert!(Request::parse_line(line).is_ok(), "{line}");
+        }
     }
 }

@@ -1,0 +1,782 @@
+//! Readiness-driven serving reactor: one thread multiplexes every
+//! client connection through poll(2) ([`crate::util::netio`]).
+//!
+//! The thread-per-connection engine costs an OS thread (stack, context
+//! switches) per peer, so 10k mostly-idle connections waste most of a
+//! machine on parked threads. Here a connection is a few hundred bytes
+//! of state machine instead:
+//!
+//! ```text
+//!             bytes in             complete message        submit
+//!   reading ──────────▶ (framer) ─────────────────▶ executing
+//!      ▲                                                  │ completion
+//!      │              out drained                         ▼ (batcher cb)
+//!      └──────────────────────────────────────── writing ◀┘
+//! ```
+//!
+//! Design notes, in decreasing order of importance:
+//!
+//! - **Wire parity with the threaded engine.** Both engines frame
+//!   through [`protocol::extract_message`] and serialize through
+//!   [`lifecycle::response_bytes`], and the reactor answers requests on
+//!   one connection strictly in arrival order (read interest pauses
+//!   while a request is in flight), so responses are byte-identical —
+//!   property-tested in `tests/reactor_serving.rs`. One documented
+//!   divergence: admission runs off a lazy field scan
+//!   ([`protocol::scan_request_line`]) *before* the full JSON parse, so
+//!   under shed an invalid infer line may draw a `shed` response where
+//!   the threaded engine would have answered a parse error.
+//! - **Completions cross threads, I/O does not.** A batcher thread
+//!   finishes a request by settling the admission ticket, pushing a
+//!   [`Completion`] on a channel and writing one byte to a wake pipe;
+//!   only the reactor thread ever touches sockets. A per-request
+//!   generation number discards completions that arrive after the
+//!   deadline sweep already answered.
+//! - **Stalls are fatal, idleness is not.** A peer holding a *partial*
+//!   message without progress (slowloris) or not draining its responses
+//!   is dropped after `read_stall`/`write_stall` and leaves a
+//!   [`fl::CONN_STALLED`] flight event. A connection with no buffered
+//!   bytes can sit idle forever at the cost of one pollfd.
+//! - **Control verbs run inline.** stats/health/metrics/flight execute
+//!   on the reactor thread; they are rare and bounded, but `metrics`
+//!   federates over the rank sockets, so a slow rank briefly stalls the
+//!   event loop. Acceptable for an introspection verb; revisit if these
+//!   ever become hot-path.
+//! - poll(2) is O(registered) per wakeup where epoll is O(ready), but
+//!   the interest list is rebuilt every iteration anyway (state
+//!   machines change interest as they advance); at the 10k scale this
+//!   is a ~80 KiB array scan per wakeup, which is noise next to the
+//!   inference work behind it.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::{Reply, Response};
+use crate::log_warn;
+use crate::obs::flight as fl;
+use crate::obs::metrics as om;
+use crate::obs::trace::{self as tr, TraceId};
+use crate::util::netio::{poll_fds, PollFd, POLL_IN, POLL_OUT};
+
+use super::admission::Ticket;
+use super::lifecycle::{self, Shared, CONN_GRACE, MAX_LINE_BYTES};
+use super::protocol::{self, InferRequest, Request, ServeMsg, WireResponse};
+
+/// Ceiling on one poll wait: stop flags and stall sweeps are checked at
+/// least this often even on a silent fleet.
+const POLL_MAX: Duration = Duration::from_millis(100);
+/// Poll tick while draining after stop (snappy wind-down).
+const STOP_POLL: Duration = Duration::from_millis(10);
+/// Pause reading from a connection whose outbound buffer exceeds this —
+/// backpressure against a peer that pipelines without draining replies.
+const OUT_HIGH_WATER: usize = 8 << 20;
+/// One socket read's scratch size.
+const READ_CHUNK: usize = 16 << 10;
+
+/// Reactor knobs owned by [`lifecycle::ServerConfig`].
+pub(crate) struct ReactorConfig {
+    pub(crate) read_stall: Duration,
+    pub(crate) write_stall: Duration,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ConnState {
+    Reading,
+    Executing,
+    Writing,
+}
+
+/// Per-state residency histograms (`spdnn_serve_conn_state_seconds`).
+struct StateHists {
+    reading: om::Histogram,
+    executing: om::Histogram,
+    writing: om::Histogram,
+}
+
+impl StateHists {
+    fn new() -> StateHists {
+        let h = |state: &str| {
+            om::histogram_labeled(
+                "spdnn_serve_conn_state_seconds",
+                &[("state", state)],
+                "Time reactor connections spend per state before transitioning.",
+                om::LATENCY_BUCKETS,
+            )
+        };
+        StateHists { reading: h("reading"), executing: h("executing"), writing: h("writing") }
+    }
+
+    fn observe(&self, state: ConnState, secs: f64) {
+        match state {
+            ConnState::Reading => self.reading.observe(secs),
+            ConnState::Executing => self.executing.observe(secs),
+            ConnState::Writing => self.writing.observe(secs),
+        }
+    }
+}
+
+/// One in-flight inference on a connection. The admission ticket is NOT
+/// here — it lives inside the batcher callback, so the queue slot stays
+/// held until the panel truly completes even if the deadline sweep
+/// answers the client first (same semantics as the threaded reaper).
+struct Pending {
+    /// Matches [`Completion::gen`]; a mismatch means the deadline sweep
+    /// already answered and this completion is stale.
+    gen: u64,
+    t0: Instant,
+    due: Instant,
+    effective: Duration,
+    /// The "request" obs span — finished with replica/batch args on
+    /// success, dropped (plain finish) on deadline.
+    span: tr::Span,
+    trace: TraceId,
+    want_activations: bool,
+    framed: bool,
+    replica: usize,
+}
+
+/// What a batcher thread hands back to the event loop.
+struct Completion {
+    conn: u64,
+    gen: u64,
+    result: Result<Response>,
+}
+
+/// Everything a submitted request needs to find its way home.
+struct SubmitCtx {
+    completions: mpsc::Sender<Completion>,
+    wake: Arc<UnixStream>,
+}
+
+struct Conn {
+    id: u64,
+    stream: TcpStream,
+    peer: String,
+    peer_is_local: bool,
+    /// Inbound bytes not yet framed into a message.
+    buf: Vec<u8>,
+    /// Newline-scan resume point inside `buf` (see `extract_message`).
+    scanned: usize,
+    /// Outbound bytes the socket has not accepted yet.
+    out: Vec<u8>,
+    pending: Option<Pending>,
+    /// Bumped per submitted request; stale completions don't match.
+    gen: u64,
+    /// Peer sent EOF: answer what's in flight, flush, close.
+    eof: bool,
+    /// Protocol violation answered: flush the error line, then close.
+    closing: bool,
+    /// Socket error: close without ceremony.
+    dead: bool,
+    /// Last read/write/completion progress — the stall-sweep clock.
+    last_progress: Instant,
+    state: ConnState,
+    state_since: Instant,
+}
+
+enum Token {
+    Wake,
+    Listener,
+    Conn(u64),
+}
+
+pub(crate) fn run(listener: TcpListener, shared: Arc<Shared>, cfg: ReactorConfig) {
+    if let Err(e) = event_loop(listener, &shared, &cfg) {
+        log_warn!("serving reactor exited early: {e:#}");
+    }
+}
+
+fn event_loop(listener: TcpListener, shared: &Arc<Shared>, cfg: &ReactorConfig) -> Result<()> {
+    // Wake pipe: batcher callbacks write one byte to pull the reactor
+    // out of poll() when a completion lands. Both ends nonblocking — a
+    // full pipe already guarantees a pending wakeup.
+    let (wake_rx, wake_tx) = UnixStream::pair().context("creating reactor wake pipe")?;
+    wake_rx.set_nonblocking(true).context("nonblocking wake pipe")?;
+    wake_tx.set_nonblocking(true).context("nonblocking wake pipe")?;
+    let (completions_tx, completions_rx) = mpsc::channel::<Completion>();
+    let sub = SubmitCtx { completions: completions_tx, wake: Arc::new(wake_tx) };
+    let hists = StateHists::new();
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_id: u64 = 1;
+    let mut listener = Some(listener);
+    let mut stopping: Option<Instant> = None;
+    let mut fds: Vec<PollFd> = Vec::new();
+    let mut tokens: Vec<Token> = Vec::new();
+
+    loop {
+        let now = Instant::now();
+        if stopping.is_none() && shared.stop.load(Ordering::Acquire) {
+            stopping = Some(now);
+            // Dropping the listener closes it: new connects are refused.
+            listener = None;
+        }
+        if let Some(t0) = stopping {
+            // Close everything with nothing left to say (partial inbound
+            // messages are dropped, same as the threaded engine); give
+            // in-flight requests and unflushed responses a grace period.
+            let idle: Vec<u64> = conns
+                .iter()
+                .filter(|(_, c)| c.pending.is_none() && c.out.is_empty())
+                .map(|(&id, _)| id)
+                .collect();
+            for id in idle {
+                if let Some(c) = conns.remove(&id) {
+                    close_conn(c, shared, &hists);
+                }
+            }
+            if conns.is_empty() || t0.elapsed() > CONN_GRACE {
+                break;
+            }
+        }
+
+        // Rebuild the interest list; state machines change interest as
+        // they advance, so there is nothing incremental to maintain.
+        fds.clear();
+        tokens.clear();
+        fds.push(PollFd::new(wake_rx.as_raw_fd(), POLL_IN));
+        tokens.push(Token::Wake);
+        if let Some(l) = &listener {
+            fds.push(PollFd::new(l.as_raw_fd(), POLL_IN));
+            tokens.push(Token::Listener);
+        }
+        for (&id, c) in conns.iter() {
+            let mut ev = 0i16;
+            let want_read = stopping.is_none()
+                && !c.eof
+                && !c.closing
+                && c.pending.is_none()
+                && c.out.len() < OUT_HIGH_WATER;
+            if want_read {
+                ev |= POLL_IN;
+            }
+            if !c.out.is_empty() {
+                ev |= POLL_OUT;
+            }
+            // ev may be 0 (request in flight): the fd stays registered
+            // so POLLERR/POLLHUP still surface a dead peer.
+            fds.push(PollFd::new(c.stream.as_raw_fd(), ev));
+            tokens.push(Token::Conn(id));
+        }
+
+        let mut timeout = if stopping.is_some() { STOP_POLL } else { POLL_MAX };
+        for c in conns.values() {
+            if let Some(p) = &c.pending {
+                let left = p.due.saturating_duration_since(now);
+                if left < timeout {
+                    timeout = left;
+                }
+            }
+        }
+        poll_fds(&mut fds, timeout.as_millis().min(i32::MAX as u128) as i32)
+            .context("polling the serving reactor")?;
+
+        // Classify readiness before mutating the connection table.
+        let mut accept_ready = false;
+        let mut wake_ready = false;
+        let mut readable: Vec<u64> = Vec::new();
+        let mut writable: Vec<u64> = Vec::new();
+        let mut broken: Vec<u64> = Vec::new();
+        for (f, t) in fds.iter().zip(tokens.iter()) {
+            match t {
+                Token::Wake => wake_ready = f.readable(),
+                Token::Listener => accept_ready = f.readable(),
+                Token::Conn(id) => {
+                    let r = f.events & POLL_IN != 0 && f.readable();
+                    let w = f.events & POLL_OUT != 0 && f.writable();
+                    if r {
+                        readable.push(*id);
+                    }
+                    if w {
+                        writable.push(*id);
+                    }
+                    if !r && !w && f.broken() {
+                        broken.push(*id);
+                    }
+                }
+            }
+        }
+
+        if wake_ready {
+            drain_wake_pipe(&wake_rx);
+        }
+        // Completions drain unconditionally: a wake byte may have been
+        // coalesced into an earlier poll return.
+        while let Ok(c) = completions_rx.try_recv() {
+            apply_completion(&mut conns, c, shared);
+        }
+        for id in broken {
+            if let Some(c) = conns.remove(&id) {
+                close_conn(c, shared, &hists);
+            }
+        }
+        if accept_ready {
+            if let Some(l) = &listener {
+                accept_new_conns(l, &mut conns, &mut next_id, shared);
+            }
+        }
+        for id in writable {
+            if let Some(c) = conns.get_mut(&id) {
+                flush_conn(c);
+            }
+        }
+        for id in readable {
+            if let Some(c) = conns.get_mut(&id) {
+                read_conn(c);
+            }
+        }
+        // Process buffered messages on every connection that can accept
+        // work — not just the ones with fresh socket events: a pipelined
+        // message becomes serveable when a *completion* frees the
+        // connection, with no new bytes arriving.
+        if stopping.is_none() {
+            for c in conns.values_mut() {
+                if !c.dead && !c.buf.is_empty() {
+                    process_messages(c, shared, &sub);
+                }
+            }
+        }
+
+        let now = Instant::now();
+        sweep_deadlines(&mut conns, now, shared);
+
+        // Stall sweep: a *partial* message without progress (slowloris)
+        // or an undrained response kills the connection; a quiet idle
+        // connection (empty buffers) lives forever.
+        let mut stalled: Vec<u64> = Vec::new();
+        for (&id, c) in conns.iter() {
+            if c.dead {
+                continue;
+            }
+            let idle = now.saturating_duration_since(c.last_progress);
+            if c.pending.is_none() && !c.closing && !c.buf.is_empty() && idle > cfg.read_stall {
+                fl::record(fl::CONN_STALLED, || {
+                    format!(
+                        "slowloris: {} sat {:.0}ms mid-message; dropping",
+                        c.peer,
+                        idle.as_secs_f64() * 1e3
+                    )
+                });
+                stalled.push(id);
+            } else if !c.out.is_empty() && idle > cfg.write_stall {
+                fl::record(fl::CONN_STALLED, || {
+                    format!(
+                        "{} stopped draining responses for {:.0}ms; dropping",
+                        c.peer,
+                        idle.as_secs_f64() * 1e3
+                    )
+                });
+                stalled.push(id);
+            }
+        }
+        for id in stalled {
+            if let Some(c) = conns.remove(&id) {
+                close_conn(c, shared, &hists);
+            }
+        }
+
+        // Opportunistic flush: freshly queued responses usually fit the
+        // socket buffer, so most round-trips finish without waiting one
+        // extra poll cycle for POLLOUT.
+        for c in conns.values_mut() {
+            if !c.dead && !c.out.is_empty() {
+                flush_conn(c);
+            }
+        }
+
+        let mut done: Vec<u64> = Vec::new();
+        for (&id, c) in conns.iter() {
+            let finished = c.eof && c.pending.is_none() && c.out.is_empty();
+            let flushed_error = c.closing && c.out.is_empty();
+            if c.dead || finished || flushed_error {
+                done.push(id);
+            }
+        }
+        for id in done {
+            if let Some(c) = conns.remove(&id) {
+                close_conn(c, shared, &hists);
+            }
+        }
+
+        let now = Instant::now();
+        for c in conns.values_mut() {
+            update_state(c, &hists, now);
+        }
+    }
+
+    for (_, c) in conns.drain() {
+        close_conn(c, shared, &hists);
+    }
+    Ok(())
+}
+
+fn drain_wake_pipe(wake_rx: &UnixStream) {
+    let mut sink = [0u8; 64];
+    loop {
+        match (&*wake_rx).read(&mut sink) {
+            Ok(0) => return,
+            Ok(_) => {}
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return, // WouldBlock: drained
+        }
+    }
+}
+
+fn accept_new_conns(
+    listener: &TcpListener,
+    conns: &mut HashMap<u64, Conn>,
+    next_id: &mut u64,
+    shared: &Arc<Shared>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                stream.set_nonblocking(true).ok();
+                stream.set_nodelay(true).ok();
+                if shared.conns.load(Ordering::Acquire) >= shared.max_conns {
+                    // Best-effort refusal: one nonblocking write, drop.
+                    let resp =
+                        WireResponse::Error { message: "connection limit reached".to_string() };
+                    let _ = (&stream).write(&lifecycle::response_bytes(&resp, false));
+                    continue;
+                }
+                shared.conns.fetch_add(1, Ordering::AcqRel);
+                shared.stats.conn_opened();
+                let id = *next_id;
+                *next_id += 1;
+                let now = Instant::now();
+                conns.insert(
+                    id,
+                    Conn {
+                        id,
+                        stream,
+                        peer: peer.to_string(),
+                        // Operator verbs (shutdown/drain) are only
+                        // honoured from loopback peers.
+                        peer_is_local: peer.ip().is_loopback(),
+                        buf: Vec::new(),
+                        scanned: 0,
+                        out: Vec::new(),
+                        pending: None,
+                        gen: 0,
+                        eof: false,
+                        closing: false,
+                        dead: false,
+                        last_progress: now,
+                        state: ConnState::Reading,
+                        state_since: now,
+                    },
+                );
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return, // WouldBlock: accepted everything pending
+        }
+    }
+}
+
+fn read_conn(conn: &mut Conn) {
+    let mut chunk = [0u8; READ_CHUNK];
+    loop {
+        match (&conn.stream).read(&mut chunk) {
+            Ok(0) => {
+                conn.eof = true;
+                return;
+            }
+            Ok(n) => {
+                conn.buf.extend_from_slice(&chunk[..n]);
+                conn.last_progress = Instant::now();
+                if n < chunk.len() {
+                    return; // short read: socket drained
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => {
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+}
+
+fn flush_conn(conn: &mut Conn) {
+    while !conn.out.is_empty() {
+        match (&conn.stream).write(&conn.out) {
+            Ok(0) => {
+                conn.dead = true;
+                return;
+            }
+            Ok(n) => {
+                conn.out.drain(..n);
+                conn.last_progress = Instant::now();
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => {
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+}
+
+fn queue_response(conn: &mut Conn, resp: &WireResponse, framed: bool) {
+    conn.out.extend_from_slice(&lifecycle::response_bytes(resp, framed));
+}
+
+/// Frame and serve every complete buffered message, stopping when a
+/// request goes in flight (per-connection ordering: one at a time).
+fn process_messages(conn: &mut Conn, shared: &Arc<Shared>, sub: &SubmitCtx) {
+    while conn.pending.is_none() && !conn.closing && conn.out.len() < OUT_HIGH_WATER {
+        match protocol::extract_message(&mut conn.buf, &mut conn.scanned, MAX_LINE_BYTES) {
+            Ok(Some(msg)) => {
+                conn.last_progress = Instant::now();
+                handle_message(conn, msg, shared, sub);
+            }
+            Ok(None) => return,
+            Err(e) => {
+                // Protocol violation (over-cap message, bad magic):
+                // report, flush, drop the connection.
+                fl::record(fl::FRAME_ERROR, || format!("{}: {e:#}", conn.peer));
+                queue_response(conn, &WireResponse::Error { message: format!("{e:#}") }, false);
+                conn.closing = true;
+            }
+        }
+    }
+}
+
+fn handle_message(conn: &mut Conn, msg: ServeMsg, shared: &Arc<Shared>, sub: &SubmitCtx) {
+    match msg {
+        ServeMsg::Line(line) => {
+            // Queue-aware admission off the lazy scan: an infer line is
+            // admitted (or shed) before its feature array is parsed, so
+            // a shed costs O(key scan), not O(payload). Divergence from
+            // the threaded engine, documented in the module doc: a line
+            // that is both over-load and malformed sheds here where the
+            // threaded engine answers the parse error.
+            let hinted = match protocol::scan_request_line(&line) {
+                Some(h) if h.op == "infer" => Some(lifecycle::clamp_deadline(h.deadline_ms)),
+                _ => None,
+            };
+            match hinted {
+                Some(deadline) => {
+                    let ticket = match lifecycle::admit(shared, deadline) {
+                        Ok(t) => t,
+                        Err(resp) => {
+                            queue_response(conn, &resp, false);
+                            return;
+                        }
+                    };
+                    match Request::parse_line(&line) {
+                        Ok(Request::Infer(inf)) => {
+                            start_infer(conn, inf, false, Some((ticket, deadline)), shared, sub)
+                        }
+                        Ok(req) => {
+                            // Scanner said infer, strict parser disagrees —
+                            // unreachable by construction, handled anyway.
+                            drop(ticket);
+                            respond_control(conn, req, shared);
+                        }
+                        Err(e) => {
+                            drop(ticket); // frees the queue slot
+                            queue_response(
+                                conn,
+                                &WireResponse::Error { message: format!("{e:#}") },
+                                false,
+                            );
+                        }
+                    }
+                }
+                None => match Request::parse_line(&line) {
+                    // A valid infer the scanner could not hint (e.g. an
+                    // escaped string field): threaded-order slow path.
+                    Ok(Request::Infer(inf)) => start_infer(conn, inf, false, None, shared, sub),
+                    Ok(req) => respond_control(conn, req, shared),
+                    Err(e) => queue_response(
+                        conn,
+                        &WireResponse::Error { message: format!("{e:#}") },
+                        false,
+                    ),
+                },
+            }
+        }
+        ServeMsg::Frame(kind, payload) => match lifecycle::parse_frame_request(kind, &payload) {
+            Ok(Request::Infer(inf)) => start_infer(conn, inf, true, None, shared, sub),
+            Ok(req) => respond_control(conn, req, shared), // unreachable today
+            Err(e) => {
+                queue_response(conn, &WireResponse::Error { message: format!("{e:#}") }, true)
+            }
+        },
+    }
+}
+
+/// Control verbs execute inline on the reactor thread (see module doc).
+fn respond_control(conn: &mut Conn, req: Request, shared: &Arc<Shared>) {
+    let resp = lifecycle::dispatch(req, shared, conn.peer_is_local);
+    queue_response(conn, &resp, false);
+}
+
+fn start_infer(
+    conn: &mut Conn,
+    req: InferRequest,
+    framed: bool,
+    admitted: Option<(Ticket, Option<Duration>)>,
+    shared: &Arc<Shared>,
+    sub: &SubmitCtx,
+) {
+    let want_activations = req.want_activations;
+    // Early returns drop `admitted` (if any) and release its queue slot.
+    let trace = match lifecycle::mint_trace(req.trace.as_deref(), shared) {
+        Ok(t) => t,
+        Err(resp) => {
+            queue_response(conn, &resp, framed);
+            return;
+        }
+    };
+    let features = match lifecycle::resolve_features(req.input, shared) {
+        Ok(f) => f,
+        Err(resp) => {
+            queue_response(conn, &resp, framed);
+            return;
+        }
+    };
+    let (ticket, deadline) = match admitted {
+        Some(x) => x,
+        None => {
+            let d = lifecycle::clamp_deadline(req.deadline_ms);
+            match lifecycle::admit(shared, d) {
+                Ok(t) => (t, d),
+                Err(resp) => {
+                    queue_response(conn, &resp, framed);
+                    return;
+                }
+            }
+        }
+    };
+    let effective = deadline.unwrap_or_else(|| shared.admission.default_deadline());
+    let t0 = Instant::now();
+    let span = tr::timed("request", trace);
+    conn.gen += 1;
+    let (id, gen) = (conn.id, conn.gen);
+    let completions = sub.completions.clone();
+    let wake = sub.wake.clone();
+    let reply = Reply::Callback(Box::new(move |result: Result<Response>| {
+        // Runs on the batcher thread. The queue slot settles HERE, when
+        // the panel truly completes — a request the deadline sweep
+        // already answered keeps holding its slot until now, feeding the
+        // true service time into the admission estimator (the threaded
+        // engine's detached reaper, without the thread).
+        match &result {
+            Ok(_) => ticket.complete(t0.elapsed()),
+            Err(_) => drop(ticket),
+        }
+        let _ = completions.send(Completion { conn: id, gen, result });
+        // One byte pulls the reactor out of poll(). Errors are ignored:
+        // a full pipe already guarantees a wakeup, a closed one means
+        // the reactor is gone and nobody is left to wake.
+        let _ = (&*wake).write_all(&[1]);
+    }));
+    match shared.router.submit_reply(features, trace, reply) {
+        Ok(replica) => {
+            conn.pending = Some(Pending {
+                gen,
+                t0,
+                due: t0 + effective,
+                effective,
+                span,
+                trace,
+                want_activations,
+                framed,
+                replica,
+            });
+        }
+        Err(e) => {
+            // The failed submit dropped the un-sent Reply — and with it
+            // the ticket, so the slot is already free.
+            shared.stats.record_error();
+            queue_response(conn, &WireResponse::Error { message: format!("{e:#}") }, framed);
+        }
+    }
+}
+
+fn apply_completion(conns: &mut HashMap<u64, Conn>, c: Completion, shared: &Arc<Shared>) {
+    let conn = match conns.get_mut(&c.conn) {
+        Some(x) => x,
+        None => return, // connection died while the panel was in flight
+    };
+    if conn.pending.as_ref().map(|p| p.gen) != Some(c.gen) {
+        return; // stale: the deadline sweep already answered this one
+    }
+    let p = conn.pending.take().expect("pending gen matched above");
+    let resp = match c.result {
+        Ok(r) => {
+            let elapsed = p.t0.elapsed();
+            let span = p.span.arg("replica", p.replica).arg("batch_size", r.batch_size);
+            shared.stats.record_ok(span.finish_secs());
+            shared.stats.record_edges(shared.edges_per_row);
+            WireResponse::Infer {
+                active: r.active,
+                replica: p.replica,
+                batch_size: r.batch_size,
+                latency_ms: elapsed.as_secs_f64() * 1e3,
+                trace: p.trace.to_hex(),
+                activations: p.want_activations.then_some(r.activations),
+            }
+        }
+        Err(e) => {
+            shared.stats.record_error();
+            WireResponse::Error { message: format!("inference failed: {e:#}") }
+        }
+    };
+    queue_response(conn, &resp, p.framed);
+    conn.last_progress = Instant::now();
+}
+
+fn sweep_deadlines(conns: &mut HashMap<u64, Conn>, now: Instant, shared: &Arc<Shared>) {
+    for conn in conns.values_mut() {
+        let due = conn.pending.as_ref().map(|p| now >= p.due).unwrap_or(false);
+        if !due {
+            continue;
+        }
+        // Taking `pending` makes the eventual completion stale (gen no
+        // longer matches); its callback still settles the ticket.
+        let p = conn.pending.take().expect("due checked above");
+        shared.stats.record_error();
+        let resp = WireResponse::Error {
+            message: format!("deadline exceeded after {:.1}ms", p.effective.as_secs_f64() * 1e3),
+        };
+        queue_response(conn, &resp, p.framed);
+        conn.last_progress = now;
+        // p.span drops here and finishes plain — same as the threaded
+        // engine's timeout arm.
+    }
+}
+
+fn update_state(conn: &mut Conn, hists: &StateHists, now: Instant) {
+    let derived = if conn.pending.is_some() {
+        ConnState::Executing
+    } else if !conn.out.is_empty() {
+        ConnState::Writing
+    } else {
+        ConnState::Reading
+    };
+    if derived != conn.state {
+        hists.observe(conn.state, now.saturating_duration_since(conn.state_since).as_secs_f64());
+        conn.state = derived;
+        conn.state_since = now;
+    }
+}
+
+fn close_conn(conn: Conn, shared: &Arc<Shared>, hists: &StateHists) {
+    hists.observe(conn.state, conn.state_since.elapsed().as_secs_f64());
+    shared.conns.fetch_sub(1, Ordering::AcqRel);
+    shared.stats.conn_closed();
+    // Dropping the stream closes the socket.
+}

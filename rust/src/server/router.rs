@@ -30,7 +30,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::cluster::{ClusterOptions, ModelSpec};
 use crate::coordinator::batcher::{
-    BatchPolicy, InferenceServer, Response, ServeBackend, ServedModel,
+    BatchPolicy, InferenceServer, Reply, Response, ServeBackend, ServedModel,
 };
 use crate::coordinator::partition::{imbalance, partition_even};
 use crate::coordinator::NativeSpec;
@@ -53,6 +53,13 @@ impl ReplicaUnit {
         match self {
             ReplicaUnit::Native(s) => s.submit_traced(features, trace),
             ReplicaUnit::Cluster(c) => c.submit_traced(features, trace),
+        }
+    }
+
+    fn submit_reply(&self, features: Vec<f32>, trace: TraceId, reply: Reply) -> Result<()> {
+        match self {
+            ReplicaUnit::Native(s) => s.submit_reply(features, trace, reply),
+            ReplicaUnit::Cluster(c) => c.submit_reply(features, trace, reply),
         }
     }
 
@@ -209,18 +216,32 @@ impl ReplicaRouter {
         features: Vec<f32>,
         trace: TraceId,
     ) -> Result<(usize, mpsc::Receiver<Result<Response>>)> {
-        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
-        let primary = self.slots[seq % self.slots.len()];
-        let n = self.units.len();
-        let replica = (0..n)
-            .map(|off| (primary + off) % n)
-            .find(|&r| !self.units[r].is_lame())
-            .ok_or_else(|| {
-                anyhow!("every replica is degraded (all cluster rank subsets lost a rank)")
-            })?;
+        let replica = self.route()?;
         let rx = self.units[replica].submit(features, trace)?;
         self.routed[replica].fetch_add(1, Ordering::Relaxed);
         Ok((replica, rx))
+    }
+
+    /// [`submit_traced`](Self::submit_traced) answering through `reply`
+    /// instead of a fresh channel: the reactor's completion-callback
+    /// path. Routing (slot choice, lame-skip) is identical, so the two
+    /// paths cannot pick different replicas for the same request stream.
+    pub fn submit_reply(&self, features: Vec<f32>, trace: TraceId, reply: Reply) -> Result<usize> {
+        let replica = self.route()?;
+        self.units[replica].submit_reply(features, trace, reply)?;
+        self.routed[replica].fetch_add(1, Ordering::Relaxed);
+        Ok(replica)
+    }
+
+    /// Pick the next replica: the slot's primary, or the first live
+    /// replica after it when the primary is lame.
+    fn route(&self) -> Result<usize> {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let primary = self.slots[seq % self.slots.len()];
+        let n = self.units.len();
+        (0..n).map(|off| (primary + off) % n).find(|&r| !self.units[r].is_lame()).ok_or_else(
+            || anyhow!("every replica is degraded (all cluster rank subsets lost a rank)"),
+        )
     }
 
     /// Blocking submit + receive.

@@ -65,6 +65,8 @@ pub struct ServerStats {
     /// process-global: two server instances in one test process would
     /// otherwise pollute each other's summaries.
     latency: om::Histogram,
+    /// Open client connections right now (either I/O engine).
+    connections: AtomicU64,
     /// Process-global obs mirrors of the per-server counters, surfaced
     /// through `{"op":"metrics"}`. `m_latency` sees the exact
     /// observation stream `latency` does.
@@ -72,6 +74,7 @@ pub struct ServerStats {
     m_errors: om::Counter,
     m_edges: om::Counter,
     m_latency: om::Histogram,
+    m_connections: om::Gauge,
 }
 
 impl ServerStats {
@@ -95,12 +98,33 @@ impl ServerStats {
                 "spdnn_serve_edges_total",
                 "Edges traversed by answered inference requests.",
             ),
+            connections: AtomicU64::new(0),
             m_latency: om::histogram(
                 "spdnn_serve_latency_seconds",
                 "End-to-end inference latency (admission to reply).",
                 om::LATENCY_BUCKETS,
             ),
+            m_connections: om::gauge(
+                "spdnn_serve_open_connections",
+                "Client connections currently open.",
+            ),
         }
+    }
+
+    /// One client connection accepted (either I/O engine).
+    pub fn conn_opened(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+        self.m_connections.add(1);
+    }
+
+    /// One client connection closed (EOF, error, stall kill or drain).
+    pub fn conn_closed(&self) {
+        self.connections.fetch_sub(1, Ordering::Relaxed);
+        self.m_connections.add(-1);
+    }
+
+    pub fn connections(&self) -> u64 {
+        self.connections.load(Ordering::Relaxed)
     }
 
     /// One answered inference request. The latency is the `request`
@@ -210,6 +234,7 @@ impl ServerStats {
             ("errors", Json::Int(self.errors() as i64)),
             ("admitted", Json::Int(admission.admitted() as i64)),
             ("shed", Json::Int(admission.shed() as i64)),
+            ("connections", Json::Int(self.connections() as i64)),
             ("queue_depth", Json::Int(admission.depth() as i64)),
             ("queue_cap", Json::Int(admission.queue_cap() as i64)),
             ("draining", Json::Bool(admission.is_draining())),
@@ -314,9 +339,13 @@ mod tests {
         st.record_ok(0.020);
         st.record_error();
         st.record_edges(1000);
+        st.conn_opened();
+        st.conn_opened();
+        st.conn_closed();
         assert_eq!(st.requests(), 3);
         assert_eq!(st.errors(), 1);
         assert_eq!(st.edges(), 1000);
+        assert_eq!(st.connections(), 1);
         let s = st.latency_summary().unwrap();
         assert_eq!(s.count, 2);
         // Mean comes from the histogram's exact sum, max is tracked

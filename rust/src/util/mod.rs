@@ -6,6 +6,7 @@ pub mod cli;
 pub mod config;
 pub mod json;
 pub mod logger;
+pub mod netio;
 pub mod proptest;
 pub mod prng;
 pub mod stats;

@@ -1,0 +1,175 @@
+//! Shared network-I/O substrates: bounds-checked line reads (used by
+//! both the cluster wire and the serving front-end) and a minimal
+//! poll(2) wrapper so the serving reactor can multiplex thousands of
+//! sockets without pulling in an event-loop dependency.
+//!
+//! The poll wrapper goes through a direct `extern "C"` binding: the
+//! crate already links libc via `std`, and the three-field `pollfd`
+//! layout is identical across the platforms we target. poll(2) is O(n)
+//! per call where epoll is O(ready), but the reactor rebuilds its
+//! interest list every iteration anyway (connections change read/write
+//! interest as their state machines advance), so the portable call is
+//! the right trade at our scale — 10k registered fds is a ~80 KiB
+//! array scan per wakeup.
+
+use std::io;
+use std::os::unix::io::RawFd;
+
+use anyhow::{bail, Context, Result};
+use std::io::BufRead;
+
+// ---------------------------------------------------------------------------
+// Capped line reads
+// ---------------------------------------------------------------------------
+
+/// `read_line` with a hard byte cap: a peer that streams one giant line
+/// (or never sends a newline) gets an error instead of growing the
+/// buffer without bound. Returns the bytes consumed (0 on EOF).
+pub fn read_line_capped(r: &mut impl BufRead, line: &mut String, cap: usize) -> Result<usize> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let (done, used) = {
+            let chunk = r.fill_buf().context("reading wire line")?;
+            if chunk.is_empty() {
+                (true, 0)
+            } else {
+                match chunk.iter().position(|&b| b == b'\n') {
+                    Some(i) => {
+                        buf.extend_from_slice(&chunk[..=i]);
+                        (true, i + 1)
+                    }
+                    None => {
+                        buf.extend_from_slice(chunk);
+                        (false, chunk.len())
+                    }
+                }
+            }
+        };
+        r.consume(used);
+        if buf.len() > cap {
+            bail!("wire line of {}+ bytes exceeds the {cap}-byte frame cap", buf.len());
+        }
+        if done {
+            break;
+        }
+    }
+    let n = buf.len();
+    line.push_str(std::str::from_utf8(&buf).context("wire line is not UTF-8")?);
+    Ok(n)
+}
+
+// ---------------------------------------------------------------------------
+// poll(2)
+// ---------------------------------------------------------------------------
+
+/// Readable-data event bit (POSIX `POLLIN`).
+pub const POLL_IN: i16 = 0x001;
+/// Writable-without-blocking event bit (POSIX `POLLOUT`).
+pub const POLL_OUT: i16 = 0x004;
+/// Error condition (always polled; only meaningful in `revents`).
+pub const POLL_ERR: i16 = 0x008;
+/// Peer hung up (always polled; only meaningful in `revents`).
+pub const POLL_HUP: i16 = 0x010;
+
+/// `struct pollfd` with the exact C layout poll(2) expects.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct PollFd {
+    pub fd: RawFd,
+    pub events: i16,
+    pub revents: i16,
+}
+
+impl PollFd {
+    pub fn new(fd: RawFd, events: i16) -> Self {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    pub fn readable(&self) -> bool {
+        self.revents & (POLL_IN | POLL_HUP | POLL_ERR) != 0
+    }
+
+    pub fn writable(&self) -> bool {
+        self.revents & (POLL_OUT | POLL_ERR) != 0
+    }
+
+    /// The fd is dead (error or hangup) regardless of interest bits.
+    pub fn broken(&self) -> bool {
+        self.revents & (POLL_ERR | POLL_HUP) != 0
+    }
+}
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: libc_nfds_t, timeout: i32) -> i32;
+}
+
+#[allow(non_camel_case_types)]
+type libc_nfds_t = u64;
+
+/// Block until at least one fd is ready, the timeout elapses, or a
+/// signal interrupts. Returns the number of entries with non-zero
+/// `revents` (0 on timeout). EINTR is retried with the remaining
+/// timeout collapsed to zero so callers re-check their stop flags.
+pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    for f in fds.iter_mut() {
+        f.revents = 0;
+    }
+    let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as libc_nfds_t, timeout_ms) };
+    if n >= 0 {
+        return Ok(n as usize);
+    }
+    let err = io::Error::last_os_error();
+    if err.kind() == io::ErrorKind::Interrupted {
+        // Treat the interrupted wait as an early wakeup; the caller's
+        // loop re-polls with fresh interest anyway.
+        return Ok(0);
+    }
+    Err(err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn capped_line_read_enforces_cap() {
+        let data = b"short line\n";
+        let mut r = io::BufReader::new(&data[..]);
+        let mut line = String::new();
+        let n = read_line_capped(&mut r, &mut line, 64).unwrap();
+        assert_eq!(n, data.len());
+        assert_eq!(line, "short line\n");
+
+        let long = vec![b'x'; 128];
+        let mut r = io::BufReader::new(&long[..]);
+        let mut line = String::new();
+        let err = read_line_capped(&mut r, &mut line, 64).unwrap_err();
+        assert!(err.to_string().contains("frame cap"), "{err:#}");
+    }
+
+    #[test]
+    fn poll_reports_readable_after_write() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLL_IN)];
+        // Nothing written yet: a zero-timeout poll sees nothing.
+        assert_eq!(poll_fds(&mut fds, 0).unwrap(), 0);
+        assert!(!fds[0].readable());
+        (&b).write_all(b"!").unwrap();
+        let n = poll_fds(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].readable());
+    }
+
+    #[test]
+    fn poll_reports_hup_on_peer_close() {
+        let (a, b) = UnixStream::pair().unwrap();
+        drop(b);
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLL_IN)];
+        let n = poll_fds(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].broken() || fds[0].readable());
+    }
+}

@@ -1,0 +1,307 @@
+//! Chaos and equivalence tests for the reactor serving engine: slowloris
+//! eviction, abruptly-vanishing peers, a thousand idle connections that
+//! must cost pollfds instead of threads, json-vs-binary wire identity,
+//! and reactor-vs-threads engine identity on answers and error strings.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use spdnn::cluster::WireFormat;
+use spdnn::coordinator::batcher::{BatchPolicy, ServeBackend, ServedModel};
+use spdnn::data::Dataset;
+use spdnn::server::{
+    Client, IoMode, ReferencePanel, Request, Server, ServerConfig, ServerHandle, WireResponse,
+};
+use spdnn::util::config::RuntimeConfig;
+use spdnn::util::proptest::{self, Runner};
+
+const NEURONS: usize = 64;
+
+fn dataset() -> Dataset {
+    let cfg = RuntimeConfig { neurons: NEURONS, layers: 4, k: 4, batch: 8, ..Default::default() };
+    Dataset::generate(&cfg).unwrap()
+}
+
+fn start_io(ds: &Dataset, cfg: ServerConfig) -> ServerHandle {
+    let reference = ReferencePanel { features: ds.features.clone(), neurons: NEURONS };
+    Server::start(cfg, ServedModel::from_dataset(ds), ServeBackend::native(1, 12), Some(reference))
+        .unwrap()
+}
+
+fn reactor_cfg() -> ServerConfig {
+    ServerConfig {
+        replicas: 1,
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        io: IoMode::Reactor,
+        ..Default::default()
+    }
+}
+
+/// The open-connection count the server reports through `{"op":"stats"}`.
+fn connections(client: &mut Client) -> usize {
+    match client.call(&Request::Stats).unwrap() {
+        WireResponse::Stats(s) => s.req_usize("connections").unwrap(),
+        other => panic!("stats verb failed: {other:?}"),
+    }
+}
+
+#[test]
+fn slowloris_is_evicted_while_service_continues() {
+    let ds = dataset();
+    let mut cfg = reactor_cfg();
+    cfg.read_stall = Duration::from_millis(150);
+    let handle = start_io(&ds, cfg);
+    let addr = handle.addr();
+
+    // The slowloris: drip half a request and go quiet. An *idle*
+    // connection (no partial message) must survive the same window.
+    let mut slow = TcpStream::connect(addr).unwrap();
+    slow.write_all(b"{\"op\":\"inf").unwrap();
+    let idle = TcpStream::connect(addr).unwrap();
+
+    // A healthy client is served while both sit there.
+    let mut client = Client::connect(addr).unwrap();
+    assert!(matches!(client.call(&Request::infer_row(0)).unwrap(), WireResponse::Infer { .. }));
+
+    // Past the read-stall deadline the reactor drops the connection:
+    // the dripper's next read sees EOF (or a reset).
+    slow.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = [0u8; 64];
+    match slow.read(&mut buf) {
+        Ok(0) => {}
+        Ok(n) => panic!("slowloris read {n} bytes instead of a close"),
+        Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+            panic!("slowloris connection was never dropped")
+        }
+        Err(_) => {} // ECONNRESET: also dropped
+    }
+
+    // The idle connection is still usable after the sweep that killed
+    // the dripper, and service is unaffected.
+    let mut idle = idle;
+    idle.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut one = [0u8; 1];
+    assert_eq!(idle.read(&mut one).unwrap(), 1, "idle connection must outlive the stall sweep");
+    assert!(matches!(client.call(&Request::infer_row(1)).unwrap(), WireResponse::Infer { .. }));
+    handle.shutdown();
+}
+
+#[test]
+fn vanishing_peers_leak_neither_connections_nor_service() {
+    let ds = dataset();
+    let handle = start_io(&ds, reactor_cfg());
+    let addr = handle.addr();
+    let mut client = Client::connect_wire(addr, WireFormat::Bin).unwrap();
+    assert_eq!(client.wire(), WireFormat::Bin);
+    let baseline = connections(&mut client);
+
+    // Peers that vanish at every phase of the request cycle.
+    for _ in 0..8 {
+        // Connected, never spoke.
+        drop(TcpStream::connect(addr).unwrap());
+        // Half-open: FIN the write side without sending a byte.
+        let s = TcpStream::connect(addr).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        drop(s);
+        // Request sent, gone before the response could be written.
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"{\"op\":\"infer\",\"row\":0}\n").unwrap();
+        drop(s);
+    }
+
+    // The reactor reaps them all; the gauge returns to baseline.
+    let t0 = Instant::now();
+    loop {
+        if connections(&mut client) <= baseline {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "vanished peers were never reaped");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // Live traffic still flows on the negotiated binary wire.
+    assert!(matches!(client.call(&Request::infer_row(0)).unwrap(), WireResponse::Infer { .. }));
+    handle.shutdown();
+}
+
+/// `Threads:` from /proc/self/status (Linux; None elsewhere).
+fn os_thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+#[test]
+fn a_thousand_idle_connections_cost_no_threads() {
+    let before_probe = os_thread_count();
+    if before_probe.is_none() {
+        eprintln!("skipping: /proc/self/status not readable on this platform");
+        return;
+    }
+
+    let ds = dataset();
+    let mut cfg = reactor_cfg();
+    cfg.max_conns = 1500;
+    let handle = start_io(&ds, cfg);
+    let addr = handle.addr();
+
+    // Steady state first so replica/reactor threads are all started.
+    let mut client = Client::connect_wire(addr, WireFormat::Bin).unwrap();
+    assert!(matches!(client.call(&Request::infer_row(0)).unwrap(), WireResponse::Infer { .. }));
+    let before = os_thread_count().unwrap();
+
+    let idle: Vec<TcpStream> = (0..1000).map(|_| TcpStream::connect(addr).unwrap()).collect();
+
+    // Live traffic threads through the idle crowd.
+    for i in 0..8 {
+        assert!(matches!(
+            client.call(&Request::infer_row(i % ds.cfg.batch)).unwrap(),
+            WireResponse::Infer { .. }
+        ));
+    }
+    let during = os_thread_count().unwrap();
+    assert!(
+        during <= before + 4,
+        "idle connections must cost pollfds, not threads: {before} -> {during}"
+    );
+    // The server sees the whole crowd (1000 idle + this client).
+    assert!(connections(&mut client) > 1000, "connection gauge missed the idle crowd");
+
+    drop(idle);
+    handle.shutdown();
+}
+
+#[test]
+fn json_and_binary_wires_answer_bit_identically() {
+    let ds = dataset();
+    let handle = start_io(&ds, reactor_cfg());
+    let addr = handle.addr();
+    let mut json = Client::connect(addr).unwrap();
+    let mut bin = Client::connect_wire(addr, WireFormat::Bin).unwrap();
+    assert_eq!(json.wire(), WireFormat::Json);
+    assert_eq!(bin.wire(), WireFormat::Bin, "a v2 server must accept the hello");
+
+    Runner::new(48, 0xB17).run("json-vs-bin-wire-identity", |rng| {
+        let feats = proptest::vec_f32(rng, NEURONS, 0.0, 1.0);
+        let req = Request::infer_features(feats);
+        let a = json.call(&req).map_err(|e| format!("json call: {e:#}"))?;
+        let b = bin.call(&req).map_err(|e| format!("bin call: {e:#}"))?;
+        match (a, b) {
+            (
+                WireResponse::Infer { active: aa, activations: va, .. },
+                WireResponse::Infer { active: ab, activations: vb, .. },
+            ) => {
+                if aa != ab {
+                    return Err(format!("active flag diverges: json={aa} bin={ab}"));
+                }
+                let va = va.ok_or("json response dropped activations")?;
+                let vb = vb.ok_or("bin response dropped activations")?;
+                if va.len() != vb.len()
+                    || va.iter().zip(&vb).any(|(x, y)| x.to_bits() != y.to_bits())
+                {
+                    return Err("activations diverge between the wires".to_string());
+                }
+                Ok(())
+            }
+            other => Err(format!("non-infer response pair: {other:?}")),
+        }
+    });
+    handle.shutdown();
+}
+
+/// One raw request against `addr`; returns everything up to and
+/// including the first newline of the response.
+fn raw_response_line(addr: SocketAddr, payload: &[u8]) -> Vec<u8> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(payload).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        match s.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+                    buf.truncate(pos + 1);
+                    break;
+                }
+            }
+            Err(e) => panic!("raw read from {addr}: {e}"),
+        }
+    }
+    buf
+}
+
+#[test]
+fn reactor_and_threads_engines_answer_identically() {
+    let ds = dataset();
+    let mk = |io: IoMode| {
+        let mut cfg = reactor_cfg();
+        cfg.io = io;
+        start_io(&ds, cfg)
+    };
+    let threads = mk(IoMode::Threads);
+    let reactor = mk(IoMode::Reactor);
+    let mut ct = Client::connect_wire(threads.addr(), WireFormat::Bin).unwrap();
+    let mut cr = Client::connect_wire(reactor.addr(), WireFormat::Bin).unwrap();
+    assert_eq!(ct.wire(), WireFormat::Bin);
+    assert_eq!(cr.wire(), WireFormat::Bin);
+
+    // Happy path: bit-identical activations row by row (the same seed
+    // generated the same dataset behind both servers).
+    for i in 0..ds.cfg.batch {
+        let a = ct.call(&Request::infer_row(i)).unwrap();
+        let b = cr.call(&Request::infer_row(i)).unwrap();
+        match (a, b) {
+            (
+                WireResponse::Infer { active: aa, activations: va, .. },
+                WireResponse::Infer { active: ab, activations: vb, .. },
+            ) => {
+                assert_eq!(aa, ab, "row {i}: active flag diverges");
+                let (va, vb) = (va.unwrap(), vb.unwrap());
+                assert_eq!(va.len(), vb.len(), "row {i}");
+                assert!(
+                    va.iter().zip(&vb).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "row {i}: activations diverge between engines"
+                );
+            }
+            other => panic!("row {i}: non-infer response pair {other:?}"),
+        }
+    }
+
+    // Deterministic error paths: the strings must match byte for byte.
+    for req in [Request::infer_row(999), Request::infer_features(vec![0.0; 3])] {
+        let a = ct.call(&req).unwrap();
+        let b = cr.call(&req).unwrap();
+        match (a, b) {
+            (WireResponse::Error { message: ma }, WireResponse::Error { message: mb }) => {
+                assert_eq!(ma, mb, "error strings diverge between engines");
+            }
+            other => panic!("expected an error pair, got {other:?}"),
+        }
+    }
+
+    // A malformed line gets the identical raw error bytes from both.
+    let a = raw_response_line(threads.addr(), b"this is not json\n");
+    let b = raw_response_line(reactor.addr(), b"this is not json\n");
+    assert!(!a.is_empty(), "threads engine answered nothing to a malformed line");
+    assert_eq!(
+        String::from_utf8_lossy(&a),
+        String::from_utf8_lossy(&b),
+        "malformed-line responses diverge between engines"
+    );
+
+    // Control verbs agree too (ping is timing-free).
+    assert_eq!(ct.call(&Request::Ping).unwrap(), cr.call(&Request::Ping).unwrap());
+
+    threads.shutdown();
+    reactor.shutdown();
+}
