@@ -157,6 +157,10 @@ impl Default for ClusterOptions {
 pub struct ClusterCoordinator {
     clients: Vec<ClusterClient>,
     model: Option<ModelSpec>,
+    /// The engine spec `load` shipped — kept so [`rebuild`] can re-ship
+    /// the recipe to replacement ranks without the caller re-supplying
+    /// it. [`ClusterCoordinator::rebuild`]
+    spec: Option<NativeSpec>,
     opts: ClusterOptions,
     /// Whether to prune dead features between layers (set by `load`;
     /// applied coordinator-side in weights mode, rank-side otherwise).
@@ -200,7 +204,31 @@ impl ClusterCoordinator {
             }
             clients.push(client);
         }
-        Ok(ClusterCoordinator { clients, model: None, opts, prune: true })
+        Ok(ClusterCoordinator { clients, model: None, spec: None, opts, prune: true })
+    }
+
+    /// Heal this coordinator against a (possibly partially replaced)
+    /// address set, same rank order as the original `connect_with`.
+    ///
+    /// Worker ranks serve one connection at a time, so every old
+    /// connection is dropped *first* — surviving ranks return to their
+    /// accept loop — and only then are the fresh connections dialed,
+    /// hello-negotiated, and (when a model was loaded) sent the weight
+    /// recipe again. On failure the coordinator is left with **no**
+    /// connections: every run fails fast until a later `rebuild`
+    /// succeeds, which is exactly the lame-replica state the serving
+    /// tier's healer retries out of.
+    pub fn rebuild(&mut self, addrs: &[SocketAddr]) -> Result<()> {
+        self.clients.clear();
+        let fresh = ClusterCoordinator::connect_with(addrs, self.opts)
+            .context("reconnecting the rank fleet")?;
+        self.clients = fresh.clients;
+        if let Some(model) = self.model.clone() {
+            let spec = self.spec.ok_or_else(|| anyhow!("model recorded without its spec"))?;
+            let prune = self.prune;
+            self.load(&model, spec, prune).context("re-shipping the weight recipe")?;
+        }
+        Ok(())
     }
 
     pub fn ranks(&self) -> usize {
@@ -270,6 +298,7 @@ impl ClusterCoordinator {
             }
         }
         self.model = Some(model.clone());
+        self.spec = Some(spec);
         self.prune = prune;
         Ok(())
     }
@@ -289,6 +318,10 @@ impl ClusterCoordinator {
     /// `TraceId::NONE` makes this exactly `run` (a no-op branch per
     /// scatter when the recorder is disabled).
     pub fn run_traced(&mut self, features: &[f32], trace: TraceId) -> Result<ClusterReport> {
+        if self.clients.is_empty() {
+            // Only a failed `rebuild` leaves a coordinator here.
+            bail!("no rank connections (a heal attempt failed; the fleet is being rebuilt)");
+        }
         match self.opts.partition {
             PartitionScheme::Features => self.run_features_traced(features, trace),
             PartitionScheme::Weights => self.run_weights_traced(features, trace),
@@ -883,7 +916,7 @@ impl LocalCluster {
     /// Graceful drain: shutdown ops to every rank, then reap the
     /// processes within a deadline.
     pub fn stop(self) -> Result<()> {
-        let LocalCluster { launcher, mut coordinator } = self;
+        let LocalCluster { mut launcher, mut coordinator } = self;
         coordinator.shutdown();
         launcher.wait_exit(SHUTDOWN_LIMIT)
     }

@@ -1,0 +1,229 @@
+//! Healing policy for the serving fleet: how hard a lame replica tries
+//! to get its dead ranks back.
+//!
+//! The paper's fleet is static — §IV.C assumes every GPU survives the
+//! run — but a serving fleet cannot: one killed worker rank would lame
+//! its replica for the server's whole lifetime. Because weights ship as
+//! deterministic *recipes* (not tensors), a dead rank is cheaply
+//! reconstructible: respawn the process (launcher-owned fleets) or
+//! reconnect to the same address (adopted `--worker-addrs` fleets),
+//! re-run hello negotiation, re-ship the recipe, and swap the rebuilt
+//! coordinator back into the replica.
+//!
+//! This module holds the *policy* side of that loop: the
+//! [`HealPolicy`] parsed from `--heal retries×backoff|off`, the
+//! [`HealState`] machine a replica moves through
+//! (`ok → respawning → healed | exhausted`), and the [`HealStatus`]
+//! atomics `/stats` reads. The *mechanism* — the per-replica supervisor
+//! thread that watches health flags, runs ping sweeps and performs the
+//! rebuild — lives in `server::cluster_backend`.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// Bounded retry/backoff policy for replica healing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HealPolicy {
+    /// Whether healing runs at all. Off preserves the historical
+    /// behavior: a lame replica stays lame for the server's lifetime.
+    pub enabled: bool,
+    /// Heal attempts per lame incident; a successful heal refills the
+    /// budget for the next incident.
+    pub retries: usize,
+    /// Wait between consecutive failed attempts.
+    pub backoff: Duration,
+}
+
+impl HealPolicy {
+    /// Healing disabled: lame replicas stay lame (the pre-heal fleet).
+    pub fn off() -> HealPolicy {
+        HealPolicy { enabled: false, retries: 0, backoff: Duration::ZERO }
+    }
+
+    /// The bare `--heal` default: 5 attempts, 500 ms apart.
+    pub fn default_on() -> HealPolicy {
+        HealPolicy { enabled: true, retries: 5, backoff: Duration::from_millis(500) }
+    }
+
+    /// Parse the `--heal` flag value: `off`, empty (bare flag → the
+    /// default policy), or `RETRIESxBACKOFF_MS` like `5x500` (`×` is
+    /// accepted for the multiplication sign).
+    pub fn parse(s: &str) -> Result<HealPolicy> {
+        let s = s.trim();
+        match s {
+            "" => return Ok(HealPolicy::default_on()),
+            "off" => return Ok(HealPolicy::off()),
+            _ => {}
+        }
+        let (retries, backoff) = s
+            .split_once(['x', '×'])
+            .with_context(|| format!("bad --heal value {s:?} (want RETRIESxBACKOFF_MS or off)"))?;
+        let retries: usize = retries
+            .trim()
+            .parse()
+            .with_context(|| format!("bad --heal retry count {retries:?}"))?;
+        let backoff_ms: u64 = backoff
+            .trim()
+            .parse()
+            .with_context(|| format!("bad --heal backoff milliseconds {backoff:?}"))?;
+        if retries == 0 {
+            bail!("--heal needs at least one retry (use `off` to disable healing)");
+        }
+        Ok(HealPolicy { enabled: true, retries, backoff: Duration::from_millis(backoff_ms) })
+    }
+}
+
+impl fmt::Display for HealPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.enabled {
+            write!(f, "{}x{}", self.retries, self.backoff.as_millis())
+        } else {
+            f.write_str("off")
+        }
+    }
+}
+
+/// Where a replica stands in the healing state machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum HealState {
+    /// Healing disabled for this replica (`--heal off`, or no healer).
+    Off = 0,
+    /// No incident since start (or the healer has not engaged yet).
+    Ok = 1,
+    /// An incident is live: the healer is between attempts or mid-way
+    /// through respawn/reconnect/reload.
+    Respawning = 2,
+    /// The last incident healed: ranks respawned or reconnected, recipe
+    /// re-shipped, coordinator swapped back in.
+    Healed = 3,
+    /// The retry budget ran out; the replica stays lame.
+    Exhausted = 4,
+}
+
+impl HealState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            HealState::Off => "off",
+            HealState::Ok => "ok",
+            HealState::Respawning => "respawning",
+            HealState::Healed => "healed",
+            HealState::Exhausted => "exhausted",
+        }
+    }
+
+    fn from_u8(v: u8) -> HealState {
+        match v {
+            1 => HealState::Ok,
+            2 => HealState::Respawning,
+            3 => HealState::Healed,
+            4 => HealState::Exhausted,
+            _ => HealState::Off,
+        }
+    }
+}
+
+/// Per-replica healing telemetry, shared between the healer thread and
+/// the `/stats` snapshot (and through it the `{"op":"health"}` verdict,
+/// which treats an actively-respawning fleet as degraded, not
+/// critical).
+pub struct HealStatus {
+    state: AtomicU8,
+    heals: AtomicU64,
+    failures: AtomicU64,
+}
+
+impl HealStatus {
+    pub fn new(policy: HealPolicy) -> HealStatus {
+        let state = if policy.enabled { HealState::Ok } else { HealState::Off };
+        HealStatus {
+            state: AtomicU8::new(state as u8),
+            heals: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+        }
+    }
+
+    pub fn state(&self) -> HealState {
+        HealState::from_u8(self.state.load(Ordering::Acquire))
+    }
+
+    pub fn set_state(&self, s: HealState) {
+        self.state.store(s as u8, Ordering::Release);
+    }
+
+    /// Completed heals (replica returned to service).
+    pub fn heals(&self) -> u64 {
+        self.heals.load(Ordering::Relaxed)
+    }
+
+    /// Failed heal attempts (the incident may still heal on a retry).
+    pub fn failures(&self) -> u64 {
+        self.failures.load(Ordering::Relaxed)
+    }
+
+    pub fn record_heal(&self) {
+        self.heals.fetch_add(1, Ordering::Relaxed);
+        self.set_state(HealState::Healed);
+    }
+
+    pub fn record_failure(&self) {
+        self.failures.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_flag_means_default_policy() {
+        let p = HealPolicy::parse("").unwrap();
+        assert_eq!(p, HealPolicy::default_on());
+        assert!(p.enabled);
+        assert_eq!(p.to_string(), "5x500");
+    }
+
+    #[test]
+    fn off_disables_healing() {
+        let p = HealPolicy::parse("off").unwrap();
+        assert!(!p.enabled);
+        assert_eq!(p.to_string(), "off");
+    }
+
+    #[test]
+    fn retries_times_backoff_parses_with_either_sign() {
+        for v in ["3x250", "3×250", " 3 x 250 "] {
+            let p = HealPolicy::parse(v).unwrap();
+            assert!(p.enabled, "{v}");
+            assert_eq!(p.retries, 3, "{v}");
+            assert_eq!(p.backoff, Duration::from_millis(250), "{v}");
+        }
+    }
+
+    #[test]
+    fn malformed_policies_are_rejected() {
+        for v in ["5", "x", "5x", "x500", "0x500", "-1x500", "5xabc", "on"] {
+            assert!(HealPolicy::parse(v).is_err(), "{v:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn status_tracks_state_and_counts() {
+        let s = HealStatus::new(HealPolicy::off());
+        assert_eq!(s.state(), HealState::Off);
+        let s = HealStatus::new(HealPolicy::default_on());
+        assert_eq!(s.state(), HealState::Ok);
+        s.set_state(HealState::Respawning);
+        assert_eq!(s.state(), HealState::Respawning);
+        s.record_failure();
+        s.record_heal();
+        assert_eq!(s.state(), HealState::Healed);
+        assert_eq!(s.heals(), 1);
+        assert_eq!(s.failures(), 1);
+        s.set_state(HealState::Exhausted);
+        assert_eq!(s.state().as_str(), "exhausted");
+    }
+}

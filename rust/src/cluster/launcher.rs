@@ -76,6 +76,15 @@ impl RankHealth {
             a.store(false, Ordering::Release);
         }
     }
+
+    /// Flip a rank back to alive — only the launcher's respawn path
+    /// does this, immediately before the replacement process spawns, so
+    /// healers never see a respawned rank still flagged dead.
+    fn mark_alive(&self, rank: usize) {
+        if let Some(a) = self.alive.get(rank) {
+            a.store(true, Ordering::Release);
+        }
+    }
 }
 
 /// How the launcher starts a local rank fleet.
@@ -112,10 +121,14 @@ struct WorkerProc {
 
 /// A running local rank fleet.
 pub struct Launcher {
+    /// Kept for `respawn_rank`: a replacement process is spawned with
+    /// the same program/host/timeout the fleet started with.
+    cfg: LauncherConfig,
     workers: Vec<WorkerProc>,
-    /// Ranks removed by `kill_rank`: the fleet is permanently degraded
-    /// (partitioning still counts them), so `check` keeps failing with
-    /// a diagnostic naming the rank instead of an opaque socket error.
+    /// Ranks removed by `kill_rank` and not yet respawned: the fleet is
+    /// degraded (partitioning still counts them), so `check` keeps
+    /// failing with a diagnostic naming the rank instead of an opaque
+    /// socket error. `respawn_rank` fills the hole.
     killed: Vec<usize>,
     health: RankHealth,
 }
@@ -141,7 +154,7 @@ impl Launcher {
                 }
             }
         }
-        Ok(Launcher { workers, killed: Vec::new(), health })
+        Ok(Launcher { cfg: cfg.clone(), workers, killed: Vec::new(), health })
     }
 
     /// Worker-rank count.
@@ -196,10 +209,46 @@ impl Launcher {
         Ok(())
     }
 
+    /// Spawn a replacement process for a dead rank and return its bound
+    /// address: the healing half of `kill_rank`. Any stale child handle
+    /// for the rank (a worker that died on its own and was never
+    /// reaped) is reaped first, the health flag flips back to alive,
+    /// and the rank leaves the `killed` hole list — so `check` passes
+    /// again once every dead rank has been replaced.
+    pub fn respawn_rank(&mut self, rank: usize) -> Result<SocketAddr> {
+        if rank >= self.cfg.ranks {
+            bail!("no rank {rank} in a {}-rank fleet", self.cfg.ranks);
+        }
+        if let Some(idx) = self.workers.iter().position(|w| w.rank == rank) {
+            let mut w = self.workers.remove(idx);
+            let _ = w.child.kill();
+            let _ = w.child.wait();
+        }
+        // Alive before the spawn: the replacement's own drain thread
+        // owns the flag from here, and flips it back on EOF if the new
+        // process dies too.
+        self.health.mark_alive(rank);
+        let worker = match spawn_worker(&self.cfg, rank, self.health.clone()) {
+            Ok(w) => w,
+            Err(e) => {
+                self.health.mark_dead(rank);
+                return Err(e.context(format!("respawning worker rank {rank}")));
+            }
+        };
+        let addr = worker.addr;
+        self.workers.push(worker);
+        self.killed.retain(|&r| r != rank);
+        log_info!("respawned worker rank {rank} at {addr}");
+        Ok(addr)
+    }
+
     /// Reap every child within `timeout` (call after the coordinator has
     /// sent shutdown ops). Ranks that do not exit in time are killed and
-    /// reported as an unclean shutdown.
-    pub fn wait_exit(mut self, timeout: Duration) -> Result<()> {
+    /// reported as an unclean shutdown. Idempotent: the worker list is
+    /// cleared, so a second call is a no-op (`&mut self` rather than
+    /// by-value so supervisors can keep the launcher behind a shared
+    /// lock for respawns right up to shutdown).
+    pub fn wait_exit(&mut self, timeout: Duration) -> Result<()> {
         let deadline = Instant::now() + timeout;
         let mut failures: Vec<String> = Vec::new();
         for w in &mut self.workers {

@@ -17,7 +17,11 @@
 //!   per load, `run_resident_panel` layer loop per scattered shard or
 //!   pipelined chunk;
 //! * [`launcher`] — spawns/supervises local worker processes with a
-//!   readiness handshake, failure propagation and clean shutdown;
+//!   readiness handshake, failure propagation, clean shutdown, and
+//!   per-rank respawn for the serving tier's healing loop;
+//! * [`heal`] — the `--heal retries×backoff|off` policy plus the
+//!   per-replica healing state machine `/stats` reports (the respawn
+//!   mechanism itself lives in `server::cluster_backend`);
 //! * [`collective`] — rank 0's scatter/compute/gather schedule behind
 //!   [`ClusterOptions`] (wire format, chunked scatter, and the
 //!   [`PartitionScheme`]), the reassembled [`ClusterReport`]
@@ -50,6 +54,7 @@
 //! `BENCH_cluster.json`.
 
 pub mod collective;
+pub mod heal;
 pub mod launcher;
 pub mod rank;
 pub mod transport;
@@ -57,6 +62,7 @@ pub mod transport;
 pub use collective::{
     ClusterCoordinator, ClusterOptions, ClusterReport, LocalCluster, PartitionScheme, RankTelemetry,
 };
+pub use heal::{HealPolicy, HealState, HealStatus};
 pub use launcher::{Launcher, LauncherConfig, RankHealth};
 pub use rank::{serve_rank, READY_PREFIX};
 pub use transport::{

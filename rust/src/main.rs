@@ -28,7 +28,7 @@ use anyhow::{bail, Context, Result};
 
 use spdnn::bench::{diff_reports, validate_report, DEFAULT_THRESHOLD_PCT};
 use spdnn::cluster::{
-    serve_rank, ClusterOptions, LocalCluster, ModelSpec, PartitionScheme, WireFormat,
+    serve_rank, ClusterOptions, HealPolicy, LocalCluster, ModelSpec, PartitionScheme, WireFormat,
 };
 use spdnn::coordinator::batcher::{BatchPolicy, InferenceServer, ServeBackend, ServedModel};
 use spdnn::coordinator::{
@@ -111,10 +111,17 @@ fn print_help() {
                   --partition features|weights (how ranks split the model)\n\
                   --io-timeout-ms MS (per-socket rank deadline; 0 = forever)\n\
                   --worker-addrs H:P,H:P (adopt pre-started cluster-workers)\n\
+                  --heal [RxMS|off] (respawn dead ranks and swap the healed\n\
+                  replica back in: R retries, MS ms backoff; bare --heal =\n\
+                  5x500; default off)\n\
+                  --ping-interval-ms MS (background rank liveness sweep so\n\
+                  adopted ranks lame-duck without traffic; 0 = off)\n\
                   serve-smoke --ranks N --requests R --stats-out FILE  (loopback\n\
                   load + bit-identity gate vs in-process sliced serving)\n\
                   --client-wire json|bin (smoke client encoding; bin negotiates\n\
                   the v2 binary infer frames via {{\"op\":\"hello\"}})\n\
+                  --chaos-kill-rank N (serve-smoke: kill rank N mid-run, wait\n\
+                  for the fleet to heal, re-check bit-identity; needs --heal)\n\
                   watch HOST:PORT [--interval-ms MS] [--count N]  (poll health +\n\
                   stats over one persistent connection; count 0 = forever)\n\
          Obs:     --trace-out FILE on serve|serve-smoke|cluster-run (Chrome\n\
@@ -297,9 +304,11 @@ fn cmd_infer(args: &Args) -> Result<()> {
 }
 
 /// Parse the cluster-serving flags shared by `serve` and `serve-smoke`:
-/// `--ranks N` (0 = in-process replicas), `--wire`, `--chunk`, and
+/// `--ranks N` (0 = in-process replicas), `--wire`, `--chunk`,
 /// `--worker-addrs H:P,H:P,...` to adopt pre-started `cluster-worker`
-/// processes (multi-host fleets) instead of spawning local ones.
+/// processes (multi-host fleets) instead of spawning local ones,
+/// `--heal [RETRIESxBACKOFF_MS|off]` to respawn dead ranks, and
+/// `--ping-interval-ms MS` to sweep rank liveness between panels.
 fn serve_cluster_config(args: &Args) -> Result<Option<ClusterServeConfig>> {
     let ranks = args.usize_or("ranks", 0)?;
     let wire = WireFormat::parse(args.get_or("wire", "bin"))?;
@@ -308,6 +317,14 @@ fn serve_cluster_config(args: &Args) -> Result<Option<ClusterServeConfig>> {
     // Consumed before the in-process early return so `args.finish()`
     // never trips over the flag when --ranks is 0.
     let io_timeout = cluster_io_timeout(args)?;
+    // Same early-consumption rule: a bare `--heal` means the default
+    // budget (HealPolicy::default_on), no flag means healing off.
+    let heal = match args.get("heal") {
+        Some(v) => HealPolicy::parse(v)?,
+        None => HealPolicy::off(),
+    };
+    let ping = duration_ms_arg(args, "ping-interval-ms", 0.0)?;
+    let ping_interval = if ping.is_zero() { None } else { Some(ping) };
     let addrs = match args.get("worker-addrs") {
         Some(list) => Some(
             list.split(',')
@@ -350,6 +367,8 @@ fn serve_cluster_config(args: &Args) -> Result<Option<ClusterServeConfig>> {
         },
         program,
         addrs,
+        heal,
+        ping_interval,
     }))
 }
 
@@ -482,8 +501,34 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     let backend = serve_backend(args, &cfg)?;
     let cluster = serve_cluster_config(args)?
         .ok_or_else(|| anyhow::anyhow!("serve-smoke needs --ranks N (at least 1)"))?;
+    let chaos_rank = match args.get("chaos-kill-rank") {
+        Some(v) => Some(
+            v.parse::<usize>().map_err(|e| anyhow::anyhow!("--chaos-kill-rank {v:?}: {e}"))?,
+        ),
+        None => None,
+    };
     args.finish()?;
     let spec = cluster_native_spec(&backend)?;
+    if let Some(rank) = chaos_rank {
+        if !cluster.heal.enabled {
+            bail!(
+                "--chaos-kill-rank needs --heal: without healing the killed rank \
+                 stays lame forever and the gate cannot pass"
+            );
+        }
+        if rank >= cluster.ranks {
+            bail!(
+                "--chaos-kill-rank {rank} is out of range (the fleet has {} ranks)",
+                cluster.ranks
+            );
+        }
+        if cluster.addrs.is_some() {
+            bail!(
+                "--chaos-kill-rank kills a spawned worker; \
+                 adopted --worker-addrs ranks have no local process to kill"
+            );
+        }
+    }
 
     let ds = Dataset::generate(&cfg)?;
     let n = cfg.neurons;
@@ -536,31 +581,37 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     // {"op":"hello"} and downgrades to JSON against a pre-v2 server.
     let mut client = Client::connect_wire(handle.addr(), client_wire)?;
     println!("  client wire: {} (asked for {client_wire})", client.wire());
-    let mut mismatches = 0usize;
-    let mut protocol_errors = 0usize;
-    for i in 0..requests {
-        let row = i % cfg.batch;
-        let feats = ds.features[row * n..(row + 1) * n].to_vec();
-        let want = oracle.classify(feats.clone()).context("oracle inference")?;
-        match client.call(&Request::infer_features(feats))? {
-            WireResponse::Infer { active, activations, .. } => {
-                let got = activations.unwrap_or_default();
-                let bits_match = got.len() == want.activations.len()
-                    && got
-                        .iter()
-                        .zip(&want.activations)
-                        .all(|(a, b)| a.to_bits() == b.to_bits());
-                if active != want.active || !bits_match {
-                    eprintln!("request {i} (row {row}): cluster answer diverges from oracle");
-                    mismatches += 1;
+    // One bit-identity pass over the request budget; the chaos mode
+    // replays the same pass after the heal, so it is a closure.
+    let identity_pass = |client: &mut Client| -> Result<(usize, usize)> {
+        let mut mismatches = 0usize;
+        let mut protocol_errors = 0usize;
+        for i in 0..requests {
+            let row = i % cfg.batch;
+            let feats = ds.features[row * n..(row + 1) * n].to_vec();
+            let want = oracle.classify(feats.clone()).context("oracle inference")?;
+            match client.call(&Request::infer_features(feats))? {
+                WireResponse::Infer { active, activations, .. } => {
+                    let got = activations.unwrap_or_default();
+                    let bits_match = got.len() == want.activations.len()
+                        && got
+                            .iter()
+                            .zip(&want.activations)
+                            .all(|(a, b)| a.to_bits() == b.to_bits());
+                    if active != want.active || !bits_match {
+                        eprintln!("request {i} (row {row}): cluster answer diverges from oracle");
+                        mismatches += 1;
+                    }
+                }
+                other => {
+                    eprintln!("request {i}: unexpected response {other:?}");
+                    protocol_errors += 1;
                 }
             }
-            other => {
-                eprintln!("request {i}: unexpected response {other:?}");
-                protocol_errors += 1;
-            }
         }
-    }
+        Ok((mismatches, protocol_errors))
+    };
+    let (mut mismatches, mut protocol_errors) = identity_pass(&mut client)?;
 
     let stats = match client.call(&Request::Stats)? {
         WireResponse::Stats(s) => s,
@@ -601,6 +652,90 @@ fn cmd_serve_smoke(args: &Args) -> Result<()> {
     if verdict != "ok" {
         bail!("health verdict is `{verdict}` on a healthy smoke fleet: {health}");
     }
+
+    // Chaos gate: kill one worker rank under the live server, wait for
+    // the healer to respawn it and for `{"op":"health"}` to come back
+    // to `ok`, then demand the healed fleet answer bit-identically —
+    // all without restarting the server process.
+    if let Some(rank) = chaos_rank {
+        fn flight_doc(client: &mut Client) -> Result<Json> {
+            match client.call(&Request::Flight)? {
+                WireResponse::Flight(f) => Ok(f),
+                other => bail!("flight verb failed: {other:?}"),
+            }
+        }
+        fn first_seq(doc: &Json, kind: &str) -> Result<Option<i64>> {
+            Ok(doc.req_arr("local")?.iter().find_map(|e| {
+                (e.get("kind").and_then(Json::as_str) == Some(kind))
+                    .then(|| e.get("seq").and_then(Json::as_i64))
+                    .flatten()
+            }))
+        }
+        println!("  chaos: killing rank {rank}; waiting for the fleet to heal itself");
+        handle.kill_rank(rank)?;
+        // Poll until the heal landed AND the verdict is back to ok. The
+        // verdict alone cannot gate this: a fast heal can complete
+        // between two polls without the client ever seeing `degraded`,
+        // so the flight recorder is the authority on the incident.
+        let t0 = std::time::Instant::now();
+        let mut saw_degraded = false;
+        loop {
+            let health = match client.call(&Request::Health)? {
+                WireResponse::Health(h) => h,
+                other => bail!("health verb failed during chaos: {other:?}"),
+            };
+            let verdict = health.req_str("verdict")?;
+            if verdict != "ok" {
+                saw_degraded = true;
+            }
+            if verdict == "ok" && first_seq(&flight_doc(&mut client)?, ofl::REPLICA_HEALED)?.is_some()
+            {
+                break;
+            }
+            if t0.elapsed() > std::time::Duration::from_secs(30) {
+                bail!(
+                    "the fleet did not heal within 30s \
+                     (verdict {verdict:?}, degraded observed: {saw_degraded})"
+                );
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        println!(
+            "  chaos: healed in {:.2}s (degraded verdict observed: {saw_degraded})",
+            t0.elapsed().as_secs_f64()
+        );
+        let (m2, p2) = identity_pass(&mut client)?;
+        mismatches += m2;
+        protocol_errors += p2;
+        println!("  chaos: post-heal identity pass ({m2} mismatches, {p2} protocol errors)");
+        // Incident ordering is part of the gate: detection strictly
+        // before lame-ducking, lame-ducking strictly before the heal.
+        let doc = flight_doc(&mut client)?;
+        let death = first_seq(&doc, ofl::RANK_DEATH)?;
+        let lame = first_seq(&doc, ofl::LAME_DUCK)?;
+        let healed = first_seq(&doc, ofl::REPLICA_HEALED)?;
+        match (death, lame, healed) {
+            (Some(d), Some(l), Some(h)) if d < l && l < h => {
+                println!("  chaos: flight order ok (rank-death {d} < lame-duck {l} < replica-healed {h})");
+            }
+            _ => bail!(
+                "flight events missing or out of order: \
+                 rank-death={death:?} lame-duck={lame:?} replica-healed={healed:?}"
+            ),
+        }
+        // Refresh the stats artifact: the post-heal snapshot carries
+        // the heal counters and re-route totals CI wants to keep.
+        if let Some(path) = &stats_out {
+            let stats = match client.call(&Request::Stats)? {
+                WireResponse::Stats(s) => s,
+                other => bail!("stats verb failed after the heal: {other:?}"),
+            };
+            std::fs::write(path, format!("{stats}\n"))
+                .with_context(|| format!("writing {}", path.display()))?;
+            println!("  stats snapshot (post-heal) -> {}", path.display());
+        }
+    }
+
     if let Some(path) = &metrics_out {
         std::fs::write(path, &metrics_text)
             .with_context(|| format!("writing {}", path.display()))?;

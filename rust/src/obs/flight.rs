@@ -1,7 +1,8 @@
 //! Flight recorder: a fixed-capacity, lock-sharded ring buffer of the
 //! structured events an operator needs *after* something went wrong —
 //! admission sheds, frame-decode failures, rank deaths, lame-duck and
-//! drain transitions, hello downgrades/refusals.
+//! drain transitions, hello downgrades/refusals, and the healing
+//! lifecycle (replica-healed / heal-failed / heal-exhausted).
 //!
 //! The span buffer (`obs::trace`) answers "where did the time go"; the
 //! flight recorder answers "what did the fleet do in the seconds before
@@ -56,6 +57,15 @@ pub const CONN_STALLED: &str = "conn-stalled";
 pub const HELLO_DOWNGRADE: &str = "hello-downgrade";
 /// Connect-time negotiation failed outright.
 pub const HELLO_REFUSED: &str = "hello-refused";
+/// A lame replica healed: its dead ranks were respawned (or adopted
+/// ranks reconnected), the recipe re-shipped, and the rebuilt
+/// coordinator swapped back in. Recorded strictly after the incident's
+/// `rank-death` / `lame-duck` events.
+pub const REPLICA_HEALED: &str = "replica-healed";
+/// One heal attempt failed (the healer may retry per its backoff).
+pub const HEAL_FAILED: &str = "heal-failed";
+/// The heal retry budget ran out; the replica stays lame.
+pub const HEAL_EXHAUSTED: &str = "heal-exhausted";
 
 /// One recorded event. `seq` totally orders events recorded by one
 /// process; `ts_us` is UNIX-epoch microseconds (the spans' time axis).

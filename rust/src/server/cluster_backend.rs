@@ -20,6 +20,7 @@
 //! ```text
 //!   router ──► replica 0 (batcher thread) ──► ClusterCoordinator ──► ranks 0..r
 //!          ──► replica 1 (batcher thread) ──► ClusterCoordinator ──► ranks r..N
+//!                   │ healer thread: health flags / ping sweep / respawn+rebuild
 //! ```
 //!
 //! **Failure model** — a dead rank degrades its replica, never the
@@ -27,13 +28,15 @@
 //!
 //! * the launcher's [`RankHealth`] flags flip within milliseconds of a
 //!   worker exit (stdout EOF), and every replica consults them *before*
-//!   scattering a batch: a batch is failed fast instead of being
-//!   scattered at a corpse;
+//!   scattering a batch; adopted (`--worker-addrs`) fleets have no
+//!   stdout pipe, so an optional background **ping sweep**
+//!   (`--ping-interval-ms`) probes the replica's idle connections and
+//!   feeds the same per-rank liveness counters;
 //! * a scatter/gather error mid-panel (connection reset, protocol
 //!   error) fails that panel's requests and marks the replica **lame**;
-//! * the router stops routing to lame replicas (requests re-route to
-//!   the surviving fleet), and `/stats` reports per-replica lameness,
-//!   per-rank liveness and per-rank scatter/gather byte counters;
+//! * the router stops routing to lame replicas, and stragglers already
+//!   queued at a lame replica are **re-routed once** to a live replica
+//!   instead of being failed (counted in `/stats` as `rerouted`);
 //! * each fresh rank death and lame transition lands in the flight
 //!   recorder (`rank-death` strictly before `lame-duck`), and
 //!   [`ClusterReplica::observe_ranks`] pulls each live rank's metrics
@@ -41,30 +44,51 @@
 //!   coordinator connections for the federated `{"op":"metrics"}` /
 //!   `{"op":"flight"}` views.
 //!
+//! **Healing** — with `--heal` (see
+//! [`HealPolicy`](crate::cluster::HealPolicy)), a lame replica is an
+//! incident, not a life sentence. Each replica runs a supervisor
+//! ("healer") thread that, on lameness: respawns dead launcher-owned
+//! ranks via [`Launcher::respawn_rank`] (adopted ranks keep their
+//! address and are reconnected in place), then — under the coordinator
+//! lock — rebuilds the replica's whole connection set
+//! ([`ClusterCoordinator::rebuild`]: old sockets dropped first, fresh
+//! hello negotiation, recipe re-shipped), revives the liveness
+//! counters, clears the lame flag, and records a `replica-healed`
+//! flight event strictly after the incident's `rank-death`/`lame-duck`
+//! events. Attempts are bounded by the policy's retries × backoff;
+//! exhaustion leaves the replica lame exactly as `--heal off` does.
+//!
 //! **Drain fencing** — a replica's batch thread is sequential: closing
 //! its request channel fences new panels, the in-flight scatter (if
 //! any) completes and is answered, and only then does the thread send
-//! `shutdown` ops to its ranks. The server reaps the worker processes
-//! after every replica thread has joined, so no worker is torn down
-//! under an in-flight scatter.
+//! `shutdown` ops to its ranks. The healer is stopped and joined before
+//! the drain, so a respawn cannot race the teardown. The server reaps
+//! the worker processes after every replica thread has joined, so no
+//! worker is torn down under an in-flight scatter.
 
 use std::net::SocketAddr;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, OnceLock, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cluster::{
-    ClusterCoordinator, ClusterOptions, Launcher, LauncherConfig, ModelSpec, RankHealth,
+    ClusterCoordinator, ClusterOptions, HealPolicy, HealState, HealStatus, Launcher,
+    LauncherConfig, ModelSpec, RankHealth,
 };
 use crate::coordinator::batcher::{collect_panel, BatchPolicy, Reply, Response};
 use crate::coordinator::NativeSpec;
 use crate::log_warn;
 use crate::obs::flight::{self, FlightEvent};
+use crate::obs::metrics as om;
 use crate::obs::trace::TraceId;
+
+/// How often a replica's healer thread wakes to check flags, run due
+/// ping sweeps, and pace heal attempts.
+const HEALER_TICK: Duration = Duration::from_millis(10);
 
 /// How `serve --ranks N` builds and connects its rank fleet.
 #[derive(Clone, Debug)]
@@ -83,21 +107,37 @@ pub struct ClusterServeConfig {
     pub program: PathBuf,
     /// Pre-started worker addresses (multi-host fleets, or a fault
     /// proxy in tests). When set, nothing is spawned, `ranks` is taken
-    /// from this list, and liveness comes from wire errors only.
+    /// from this list, and liveness comes from wire errors and the
+    /// ping sweep only.
     pub addrs: Option<Vec<SocketAddr>>,
+    /// Replica healing policy (`--heal`); off preserves lame-forever.
+    pub heal: HealPolicy,
+    /// Background liveness-probe period over each replica's idle
+    /// connections (`--ping-interval-ms`); `None` disables the sweep.
+    pub ping_interval: Option<Duration>,
 }
 
 impl ClusterServeConfig {
     pub fn local(program: PathBuf, ranks: usize) -> ClusterServeConfig {
-        ClusterServeConfig { ranks, options: ClusterOptions::default(), program, addrs: None }
+        ClusterServeConfig {
+            ranks,
+            options: ClusterOptions::default(),
+            program,
+            addrs: None,
+            heal: HealPolicy::off(),
+            ping_interval: None,
+        }
     }
 }
 
 /// The worker-rank process fleet behind a cluster-backed server: the
 /// launcher (when the server spawned the ranks itself) plus the
-/// addresses the replicas connect to.
+/// addresses the replicas connect to. The launcher sits behind a shared
+/// lock so replica healers can respawn dead ranks while the fleet
+/// handle stays with the server lifecycle.
 pub struct ClusterFleet {
-    launcher: Option<Launcher>,
+    launcher: Option<Arc<Mutex<Launcher>>>,
+    health: Option<RankHealth>,
     addrs: Vec<SocketAddr>,
 }
 
@@ -109,7 +149,7 @@ impl ClusterFleet {
                 if addrs.is_empty() {
                     bail!("cluster serving needs at least one worker address");
                 }
-                Ok(ClusterFleet { launcher: None, addrs: addrs.clone() })
+                Ok(ClusterFleet { launcher: None, health: None, addrs: addrs.clone() })
             }
             None => {
                 if cfg.ranks == 0 {
@@ -119,7 +159,8 @@ impl ClusterFleet {
                     Launcher::spawn(&LauncherConfig::local(cfg.program.clone(), cfg.ranks))
                         .context("spawning cluster serving ranks")?;
                 let addrs = launcher.addrs();
-                Ok(ClusterFleet { launcher: Some(launcher), addrs })
+                let health = Some(launcher.health());
+                Ok(ClusterFleet { launcher: Some(Arc::new(Mutex::new(launcher))), health, addrs })
             }
         }
     }
@@ -134,31 +175,37 @@ impl ClusterFleet {
 
     /// Eager liveness flags (launcher-spawned fleets only).
     pub fn health(&self) -> Option<RankHealth> {
-        self.launcher.as_ref().map(|l| l.health())
+        self.health.clone()
+    }
+
+    /// The shared launcher handle replica healers respawn through
+    /// (`None` for adopted fleets, which reconnect instead).
+    pub fn launcher(&self) -> Option<Arc<Mutex<Launcher>>> {
+        self.launcher.clone()
     }
 
     /// Fault-injection hook: kill one rank's process outright.
-    pub fn kill_rank(&mut self, rank: usize) -> Result<()> {
-        match &mut self.launcher {
-            Some(l) => l.kill_rank(rank),
+    pub fn kill_rank(&self, rank: usize) -> Result<()> {
+        match &self.launcher {
+            Some(l) => lock_launcher(l).kill_rank(rank),
             None => bail!("rank {rank} was not spawned by this server (pre-started address)"),
         }
     }
 
     /// Reap the worker processes within `timeout`. Call only after
     /// every replica has shut down (shutdown ops already fenced behind
-    /// the in-flight scatters). Deliberately-killed ranks are already
-    /// reaped and do not count against cleanliness.
+    /// the in-flight scatters, healers joined). Deliberately-killed
+    /// ranks are already reaped and do not count against cleanliness.
     pub fn wait_exit(self, timeout: Duration) -> Result<()> {
         match self.launcher {
-            Some(l) => l.wait_exit(timeout),
+            Some(l) => lock_launcher(&l).wait_exit(timeout),
             None => Ok(()), // pre-started ranks belong to their starter
         }
     }
 }
 
 /// Per-owned-rank serving counters, shared between a replica's batch
-/// thread and the `/stats` snapshot.
+/// thread, its healer, and the `/stats` snapshot.
 pub struct RankCounters {
     /// Global rank id (index into the fleet, not the replica subset).
     pub rank: usize,
@@ -188,13 +235,33 @@ impl RankCounters {
     pub fn alive(&self) -> bool {
         self.alive.load(Ordering::Acquire)
     }
+
+    /// A heal swapped a live connection back in.
+    fn revive(&self) {
+        self.alive.store(true, Ordering::Release);
+    }
 }
 
-struct PanelRequest {
-    features: Vec<f32>,
-    enqueued: Instant,
-    trace: TraceId,
-    resp: Reply,
+/// One queued request inside a replica's batch channel. `rerouted`
+/// bounds the straggler re-route at one hop: a request diverted off a
+/// lame replica is failed, not diverted again, if its second replica
+/// goes lame too.
+pub(crate) struct PanelRequest {
+    pub(crate) features: Vec<f32>,
+    pub(crate) enqueued: Instant,
+    pub(crate) trace: TraceId,
+    pub(crate) resp: Reply,
+    pub(crate) rerouted: bool,
+}
+
+/// Where a lame replica's un-scattered stragglers go: back through the
+/// router, which picks a live replica. Implemented by the router's
+/// shared core; replicas hold a `Weak` so the router→replica→router
+/// cycle cannot leak.
+pub(crate) trait Reroute: Send + Sync {
+    /// Deliver `req` to a live replica; hands the request back when no
+    /// live replica exists (the caller fails it with its own message).
+    fn reroute(&self, req: PanelRequest) -> std::result::Result<(), PanelRequest>;
 }
 
 /// One worker rank's telemetry as seen from its serving replica: the
@@ -214,6 +281,42 @@ pub struct RankObservation {
     pub error: Option<String>,
 }
 
+/// Everything a rank-backed replica needs to start and stay healthy.
+pub struct ReplicaConfig {
+    /// Global rank ids this replica owns (same order as `addrs`).
+    pub rank_ids: Vec<usize>,
+    /// Worker addresses, one per rank id.
+    pub addrs: Vec<SocketAddr>,
+    pub opts: ClusterOptions,
+    pub policy: BatchPolicy,
+    /// Launcher stdout-EOF liveness flags (spawned fleets only).
+    pub health: Option<RankHealth>,
+    /// The fleet's launcher for respawning dead ranks (spawned fleets
+    /// only; adopted ranks are reconnected at their known address).
+    pub launcher: Option<Arc<Mutex<Launcher>>>,
+    /// Healing policy; [`HealPolicy::off`] preserves lame-forever.
+    pub heal: HealPolicy,
+    /// Background ping-sweep period over this replica's connections.
+    pub ping_interval: Option<Duration>,
+}
+
+impl ReplicaConfig {
+    /// A minimal config (no health flags, no healing, no sweep) — what
+    /// the pre-heal `ClusterReplica::start` signature provided.
+    pub fn basic(rank_ids: Vec<usize>, addrs: Vec<SocketAddr>) -> ReplicaConfig {
+        ReplicaConfig {
+            rank_ids,
+            addrs,
+            opts: ClusterOptions::default(),
+            policy: BatchPolicy::default(),
+            health: None,
+            launcher: None,
+            heal: HealPolicy::off(),
+            ping_interval: None,
+        }
+    }
+}
+
 /// One rank-backed serving replica: the drop-in peer of the in-process
 /// `InferenceServer` whose panels run on a subset of cluster ranks.
 pub struct ClusterReplica {
@@ -222,49 +325,79 @@ pub struct ClusterReplica {
     handle: Mutex<Option<JoinHandle<()>>>,
     /// Shared with the batch thread: worker ranks serve one connection
     /// at a time, so telemetry pulls must ride the replica's existing
-    /// connections — the mutex serialises them against panel scatters.
+    /// connections — the mutex serialises them against panel scatters
+    /// (and against the healer's coordinator swap).
     coordinator: Arc<Mutex<ClusterCoordinator>>,
     lame: Arc<AtomicBool>,
     counters: Arc<Vec<RankCounters>>,
     neurons: usize,
+    heal: Arc<HealStatus>,
+    healer: Mutex<Option<JoinHandle<()>>>,
+    stop: Arc<AtomicBool>,
+    reroute: Arc<OnceLock<Weak<dyn Reroute>>>,
 }
 
 impl ClusterReplica {
-    /// Connect to `addrs` (global ids `rank_ids`, same order), replicate
-    /// the model on each, and start the batch thread.
-    #[allow(clippy::too_many_arguments)]
+    /// Connect to the configured rank subset, replicate the model on
+    /// each rank, and start the batch thread — plus, when the config
+    /// enables healing or a ping sweep, the healer thread.
     pub fn start(
-        rank_ids: Vec<usize>,
-        addrs: Vec<SocketAddr>,
+        cfg: ReplicaConfig,
         model: &ModelSpec,
         spec: NativeSpec,
         prune: bool,
-        opts: ClusterOptions,
-        policy: BatchPolicy,
-        health: Option<RankHealth>,
     ) -> Result<ClusterReplica> {
-        if rank_ids.is_empty() || rank_ids.len() != addrs.len() {
+        if cfg.rank_ids.is_empty() || cfg.rank_ids.len() != cfg.addrs.len() {
             bail!(
                 "cluster replica needs a non-empty rank subset ({} ids, {} addrs)",
-                rank_ids.len(),
-                addrs.len()
+                cfg.rank_ids.len(),
+                cfg.addrs.len()
             );
         }
-        let mut coordinator = ClusterCoordinator::connect_with(&addrs, opts)?;
+        let mut coordinator = ClusterCoordinator::connect_with(&cfg.addrs, cfg.opts)?;
         coordinator.load(model, spec, prune).context("loading the model on serving ranks")?;
         let coordinator = Arc::new(Mutex::new(coordinator));
         let lame = Arc::new(AtomicBool::new(false));
         let counters: Arc<Vec<RankCounters>> =
-            Arc::new(rank_ids.iter().map(|&r| RankCounters::new(r)).collect());
+            Arc::new(cfg.rank_ids.iter().map(|&r| RankCounters::new(r)).collect());
+        let heal = Arc::new(HealStatus::new(cfg.heal));
+        let stop = Arc::new(AtomicBool::new(false));
+        let reroute: Arc<OnceLock<Weak<dyn Reroute>>> = Arc::new(OnceLock::new());
         let (tx, rx) = mpsc::channel::<PanelRequest>();
         let neurons = model.neurons;
         let handle = {
             let coordinator = coordinator.clone();
             let lame = lame.clone();
             let counters = counters.clone();
+            let health = cfg.health.clone();
+            let reroute = reroute.clone();
+            let policy = cfg.policy;
             std::thread::spawn(move || {
-                replica_loop(coordinator, policy, rx, neurons, lame, counters, health)
+                replica_loop(coordinator, policy, rx, neurons, lame, counters, health, reroute)
             })
+        };
+        let healer = if cfg.heal.enabled || cfg.ping_interval.is_some() {
+            if cfg.heal.enabled {
+                // Register the heal counter families up front so the
+                // exposition shows them at zero before any incident.
+                om::counter(HEALS_METRIC, HEALS_HELP);
+                om::counter(HEAL_FAILURES_METRIC, HEAL_FAILURES_HELP);
+            }
+            let ctx = HealerCtx {
+                coordinator: coordinator.clone(),
+                lame: lame.clone(),
+                counters: counters.clone(),
+                health: cfg.health,
+                launcher: cfg.launcher,
+                policy: cfg.heal,
+                ping_interval: cfg.ping_interval,
+                status: heal.clone(),
+                stop: stop.clone(),
+            };
+            let addrs = cfg.addrs;
+            Some(std::thread::spawn(move || healer_loop(ctx, addrs)))
+        } else {
+            None
         };
         Ok(ClusterReplica {
             tx: Mutex::new(Some(tx)),
@@ -273,6 +406,10 @@ impl ClusterReplica {
             lame,
             counters,
             neurons,
+            heal,
+            healer: Mutex::new(healer),
+            stop,
+            reroute,
         })
     }
 
@@ -300,18 +437,43 @@ impl ClusterReplica {
         if features.len() != self.neurons {
             bail!("feature vector has {} values, model expects {}", features.len(), self.neurons);
         }
+        let req = PanelRequest {
+            features,
+            enqueued: Instant::now(),
+            trace,
+            resp: reply,
+            rerouted: false,
+        };
+        self.enqueue(req).map_err(|_| anyhow!("replica stopped"))
+    }
+
+    /// Feed a pre-built panel request into the batch queue — the
+    /// straggler re-route path keeps the original enqueue time and
+    /// trace. Hands the request back when the replica already stopped.
+    pub(crate) fn enqueue(&self, req: PanelRequest) -> std::result::Result<(), PanelRequest> {
         let guard = self.tx.lock().expect("replica tx lock");
-        let tx = guard.as_ref().ok_or_else(|| anyhow!("replica stopped"))?;
-        tx.send(PanelRequest { features, enqueued: Instant::now(), trace, resp: reply })
-            .map_err(|_| anyhow!("replica stopped"))?;
-        Ok(())
+        match guard.as_ref() {
+            Some(tx) => tx.send(req).map_err(|mpsc::SendError(req)| req),
+            None => Err(req),
+        }
+    }
+
+    /// Wire the router's re-route hook (once, at assembly).
+    pub(crate) fn set_reroute(&self, target: Weak<dyn Reroute>) {
+        let _ = self.reroute.set(target);
     }
 
     /// Whether this replica has been degraded by a rank failure (the
     /// router stops routing to it; the server keeps serving on the
-    /// surviving replicas).
+    /// surviving replicas — and the healer, if enabled, works to clear
+    /// this flag).
     pub fn is_lame(&self) -> bool {
         self.lame.load(Ordering::Acquire)
+    }
+
+    /// Healing telemetry: state machine position + heal/failure counts.
+    pub fn heal_status(&self) -> &HealStatus {
+        &self.heal
     }
 
     /// Per-owned-rank liveness + wire counters for `/stats`.
@@ -339,11 +501,16 @@ impl ClusterReplica {
             .collect()
     }
 
-    /// Fence + drain + stop: close the request channel (no new panels),
+    /// Fence + drain + stop: stop and join the healer (so no respawn
+    /// races the teardown), close the request channel (no new panels),
     /// then join the batch thread — which answers any in-flight panel
     /// and only then sends shutdown ops to its ranks. Safe to call
     /// more than once.
     pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.healer.lock().expect("healer join lock").take() {
+            let _ = h.join();
+        }
         drop(self.tx.lock().expect("replica tx lock").take());
         if let Some(h) = self.handle.lock().expect("replica join lock").take() {
             let _ = h.join();
@@ -357,9 +524,32 @@ impl Drop for ClusterReplica {
     }
 }
 
+const HEALS_METRIC: &str = "spdnn_fleet_heals_total";
+const HEALS_HELP: &str = "Lame serving replicas healed back into rotation.";
+const HEAL_FAILURES_METRIC: &str = "spdnn_fleet_heal_failures_total";
+const HEAL_FAILURES_HELP: &str = "Failed replica heal attempts.";
+
 fn fail_panel(panel: Vec<PanelRequest>, message: &str) {
     for req in panel {
         req.resp.send(Err(anyhow!("{message}")));
+    }
+}
+
+/// Straggler salvage: push each not-yet-rerouted request back through
+/// the router (which skips this lame replica) instead of failing it;
+/// requests with no live destination — or already diverted once — get
+/// the hard error.
+fn divert_panel(panel: Vec<PanelRequest>, reroute: &OnceLock<Weak<dyn Reroute>>, message: &str) {
+    let target = reroute.get().and_then(|w| w.upgrade());
+    for mut req in panel {
+        if req.rerouted || target.is_none() {
+            req.resp.send(Err(anyhow!("{message}")));
+            continue;
+        }
+        req.rerouted = true;
+        if let Err(req) = target.as_ref().expect("checked above").reroute(req) {
+            req.resp.send(Err(anyhow!("{message}")));
+        }
     }
 }
 
@@ -375,6 +565,15 @@ fn lock_coordinator(
     }
 }
 
+/// Same poison tolerance for the shared launcher: it guards plain
+/// process handles, never partially-updated invariants.
+fn lock_launcher(launcher: &Mutex<Launcher>) -> std::sync::MutexGuard<'_, Launcher> {
+    match launcher.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
 /// Flip a rank's liveness flag, recording a `rank-death` flight event
 /// on the first observation only (the flag may be re-checked every
 /// panel after a death).
@@ -384,6 +583,7 @@ fn mark_rank_dead(c: &RankCounters, why: &str) {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn replica_loop(
     coordinator: Arc<Mutex<ClusterCoordinator>>,
     policy: BatchPolicy,
@@ -392,6 +592,7 @@ fn replica_loop(
     lame: Arc<AtomicBool>,
     counters: Arc<Vec<RankCounters>>,
     health: Option<RankHealth>,
+    reroute: Arc<OnceLock<Weak<dyn Reroute>>>,
 ) {
     loop {
         // The panel forms through the in-process batcher's own
@@ -404,12 +605,18 @@ fn replica_loop(
 
         if lame.load(Ordering::Acquire) {
             // Stragglers submitted before the router observed the lame
-            // flag: fail fast, never scatter from a degraded replica.
-            fail_panel(panel, "replica is degraded (a cluster rank died); retry");
+            // flag: never scatter from a degraded replica — divert each
+            // once to a live replica, and only fail the ones with
+            // nowhere to go.
+            divert_panel(
+                panel,
+                &reroute,
+                "replica is degraded (a cluster rank died); retry",
+            );
             continue;
         }
         // Eager death check: the launcher's stdout-EOF flag flips
-        // within milliseconds of a worker exit, so a batch is failed
+        // within milliseconds of a worker exit, so a batch is diverted
         // here instead of being scattered at a dead rank. Every dead
         // rank is marked (not just the first found), so /stats stays
         // truthful when several ranks of one subset die together.
@@ -431,8 +638,9 @@ fn replica_loop(
                         format!("replica lame: rank {rank} died before the batch was scattered")
                     });
                 }
-                fail_panel(
+                divert_panel(
                     panel,
+                    &reroute,
                     &format!("cluster rank {rank} died before the batch was scattered"),
                 );
                 continue;
@@ -490,7 +698,9 @@ fn replica_loop(
                 // connection reset, protocol error): degrade this
                 // replica, answer the panel, keep the process alive.
                 // Rank deaths are attributed first so their flight
-                // events precede the lame transition.
+                // events precede the lame transition. This panel is
+                // *not* re-routed: it already scattered, and a second
+                // run elsewhere could double-execute it.
                 match &health {
                     Some(h) => {
                         for c in counters.iter() {
@@ -524,8 +734,179 @@ fn replica_loop(
     }
     // Drain fence: the loop above answered every in-flight panel before
     // reaching here, so the shutdown ops cannot race a live scatter. A
-    // dead rank's connection just errors (ignored).
+    // dead rank's connection just errors (ignored). After a heal, the
+    // coordinator behind this lock is the healed one, so respawned
+    // ranks receive their shutdown too.
     lock_coordinator(&coordinator).shutdown();
+}
+
+/// Everything the healer thread watches and acts through.
+struct HealerCtx {
+    coordinator: Arc<Mutex<ClusterCoordinator>>,
+    lame: Arc<AtomicBool>,
+    counters: Arc<Vec<RankCounters>>,
+    health: Option<RankHealth>,
+    launcher: Option<Arc<Mutex<Launcher>>>,
+    policy: HealPolicy,
+    ping_interval: Option<Duration>,
+    status: Arc<HealStatus>,
+    stop: Arc<AtomicBool>,
+}
+
+/// The per-replica supervisor: while healthy, watches launcher flags
+/// and runs the background ping sweep so deaths are observed (and the
+/// replica lame-ducked) *without traffic*; while lame, runs the
+/// bounded respawn/reconnect/rebuild loop. `addrs` tracks the current
+/// worker addresses — respawned ranks bind fresh ports.
+fn healer_loop(ctx: HealerCtx, mut addrs: Vec<SocketAddr>) {
+    let mut last_ping = Instant::now();
+    let mut attempts = 0usize;
+    let mut next_attempt = Instant::now();
+    let mut incident_live = false;
+    loop {
+        std::thread::sleep(HEALER_TICK);
+        if ctx.stop.load(Ordering::Acquire) {
+            return;
+        }
+        if !ctx.lame.load(Ordering::Acquire) {
+            incident_live = false;
+            let mut first_dead = None;
+            // Launcher flags: a spawned rank's death is visible here
+            // within milliseconds even when no panel is flowing.
+            if let Some(h) = &ctx.health {
+                for c in ctx.counters.iter() {
+                    if !h.alive(c.rank) {
+                        mark_rank_dead(c, "worker process exited");
+                        first_dead.get_or_insert(c.rank);
+                    }
+                }
+            }
+            // Ping sweep: adopted ranks have no stdout pipe, so probe
+            // the idle connections. try_lock — a panel holding the
+            // coordinator IS the liveness probe, so never queue behind
+            // it.
+            if first_dead.is_none() {
+                if let Some(every) = ctx.ping_interval {
+                    if last_ping.elapsed() >= every {
+                        if let Ok(mut coord) = ctx.coordinator.try_lock() {
+                            last_ping = Instant::now();
+                            let answers = coord.ping_each();
+                            drop(coord);
+                            for (c, ok) in ctx.counters.iter().zip(answers) {
+                                if !ok {
+                                    mark_rank_dead(c, "ping sweep got no answer");
+                                    first_dead.get_or_insert(c.rank);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if let Some(rank) = first_dead {
+                // Death event(s) recorded above, lame transition after:
+                // cause strictly before effect in the flight recorder.
+                if !ctx.lame.swap(true, Ordering::Release) {
+                    flight::record(flight::LAME_DUCK, || {
+                        format!("replica lame: rank {rank} found dead between panels")
+                    });
+                }
+            }
+            continue;
+        }
+        // Lame. `--heal off` replicas stay lame forever (the healer
+        // only runs for them when a ping sweep was requested).
+        if !ctx.policy.enabled {
+            continue;
+        }
+        if !incident_live {
+            // Fresh incident: full retry budget, first attempt now.
+            incident_live = true;
+            attempts = 0;
+            next_attempt = Instant::now();
+            ctx.status.set_state(HealState::Respawning);
+        }
+        if attempts >= ctx.policy.retries || Instant::now() < next_attempt {
+            continue;
+        }
+        attempts += 1;
+        match heal_once(&ctx, &mut addrs) {
+            Ok(()) => {
+                ctx.status.record_heal();
+                om::counter(HEALS_METRIC, HEALS_HELP).inc();
+            }
+            Err(e) => {
+                ctx.status.record_failure();
+                om::counter(HEAL_FAILURES_METRIC, HEAL_FAILURES_HELP).inc();
+                flight::record(flight::HEAL_FAILED, || {
+                    format!("heal attempt {attempts}/{} failed: {e:#}", ctx.policy.retries)
+                });
+                log_warn!(
+                    "replica heal attempt {attempts}/{} failed: {e:#}",
+                    ctx.policy.retries
+                );
+                if attempts >= ctx.policy.retries {
+                    ctx.status.set_state(HealState::Exhausted);
+                    flight::record(flight::HEAL_EXHAUSTED, || {
+                        format!("heal budget exhausted after {attempts} attempts; replica stays lame")
+                    });
+                } else {
+                    next_attempt = Instant::now() + ctx.policy.backoff;
+                }
+            }
+        }
+    }
+}
+
+/// One heal attempt: respawn dead launcher-owned ranks (adopted ranks
+/// keep their address — their supervisor restarts them in place, or the
+/// connection was merely severed), then rebuild the replica's whole
+/// connection set under the coordinator lock and swap it back in. On
+/// success the rank counters revive, the `replica-healed` flight event
+/// lands, and the lame flag clears — in that order, so the event can
+/// never precede the incident's `rank-death`/`lame-duck` events.
+fn heal_once(ctx: &HealerCtx, addrs: &mut [SocketAddr]) -> Result<()> {
+    if ctx.stop.load(Ordering::Acquire) {
+        bail!("server is draining");
+    }
+    // Late flag arrivals: a rank whose death laming came from a wire
+    // error may have its stdout-EOF flag flip slightly later; fold
+    // those in so the respawn below covers every dead process.
+    if let Some(h) = &ctx.health {
+        for c in ctx.counters.iter() {
+            if !h.alive(c.rank) {
+                mark_rank_dead(c, "worker process exited");
+            }
+        }
+    }
+    if let Some(launcher) = &ctx.launcher {
+        let mut l = lock_launcher(launcher);
+        for (i, c) in ctx.counters.iter().enumerate() {
+            if !c.alive() {
+                addrs[i] = l.respawn_rank(c.rank)?;
+            }
+        }
+    }
+    // The swap point: panels either ran before this lock (and failed
+    // against the old sockets) or after it (against the healed fleet) —
+    // never against half a rebuild. Workers serve one connection at a
+    // time, so rebuild drops every old connection before redialing;
+    // surviving ranks loop back to accept and are re-adopted with a
+    // fresh hello + recipe.
+    let mut coord = lock_coordinator(&ctx.coordinator);
+    if ctx.stop.load(Ordering::Acquire) {
+        bail!("server is draining");
+    }
+    coord.rebuild(addrs)?;
+    drop(coord);
+    for c in ctx.counters.iter() {
+        c.revive();
+    }
+    let rank_ids: Vec<usize> = ctx.counters.iter().map(|c| c.rank).collect();
+    flight::record(flight::REPLICA_HEALED, || {
+        format!("replica healed: ranks {rank_ids:?} respawned/reconnected, recipe re-shipped")
+    });
+    ctx.lame.store(false, Ordering::Release);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -544,6 +925,13 @@ mod tests {
     }
 
     #[test]
+    fn local_config_defaults_to_healing_off() {
+        let cfg = ClusterServeConfig::local(PathBuf::from("/nonexistent/spdnn"), 2);
+        assert!(!cfg.heal.enabled);
+        assert!(cfg.ping_interval.is_none());
+    }
+
+    #[test]
     fn fleet_adopts_prestarted_addresses_without_spawning() {
         let addr: SocketAddr = "127.0.0.1:9".parse().unwrap();
         let cfg = ClusterServeConfig {
@@ -551,10 +939,11 @@ mod tests {
             // The program path is never touched when addresses are given.
             ..ClusterServeConfig::local(PathBuf::from("/nonexistent/spdnn"), 0)
         };
-        let mut fleet = ClusterFleet::start(&cfg).unwrap();
+        let fleet = ClusterFleet::start(&cfg).unwrap();
         assert_eq!(fleet.ranks(), 2);
         assert_eq!(fleet.addrs(), &[addr, addr]);
         assert!(fleet.health().is_none(), "no launcher, no eager flags");
+        assert!(fleet.launcher().is_none(), "no launcher to respawn through");
         assert!(fleet.kill_rank(0).is_err(), "cannot kill what was not spawned");
         fleet.wait_exit(Duration::from_millis(1)).unwrap();
     }
@@ -576,31 +965,14 @@ mod tests {
             slice: 16,
             threads: 1,
         };
-        let err = ClusterReplica::start(
-            vec![],
-            vec![],
-            &model,
-            spec,
-            true,
-            ClusterOptions::default(),
-            BatchPolicy::default(),
-            None,
-        )
-        .unwrap_err()
-        .to_string();
+        let err = ClusterReplica::start(ReplicaConfig::basic(vec![], vec![]), &model, spec, true)
+            .unwrap_err()
+            .to_string();
         assert!(err.contains("non-empty rank subset"), "unexpected error: {err}");
-        let err = ClusterReplica::start(
-            vec![0, 1],
-            vec![addr],
-            &model,
-            spec,
-            true,
-            ClusterOptions::default(),
-            BatchPolicy::default(),
-            None,
-        )
-        .unwrap_err()
-        .to_string();
+        let err =
+            ClusterReplica::start(ReplicaConfig::basic(vec![0, 1], vec![addr]), &model, spec, true)
+                .unwrap_err()
+                .to_string();
         assert!(err.contains("non-empty rank subset"), "unexpected error: {err}");
     }
 
@@ -611,5 +983,9 @@ mod tests {
         assert!(c.alive());
         assert_eq!(c.scatter_bytes(), 0);
         assert_eq!(c.gather_bytes(), 0);
+        mark_rank_dead(&c, "test");
+        assert!(!c.alive());
+        c.revive();
+        assert!(c.alive());
     }
 }

@@ -251,7 +251,7 @@ impl Server {
             model,
             spec,
             prune,
-            cluster.options,
+            cluster,
             cfg.policy,
             cfg.replicas,
             &fleet,
@@ -376,9 +376,11 @@ impl ServerHandle {
 
     /// Fault-injection hook (tests and chaos drills): kill one
     /// worker-rank process outright. The owning replica lame-ducks on
-    /// its next batch; the server keeps serving on the survivors.
+    /// its next batch (or its healer's next sweep); with `--heal`, the
+    /// replica then respawns the rank and re-enters rotation. The
+    /// server keeps serving on the survivors either way.
     pub fn kill_rank(&self, rank: usize) -> Result<()> {
-        match self.shared.fleet.lock().expect("fleet lock").as_mut() {
+        match self.shared.fleet.lock().expect("fleet lock").as_ref() {
             Some(f) => f.kill_rank(rank),
             None => bail!("not a cluster-backed server"),
         }

@@ -16,7 +16,10 @@
 //!   boots N `cluster-worker` OS processes, splits them across the
 //!   router's replicas, and each replica scatters its panels over its
 //!   rank subset through a `ClusterCoordinator` (a dead rank
-//!   lame-ducks its replica instead of killing the server);
+//!   lame-ducks its replica instead of killing the server; with
+//!   `--heal`, a per-replica healer thread respawns the rank,
+//!   re-ships the recipe and swaps the replica back into rotation,
+//!   and a `--ping-interval-ms` sweep catches deaths without traffic);
 //! * [`admission`] — bounded in-flight queue with backpressure,
 //!   per-request deadlines and early load shedding;
 //! * [`lifecycle`] — bind/accept/serve plus graceful drain + shutdown
@@ -53,9 +56,9 @@ pub mod stats;
 
 pub use admission::{AdmissionConfig, AdmissionController, Rejection, Ticket};
 pub use cluster_backend::{
-    ClusterFleet, ClusterReplica, ClusterServeConfig, RankCounters, RankObservation,
+    ClusterFleet, ClusterReplica, ClusterServeConfig, RankCounters, RankObservation, ReplicaConfig,
 };
 pub use lifecycle::{IoMode, ReferencePanel, Server, ServerConfig, ServerHandle, ShutdownReport};
 pub use protocol::{Client, InferInput, InferRequest, Request, WireResponse};
-pub use router::{RankDetail, ReplicaDetail, ReplicaRouter};
+pub use router::{HealDetail, RankDetail, ReplicaDetail, ReplicaRouter};
 pub use stats::{LatencySummary, ServerStats};

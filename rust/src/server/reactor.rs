@@ -37,11 +37,13 @@
 //!   is dropped after `read_stall`/`write_stall` and leaves a
 //!   [`fl::CONN_STALLED`] flight event. A connection with no buffered
 //!   bytes can sit idle forever at the cost of one pollfd.
-//! - **Control verbs run inline.** stats/health/metrics/flight execute
-//!   on the reactor thread; they are rare and bounded, but `metrics`
-//!   federates over the rank sockets, so a slow rank briefly stalls the
-//!   event loop. Acceptable for an introspection verb; revisit if these
-//!   ever become hot-path.
+//! - **Slow control verbs run on a side thread.** metrics/flight/health
+//!   federate over the rank sockets (and may wait behind an in-flight
+//!   panel — or a healer's rebuild — for the coordinator lock), so they
+//!   are dispatched to one long-lived control-executor thread and
+//!   answered through the same completion-channel + wake-pipe path the
+//!   batchers use; the event loop never blocks on a slow rank. Cheap,
+//!   lock-free verbs (ping/hello/stats/shutdown) still answer inline.
 //! - poll(2) is O(registered) per wakeup where epoll is O(ready), but
 //!   the interest list is rebuilt every iteration anyway (state
 //!   machines change interest as they advance); at the 10k scale this
@@ -80,6 +82,11 @@ const STOP_POLL: Duration = Duration::from_millis(10);
 const OUT_HIGH_WATER: usize = 8 << 20;
 /// One socket read's scratch size.
 const READ_CHUNK: usize = 16 << 10;
+/// Longest an offloaded control verb (metrics/flight/health) may run
+/// before its connection gets a timeout error — generous, because a
+/// federation pull legitimately waits behind an in-flight panel or a
+/// healer's rebuild for the coordinator lock.
+const CONTROL_DEADLINE: Duration = Duration::from_secs(30);
 
 /// Reactor knobs owned by [`lifecycle::ServerConfig`].
 pub(crate) struct ReactorConfig {
@@ -123,36 +130,61 @@ impl StateHists {
     }
 }
 
-/// One in-flight inference on a connection. The admission ticket is NOT
-/// here — it lives inside the batcher callback, so the queue slot stays
-/// held until the panel truly completes even if the deadline sweep
-/// answers the client first (same semantics as the threaded reaper).
+/// One in-flight request on a connection — an inference riding a
+/// batcher, or a slow control verb riding the control executor. The
+/// admission ticket is NOT here — it lives inside the batcher callback,
+/// so the queue slot stays held until the panel truly completes even if
+/// the deadline sweep answers the client first (same semantics as the
+/// threaded reaper).
 struct Pending {
     /// Matches [`Completion::gen`]; a mismatch means the deadline sweep
     /// already answered and this completion is stale.
     gen: u64,
     t0: Instant,
     due: Instant,
-    effective: Duration,
-    /// The "request" obs span — finished with replica/batch args on
-    /// success, dropped (plain finish) on deadline.
-    span: tr::Span,
-    trace: TraceId,
-    want_activations: bool,
     framed: bool,
-    replica: usize,
+    kind: PendingKind,
 }
 
-/// What a batcher thread hands back to the event loop.
+enum PendingKind {
+    Infer {
+        effective: Duration,
+        /// The "request" obs span — finished with replica/batch args on
+        /// success, dropped (plain finish) on deadline.
+        span: tr::Span,
+        trace: TraceId,
+        want_activations: bool,
+        replica: usize,
+    },
+    /// metrics/flight/health executing on the control thread.
+    Control,
+}
+
+/// What a worker thread (batcher or control executor) hands back to the
+/// event loop.
 struct Completion {
     conn: u64,
     gen: u64,
-    result: Result<Response>,
+    done: Done,
+}
+
+enum Done {
+    Infer(Result<Response>),
+    Control(WireResponse),
+}
+
+/// A slow control verb headed for the control-executor thread.
+struct ControlJob {
+    conn: u64,
+    gen: u64,
+    req: Request,
+    peer_is_local: bool,
 }
 
 /// Everything a submitted request needs to find its way home.
 struct SubmitCtx {
     completions: mpsc::Sender<Completion>,
+    control: mpsc::Sender<ControlJob>,
     wake: Arc<UnixStream>,
 }
 
@@ -202,7 +234,19 @@ fn event_loop(listener: TcpListener, shared: &Arc<Shared>, cfg: &ReactorConfig) 
     wake_rx.set_nonblocking(true).context("nonblocking wake pipe")?;
     wake_tx.set_nonblocking(true).context("nonblocking wake pipe")?;
     let (completions_tx, completions_rx) = mpsc::channel::<Completion>();
-    let sub = SubmitCtx { completions: completions_tx, wake: Arc::new(wake_tx) };
+    let (control_tx, control_rx) = mpsc::channel::<ControlJob>();
+    let wake_tx = Arc::new(wake_tx);
+    // One long-lived executor for the slow control verbs. It exits when
+    // `control_tx` drops at the end of this function; it holds its own
+    // Arc<Shared>, so a verb mid-federation cannot outlive the state it
+    // reads.
+    {
+        let shared = shared.clone();
+        let completions = completions_tx.clone();
+        let wake = wake_tx.clone();
+        std::thread::spawn(move || control_executor(control_rx, shared, completions, wake));
+    }
+    let sub = SubmitCtx { completions: completions_tx, control: control_tx, wake: wake_tx };
     let hists = StateHists::new();
     let mut conns: HashMap<u64, Conn> = HashMap::new();
     let mut next_id: u64 = 1;
@@ -582,7 +626,7 @@ fn handle_message(conn: &mut Conn, msg: ServeMsg, shared: &Arc<Shared>, sub: &Su
                             // Scanner said infer, strict parser disagrees —
                             // unreachable by construction, handled anyway.
                             drop(ticket);
-                            respond_control(conn, req, shared);
+                            respond_control(conn, req, shared, sub);
                         }
                         Err(e) => {
                             drop(ticket); // frees the queue slot
@@ -598,7 +642,7 @@ fn handle_message(conn: &mut Conn, msg: ServeMsg, shared: &Arc<Shared>, sub: &Su
                     // A valid infer the scanner could not hint (e.g. an
                     // escaped string field): threaded-order slow path.
                     Ok(Request::Infer(inf)) => start_infer(conn, inf, false, None, shared, sub),
-                    Ok(req) => respond_control(conn, req, shared),
+                    Ok(req) => respond_control(conn, req, shared, sub),
                     Err(e) => queue_response(
                         conn,
                         &WireResponse::Error { message: format!("{e:#}") },
@@ -609,7 +653,7 @@ fn handle_message(conn: &mut Conn, msg: ServeMsg, shared: &Arc<Shared>, sub: &Su
         }
         ServeMsg::Frame(kind, payload) => match lifecycle::parse_frame_request(kind, &payload) {
             Ok(Request::Infer(inf)) => start_infer(conn, inf, true, None, shared, sub),
-            Ok(req) => respond_control(conn, req, shared), // unreachable today
+            Ok(req) => respond_control(conn, req, shared, sub), // unreachable today
             Err(e) => {
                 queue_response(conn, &WireResponse::Error { message: format!("{e:#}") }, true)
             }
@@ -617,10 +661,65 @@ fn handle_message(conn: &mut Conn, msg: ServeMsg, shared: &Arc<Shared>, sub: &Su
     }
 }
 
-/// Control verbs execute inline on the reactor thread (see module doc).
-fn respond_control(conn: &mut Conn, req: Request, shared: &Arc<Shared>) {
-    let resp = lifecycle::dispatch(req, shared, conn.peer_is_local);
-    queue_response(conn, &resp, false);
+/// Answer a control verb. Cheap lock-free verbs (ping/hello/stats/
+/// shutdown) execute inline; metrics/flight/health — which federate
+/// over the rank sockets and may wait for the coordinator lock — are
+/// dispatched to the control-executor thread and answered through the
+/// completion path, so a slow rank never stalls the event loop.
+fn respond_control(conn: &mut Conn, req: Request, shared: &Arc<Shared>, sub: &SubmitCtx) {
+    match req {
+        Request::Metrics | Request::Flight | Request::Health => {
+            conn.gen += 1;
+            let job = ControlJob {
+                conn: conn.id,
+                gen: conn.gen,
+                req,
+                peer_is_local: conn.peer_is_local,
+            };
+            match sub.control.send(job) {
+                Ok(()) => {
+                    let t0 = Instant::now();
+                    conn.pending = Some(Pending {
+                        gen: conn.gen,
+                        t0,
+                        due: t0 + CONTROL_DEADLINE,
+                        framed: false,
+                        kind: PendingKind::Control,
+                    });
+                }
+                // Executor gone (shutdown race): answer inline rather
+                // than drop the verb.
+                Err(mpsc::SendError(job)) => {
+                    let resp = lifecycle::dispatch(job.req, shared, job.peer_is_local);
+                    queue_response(conn, &resp, false);
+                }
+            }
+        }
+        req => {
+            let resp = lifecycle::dispatch(req, shared, conn.peer_is_local);
+            queue_response(conn, &resp, false);
+        }
+    }
+}
+
+/// The control-executor loop: serve metrics/flight/health jobs one at a
+/// time off the reactor thread, answering through the completion
+/// channel + wake pipe exactly like a batcher callback. Exits when the
+/// job channel's sender drops at event-loop teardown.
+fn control_executor(
+    jobs: mpsc::Receiver<ControlJob>,
+    shared: Arc<Shared>,
+    completions: mpsc::Sender<Completion>,
+    wake: Arc<UnixStream>,
+) {
+    while let Ok(job) = jobs.recv() {
+        let resp = lifecycle::dispatch(job.req, &shared, job.peer_is_local);
+        let done = Completion { conn: job.conn, gen: job.gen, done: Done::Control(resp) };
+        if completions.send(done).is_err() {
+            return; // reactor gone
+        }
+        let _ = (&*wake).write_all(&[1]);
+    }
 }
 
 fn start_infer(
@@ -677,7 +776,7 @@ fn start_infer(
             Ok(_) => ticket.complete(t0.elapsed()),
             Err(_) => drop(ticket),
         }
-        let _ = completions.send(Completion { conn: id, gen, result });
+        let _ = completions.send(Completion { conn: id, gen, done: Done::Infer(result) });
         // One byte pulls the reactor out of poll(). Errors are ignored:
         // a full pipe already guarantees a wakeup, a closed one means
         // the reactor is gone and nobody is left to wake.
@@ -689,12 +788,8 @@ fn start_infer(
                 gen,
                 t0,
                 due: t0 + effective,
-                effective,
-                span,
-                trace,
-                want_activations,
                 framed,
-                replica,
+                kind: PendingKind::Infer { effective, span, trace, want_activations, replica },
             });
         }
         Err(e) => {
@@ -715,25 +810,34 @@ fn apply_completion(conns: &mut HashMap<u64, Conn>, c: Completion, shared: &Arc<
         return; // stale: the deadline sweep already answered this one
     }
     let p = conn.pending.take().expect("pending gen matched above");
-    let resp = match c.result {
-        Ok(r) => {
-            let elapsed = p.t0.elapsed();
-            let span = p.span.arg("replica", p.replica).arg("batch_size", r.batch_size);
-            shared.stats.record_ok(span.finish_secs());
-            shared.stats.record_edges(shared.edges_per_row);
-            WireResponse::Infer {
-                active: r.active,
-                replica: p.replica,
-                batch_size: r.batch_size,
-                latency_ms: elapsed.as_secs_f64() * 1e3,
-                trace: p.trace.to_hex(),
-                activations: p.want_activations.then_some(r.activations),
+    let resp = match (p.kind, c.done) {
+        (PendingKind::Infer { span, trace, want_activations, replica, .. }, Done::Infer(result)) => {
+            match result {
+                Ok(r) => {
+                    let elapsed = p.t0.elapsed();
+                    let span = span.arg("replica", replica).arg("batch_size", r.batch_size);
+                    shared.stats.record_ok(span.finish_secs());
+                    shared.stats.record_edges(shared.edges_per_row);
+                    WireResponse::Infer {
+                        active: r.active,
+                        replica,
+                        batch_size: r.batch_size,
+                        latency_ms: elapsed.as_secs_f64() * 1e3,
+                        trace: trace.to_hex(),
+                        activations: want_activations.then_some(r.activations),
+                    }
+                }
+                Err(e) => {
+                    shared.stats.record_error();
+                    WireResponse::Error { message: format!("inference failed: {e:#}") }
+                }
             }
         }
-        Err(e) => {
-            shared.stats.record_error();
-            WireResponse::Error { message: format!("inference failed: {e:#}") }
-        }
+        (PendingKind::Control, Done::Control(resp)) => resp,
+        // A gen match pins a completion to the pending that minted it,
+        // so a kind mismatch cannot happen; answer a plain error rather
+        // than panic the reactor if it ever does.
+        _ => WireResponse::Error { message: "internal: completion kind mismatch".to_string() },
     };
     queue_response(conn, &resp, p.framed);
     conn.last_progress = Instant::now();
@@ -746,16 +850,28 @@ fn sweep_deadlines(conns: &mut HashMap<u64, Conn>, now: Instant, shared: &Arc<Sh
             continue;
         }
         // Taking `pending` makes the eventual completion stale (gen no
-        // longer matches); its callback still settles the ticket.
+        // longer matches); an inference callback still settles the
+        // ticket.
         let p = conn.pending.take().expect("due checked above");
-        shared.stats.record_error();
-        let resp = WireResponse::Error {
-            message: format!("deadline exceeded after {:.1}ms", p.effective.as_secs_f64() * 1e3),
+        let resp = match p.kind {
+            PendingKind::Infer { effective, .. } => {
+                shared.stats.record_error();
+                WireResponse::Error {
+                    message: format!(
+                        "deadline exceeded after {:.1}ms",
+                        effective.as_secs_f64() * 1e3
+                    ),
+                }
+                // the span dropped with p.kind and finished plain —
+                // same as the threaded engine's timeout arm.
+            }
+            // Not an inference failure: don't skew the error counters.
+            PendingKind::Control => WireResponse::Error {
+                message: "control verb timed out behind the rank fleet".to_string(),
+            },
         };
         queue_response(conn, &resp, p.framed);
         conn.last_progress = now;
-        // p.span drops here and finishes plain — same as the threaded
-        // engine's timeout arm.
     }
 }
 

@@ -20,15 +20,20 @@
 //! Cluster replicas can go **lame** (a rank died): the router skips
 //! them — the slot's request re-routes to the next live replica — and
 //! keeps serving on the survivors; only when every replica is degraded
-//! does submit fail. Per-replica routed counts feed the same
-//! `imbalance()` metric the offline coordinator reports.
+//! does submit fail. Stragglers already *queued* at a replica when it
+//! went lame come back through the router too: the lame replica's batch
+//! thread hands them to [`RouterCore`]'s [`Reroute`] hook, which picks
+//! a live replica exactly like a fresh submit (counted in `/stats` as
+//! `rerouted`). The hook is a `Weak` reference, so the
+//! router→replica→router cycle cannot leak. Per-replica routed counts
+//! feed the same `imbalance()` metric the offline coordinator reports.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Weak};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::cluster::{ClusterOptions, ModelSpec};
+use crate::cluster::ModelSpec;
 use crate::coordinator::batcher::{
     BatchPolicy, InferenceServer, Reply, Response, ServeBackend, ServedModel,
 };
@@ -36,7 +41,10 @@ use crate::coordinator::partition::{imbalance, partition_even};
 use crate::coordinator::NativeSpec;
 use crate::obs::trace::TraceId;
 
-use super::cluster_backend::{ClusterFleet, ClusterReplica, RankObservation};
+use super::cluster_backend::{
+    ClusterFleet, ClusterReplica, ClusterServeConfig, PanelRequest, RankObservation, ReplicaConfig,
+    Reroute,
+};
 
 /// One routing target: an in-process batcher or a rank-backed one.
 enum ReplicaUnit {
@@ -81,6 +89,18 @@ pub struct RankDetail {
     pub gather_bytes: u64,
 }
 
+/// Healing telemetry of one rank-backed replica (`/stats`).
+#[derive(Clone, Debug)]
+pub struct HealDetail {
+    /// Position in the healing state machine: `off` / `ok` /
+    /// `respawning` / `healed` / `exhausted`.
+    pub state: &'static str,
+    /// Successful heals over this replica's lifetime.
+    pub heals: u64,
+    /// Failed heal attempts over this replica's lifetime.
+    pub failures: u64,
+}
+
 /// Introspection snapshot of one replica (`/stats`).
 #[derive(Clone, Debug)]
 pub struct ReplicaDetail {
@@ -88,18 +108,68 @@ pub struct ReplicaDetail {
     pub lame: bool,
     /// Owned ranks, global ids (empty for in-process replicas).
     pub ranks: Vec<RankDetail>,
+    /// Healing state (`None` for in-process replicas, which cannot
+    /// lose a rank).
+    pub heal: Option<HealDetail>,
 }
 
-/// N weight-sharing replicas plus the static routing table that shards
-/// requests across them.
-pub struct ReplicaRouter {
+/// The router's shared state: the replicas plus the static routing
+/// table. Behind an `Arc` so lame replicas can hand stragglers back
+/// through the [`Reroute`] hook without owning the router.
+struct RouterCore {
     units: Vec<ReplicaUnit>,
     /// Request-slot -> replica map derived from `partition_even` over one
     /// routing window (one slot per replica: interleaved assignment).
     slots: Vec<usize>,
     seq: AtomicUsize,
     routed: Vec<AtomicU64>,
+    /// Stragglers salvaged off lame replicas onto live ones.
+    rerouted: AtomicU64,
     neurons: usize,
+}
+
+impl RouterCore {
+    /// Pick the next replica: the slot's primary, or the first live
+    /// replica after it when the primary is lame.
+    fn route(&self) -> Result<usize> {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let primary = self.slots[seq % self.slots.len()];
+        let n = self.units.len();
+        (0..n).map(|off| (primary + off) % n).find(|&r| !self.units[r].is_lame()).ok_or_else(
+            || anyhow!("every replica is degraded (all cluster rank subsets lost a rank)"),
+        )
+    }
+}
+
+impl Reroute for RouterCore {
+    /// Salvage one straggler off a lame replica: route exactly like a
+    /// fresh submit (the origin is lame, so it is never re-picked) and
+    /// feed the original request — enqueue time, trace, and reply
+    /// channel intact — into the chosen replica's queue.
+    fn reroute(&self, req: PanelRequest) -> std::result::Result<(), PanelRequest> {
+        let Ok(replica) = self.route() else { return Err(req) };
+        match &self.units[replica] {
+            ReplicaUnit::Cluster(c) => c.enqueue(req)?,
+            ReplicaUnit::Native(s) => {
+                // Mixed fleets don't occur in practice, but a native
+                // replica can still absorb the work: re-enter through
+                // its own submit surface (a failed hand-off drops the
+                // reply channel, which the requester sees as a
+                // disconnect).
+                let PanelRequest { features, trace, resp, .. } = req;
+                let _ = s.submit_reply(features, trace, resp);
+            }
+        }
+        self.routed[replica].fetch_add(1, Ordering::Relaxed);
+        self.rerouted.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+/// N weight-sharing replicas plus the static routing table that shards
+/// requests across them.
+pub struct ReplicaRouter {
+    core: Arc<RouterCore>,
 }
 
 impl ReplicaRouter {
@@ -129,12 +199,13 @@ impl ReplicaRouter {
     /// contiguous, non-empty rank subset — the replica count is clamped
     /// to the rank count so no replica is an empty shell). Each replica
     /// connects its own `ClusterCoordinator` and replicates the weight
-    /// recipe on its ranks once, before the first request.
+    /// recipe on its ranks once, before the first request; `cfg`'s heal
+    /// policy and ping interval arm each replica's healer thread.
     pub fn start_cluster(
         model: &ModelSpec,
         spec: NativeSpec,
         prune: bool,
-        opts: ClusterOptions,
+        cfg: &ClusterServeConfig,
         policy: BatchPolicy,
         nreplicas: usize,
         fleet: &ClusterFleet,
@@ -148,22 +219,22 @@ impl ReplicaRouter {
         let nreplicas = nreplicas.min(ranks);
         let addrs = fleet.addrs();
         let health = fleet.health();
+        let launcher = fleet.launcher();
         let mut units = Vec::with_capacity(nreplicas);
         for p in partition_even(ranks, nreplicas) {
-            let rank_ids: Vec<usize> = (p.start..p.start + p.count).collect();
-            let subset = addrs[p.start..p.start + p.count].to_vec();
+            let replica_cfg = ReplicaConfig {
+                rank_ids: (p.start..p.start + p.count).collect(),
+                addrs: addrs[p.start..p.start + p.count].to_vec(),
+                opts: cfg.options,
+                policy,
+                health: health.clone(),
+                launcher: launcher.clone(),
+                heal: cfg.heal,
+                ping_interval: cfg.ping_interval,
+            };
             units.push(ReplicaUnit::Cluster(
-                ClusterReplica::start(
-                    rank_ids,
-                    subset,
-                    model,
-                    spec,
-                    prune,
-                    opts,
-                    policy,
-                    health.clone(),
-                )
-                .map_err(|e| anyhow!("starting replica {}: {e:#}", p.worker))?,
+                ClusterReplica::start(replica_cfg, model, spec, prune)
+                    .map_err(|e| anyhow!("starting replica {}: {e:#}", p.worker))?,
             ));
         }
         Ok(ReplicaRouter::assemble(units, model.neurons))
@@ -179,25 +250,42 @@ impl ReplicaRouter {
             }
         }
         let routed = (0..nreplicas).map(|_| AtomicU64::new(0)).collect();
-        ReplicaRouter { units, slots, seq: AtomicUsize::new(0), routed, neurons }
+        let core = Arc::new(RouterCore {
+            units,
+            slots,
+            seq: AtomicUsize::new(0),
+            routed,
+            rerouted: AtomicU64::new(0),
+            neurons,
+        });
+        // Wire the straggler salvage hook into every rank-backed
+        // replica. Weak: a replica outliving its router (drop order)
+        // must fail stragglers, not resurrect the core.
+        let weak: Weak<RouterCore> = Arc::downgrade(&core);
+        for u in &core.units {
+            if let ReplicaUnit::Cluster(c) = u {
+                c.set_reroute(weak.clone() as Weak<dyn Reroute>);
+            }
+        }
+        ReplicaRouter { core }
     }
 
     pub fn replicas(&self) -> usize {
-        self.units.len()
+        self.core.units.len()
     }
 
     pub fn neurons(&self) -> usize {
-        self.neurons
+        self.core.neurons
     }
 
     /// Whether the replicas execute on cluster ranks.
     pub fn is_cluster(&self) -> bool {
-        self.units.iter().any(|u| matches!(u, ReplicaUnit::Cluster(_)))
+        self.core.units.iter().any(|u| matches!(u, ReplicaUnit::Cluster(_)))
     }
 
     /// Replicas still routable (not lame).
     pub fn live_replicas(&self) -> usize {
-        self.units.iter().filter(|u| !u.is_lame()).count()
+        self.core.units.iter().filter(|u| !u.is_lame()).count()
     }
 
     /// Route one request; returns the chosen replica and the response
@@ -216,9 +304,9 @@ impl ReplicaRouter {
         features: Vec<f32>,
         trace: TraceId,
     ) -> Result<(usize, mpsc::Receiver<Result<Response>>)> {
-        let replica = self.route()?;
-        let rx = self.units[replica].submit(features, trace)?;
-        self.routed[replica].fetch_add(1, Ordering::Relaxed);
+        let replica = self.core.route()?;
+        let rx = self.core.units[replica].submit(features, trace)?;
+        self.core.routed[replica].fetch_add(1, Ordering::Relaxed);
         Ok((replica, rx))
     }
 
@@ -227,21 +315,10 @@ impl ReplicaRouter {
     /// path. Routing (slot choice, lame-skip) is identical, so the two
     /// paths cannot pick different replicas for the same request stream.
     pub fn submit_reply(&self, features: Vec<f32>, trace: TraceId, reply: Reply) -> Result<usize> {
-        let replica = self.route()?;
-        self.units[replica].submit_reply(features, trace, reply)?;
-        self.routed[replica].fetch_add(1, Ordering::Relaxed);
+        let replica = self.core.route()?;
+        self.core.units[replica].submit_reply(features, trace, reply)?;
+        self.core.routed[replica].fetch_add(1, Ordering::Relaxed);
         Ok(replica)
-    }
-
-    /// Pick the next replica: the slot's primary, or the first live
-    /// replica after it when the primary is lame.
-    fn route(&self) -> Result<usize> {
-        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
-        let primary = self.slots[seq % self.slots.len()];
-        let n = self.units.len();
-        (0..n).map(|off| (primary + off) % n).find(|&r| !self.units[r].is_lame()).ok_or_else(
-            || anyhow!("every replica is degraded (all cluster rank subsets lost a rank)"),
-        )
     }
 
     /// Blocking submit + receive.
@@ -253,30 +330,51 @@ impl ReplicaRouter {
 
     /// Requests routed to each replica so far.
     pub fn routed_counts(&self) -> Vec<u64> {
-        self.routed.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+        self.core.routed.iter().map(|c| c.load(Ordering::Relaxed)).collect()
     }
 
-    /// Per-replica introspection: routed counts, lameness, and (for
-    /// rank-backed replicas) per-rank liveness + scatter/gather bytes.
+    /// Stragglers salvaged off lame replicas onto live ones so far.
+    pub fn rerouted_count(&self) -> u64 {
+        self.core.rerouted.load(Ordering::Relaxed)
+    }
+
+    /// Per-replica introspection: routed counts, lameness, healing
+    /// state, and (for rank-backed replicas) per-rank liveness +
+    /// scatter/gather bytes.
     pub fn details(&self) -> Vec<ReplicaDetail> {
-        self.units
+        self.core
+            .units
             .iter()
-            .zip(&self.routed)
+            .zip(&self.core.routed)
             .map(|(u, routed)| {
-                let ranks = match u {
-                    ReplicaUnit::Native(_) => Vec::new(),
-                    ReplicaUnit::Cluster(c) => c
-                        .rank_counters()
-                        .iter()
-                        .map(|rc| RankDetail {
-                            rank: rc.rank,
-                            alive: rc.alive(),
-                            scatter_bytes: rc.scatter_bytes(),
-                            gather_bytes: rc.gather_bytes(),
-                        })
-                        .collect(),
+                let (ranks, heal) = match u {
+                    ReplicaUnit::Native(_) => (Vec::new(), None),
+                    ReplicaUnit::Cluster(c) => {
+                        let ranks = c
+                            .rank_counters()
+                            .iter()
+                            .map(|rc| RankDetail {
+                                rank: rc.rank,
+                                alive: rc.alive(),
+                                scatter_bytes: rc.scatter_bytes(),
+                                gather_bytes: rc.gather_bytes(),
+                            })
+                            .collect();
+                        let status = c.heal_status();
+                        let heal = Some(HealDetail {
+                            state: status.state().as_str(),
+                            heals: status.heals(),
+                            failures: status.failures(),
+                        });
+                        (ranks, heal)
+                    }
                 };
-                ReplicaDetail { routed: routed.load(Ordering::Relaxed), lame: u.is_lame(), ranks }
+                ReplicaDetail {
+                    routed: routed.load(Ordering::Relaxed),
+                    lame: u.is_lame(),
+                    ranks,
+                    heal,
+                }
             })
             .collect()
     }
@@ -286,7 +384,8 @@ impl ReplicaRouter {
     /// for an all-native router — native replicas live in this process
     /// and are already covered by its own registry and recorder.
     pub fn observe_ranks(&self) -> Vec<RankObservation> {
-        self.units
+        self.core
+            .units
             .iter()
             .flat_map(|u| match u {
                 ReplicaUnit::Native(_) => Vec::new(),
@@ -303,11 +402,11 @@ impl ReplicaRouter {
     }
 
     /// Shut every replica down. In-process replicas drop their pending
-    /// requests; cluster replicas fence in-flight scatters, then send
-    /// shutdown ops to their ranks (the caller reaps the processes
-    /// afterwards).
+    /// requests; cluster replicas stop their healers, fence in-flight
+    /// scatters, then send shutdown ops to their ranks (the caller
+    /// reaps the processes afterwards).
     pub fn shutdown(&self) {
-        for u in &self.units {
+        for u in &self.core.units {
             match u {
                 // The in-process batcher drains on drop; an explicit
                 // idempotent stop surface only exists on the cluster
@@ -346,9 +445,10 @@ mod tests {
         let router = ReplicaRouter::start(m, native(), policy(), 3).unwrap();
         assert_eq!(router.replicas(), 3);
         // One slot per replica: consecutive requests hit distinct replicas.
-        assert_eq!(router.slots, vec![0, 1, 2]);
+        assert_eq!(router.core.slots, vec![0, 1, 2]);
         assert!(!router.is_cluster());
         assert_eq!(router.live_replicas(), 3);
+        assert_eq!(router.rerouted_count(), 0);
         router.shutdown();
     }
 
@@ -382,7 +482,7 @@ mod tests {
         let router = ReplicaRouter::start(m, native(), policy(), 2).unwrap();
         let details = router.details();
         assert_eq!(details.len(), 2);
-        assert!(details.iter().all(|d| !d.lame && d.ranks.is_empty()));
+        assert!(details.iter().all(|d| !d.lame && d.ranks.is_empty() && d.heal.is_none()));
         router.shutdown();
     }
 

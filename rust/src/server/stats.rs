@@ -198,6 +198,16 @@ impl ServerStats {
                     ("req_per_sec", Json::Num(d.routed as f64 / uptime.max(1e-9))),
                     ("lame", Json::Bool(d.lame)),
                 ];
+                if let Some(h) = &d.heal {
+                    pairs.push((
+                        "heal",
+                        Json::obj(vec![
+                            ("state", Json::Str(h.state.to_string())),
+                            ("heals", Json::Int(h.heals as i64)),
+                            ("failures", Json::Int(h.failures as i64)),
+                        ]),
+                    ));
+                }
                 if !d.ranks.is_empty() {
                     let ranks: Vec<Json> = d
                         .ranks
@@ -240,6 +250,7 @@ impl ServerStats {
             ("draining", Json::Bool(admission.is_draining())),
             ("service_estimate_ms", Json::Num(admission.service_estimate().as_secs_f64() * 1e3)),
             ("imbalance", Json::Num(router.imbalance())),
+            ("rerouted", Json::Int(router.rerouted_count() as i64)),
             ("cluster", Json::Bool(router.is_cluster())),
             ("live_replicas", Json::Int(router.live_replicas() as i64)),
             ("replicas", Json::Arr(replicas)),
@@ -251,9 +262,12 @@ impl ServerStats {
     /// verdict with one reason line per violated rule, plus the numbers
     /// behind it (latency quantiles, shed rate, TeraEdges/s, fleet
     /// liveness). Verdict rules: **critical** when no replica is
-    /// routable or the shed rate exceeds 50%; **degraded** when any
-    /// replica is lame, any rank is dead, the server is draining, or
-    /// the shed rate exceeds 5%; **ok** otherwise.
+    /// routable *and none is actively healing*, or the shed rate
+    /// exceeds 50%; **degraded** when any replica is lame or being
+    /// healed, any rank is dead, the heal budget is exhausted, the
+    /// server is draining, or the shed rate exceeds 5%; **ok**
+    /// otherwise. A fleet mid-heal is `degraded`, not `critical`: the
+    /// healer is a recovery in progress, not an outage verdict.
     pub fn health(&self, admission: &AdmissionController, router: &ReplicaRouter) -> Json {
         let uptime = self.uptime_secs();
         let s = self.latency_summary().unwrap_or_default();
@@ -265,9 +279,19 @@ impl ServerStats {
         let live = router.live_replicas();
         let (mut ranks_alive, mut ranks_total) = (0i64, 0i64);
         let mut reasons: Vec<String> = Vec::new();
+        let mut healing = false;
         for (i, d) in details.iter().enumerate() {
             if d.lame {
-                reasons.push(format!("replica {i} is lame"));
+                match d.heal.as_ref().map(|h| h.state) {
+                    Some("respawning") => {
+                        healing = true;
+                        reasons.push(format!("replica {i} is lame (heal in progress)"));
+                    }
+                    Some("exhausted") => {
+                        reasons.push(format!("replica {i} is lame (heal budget exhausted)"));
+                    }
+                    _ => reasons.push(format!("replica {i} is lame")),
+                }
             }
             for r in &d.ranks {
                 ranks_total += 1;
@@ -279,7 +303,11 @@ impl ServerStats {
             }
         }
         if live == 0 {
-            reasons.push("no live replicas".into());
+            reasons.push(if healing {
+                "no live replicas (healing)".into()
+            } else {
+                "no live replicas".into()
+            });
         }
         if admission.is_draining() {
             reasons.push("server is draining".into());
@@ -287,7 +315,7 @@ impl ServerStats {
         if shed_rate > SHED_DEGRADED {
             reasons.push(format!("shed rate {:.1}%", shed_rate * 100.0));
         }
-        let verdict = if live == 0 || shed_rate > SHED_CRITICAL {
+        let verdict = if (live == 0 && !healing) || shed_rate > SHED_CRITICAL {
             "critical"
         } else if !reasons.is_empty() {
             "degraded"

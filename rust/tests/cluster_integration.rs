@@ -247,7 +247,7 @@ fn weight_sharded_passes_match_the_sliced_engine_bit_exactly() {
 fn oversized_line_gets_a_protocol_error_not_a_dead_worker() {
     use std::io::{BufRead, BufReader, Write};
 
-    let launcher = Launcher::spawn(&LauncherConfig::local(program(), 1)).unwrap();
+    let mut launcher = Launcher::spawn(&LauncherConfig::local(program(), 1)).unwrap();
     let addr = launcher.addrs()[0];
 
     let mut stream = std::net::TcpStream::connect(addr).unwrap();
